@@ -1,0 +1,56 @@
+//! Depth scaling (Figure 4 preview): per-step proving time and proof size
+//! for parallel (ours) vs sequential (conventional) proof generation as
+//! network depth grows.
+//!
+//!     cargo run --release --example depth_scaling -- --width 16 --batch 8 \
+//!         --max-depth 8
+//!
+//! The full sweep lives in `cargo bench --bench fig4`; this example is the
+//! human-sized version.
+
+use std::path::Path;
+use std::time::Instant;
+use zkdl::data::Dataset;
+use zkdl::model::{ModelConfig, Weights};
+use zkdl::runtime::WitnessSource;
+use zkdl::util::cli::Cli;
+use zkdl::util::rng::Rng;
+use zkdl::zkdl::{prove_step, verify_step, ProofMode, ProverKey};
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::from_env();
+    let width = cli.get_usize("width", 16);
+    let batch = cli.get_usize("batch", 8);
+    let max_depth = cli.get_usize("max-depth", 8);
+
+    println!("depth | parallel time  size | sequential time  size");
+    println!("------|---------------------|----------------------");
+    let mut depth = 2usize;
+    while depth <= max_depth {
+        let cfg = ModelConfig::new(depth, width, batch);
+        let ds = Dataset::synthetic(256, width / 2, 4, cfg.r_bits, 5);
+        let (x, y) = ds.batch(&cfg, 0);
+        let mut rng = Rng::seed_from_u64(depth as u64);
+        let w = Weights::init(cfg, &mut rng);
+        let src = WitnessSource::auto(Path::new("artifacts"), cfg);
+        let wit = src.compute_witness(&x, &y, &w)?;
+        let pk = ProverKey::setup(cfg);
+
+        let mut row = format!("{depth:5} |");
+        for mode in [ProofMode::Parallel, ProofMode::Sequential] {
+            let t = Instant::now();
+            let proof = prove_step(&pk, &wit, mode, &mut rng);
+            let secs = t.elapsed().as_secs_f64();
+            verify_step(&pk, &proof)?;
+            row.push_str(&format!(
+                " {:8.2} s {:6.1} kB |",
+                secs,
+                proof.size_bytes() as f64 / 1024.0
+            ));
+        }
+        println!("{row}");
+        depth *= 2;
+    }
+    println!("\nparallel proof size grows O(log L); sequential grows O(L).");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Quickstart: prove and verify one zkDL training step end-to-end.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Loads the AOT artifact when present (run `make artifacts` first) and
+//! falls back to the native witness generator otherwise.
+
+use std::path::Path;
+use std::time::Instant;
+use zkdl::data::Dataset;
+use zkdl::model::{ModelConfig, Weights};
+use zkdl::runtime::WitnessSource;
+use zkdl::util::rng::Rng;
+use zkdl::zkdl::{prove_step, verify_step, ProofMode, ProverKey};
+
+fn main() -> anyhow::Result<()> {
+    // a 2-layer, width-64 perceptron on a batch of 16 — Table 2's first row
+    let cfg = ModelConfig::new(2, 64, 16);
+    println!(
+        "zkDL quickstart: L={} d={} B={} ({} parameters)",
+        cfg.depth,
+        cfg.width,
+        cfg.batch,
+        cfg.param_count()
+    );
+
+    // synthetic CIFAR-10-like data (see DESIGN.md §Documented deviations)
+    let ds = Dataset::synthetic(256, 32, 10, cfg.r_bits, 1);
+    let (x, y) = ds.batch(&cfg, 0);
+    let mut rng = Rng::seed_from_u64(42);
+    let weights = Weights::init(cfg, &mut rng);
+
+    // 1. witness: execute the quantized training step (PJRT artifact)
+    let src = WitnessSource::auto(Path::new("artifacts"), cfg);
+    let t = Instant::now();
+    let wit = src.compute_witness(&x, &y, &weights)?;
+    println!(
+        "witness via {} in {:.1} ms (loss {:.4})",
+        src.name(),
+        t.elapsed().as_secs_f64() * 1e3,
+        wit.loss()
+    );
+    wit.validate()?;
+    println!("witness satisfies relations (2)-(5), (30)-(35)");
+
+    // 2. commit + prove (Protocol 2, parallel order)
+    let t = Instant::now();
+    let pk = ProverKey::setup(cfg);
+    println!("one-time key setup: {:.2} s", t.elapsed().as_secs_f64());
+    let t = Instant::now();
+    let proof = prove_step(&pk, &wit, ProofMode::Parallel, &mut rng);
+    println!(
+        "proof generated in {:.2} s — {:.1} kB",
+        t.elapsed().as_secs_f64(),
+        proof.size_bytes() as f64 / 1024.0
+    );
+
+    // 3. verify
+    let t = Instant::now();
+    verify_step(&pk, &proof)?;
+    println!("verified in {:.2} s — accept", t.elapsed().as_secs_f64());
+    Ok(())
+}

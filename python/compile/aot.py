@@ -1,0 +1,77 @@
+"""AOT lowering: jax train_step → HLO **text** artifacts for the rust runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts \
+        --configs "2,64,16;3,512,32"       # depth,width,batch triples
+
+Each config produces artifacts/model_L{depth}_d{width}_b{batch}.hlo.txt
+plus a manifest line. `make artifacts` drives this.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .model import train_step  # noqa: E402
+
+DEFAULT_CONFIGS = "2,8,4;2,64,16;3,64,16"
+R_BITS = 16
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_config(depth: int, width: int, batch: int, r_bits: int = R_BITS) -> str:
+    x = jax.ShapeDtypeStruct((batch, width), jnp.int64)
+    y = jax.ShapeDtypeStruct((batch, width), jnp.int64)
+    w = jax.ShapeDtypeStruct((depth, width, width), jnp.int64)
+    fn = lambda x, y, w: train_step(x, y, w, depth=depth, r_bits=r_bits)
+    lowered = jax.jit(fn).lower(x, y, w)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default=DEFAULT_CONFIGS,
+                    help="semicolon-separated depth,width,batch triples")
+    ap.add_argument("--r-bits", type=int, default=R_BITS)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for spec in args.configs.split(";"):
+        spec = spec.strip()
+        if not spec:
+            continue
+        depth, width, batch = (int(v) for v in spec.split(","))
+        name = f"model_L{depth}_d{width}_b{batch}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        text = lower_config(depth, width, batch, args.r_bits)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{depth},{width},{batch},{args.r_bits},{name}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} configs")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""L1 — Pallas kernel: tiled fixed-point integer matmul.
+
+The witness-generation hot spot of zkDL's training step is the quantized
+matmul A (B×k, scale 2^R) · W (k×n, scale 2^R) → Z (scale 2^{2R}).
+The kernel tiles the product over a (rows, cols, k) grid so each VMEM-
+resident block is bounded (BLOCK² int64 = 128·128·8 B = 128 KiB per
+operand), accumulating partial products into the output block across the
+k-dimension of the grid — the HBM↔VMEM schedule a TPU would use to feed
+the MXU. On this image Pallas must run with ``interpret=True`` (the CPU
+PJRT plugin cannot execute Mosaic custom-calls), so MXU numbers are
+estimates recorded in DESIGN.md §Hardware-Adaptation, but the lowered HLO
+is exactly what the rust runtime executes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] += a[i,k] @ b[k,j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.matmul(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.int64
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul_pallas(a, b, interpret=True):
+    """Tiled integer matmul C = A·B via pallas_call.
+
+    Dimensions need not be multiples of BLOCK; Pallas pads partial blocks
+    with zeros, which is exact for integer accumulation.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, "inner dimensions must match"
+    bm, bk, bn = min(BLOCK, m), min(BLOCK, k), min(BLOCK, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int64),
+        interpret=interpret,
+    )(a, b)
+
+
+def fixed_matmul(a, b, r_bits: int, interpret=True):
+    """Fixed-point matmul with fused rescale: round(A·B / 2^r_bits)."""
+    z = matmul_pallas(a, b, interpret=interpret)
+    if r_bits == 0:
+        return z
+    half = jnp.int64(1) << (r_bits - 1)
+    return jnp.floor_divide(z + half, jnp.int64(1) << r_bits)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the Pallas fixed-point kernels.
+
+This is the correctness reference (the L1 kernel's contract): integer
+matmul with round-to-nearest rescale by 2**r_bits, matching the rust
+native witness generator's ``matmul_i64`` + ``round_div_pow2`` bit-exactly.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """Plain integer matmul (int64 accumulation)."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.int64)
+
+
+def round_div_pow2_ref(v, r_bits: int):
+    """Round-to-nearest division by 2**r_bits, ties toward +inf.
+
+    Matches rust ``round_div_pow2``: (v + 2**(r-1)).div_euclid(2**r);
+    jnp.floor_divide is Euclidean for positive divisors.
+    """
+    if r_bits == 0:
+        return v
+    half = jnp.int64(1) << (r_bits - 1)
+    return jnp.floor_divide(v + half, jnp.int64(1) << r_bits)
+
+
+def fixed_matmul_ref(a, b, r_bits: int):
+    """Fixed-point matmul: rescaled product — the L1 kernel's contract."""
+    return round_div_pow2_ref(matmul_ref(a, b), r_bits)

@@ -1,0 +1,80 @@
+"""L2 — the quantized FCNN training step in JAX (build-time only).
+
+Computes one fixed-point SGD forward/backward pass of the L-layer ReLU
+network of paper Example 4.5, emitting exactly the tensors the rust prover
+needs for witnessing relations (30)–(35): Z per layer, G_A per inner
+layer, G_Z per layer and G_W per layer. The zkReLU auxiliary decomposition
+(Z″, B_{Q−1}, R_Z, …) is elementwise and re-derived in rust (it must hold
+bit-exactly over these outputs — `witness::validate` enforces that).
+
+All arithmetic is int64 (jax_enable_x64); matmuls go through the L1 Pallas
+kernel so they lower into the same HLO the rust PJRT runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels.fixed_matmul import matmul_pallas  # noqa: E402
+from .kernels.ref import round_div_pow2_ref  # noqa: E402
+
+
+def train_step(x, y, w_stack, *, depth: int, r_bits: int, use_pallas: bool = True):
+    """One quantized training step.
+
+    Args:
+      x: (B, d) int64 inputs at scale 2^R.
+      y: (B, d) int64 targets at scale 2^R.
+      w_stack: (L, d, d) int64 weights at scale 2^R.
+      depth: number of layers L (static).
+      r_bits: fractional bits R (static).
+      use_pallas: route matmuls through the Pallas kernel (interpret mode).
+
+    Returns a tuple of stacked int64 tensors:
+      z_stack  (L, B, d) — pre-activations at scale 2^{2R}
+      ga_stack (L, B, d) — activation gradients at scale 2^{2R}
+                           (slot L−1 is zeros: the last layer has no G_A)
+      gz_stack (L, B, d) — pre-activation gradients at scale 2^R
+      gw_stack (L, d, d) — weight gradients at scale 2^{2R}
+    """
+    mm = matmul_pallas if use_pallas else (
+        lambda a, b: jnp.matmul(a, b, preferred_element_type=jnp.int64)
+    )
+
+    # ---- forward ----
+    zs, acts, signs = [], [], []
+    a_prev = x
+    for l in range(depth):
+        z = mm(a_prev, w_stack[l])
+        zs.append(z)
+        z_prime = round_div_pow2_ref(z, r_bits)
+        sign = (z_prime < 0).astype(jnp.int64)
+        signs.append(sign)
+        if l + 1 < depth:
+            a_prev = (1 - sign) * z_prime  # ReLU on the rescaled value
+            acts.append(a_prev)
+        else:
+            zs_last_prime = z_prime
+
+    # ---- backward ----
+    gzs = [None] * depth
+    gas = [jnp.zeros_like(x)] * depth
+    gzs[depth - 1] = zs_last_prime - y  # (32)
+    for l in range(depth - 2, -1, -1):
+        g_a = mm(gzs[l + 1], w_stack[l + 1].T)  # (33)
+        gas[l] = g_a
+        g_a_prime = round_div_pow2_ref(g_a, r_bits)
+        gzs[l] = (1 - signs[l]) * g_a_prime  # (4)
+
+    gws = []
+    for l in range(depth):
+        a_in = x if l == 0 else acts[l - 1]
+        gws.append(mm(gzs[l].T, a_in))  # (34)
+
+    return (
+        jnp.stack(zs),
+        jnp.stack(gas),
+        jnp.stack(gzs),
+        jnp.stack(gws),
+    )

@@ -1,0 +1,63 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle.
+
+Hypothesis sweeps shapes and value magnitudes; the kernel must agree
+bit-exactly (integer arithmetic — no tolerance).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels.fixed_matmul import fixed_matmul, matmul_pallas  # noqa: E402
+from compile.kernels.ref import fixed_matmul_ref, matmul_ref, round_div_pow2_ref  # noqa: E402
+
+
+def rand_ints(rng, shape, lo=-(1 << 20), hi=1 << 20):
+    return jnp.asarray(rng.integers(lo, hi, size=shape, dtype=np.int64))
+
+
+@pytest.mark.parametrize("m,k,n", [(4, 4, 4), (8, 16, 8), (16, 8, 32), (128, 128, 128), (130, 70, 65)])
+def test_matmul_matches_ref(m, k, n):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    a = rand_ints(rng, (m, k))
+    b = rand_ints(rng, (k, n))
+    got = matmul_pallas(a, b)
+    want = matmul_ref(a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+    r_bits=st.sampled_from([0, 1, 8, 16]),
+)
+def test_fixed_matmul_hypothesis(m, k, n, seed, r_bits):
+    rng = np.random.default_rng(seed)
+    a = rand_ints(rng, (m, k), -(1 << 16), 1 << 16)
+    b = rand_ints(rng, (k, n), -(1 << 16), 1 << 16)
+    got = fixed_matmul(a, b, r_bits)
+    want = fixed_matmul_ref(a, b, r_bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=50, deadline=None)
+@given(v=st.integers(-(1 << 40), 1 << 40), r_bits=st.sampled_from([1, 4, 16]))
+def test_round_div_matches_rust_semantics(v, r_bits):
+    # remainder in [-2^(r-1), 2^(r-1)) — the zkReLU range requirement
+    q = int(round_div_pow2_ref(jnp.int64(v), r_bits))
+    rem = v - (q << r_bits)
+    assert -(1 << (r_bits - 1)) <= rem < (1 << (r_bits - 1))
+
+
+def test_negative_rounding_ties():
+    # ties round toward +inf, matching rust round_div_pow2
+    assert int(round_div_pow2_ref(jnp.int64(3), 1)) == 2
+    assert int(round_div_pow2_ref(jnp.int64(-3), 1)) == -1
+    assert int(round_div_pow2_ref(jnp.int64(-4), 2)) == -1

@@ -1,0 +1,80 @@
+//! Figure 1 — fraction of SC-BD proving time spent on bit-decomposition
+//! (BD) components. The paper re-runs the general-purpose pipeline with all
+//! BD components removed and reports the BD share (>90%).
+//!
+//!     cargo bench --bench fig1
+
+use std::path::Path;
+use std::time::Instant;
+use zkdl::baseline;
+use zkdl::commit::CommitKey;
+use zkdl::data::Dataset;
+use zkdl::model::{ModelConfig, Weights};
+use zkdl::runtime::WitnessSource;
+use zkdl::transcript::Transcript;
+use zkdl::util::bench::{BenchArgs, Table};
+use zkdl::util::rng::Rng;
+use zkdl::zkdl::{prove_step, ProofMode, ProverKey};
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let widths: Vec<usize> = if args.has("--full") {
+        vec![16, 32, 64]
+    } else {
+        vec![16, 32]
+    };
+    let batch = args.get_usize("--batch", 4);
+
+    println!("== Figure 1: share of SC-BD proving time spent on BD ==");
+    let mut table = Table::new(&["width", "BD time(s)", "arith time(s)", "BD share"]);
+    for &width in &widths {
+        let cfg = ModelConfig::new(2, width, batch);
+        let mut rng = Rng::seed_from_u64(width as u64);
+        let ds = Dataset::synthetic(16, width / 2, 4, cfg.r_bits, 3);
+        let (x, y) = ds.batch(&cfg, 0);
+        let w = Weights::init(cfg, &mut rng);
+        let src = WitnessSource::auto(Path::new("artifacts"), cfg);
+        let wit = src.compute_witness(&x, &y, &w).expect("witness");
+
+        // arithmetic share: the full zkDL proof stands in for the matmul
+        // part of the general-purpose pipeline (over-counts it slightly —
+        // in the paper's favor this makes the measured BD share a lower
+        // bound on the true one)
+        let pk = ProverKey::setup(cfg);
+        let t0 = Instant::now();
+        let _ = prove_step(&pk, &wit, ProofMode::Parallel, &mut rng);
+        let arith_s = t0.elapsed().as_secs_f64();
+
+        // BD share: the bit-decomposition sumchecks of all aux tensors
+        let d = cfg.d_size();
+        let q = cfg.q_bits as usize;
+        let ck = CommitKey::setup(b"scbd-bench", d * q);
+        let mut t = Transcript::new(b"fig1");
+        let t0 = Instant::now();
+        for lw in &wit.layers {
+            let zeros = vec![0i64; d];
+            let gap = lw.g_a_prime.as_deref().unwrap_or(&zeros);
+            let rga = lw.g_a_aux.as_ref().map(|a| a.rem.as_slice()).unwrap_or(&zeros);
+            let _ = baseline::prove_layer_relu_bd(
+                &lw.z_aux.dprime,
+                gap,
+                &lw.z_aux.rem,
+                rga,
+                q,
+                cfg.r_bits as usize,
+                &ck,
+                &mut t,
+                &mut rng,
+            );
+        }
+        let bd_s = t0.elapsed().as_secs_f64();
+        table.row(vec![
+            width.to_string(),
+            format!("{bd_s:.2}"),
+            format!("{arith_s:.2}"),
+            format!("{:.1}%", 100.0 * bd_s / (bd_s + arith_s)),
+        ]);
+    }
+    table.print();
+    println!("paper reports the BD share exceeding 90% and growing with D.");
+}

@@ -1,0 +1,70 @@
+//! Figure 4 — per-step proving time and proof size vs network depth L,
+//! comparing the parallel order of proof (zkReLU-compatible circuit, ours)
+//! against the conventional sequential layer-by-layer order [1].
+//!
+//!     cargo bench --bench fig4                 # depths 2..8, small layers
+//!     cargo bench --bench fig4 -- --full       # depths 2..16, width 64
+
+use std::path::Path;
+use std::time::Instant;
+use zkdl::data::Dataset;
+use zkdl::model::{ModelConfig, Weights};
+use zkdl::runtime::WitnessSource;
+use zkdl::util::bench::{BenchArgs, Table};
+use zkdl::util::rng::Rng;
+use zkdl::zkdl::{prove_step, verify_step, ProofMode, ProverKey};
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let full = args.has("--full");
+    let width = args.get_usize("--width", if full { 64 } else { 16 });
+    let batch = args.get_usize("--batch", if full { 16 } else { 8 });
+    let max_depth = args.get_usize("--max-depth", if full { 16 } else { 8 });
+
+    println!("== Figure 4: proving time & proof size vs depth (width={width}, BS={batch}) ==");
+    let mut table = Table::new(&[
+        "L",
+        "#param",
+        "par time(s)",
+        "par size(kB)",
+        "seq time(s)",
+        "seq size(kB)",
+        "speedup",
+        "size ratio",
+    ]);
+    let mut depth = 2usize;
+    while depth <= max_depth {
+        let cfg = ModelConfig::new(depth, width, batch);
+        let mut rng = Rng::seed_from_u64(depth as u64);
+        let ds = Dataset::synthetic(batch.max(16), width / 2, 4, cfg.r_bits, 5);
+        let (x, y) = ds.batch(&cfg, 0);
+        let w = Weights::init(cfg, &mut rng);
+        let src = WitnessSource::auto(Path::new("artifacts"), cfg);
+        let wit = src.compute_witness(&x, &y, &w).expect("witness");
+        let pk = ProverKey::setup(cfg);
+
+        let t0 = Instant::now();
+        let par = prove_step(&pk, &wit, ProofMode::Parallel, &mut rng);
+        let par_s = t0.elapsed().as_secs_f64();
+        verify_step(&pk, &par).expect("parallel verifies");
+
+        let t0 = Instant::now();
+        let seq = prove_step(&pk, &wit, ProofMode::Sequential, &mut rng);
+        let seq_s = t0.elapsed().as_secs_f64();
+        verify_step(&pk, &seq).expect("sequential verifies");
+
+        table.row(vec![
+            depth.to_string(),
+            format!("{:.1}K", cfg.param_count() as f64 / 1e3),
+            format!("{par_s:.3}"),
+            format!("{:.1}", par.size_bytes() as f64 / 1024.0),
+            format!("{seq_s:.3}"),
+            format!("{:.1}", seq.size_bytes() as f64 / 1024.0),
+            format!("{:.2}x", seq_s / par_s),
+            format!("{:.2}x", seq.size_bytes() as f64 / par.size_bytes() as f64),
+        ]);
+        depth *= 2;
+    }
+    table.print();
+    println!("expected shape: par size grows ~O(log L); seq grows ~O(L).");
+}

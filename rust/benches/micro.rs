@@ -1,0 +1,187 @@
+//! Micro-benchmarks of the proving hot paths (the §Perf instrumentation):
+//! MSM, field multiplication, sumcheck rounds, IPA, generator derivation.
+//!
+//!     cargo bench --bench micro
+
+use std::time::{Duration, Instant};
+use zkdl::commit::CommitKey;
+use zkdl::curve::{derive_generators, msm::msm, G1};
+use zkdl::field::Fr;
+use zkdl::ipa;
+use zkdl::poly::{eq_table, Mle};
+use zkdl::sumcheck::{self, Instance, Term};
+use zkdl::transcript::Transcript;
+use zkdl::util::bench::{fmt_dur, time_budgeted, Table};
+use zkdl::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(0xbe7c);
+    let budget = Duration::from_secs(5);
+    println!("threads: {}", zkdl::util::threads::num_threads());
+    let mut table = Table::new(&["benchmark", "n", "median", "throughput"]);
+
+    // field multiplication
+    {
+        let a = Fr::random(&mut rng);
+        let b = Fr::random(&mut rng);
+        let st = time_budgeted(
+            || {
+                let mut acc = a;
+                for _ in 0..1_000_000 {
+                    acc *= b;
+                }
+                std::hint::black_box(acc);
+            },
+            20,
+            budget,
+        );
+        table.row(vec![
+            "field mul".into(),
+            "1e6".into(),
+            fmt_dur(st.median),
+            format!("{:.0} Mmul/s", 1.0 / st.median.as_secs_f64()),
+        ]);
+    }
+
+    // MSM at the commitment sizes the prover uses
+    for log_n in [10usize, 14, 16] {
+        let n = 1 << log_n;
+        let t0 = Instant::now();
+        let bases = derive_generators(b"micro-msm", n);
+        let gen_s = t0.elapsed().as_secs_f64();
+        let scalars: Vec<Fr> = (0..n).map(|_| Fr::random(&mut rng)).collect();
+        let st = time_budgeted(
+            || {
+                std::hint::black_box(msm(&bases, &scalars));
+            },
+            10,
+            budget,
+        );
+        table.row(vec![
+            format!("msm (gen {gen_s:.2}s)"),
+            format!("2^{log_n}"),
+            fmt_dur(st.median),
+            format!(
+                "{:.2} Mscalar/s",
+                n as f64 / st.median.as_secs_f64() / 1e6
+            ),
+        ]);
+    }
+
+    // bit-scalar MSM (the Protocol-1 commitment of B/B′ matrices)
+    {
+        let n = 1 << 16;
+        let bases = derive_generators(b"micro-msm", n);
+        let bits: Vec<Fr> = (0..n)
+            .map(|_| Fr::from_u64(rng.gen_range(2)))
+            .collect();
+        let st = time_budgeted(
+            || {
+                std::hint::black_box(msm(&bases, &bits));
+            },
+            10,
+            budget,
+        );
+        table.row(vec![
+            "msm 0/1 scalars".into(),
+            "2^16".into(),
+            fmt_dur(st.median),
+            format!("{:.2} Mbit/s", n as f64 / st.median.as_secs_f64() / 1e6),
+        ]);
+    }
+
+    // sumcheck: degree-3 product over 2^16 entries
+    {
+        let nv = 16usize;
+        let mk = |rng: &mut Rng| Mle::new((0..1 << nv).map(|_| Fr::random(rng)).collect());
+        let a = mk(&mut rng);
+        let b = mk(&mut rng);
+        let c = mk(&mut rng);
+        let st = time_budgeted(
+            || {
+                let inst = Instance::new(vec![Term::new(
+                    Fr::ONE,
+                    vec![a.clone(), b.clone(), c.clone()],
+                )]);
+                let mut t = Transcript::new(b"micro");
+                std::hint::black_box(sumcheck::prove(inst, &mut t));
+            },
+            10,
+            budget,
+        );
+        table.row(vec![
+            "sumcheck deg-3".into(),
+            "2^16".into(),
+            fmt_dur(st.median),
+            format!(
+                "{:.2} Mevals/s",
+                (1 << nv) as f64 / st.median.as_secs_f64() / 1e6
+            ),
+        ]);
+    }
+
+    // IPA evaluation opening at 2^14
+    {
+        let n = 1 << 14;
+        let ck = CommitKey::setup(b"micro-ipa", n);
+        let vals: Vec<Fr> = (0..n).map(|_| Fr::random(&mut rng)).collect();
+        let u: Vec<Fr> = (0..14).map(|_| Fr::random(&mut rng)).collect();
+        let e = eq_table(&u);
+        let v: Fr = vals.iter().zip(&e).map(|(a, b)| *a * *b).sum();
+        let blind = Fr::random(&mut rng);
+        let com = ck.commit(&vals, blind);
+        let st = time_budgeted(
+            || {
+                let mut t = Transcript::new(b"micro");
+                std::hint::black_box(ipa::prove_eval(
+                    &ck, &com, &vals, blind, &e, v, &mut t, &mut rng,
+                ));
+            },
+            5,
+            budget,
+        );
+        table.row(vec![
+            "ipa prove_eval".into(),
+            "2^14".into(),
+            fmt_dur(st.median),
+            String::new(),
+        ]);
+        let mut tp = Transcript::new(b"micro-v");
+        let proof = ipa::prove_eval(&ck, &com, &vals, blind, &e, v, &mut tp, &mut rng);
+        let st = time_budgeted(
+            || {
+                let mut t = Transcript::new(b"micro-v");
+                std::hint::black_box(ipa::verify_eval(&ck, &com, &e, v, &proof, &mut t).is_ok());
+            },
+            5,
+            budget,
+        );
+        table.row(vec![
+            "ipa verify_eval".into(),
+            "2^14".into(),
+            fmt_dur(st.median),
+            String::new(),
+        ]);
+    }
+
+    // scalar mul / batch normalization
+    {
+        let p = G1::random(&mut rng);
+        let s = Fr::random(&mut rng);
+        let st = time_budgeted(
+            || {
+                std::hint::black_box(p.mul(&s));
+            },
+            1000,
+            Duration::from_secs(2),
+        );
+        table.row(vec![
+            "scalar mul".into(),
+            "1".into(),
+            fmt_dur(st.median),
+            format!("{:.0} mul/s", 1.0 / st.median.as_secs_f64()),
+        ]);
+    }
+
+    table.print();
+}

@@ -1,0 +1,86 @@
+//! Table 1 — empirical check of the asymptotic claims:
+//!   zkDL proving time O(DQ + log L), proof size O(log(DQL));
+//!   SC-BD proving time O(D²QL).
+//!
+//!     cargo bench --bench table1_scaling
+//!
+//! Prints the per-unit ratios: time/DQ should stay ~flat for zkDL while
+//! time/DQ grows ~linearly in D for SC-BD; proof size divided by log(DQL)
+//! should stay ~flat.
+
+use std::path::Path;
+use std::time::Instant;
+use zkdl::baseline;
+use zkdl::commit::CommitKey;
+use zkdl::data::Dataset;
+use zkdl::model::{ModelConfig, Weights};
+use zkdl::runtime::WitnessSource;
+use zkdl::transcript::Transcript;
+use zkdl::util::bench::Table;
+use zkdl::util::rng::Rng;
+use zkdl::zkdl::{prove_step, ProofMode, ProverKey};
+
+fn main() {
+    println!("== Table 1: scaling shape check ==");
+    let mut table = Table::new(&[
+        "D=B*d",
+        "zkDL t(s)",
+        "t/DQ (us)",
+        "size(kB)",
+        "size/log(DQL)",
+        "SC-BD t(s)",
+        "t/D2Q (ns)",
+    ]);
+    for (width, bs) in [(8usize, 4usize), (16, 4), (16, 8), (32, 8)] {
+        let cfg = ModelConfig::new(2, width, bs);
+        let d = cfg.d_size();
+        let q = cfg.q_bits as usize;
+        let mut rng = Rng::seed_from_u64((width + bs) as u64);
+        let ds = Dataset::synthetic(16, width / 2, 4, cfg.r_bits, 3);
+        let (x, y) = ds.batch(&cfg, 0);
+        let w = Weights::init(cfg, &mut rng);
+        let src = WitnessSource::auto(Path::new("artifacts"), cfg);
+        let wit = src.compute_witness(&x, &y, &w).expect("witness");
+        let pk = ProverKey::setup(cfg);
+
+        let t0 = Instant::now();
+        let proof = prove_step(&pk, &wit, ProofMode::Parallel, &mut rng);
+        let zkdl_s = t0.elapsed().as_secs_f64();
+
+        let ck = CommitKey::setup(b"scbd-bench", d * q);
+        let mut tr = Transcript::new(b"t1");
+        let t0 = Instant::now();
+        for lw in &wit.layers {
+            let zeros = vec![0i64; d];
+            let gap = lw.g_a_prime.as_deref().unwrap_or(&zeros);
+            let rga = lw.g_a_aux.as_ref().map(|a| a.rem.as_slice()).unwrap_or(&zeros);
+            let _ = baseline::prove_layer_relu_bd(
+                &lw.z_aux.dprime,
+                gap,
+                &lw.z_aux.rem,
+                rga,
+                q,
+                cfg.r_bits as usize,
+                &ck,
+                &mut tr,
+                &mut rng,
+            );
+        }
+        let scbd_s = t0.elapsed().as_secs_f64();
+
+        let dq = (d * q) as f64;
+        let d2q = (d * d * q) as f64;
+        let logdql = ((d * q * cfg.depth) as f64).log2();
+        table.row(vec![
+            d.to_string(),
+            format!("{zkdl_s:.3}"),
+            format!("{:.1}", zkdl_s / dq * 1e6),
+            format!("{:.1}", proof.size_bytes() as f64 / 1024.0),
+            format!("{:.2}", proof.size_bytes() as f64 / 1024.0 / logdql),
+            format!("{scbd_s:.3}"),
+            format!("{:.1}", scbd_s / d2q * 1e9),
+        ]);
+    }
+    table.print();
+    println!("shape: zkDL t/DQ and size/log(DQL) ~flat; SC-BD t/D2Q ~flat (i.e. t ~ D2Q).");
+}

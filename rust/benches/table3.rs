@@ -1,0 +1,84 @@
+//! Table 3 — proof size (# hash values) and verification time (ms) of the
+//! (non-)membership protocol across hash functions, query counts and
+//! positivity ratios, plus tree construction time; and §5.2's comparison
+//! against naively scanning the committed dataset.
+//!
+//!     cargo bench --bench table3              # n = 10 000 points
+//!     cargo bench --bench table3 -- --full    # n = 50 000 (CIFAR-10 scale)
+//!
+//! Leaf payloads are synthetic 64-byte commitment encodings: tree metrics
+//! depend only on hash structure, never on pixel values (DESIGN.md).
+
+use std::time::Instant;
+use zkdl::hash::HashFn;
+use zkdl::merkle::{verify_membership, MerkleTree};
+use zkdl::util::bench::{BenchArgs, Table};
+use zkdl::util::rng::Rng;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let n = if args.has("--full") { 50_000 } else { 10_000 };
+    let query_counts = [10usize, 100, 1000];
+    let ratios = [0.0f64, 0.1, 0.5, 0.9, 1.0];
+
+    let mut rng = Rng::seed_from_u64(0x7ab1e3);
+    let coms: Vec<Vec<u8>> = (0..n)
+        .map(|_| {
+            let mut b = vec![0u8; 64];
+            rng.fill_bytes(&mut b);
+            b
+        })
+        .collect();
+
+    println!("== Table 3: (non-)membership proofs over {n} data points ==");
+    let mut table = Table::new(&[
+        "hash", "t_tree(s)", "#data", "ratio", "size(#)", "verify(ms)",
+    ]);
+    for hash in [HashFn::Md5, HashFn::Sha1, HashFn::Sha256] {
+        let t0 = Instant::now();
+        let tree = MerkleTree::build(hash, &coms);
+        let t_tree = t0.elapsed().as_secs_f64();
+        for &nq in &query_counts {
+            for &ratio in &ratios {
+                let n_pos = (nq as f64 * ratio).round() as usize;
+                let mut queries: Vec<Vec<u8>> =
+                    coms[..n_pos].iter().map(|c| hash.hash(c)).collect();
+                while queries.len() < nq {
+                    let mut fake = vec![0u8; 64];
+                    rng.fill_bytes(&mut fake);
+                    queries.push(hash.hash(&fake));
+                }
+                let proof = tree.prove(&queries);
+                let t0 = Instant::now();
+                verify_membership(hash, &tree.root, &queries, &proof).expect("verifies");
+                let verify_ms = t0.elapsed().as_secs_f64() * 1e3;
+                table.row(vec![
+                    hash.name().to_string(),
+                    format!("{t_tree:.1}"),
+                    nq.to_string(),
+                    format!("{ratio:.1}"),
+                    proof.size_hashes().to_string(),
+                    format!("{verify_ms:.2}"),
+                ]);
+            }
+        }
+    }
+    table.print();
+
+    // §5.2: single non-member check vs naive scan of the committed set
+    let hash = HashFn::Md5;
+    let tree = MerkleTree::build(hash, &coms);
+    let mut fake = vec![0u8; 64];
+    rng.fill_bytes(&mut fake);
+    let queries = vec![hash.hash(&fake)];
+    let proof = tree.prove(&queries);
+    let t0 = Instant::now();
+    verify_membership(hash, &tree.root, &queries, &proof).expect("verifies");
+    let merkle_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t0 = Instant::now();
+    let found = coms.iter().any(|c| hash.hash(c) == queries[0]);
+    let scan_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "single non-membership check: merkle {merkle_ms:.3} ms vs naive scan {scan_ms:.1} ms (found={found})"
+    );
+}

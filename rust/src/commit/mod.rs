@@ -1,0 +1,236 @@
+//! Pedersen vector commitments (paper §3.1).
+//!
+//! Commit(v; r) = hʳ · Πᵢ gᵢ^{vᵢ} over BN254 G1, with deterministic
+//! nothing-up-my-sleeve bases derived by hash-to-curve. The scheme is
+//! homomorphic — the verifier exploits this everywhere in zkDL: deriving
+//! com_Z from the committed auxiliary inputs via eq. (3)/(5), stacking
+//! per-layer commitments, the Protocol-1 product com_B·com_{B'}, and the
+//! Algorithm-1 basis transformations.
+//!
+//! Commitment keys are cached per (label, size): for large tensors the base
+//! derivation itself is a measurable cost and the paper amortizes it as a
+//! one-time setup.
+
+use crate::curve::{derive_generators, msm::msm, G1Affine, G1};
+use crate::field::Fr;
+use crate::util::rng::Rng;
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// A commitment key: vector basis `g` plus blinding base `h`.
+#[derive(Clone, Debug)]
+pub struct CommitKey {
+    pub g: Vec<G1Affine>,
+    pub h: G1Affine,
+    pub label: Vec<u8>,
+}
+
+static KEY_CACHE: Lazy<Mutex<HashMap<(Vec<u8>, usize), CommitKey>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+impl CommitKey {
+    /// Derive (or fetch from cache) a key of size `n` under `label`.
+    /// Different labels give bases with mutually unknown discrete logs.
+    pub fn setup(label: &[u8], n: usize) -> Self {
+        {
+            let cache = KEY_CACHE.lock().unwrap();
+            if let Some(k) = cache.get(&(label.to_vec(), n)) {
+                return k.clone();
+            }
+            // reuse a longer cached key with the same label: a prefix of a
+            // hash-derived basis is itself a valid basis
+            if let Some(k) = cache
+                .iter()
+                .filter(|((l, m), _)| l == label && *m >= n)
+                .min_by_key(|((_, m), _)| *m)
+                .map(|(_, k)| k)
+            {
+                return CommitKey {
+                    g: k.g[..n].to_vec(),
+                    h: k.h,
+                    label: label.to_vec(),
+                };
+            }
+        }
+        let g = derive_generators(label, n);
+        let mut blind_label = label.to_vec();
+        blind_label.extend_from_slice(b"/blind");
+        let h = crate::curve::hash_to_curve(&blind_label, u64::MAX);
+        let key = CommitKey {
+            g,
+            h,
+            label: label.to_vec(),
+        };
+        KEY_CACHE
+            .lock()
+            .unwrap()
+            .insert((label.to_vec(), n), key.clone());
+        key
+    }
+
+    pub fn len(&self) -> usize {
+        self.g.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.g.is_empty()
+    }
+
+    /// Commit to `values` (≤ key length; implicitly zero-padded) with
+    /// blinding `r`.
+    pub fn commit(&self, values: &[Fr], r: Fr) -> G1 {
+        assert!(values.len() <= self.g.len(), "commit key too short");
+        let mut acc = msm(&self.g[..values.len()], values);
+        if !r.is_zero() {
+            acc = acc.add(&self.h.to_projective().mul(&r));
+        }
+        acc
+    }
+
+    /// Deterministic commitment (r = 0) — used for data-point commitments
+    /// feeding the Merkle tree (paper §3.1 "randomness set to 0").
+    pub fn commit_deterministic(&self, values: &[Fr]) -> G1 {
+        self.commit(values, Fr::ZERO)
+    }
+
+    /// Commit with fresh randomness drawn from `rng`; returns (com, r).
+    pub fn commit_hiding(&self, values: &[Fr], rng: &mut Rng) -> (G1, Fr) {
+        let r = Fr::random(rng);
+        (self.commit(values, r), r)
+    }
+
+    /// Split into two half keys (for IPA recursion bases).
+    pub fn split_at(&self, mid: usize) -> (CommitKey, CommitKey) {
+        (
+            CommitKey {
+                g: self.g[..mid].to_vec(),
+                h: self.h,
+                label: self.label.clone(),
+            },
+            CommitKey {
+                g: self.g[mid..].to_vec(),
+                h: self.h,
+                label: self.label.clone(),
+            },
+        )
+    }
+}
+
+/// A commitment with its opening (prover side).
+#[derive(Clone, Debug)]
+pub struct Opening {
+    pub values: Vec<Fr>,
+    pub blind: Fr,
+}
+
+/// Homomorphic combination: Π comᵢ^{cᵢ} (e.g. random linear combination of
+/// commitments; exponents are public).
+pub fn combine(coms: &[G1], coeffs: &[Fr]) -> G1 {
+    assert_eq!(coms.len(), coeffs.len());
+    let affine = G1::batch_to_affine(coms);
+    msm(&affine, coeffs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::seed_from_u64(0xc0117)
+    }
+
+    #[test]
+    fn homomorphic_addition() {
+        let ck = CommitKey::setup(b"test", 8);
+        let mut r = rng();
+        let a: Vec<Fr> = (0..8).map(|_| Fr::random(&mut r)).collect();
+        let b: Vec<Fr> = (0..8).map(|_| Fr::random(&mut r)).collect();
+        let ra = Fr::random(&mut r);
+        let rb = Fr::random(&mut r);
+        let ca = ck.commit(&a, ra);
+        let cb = ck.commit(&b, rb);
+        let sum: Vec<Fr> = a.iter().zip(&b).map(|(x, y)| *x + *y).collect();
+        assert_eq!(ca + cb, ck.commit(&sum, ra + rb));
+    }
+
+    #[test]
+    fn homomorphic_scaling() {
+        let ck = CommitKey::setup(b"test", 4);
+        let mut r = rng();
+        let a: Vec<Fr> = (0..4).map(|_| Fr::random(&mut r)).collect();
+        let ra = Fr::random(&mut r);
+        let k = Fr::random(&mut r);
+        let scaled: Vec<Fr> = a.iter().map(|x| *x * k).collect();
+        assert_eq!(
+            ck.commit(&a, ra).mul(&k),
+            ck.commit(&scaled, ra * k)
+        );
+    }
+
+    #[test]
+    fn binding_different_values() {
+        let ck = CommitKey::setup(b"test", 4);
+        let mut r = rng();
+        let a: Vec<Fr> = (0..4).map(|_| Fr::random(&mut r)).collect();
+        let mut b = a.clone();
+        b[2] += Fr::ONE;
+        let blind = Fr::random(&mut r);
+        assert_ne!(ck.commit(&a, blind), ck.commit(&b, blind));
+    }
+
+    #[test]
+    fn hiding_blind_changes_commitment() {
+        let ck = CommitKey::setup(b"test", 4);
+        let mut r = rng();
+        let a: Vec<Fr> = (0..4).map(|_| Fr::random(&mut r)).collect();
+        assert_ne!(
+            ck.commit(&a, Fr::from_u64(1)),
+            ck.commit(&a, Fr::from_u64(2))
+        );
+    }
+
+    #[test]
+    fn cache_and_prefix_reuse() {
+        let big = CommitKey::setup(b"cachetest", 16);
+        let small = CommitKey::setup(b"cachetest", 8);
+        assert_eq!(&big.g[..8], &small.g[..]);
+        assert_eq!(big.h, small.h);
+    }
+
+    #[test]
+    fn combine_matches_manual() {
+        let ck = CommitKey::setup(b"test", 4);
+        let mut r = rng();
+        let a: Vec<Fr> = (0..4).map(|_| Fr::random(&mut r)).collect();
+        let b: Vec<Fr> = (0..4).map(|_| Fr::random(&mut r)).collect();
+        let ca = ck.commit(&a, Fr::ZERO);
+        let cb = ck.commit(&b, Fr::ZERO);
+        let k1 = Fr::random(&mut r);
+        let k2 = Fr::random(&mut r);
+        let rlc: Vec<Fr> = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| *x * k1 + *y * k2)
+            .collect();
+        assert_eq!(combine(&[ca, cb], &[k1, k2]), ck.commit(&rlc, Fr::ZERO));
+    }
+
+    #[test]
+    fn zero_padding_consistent() {
+        let ck = CommitKey::setup(b"test", 8);
+        let a = vec![Fr::from_u64(3), Fr::from_u64(5)];
+        let padded = vec![
+            Fr::from_u64(3),
+            Fr::from_u64(5),
+            Fr::ZERO,
+            Fr::ZERO,
+            Fr::ZERO,
+            Fr::ZERO,
+            Fr::ZERO,
+            Fr::ZERO,
+        ];
+        let r = Fr::from_u64(7);
+        assert_eq!(ck.commit(&a, r), ck.commit(&padded, r));
+    }
+}

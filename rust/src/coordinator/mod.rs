@@ -1,0 +1,192 @@
+//! The training coordinator: drives batches through the AOT-compiled
+//! training step (PJRT), applies SGD updates, and generates + verifies a
+//! zkDL proof per step. This is the L3 request loop — pure rust, no Python.
+
+use crate::data::Dataset;
+use crate::model::{ModelConfig, Weights};
+use crate::runtime::WitnessSource;
+use crate::util::rng::Rng;
+use crate::zkdl::{prove_step, verify_step, ProofMode, ProverKey};
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+use std::time::Instant;
+
+/// Per-step metrics of one proven training step.
+#[derive(Clone, Debug)]
+pub struct StepMetrics {
+    pub step: usize,
+    pub loss: f64,
+    pub accuracy: f64,
+    pub witness_ms: f64,
+    pub prove_ms: f64,
+    pub verify_ms: f64,
+    pub proof_bytes: usize,
+    pub witness_source: &'static str,
+}
+
+/// Outcome of a proven training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    pub steps: Vec<StepMetrics>,
+}
+
+impl TrainReport {
+    pub fn summary(&self) -> String {
+        if self.steps.is_empty() {
+            return "no steps".into();
+        }
+        let n = self.steps.len() as f64;
+        let avg = |f: &dyn Fn(&StepMetrics) -> f64| self.steps.iter().map(|s| f(s)).sum::<f64>() / n;
+        format!(
+            "steps={} loss {:.4}→{:.4} acc {:.2}→{:.2} | avg witness {:.1} ms, prove {:.1} ms, verify {:.1} ms, proof {:.1} kB",
+            self.steps.len(),
+            self.steps.first().unwrap().loss,
+            self.steps.last().unwrap().loss,
+            self.steps.first().unwrap().accuracy,
+            self.steps.last().unwrap().accuracy,
+            avg(&|s| s.witness_ms),
+            avg(&|s| s.prove_ms),
+            avg(&|s| s.verify_ms),
+            avg(&|s| s.proof_bytes as f64) / 1024.0,
+        )
+    }
+
+    /// CSV dump (for EXPERIMENTS.md / plotting).
+    pub fn to_csv(&self) -> String {
+        let mut out =
+            String::from("step,loss,accuracy,witness_ms,prove_ms,verify_ms,proof_bytes,source\n");
+        for s in &self.steps {
+            out.push_str(&format!(
+                "{},{:.6},{:.4},{:.2},{:.2},{:.2},{},{}\n",
+                s.step, s.loss, s.accuracy, s.witness_ms, s.prove_ms, s.verify_ms, s.proof_bytes,
+                s.witness_source
+            ));
+        }
+        out
+    }
+}
+
+/// Options for a proven training run.
+pub struct TrainOptions {
+    pub steps: usize,
+    /// Generate + verify a proof every k-th step (every step when 1;
+    /// un-proven steps still run the witness + SGD update).
+    pub prove_every: usize,
+    pub mode: ProofMode,
+    pub seed: u64,
+    /// Skip proof *verification* (prover-side timing runs).
+    pub skip_verify: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        Self {
+            steps: 10,
+            prove_every: 1,
+            mode: ProofMode::Parallel,
+            seed: 0x5eed,
+            skip_verify: false,
+        }
+    }
+}
+
+/// Train `opts.steps` SGD steps on `dataset`, proving each `prove_every`-th
+/// step end-to-end. Returns the metrics trail.
+pub fn train_and_prove(
+    cfg: ModelConfig,
+    dataset: &Dataset,
+    artifact_dir: &Path,
+    opts: &TrainOptions,
+) -> Result<TrainReport> {
+    ensure!(opts.steps > 0 && opts.prove_every > 0);
+    let mut rng = Rng::seed_from_u64(opts.seed);
+    let mut weights = Weights::init(cfg, &mut rng);
+    let source = WitnessSource::auto(artifact_dir, cfg);
+    // prover key setup is a one-time cost, shared across steps
+    let pk = ProverKey::setup(cfg);
+
+    let mut report = TrainReport::default();
+    for step in 0..opts.steps {
+        let (x, y) = dataset.batch(&cfg, step);
+        let t0 = Instant::now();
+        let wit = source
+            .compute_witness(&x, &y, &weights)
+            .with_context(|| format!("witness at step {step}"))?;
+        let witness_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let loss = wit.loss();
+        let z_prime_last = &wit.layers[cfg.depth - 1].z_prime;
+        let accuracy = dataset.batch_accuracy(&cfg, step, z_prime_last);
+
+        let (prove_ms, verify_ms, proof_bytes) = if step % opts.prove_every == 0 {
+            let t1 = Instant::now();
+            let proof = prove_step(&pk, &wit, opts.mode, &mut rng);
+            let prove_ms = t1.elapsed().as_secs_f64() * 1e3;
+            let bytes = proof.size_bytes();
+            let verify_ms = if opts.skip_verify {
+                0.0
+            } else {
+                let t2 = Instant::now();
+                verify_step(&pk, &proof).with_context(|| format!("verify at step {step}"))?;
+                t2.elapsed().as_secs_f64() * 1e3
+            };
+            (prove_ms, verify_ms, bytes)
+        } else {
+            (0.0, 0.0, 0)
+        };
+
+        weights.apply_update(&wit.weight_grads());
+        report.steps.push(StepMetrics {
+            step,
+            loss,
+            accuracy,
+            witness_ms,
+            prove_ms,
+            verify_ms,
+            proof_bytes,
+            witness_source: source.name(),
+        });
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coordinator_end_to_end_small() {
+        let cfg = ModelConfig::new(2, 8, 4);
+        let ds = Dataset::synthetic(64, 4, 4, cfg.r_bits, 42);
+        let opts = TrainOptions {
+            steps: 3,
+            prove_every: 2,
+            ..Default::default()
+        };
+        let report =
+            train_and_prove(cfg, &ds, Path::new("artifacts"), &opts).expect("run succeeds");
+        assert_eq!(report.steps.len(), 3);
+        // steps 0 and 2 proven, step 1 not
+        assert!(report.steps[0].proof_bytes > 0);
+        assert_eq!(report.steps[1].proof_bytes, 0);
+        assert!(report.steps[2].proof_bytes > 0);
+        assert!(report.to_csv().lines().count() == 4);
+    }
+
+    #[test]
+    fn training_loss_decreases_over_run() {
+        // single repeated batch (dataset size == batch size) so the loss
+        // trajectory is comparable step to step
+        let cfg = ModelConfig::new(2, 16, 8);
+        let ds = Dataset::synthetic(8, 8, 4, cfg.r_bits, 7);
+        let opts = TrainOptions {
+            steps: 20,
+            prove_every: 1000, // no proofs — just the training loop
+            ..Default::default()
+        };
+        let report = train_and_prove(cfg, &ds, Path::new("artifacts"), &opts).unwrap();
+        let first = report.steps[0].loss;
+        let last = report.steps.last().unwrap().loss;
+        assert!(last < first, "loss should fall: {first} → {last}");
+    }
+}

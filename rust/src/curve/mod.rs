@@ -1,0 +1,436 @@
+//! BN254 (alt-bn128) G1 group used by the Pedersen commitment scheme.
+//!
+//! Curve: y² = x³ + 3 over Fq, prime group order r (= [`Fr`]'s modulus),
+//! cofactor 1, generator (1, 2). Jacobian coordinates for arithmetic,
+//! affine for storage and transcript serialization.
+
+pub mod msm;
+
+use crate::field::{Fq, Fr};
+use crate::util::rng::Rng;
+
+/// Affine point; `infinity` flag encodes the identity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct G1Affine {
+    pub x: Fq,
+    pub y: Fq,
+    pub infinity: bool,
+}
+
+/// Jacobian point (X/Z², Y/Z³); Z = 0 encodes the identity.
+#[derive(Clone, Copy, Debug)]
+pub struct G1 {
+    pub x: Fq,
+    pub y: Fq,
+    pub z: Fq,
+}
+
+const CURVE_B: u64 = 3;
+
+impl G1Affine {
+    pub const IDENTITY: Self = Self {
+        x: Fq::ZERO,
+        y: Fq::ZERO,
+        infinity: true,
+    };
+
+    /// The standard generator (1, 2).
+    pub fn generator() -> Self {
+        Self {
+            x: Fq::from_u64(1),
+            y: Fq::from_u64(2),
+            infinity: false,
+        }
+    }
+
+    pub fn is_on_curve(&self) -> bool {
+        if self.infinity {
+            return true;
+        }
+        self.y.square() == self.x.square() * self.x + Fq::from_u64(CURVE_B)
+    }
+
+    pub fn to_projective(&self) -> G1 {
+        if self.infinity {
+            G1::IDENTITY
+        } else {
+            G1 {
+                x: self.x,
+                y: self.y,
+                z: Fq::ONE,
+            }
+        }
+    }
+
+    pub fn neg(&self) -> Self {
+        Self {
+            x: self.x,
+            y: -self.y,
+            infinity: self.infinity,
+        }
+    }
+
+    /// 64-byte uncompressed encoding (x ‖ y little-endian); identity is all
+    /// zeros (x=y=0 is not on the curve, so the encoding is unambiguous).
+    pub fn to_bytes(&self) -> [u8; 64] {
+        let mut out = [0u8; 64];
+        if !self.infinity {
+            out[..32].copy_from_slice(&self.x.to_bytes());
+            out[32..].copy_from_slice(&self.y.to_bytes());
+        }
+        out
+    }
+}
+
+impl G1 {
+    pub const IDENTITY: Self = Self {
+        x: Fq::ONE,
+        y: Fq::ONE,
+        z: Fq::ZERO,
+    };
+
+    pub fn generator() -> Self {
+        G1Affine::generator().to_projective()
+    }
+
+    #[inline]
+    pub fn is_identity(&self) -> bool {
+        self.z.is_zero()
+    }
+
+    /// Point doubling (Jacobian, a = 0 formulas).
+    pub fn double(&self) -> Self {
+        if self.is_identity() {
+            return *self;
+        }
+        // http://hyperelliptic.org/EFD/g1p/auto-shortw-jacobian-0.html#doubling-dbl-2009-l
+        let a = self.x.square();
+        let b = self.y.square();
+        let c = b.square();
+        let d = ((self.x + b).square() - a - c).double();
+        let e = a.double() + a;
+        let f = e.square();
+        let x3 = f - d.double();
+        let y3 = e * (d - x3) - c.double().double().double();
+        let z3 = (self.y * self.z).double();
+        Self {
+            x: x3,
+            y: y3,
+            z: z3,
+        }
+    }
+
+    /// Mixed addition: self (Jacobian) + other (affine).
+    pub fn add_affine(&self, other: &G1Affine) -> Self {
+        if other.infinity {
+            return *self;
+        }
+        if self.is_identity() {
+            return other.to_projective();
+        }
+        // madd-2007-bl
+        let z1z1 = self.z.square();
+        let u2 = other.x * z1z1;
+        let s2 = other.y * self.z * z1z1;
+        if u2 == self.x {
+            if s2 == self.y {
+                return self.double();
+            }
+            return Self::IDENTITY;
+        }
+        let h = u2 - self.x;
+        let hh = h.square();
+        let i = hh.double().double();
+        let j = h * i;
+        let r = (s2 - self.y).double();
+        let v = self.x * i;
+        let x3 = r.square() - j - v.double();
+        let y3 = r * (v - x3) - (self.y * j).double();
+        let z3 = (self.z + h).square() - z1z1 - hh;
+        Self {
+            x: x3,
+            y: y3,
+            z: z3,
+        }
+    }
+
+    /// Full Jacobian addition.
+    pub fn add(&self, other: &Self) -> Self {
+        if self.is_identity() {
+            return *other;
+        }
+        if other.is_identity() {
+            return *self;
+        }
+        // add-2007-bl
+        let z1z1 = self.z.square();
+        let z2z2 = other.z.square();
+        let u1 = self.x * z2z2;
+        let u2 = other.x * z1z1;
+        let s1 = self.y * other.z * z2z2;
+        let s2 = other.y * self.z * z1z1;
+        if u1 == u2 {
+            if s1 == s2 {
+                return self.double();
+            }
+            return Self::IDENTITY;
+        }
+        let h = u2 - u1;
+        let i = h.double().square();
+        let j = h * i;
+        let r = (s2 - s1).double();
+        let v = u1 * i;
+        let x3 = r.square() - j - v.double();
+        let y3 = r * (v - x3) - (s1 * j).double();
+        let z3 = ((self.z + other.z).square() - z1z1 - z2z2) * h;
+        Self {
+            x: x3,
+            y: y3,
+            z: z3,
+        }
+    }
+
+    pub fn neg(&self) -> Self {
+        Self {
+            x: self.x,
+            y: -self.y,
+            z: self.z,
+        }
+    }
+
+    /// Scalar multiplication (double-and-add over the canonical bits).
+    pub fn mul(&self, scalar: &Fr) -> Self {
+        let bits = scalar.to_repr();
+        let mut acc = Self::IDENTITY;
+        let mut started = false;
+        for i in (0..4).rev() {
+            for b in (0..64).rev() {
+                if started {
+                    acc = acc.double();
+                }
+                if (bits[i] >> b) & 1 == 1 {
+                    acc = acc.add(self);
+                    started = true;
+                }
+            }
+        }
+        acc
+    }
+
+    pub fn to_affine(&self) -> G1Affine {
+        if self.is_identity() {
+            return G1Affine::IDENTITY;
+        }
+        let zinv = self.z.inverse().unwrap();
+        let zinv2 = zinv.square();
+        G1Affine {
+            x: self.x * zinv2,
+            y: self.y * zinv2 * zinv,
+            infinity: false,
+        }
+    }
+
+    /// Normalize many points with one field inversion (Montgomery's trick).
+    pub fn batch_to_affine(points: &[Self]) -> Vec<G1Affine> {
+        let mut zs: Vec<Fq> = points.iter().map(|p| p.z).collect();
+        Fq::batch_invert(&mut zs);
+        points
+            .iter()
+            .zip(zs.iter())
+            .map(|(p, zinv)| {
+                if p.is_identity() {
+                    G1Affine::IDENTITY
+                } else {
+                    let zinv2 = zinv.square();
+                    G1Affine {
+                        x: p.x * zinv2,
+                        y: p.y * zinv2 * *zinv,
+                        infinity: false,
+                    }
+                }
+            })
+            .collect()
+    }
+
+    /// Uniformly random group element (random scalar times the generator).
+    pub fn random(rng: &mut Rng) -> Self {
+        Self::generator().mul(&Fr::random(rng))
+    }
+}
+
+impl PartialEq for G1 {
+    /// Equality in the group (cross-multiplied Jacobian comparison).
+    fn eq(&self, other: &Self) -> bool {
+        if self.is_identity() {
+            return other.is_identity();
+        }
+        if other.is_identity() {
+            return false;
+        }
+        let z1z1 = self.z.square();
+        let z2z2 = other.z.square();
+        self.x * z2z2 == other.x * z1z1
+            && self.y * z2z2 * other.z == other.y * z1z1 * self.z
+    }
+}
+impl Eq for G1 {}
+
+impl core::ops::Add for G1 {
+    type Output = G1;
+    fn add(self, rhs: Self) -> G1 {
+        G1::add(&self, &rhs)
+    }
+}
+impl core::ops::AddAssign for G1 {
+    fn add_assign(&mut self, rhs: Self) {
+        *self = G1::add(self, &rhs);
+    }
+}
+impl core::ops::Neg for G1 {
+    type Output = G1;
+    fn neg(self) -> G1 {
+        G1::neg(&self)
+    }
+}
+impl core::iter::Sum for G1 {
+    fn sum<I: Iterator<Item = Self>>(iter: I) -> Self {
+        iter.fold(G1::IDENTITY, |a, b| a + b)
+    }
+}
+
+/// Derive a deterministic, nothing-up-my-sleeve generator from a seed label
+/// and index by try-and-increment: x = H(label ‖ i ‖ ctr) as a field element,
+/// solve y² = x³ + 3 (q ≡ 3 mod 4 so sqrt is a single exponentiation), clear
+/// nothing (cofactor 1). Independent of the standard generator's dlog.
+pub fn hash_to_curve(label: &[u8], index: u64) -> G1Affine {
+    use sha2::{Digest, Sha256};
+    let mut ctr: u64 = 0;
+    loop {
+        let mut h = Sha256::new();
+        h.update(b"zkdl/hash-to-curve/v1");
+        h.update(label);
+        h.update(index.to_le_bytes());
+        h.update(ctr.to_le_bytes());
+        let d1 = h.finalize();
+        let mut h2 = Sha256::new();
+        h2.update(b"zkdl/hash-to-curve/v1/extend");
+        h2.update(d1);
+        let d2 = h2.finalize();
+        let mut wide = [0u8; 64];
+        wide[..32].copy_from_slice(&d1);
+        wide[32..].copy_from_slice(&d2);
+        let x = Fq::from_bytes_wide(&wide);
+        let y2 = x.square() * x + Fq::from_u64(CURVE_B);
+        if let Some(y) = y2.sqrt() {
+            // canonicalize sign by parity of the canonical repr
+            let y = if y.to_repr()[0] & 1 == 0 { y } else { -y };
+            let p = G1Affine {
+                x,
+                y,
+                infinity: false,
+            };
+            debug_assert!(p.is_on_curve());
+            return p;
+        }
+        ctr += 1;
+    }
+}
+
+/// Derive `n` independent generators for a vector commitment basis.
+/// Parallelized: each point is an independent hash-to-curve evaluation.
+pub fn derive_generators(label: &[u8], n: usize) -> Vec<G1Affine> {
+    crate::util::threads::par_map_indexed(n, |i| hash_to_curve(label, i as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::seed_from_u64(0xc0de)
+    }
+
+    #[test]
+    fn generator_on_curve() {
+        assert!(G1Affine::generator().is_on_curve());
+    }
+
+    #[test]
+    fn group_laws() {
+        let mut r = rng();
+        let p = G1::random(&mut r);
+        let q = G1::random(&mut r);
+        let s = G1::random(&mut r);
+        assert_eq!(p + q, q + p);
+        assert_eq!((p + q) + s, p + (q + s));
+        assert_eq!(p + G1::IDENTITY, p);
+        assert_eq!(p + p.neg(), G1::IDENTITY);
+        assert_eq!(p.double(), p + p);
+        assert!(p.to_affine().is_on_curve());
+    }
+
+    #[test]
+    fn mixed_addition_matches() {
+        let mut r = rng();
+        let p = G1::random(&mut r);
+        let q = G1::random(&mut r);
+        let qa = q.to_affine();
+        assert_eq!(p.add_affine(&qa), p + q);
+        // doubling path
+        assert_eq!(p.add_affine(&p.to_affine()), p.double());
+        // inverse path
+        assert_eq!(p.add_affine(&p.neg().to_affine()), G1::IDENTITY);
+    }
+
+    #[test]
+    fn scalar_mul_properties() {
+        let mut r = rng();
+        let p = G1::random(&mut r);
+        let a = Fr::random(&mut r);
+        let b = Fr::random(&mut r);
+        // (a+b)P = aP + bP
+        assert_eq!(p.mul(&(a + b)), p.mul(&a) + p.mul(&b));
+        // (ab)P = a(bP)
+        assert_eq!(p.mul(&(a * b)), p.mul(&b).mul(&a));
+        assert_eq!(p.mul(&Fr::ZERO), G1::IDENTITY);
+        assert_eq!(p.mul(&Fr::ONE), p);
+        assert_eq!(p.mul(&Fr::from_u64(5)), p + p + p + p + p);
+    }
+
+    #[test]
+    fn order_annihilates() {
+        // r·G = identity: scalar r ≡ 0 in Fr, so multiply by (r-1) and add G
+        let g = G1::generator();
+        let r_minus_1 = -Fr::ONE;
+        assert_eq!(g.mul(&r_minus_1) + g, G1::IDENTITY);
+    }
+
+    #[test]
+    fn batch_to_affine_matches() {
+        let mut r = rng();
+        let pts: Vec<G1> = (0..17).map(|_| G1::random(&mut r)).collect();
+        let batch = G1::batch_to_affine(&pts);
+        for (p, a) in pts.iter().zip(batch.iter()) {
+            assert_eq!(p.to_affine(), *a);
+        }
+    }
+
+    #[test]
+    fn hash_to_curve_deterministic_and_distinct() {
+        let a = hash_to_curve(b"test", 0);
+        let b = hash_to_curve(b"test", 0);
+        let c = hash_to_curve(b"test", 1);
+        let d = hash_to_curve(b"other", 0);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, d);
+        assert!(a.is_on_curve() && c.is_on_curve() && d.is_on_curve());
+    }
+
+    #[test]
+    fn affine_bytes_unambiguous() {
+        let mut r = rng();
+        let p = G1::random(&mut r).to_affine();
+        assert_ne!(p.to_bytes(), G1Affine::IDENTITY.to_bytes());
+    }
+}

@@ -1,0 +1,148 @@
+//! Multi-scalar multiplication (Pippenger's bucket method).
+//!
+//! The dominant cost of the zkDL prover is committing to tensors and
+//! auxiliary inputs: Σᵢ sᵢ·Gᵢ over thousands-to-millions of terms. Pippenger
+//! reduces this from n scalar-muls to roughly n·(256/log n) point additions;
+//! windows are processed in parallel across threads.
+
+use super::{G1, G1Affine};
+use crate::field::Fr;
+use crate::util::threads;
+
+/// Pick the Pippenger window size (bits) for n terms.
+fn window_size(n: usize) -> usize {
+    match n {
+        0..=3 => 1,
+        4..=15 => 3,
+        16..=127 => 5,
+        128..=1023 => 7,
+        1024..=8191 => 9,
+        8192..=65535 => 11,
+        65536..=524287 => 13,
+        _ => 15,
+    }
+}
+
+/// MSM: Σᵢ scalars[i]·bases[i]. Lengths must match.
+pub fn msm(bases: &[G1Affine], scalars: &[Fr]) -> G1 {
+    assert_eq!(bases.len(), scalars.len(), "msm length mismatch");
+    let n = bases.len();
+    if n == 0 {
+        return G1::IDENTITY;
+    }
+    if n < 8 {
+        // naive is faster at tiny sizes
+        let mut acc = G1::IDENTITY;
+        for (b, s) in bases.iter().zip(scalars.iter()) {
+            acc = acc.add(&b.to_projective().mul(s));
+        }
+        return acc;
+    }
+
+    let repr: Vec<[u64; 4]> = scalars.iter().map(|s| s.to_repr()).collect();
+    // window sized by the number of *effective* terms: zero scalars are
+    // skipped during bucketing, and the IPA round MSMs are half zeros —
+    // sizing by total length would let the 2^w bucket-combine cost dominate
+    let effective = repr
+        .iter()
+        .filter(|r| r.iter().any(|&l| l != 0))
+        .count()
+        .max(1);
+    let w = window_size(effective);
+    let num_windows = 256usize.div_ceil(w);
+
+    // Each window is independent: compute its bucket sum in parallel.
+    let window_sums: Vec<G1> = threads::par_map_indexed(num_windows, |wi| {
+        let shift = wi * w;
+        let mut buckets = vec![G1::IDENTITY; (1usize << w) - 1];
+        for (base, sc) in bases.iter().zip(repr.iter()) {
+            if base.infinity {
+                continue;
+            }
+            // extract bits [shift, shift+w) of the 256-bit scalar
+            let limb = shift / 64;
+            let off = shift % 64;
+            let mut frag = sc[limb] >> off;
+            if off + w > 64 && limb + 1 < 4 {
+                frag |= sc[limb + 1] << (64 - off);
+            }
+            let idx = (frag & ((1u64 << w) - 1)) as usize;
+            if idx > 0 {
+                buckets[idx - 1] = buckets[idx - 1].add_affine(base);
+            }
+        }
+        // running-sum trick: Σ idx·bucket[idx]
+        let mut running = G1::IDENTITY;
+        let mut acc = G1::IDENTITY;
+        for b in buckets.iter().rev() {
+            running = running.add(b);
+            acc = acc.add(&running);
+        }
+        acc
+    });
+
+    // Horner combine the windows (most significant first).
+    let mut total = G1::IDENTITY;
+    for ws in window_sums.iter().rev() {
+        for _ in 0..w {
+            total = total.double();
+        }
+        total = total.add(ws);
+    }
+    total
+}
+
+/// MSM with u64 scalars (bit tensors, exponent vectors): same bucket method
+/// over 64-bit fragments only.
+pub fn msm_u64(bases: &[G1Affine], scalars: &[u64]) -> G1 {
+    let frs: Vec<Fr> = scalars.iter().map(|&s| Fr::from_u64(s)).collect();
+    msm(bases, &frs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(bases: &[G1Affine], scalars: &[Fr]) -> G1 {
+        let mut acc = G1::IDENTITY;
+        for (b, s) in bases.iter().zip(scalars.iter()) {
+            acc = acc.add(&b.to_projective().mul(s));
+        }
+        acc
+    }
+
+    #[test]
+    fn msm_matches_naive() {
+        let mut rng = Rng::seed_from_u64(7);
+        for n in [1usize, 2, 7, 8, 33, 100, 257] {
+            let bases: Vec<G1Affine> = (0..n).map(|_| G1::random(&mut rng).to_affine()).collect();
+            let scalars: Vec<Fr> = (0..n).map(|_| Fr::random(&mut rng)).collect();
+            assert_eq!(msm(&bases, &scalars), naive(&bases, &scalars), "n={n}");
+        }
+    }
+
+    #[test]
+    fn msm_with_zero_and_identity() {
+        let mut rng = Rng::seed_from_u64(8);
+        let mut bases: Vec<G1Affine> =
+            (0..20).map(|_| G1::random(&mut rng).to_affine()).collect();
+        bases[3] = G1Affine::IDENTITY;
+        let mut scalars: Vec<Fr> = (0..20).map(|_| Fr::random(&mut rng)).collect();
+        scalars[5] = Fr::ZERO;
+        assert_eq!(msm(&bases, &scalars), naive(&bases, &scalars));
+    }
+
+    #[test]
+    fn msm_empty() {
+        assert_eq!(msm(&[], &[]), G1::IDENTITY);
+    }
+
+    #[test]
+    fn msm_small_scalars() {
+        let mut rng = Rng::seed_from_u64(9);
+        let bases: Vec<G1Affine> = (0..50).map(|_| G1::random(&mut rng).to_affine()).collect();
+        let scalars: Vec<Fr> = (0..50).map(|i| Fr::from_i64(i as i64 - 25)).collect();
+        assert_eq!(msm(&bases, &scalars), naive(&bases, &scalars));
+    }
+}

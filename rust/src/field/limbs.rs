@@ -1,0 +1,251 @@
+//! 4×u64 little-endian limb arithmetic helpers.
+//!
+//! Everything here is a `const fn` so that the Montgomery constants of each
+//! field (R, R², R³, −N⁻¹ mod 2⁶⁴) can be *derived* from the modulus at
+//! compile time instead of being pasted in as magic numbers.
+
+/// Add with carry: returns (sum, carry).
+#[inline(always)]
+pub const fn adc(a: u64, b: u64, carry: u64) -> (u64, u64) {
+    let t = (a as u128) + (b as u128) + (carry as u128);
+    (t as u64, (t >> 64) as u64)
+}
+
+/// Subtract with borrow: returns (diff, borrow) where borrow ∈ {0,1}.
+#[inline(always)]
+pub const fn sbb(a: u64, b: u64, borrow: u64) -> (u64, u64) {
+    let t = (a as u128).wrapping_sub((b as u128) + (borrow as u128));
+    (t as u64, ((t >> 64) as u64) & 1)
+}
+
+/// Multiply-accumulate: a + b*c + carry, returns (lo, hi).
+#[inline(always)]
+pub const fn mac(a: u64, b: u64, c: u64, carry: u64) -> (u64, u64) {
+    let t = (a as u128) + (b as u128) * (c as u128) + (carry as u128);
+    (t as u64, (t >> 64) as u64)
+}
+
+/// a < b over 4 limbs.
+#[inline(always)]
+pub const fn lt(a: &[u64; 4], b: &[u64; 4]) -> bool {
+    let mut i = 3;
+    loop {
+        if a[i] < b[i] {
+            return true;
+        }
+        if a[i] > b[i] {
+            return false;
+        }
+        if i == 0 {
+            return false;
+        }
+        i -= 1;
+    }
+}
+
+/// a == 0 over 4 limbs.
+#[inline(always)]
+pub const fn is_zero(a: &[u64; 4]) -> bool {
+    a[0] == 0 && a[1] == 0 && a[2] == 0 && a[3] == 0
+}
+
+/// a + b (no reduction); returns (limbs, carry).
+#[inline(always)]
+pub const fn add4(a: &[u64; 4], b: &[u64; 4]) -> ([u64; 4], u64) {
+    let (r0, c) = adc(a[0], b[0], 0);
+    let (r1, c) = adc(a[1], b[1], c);
+    let (r2, c) = adc(a[2], b[2], c);
+    let (r3, c) = adc(a[3], b[3], c);
+    ([r0, r1, r2, r3], c)
+}
+
+/// a - b (no reduction); returns (limbs, borrow).
+#[inline(always)]
+pub const fn sub4(a: &[u64; 4], b: &[u64; 4]) -> ([u64; 4], u64) {
+    let (r0, bw) = sbb(a[0], b[0], 0);
+    let (r1, bw) = sbb(a[1], b[1], bw);
+    let (r2, bw) = sbb(a[2], b[2], bw);
+    let (r3, bw) = sbb(a[3], b[3], bw);
+    ([r0, r1, r2, r3], bw)
+}
+
+/// (a + b) mod n, assuming a, b < n.
+#[inline(always)]
+pub const fn add_mod(a: &[u64; 4], b: &[u64; 4], n: &[u64; 4]) -> [u64; 4] {
+    let (s, carry) = add4(a, b);
+    // subtract n if overflowed or >= n
+    if carry == 1 || !lt(&s, n) {
+        let (r, _) = sub4(&s, n);
+        r
+    } else {
+        s
+    }
+}
+
+/// (a - b) mod n, assuming a, b < n.
+#[inline(always)]
+pub const fn sub_mod(a: &[u64; 4], b: &[u64; 4], n: &[u64; 4]) -> [u64; 4] {
+    let (d, borrow) = sub4(a, b);
+    if borrow == 1 {
+        let (r, _) = add4(&d, n);
+        r
+    } else {
+        d
+    }
+}
+
+/// −a mod n, assuming a < n.
+#[inline(always)]
+pub const fn neg_mod(a: &[u64; 4], n: &[u64; 4]) -> [u64; 4] {
+    if is_zero(a) {
+        [0; 4]
+    } else {
+        let (r, _) = sub4(n, a);
+        r
+    }
+}
+
+/// 2a mod n, assuming a < n (n < 2^255 so the shifted-out bit matters).
+#[inline(always)]
+pub const fn double_mod(a: &[u64; 4], n: &[u64; 4]) -> [u64; 4] {
+    let carry = a[3] >> 63;
+    let s = [
+        a[0] << 1,
+        (a[1] << 1) | (a[0] >> 63),
+        (a[2] << 1) | (a[1] >> 63),
+        (a[3] << 1) | (a[2] >> 63),
+    ];
+    if carry == 1 || !lt(&s, n) {
+        let (r, _) = sub4(&s, n);
+        r
+    } else {
+        s
+    }
+}
+
+/// Montgomery multiplication (CIOS): a·b·R⁻¹ mod n where R = 2²⁵⁶.
+/// Requires n odd, n < 2²⁵⁵, `ninv` = −n⁻¹ mod 2⁶⁴, a, b < n.
+pub const fn mont_mul(a: &[u64; 4], b: &[u64; 4], n: &[u64; 4], ninv: u64) -> [u64; 4] {
+    let mut t = [0u64; 6]; // t[4] holds the running high limb, t[5] the carry
+    let mut i = 0;
+    while i < 4 {
+        // t += a[i] * b
+        let (t0, c) = mac(t[0], a[i], b[0], 0);
+        let (t1, c) = mac(t[1], a[i], b[1], c);
+        let (t2, c) = mac(t[2], a[i], b[2], c);
+        let (t3, c) = mac(t[3], a[i], b[3], c);
+        let (t4, c) = adc(t[4], 0, c);
+        t = [t0, t1, t2, t3, t4, c];
+        // m = t[0] * ninv mod 2^64; t += m * n; t >>= 64
+        let m = t[0].wrapping_mul(ninv);
+        let (_, c) = mac(t[0], m, n[0], 0);
+        let (r1, c) = mac(t[1], m, n[1], c);
+        let (r2, c) = mac(t[2], m, n[2], c);
+        let (r3, c) = mac(t[3], m, n[3], c);
+        let (r4, c) = adc(t[4], 0, c);
+        let r5 = t[5] + c;
+        t = [r1, r2, r3, r4, r5, 0];
+        i += 1;
+    }
+    let r = [t[0], t[1], t[2], t[3]];
+    // t[4] can be at most 1; final conditional subtraction
+    if t[4] == 1 || !lt(&r, n) {
+        let (s, _) = sub4(&r, n);
+        s
+    } else {
+        r
+    }
+}
+
+/// −n⁻¹ mod 2⁶⁴ by Newton's iteration (n odd).
+pub const fn mont_ninv(n0: u64) -> u64 {
+    // x := n0^{-1} mod 2^64 via x_{k+1} = x_k (2 - n0 x_k); 6 iterations
+    let mut x = 1u64;
+    let mut i = 0;
+    while i < 6 {
+        x = x.wrapping_mul(2u64.wrapping_sub(n0.wrapping_mul(x)));
+        i += 1;
+    }
+    x.wrapping_neg()
+}
+
+/// R mod n, with R = 2²⁵⁶, computed by doubling 1 mod n 256 times.
+pub const fn mont_r(n: &[u64; 4]) -> [u64; 4] {
+    let mut x = [1u64, 0, 0, 0];
+    let mut i = 0;
+    while i < 256 {
+        x = double_mod(&x, n);
+        i += 1;
+    }
+    x
+}
+
+/// R² mod n (Montgomery form of R).
+pub const fn mont_r2(n: &[u64; 4]) -> [u64; 4] {
+    let mut x = mont_r(n);
+    let mut i = 0;
+    while i < 256 {
+        x = double_mod(&x, n);
+        i += 1;
+    }
+    x
+}
+
+/// R³ mod n (used for wide 512-bit reduction).
+pub const fn mont_r3(n: &[u64; 4], ninv: u64) -> [u64; 4] {
+    let r2 = mont_r2(n);
+    // mont_mul(R², R²) = R⁴·R⁻¹ = R³
+    mont_mul(&r2, &r2, n, ninv)
+}
+
+/// n - 2 (for Fermat inversion exponent). n > 2.
+pub const fn sub2(n: &[u64; 4]) -> [u64; 4] {
+    let (r, _) = sub4(n, &[2, 0, 0, 0]);
+    r
+}
+
+/// (n + 1) / 4 (sqrt exponent when n ≡ 3 mod 4).
+pub const fn plus1_div4(n: &[u64; 4]) -> [u64; 4] {
+    let (s, c) = add4(n, &[1, 0, 0, 0]);
+    // shift right by 2, bringing in the carry bit
+    [
+        (s[0] >> 2) | (s[1] << 62),
+        (s[1] >> 2) | (s[2] << 62),
+        (s[2] >> 2) | (s[3] << 62),
+        (s[3] >> 2) | (c << 62),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adc_sbb_roundtrip() {
+        let (s, c) = adc(u64::MAX, 1, 0);
+        assert_eq!((s, c), (0, 1));
+        let (d, b) = sbb(0, 1, 0);
+        assert_eq!((d, b), (u64::MAX, 1));
+    }
+
+    #[test]
+    fn mont_ninv_is_inverse() {
+        for n0 in [1u64, 3, 0xffff_ffff_ffff_ffffu64, 0x3c208c16d87cfd47] {
+            if n0 % 2 == 1 {
+                let ninv = mont_ninv(n0);
+                assert_eq!(n0.wrapping_mul(ninv.wrapping_neg()), 1, "n0={n0}");
+            }
+        }
+    }
+
+    #[test]
+    fn add_sub_mod_small() {
+        let n = [17u64, 0, 0, 0];
+        let a = [12u64, 0, 0, 0];
+        let b = [9u64, 0, 0, 0];
+        assert_eq!(add_mod(&a, &b, &n), [4, 0, 0, 0]);
+        assert_eq!(sub_mod(&b, &a, &n), [14, 0, 0, 0]);
+        assert_eq!(neg_mod(&a, &n), [5, 0, 0, 0]);
+        assert_eq!(double_mod(&a, &n), [7, 0, 0, 0]);
+    }
+}

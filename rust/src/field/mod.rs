@@ -1,0 +1,500 @@
+//! Prime fields for the zkDL proof system.
+//!
+//! Two BN254 (alt-bn128) fields:
+//! * [`Fr`] — the scalar field of G1, order r. All proof-system arithmetic
+//!   (sumcheck, multilinear extensions, inner products, quantized tensors
+//!   embedded as signed integers) lives here. This is the paper's 𝔽.
+//! * [`Fq`] — the base field (point coordinates) used by `curve`.
+//!
+//! Representation: 4×u64 little-endian Montgomery form with R = 2²⁵⁶; all
+//! Montgomery constants are derived from the modulus by `const fn`s in
+//! [`limbs`], so the only magic numbers in this module are the two moduli
+//! and the Fr two-adic generator used for testing.
+
+pub mod limbs;
+
+use core::fmt;
+use core::hash::{Hash, Hasher};
+use core::marker::PhantomData;
+use core::ops::{Add, AddAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+use limbs::*;
+
+/// Compile-time parameters of a 4-limb prime field.
+pub trait FieldParams: 'static + Copy + Clone + Send + Sync + fmt::Debug + PartialEq + Eq {
+    /// The prime modulus (little-endian limbs), odd, < 2²⁵⁵.
+    const MODULUS: [u64; 4];
+    /// −MODULUS⁻¹ mod 2⁶⁴ (derived).
+    const NINV: u64 = mont_ninv(Self::MODULUS[0]);
+    /// R mod MODULUS (Montgomery form of 1).
+    const R: [u64; 4] = mont_r(&Self::MODULUS);
+    /// R² mod MODULUS.
+    const R2: [u64; 4] = mont_r2(&Self::MODULUS);
+    /// R³ mod MODULUS.
+    const R3: [u64; 4] = mont_r3(&Self::MODULUS, mont_ninv(Self::MODULUS[0]));
+    /// MODULUS − 2 (Fermat inversion exponent).
+    const MOD_MINUS_2: [u64; 4] = sub2(&Self::MODULUS);
+    /// (MODULUS+1)/4, the sqrt exponent when MODULUS ≡ 3 (mod 4).
+    const SQRT_EXP: [u64; 4] = plus1_div4(&Self::MODULUS);
+}
+
+/// BN254 scalar field parameters (order of G1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrParams;
+impl FieldParams for FrParams {
+    // r = 21888242871839275222246405745257275088548364400416034343698204186575808495617
+    const MODULUS: [u64; 4] = [
+        0x43e1f593f0000001,
+        0x2833e84879b97091,
+        0xb85045b68181585d,
+        0x30644e72e131a029,
+    ];
+}
+
+/// BN254 base field parameters (coordinates of G1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FqParams;
+impl FieldParams for FqParams {
+    // q = 21888242871839275222246405745257275088696311157297823662689037894645226208583
+    const MODULUS: [u64; 4] = [
+        0x3c208c16d87cfd47,
+        0x97816a916871ca8d,
+        0xb85045b68181585d,
+        0x30644e72e131a029,
+    ];
+}
+
+/// An element of the prime field defined by `P`, in Montgomery form.
+pub struct Fp<P: FieldParams>(pub(crate) [u64; 4], PhantomData<P>);
+
+/// The zkDL proof field 𝔽 (BN254 scalar field).
+pub type Fr = Fp<FrParams>;
+/// The curve coordinate field.
+pub type Fq = Fp<FqParams>;
+
+impl<P: FieldParams> Clone for Fp<P> {
+    #[inline(always)]
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<P: FieldParams> Copy for Fp<P> {}
+impl<P: FieldParams> PartialEq for Fp<P> {
+    #[inline(always)]
+    fn eq(&self, other: &Self) -> bool {
+        self.0 == other.0
+    }
+}
+impl<P: FieldParams> Eq for Fp<P> {}
+impl<P: FieldParams> Hash for Fp<P> {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        self.0.hash(state)
+    }
+}
+impl<P: FieldParams> Default for Fp<P> {
+    #[inline(always)]
+    fn default() -> Self {
+        Self::ZERO
+    }
+}
+impl<P: FieldParams> fmt::Debug for Fp<P> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let r = self.to_repr();
+        write!(f, "0x{:016x}{:016x}{:016x}{:016x}", r[3], r[2], r[1], r[0])
+    }
+}
+impl<P: FieldParams> fmt::Display for Fp<P> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+impl<P: FieldParams> Fp<P> {
+    pub const ZERO: Self = Self([0; 4], PhantomData);
+    pub const ONE: Self = Self(P::R, PhantomData);
+
+    /// From raw Montgomery limbs (internal).
+    #[allow(dead_code)]
+    #[inline(always)]
+    pub(crate) const fn from_mont(limbs: [u64; 4]) -> Self {
+        Self(limbs, PhantomData)
+    }
+
+    /// Canonical (non-Montgomery) little-endian limbs.
+    #[inline]
+    pub fn to_repr(&self) -> [u64; 4] {
+        mont_mul(&self.0, &[1, 0, 0, 0], &P::MODULUS, P::NINV)
+    }
+
+    /// From canonical limbs; values ≥ modulus are reduced.
+    #[inline]
+    pub fn from_repr(mut v: [u64; 4]) -> Self {
+        if !lt(&v, &P::MODULUS) {
+            let (r, _) = sub4(&v, &P::MODULUS);
+            v = r;
+        }
+        Self(mont_mul(&v, &P::R2, &P::MODULUS, P::NINV), PhantomData)
+    }
+
+    #[inline]
+    pub fn from_u64(v: u64) -> Self {
+        Self::from_repr([v, 0, 0, 0])
+    }
+
+    #[inline]
+    pub fn from_u128(v: u128) -> Self {
+        Self::from_repr([v as u64, (v >> 64) as u64, 0, 0])
+    }
+
+    /// Signed-integer embedding: negative values map to modulus − |v|.
+    #[inline]
+    pub fn from_i64(v: i64) -> Self {
+        if v >= 0 {
+            Self::from_u64(v as u64)
+        } else {
+            -Self::from_u64(v.unsigned_abs())
+        }
+    }
+
+    /// Signed 128-bit embedding.
+    #[inline]
+    pub fn from_i128(v: i128) -> Self {
+        if v >= 0 {
+            Self::from_u128(v as u128)
+        } else {
+            -Self::from_u128(v.unsigned_abs())
+        }
+    }
+
+    /// Interpret a canonical element as a signed integer if it is small
+    /// (|v| < 2¹²⁷); used to pull quantized tensor values back out of 𝔽.
+    pub fn to_i128(&self) -> Option<i128> {
+        let r = self.to_repr();
+        if r[2] == 0 && r[3] == 0 && r[1] >> 63 == 0 {
+            return Some(((r[1] as u128) << 64 | r[0] as u128) as i128);
+        }
+        let neg = (-*self).to_repr();
+        if neg[2] == 0 && neg[3] == 0 && neg[1] >> 63 == 0 {
+            return Some(-(((neg[1] as u128) << 64 | neg[0] as u128) as i128));
+        }
+        None
+    }
+
+    /// Reduce 64 bytes (little-endian) mod p — uniform field sampling from a
+    /// hash output: v = hi·2²⁵⁶ + lo ⇒ mont(lo,R²) + mont(hi,R³).
+    pub fn from_bytes_wide(bytes: &[u8; 64]) -> Self {
+        let mut lo = [0u64; 4];
+        let mut hi = [0u64; 4];
+        for i in 0..4 {
+            lo[i] = u64::from_le_bytes(bytes[i * 8..i * 8 + 8].try_into().unwrap());
+            hi[i] = u64::from_le_bytes(bytes[32 + i * 8..40 + i * 8].try_into().unwrap());
+        }
+        let lo_m = mont_mul(&lo, &P::R2, &P::MODULUS, P::NINV);
+        let hi_m = mont_mul(&hi, &P::R3, &P::MODULUS, P::NINV);
+        Self(add_mod(&lo_m, &hi_m, &P::MODULUS), PhantomData)
+    }
+
+    /// Canonical 32-byte little-endian encoding.
+    pub fn to_bytes(&self) -> [u8; 32] {
+        let r = self.to_repr();
+        let mut out = [0u8; 32];
+        for i in 0..4 {
+            out[i * 8..i * 8 + 8].copy_from_slice(&r[i].to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse canonical 32-byte little-endian encoding (reduces if needed).
+    pub fn from_bytes(bytes: &[u8; 32]) -> Self {
+        let mut v = [0u64; 4];
+        for i in 0..4 {
+            v[i] = u64::from_le_bytes(bytes[i * 8..i * 8 + 8].try_into().unwrap());
+        }
+        Self::from_repr(v)
+    }
+
+    #[inline(always)]
+    pub fn is_zero(&self) -> bool {
+        is_zero(&self.0)
+    }
+
+    #[inline(always)]
+    pub fn double(&self) -> Self {
+        Self(double_mod(&self.0, &P::MODULUS), PhantomData)
+    }
+
+    #[inline(always)]
+    pub fn square(&self) -> Self {
+        Self(mont_mul(&self.0, &self.0, &P::MODULUS, P::NINV), PhantomData)
+    }
+
+    /// Exponentiation by a 4-limb little-endian exponent.
+    pub fn pow(&self, exp: &[u64; 4]) -> Self {
+        let mut acc = Self::ONE;
+        let mut started = false;
+        for i in (0..4).rev() {
+            for b in (0..64).rev() {
+                if started {
+                    acc = acc.square();
+                }
+                if (exp[i] >> b) & 1 == 1 {
+                    acc *= *self;
+                    started = true;
+                }
+            }
+        }
+        acc
+    }
+
+    /// Multiplicative inverse (Fermat). Returns None for zero.
+    pub fn inverse(&self) -> Option<Self> {
+        if self.is_zero() {
+            None
+        } else {
+            Some(self.pow(&P::MOD_MINUS_2))
+        }
+    }
+
+    /// Square root when MODULUS ≡ 3 (mod 4) (true for both BN254 fields).
+    /// Returns None if `self` is a non-residue.
+    pub fn sqrt(&self) -> Option<Self> {
+        let s = self.pow(&P::SQRT_EXP);
+        if s.square() == *self {
+            Some(s)
+        } else {
+            None
+        }
+    }
+
+    /// Uniform random element from a PRNG.
+    pub fn random(rng: &mut crate::util::rng::Rng) -> Self {
+        let mut b = [0u8; 64];
+        rng.fill_bytes(&mut b);
+        Self::from_bytes_wide(&b)
+    }
+
+    /// Batch inversion (Montgomery's trick): inverts all non-zero entries in
+    /// place with one field inversion + 3n multiplications.
+    pub fn batch_invert(values: &mut [Self]) {
+        let mut prods = Vec::with_capacity(values.len());
+        let mut acc = Self::ONE;
+        for v in values.iter() {
+            prods.push(acc);
+            if !v.is_zero() {
+                acc *= *v;
+            }
+        }
+        let mut inv = acc.inverse().expect("product of non-zero elements");
+        for (v, p) in values.iter_mut().zip(prods.into_iter()).rev() {
+            if !v.is_zero() {
+                let new_v = inv * p;
+                inv *= *v;
+                *v = new_v;
+            }
+        }
+    }
+}
+
+impl<P: FieldParams> Add for Fp<P> {
+    type Output = Self;
+    #[inline(always)]
+    fn add(self, rhs: Self) -> Self {
+        Self(add_mod(&self.0, &rhs.0, &P::MODULUS), PhantomData)
+    }
+}
+impl<P: FieldParams> Sub for Fp<P> {
+    type Output = Self;
+    #[inline(always)]
+    fn sub(self, rhs: Self) -> Self {
+        Self(sub_mod(&self.0, &rhs.0, &P::MODULUS), PhantomData)
+    }
+}
+impl<P: FieldParams> Mul for Fp<P> {
+    type Output = Self;
+    #[inline(always)]
+    fn mul(self, rhs: Self) -> Self {
+        Self(mont_mul(&self.0, &rhs.0, &P::MODULUS, P::NINV), PhantomData)
+    }
+}
+impl<P: FieldParams> Neg for Fp<P> {
+    type Output = Self;
+    #[inline(always)]
+    fn neg(self) -> Self {
+        Self(neg_mod(&self.0, &P::MODULUS), PhantomData)
+    }
+}
+impl<P: FieldParams> AddAssign for Fp<P> {
+    #[inline(always)]
+    fn add_assign(&mut self, rhs: Self) {
+        *self = *self + rhs;
+    }
+}
+impl<P: FieldParams> SubAssign for Fp<P> {
+    #[inline(always)]
+    fn sub_assign(&mut self, rhs: Self) {
+        *self = *self - rhs;
+    }
+}
+impl<P: FieldParams> MulAssign for Fp<P> {
+    #[inline(always)]
+    fn mul_assign(&mut self, rhs: Self) {
+        *self = *self * rhs;
+    }
+}
+impl<P: FieldParams> core::iter::Sum for Fp<P> {
+    fn sum<I: Iterator<Item = Self>>(iter: I) -> Self {
+        iter.fold(Self::ZERO, |a, b| a + b)
+    }
+}
+impl<'a, P: FieldParams> core::iter::Sum<&'a Fp<P>> for Fp<P> {
+    fn sum<I: Iterator<Item = &'a Self>>(iter: I) -> Self {
+        iter.fold(Self::ZERO, |a, b| a + *b)
+    }
+}
+impl<P: FieldParams> core::iter::Product for Fp<P> {
+    fn product<I: Iterator<Item = Self>>(iter: I) -> Self {
+        iter.fold(Self::ONE, |a, b| a * b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rng() -> Rng {
+        Rng::seed_from_u64(0x5eed)
+    }
+
+    #[test]
+    fn constants_consistent() {
+        // R derived by doubling matches Montgomery form of 1
+        assert_eq!(Fr::ONE.to_repr(), [1, 0, 0, 0]);
+        assert_eq!(Fq::ONE.to_repr(), [1, 0, 0, 0]);
+        // NINV * MODULUS ≡ −1 mod 2⁶⁴
+        assert_eq!(
+            FrParams::MODULUS[0].wrapping_mul(FrParams::NINV),
+            u64::MAX
+        );
+        assert_eq!(
+            FqParams::MODULUS[0].wrapping_mul(FqParams::NINV),
+            u64::MAX
+        );
+    }
+
+    #[test]
+    fn field_axioms_random() {
+        let mut r = rng();
+        for _ in 0..200 {
+            let a = Fr::random(&mut r);
+            let b = Fr::random(&mut r);
+            let c = Fr::random(&mut r);
+            assert_eq!(a + b, b + a);
+            assert_eq!(a * b, b * a);
+            assert_eq!((a + b) + c, a + (b + c));
+            assert_eq!((a * b) * c, a * (b * c));
+            assert_eq!(a * (b + c), a * b + a * c);
+            assert_eq!(a - a, Fr::ZERO);
+            assert_eq!(a + (-a), Fr::ZERO);
+            assert_eq!(a * Fr::ONE, a);
+            assert_eq!(a.double(), a + a);
+            assert_eq!(a.square(), a * a);
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut r = rng();
+        for _ in 0..50 {
+            let a = Fr::random(&mut r);
+            if a.is_zero() {
+                continue;
+            }
+            assert_eq!(a * a.inverse().unwrap(), Fr::ONE);
+        }
+        assert!(Fr::ZERO.inverse().is_none());
+    }
+
+    #[test]
+    fn batch_invert_matches() {
+        let mut r = rng();
+        let vals: Vec<Fr> = (0..33).map(|i| if i == 7 { Fr::ZERO } else { Fr::random(&mut r) }).collect();
+        let mut batch = vals.clone();
+        Fr::batch_invert(&mut batch);
+        for (v, b) in vals.iter().zip(batch.iter()) {
+            if v.is_zero() {
+                assert!(b.is_zero());
+            } else {
+                assert_eq!(*v * *b, Fr::ONE);
+            }
+        }
+    }
+
+    #[test]
+    fn sqrt_fq() {
+        let mut r = rng();
+        let mut found = 0;
+        for _ in 0..32 {
+            let a = Fq::random(&mut r);
+            let sq = a.square();
+            let s = sq.sqrt().expect("square must have a root");
+            assert!(s == a || s == -a);
+            if a.sqrt().is_some() {
+                found += 1;
+            }
+        }
+        // roughly half the elements are residues
+        assert!(found > 4 && found < 29, "found={found}");
+    }
+
+    #[test]
+    fn signed_embedding() {
+        for v in [-5i64, -1, 0, 1, 7, i64::MAX, i64::MIN + 1] {
+            let f = Fr::from_i64(v);
+            assert_eq!(f.to_i128(), Some(v as i128), "v={v}");
+        }
+        assert_eq!(Fr::from_i64(-3) + Fr::from_i64(5), Fr::from_u64(2));
+        assert_eq!(
+            Fr::from_i128(-(1i128 << 100)).to_i128(),
+            Some(-(1i128 << 100))
+        );
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut r = rng();
+        for _ in 0..20 {
+            let a = Fr::random(&mut r);
+            assert_eq!(Fr::from_bytes(&a.to_bytes()), a);
+        }
+    }
+
+    #[test]
+    fn mont_mul_vs_u128_reference() {
+        // cross-check Montgomery multiplication against schoolbook
+        // multiply-then-reduce on random small-limb values
+        let mut r = rng();
+        for _ in 0..100 {
+            let a = (r.next_u64() % 1000) as u64;
+            let b = (r.next_u64() % 1000) as u64;
+            let fa = Fr::from_u64(a);
+            let fb = Fr::from_u64(b);
+            assert_eq!((fa * fb).to_repr(), [(a as u128 * b as u128) as u64, 0, 0, 0]);
+        }
+    }
+
+    #[test]
+    fn pow_small() {
+        let a = Fr::from_u64(3);
+        assert_eq!(a.pow(&[5, 0, 0, 0]), Fr::from_u64(243));
+        assert_eq!(a.pow(&[0, 0, 0, 0]), Fr::ONE);
+    }
+
+    #[test]
+    fn fermat_little() {
+        // a^(r-1) = 1
+        let mut r = rng();
+        let a = Fr::random(&mut r);
+        let exp = limbs::add4(&FrParams::MOD_MINUS_2, &[1, 0, 0, 0]).0;
+        assert_eq!(a.pow(&exp), Fr::ONE);
+    }
+}

@@ -1,0 +1,319 @@
+//! Specialized GKR-style sumchecks for the arithmetic components of the
+//! network (paper §3.2, §4.2; Thaler's matmul protocol [43]).
+//!
+//! Each linear layer contributes three matmul relations —
+//! (30) Z = A·W, (33) G_A = G_Z·Wᵀ, (34) G_W = G_Zᵀ·A — each proven by a
+//! single sumcheck over the contracted index:
+//!     C̃(u_row, u_col) = Σ_w Ã(u_row, w)·B̃(w, u_col),
+//! reducing one evaluation claim on the output to one claim on each input.
+//! All layers run these with the *same* randomness (the anchored circuit of
+//! §4.2), which is what lets zkDL batch per-layer claims by random linear
+//! combination and parallelize proof generation across layers.
+
+use crate::field::Fr;
+use crate::poly::{eq_table, Mle};
+use crate::sumcheck::{self, Instance, SumcheckProof, Term};
+use crate::transcript::Transcript;
+use anyhow::{ensure, Result};
+
+/// A field matrix (row-major, power-of-two dimensions) with MLE helpers.
+/// Index layout: idx = row·cols + col, so row variables are the most
+/// significant MLE variables — matching `poly::Mle`'s fold order.
+#[derive(Clone, Debug)]
+pub struct Matrix {
+    pub data: Vec<Fr>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Matrix {
+    pub fn new(data: Vec<Fr>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        assert!(rows.is_power_of_two() && cols.is_power_of_two());
+        Self { data, rows, cols }
+    }
+
+    pub fn from_i64(values: &[i64], rows: usize, cols: usize) -> Self {
+        Self::new(values.iter().map(|&v| Fr::from_i64(v)).collect(), rows, cols)
+    }
+
+    pub fn log_rows(&self) -> usize {
+        self.rows.trailing_zeros() as usize
+    }
+
+    pub fn log_cols(&self) -> usize {
+        self.cols.trailing_zeros() as usize
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = vec![Fr::ZERO; self.data.len()];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        Matrix::new(out, self.cols, self.rows)
+    }
+
+    pub fn mle(&self) -> Mle {
+        Mle::new(self.data.clone())
+    }
+
+    /// M̃(point) with point = (row vars ‖ col vars).
+    pub fn evaluate(&self, point: &[Fr]) -> Fr {
+        self.mle().evaluate(point)
+    }
+
+    /// Restrict the row variables at `u_row`, producing the column MLE
+    /// M̃(u_row, ·).
+    pub fn fix_rows(&self, u_row: &[Fr]) -> Mle {
+        assert_eq!(u_row.len(), self.log_rows());
+        self.mle().partial_eval(u_row)
+    }
+}
+
+/// Sumcheck proof that C̃(u_row, u_col) = Σ_w Ã(u_row, w)·B̃(w, u_col).
+/// `a_fixed` = Ã(u_row, ·), `bt_fixed` = B̃(·, u_col) given as the row-fixed
+/// MLE of Bᵀ. Emits the contraction point r_w and both factor evaluations.
+pub struct MatmulProof {
+    pub proof: SumcheckProof,
+    /// Ã(u_row, r_w)
+    pub eval_a: Fr,
+    /// B̃(r_w, u_col)
+    pub eval_b: Fr,
+}
+
+impl MatmulProof {
+    pub fn size_bytes(&self) -> usize {
+        self.proof.size_bytes() + 2 * 32
+    }
+}
+
+/// Prove Σ_w a_fixed(w)·bt_fixed(w) = claimed (the inner dimension
+/// contraction). Returns the proof and the challenge point r_w.
+pub fn prove_matmul(
+    a_fixed: Mle,
+    bt_fixed: Mle,
+    transcript: &mut Transcript,
+) -> (MatmulProof, Vec<Fr>) {
+    assert_eq!(a_fixed.num_vars, bt_fixed.num_vars);
+    let inst = Instance::new(vec![Term::new(Fr::ONE, vec![a_fixed, bt_fixed])]);
+    let out = sumcheck::prove(inst, transcript);
+    let eval_a = out.factor_evals[0][0];
+    let eval_b = out.factor_evals[0][1];
+    (
+        MatmulProof {
+            proof: out.proof,
+            eval_a,
+            eval_b,
+        },
+        out.point,
+    )
+}
+
+/// Verify a matmul contraction sumcheck against the claimed output
+/// evaluation. Returns r_w; the caller must separately verify `eval_a` and
+/// `eval_b` (against commitments or downstream reductions).
+pub fn verify_matmul(
+    claimed: Fr,
+    mp: &MatmulProof,
+    transcript: &mut Transcript,
+) -> Result<Vec<Fr>> {
+    let out = sumcheck::verify(claimed, &mp.proof, transcript)?;
+    ensure!(
+        out.final_claim == mp.eval_a * mp.eval_b,
+        "matmul: factor evaluations inconsistent with final sumcheck claim"
+    );
+    Ok(out.point)
+}
+
+/// Merge two evaluation claims T̃(p1)=v1, T̃(p2)=v2 on the *same* tensor into
+/// one claim at a fresh point, via the degree-2 sumcheck on
+/// Σ_b (β̃(p1,b) + α·β̃(p2,b))·T̃(b) = v1 + α·v2.
+pub struct ClaimMergeProof {
+    pub proof: SumcheckProof,
+    /// T̃(r) at the merged point r.
+    pub eval: Fr,
+}
+
+impl ClaimMergeProof {
+    pub fn size_bytes(&self) -> usize {
+        self.proof.size_bytes() + 32
+    }
+}
+
+/// Prover side of claim merging. Returns (proof, merged point r).
+pub fn prove_claim_merge(
+    tensor: &Mle,
+    p1: &[Fr],
+    p2: &[Fr],
+    transcript: &mut Transcript,
+) -> (ClaimMergeProof, Vec<Fr>) {
+    assert_eq!(p1.len(), tensor.num_vars);
+    assert_eq!(p2.len(), tensor.num_vars);
+    let alpha = transcript.challenge_fr(b"merge/alpha");
+    let e1 = eq_table(p1);
+    let e2 = eq_table(p2);
+    let mixed: Vec<Fr> = e1
+        .iter()
+        .zip(e2.iter())
+        .map(|(a, b)| *a + alpha * *b)
+        .collect();
+    let inst = Instance::new(vec![Term::new(
+        Fr::ONE,
+        vec![Mle::new(mixed), tensor.clone()],
+    )]);
+    let out = sumcheck::prove(inst, transcript);
+    let eval = out.factor_evals[0][1];
+    (
+        ClaimMergeProof {
+            proof: out.proof,
+            eval,
+        },
+        out.point,
+    )
+}
+
+/// Verifier side of claim merging: checks the sumcheck against v1 + α·v2 and
+/// the mixed-eq factor, returning the merged point. The caller continues
+/// with the claim T̃(r) = proof.eval.
+pub fn verify_claim_merge(
+    v1: Fr,
+    v2: Fr,
+    p1: &[Fr],
+    p2: &[Fr],
+    cm: &ClaimMergeProof,
+    transcript: &mut Transcript,
+) -> Result<Vec<Fr>> {
+    let alpha = transcript.challenge_fr(b"merge/alpha");
+    let out = sumcheck::verify(v1 + alpha * v2, &cm.proof, transcript)?;
+    let eq1 = crate::poly::eq_eval(p1, &out.point);
+    let eq2 = crate::poly::eq_eval(p2, &out.point);
+    ensure!(
+        out.final_claim == (eq1 + alpha * eq2) * cm.eval,
+        "claim merge: final check failed"
+    );
+    Ok(out.point)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rng() -> Rng {
+        Rng::seed_from_u64(0x6312)
+    }
+
+    fn random_matrix(r: &mut Rng, rows: usize, cols: usize) -> Matrix {
+        Matrix::new((0..rows * cols).map(|_| Fr::random(r)).collect(), rows, cols)
+    }
+
+    fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols, b.rows);
+        let mut out = vec![Fr::ZERO; a.rows * b.cols];
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = Fr::ZERO;
+                for w in 0..a.cols {
+                    acc += a.data[i * a.cols + w] * b.data[w * b.cols + j];
+                }
+                out[i * b.cols + j] = acc;
+            }
+        }
+        Matrix::new(out, a.rows, b.cols)
+    }
+
+    #[test]
+    fn matmul_sumcheck_roundtrip() {
+        let mut r = rng();
+        let a = random_matrix(&mut r, 4, 8);
+        let b = random_matrix(&mut r, 8, 4);
+        let c = matmul(&a, &b);
+        let u_row: Vec<Fr> = (0..2).map(|_| Fr::random(&mut r)).collect();
+        let u_col: Vec<Fr> = (0..2).map(|_| Fr::random(&mut r)).collect();
+        let claimed = c.evaluate(&[u_row.clone(), u_col.clone()].concat());
+
+        let a_fixed = a.fix_rows(&u_row);
+        let bt_fixed = b.transpose().fix_rows(&u_col);
+        let mut tp = Transcript::new(b"mm");
+        let (mp, r_w) = prove_matmul(a_fixed, bt_fixed, &mut tp);
+
+        let mut tv = Transcript::new(b"mm");
+        let r_w_v = verify_matmul(claimed, &mp, &mut tv).expect("verify");
+        assert_eq!(r_w, r_w_v);
+
+        // the emitted evaluations match direct computation
+        assert_eq!(mp.eval_a, a.evaluate(&[u_row.clone(), r_w.clone()].concat()));
+        assert_eq!(mp.eval_b, b.evaluate(&[r_w, u_col].concat()));
+    }
+
+    #[test]
+    fn matmul_sumcheck_rejects_wrong_output() {
+        let mut r = rng();
+        let a = random_matrix(&mut r, 4, 4);
+        let b = random_matrix(&mut r, 4, 4);
+        let c = matmul(&a, &b);
+        let u_row: Vec<Fr> = (0..2).map(|_| Fr::random(&mut r)).collect();
+        let u_col: Vec<Fr> = (0..2).map(|_| Fr::random(&mut r)).collect();
+        let claimed = c.evaluate(&[u_row.clone(), u_col.clone()].concat()) + Fr::ONE;
+        let mut tp = Transcript::new(b"mm");
+        let (mp, _) = prove_matmul(a.fix_rows(&u_row), b.transpose().fix_rows(&u_col), &mut tp);
+        let mut tv = Transcript::new(b"mm");
+        assert!(verify_matmul(claimed, &mp, &mut tv).is_err());
+    }
+
+    #[test]
+    fn transposed_variants() {
+        // (34)-style: G_W = G_Zᵀ·A, proven via transposed copies
+        let mut r = rng();
+        let g_z = random_matrix(&mut r, 8, 4); // B×d
+        let a = random_matrix(&mut r, 8, 4); // B×d
+        let g_w = matmul(&g_z.transpose(), &a); // d×d
+        let u_r: Vec<Fr> = (0..2).map(|_| Fr::random(&mut r)).collect();
+        let u_c: Vec<Fr> = (0..2).map(|_| Fr::random(&mut r)).collect();
+        let claimed = g_w.evaluate(&[u_r.clone(), u_c.clone()].concat());
+        // Σ_w G_Zᵀ(u_r, w)·Aᵀ(u_c, w): both factors from transposed copies
+        let mut tp = Transcript::new(b"mm2");
+        let (mp, r_w) = prove_matmul(
+            g_z.transpose().fix_rows(&u_r),
+            a.transpose().fix_rows(&u_c),
+            &mut tp,
+        );
+        let mut tv = Transcript::new(b"mm2");
+        verify_matmul(claimed, &mp, &mut tv).expect("verify");
+        // claims open at the swapped point on the original tensors
+        assert_eq!(mp.eval_a, g_z.evaluate(&[r_w.clone(), u_r].concat()));
+        assert_eq!(mp.eval_b, a.evaluate(&[r_w, u_c].concat()));
+    }
+
+    #[test]
+    fn claim_merge_roundtrip() {
+        let mut r = rng();
+        let t = Mle::new((0..16).map(|_| Fr::random(&mut r)).collect());
+        let p1: Vec<Fr> = (0..4).map(|_| Fr::random(&mut r)).collect();
+        let p2: Vec<Fr> = (0..4).map(|_| Fr::random(&mut r)).collect();
+        let v1 = t.evaluate(&p1);
+        let v2 = t.evaluate(&p2);
+        let mut tp = Transcript::new(b"merge");
+        let (cm, rp) = prove_claim_merge(&t, &p1, &p2, &mut tp);
+        let mut tv = Transcript::new(b"merge");
+        let rv = verify_claim_merge(v1, v2, &p1, &p2, &cm, &mut tv).expect("verify");
+        assert_eq!(rp, rv);
+        assert_eq!(cm.eval, t.evaluate(&rp));
+    }
+
+    #[test]
+    fn claim_merge_rejects_wrong_value() {
+        let mut r = rng();
+        let t = Mle::new((0..16).map(|_| Fr::random(&mut r)).collect());
+        let p1: Vec<Fr> = (0..4).map(|_| Fr::random(&mut r)).collect();
+        let p2: Vec<Fr> = (0..4).map(|_| Fr::random(&mut r)).collect();
+        let v1 = t.evaluate(&p1);
+        let v2 = t.evaluate(&p2) + Fr::ONE; // lie about one claim
+        let mut tp = Transcript::new(b"merge");
+        let (cm, _) = prove_claim_merge(&t, &p1, &p2, &mut tp);
+        let mut tv = Transcript::new(b"merge");
+        assert!(verify_claim_merge(v1, v2, &p1, &p2, &cm, &mut tv).is_err());
+    }
+}

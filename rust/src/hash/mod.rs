@@ -1,0 +1,111 @@
+//! Hash functions used across zkDL.
+//!
+//! * [`Md5`] — from-scratch RFC 1321 (Table 3 baseline hash).
+//! * [`HashFn`] — runtime-selectable hash for the Merkle membership tree
+//!   (md5 / sha1 / sha256, matching the paper's Table 3 columns).
+
+pub mod md5;
+
+pub use md5::Md5;
+
+use sha1::Digest as _;
+
+/// Runtime-selectable hash function for the Merkle tree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HashFn {
+    Md5,
+    Sha1,
+    Sha256,
+}
+
+impl HashFn {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "md5" => Some(Self::Md5),
+            "sha1" => Some(Self::Sha1),
+            "sha256" => Some(Self::Sha256),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Md5 => "md5",
+            Self::Sha1 => "sha1",
+            Self::Sha256 => "sha256",
+        }
+    }
+
+    /// Output length in bytes (16 / 20 / 32) — the Merkle tree height is
+    /// 8 × this, as in the paper (k-bit hash ⇒ depth-k conceptual tree).
+    pub fn output_len(&self) -> usize {
+        match self {
+            Self::Md5 => 16,
+            Self::Sha1 => 20,
+            Self::Sha256 => 32,
+        }
+    }
+
+    pub fn hash(&self, data: &[u8]) -> Vec<u8> {
+        match self {
+            Self::Md5 => Md5::digest(data).to_vec(),
+            Self::Sha1 => sha1::Sha1::digest(data).to_vec(),
+            Self::Sha256 => sha2::Sha256::digest(data).to_vec(),
+        }
+    }
+
+    /// Two-input hash (Merkle inner nodes): H(left ‖ right).
+    pub fn hash2(&self, left: &[u8], right: &[u8]) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(left.len() + right.len());
+        buf.extend_from_slice(left);
+        buf.extend_from_slice(right);
+        self.hash(&buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_lengths() {
+        for (h, l) in [(HashFn::Md5, 16), (HashFn::Sha1, 20), (HashFn::Sha256, 32)] {
+            assert_eq!(h.hash(b"x").len(), l);
+            assert_eq!(h.output_len(), l);
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for name in ["md5", "sha1", "sha256"] {
+            assert_eq!(HashFn::parse(name).unwrap().name(), name);
+        }
+        assert!(HashFn::parse("blake3").is_none());
+    }
+
+    #[test]
+    fn sha256_known_vector() {
+        let d = HashFn::Sha256.hash(b"abc");
+        assert_eq!(
+            d.iter().map(|b| format!("{b:02x}")).collect::<String>(),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+    }
+
+    #[test]
+    fn sha1_known_vector() {
+        let d = HashFn::Sha1.hash(b"abc");
+        assert_eq!(
+            d.iter().map(|b| format!("{b:02x}")).collect::<String>(),
+            "a9993e364706816aba3e25717850c26c9cd0d89d"
+        );
+    }
+
+    #[test]
+    fn hash2_concatenates() {
+        assert_eq!(
+            HashFn::Sha256.hash2(b"ab", b"c"),
+            HashFn::Sha256.hash(b"abc")
+        );
+    }
+}

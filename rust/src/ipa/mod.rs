@@ -1,0 +1,660 @@
+//! Inner-product arguments (paper §3.3, Bulletproofs [45]).
+//!
+//! Two variants, both with O(n) prover time and O(log n) proof size:
+//!
+//! * [`prove_eval`]/[`verify_eval`] — "evaluation opening": for a Pedersen
+//!   commitment C = h^r·g^S and a *public* vector e, prove ⟨S, e⟩ = v.
+//!   This is how every sumcheck-terminal claim S̃(u) = ⟨S, e(u)⟩ is checked
+//!   against the tensor commitments. Claims at the same point are batched
+//!   by random linear combination ([`batch_eval_claims`]).
+//! * [`prove_ip`]/[`verify_ip`] — the two-committed-vector inner product
+//!   used by zkReLU's validity equation (19): P = h^r·G^a·H^b, prove
+//!   ⟨a, b⟩ = t.
+//!
+//! Blinding: fresh Pedersen randomness is folded through every L/R message,
+//! and only the final folded scalars are revealed — the random-linear-
+//! combination leakage this admits is the deviation documented in DESIGN.md.
+
+use crate::commit::CommitKey;
+use crate::curve::{msm::msm, G1Affine, G1};
+use crate::field::Fr;
+use crate::transcript::Transcript;
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Result};
+
+/// Log-size IPA proof.
+#[derive(Clone, Debug)]
+pub struct IpaProof {
+    pub l: Vec<G1Affine>,
+    pub r: Vec<G1Affine>,
+    /// Folded left-vector scalar.
+    pub a: Fr,
+    /// Folded right-vector scalar (== folded public e for `prove_eval`;
+    /// kept so both variants share a wire format).
+    pub b: Fr,
+    /// Folded blinding factor.
+    pub blind: Fr,
+}
+
+impl IpaProof {
+    /// Proof size in bytes: compressed points (32 B) + 3 scalars.
+    /// We serialize points uncompressed internally, but size accounting
+    /// follows the standard compressed encoding the paper assumes.
+    pub fn size_bytes(&self) -> usize {
+        (self.l.len() + self.r.len()) * 32 + 3 * 32
+    }
+}
+
+/// Extra generator for the inner-product value slot, independent of the
+/// commitment bases.
+pub fn ipa_u(label: &[u8]) -> G1Affine {
+    let mut l = label.to_vec();
+    l.extend_from_slice(b"/ipa-u");
+    crate::curve::hash_to_curve(&l, u64::MAX - 1)
+}
+
+fn nonzero_challenge(t: &mut Transcript, label: &[u8]) -> Fr {
+    loop {
+        let c = t.challenge_fr(label);
+        if !c.is_zero() {
+            return c;
+        }
+    }
+}
+
+/// Fold-pattern vector: s[i] = Π_j x_j^{±1} with +1 iff bit j (MSB-first)
+/// of i is set. g_final = Σ s[i]·g[i].
+fn s_vector(challenges: &[Fr]) -> Vec<Fr> {
+    let mut inv = challenges.to_vec();
+    Fr::batch_invert(&mut inv);
+    let mut s = vec![Fr::ONE];
+    for (x, xi) in challenges.iter().zip(inv.iter()) {
+        let mut next = Vec::with_capacity(s.len() * 2);
+        for &e in &s {
+            next.push(e * *xi); // low half: exponent −1
+            next.push(e * *x); // high half: exponent +1
+        }
+        s = next;
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Variant 1: evaluation opening ⟨S, e⟩ = v with public e
+// ---------------------------------------------------------------------------
+
+/// Prove ⟨values, e⟩ = v given C = h^blind·g^values. `values.len()` must be
+/// a power of two and equal `e.len()`.
+pub fn prove_eval(
+    ck: &CommitKey,
+    com: &G1,
+    values: &[Fr],
+    blind: Fr,
+    e: &[Fr],
+    v: Fr,
+    transcript: &mut Transcript,
+    rng: &mut Rng,
+) -> IpaProof {
+    let n = values.len();
+    assert!(n.is_power_of_two() && e.len() == n && ck.g.len() >= n);
+    transcript.absorb_point(b"ipa/com", &com.to_affine());
+    transcript.absorb_fr(b"ipa/value", &v);
+    transcript.absorb_u64(b"ipa/n", n as u64);
+    let c = nonzero_challenge(transcript, b"ipa/u-scale");
+    let u = ipa_u(&ck.label).to_projective().mul(&c);
+
+    // The folded basis after k rounds satisfies g′_v = Σ_{i ≡ v (mod m)}
+    // mult[i]·g_i, so every round's L/R is a single MSM over the *original*
+    // basis with composed scalars — no per-round point folding (this is the
+    // §Perf optimization: ~2n point-adds/round instead of n scalar-muls).
+    let mut a = values.to_vec();
+    let mut ev = e.to_vec();
+    let mut mult = vec![Fr::ONE; n];
+    let mut blind = blind;
+    let mut ls = Vec::new();
+    let mut rs = Vec::new();
+    let mut scal = vec![Fr::ZERO; n];
+
+    while a.len() > 1 {
+        let m = a.len();
+        let half = m / 2;
+        let (a_l, a_r) = a.split_at(half);
+        let (e_l, e_r) = ev.split_at(half);
+        let cl: Fr = a_l.iter().zip(e_r).map(|(x, y)| *x * *y).sum();
+        let cr: Fr = a_r.iter().zip(e_l).map(|(x, y)| *x * *y).sum();
+        let r_l = Fr::random(rng);
+        let r_r = Fr::random(rng);
+        // L = (g′_R)^{a_L}: original i with (i mod m) ≥ half
+        for i in 0..n {
+            let v = i % m;
+            scal[i] = if v >= half {
+                mult[i] * a_l[v - half]
+            } else {
+                Fr::ZERO
+            };
+        }
+        let l_pt = msm(&ck.g[..n], &scal) + u.mul(&cl) + ck.h.to_projective().mul(&r_l);
+        // R = (g′_L)^{a_R}
+        for i in 0..n {
+            let v = i % m;
+            scal[i] = if v < half {
+                mult[i] * a_r[v]
+            } else {
+                Fr::ZERO
+            };
+        }
+        let r_pt = msm(&ck.g[..n], &scal) + u.mul(&cr) + ck.h.to_projective().mul(&r_r);
+        let l_aff = l_pt.to_affine();
+        let r_aff = r_pt.to_affine();
+        transcript.absorb_point(b"ipa/L", &l_aff);
+        transcript.absorb_point(b"ipa/R", &r_aff);
+        let x = nonzero_challenge(transcript, b"ipa/x");
+        let xi = x.inverse().unwrap();
+
+        let mut a_next = Vec::with_capacity(half);
+        let mut e_next = Vec::with_capacity(half);
+        for i in 0..half {
+            a_next.push(x * a_l[i] + xi * a_r[i]);
+            e_next.push(xi * e_l[i] + x * e_r[i]);
+        }
+        for (i, mi) in mult.iter_mut().enumerate() {
+            *mi *= if i % m < half { xi } else { x };
+        }
+        blind = x.square() * r_l + blind + xi.square() * r_r;
+        a = a_next;
+        ev = e_next;
+        ls.push(l_aff);
+        rs.push(r_aff);
+    }
+
+    IpaProof {
+        l: ls,
+        r: rs,
+        a: a[0],
+        b: ev[0],
+        blind,
+    }
+}
+
+/// Verify an evaluation opening against commitment `com`, public vector `e`
+/// and claimed value `v`.
+pub fn verify_eval(
+    ck: &CommitKey,
+    com: &G1,
+    e: &[Fr],
+    v: Fr,
+    proof: &IpaProof,
+    transcript: &mut Transcript,
+) -> Result<()> {
+    let n = e.len();
+    ensure!(n.is_power_of_two(), "ipa: length must be a power of two");
+    ensure!(
+        proof.l.len() == n.trailing_zeros() as usize && proof.r.len() == proof.l.len(),
+        "ipa: wrong number of rounds"
+    );
+    transcript.absorb_point(b"ipa/com", &com.to_affine());
+    transcript.absorb_fr(b"ipa/value", &v);
+    transcript.absorb_u64(b"ipa/n", n as u64);
+    let c = nonzero_challenge(transcript, b"ipa/u-scale");
+    let u = ipa_u(&ck.label).to_projective().mul(&c);
+
+    let mut p = *com + u.mul(&v);
+    let mut challenges = Vec::with_capacity(proof.l.len());
+    for (l, r) in proof.l.iter().zip(proof.r.iter()) {
+        transcript.absorb_point(b"ipa/L", l);
+        transcript.absorb_point(b"ipa/R", r);
+        let x = nonzero_challenge(transcript, b"ipa/x");
+        let xi = x.inverse().unwrap();
+        p = l.to_projective().mul(&x.square()) + p + r.to_projective().mul(&xi.square());
+        challenges.push(x);
+    }
+
+    // fold e with the verifier's own challenges
+    let mut ev = e.to_vec();
+    for x in &challenges {
+        let xi = x.inverse().unwrap();
+        let half = ev.len() / 2;
+        let mut next = Vec::with_capacity(half);
+        for i in 0..half {
+            next.push(xi * ev[i] + *x * ev[i + half]);
+        }
+        ev = next;
+    }
+    if ev[0] != proof.b {
+        bail!("ipa: folded public vector mismatch");
+    }
+
+    let s = s_vector(&challenges);
+    let g_final = msm(&ck.g[..n], &s.iter().map(|si| *si * proof.a).collect::<Vec<_>>());
+    let expect = g_final
+        + u.mul(&(proof.a * ev[0]))
+        + ck.h.to_projective().mul(&proof.blind);
+    if expect != p {
+        bail!("ipa: final check failed");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Variant 2: two committed vectors ⟨a, b⟩ = t (zkReLU eq. 19)
+// ---------------------------------------------------------------------------
+
+/// Basis for the two-vector IPA: left basis G, right basis H, blind base h.
+#[derive(Clone, Debug)]
+pub struct IpaBasis {
+    pub g: Vec<G1Affine>,
+    pub h: Vec<G1Affine>,
+    pub blind_h: G1Affine,
+    pub label: Vec<u8>,
+}
+
+impl IpaBasis {
+    /// Commitment h^blind · G^a · H^b.
+    pub fn commit(&self, a: &[Fr], b: &[Fr], blind: Fr) -> G1 {
+        msm(&self.g[..a.len()], a)
+            + msm(&self.h[..b.len()], b)
+            + self.blind_h.to_projective().mul(&blind)
+    }
+}
+
+/// Prove ⟨a, b⟩ = t given P = h^blind·G^a·H′^b, where H′ᵢ = Hᵢ^{h_scale[i]}
+/// (H′ is *virtual*: the scale folds into the per-round MSM scalars, so the
+/// transformed basis of zkReLU's Algorithm 1 is never materialized).
+#[allow(clippy::too_many_arguments)]
+pub fn prove_ip(
+    basis: &IpaBasis,
+    com: &G1,
+    a: &[Fr],
+    b: &[Fr],
+    blind: Fr,
+    t: Fr,
+    h_scale: Option<&[Fr]>,
+    transcript: &mut Transcript,
+    rng: &mut Rng,
+) -> IpaProof {
+    let n = a.len();
+    assert!(n.is_power_of_two() && b.len() == n);
+    assert!(basis.g.len() >= n && basis.h.len() >= n);
+    transcript.absorb_point(b"ipa2/com", &com.to_affine());
+    transcript.absorb_fr(b"ipa2/t", &t);
+    transcript.absorb_u64(b"ipa2/n", n as u64);
+    let c = nonzero_challenge(transcript, b"ipa2/u-scale");
+    let u = ipa_u(&basis.label).to_projective().mul(&c);
+
+    // MSM-over-original-bases structure (see prove_eval): mult_g/mult_h
+    // track the composed challenge products per original index; h folds
+    // with the inverse exponent pattern of g.
+    let mut a = a.to_vec();
+    let mut b = b.to_vec();
+    let mut mult_g = vec![Fr::ONE; n];
+    let mut mult_h = match h_scale {
+        Some(s) => {
+            assert_eq!(s.len(), n);
+            s.to_vec()
+        }
+        None => vec![Fr::ONE; n],
+    };
+    let mut blind = blind;
+    let mut ls = Vec::new();
+    let mut rs = Vec::new();
+    let mut scal_g = vec![Fr::ZERO; n];
+    let mut scal_h = vec![Fr::ZERO; n];
+
+    while a.len() > 1 {
+        let m = a.len();
+        let half = m / 2;
+        let (a_l, a_r) = a.split_at(half);
+        let (b_l, b_r) = b.split_at(half);
+        let cl: Fr = a_l.iter().zip(b_r).map(|(x, y)| *x * *y).sum();
+        let cr: Fr = a_r.iter().zip(b_l).map(|(x, y)| *x * *y).sum();
+        let r_l = Fr::random(rng);
+        let r_r = Fr::random(rng);
+        // L = (g′_R)^{a_L} · (h′_L)^{b_R} · u^{cl} · blind^{r_l}
+        for i in 0..n {
+            let v = i % m;
+            if v >= half {
+                scal_g[i] = mult_g[i] * a_l[v - half];
+                scal_h[i] = Fr::ZERO;
+            } else {
+                scal_g[i] = Fr::ZERO;
+                scal_h[i] = mult_h[i] * b_r[v];
+            }
+        }
+        let l_pt = msm(&basis.g[..n], &scal_g)
+            + msm(&basis.h[..n], &scal_h)
+            + u.mul(&cl)
+            + basis.blind_h.to_projective().mul(&r_l);
+        // R = (g′_L)^{a_R} · (h′_R)^{b_L} · u^{cr} · blind^{r_r}
+        for i in 0..n {
+            let v = i % m;
+            if v < half {
+                scal_g[i] = mult_g[i] * a_r[v];
+                scal_h[i] = Fr::ZERO;
+            } else {
+                scal_g[i] = Fr::ZERO;
+                scal_h[i] = mult_h[i] * b_l[v - half];
+            }
+        }
+        let r_pt = msm(&basis.g[..n], &scal_g)
+            + msm(&basis.h[..n], &scal_h)
+            + u.mul(&cr)
+            + basis.blind_h.to_projective().mul(&r_r);
+        let l_aff = l_pt.to_affine();
+        let r_aff = r_pt.to_affine();
+        transcript.absorb_point(b"ipa2/L", &l_aff);
+        transcript.absorb_point(b"ipa2/R", &r_aff);
+        let x = nonzero_challenge(transcript, b"ipa2/x");
+        let xi = x.inverse().unwrap();
+
+        let mut a_next = Vec::with_capacity(half);
+        let mut b_next = Vec::with_capacity(half);
+        for i in 0..half {
+            a_next.push(x * a_l[i] + xi * a_r[i]);
+            b_next.push(xi * b_l[i] + x * b_r[i]);
+        }
+        for i in 0..n {
+            if i % m < half {
+                mult_g[i] *= xi;
+                mult_h[i] *= x;
+            } else {
+                mult_g[i] *= x;
+                mult_h[i] *= xi;
+            }
+        }
+        blind = x.square() * r_l + blind + xi.square() * r_r;
+        a = a_next;
+        b = b_next;
+        ls.push(l_aff);
+        rs.push(r_aff);
+    }
+
+    IpaProof {
+        l: ls,
+        r: rs,
+        a: a[0],
+        b: b[0],
+        blind,
+    }
+}
+
+/// Verify ⟨a, b⟩ = t for P = h^blind·G^a·H^b.
+///
+/// `h_scale`: optional per-element exponent adjustment for the right basis —
+/// verifying against the *virtual* basis H′ᵢ = Hᵢ^{h_scale[i]} without ever
+/// materializing it (zkReLU's Algorithm-1 basis H^{e^{∘−1}}); the scaling
+/// folds into the verifier's single final MSM.
+pub fn verify_ip(
+    basis: &IpaBasis,
+    com: &G1,
+    n: usize,
+    t: Fr,
+    proof: &IpaProof,
+    h_scale: Option<&[Fr]>,
+    transcript: &mut Transcript,
+) -> Result<()> {
+    ensure!(n.is_power_of_two(), "ipa2: length must be power of two");
+    ensure!(
+        proof.l.len() == n.trailing_zeros() as usize && proof.r.len() == proof.l.len(),
+        "ipa2: wrong number of rounds"
+    );
+    transcript.absorb_point(b"ipa2/com", &com.to_affine());
+    transcript.absorb_fr(b"ipa2/t", &t);
+    transcript.absorb_u64(b"ipa2/n", n as u64);
+    let c = nonzero_challenge(transcript, b"ipa2/u-scale");
+    let u = ipa_u(&basis.label).to_projective().mul(&c);
+
+    let mut p = *com + u.mul(&t);
+    let mut challenges = Vec::with_capacity(proof.l.len());
+    for (l, r) in proof.l.iter().zip(proof.r.iter()) {
+        transcript.absorb_point(b"ipa2/L", l);
+        transcript.absorb_point(b"ipa2/R", r);
+        let x = nonzero_challenge(transcript, b"ipa2/x");
+        let xi = x.inverse().unwrap();
+        p = l.to_projective().mul(&x.square()) + p + r.to_projective().mul(&xi.square());
+        challenges.push(x);
+    }
+
+    let s = s_vector(&challenges);
+    let mut s_inv = challenges.clone();
+    Fr::batch_invert(&mut s_inv);
+    // h folds with inverted exponent pattern: s'[i] = 1/s[i]
+    let mut s_rec = s.clone();
+    Fr::batch_invert(&mut s_rec);
+    let g_final = msm(
+        &basis.g[..n],
+        &s.iter().map(|si| *si * proof.a).collect::<Vec<_>>(),
+    );
+    let h_scalars: Vec<Fr> = match h_scale {
+        None => s_rec.iter().map(|si| *si * proof.b).collect(),
+        Some(scale) => {
+            ensure!(scale.len() == n, "ipa2: h_scale length mismatch");
+            s_rec
+                .iter()
+                .zip(scale.iter())
+                .map(|(si, sc)| *si * proof.b * *sc)
+                .collect()
+        }
+    };
+    let h_final = msm(&basis.h[..n], &h_scalars);
+    let expect = g_final
+        + h_final
+        + u.mul(&(proof.a * proof.b))
+        + basis.blind_h.to_projective().mul(&proof.blind);
+    if expect != p {
+        bail!("ipa2: final check failed");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Claim batching
+// ---------------------------------------------------------------------------
+
+/// A pending evaluation claim ⟨S, e⟩ = v (shared `e` across the batch).
+pub struct EvalClaim {
+    pub com: G1,
+    pub values: Vec<Fr>,
+    pub blind: Fr,
+    pub v: Fr,
+}
+
+/// Batch multiple evaluation claims at the *same* public vector `e` into a
+/// single claim via a transcript-derived random linear combination, then
+/// prove it with one IPA. Returns (combined commitment, combined value,
+/// proof).
+pub fn batch_prove_eval(
+    ck: &CommitKey,
+    claims: &[EvalClaim],
+    e: &[Fr],
+    transcript: &mut Transcript,
+    rng: &mut Rng,
+) -> (G1, Fr, IpaProof) {
+    assert!(!claims.is_empty());
+    for cl in claims {
+        transcript.absorb_point(b"batch/com", &cl.com.to_affine());
+        transcript.absorb_fr(b"batch/v", &cl.v);
+    }
+    let rho = transcript.challenge_fr(b"batch/rho");
+    let mut coeff = Fr::ONE;
+    let mut values = vec![Fr::ZERO; e.len()];
+    let mut blind = Fr::ZERO;
+    let mut v = Fr::ZERO;
+    let mut com = G1::IDENTITY;
+    for cl in claims {
+        for (acc, x) in values.iter_mut().zip(cl.values.iter()) {
+            *acc += coeff * *x;
+        }
+        blind += coeff * cl.blind;
+        v += coeff * cl.v;
+        com = com + cl.com.mul(&coeff);
+        coeff *= rho;
+    }
+    let proof = prove_eval(ck, &com, &values, blind, e, v, transcript, rng);
+    (com, v, proof)
+}
+
+/// Verifier side of [`batch_prove_eval`].
+pub fn batch_verify_eval(
+    ck: &CommitKey,
+    coms_and_values: &[(G1, Fr)],
+    e: &[Fr],
+    proof: &IpaProof,
+    transcript: &mut Transcript,
+) -> Result<()> {
+    ensure!(!coms_and_values.is_empty(), "empty batch");
+    for (com, v) in coms_and_values {
+        transcript.absorb_point(b"batch/com", &com.to_affine());
+        transcript.absorb_fr(b"batch/v", v);
+    }
+    let rho = transcript.challenge_fr(b"batch/rho");
+    let mut coeff = Fr::ONE;
+    let mut v = Fr::ZERO;
+    let mut com = G1::IDENTITY;
+    for (c, val) in coms_and_values {
+        v += coeff * *val;
+        com = com + c.mul(&coeff);
+        coeff *= rho;
+    }
+    verify_eval(ck, &com, e, v, proof, transcript)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::{eq_table, Mle};
+
+    fn rng() -> Rng {
+        Rng::seed_from_u64(0x19a)
+    }
+
+    #[test]
+    fn eval_opening_roundtrip() {
+        let mut r = rng();
+        for n in [2usize, 8, 64] {
+            let ck = CommitKey::setup(b"ipa-test", n);
+            let vals: Vec<Fr> = (0..n).map(|_| Fr::random(&mut r)).collect();
+            let e: Vec<Fr> = (0..n).map(|_| Fr::random(&mut r)).collect();
+            let v: Fr = vals.iter().zip(&e).map(|(a, b)| *a * *b).sum();
+            let blind = Fr::random(&mut r);
+            let com = ck.commit(&vals, blind);
+            let mut tp = Transcript::new(b"t");
+            let proof = prove_eval(&ck, &com, &vals, blind, &e, v, &mut tp, &mut r);
+            let mut tv = Transcript::new(b"t");
+            verify_eval(&ck, &com, &e, v, &proof, &mut tv).expect("verify");
+            assert_eq!(proof.l.len(), n.trailing_zeros() as usize);
+        }
+    }
+
+    #[test]
+    fn eval_opening_rejects_wrong_value() {
+        let mut r = rng();
+        let n = 16;
+        let ck = CommitKey::setup(b"ipa-test", n);
+        let vals: Vec<Fr> = (0..n).map(|_| Fr::random(&mut r)).collect();
+        let e: Vec<Fr> = (0..n).map(|_| Fr::random(&mut r)).collect();
+        let v: Fr = vals.iter().zip(&e).map(|(a, b)| *a * *b).sum();
+        let blind = Fr::random(&mut r);
+        let com = ck.commit(&vals, blind);
+        let wrong = v + Fr::ONE;
+        let mut tp = Transcript::new(b"t");
+        // a cheating prover proves the wrong value with honest witness
+        let proof = prove_eval(&ck, &com, &vals, blind, &e, wrong, &mut tp, &mut r);
+        let mut tv = Transcript::new(b"t");
+        assert!(verify_eval(&ck, &com, &e, wrong, &proof, &mut tv).is_err());
+    }
+
+    #[test]
+    fn eval_opening_rejects_tampered_proof() {
+        let mut r = rng();
+        let n = 16;
+        let ck = CommitKey::setup(b"ipa-test", n);
+        let vals: Vec<Fr> = (0..n).map(|_| Fr::random(&mut r)).collect();
+        let e: Vec<Fr> = (0..n).map(|_| Fr::random(&mut r)).collect();
+        let v: Fr = vals.iter().zip(&e).map(|(a, b)| *a * *b).sum();
+        let blind = Fr::random(&mut r);
+        let com = ck.commit(&vals, blind);
+        let mut tp = Transcript::new(b"t");
+        let mut proof = prove_eval(&ck, &com, &vals, blind, &e, v, &mut tp, &mut r);
+        proof.a += Fr::ONE;
+        let mut tv = Transcript::new(b"t");
+        assert!(verify_eval(&ck, &com, &e, v, &proof, &mut tv).is_err());
+    }
+
+    #[test]
+    fn mle_evaluation_opening() {
+        // the real use: open S̃(u) = ⟨S, e(u)⟩ against com_S
+        let mut r = rng();
+        let nv = 5;
+        let n = 1 << nv;
+        let ck = CommitKey::setup(b"ipa-test", n);
+        let vals: Vec<Fr> = (0..n).map(|_| Fr::random(&mut r)).collect();
+        let mle = Mle::new(vals.clone());
+        let u: Vec<Fr> = (0..nv).map(|_| Fr::random(&mut r)).collect();
+        let e = eq_table(&u);
+        let v = mle.evaluate(&u);
+        let blind = Fr::random(&mut r);
+        let com = ck.commit(&vals, blind);
+        let mut tp = Transcript::new(b"t");
+        let proof = prove_eval(&ck, &com, &vals, blind, &e, v, &mut tp, &mut r);
+        let mut tv = Transcript::new(b"t");
+        verify_eval(&ck, &com, &e, v, &proof, &mut tv).expect("verify");
+    }
+
+    #[test]
+    fn two_vector_ip_roundtrip() {
+        let mut r = rng();
+        let n = 32;
+        let g = crate::curve::derive_generators(b"ipa2-g", n);
+        let h = crate::curve::derive_generators(b"ipa2-h", n);
+        let basis = IpaBasis {
+            g,
+            h,
+            blind_h: crate::curve::hash_to_curve(b"ipa2-blind", 0),
+            label: b"ipa2".to_vec(),
+        };
+        let a: Vec<Fr> = (0..n).map(|_| Fr::random(&mut r)).collect();
+        let b: Vec<Fr> = (0..n).map(|_| Fr::random(&mut r)).collect();
+        let t: Fr = a.iter().zip(&b).map(|(x, y)| *x * *y).sum();
+        let blind = Fr::random(&mut r);
+        let com = basis.commit(&a, &b, blind);
+        let mut tp = Transcript::new(b"t2");
+        let proof = prove_ip(&basis, &com, &a, &b, blind, t, None, &mut tp, &mut r);
+        let mut tv = Transcript::new(b"t2");
+        verify_ip(&basis, &com, n, t, &proof, None, &mut tv).expect("verify");
+        // wrong t rejected
+        let mut tv2 = Transcript::new(b"t2");
+        assert!(verify_ip(&basis, &com, n, t + Fr::ONE, &proof, None, &mut tv2).is_err());
+    }
+
+    #[test]
+    fn batched_eval_claims() {
+        let mut r = rng();
+        let n = 16;
+        let ck = CommitKey::setup(b"ipa-test", n);
+        let e: Vec<Fr> = (0..n).map(|_| Fr::random(&mut r)).collect();
+        let mut claims = Vec::new();
+        let mut publics = Vec::new();
+        for _ in 0..4 {
+            let vals: Vec<Fr> = (0..n).map(|_| Fr::random(&mut r)).collect();
+            let v: Fr = vals.iter().zip(&e).map(|(a, b)| *a * *b).sum();
+            let blind = Fr::random(&mut r);
+            let com = ck.commit(&vals, blind);
+            publics.push((com, v));
+            claims.push(EvalClaim {
+                com,
+                values: vals,
+                blind,
+                v,
+            });
+        }
+        let mut tp = Transcript::new(b"tb");
+        let (_, _, proof) = batch_prove_eval(&ck, &claims, &e, &mut tp, &mut r);
+        let mut tv = Transcript::new(b"tb");
+        batch_verify_eval(&ck, &publics, &e, &proof, &mut tv).expect("verify");
+        // a single wrong claimed value breaks the batch
+        let mut bad = publics.clone();
+        bad[2].1 += Fr::ONE;
+        let mut tv2 = Transcript::new(b"tb");
+        assert!(batch_verify_eval(&ck, &bad, &e, &proof, &mut tv2).is_err());
+    }
+}

@@ -1,0 +1,38 @@
+//! # zkDL — Efficient Zero-Knowledge Proofs of Deep Learning Training
+//!
+//! A from-scratch reproduction of *zkDL* (Sun & Zhang, 2023): a prover that
+//! convinces a verifier that one fixed-point SGD training step of an L-layer
+//! ReLU fully-connected network was executed correctly over committed data,
+//! weights and gradients — without revealing any of them — plus the paper's
+//! Merkle-tree proof of training-data (non-)membership.
+//!
+//! Architecture (see DESIGN.md):
+//! * crypto substrate: [`field`], [`curve`], [`hash`], [`transcript`],
+//!   [`commit`], [`poly`], [`sumcheck`], [`ipa`]
+//! * the paper's contribution: [`gkr`] (anchored layer proofs),
+//!   [`zkrelu`] (auxiliary-input validity), [`zkdl`] (Protocol 2),
+//!   [`merkle`] (Appendix B), [`baseline`] (SC-BD comparator)
+//! * the workload: [`quant`], [`model`], [`witness`], [`data`]
+//! * the runtime: [`runtime`] (PJRT AOT artifacts), [`coordinator`]
+
+pub mod baseline;
+pub mod commit;
+pub mod coordinator;
+pub mod curve;
+pub mod merkle;
+pub mod data;
+pub mod field;
+pub mod gkr;
+pub mod ipa;
+pub mod model;
+pub mod witness;
+pub mod zkdl;
+pub mod zkrelu;
+pub mod hash;
+pub mod poly;
+pub mod runtime;
+pub mod sumcheck;
+pub mod transcript;
+pub mod util;
+
+pub use field::{Fq, Fr};

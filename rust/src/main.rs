@@ -1,0 +1,180 @@
+//! zkdl — CLI for the zkDL proving system.
+//!
+//! Subcommands:
+//!   prove       prove + verify one training step
+//!   train       proven training run (loss curve + per-step proof metrics)
+//!   membership  build the Merkle tree and answer (non-)membership queries
+//!   info        print configuration and environment
+//!
+//! Example:
+//!   zkdl prove --depth 2 --width 64 --batch 16 --mode parallel
+//!   zkdl train --depth 3 --width 64 --batch 16 --steps 50 --prove-every 10
+//!   zkdl membership --n 1000 --queries 100 --hash sha256 --positivity 0.5
+
+use anyhow::Result;
+use std::path::Path;
+use zkdl::coordinator::{train_and_prove, TrainOptions};
+use zkdl::data::Dataset;
+use zkdl::hash::HashFn;
+use zkdl::merkle::{verify_membership, MerkleTree};
+use zkdl::model::{ModelConfig, Weights};
+use zkdl::runtime::WitnessSource;
+use zkdl::util::cli::Cli;
+use zkdl::util::rng::Rng;
+use zkdl::zkdl::{prove_step, verify_step, ProofMode, ProverKey};
+
+fn model_config(cli: &Cli) -> ModelConfig {
+    ModelConfig::new(
+        cli.get_usize("depth", 2),
+        cli.get_usize("width", 64),
+        cli.get_usize("batch", 16),
+    )
+}
+
+fn proof_mode(cli: &Cli) -> ProofMode {
+    match cli.get_str("mode", "parallel") {
+        "sequential" => ProofMode::Sequential,
+        _ => ProofMode::Parallel,
+    }
+}
+
+fn cmd_prove(cli: &Cli) -> Result<()> {
+    let cfg = model_config(cli);
+    let mode = proof_mode(cli);
+    let mut rng = Rng::seed_from_u64(cli.get_u64("seed", 1));
+    println!(
+        "proving one training step: L={} d={} B={} ({} mode, {} params)",
+        cfg.depth,
+        cfg.width,
+        cfg.batch,
+        mode.name(),
+        cfg.param_count()
+    );
+    let ds = Dataset::synthetic(256, cfg.width.min(512), 10, cfg.r_bits, 3);
+    let (x, y) = ds.batch(&cfg, 0);
+    let w = Weights::init(cfg, &mut rng);
+    let src = WitnessSource::auto(Path::new("artifacts"), cfg);
+    let t = std::time::Instant::now();
+    let wit = src.compute_witness(&x, &y, &w)?;
+    println!(
+        "witness ({}) in {:.1} ms",
+        src.name(),
+        t.elapsed().as_secs_f64() * 1e3
+    );
+    let t = std::time::Instant::now();
+    let pk = ProverKey::setup(cfg);
+    println!("key setup in {:.1} ms", t.elapsed().as_secs_f64() * 1e3);
+    let t = std::time::Instant::now();
+    let proof = prove_step(&pk, &wit, mode, &mut rng);
+    let prove_s = t.elapsed().as_secs_f64();
+    let t = std::time::Instant::now();
+    verify_step(&pk, &proof)?;
+    println!(
+        "prove {:.3} s | verify {:.3} s | proof {:.1} kB",
+        prove_s,
+        t.elapsed().as_secs_f64(),
+        proof.size_bytes() as f64 / 1024.0
+    );
+    Ok(())
+}
+
+fn cmd_train(cli: &Cli) -> Result<()> {
+    let cfg = model_config(cli);
+    let opts = TrainOptions {
+        steps: cli.get_usize("steps", 20),
+        prove_every: cli.get_usize("prove-every", 5),
+        mode: proof_mode(cli),
+        seed: cli.get_u64("seed", 1),
+        skip_verify: cli.flag("skip-verify"),
+    };
+    let ds = Dataset::synthetic(
+        cli.get_usize("data-n", 1024),
+        cfg.width.min(512),
+        10,
+        cfg.r_bits,
+        3,
+    );
+    let report = train_and_prove(cfg, &ds, Path::new("artifacts"), &opts)?;
+    println!("{}", report.summary());
+    if let Some(path) = cli.get("csv") {
+        std::fs::write(path, report.to_csv())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_membership(cli: &Cli) -> Result<()> {
+    let n = cli.get_usize("n", 1000);
+    let n_queries = cli.get_usize("queries", 100);
+    let positivity = cli.get_f64("positivity", 0.5);
+    let hash = HashFn::parse(cli.get_str("hash", "sha256")).expect("md5|sha1|sha256");
+    let mut rng = Rng::seed_from_u64(cli.get_u64("seed", 1));
+
+    // deterministic per-point Pedersen commitments (paper §3.1, r = 0)
+    let dim = cli.get_usize("dim", 64);
+    let ck = zkdl::commit::CommitKey::setup(b"zkdl/data", dim);
+    let ds = Dataset::synthetic(n, dim, 10, 16, 9);
+    let t = std::time::Instant::now();
+    let coms: Vec<Vec<u8>> = ds
+        .points
+        .iter()
+        .map(|p| {
+            let frs: Vec<zkdl::Fr> = p.iter().map(|&v| zkdl::Fr::from_i64(v)).collect();
+            ck.commit_deterministic(&frs).to_affine().to_bytes().to_vec()
+        })
+        .collect();
+    println!("committed {n} points in {:.2} s", t.elapsed().as_secs_f64());
+    let t = std::time::Instant::now();
+    let tree = MerkleTree::build(hash, &coms);
+    println!(
+        "tree ({}) built in {:.2} s",
+        hash.name(),
+        t.elapsed().as_secs_f64()
+    );
+
+    let n_pos = (n_queries as f64 * positivity).round() as usize;
+    let mut queries: Vec<Vec<u8>> = coms[..n_pos.min(n)].iter().map(|c| hash.hash(c)).collect();
+    while queries.len() < n_queries {
+        let mut fake = vec![0u8; 64];
+        rng.fill_bytes(&mut fake);
+        queries.push(hash.hash(&fake));
+    }
+    let t = std::time::Instant::now();
+    let proof = tree.prove(&queries);
+    let prove_ms = t.elapsed().as_secs_f64() * 1e3;
+    let t = std::time::Instant::now();
+    verify_membership(hash, &tree.root, &queries, &proof)?;
+    println!(
+        "queries={} positivity={:.1} | proof {} hashes | prove {:.2} ms | verify {:.2} ms",
+        n_queries,
+        positivity,
+        proof.size_hashes(),
+        prove_ms,
+        t.elapsed().as_secs_f64() * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_info() {
+    println!("zkdl — zero-knowledge proofs of deep learning training");
+    println!("threads: {}", zkdl::util::threads::num_threads());
+    println!("artifacts present: {}", Path::new("artifacts").exists());
+}
+
+fn main() -> Result<()> {
+    let cli = Cli::from_env();
+    match cli.subcommand.as_deref() {
+        Some("prove") => cmd_prove(&cli),
+        Some("train") => cmd_train(&cli),
+        Some("membership") => cmd_membership(&cli),
+        Some("info") | None => {
+            cmd_info();
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand: {other}");
+            eprintln!("usage: zkdl [prove|train|membership|info] [--key value]");
+            std::process::exit(2);
+        }
+    }
+}

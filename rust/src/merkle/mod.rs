@@ -1,0 +1,447 @@
+//! Proof of training-data (non-)membership (paper §4.4 + Appendix B).
+//!
+//! Data points are deterministically Pedersen-committed (§3.1, r = 0);
+//! their hashes identify leaves of a conceptual depth-k binary tree
+//! (k = hash output bits). The trainer materializes the subtree
+//! T_D = Tree(H_D) ∪ Frontier(H_D): every path from a data hash to the
+//! root, plus the off-path sibling "frontier" nodes valued ε. The root is
+//! endorsed by the trusted verifier; membership and *non*-membership of
+//! queried points are then proven by releasing the node values of
+//! Tree(H_E^inc) ∪ F^exc and its frontier (Protocol 3), which the data
+//! owner folds back to the root (Protocol 4 / Algorithm 2).
+//!
+//! Node hashing uses length-prefixed child encodings so the empty value ε,
+//! 64-byte leaf commitments, and fixed-length digests cannot collide.
+
+use crate::hash::HashFn;
+use anyhow::{bail, ensure, Result};
+use std::collections::BTreeMap;
+
+/// A node identifier: its depth and the path bits from the root (one bool
+/// per level). The root is (0, []).
+pub type NodeId = (usize, Vec<bool>);
+
+/// A node value: ε (frontier), a leaf commitment, or an inner hash.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Val {
+    Empty,
+    Leaf(Vec<u8>),
+    Hash(Vec<u8>),
+}
+
+impl Val {
+    fn bytes(&self) -> &[u8] {
+        match self {
+            Val::Empty => &[],
+            Val::Leaf(b) | Val::Hash(b) => b,
+        }
+    }
+}
+
+fn hash_children(h: HashFn, left: &Val, right: &Val) -> Vec<u8> {
+    let l = left.bytes();
+    let r = right.bytes();
+    let mut buf = Vec::with_capacity(16 + l.len() + r.len());
+    buf.extend_from_slice(&(l.len() as u64).to_le_bytes());
+    buf.extend_from_slice(l);
+    buf.extend_from_slice(&(r.len() as u64).to_le_bytes());
+    buf.extend_from_slice(r);
+    h.hash(&buf)
+}
+
+/// Bits of a digest, MSB-first.
+pub fn digest_bits(digest: &[u8]) -> Vec<bool> {
+    let mut out = Vec::with_capacity(digest.len() * 8);
+    for byte in digest {
+        for i in (0..8).rev() {
+            out.push((byte >> i) & 1 == 1);
+        }
+    }
+    out
+}
+
+/// The training-set Merkle structure. Leaves are stored sorted by hash
+/// bits; node values are recomputed on demand (O(n·k) per pass), so memory
+/// stays O(n) instead of O(n·k).
+pub struct MerkleTree {
+    pub hash: HashFn,
+    pub k: usize,
+    /// Sorted (hash bits, commitment bytes).
+    leaves: Vec<(Vec<bool>, Vec<u8>)>,
+    pub root: Vec<u8>,
+}
+
+/// A (non-)membership proof for a query batch (Protocol 3 output): the
+/// released node values. Proof size is measured as the number of released
+/// hash/commitment values, as in Table 3.
+#[derive(Clone, Debug)]
+pub struct MembershipProof {
+    /// Queried hashes claimed included (H_E^inc).
+    pub included: Vec<Vec<u8>>,
+    /// Queried hashes claimed excluded (H_E^exc).
+    pub excluded: Vec<Vec<u8>>,
+    /// Released node values: included-leaf commitments, F^exc frontier
+    /// nodes (ε), and the sibling frontier of the union.
+    pub nodes: BTreeMap<NodeId, Val>,
+}
+
+impl MembershipProof {
+    /// Number of released values (the paper's "size (#)").
+    pub fn size_hashes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|((d, bits), v)| 8 + bits.len().div_ceil(8) + v.bytes().len() + d / usize::MAX.max(1))
+            .sum()
+    }
+}
+
+impl MerkleTree {
+    /// Build from data-point commitments (already serialized). The hash of
+    /// each commitment identifies its leaf.
+    pub fn build(hash: HashFn, commitments: &[Vec<u8>]) -> Self {
+        let k = hash.output_len() * 8;
+        let mut leaves: Vec<(Vec<bool>, Vec<u8>)> = commitments
+            .iter()
+            .map(|c| (digest_bits(&hash.hash(c)), c.clone()))
+            .collect();
+        leaves.sort();
+        leaves.dedup_by(|a, b| a.0 == b.0);
+        let mut tree = Self {
+            hash,
+            k,
+            leaves,
+            root: Vec::new(),
+        };
+        tree.root = tree.value_of_range(0, 0, tree.leaves.len()).bytes().to_vec();
+        tree
+    }
+
+    pub fn len(&self) -> usize {
+        self.leaves.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.leaves.is_empty()
+    }
+
+    /// Does a hash belong to the training set?
+    pub fn contains(&self, digest: &[u8]) -> bool {
+        let bits = digest_bits(digest);
+        self.leaves.binary_search_by(|(b, _)| b.cmp(&bits)).is_ok()
+    }
+
+    /// Value of the node at `depth` whose subtree covers leaves [lo, hi)
+    /// (all sharing the same depth-length prefix).
+    fn value_of_range(&self, depth: usize, lo: usize, hi: usize) -> Val {
+        if lo == hi {
+            return Val::Empty;
+        }
+        if depth == self.k {
+            debug_assert_eq!(hi - lo, 1);
+            return Val::Leaf(self.leaves[lo].1.clone());
+        }
+        let split = self.split_point(depth, lo, hi);
+        let left = self.value_of_range(depth + 1, lo, split);
+        let right = self.value_of_range(depth + 1, split, hi);
+        // A node with an empty subtree on BOTH sides cannot occur here
+        // (lo < hi), and a node whose two children are both empty is not in
+        // T_D. One empty child is the frontier sibling (ε).
+        Val::Hash(hash_children(self.hash, &left, &right))
+    }
+
+    /// First leaf index in [lo, hi) whose bit at `depth` is 1.
+    fn split_point(&self, depth: usize, lo: usize, hi: usize) -> usize {
+        let mut a = lo;
+        let mut b = hi;
+        while a < b {
+            let mid = (a + b) / 2;
+            if self.leaves[mid].0[depth] {
+                b = mid;
+            } else {
+                a = mid + 1;
+            }
+        }
+        a
+    }
+
+    /// Protocol 3: prove (non-)membership of each queried hash.
+    pub fn prove(&self, queries: &[Vec<u8>]) -> MembershipProof {
+        let mut included = Vec::new();
+        let mut excluded = Vec::new();
+        let mut query_bits: Vec<Vec<bool>> = Vec::new();
+        for q in queries {
+            let bits = digest_bits(q);
+            if self.leaves.binary_search_by(|(b, _)| b.cmp(&bits)).is_ok() {
+                included.push(q.clone());
+            } else {
+                excluded.push(q.clone());
+            }
+            query_bits.push(bits);
+        }
+        let mut nodes = BTreeMap::new();
+        self.collect(0, Vec::new(), 0, self.leaves.len(), &query_bits, &mut nodes);
+        MembershipProof {
+            included,
+            excluded,
+            nodes,
+        }
+    }
+
+    /// Recursive walk: `actives` are query bit-strings passing through this
+    /// node. Releases values per Protocol 3:
+    /// * node off every query path but sibling to one → release its value
+    ///   (the frontier of the released subtree),
+    /// * empty node on a query path → release ε (an F^exc witness),
+    /// * leaf on a query path → release the commitment.
+    #[allow(clippy::too_many_arguments)]
+    fn collect(
+        &self,
+        depth: usize,
+        prefix: Vec<bool>,
+        lo: usize,
+        hi: usize,
+        queries: &[Vec<bool>],
+        out: &mut BTreeMap<NodeId, Val>,
+    ) {
+        let on_path = queries.iter().any(|q| q[..depth] == prefix[..]);
+        if !on_path {
+            // sibling of a query path (the caller only recurses into
+            // children of on-path nodes): release the whole value
+            out.insert((depth, prefix), self.value_of_range(depth, lo, hi));
+            return;
+        }
+        if lo == hi {
+            // F^exc witness: an empty node on a query path
+            out.insert((depth, prefix), Val::Empty);
+            return;
+        }
+        if depth == self.k {
+            out.insert((depth, prefix), Val::Leaf(self.leaves[lo].1.clone()));
+            return;
+        }
+        let split = self.split_point(depth, lo, hi);
+        let mut left_prefix = prefix.clone();
+        left_prefix.push(false);
+        let mut right_prefix = prefix;
+        right_prefix.push(true);
+        self.collect(depth + 1, left_prefix, lo, split, queries, out);
+        self.collect(depth + 1, right_prefix, split, hi, queries, out);
+    }
+}
+
+/// Protocol 4: the data owner verifies a batch proof against the endorsed
+/// root. Checks the inclusion/exclusion partition, the F^exc structure, and
+/// reconstructs the root via Algorithm 2.
+pub fn verify_membership(
+    hash: HashFn,
+    root: &[u8],
+    queries: &[Vec<u8>],
+    proof: &MembershipProof,
+) -> Result<()> {
+    let k = hash.output_len() * 8;
+    // 1. partition check
+    ensure!(
+        proof.included.len() + proof.excluded.len() == queries.len(),
+        "partition size mismatch"
+    );
+    for q in queries {
+        let inc = proof.included.contains(q);
+        let exc = proof.excluded.contains(q);
+        ensure!(inc ^ exc, "query must be exactly one of included/excluded");
+    }
+    // 2. structural checks on the released nodes
+    for q in &proof.included {
+        let bits = digest_bits(q);
+        match proof.nodes.get(&(k, bits)) {
+            Some(Val::Leaf(com)) => {
+                ensure!(
+                    digest_bits(&hash.hash(com)) == digest_bits(q),
+                    "leaf commitment does not hash to the queried identity"
+                );
+            }
+            _ => bail!("included query has no leaf witness"),
+        }
+    }
+    for q in &proof.excluded {
+        let bits = digest_bits(q);
+        // some released ε node must be a prefix of the queried hash
+        let witnessed = proof.nodes.iter().any(|((d, p), v)| {
+            *v == Val::Empty && *d <= k && p[..] == bits[..*d]
+        });
+        ensure!(witnessed, "excluded query lacks an ε-prefix witness");
+    }
+    // 3. Algorithm 2: fold the released nodes to the root
+    let mut vals: BTreeMap<NodeId, Val> = proof.nodes.clone();
+    while vals.len() > 1 || vals.keys().next().map(|(d, _)| *d) != Some(0) {
+        // take the deepest depth present
+        let depth = *vals.keys().map(|(d, _)| d).max().unwrap();
+        if depth == 0 {
+            bail!("multiple roots");
+        }
+        let deepest: Vec<NodeId> = vals
+            .keys()
+            .filter(|(d, _)| *d == depth)
+            .cloned()
+            .collect();
+        let mut processed = std::collections::BTreeSet::new();
+        for id in deepest {
+            if processed.contains(&id) {
+                continue;
+            }
+            let (d, bits) = &id;
+            let mut sib_bits = bits.clone();
+            let last = sib_bits.len() - 1;
+            sib_bits[last] = !sib_bits[last];
+            let sib = (*d, sib_bits);
+            let Some(sv) = vals.get(&sib) else {
+                bail!("node at depth {d} lacks a sibling witness");
+            };
+            let v = vals.get(&id).unwrap();
+            let (lv, rv) = if bits[last] {
+                (sv.clone(), v.clone())
+            } else {
+                (v.clone(), sv.clone())
+            };
+            let parent_val = Val::Hash(hash_children(hash, &lv, &rv));
+            let parent = (d - 1, bits[..last].to_vec());
+            processed.insert(id.clone());
+            processed.insert(sib.clone());
+            vals.remove(&id);
+            vals.remove(&sib);
+            // parent may already be released (must then agree)
+            if let Some(existing) = vals.get(&parent) {
+                ensure!(*existing == parent_val, "inconsistent parent value");
+            } else {
+                vals.insert(parent, parent_val);
+            }
+        }
+    }
+    let (_, root_val) = vals.into_iter().next().unwrap();
+    ensure!(root_val.bytes() == root, "reconstructed root mismatch");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn coms(n: usize, seed: u64) -> Vec<Vec<u8>> {
+        let mut r = Rng::seed_from_u64(seed);
+        (0..n)
+            .map(|_| {
+                let mut b = vec![0u8; 64];
+                r.fill_bytes(&mut b);
+                b
+            })
+            .collect()
+    }
+
+    fn check(hash: HashFn) {
+        let data = coms(50, 1);
+        let tree = MerkleTree::build(hash, &data);
+        assert_eq!(tree.len(), 50);
+
+        // mixed query: 3 members, 2 non-members
+        let mut queries: Vec<Vec<u8>> = data[..3].iter().map(|c| hash.hash(c)).collect();
+        let outsiders = coms(2, 99);
+        queries.extend(outsiders.iter().map(|c| hash.hash(c)));
+
+        let proof = tree.prove(&queries);
+        assert_eq!(proof.included.len(), 3);
+        assert_eq!(proof.excluded.len(), 2);
+        verify_membership(hash, &tree.root, &queries, &proof).expect("verifies");
+    }
+
+    #[test]
+    fn roundtrip_md5() {
+        check(HashFn::Md5);
+    }
+
+    #[test]
+    fn roundtrip_sha1() {
+        check(HashFn::Sha1);
+    }
+
+    #[test]
+    fn roundtrip_sha256() {
+        check(HashFn::Sha256);
+    }
+
+    #[test]
+    fn all_excluded_small_proof() {
+        let hash = HashFn::Md5;
+        let data = coms(256, 2);
+        let tree = MerkleTree::build(hash, &data);
+        let queries: Vec<Vec<u8>> = coms(10, 77).iter().map(|c| hash.hash(c)).collect();
+        let proof = tree.prove(&queries);
+        assert_eq!(proof.excluded.len(), 10);
+        verify_membership(hash, &tree.root, &queries, &proof).expect("verifies");
+        // non-membership proofs are much shorter than membership proofs
+        let mem_queries: Vec<Vec<u8>> = data[..10].iter().map(|c| hash.hash(c)).collect();
+        let mem_proof = tree.prove(&mem_queries);
+        verify_membership(hash, &tree.root, &mem_queries, &mem_proof).expect("verifies");
+        assert!(
+            proof.size_hashes() < mem_proof.size_hashes(),
+            "non-membership {} should be smaller than membership {}",
+            proof.size_hashes(),
+            mem_proof.size_hashes()
+        );
+    }
+
+    #[test]
+    fn trainer_cannot_lie_about_membership() {
+        let hash = HashFn::Sha256;
+        let data = coms(64, 3);
+        let tree = MerkleTree::build(hash, &data);
+        let member = hash.hash(&data[0]);
+        let queries = vec![member.clone()];
+        let mut proof = tree.prove(&queries);
+        // claim the member is excluded
+        proof.included.clear();
+        proof.excluded.push(member);
+        assert!(verify_membership(hash, &tree.root, &queries, &proof).is_err());
+    }
+
+    #[test]
+    fn tampered_root_rejected() {
+        let hash = HashFn::Md5;
+        let data = coms(32, 4);
+        let tree = MerkleTree::build(hash, &data);
+        let queries = vec![hash.hash(&data[5])];
+        let proof = tree.prove(&queries);
+        let mut bad_root = tree.root.clone();
+        bad_root[0] ^= 1;
+        assert!(verify_membership(hash, &bad_root, &queries, &proof).is_err());
+    }
+
+    #[test]
+    fn tampered_leaf_rejected() {
+        let hash = HashFn::Md5;
+        let data = coms(32, 5);
+        let tree = MerkleTree::build(hash, &data);
+        let q = hash.hash(&data[7]);
+        let queries = vec![q.clone()];
+        let mut proof = tree.prove(&queries);
+        // swap the leaf commitment for another one
+        let id = (tree.k, digest_bits(&q));
+        proof.nodes.insert(id, Val::Leaf(data[8].clone()));
+        assert!(verify_membership(hash, &tree.root, &queries, &proof).is_err());
+    }
+
+    #[test]
+    fn deterministic_root() {
+        let data = coms(20, 6);
+        let a = MerkleTree::build(HashFn::Sha1, &data);
+        let b = MerkleTree::build(HashFn::Sha1, &data);
+        assert_eq!(a.root, b.root);
+        let mut data2 = data.clone();
+        data2.pop();
+        let c = MerkleTree::build(HashFn::Sha1, &data2);
+        assert_ne!(a.root, c.root);
+    }
+}

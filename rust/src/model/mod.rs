@@ -1,0 +1,265 @@
+//! The workload being proven: a quantized L-layer ReLU fully-connected
+//! network trained with SGD under square loss (paper Example 4.5).
+//!
+//! All values are fixed-point integers: real x ↦ round(x·2^R) with R = 16
+//! by default, and every tensor element is asserted to fit the paper's
+//! (Q+R)-bit budget (Q = 32). Multiplying two scaled values yields scale
+//! 2^{2R}; the rescale-by-2^R with remainder is exactly what zkReLU's
+//! auxiliary inputs witness.
+
+use crate::util::rng::Rng;
+
+/// Shape / quantization configuration of one training setup.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    /// Number of layers L (weight matrices); L−1 ReLU activations.
+    pub depth: usize,
+    /// Width d: every layer is d×d; inputs/outputs are d-dimensional
+    /// (zero-padded, as in the paper's CIFAR-10 setup padded to 4096).
+    pub width: usize,
+    /// Batch size B.
+    pub batch: usize,
+    /// Fixed-point fractional bits R (paper: 16).
+    pub r_bits: u32,
+    /// Total signed bit-width Q of rescaled values (paper: 32).
+    pub q_bits: u32,
+    /// Learning rate = 2^{−lr_shift} (applied in the coordinator's weight
+    /// update; the proof covers the forward/backward relations (30)–(35)).
+    pub lr_shift: u32,
+}
+
+impl ModelConfig {
+    pub fn new(depth: usize, width: usize, batch: usize) -> Self {
+        assert!(depth >= 1);
+        assert!(width.is_power_of_two(), "width must be a power of two");
+        assert!(batch.is_power_of_two(), "batch must be a power of two");
+        Self {
+            depth,
+            width,
+            batch,
+            r_bits: 16,
+            q_bits: 32,
+            lr_shift: 8,
+        }
+    }
+
+    /// Scale factor 2^R.
+    pub fn scale(&self) -> i64 {
+        1i64 << self.r_bits
+    }
+
+    /// Per-layer activation tensor size D = B·d (the paper's D).
+    pub fn d_size(&self) -> usize {
+        self.batch * self.width
+    }
+
+    /// Total parameter count L·d².
+    pub fn param_count(&self) -> usize {
+        self.depth * self.width * self.width
+    }
+
+    /// Log2 of the padded activation tensor size.
+    pub fn log_d(&self) -> usize {
+        self.d_size().next_power_of_two().trailing_zeros() as usize
+    }
+}
+
+/// Fixed-point model parameters: `depth` weight matrices, each d×d
+/// row-major, at scale 2^R.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub layers: Vec<Vec<i64>>,
+    pub cfg: ModelConfig,
+}
+
+impl Weights {
+    /// He-style init scaled to fixed point: w ~ U(−a, a) with a ≈ √(2/d),
+    /// quantized to scale 2^R.
+    pub fn init(cfg: ModelConfig, rng: &mut Rng) -> Self {
+        let d = cfg.width;
+        let scale = cfg.scale() as f64;
+        // √(2/d) bound keeps activations from exploding through depth
+        let bound = ((2.0 / d as f64).sqrt() * scale) as i64;
+        let bound = bound.max(1);
+        let layers = (0..cfg.depth)
+            .map(|_| {
+                (0..d * d)
+                    .map(|_| rng.gen_i64(-bound, bound + 1))
+                    .collect()
+            })
+            .collect();
+        Self { layers, cfg }
+    }
+
+    /// SGD update: W ← W − round(G_W / 2^{R + lr_shift}).
+    /// G_W is at scale 2^{2R}; dividing by 2^R returns it to weight scale
+    /// and 2^{lr_shift} applies the learning rate.
+    pub fn apply_update(&mut self, grads: &[Vec<i64>]) {
+        assert_eq!(grads.len(), self.layers.len());
+        let shift = self.cfg.r_bits + self.cfg.lr_shift;
+        for (w, g) in self.layers.iter_mut().zip(grads.iter()) {
+            assert_eq!(w.len(), g.len());
+            for (wi, gi) in w.iter_mut().zip(g.iter()) {
+                *wi -= round_div_pow2(*gi, shift);
+            }
+        }
+    }
+}
+
+/// Round-to-nearest division by 2^shift (ties toward +∞), the paper's ⌊·⌉:
+/// remainder lies in [−2^{shift−1}, 2^{shift−1}).
+#[inline]
+pub fn round_div_pow2(v: i64, shift: u32) -> i64 {
+    if shift == 0 {
+        return v;
+    }
+    let half = 1i64 << (shift - 1);
+    (v + half).div_euclid(1i64 << shift)
+}
+
+/// i128 variant for high-scale intermediates.
+#[inline]
+pub fn round_div_pow2_i128(v: i128, shift: u32) -> i128 {
+    if shift == 0 {
+        return v;
+    }
+    let half = 1i128 << (shift - 1);
+    (v + half).div_euclid(1i128 << shift)
+}
+
+/// Integer matmul C = A·B with A: m×k, B: k×n (row-major), i128
+/// accumulation, asserting the result fits i64.
+pub fn matmul_i64(a: &[i64], b: &[i64], m: usize, k: usize, n: usize) -> Vec<i64> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut out = vec![0i64; m * n];
+    crate::util::threads::par_chunks_mut(&mut out, n.max(1), |row, chunk| {
+        // each chunk is one output row (chunk_size = n)
+        let i = row;
+        for (j, c) in chunk.iter_mut().enumerate() {
+            let mut acc: i128 = 0;
+            for l in 0..k {
+                acc += a[i * k + l] as i128 * b[l * n + j] as i128;
+            }
+            *c = i64::try_from(acc).expect("matmul overflow: scale down inputs");
+        }
+    });
+    out
+}
+
+/// C = Aᵀ·B with A: m×k viewed transposed → k×m result times B m×n.
+pub fn matmul_at_b(a: &[i64], b: &[i64], m: usize, k: usize, n: usize) -> Vec<i64> {
+    // A is m×k (row-major); compute Aᵀ B: (k×m)·(m×n)? — callers pass
+    // dimensions of the *result*: here result is k×n from A(m×k), B(m×n).
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    let mut out = vec![0i64; k * n];
+    crate::util::threads::par_chunks_mut(&mut out, n.max(1), |row, chunk| {
+        let i = row; // row of Aᵀ = column of A
+        for (j, c) in chunk.iter_mut().enumerate() {
+            let mut acc: i128 = 0;
+            for l in 0..m {
+                acc += a[l * k + i] as i128 * b[l * n + j] as i128;
+            }
+            *c = i64::try_from(acc).expect("matmul overflow: scale down inputs");
+        }
+    });
+    out
+}
+
+/// C = A·Bᵀ with A: m×k, B: n×k → m×n.
+pub fn matmul_a_bt(a: &[i64], b: &[i64], m: usize, k: usize, n: usize) -> Vec<i64> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    let mut out = vec![0i64; m * n];
+    crate::util::threads::par_chunks_mut(&mut out, n.max(1), |row, chunk| {
+        let i = row;
+        for (j, c) in chunk.iter_mut().enumerate() {
+            let mut acc: i128 = 0;
+            for l in 0..k {
+                acc += a[i * k + l] as i128 * b[j * k + l] as i128;
+            }
+            *c = i64::try_from(acc).expect("matmul overflow: scale down inputs");
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_div_matches_spec() {
+        // remainder must land in [−2^{R−1}, 2^{R−1})
+        for v in [-100000i64, -32769, -32768, -1, 0, 1, 32767, 32768, 99999] {
+            let q = round_div_pow2(v, 16);
+            let rem = v - (q << 16);
+            assert!((-(1i64 << 15)..(1i64 << 15)).contains(&rem), "v={v} rem={rem}");
+        }
+        assert_eq!(round_div_pow2(3, 1), 2); // 1.5 → 2 (ties toward +∞)
+        assert_eq!(round_div_pow2(-3, 1), -1); // −1.5 → −1
+        assert_eq!(round_div_pow2(4, 2), 1);
+    }
+
+    #[test]
+    fn matmul_small() {
+        // [1 2; 3 4] · [5 6; 7 8] = [19 22; 43 50]
+        let a = vec![1, 2, 3, 4];
+        let b = vec![5, 6, 7, 8];
+        assert_eq!(matmul_i64(&a, &b, 2, 2, 2), vec![19, 22, 43, 50]);
+    }
+
+    #[test]
+    fn transposed_matmuls_consistent() {
+        let mut rng = Rng::seed_from_u64(5);
+        let (m, k, n) = (3usize, 4usize, 5usize);
+        let a: Vec<i64> = (0..m * k).map(|_| rng.gen_i64(-9, 10)).collect();
+        let b: Vec<i64> = (0..m * n).map(|_| rng.gen_i64(-9, 10)).collect();
+        // Aᵀ·B via explicit transpose
+        let mut at = vec![0i64; k * m];
+        for i in 0..m {
+            for j in 0..k {
+                at[j * m + i] = a[i * k + j];
+            }
+        }
+        assert_eq!(matmul_at_b(&a, &b, m, k, n), matmul_i64(&at, &b, k, m, n));
+
+        let c: Vec<i64> = (0..n * k).map(|_| rng.gen_i64(-9, 10)).collect();
+        let mut ct = vec![0i64; k * n];
+        for i in 0..n {
+            for j in 0..k {
+                ct[j * n + i] = c[i * k + j];
+            }
+        }
+        assert_eq!(matmul_a_bt(&a, &c, m, k, n), matmul_i64(&a, &ct, m, k, n));
+    }
+
+    #[test]
+    fn weights_init_in_range() {
+        let cfg = ModelConfig::new(2, 64, 16);
+        let mut rng = Rng::seed_from_u64(1);
+        let w = Weights::init(cfg, &mut rng);
+        assert_eq!(w.layers.len(), 2);
+        let bound = ((2.0f64 / 64.0).sqrt() * 65536.0) as i64 + 1;
+        for l in &w.layers {
+            assert_eq!(l.len(), 64 * 64);
+            assert!(l.iter().all(|&v| v.abs() <= bound));
+        }
+    }
+
+    #[test]
+    fn sgd_update_direction() {
+        let cfg = ModelConfig::new(1, 2, 2);
+        let mut w = Weights {
+            layers: vec![vec![1000, -1000, 0, 0]],
+            cfg,
+        };
+        // positive gradient decreases the weight
+        let g = vec![vec![1i64 << 40, -(1i64 << 40), 0, 0]];
+        w.apply_update(&g);
+        assert!(w.layers[0][0] < 1000);
+        assert!(w.layers[0][1] > -1000);
+        assert_eq!(w.layers[0][2], 0);
+    }
+}

@@ -1,0 +1,279 @@
+//! Dense multilinear extensions (MLEs) over 𝔽 = Fr.
+//!
+//! Conventions (used consistently by `sumcheck`, `gkr`, `zkrelu`):
+//! * An MLE over n variables is stored as its 2ⁿ evaluations on the boolean
+//!   hypercube. Index i encodes the assignment with **variable 0 as the most
+//!   significant bit** of i.
+//! * Folding ("fixing") variable 0 at r maps the table of size 2ⁿ to size
+//!   2ⁿ⁻¹: new[i] = (1−r)·f[i] + r·f[i + 2ⁿ⁻¹]. Sumcheck rounds fix
+//!   variables in order 0, 1, …, n−1.
+//! * `eq_table(u)` is the paper's expansion e(u) = (β̃(u, b))_b, laid out in
+//!   the same index convention, so that S̃(u) = ⟨S, e(u)⟩.
+
+use crate::field::Fr;
+
+/// Dense multilinear extension: 2^num_vars evaluations.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Mle {
+    pub evals: Vec<Fr>,
+    pub num_vars: usize,
+}
+
+impl Mle {
+    pub fn new(evals: Vec<Fr>) -> Self {
+        let n = evals.len();
+        assert!(n.is_power_of_two(), "MLE table must be a power of two");
+        Self {
+            evals,
+            num_vars: n.trailing_zeros() as usize,
+        }
+    }
+
+    /// Build from integers (quantized tensor values).
+    pub fn from_i64(values: &[i64]) -> Self {
+        let mut evals: Vec<Fr> = values.iter().map(|&v| Fr::from_i64(v)).collect();
+        let n = evals.len().next_power_of_two();
+        evals.resize(n, Fr::ZERO);
+        Self::new(evals)
+    }
+
+    /// Zero-padded to the next power of two ≥ len.
+    pub fn from_frs_padded(values: &[Fr], len: usize) -> Self {
+        assert!(len >= values.len());
+        let mut evals = values.to_vec();
+        evals.resize(len.next_power_of_two(), Fr::ZERO);
+        Self::new(evals)
+    }
+
+    pub fn zero(num_vars: usize) -> Self {
+        Self {
+            evals: vec![Fr::ZERO; 1 << num_vars],
+            num_vars,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.evals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.evals.is_empty()
+    }
+
+    /// Fix variable 0 (most significant index bit) at r, in place.
+    pub fn fold(&mut self, r: Fr) {
+        let half = self.evals.len() / 2;
+        for i in 0..half {
+            let lo = self.evals[i];
+            let hi = self.evals[i + half];
+            self.evals[i] = lo + r * (hi - lo);
+        }
+        self.evals.truncate(half);
+        self.num_vars -= 1;
+    }
+
+    /// Fix the first `point.len()` variables (prefix) and return the
+    /// restricted MLE over the remaining variables.
+    pub fn partial_eval(&self, point: &[Fr]) -> Mle {
+        assert!(point.len() <= self.num_vars);
+        let mut m = self.clone();
+        for &r in point {
+            m.fold(r);
+        }
+        m
+    }
+
+    /// Full evaluation f̃(u); u.len() must equal num_vars.
+    pub fn evaluate(&self, point: &[Fr]) -> Fr {
+        assert_eq!(point.len(), self.num_vars);
+        // inner-product with the eq table — O(2ⁿ) but single pass
+        let table = eq_table(point);
+        self.evals
+            .iter()
+            .zip(table.iter())
+            .map(|(a, b)| *a * *b)
+            .sum()
+    }
+}
+
+/// The equality polynomial table e(u): e[idx] = β̃(u, idx) with variable 0 in
+/// the most significant bit of idx. Σ_idx e[idx] = 1.
+pub fn eq_table(u: &[Fr]) -> Vec<Fr> {
+    let mut table = vec![Fr::ONE];
+    for &uj in u {
+        let mut next = Vec::with_capacity(table.len() * 2);
+        for &e in &table {
+            next.push(e * (Fr::ONE - uj)); // bit 0
+            next.push(e * uj); // bit 1
+        }
+        table = next;
+    }
+    table
+}
+
+/// β̃(u, v) = Π_i (uᵢvᵢ + (1−uᵢ)(1−vᵢ)).
+pub fn eq_eval(u: &[Fr], v: &[Fr]) -> Fr {
+    assert_eq!(u.len(), v.len());
+    u.iter()
+        .zip(v.iter())
+        .map(|(&a, &b)| a * b + (Fr::ONE - a) * (Fr::ONE - b))
+        .product()
+}
+
+/// β̃(u, idx) for a boolean index (binary expansion of `idx`, variable 0 as
+/// the most significant of `n` bits).
+pub fn eq_eval_index(u: &[Fr], idx: usize) -> Fr {
+    let n = u.len();
+    let mut acc = Fr::ONE;
+    for (j, &uj) in u.iter().enumerate() {
+        let bit = (idx >> (n - 1 - j)) & 1;
+        acc *= if bit == 1 { uj } else { Fr::ONE - uj };
+    }
+    acc
+}
+
+/// Evaluate the unique degree-≤d polynomial through points (0, ys[0]) …
+/// (d, ys[d]) at x (Lagrange on the integer grid). Used by sumcheck
+/// verifiers on round polynomials.
+pub fn interpolate_uni(ys: &[Fr], x: Fr) -> Fr {
+    let d = ys.len() - 1;
+    // If x is one of the grid points the generic formula divides by zero;
+    // handle via direct scan (x is a random challenge so this is rare).
+    for (i, &y) in ys.iter().enumerate() {
+        if x == Fr::from_u64(i as u64) {
+            return y;
+        }
+    }
+    // prefix[i] = Π_{j<i} (x - j), suffix[i] = Π_{j>i} (x - j)
+    let mut prefix = vec![Fr::ONE; d + 1];
+    for i in 1..=d {
+        prefix[i] = prefix[i - 1] * (x - Fr::from_u64((i - 1) as u64));
+    }
+    let mut suffix = vec![Fr::ONE; d + 1];
+    for i in (0..d).rev() {
+        suffix[i] = suffix[i + 1] * (x - Fr::from_u64((i + 1) as u64));
+    }
+    // denominators: i!·(d−i)!·(−1)^{d−i}
+    let mut fact = vec![Fr::ONE; d + 1];
+    for i in 1..=d {
+        fact[i] = fact[i - 1] * Fr::from_u64(i as u64);
+    }
+    let mut acc = Fr::ZERO;
+    for i in 0..=d {
+        let mut denom = fact[i] * fact[d - i];
+        if (d - i) % 2 == 1 {
+            denom = -denom;
+        }
+        acc += ys[i] * prefix[i] * suffix[i] * denom.inverse().unwrap();
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rng() -> Rng {
+        Rng::seed_from_u64(0x901e)
+    }
+
+    #[test]
+    fn eq_table_sums_to_one() {
+        let mut r = rng();
+        let u: Vec<Fr> = (0..5).map(|_| Fr::random(&mut r)).collect();
+        let t = eq_table(&u);
+        assert_eq!(t.len(), 32);
+        assert_eq!(t.iter().copied().sum::<Fr>(), Fr::ONE);
+    }
+
+    #[test]
+    fn eq_table_matches_eval_index() {
+        let mut r = rng();
+        let u: Vec<Fr> = (0..4).map(|_| Fr::random(&mut r)).collect();
+        let t = eq_table(&u);
+        for idx in 0..16 {
+            assert_eq!(t[idx], eq_eval_index(&u, idx));
+        }
+    }
+
+    #[test]
+    fn evaluate_agrees_on_hypercube() {
+        let mut r = rng();
+        let vals: Vec<Fr> = (0..8).map(|_| Fr::random(&mut r)).collect();
+        let m = Mle::new(vals.clone());
+        for idx in 0..8usize {
+            let point: Vec<Fr> = (0..3)
+                .map(|j| Fr::from_u64(((idx >> (2 - j)) & 1) as u64))
+                .collect();
+            assert_eq!(m.evaluate(&point), vals[idx]);
+        }
+    }
+
+    #[test]
+    fn fold_consistent_with_evaluate() {
+        let mut r = rng();
+        let m = Mle::new((0..16).map(|_| Fr::random(&mut r)).collect());
+        let u: Vec<Fr> = (0..4).map(|_| Fr::random(&mut r)).collect();
+        let full = m.evaluate(&u);
+        let mut folded = m.clone();
+        for &c in &u {
+            folded.fold(c);
+        }
+        assert_eq!(folded.evals[0], full);
+        // partial eval then evaluate the rest
+        let part = m.partial_eval(&u[..2]);
+        assert_eq!(part.evaluate(&u[2..]), full);
+    }
+
+    #[test]
+    fn evaluate_is_multilinear() {
+        // f(u) is affine in each coordinate
+        let mut r = rng();
+        let m = Mle::new((0..8).map(|_| Fr::random(&mut r)).collect());
+        let mut u: Vec<Fr> = (0..3).map(|_| Fr::random(&mut r)).collect();
+        let f0 = {
+            u[1] = Fr::ZERO;
+            m.evaluate(&u)
+        };
+        let f1 = {
+            u[1] = Fr::ONE;
+            m.evaluate(&u)
+        };
+        let t = Fr::random(&mut r);
+        u[1] = t;
+        assert_eq!(m.evaluate(&u), f0 + t * (f1 - f0));
+    }
+
+    #[test]
+    fn eq_eval_matches_table_product() {
+        let mut r = rng();
+        let u: Vec<Fr> = (0..4).map(|_| Fr::random(&mut r)).collect();
+        let v: Vec<Fr> = (0..4).map(|_| Fr::random(&mut r)).collect();
+        // β̃(u,v) = Σ_b β̃(u,b)β̃(v,b)
+        let tu = eq_table(&u);
+        let tv = eq_table(&v);
+        let sum: Fr = tu.iter().zip(tv.iter()).map(|(a, b)| *a * *b).sum();
+        assert_eq!(eq_eval(&u, &v), sum);
+    }
+
+    #[test]
+    fn interpolate_roundtrip() {
+        let mut r = rng();
+        // polynomial p(x) = 3x³ + x + 7 evaluated on grid 0..=3
+        let p = |x: Fr| Fr::from_u64(3) * x * x * x + x + Fr::from_u64(7);
+        let ys: Vec<Fr> = (0..4).map(|i| p(Fr::from_u64(i))).collect();
+        let x = Fr::random(&mut r);
+        assert_eq!(interpolate_uni(&ys, x), p(x));
+        // grid point
+        assert_eq!(interpolate_uni(&ys, Fr::from_u64(2)), ys[2]);
+    }
+
+    #[test]
+    fn from_i64_pads() {
+        let m = Mle::from_i64(&[1, -2, 3]);
+        assert_eq!(m.len(), 4);
+        assert_eq!(m.evals[1], Fr::from_i64(-2));
+        assert_eq!(m.evals[3], Fr::ZERO);
+    }
+}

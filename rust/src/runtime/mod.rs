@@ -1,0 +1,233 @@
+//! PJRT runtime — loads the AOT-compiled JAX/Pallas training step and
+//! executes it from the rust coordinator. Python is never on this path:
+//! the artifact is HLO text produced once by `make artifacts`
+//! (python/compile/aot.py), compiled here with the PJRT CPU client.
+
+use crate::model::{ModelConfig, Weights};
+use crate::witness::{rescale_decompose, LayerWitness, StepWitness};
+use anyhow::{ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A compiled training-step executable for one model configuration.
+pub struct StepRuntime {
+    pub cfg: ModelConfig,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Default artifact path for a config.
+pub fn artifact_path(dir: &Path, cfg: &ModelConfig) -> PathBuf {
+    dir.join(format!(
+        "model_L{}_d{}_b{}.hlo.txt",
+        cfg.depth, cfg.width, cfg.batch
+    ))
+}
+
+impl StepRuntime {
+    /// Load + compile the HLO artifact for `cfg` from `dir`.
+    pub fn load(dir: &Path, cfg: ModelConfig) -> Result<Self> {
+        let path = artifact_path(dir, &cfg);
+        ensure!(
+            path.exists(),
+            "artifact {} not found — run `make artifacts` (CONFIGS=\"{},{},{}\")",
+            path.display(),
+            cfg.depth,
+            cfg.width,
+            cfg.batch
+        );
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not UTF-8")?,
+        )
+        .context("parse HLO text")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+        Ok(Self { cfg, exe })
+    }
+
+    /// Execute one training step: returns the stacked output tensors
+    /// (z, g_a, g_z, g_w) exactly as `python/compile/model.py` defines them.
+    pub fn run_raw(
+        &self,
+        x: &[i64],
+        y: &[i64],
+        weights: &Weights,
+    ) -> Result<(Vec<i64>, Vec<i64>, Vec<i64>, Vec<i64>)> {
+        let cfg = &self.cfg;
+        let (b, d, depth) = (cfg.batch as i64, cfg.width as i64, cfg.depth as i64);
+        ensure!(x.len() == (b * d) as usize && y.len() == (b * d) as usize);
+        let w_flat: Vec<i64> = weights.layers.iter().flatten().copied().collect();
+        ensure!(w_flat.len() == (depth * d * d) as usize);
+
+        let lx = xla::Literal::vec1(x).reshape(&[b, d])?;
+        let ly = xla::Literal::vec1(y).reshape(&[b, d])?;
+        let lw = xla::Literal::vec1(&w_flat).reshape(&[depth, d, d])?;
+
+        let result = self.exe.execute::<xla::Literal>(&[lx, ly, lw])?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        ensure!(outs.len() == 4, "expected 4 outputs, got {}", outs.len());
+        let z = outs[0].to_vec::<i64>()?;
+        let ga = outs[1].to_vec::<i64>()?;
+        let gz = outs[2].to_vec::<i64>()?;
+        let gw = outs[3].to_vec::<i64>()?;
+        Ok((z, ga, gz, gw))
+    }
+
+    /// Execute the step and assemble the full [`StepWitness`] (deriving the
+    /// elementwise zkReLU auxiliary decompositions in rust).
+    pub fn compute_witness(&self, x: &[i64], y: &[i64], weights: &Weights) -> Result<StepWitness> {
+        let cfg = self.cfg;
+        let (b, d, depth) = (cfg.batch, cfg.width, cfg.depth);
+        let bd = b * d;
+        let (z_all, ga_all, gz_all, gw_all) = self.run_raw(x, y, weights)?;
+        ensure!(z_all.len() == depth * bd && gw_all.len() == depth * d * d);
+
+        let mut layers = Vec::with_capacity(depth);
+        for l in 0..depth {
+            let z = z_all[l * bd..(l + 1) * bd].to_vec();
+            let (z_aux, z_prime) = rescale_decompose(&z, cfg.r_bits, cfg.q_bits);
+            let last = l + 1 == depth;
+            let (a, g_a, g_a_aux, g_a_prime) = if last {
+                (None, None, None, None)
+            } else {
+                let a: Vec<i64> = z_aux
+                    .dprime
+                    .iter()
+                    .zip(z_aux.sign.iter())
+                    .map(|(&dp, &s)| (1 - s) * dp)
+                    .collect();
+                let g_a = ga_all[l * bd..(l + 1) * bd].to_vec();
+                let (aux, g_a_prime) = rescale_decompose(&g_a, cfg.r_bits, cfg.q_bits);
+                (Some(a), Some(g_a), Some(aux), Some(g_a_prime))
+            };
+            layers.push(LayerWitness {
+                w: weights.layers[l].clone(),
+                z,
+                z_prime,
+                z_aux,
+                a,
+                g_a,
+                g_a_aux,
+                g_a_prime,
+                g_z: gz_all[l * bd..(l + 1) * bd].to_vec(),
+                g_w: gw_all[l * d * d..(l + 1) * d * d].to_vec(),
+            });
+        }
+        Ok(StepWitness {
+            cfg,
+            x: x.to_vec(),
+            y: y.to_vec(),
+            layers,
+        })
+    }
+}
+
+/// Witness source for the coordinator: AOT/PJRT artifact when available,
+/// pure-rust native step otherwise.
+pub enum WitnessSource {
+    Pjrt(StepRuntime),
+    Native(ModelConfig),
+}
+
+impl WitnessSource {
+    /// Prefer the PJRT artifact; fall back to the native generator (bench
+    /// sweeps cover shapes that were never AOT-compiled).
+    pub fn auto(dir: &Path, cfg: ModelConfig) -> Self {
+        match StepRuntime::load(dir, cfg) {
+            Ok(rt) => WitnessSource::Pjrt(rt),
+            Err(_) => WitnessSource::Native(cfg),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WitnessSource::Pjrt(_) => "pjrt",
+            WitnessSource::Native(_) => "native",
+        }
+    }
+
+    pub fn compute_witness(&self, x: &[i64], y: &[i64], w: &Weights) -> Result<StepWitness> {
+        match self {
+            WitnessSource::Pjrt(rt) => rt.compute_witness(x, y, w),
+            WitnessSource::Native(cfg) => {
+                Ok(crate::witness::native::compute_witness(*cfg, x, y, w))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn artifact_dir() -> PathBuf {
+        // tests run from the crate root
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn inputs(cfg: &ModelConfig, seed: u64) -> (Vec<i64>, Vec<i64>, Weights) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let scale = cfg.scale();
+        let x: Vec<i64> = (0..cfg.batch * cfg.width)
+            .map(|_| rng.gen_i64(-scale, scale))
+            .collect();
+        let mut y = vec![0i64; cfg.batch * cfg.width];
+        for i in 0..cfg.batch {
+            y[i * cfg.width] = scale;
+        }
+        let w = Weights::init(*cfg, &mut rng);
+        (x, y, w)
+    }
+
+    #[test]
+    fn pjrt_witness_matches_native_bit_exactly() {
+        let cfg = ModelConfig::new(2, 8, 4);
+        let rt = match StepRuntime::load(&artifact_dir(), cfg) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("skipping: {e:#} (run `make artifacts`)");
+                return;
+            }
+        };
+        let (x, y, w) = inputs(&cfg, 11);
+        let pjrt = rt.compute_witness(&x, &y, &w).expect("pjrt witness");
+        pjrt.validate().expect("pjrt witness satisfies all relations");
+        let native = crate::witness::native::compute_witness(cfg, &x, &y, &w);
+        for (lp, ln) in pjrt.layers.iter().zip(native.layers.iter()) {
+            assert_eq!(lp.z, ln.z, "Z mismatch");
+            assert_eq!(lp.g_z, ln.g_z, "G_Z mismatch");
+            assert_eq!(lp.g_w, ln.g_w, "G_W mismatch");
+            assert_eq!(lp.g_a, ln.g_a, "G_A mismatch");
+            assert_eq!(lp.z_aux, ln.z_aux, "aux mismatch");
+        }
+    }
+
+    #[test]
+    fn pjrt_witness_depth3() {
+        let cfg = ModelConfig::new(3, 64, 16);
+        let rt = match StepRuntime::load(&artifact_dir(), cfg) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("skipping: {e:#}");
+                return;
+            }
+        };
+        let (x, y, w) = inputs(&cfg, 12);
+        let wit = rt.compute_witness(&x, &y, &w).expect("witness");
+        wit.validate().expect("valid");
+        let native = crate::witness::native::compute_witness(cfg, &x, &y, &w);
+        assert_eq!(wit.layers[2].g_w, native.layers[2].g_w);
+    }
+
+    #[test]
+    fn witness_source_fallback() {
+        // a config with no artifact falls back to native
+        let cfg = ModelConfig::new(4, 16, 8);
+        let src = WitnessSource::auto(&artifact_dir(), cfg);
+        assert_eq!(src.name(), "native");
+        let (x, y, w) = inputs(&cfg, 13);
+        let wit = src.compute_witness(&x, &y, &w).expect("witness");
+        wit.validate().expect("valid");
+    }
+}

@@ -1,0 +1,342 @@
+//! The sumcheck protocol (Lund–Fortnow–Karloff–Nisan), linear-time prover.
+//!
+//! Proves claims of the form
+//!     claimed = Σ_{b ∈ {0,1}ⁿ} Σ_t c_t · Π_j f_{t,j}(b)
+//! where each f_{t,j} is a multilinear polynomial given by its evaluation
+//! table. Products of up to three multilinears cover every relation in
+//! zkDL: matmul layers are eq·A·W (degree ≤ 2 after fixing outputs),
+//! Hadamard/ReLU relations are eq·(1−B)·Z (degree 3), and the stacking
+//! equation (27) is a two-term degree-3 instance.
+//!
+//! The prover sends, per round, the round polynomial's evaluations at
+//! 0..=deg; the verifier checks g(0)+g(1) against the running claim and
+//! evaluates g at the Fiat–Shamir challenge by Lagrange interpolation.
+//! Proof size: n·(deg+1) field elements — the paper's O(log) per-relation
+//! proof-size building block.
+
+use crate::field::Fr;
+use crate::poly::{interpolate_uni, Mle};
+use crate::transcript::Transcript;
+use anyhow::{bail, Result};
+
+/// One product term: coefficient × product of multilinear factors.
+pub struct Term {
+    pub coeff: Fr,
+    pub factors: Vec<Mle>,
+}
+
+impl Term {
+    pub fn new(coeff: Fr, factors: Vec<Mle>) -> Self {
+        Self { coeff, factors }
+    }
+}
+
+/// A sumcheck instance: Σ_b Σ_t c_t Π_j f_{t,j}(b).
+pub struct Instance {
+    pub terms: Vec<Term>,
+    pub num_vars: usize,
+}
+
+impl Instance {
+    pub fn new(terms: Vec<Term>) -> Self {
+        let num_vars = terms
+            .first()
+            .and_then(|t| t.factors.first())
+            .map(|f| f.num_vars)
+            .expect("instance needs at least one factor");
+        for t in &terms {
+            for f in &t.factors {
+                assert_eq!(f.num_vars, num_vars, "factor arity mismatch");
+            }
+        }
+        Self { terms, num_vars }
+    }
+
+    /// Max product degree across terms (the round-polynomial degree).
+    pub fn degree(&self) -> usize {
+        self.terms.iter().map(|t| t.factors.len()).max().unwrap()
+    }
+
+    /// Direct evaluation of the sum (for testing / the honest prover's claim).
+    pub fn sum(&self) -> Fr {
+        let n = 1usize << self.num_vars;
+        let mut acc = Fr::ZERO;
+        for t in &self.terms {
+            let mut term_sum = Fr::ZERO;
+            for b in 0..n {
+                let mut prod = Fr::ONE;
+                for f in &t.factors {
+                    prod *= f.evals[b];
+                }
+                term_sum += prod;
+            }
+            acc += t.coeff * term_sum;
+        }
+        acc
+    }
+}
+
+/// Proof: per-round evaluations of the round polynomial at 0..=deg.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SumcheckProof {
+    pub round_evals: Vec<Vec<Fr>>,
+    pub degree: usize,
+    pub num_vars: usize,
+}
+
+impl SumcheckProof {
+    /// Proof size in bytes (32 B per field element).
+    pub fn size_bytes(&self) -> usize {
+        self.round_evals.iter().map(|r| r.len() * 32).sum()
+    }
+}
+
+/// Output of proving: the proof, the challenge point r, and the evaluation
+/// of each term's factors at r (in instance order) for the caller to open.
+pub struct ProverOutput {
+    pub proof: SumcheckProof,
+    pub point: Vec<Fr>,
+    pub factor_evals: Vec<Vec<Fr>>,
+}
+
+/// Run the sumcheck prover. Mutates (consumes) the instance's tables.
+pub fn prove(mut inst: Instance, transcript: &mut Transcript) -> ProverOutput {
+    let num_vars = inst.num_vars;
+    let deg = inst.degree();
+    let mut rounds = Vec::with_capacity(num_vars);
+    let mut point = Vec::with_capacity(num_vars);
+
+    for _round in 0..num_vars {
+        let half = inst.terms[0].factors[0].len() / 2;
+        // round polynomial evaluations at X = 0..=deg
+        let mut evals = vec![Fr::ZERO; deg + 1];
+        for t in &inst.terms {
+            for i in 0..half {
+                // per-factor line: f(X) = lo + X·(hi − lo)
+                let lines: Vec<(Fr, Fr)> = t
+                    .factors
+                    .iter()
+                    .map(|f| {
+                        let lo = f.evals[i];
+                        let hi = f.evals[i + half];
+                        (lo, hi - lo)
+                    })
+                    .collect();
+                let mut x = Fr::ZERO;
+                for e in evals.iter_mut() {
+                    let mut prod = t.coeff;
+                    for &(lo, slope) in &lines {
+                        prod *= lo + x * slope;
+                    }
+                    *e += prod;
+                    x += Fr::ONE;
+                }
+            }
+        }
+        transcript.absorb_frs(b"sumcheck/round", &evals);
+        let r = transcript.challenge_fr(b"sumcheck/challenge");
+        for t in inst.terms.iter_mut() {
+            for f in t.factors.iter_mut() {
+                f.fold(r);
+            }
+        }
+        point.push(r);
+        rounds.push(evals);
+    }
+
+    let factor_evals = inst
+        .terms
+        .iter()
+        .map(|t| t.factors.iter().map(|f| f.evals[0]).collect())
+        .collect();
+
+    ProverOutput {
+        proof: SumcheckProof {
+            round_evals: rounds,
+            degree: deg,
+            num_vars,
+        },
+        point,
+        factor_evals,
+    }
+}
+
+/// Output of verification: the challenge point and the final reduced claim
+/// Σ_t c_t Π_j f_{t,j}(r), which the caller must check against openings.
+pub struct VerifierOutput {
+    pub point: Vec<Fr>,
+    pub final_claim: Fr,
+}
+
+/// Verify the round structure of a sumcheck proof against `claimed_sum`.
+pub fn verify(
+    claimed_sum: Fr,
+    proof: &SumcheckProof,
+    transcript: &mut Transcript,
+) -> Result<VerifierOutput> {
+    if proof.round_evals.len() != proof.num_vars {
+        bail!("sumcheck: wrong number of rounds");
+    }
+    let mut claim = claimed_sum;
+    let mut point = Vec::with_capacity(proof.num_vars);
+    for evals in &proof.round_evals {
+        if evals.len() != proof.degree + 1 {
+            bail!("sumcheck: wrong round polynomial degree");
+        }
+        if evals[0] + evals[1] != claim {
+            bail!("sumcheck: round consistency check failed");
+        }
+        transcript.absorb_frs(b"sumcheck/round", evals);
+        let r = transcript.challenge_fr(b"sumcheck/challenge");
+        claim = interpolate_uni(evals, r);
+        point.push(r);
+    }
+    Ok(VerifierOutput {
+        point,
+        final_claim: claim,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::eq_table;
+    use crate::util::rng::Rng;
+
+    fn rng() -> Rng {
+        Rng::seed_from_u64(0x5c5c)
+    }
+
+    fn random_mle(r: &mut Rng, nv: usize) -> Mle {
+        Mle::new((0..1 << nv).map(|_| Fr::random(r)).collect())
+    }
+
+    fn roundtrip(inst: Instance) {
+        let claimed = inst.sum();
+        let terms_meta: Vec<(Fr, usize)> = inst
+            .terms
+            .iter()
+            .map(|t| (t.coeff, t.factors.len()))
+            .collect();
+        let mut tp = Transcript::new(b"test");
+        let out = prove(inst, &mut tp);
+        let mut tv = Transcript::new(b"test");
+        let v = verify(claimed, &out.proof, &mut tv).expect("verify");
+        assert_eq!(v.point, out.point);
+        // final claim must equal Σ_t c_t Π f(r)
+        let mut expect = Fr::ZERO;
+        for ((c, nf), fe) in terms_meta.iter().zip(out.factor_evals.iter()) {
+            assert_eq!(*nf, fe.len());
+            expect += *c * fe.iter().copied().product::<Fr>();
+        }
+        assert_eq!(v.final_claim, expect);
+    }
+
+    #[test]
+    fn single_mle_sum() {
+        let mut r = rng();
+        let m = random_mle(&mut r, 6);
+        roundtrip(Instance::new(vec![Term::new(Fr::ONE, vec![m])]));
+    }
+
+    #[test]
+    fn product_of_two() {
+        let mut r = rng();
+        let a = random_mle(&mut r, 5);
+        let b = random_mle(&mut r, 5);
+        roundtrip(Instance::new(vec![Term::new(Fr::from_u64(7), vec![a, b])]));
+    }
+
+    #[test]
+    fn product_of_three_with_eq() {
+        let mut r = rng();
+        let u: Vec<Fr> = (0..4).map(|_| Fr::random(&mut r)).collect();
+        let eq = Mle::new(eq_table(&u));
+        let a = random_mle(&mut r, 4);
+        let b = random_mle(&mut r, 4);
+        roundtrip(Instance::new(vec![Term::new(Fr::ONE, vec![eq, a, b])]));
+    }
+
+    #[test]
+    fn multi_term() {
+        let mut r = rng();
+        let a = random_mle(&mut r, 4);
+        let b = random_mle(&mut r, 4);
+        let c = random_mle(&mut r, 4);
+        roundtrip(Instance::new(vec![
+            Term::new(Fr::random(&mut r), vec![a.clone(), b]),
+            Term::new(Fr::random(&mut r), vec![c, a]),
+        ]));
+    }
+
+    #[test]
+    fn rejects_wrong_claim() {
+        let mut r = rng();
+        let m = random_mle(&mut r, 4);
+        let claimed = Instance::new(vec![Term::new(Fr::ONE, vec![m.clone()])]).sum();
+        let mut tp = Transcript::new(b"t");
+        let out = prove(
+            Instance::new(vec![Term::new(Fr::ONE, vec![m])]),
+            &mut tp,
+        );
+        let mut tv = Transcript::new(b"t");
+        assert!(verify(claimed + Fr::ONE, &out.proof, &mut tv).is_err());
+    }
+
+    #[test]
+    fn rejects_tampered_round() {
+        let mut r = rng();
+        let m = random_mle(&mut r, 4);
+        let claimed = Instance::new(vec![Term::new(Fr::ONE, vec![m.clone()])]).sum();
+        let mut tp = Transcript::new(b"t");
+        let mut out = prove(
+            Instance::new(vec![Term::new(Fr::ONE, vec![m])]),
+            &mut tp,
+        );
+        out.proof.round_evals[2][0] += Fr::ONE;
+        let mut tv = Transcript::new(b"t");
+        assert!(verify(claimed, &out.proof, &mut tv).is_err());
+    }
+
+    #[test]
+    fn matmul_shape_sumcheck() {
+        // C(u,v) = Σ_w A(u,w) B(w,v): verify via sumcheck on fixed u,v
+        let mut r = rng();
+        let logn = 3usize;
+        let n = 1 << logn;
+        let a: Vec<Vec<Fr>> = (0..n)
+            .map(|_| (0..n).map(|_| Fr::random(&mut r)).collect())
+            .collect();
+        let b: Vec<Vec<Fr>> = (0..n)
+            .map(|_| (0..n).map(|_| Fr::random(&mut r)).collect())
+            .collect();
+        let u: Vec<Fr> = (0..logn).map(|_| Fr::random(&mut r)).collect();
+        let v: Vec<Fr> = (0..logn).map(|_| Fr::random(&mut r)).collect();
+        // A(u, ·) as an MLE over w
+        let eu = eq_table(&u);
+        let ev = eq_table(&v);
+        let a_u: Vec<Fr> = (0..n)
+            .map(|w| (0..n).map(|i| eu[i] * a[i][w]).sum())
+            .collect();
+        let b_v: Vec<Fr> = (0..n)
+            .map(|w| (0..n).map(|j| ev[j] * b[w][j]).sum())
+            .collect();
+        let inst = Instance::new(vec![Term::new(
+            Fr::ONE,
+            vec![Mle::new(a_u), Mle::new(b_v)],
+        )]);
+        // claimed = C̃(u,v)
+        let mut c_uv = Fr::ZERO;
+        for i in 0..n {
+            for j in 0..n {
+                let mut dot = Fr::ZERO;
+                for w in 0..n {
+                    dot += a[i][w] * b[w][j];
+                }
+                c_uv += eu[i] * ev[j] * dot;
+            }
+        }
+        assert_eq!(inst.sum(), c_uv);
+        roundtrip(inst);
+    }
+}

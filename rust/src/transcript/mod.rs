@@ -1,0 +1,150 @@
+//! Fiat–Shamir transcript.
+//!
+//! The paper describes interactive protocols between the trainer 𝒯 and a
+//! trusted verifier 𝒱; we run them non-interactively: every verifier
+//! challenge (u_relu, u_bit, u_stack, k, z, RLC coefficients, IPA round
+//! challenges …) is derived from a SHA-256 transcript that absorbs, in
+//! order, every message the prover would have sent. Verifier re-derives the
+//! same challenges, so soundness reduces to the random-oracle heuristic as
+//! usual.
+
+use crate::curve::G1Affine;
+use crate::field::Fr;
+use sha2::{Digest, Sha256};
+
+/// A running Fiat–Shamir transcript. Domain-separated by construction: each
+/// absorb/squeeze is tagged with a label and a type byte.
+#[derive(Clone)]
+pub struct Transcript {
+    state: [u8; 32],
+    counter: u64,
+}
+
+impl Transcript {
+    pub fn new(domain: &[u8]) -> Self {
+        let mut h = Sha256::new();
+        h.update(b"zkdl/transcript/v1");
+        h.update((domain.len() as u64).to_le_bytes());
+        h.update(domain);
+        Self {
+            state: h.finalize().into(),
+            counter: 0,
+        }
+    }
+
+    fn absorb(&mut self, tag: u8, label: &[u8], data: &[u8]) {
+        let mut h = Sha256::new();
+        h.update(self.state);
+        h.update([tag]);
+        h.update((label.len() as u64).to_le_bytes());
+        h.update(label);
+        h.update((data.len() as u64).to_le_bytes());
+        h.update(data);
+        self.state = h.finalize().into();
+    }
+
+    pub fn absorb_bytes(&mut self, label: &[u8], data: &[u8]) {
+        self.absorb(0x01, label, data);
+    }
+
+    pub fn absorb_u64(&mut self, label: &[u8], v: u64) {
+        self.absorb(0x02, label, &v.to_le_bytes());
+    }
+
+    pub fn absorb_fr(&mut self, label: &[u8], v: &Fr) {
+        self.absorb(0x03, label, &v.to_bytes());
+    }
+
+    pub fn absorb_frs(&mut self, label: &[u8], vs: &[Fr]) {
+        let mut buf = Vec::with_capacity(vs.len() * 32);
+        for v in vs {
+            buf.extend_from_slice(&v.to_bytes());
+        }
+        self.absorb(0x04, label, &buf);
+    }
+
+    pub fn absorb_point(&mut self, label: &[u8], p: &G1Affine) {
+        self.absorb(0x05, label, &p.to_bytes());
+    }
+
+    pub fn absorb_points(&mut self, label: &[u8], ps: &[G1Affine]) {
+        let mut buf = Vec::with_capacity(ps.len() * 64);
+        for p in ps {
+            buf.extend_from_slice(&p.to_bytes());
+        }
+        self.absorb(0x06, label, &buf);
+    }
+
+    /// Squeeze one field challenge (uniform via 64-byte wide reduction).
+    pub fn challenge_fr(&mut self, label: &[u8]) -> Fr {
+        let mut wide = [0u8; 64];
+        for half in 0..2u8 {
+            let mut h = Sha256::new();
+            h.update(self.state);
+            h.update([0xF0, half]);
+            h.update((label.len() as u64).to_le_bytes());
+            h.update(label);
+            h.update(self.counter.to_le_bytes());
+            wide[half as usize * 32..(half as usize + 1) * 32]
+                .copy_from_slice(&h.finalize());
+        }
+        self.counter += 1;
+        // ratchet the state so successive challenges differ
+        let mut h = Sha256::new();
+        h.update(self.state);
+        h.update([0xF2]);
+        h.update(wide);
+        self.state = h.finalize().into();
+        Fr::from_bytes_wide(&wide)
+    }
+
+    /// Squeeze a vector of challenges.
+    pub fn challenge_frs(&mut self, label: &[u8], n: usize) -> Vec<Fr> {
+        (0..n).map(|_| self.challenge_fr(label)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_order_sensitive() {
+        let mut a = Transcript::new(b"t");
+        let mut b = Transcript::new(b"t");
+        a.absorb_u64(b"x", 1);
+        a.absorb_u64(b"y", 2);
+        b.absorb_u64(b"x", 1);
+        b.absorb_u64(b"y", 2);
+        assert_eq!(a.challenge_fr(b"c"), b.challenge_fr(b"c"));
+
+        let mut c = Transcript::new(b"t");
+        c.absorb_u64(b"y", 2);
+        c.absorb_u64(b"x", 1);
+        assert_ne!(a.challenge_fr(b"c"), c.challenge_fr(b"c"));
+    }
+
+    #[test]
+    fn domain_separation() {
+        let mut a = Transcript::new(b"d1");
+        let mut b = Transcript::new(b"d2");
+        assert_ne!(a.challenge_fr(b"c"), b.challenge_fr(b"c"));
+    }
+
+    #[test]
+    fn successive_challenges_differ() {
+        let mut t = Transcript::new(b"t");
+        let c1 = t.challenge_fr(b"c");
+        let c2 = t.challenge_fr(b"c");
+        assert_ne!(c1, c2);
+    }
+
+    #[test]
+    fn absorbing_changes_challenges() {
+        let mut a = Transcript::new(b"t");
+        let mut b = Transcript::new(b"t");
+        a.absorb_fr(b"v", &Fr::from_u64(5));
+        b.absorb_fr(b"v", &Fr::from_u64(6));
+        assert_ne!(a.challenge_fr(b"c"), b.challenge_fr(b"c"));
+    }
+}

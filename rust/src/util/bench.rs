@@ -1,0 +1,171 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Used by the `[[bench]] harness = false` targets in `rust/benches/`.
+//! Provides warmup + repeated timing with mean / median / min reporting and
+//! a wall-clock budget so large parameter sweeps degrade gracefully
+//! (matching the paper's "> 10³ s" timeout entries in Table 2).
+
+use std::time::{Duration, Instant};
+
+/// Statistics of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+}
+
+impl Stats {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Time `f` up to `max_iters` times or until `budget` is exhausted
+/// (always at least once). Returns per-iteration stats.
+pub fn time_budgeted<F: FnMut()>(mut f: F, max_iters: usize, budget: Duration) -> Stats {
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    for _ in 0..max_iters.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+        if start.elapsed() > budget {
+            break;
+        }
+    }
+    samples.sort();
+    let min = samples[0];
+    let median = samples[samples.len() / 2];
+    let total: Duration = samples.iter().sum();
+    let mean = total / samples.len() as u32;
+    Stats {
+        iters: samples.len(),
+        mean,
+        median,
+        min,
+    }
+}
+
+/// Time one run of `f`, returning its result and the elapsed time.
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed())
+}
+
+/// Pretty duration: "12.3 ms", "4.56 s".
+pub fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// Simple fixed-width table printer for bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("| {:w$} ", c, w = widths[i]));
+            }
+            s.push('|');
+            println!("{s}");
+        };
+        line(&self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&sep);
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Parse `--flag value` style bench args (cargo bench passes through after `--`).
+pub struct BenchArgs {
+    args: Vec<String>,
+}
+
+impl BenchArgs {
+    pub fn from_env() -> Self {
+        Self {
+            args: std::env::args().skip(1).collect(),
+        }
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.args.iter().any(|a| a == flag)
+    }
+
+    pub fn get(&self, flag: &str) -> Option<&str> {
+        self.args
+            .iter()
+            .position(|a| a == flag)
+            .and_then(|i| self.args.get(i + 1))
+            .map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, flag: &str, default: usize) -> usize {
+        self.get(flag).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, flag: &str, default: f64) -> f64 {
+        self.get(flag).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_works() {
+        let st = time_budgeted(
+            || {
+                std::hint::black_box(1 + 1);
+            },
+            16,
+            Duration::from_secs(1),
+        );
+        assert!(st.iters >= 1 && st.iters <= 16);
+        assert!(st.min <= st.median && st.median <= st.mean * 4);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with(" s"));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with(" ms"));
+        assert!(fmt_dur(Duration::from_micros(5)).ends_with(" us"));
+    }
+}

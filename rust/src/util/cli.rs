@@ -1,0 +1,102 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Supports `zkdl <subcommand> --key value --flag` invocations.
+
+use std::collections::HashMap;
+
+/// Parsed command line: a subcommand plus `--key value` options and flags.
+#[derive(Debug, Default, Clone)]
+pub struct Cli {
+    pub subcommand: Option<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn parse(args: impl Iterator<Item = String>) -> Self {
+        let mut cli = Cli::default();
+        let args: Vec<String> = args.collect();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                // `--key value` if the next token is not another option,
+                // otherwise a bare flag.
+                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    cli.options.insert(key.to_string(), args[i + 1].clone());
+                    i += 2;
+                    continue;
+                }
+                cli.flags.push(key.to_string());
+            } else if cli.subcommand.is_none() {
+                cli.subcommand = Some(a.clone());
+            } else {
+                cli.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        cli
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Cli {
+        Cli::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn basic_parse() {
+        let c = parse("prove --width 256 --bs 32 --parallel extra");
+        assert_eq!(c.subcommand.as_deref(), Some("prove"));
+        assert_eq!(c.get_usize("width", 0), 256);
+        assert_eq!(c.get_usize("bs", 0), 32);
+        // `--parallel extra`: "extra" does not start with --, so it binds as value
+        assert_eq!(c.get("parallel"), Some("extra"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let c = parse("bench --full");
+        assert!(c.flag("full"));
+        assert_eq!(c.subcommand.as_deref(), Some("bench"));
+    }
+
+    #[test]
+    fn defaults() {
+        let c = parse("x");
+        assert_eq!(c.get_usize("missing", 42), 42);
+        assert_eq!(c.get_str("s", "d"), "d");
+    }
+}

@@ -1,0 +1,9 @@
+//! Support utilities: PRNG, benchmark harness, thread helpers, CLI parsing.
+//!
+//! These exist because the offline environment has no `rand`, `criterion`,
+//! `rayon`, or `clap`; see DESIGN.md §Environment constraints.
+
+pub mod bench;
+pub mod cli;
+pub mod rng;
+pub mod threads;

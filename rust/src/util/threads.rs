@@ -1,0 +1,94 @@
+//! Tiny data-parallel helpers over `std::thread::scope` (rayon substitute).
+
+/// Number of worker threads to use (respects `ZKDL_THREADS`).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("ZKDL_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Map `f` over `items` in parallel, preserving order.
+/// Falls back to sequential when a single thread is available or the input
+/// is small enough that spawn overhead would dominate.
+pub fn par_map<T, U, F>(items: Vec<T>, f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    F: Fn(T) -> U + Sync,
+{
+    let n_threads = num_threads();
+    if n_threads == 1 || items.len() <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let n = items.len();
+    let chunk = n.div_ceil(n_threads.min(n));
+    let mut slots: Vec<Option<U>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    // Move items into Option slots so each worker can take its chunk.
+    let mut inputs: Vec<Option<T>> = items.into_iter().map(Some).collect();
+    let f = &f;
+    std::thread::scope(|s| {
+        for (in_chunk, out_chunk) in inputs.chunks_mut(chunk).zip(slots.chunks_mut(chunk)) {
+            s.spawn(move || {
+                for (inp, out) in in_chunk.iter_mut().zip(out_chunk.iter_mut()) {
+                    *out = Some(f(inp.take().unwrap()));
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Run `f(chunk_index, chunk)` over mutable chunks of `data` in parallel.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_size: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        for (i, chunk) in data.chunks_mut(chunk_size.max(1)).enumerate() {
+            s.spawn(move || f(i, chunk));
+        }
+    });
+}
+
+/// Parallel index-range map: evaluates `f(i)` for i in 0..n.
+pub fn par_map_indexed<U, F>(n: usize, f: F) -> Vec<U>
+where
+    U: Send,
+    F: Fn(usize) -> U + Sync,
+{
+    par_map((0..n).collect(), |i| f(i))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let v: Vec<usize> = (0..1000).collect();
+        let out = par_map(v, |x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_all() {
+        let mut v = vec![0u64; 977];
+        par_chunks_mut(&mut v, 100, |i, chunk| {
+            for c in chunk.iter_mut() {
+                *c = i as u64 + 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x > 0));
+    }
+}

@@ -1,0 +1,244 @@
+//! Witness tensors of one training step — everything the prover commits to
+//! and proves relations over.
+//!
+//! A [`StepWitness`] holds, per layer ℓ, the tensors of Example 4.5 plus the
+//! zkReLU auxiliary inputs aux^{(ℓ)} = (Z″, B_{Q−1}, R_Z, G_A′, R_{G_A}).
+//! [`StepWitness::validate`] checks every arithmetic relation (2)–(5) and
+//! (30)–(35) over the integers — this is the ground truth that both the
+//! native and the PJRT (JAX/Pallas-compiled) witness generators must satisfy
+//! bit-exactly.
+
+pub mod native;
+
+use crate::model::ModelConfig;
+use anyhow::{ensure, Result};
+
+/// Rescale decomposition of a tensor T (scale 2^{2R}) into
+/// T = 2^R·T″ − 2^{Q+R−1}·B + R_T with T″ ∈ [0, 2^{Q−1}), B ∈ {0,1},
+/// R_T ∈ [−2^{R−1}, 2^{R−1}).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RescaleAux {
+    /// Re-compressed magnitude Z″ = Z′ + 2^{Q−1}·B_{Q−1}, in [0, 2^{Q−1}).
+    pub dprime: Vec<i64>,
+    /// Sign bits B_{Q−1} ∈ {0,1} (1 ⇔ Z′ < 0).
+    pub sign: Vec<i64>,
+    /// Rounding remainder in [−2^{R−1}, 2^{R−1}).
+    pub rem: Vec<i64>,
+}
+
+/// Per-layer witness.
+#[derive(Clone, Debug)]
+pub struct LayerWitness {
+    /// Weights W^{(ℓ)} (d×d, scale 2^R).
+    pub w: Vec<i64>,
+    /// Pre-activation Z^{(ℓ)} = A^{(ℓ−1)}·W^{(ℓ)} (B×d, scale 2^{2R}).
+    pub z: Vec<i64>,
+    /// Rescaled Z^{(ℓ)′} = ⌊Z/2^R⌉ (B×d, scale 2^R).
+    pub z_prime: Vec<i64>,
+    /// zkReLU decomposition of Z.
+    pub z_aux: RescaleAux,
+    /// Activation A^{(ℓ)} = (1−B_{Q−1})⊙Z″ for ℓ<L; None for the last layer.
+    pub a: Option<Vec<i64>>,
+    /// Activation gradient G_A^{(ℓ)} = G_Z^{(ℓ+1)}·W^{(ℓ+1)ᵀ}
+    /// (scale 2^{2R}); None for the last layer.
+    pub g_a: Option<Vec<i64>>,
+    /// zkReLU decomposition of G_A (G_A′ = dprime−2^{Q−1}·sign_ga where
+    /// sign_ga tracks G_A′ < 0); None for the last layer.
+    pub g_a_aux: Option<RescaleAux>,
+    /// Rescaled gradient G_A^{(ℓ)′} (scale 2^R); None for the last layer.
+    pub g_a_prime: Option<Vec<i64>>,
+    /// Pre-activation gradient G_Z^{(ℓ)} (B×d, scale 2^R):
+    /// (1−B_{Q−1})⊙G_A′ for ℓ<L, Z^{(L)′}−Y for ℓ=L.
+    pub g_z: Vec<i64>,
+    /// Weight gradient G_W^{(ℓ)} = G_Z^{(ℓ)ᵀ}·A^{(ℓ−1)} (d×d, scale 2^{2R}).
+    pub g_w: Vec<i64>,
+}
+
+/// Full witness of one SGD step.
+#[derive(Clone, Debug)]
+pub struct StepWitness {
+    pub cfg: ModelConfig,
+    /// Input batch X = A^{(0)} (B×d, scale 2^R).
+    pub x: Vec<i64>,
+    /// Targets Y (B×d, scale 2^R; one-hot·2^R for classification).
+    pub y: Vec<i64>,
+    pub layers: Vec<LayerWitness>,
+}
+
+impl StepWitness {
+    /// Training loss of this step: ½‖Z^{(L)′} − Y‖² in real units.
+    pub fn loss(&self) -> f64 {
+        let last = self.layers.last().unwrap();
+        let scale = self.cfg.scale() as f64;
+        let sum: f64 = last
+            .g_z
+            .iter()
+            .map(|&g| {
+                let r = g as f64 / scale;
+                r * r
+            })
+            .sum();
+        0.5 * sum / self.cfg.batch as f64
+    }
+
+    /// Verify every arithmetic relation of the paper over the integers.
+    pub fn validate(&self) -> Result<()> {
+        let cfg = &self.cfg;
+        let (b, d, depth) = (cfg.batch, cfg.width, cfg.depth);
+        let r = cfg.r_bits;
+        let q = cfg.q_bits;
+        let half_r = 1i64 << (r - 1);
+        let q_mag = 1i64 << (q - 1);
+        ensure!(self.layers.len() == depth, "layer count");
+        ensure!(self.x.len() == b * d && self.y.len() == b * d, "io shapes");
+
+        let mut a_prev: &[i64] = &self.x;
+        for (l, lw) in self.layers.iter().enumerate() {
+            let last = l + 1 == depth;
+            ensure!(lw.w.len() == d * d, "w shape");
+            ensure!(lw.z.len() == b * d, "z shape");
+
+            // (30): Z = A_prev · W
+            let z = crate::model::matmul_i64(a_prev, &lw.w, b, d, d);
+            ensure!(z == lw.z, "relation (30) failed at layer {l}");
+
+            // (3): Z = 2^R·Z″ − 2^{Q+R−1}·B + R_Z, with ranges
+            for i in 0..b * d {
+                let dp = lw.z_aux.dprime[i];
+                let s = lw.z_aux.sign[i];
+                let rem = lw.z_aux.rem[i];
+                ensure!((0..q_mag).contains(&dp), "Z'' out of range");
+                ensure!(s == 0 || s == 1, "B_{{Q-1}} not binary");
+                ensure!((-half_r..half_r).contains(&rem), "R_Z out of range");
+                let rhs = (dp << r) - (s << (q + r - 1)) + rem;
+                ensure!(lw.z[i] == rhs, "relation (3) failed at layer {l}");
+                ensure!(
+                    lw.z_prime[i] == dp - (s << (q - 1)),
+                    "Z' decomposition failed at layer {l}"
+                );
+            }
+
+            if !last {
+                // (2): A = (1 − B)⊙Z″
+                let a = lw.a.as_ref().expect("inner layer has activation");
+                for i in 0..b * d {
+                    ensure!(
+                        a[i] == (1 - lw.z_aux.sign[i]) * lw.z_aux.dprime[i],
+                        "relation (2) failed at layer {l}"
+                    );
+                }
+                // (5): G_A = 2^R·G_A′ + R_{G_A}  (signed Q-bit G_A′)
+                let g_a = lw.g_a.as_ref().unwrap();
+                let g_a_prime = lw.g_a_prime.as_ref().unwrap();
+                let aux = lw.g_a_aux.as_ref().unwrap();
+                for i in 0..b * d {
+                    let gp = g_a_prime[i];
+                    ensure!((-q_mag..q_mag).contains(&gp), "G_A' out of range");
+                    ensure!(
+                        (-half_r..half_r).contains(&aux.rem[i]),
+                        "R_GA out of range"
+                    );
+                    ensure!(
+                        g_a[i] == (gp << r) + aux.rem[i],
+                        "relation (5) failed at layer {l}"
+                    );
+                    // signed decomposition consistency
+                    ensure!(aux.sign[i] == 0 || aux.sign[i] == 1, "G_A' sign bit");
+                    ensure!(
+                        gp == aux.dprime[i] - (aux.sign[i] << (q - 1)),
+                        "G_A' magnitude/sign decomposition at layer {l}"
+                    );
+                    ensure!((0..q_mag).contains(&aux.dprime[i]), "G_A'' range");
+                }
+                // (4): G_Z = (1 − B)⊙G_A′
+                for i in 0..b * d {
+                    ensure!(
+                        lw.g_z[i] == (1 - lw.z_aux.sign[i]) * g_a_prime[i],
+                        "relation (4) failed at layer {l}"
+                    );
+                }
+                // (33): G_A^{(ℓ)} = G_Z^{(ℓ+1)}·W^{(ℓ+1)ᵀ}
+                let next = &self.layers[l + 1];
+                let expect = crate::model::matmul_a_bt(&next.g_z, &next.w, b, d, d);
+                ensure!(*g_a == expect, "relation (33) failed at layer {l}");
+            } else {
+                // (32): G_Z^{(L)} = Z^{(L)′} − Y
+                for i in 0..b * d {
+                    ensure!(
+                        lw.g_z[i] == lw.z_prime[i] - self.y[i],
+                        "relation (32) failed"
+                    );
+                }
+            }
+
+            // (34): G_W = G_Zᵀ·A_prev
+            let gw = crate::model::matmul_at_b(&lw.g_z, a_prev, b, d, d);
+            ensure!(gw == lw.g_w, "relation (34) failed at layer {l}");
+
+            if let Some(a) = &lw.a {
+                a_prev = a;
+            }
+        }
+        Ok(())
+    }
+
+    /// Weight gradients (for the coordinator's SGD update).
+    pub fn weight_grads(&self) -> Vec<Vec<i64>> {
+        self.layers.iter().map(|l| l.g_w.clone()).collect()
+    }
+}
+
+/// Decompose a scale-2^{2R} tensor into its zkReLU auxiliary inputs.
+/// Returns (aux, rescaled values T′).
+pub fn rescale_decompose(t: &[i64], r_bits: u32, q_bits: u32) -> (RescaleAux, Vec<i64>) {
+    let q_mag = 1i64 << (q_bits - 1);
+    let mut dprime = Vec::with_capacity(t.len());
+    let mut sign = Vec::with_capacity(t.len());
+    let mut rem = Vec::with_capacity(t.len());
+    let mut prime = Vec::with_capacity(t.len());
+    for &v in t {
+        let p = crate::model::round_div_pow2(v, r_bits);
+        assert!(
+            (-q_mag..q_mag).contains(&p),
+            "rescaled value {p} exceeds Q-bit budget (Q={q_bits}); scale down inputs"
+        );
+        let s = i64::from(p < 0);
+        dprime.push(p + (s << (q_bits - 1)));
+        sign.push(s);
+        rem.push(v - (p << r_bits));
+        prime.push(p);
+    }
+    (RescaleAux { dprime, sign, rem }, prime)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rescale_decompose_relation3() {
+        let r = 16u32;
+        let q = 32u32;
+        let vals: Vec<i64> = vec![
+            0,
+            1,
+            -1,
+            65536,
+            -65536,
+            (1i64 << 40) + 12345,
+            -(1i64 << 40) - 54321,
+            32767,
+            32768,
+            -32768,
+            -32769,
+        ];
+        let (aux, prime) = rescale_decompose(&vals, r, q);
+        for i in 0..vals.len() {
+            let rhs = (aux.dprime[i] << r) - (aux.sign[i] << (q + r - 1)) + aux.rem[i];
+            assert_eq!(vals[i], rhs);
+            assert_eq!(prime[i], aux.dprime[i] - (aux.sign[i] << (q - 1)));
+            assert!((0..(1i64 << (q - 1))).contains(&aux.dprime[i]));
+            assert!((-(1i64 << (r - 1))..(1i64 << (r - 1))).contains(&aux.rem[i]));
+        }
+    }
+}

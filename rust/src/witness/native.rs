@@ -1,0 +1,190 @@
+//! Native (pure-rust) witness generator: the reference fixed-point training
+//! step. The PJRT path (`runtime::pjrt_witness`) must agree with this
+//! bit-exactly — an integration test asserts it. Benches use this generator
+//! for sweep configurations that have no AOT artifact.
+
+use super::{rescale_decompose, LayerWitness, StepWitness};
+use crate::model::{matmul_a_bt, matmul_at_b, matmul_i64, ModelConfig, Weights};
+
+/// Execute one quantized training step and collect the full witness.
+///
+/// `x`, `y`: B×d row-major at scale 2^R.
+pub fn compute_witness(cfg: ModelConfig, x: &[i64], y: &[i64], weights: &Weights) -> StepWitness {
+    let (b, d, depth) = (cfg.batch, cfg.width, cfg.depth);
+    assert_eq!(x.len(), b * d);
+    assert_eq!(y.len(), b * d);
+    assert_eq!(weights.layers.len(), depth);
+
+    // ---- forward ----
+    let mut zs = Vec::with_capacity(depth);
+    let mut z_auxes = Vec::with_capacity(depth);
+    let mut z_primes = Vec::with_capacity(depth);
+    let mut acts: Vec<Vec<i64>> = Vec::with_capacity(depth); // A^{(1..L-1)}
+    for (l, w) in weights.layers.iter().enumerate() {
+        let a_prev: &[i64] = if l == 0 { x } else { &acts[l - 1] };
+        let z = matmul_i64(a_prev, w, b, d, d);
+        let (aux, z_prime) = rescale_decompose(&z, cfg.r_bits, cfg.q_bits);
+        if l + 1 < depth {
+            let a: Vec<i64> = aux
+                .dprime
+                .iter()
+                .zip(aux.sign.iter())
+                .map(|(&dp, &s)| (1 - s) * dp)
+                .collect();
+            acts.push(a);
+        }
+        zs.push(z);
+        z_auxes.push(aux);
+        z_primes.push(z_prime);
+    }
+
+    // ---- backward ----
+    // g_z[L-1] = Z^{(L)'} − Y
+    let mut g_zs: Vec<Vec<i64>> = vec![Vec::new(); depth];
+    let mut g_as: Vec<Option<Vec<i64>>> = vec![None; depth];
+    let mut g_a_primes: Vec<Option<Vec<i64>>> = vec![None; depth];
+    let mut g_a_auxes: Vec<Option<super::RescaleAux>> = vec![None; depth];
+    g_zs[depth - 1] = z_primes[depth - 1]
+        .iter()
+        .zip(y.iter())
+        .map(|(&zp, &yv)| zp - yv)
+        .collect();
+    for l in (0..depth - 1).rev() {
+        // (33): G_A^{(ℓ)} = G_Z^{(ℓ+1)}·W^{(ℓ+1)ᵀ}
+        let g_a = matmul_a_bt(&g_zs[l + 1], &weights.layers[l + 1], b, d, d);
+        let (aux, g_a_prime) = rescale_decompose(&g_a, cfg.r_bits, cfg.q_bits);
+        // (4): G_Z = (1 − B_{Q−1})⊙G_A′ — uses Z's sign bits
+        g_zs[l] = g_a_prime
+            .iter()
+            .zip(z_auxes[l].sign.iter())
+            .map(|(&gp, &s)| (1 - s) * gp)
+            .collect();
+        g_as[l] = Some(g_a);
+        g_a_primes[l] = Some(g_a_prime);
+        g_a_auxes[l] = Some(aux);
+    }
+
+    // ---- weight gradients + assemble ----
+    let mut layers = Vec::with_capacity(depth);
+    for l in 0..depth {
+        let a_prev: &[i64] = if l == 0 { x } else { &acts[l - 1] };
+        let g_w = matmul_at_b(&g_zs[l], a_prev, b, d, d);
+        layers.push(LayerWitness {
+            w: weights.layers[l].clone(),
+            z: std::mem::take(&mut zs[l]),
+            z_prime: std::mem::take(&mut z_primes[l]),
+            z_aux: z_auxes[l].clone(),
+            a: if l + 1 < depth {
+                Some(acts[l].clone())
+            } else {
+                None
+            },
+            g_a: g_as[l].take(),
+            g_a_aux: g_a_auxes[l].take(),
+            g_a_prime: g_a_primes[l].take(),
+            g_z: std::mem::take(&mut g_zs[l]),
+            g_w,
+        });
+    }
+
+    StepWitness {
+        cfg,
+        x: x.to_vec(),
+        y: y.to_vec(),
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn small_setup(depth: usize) -> (ModelConfig, Vec<i64>, Vec<i64>, Weights) {
+        let cfg = ModelConfig::new(depth, 8, 4);
+        let mut rng = Rng::seed_from_u64(42);
+        let scale = cfg.scale();
+        let x: Vec<i64> = (0..cfg.batch * cfg.width)
+            .map(|_| rng.gen_i64(-scale, scale))
+            .collect();
+        let mut y = vec![0i64; cfg.batch * cfg.width];
+        for i in 0..cfg.batch {
+            y[i * cfg.width + (i % cfg.width)] = scale;
+        }
+        let w = Weights::init(cfg, &mut rng);
+        (cfg, x, y, w)
+    }
+
+    #[test]
+    fn witness_validates_depth2() {
+        let (cfg, x, y, w) = small_setup(2);
+        let wit = compute_witness(cfg, &x, &y, &w);
+        wit.validate().expect("all relations hold");
+    }
+
+    #[test]
+    fn witness_validates_depth5() {
+        let (cfg, x, y, w) = small_setup(5);
+        let wit = compute_witness(cfg, &x, &y, &w);
+        wit.validate().expect("all relations hold");
+    }
+
+    #[test]
+    fn witness_validates_depth1() {
+        // single layer: no ReLU at all, just rescale + loss gradient
+        let (cfg, x, y, w) = small_setup(1);
+        let wit = compute_witness(cfg, &x, &y, &w);
+        wit.validate().expect("all relations hold");
+        assert!(wit.layers[0].a.is_none());
+        assert!(wit.layers[0].g_a.is_none());
+    }
+
+    #[test]
+    fn validate_catches_tampering() {
+        let (cfg, x, y, w) = small_setup(3);
+        let good = compute_witness(cfg, &x, &y, &w);
+
+        // flip a sign bit → relations (2)/(3) break
+        let mut bad = good.clone();
+        bad.layers[0].z_aux.sign[3] = 1 - bad.layers[0].z_aux.sign[3];
+        assert!(bad.validate().is_err());
+
+        // perturb an activation → relation (2) breaks
+        let mut bad = good.clone();
+        if let Some(a) = bad.layers[0].a.as_mut() {
+            a[0] += 1;
+        }
+        assert!(bad.validate().is_err());
+
+        // perturb a weight gradient → relation (34) breaks
+        let mut bad = good.clone();
+        bad.layers[1].g_w[0] += 1;
+        assert!(bad.validate().is_err());
+
+        // out-of-range remainder → range check breaks
+        let mut bad = good.clone();
+        bad.layers[0].z_aux.rem[0] += 1i64 << cfg.r_bits;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        // a few SGD steps on a fixed batch must reduce the quadratic loss
+        let (cfg, x, y, mut w) = small_setup(2);
+        let first = compute_witness(cfg, &x, &y, &w);
+        first.validate().unwrap();
+        let mut loss_prev = first.loss();
+        let mut improved = 0;
+        let mut wit = first;
+        for _ in 0..20 {
+            w.apply_update(&wit.weight_grads());
+            wit = compute_witness(cfg, &x, &y, &w);
+            let loss = wit.loss();
+            if loss < loss_prev {
+                improved += 1;
+            }
+            loss_prev = loss;
+        }
+        assert!(improved >= 15, "loss should mostly decrease, got {improved}/20");
+    }
+}

@@ -1,0 +1,1874 @@
+//! zkDL Protocol 2 — the full training-step prover and verifier (paper §4).
+//!
+//! One [`StepProof`] certifies that the committed witness of one SGD step
+//! satisfies every relation of Example 4.5:
+//!   (30) Z^ℓ = A^{ℓ−1}·W^ℓ          — batched matmul sumcheck
+//!   (33) G_A^ℓ = G_Z^{ℓ+1}·W^{ℓ+1ᵀ} — batched matmul sumcheck
+//!   (34) G_W^ℓ = G_Z^{ℓᵀ}·A^{ℓ−1}   — batched matmul sumcheck
+//!   (2)/(4)  A = (1−B)⊙Z″, G_Z = (1−B)⊙G_A′ — the stacking sumcheck (27)
+//!   (3)/(5)  Z/G_A rescale decompositions    — homomorphically derived
+//!                                              commitment openings
+//!   (32) G_Z^L = Z^{L′} − Y                  — derived commitment opening
+//!   aux ranges (Thm 4.1)                     — zkReLU validity (eq. 19)
+//!
+//! Two proof-generation orders are supported (Figure 4's comparison):
+//! * [`ProofMode::Parallel`] — the paper's contribution: all layers share
+//!   the same randomness, per-layer claims are batched by random linear
+//!   combination, aux tensors are stacked, and one validity instance covers
+//!   the whole network. Proof size grows O(log L).
+//! * [`ProofMode::Sequential`] — the conventional layer-by-layer order
+//!   (Liu et al. [1]): per-layer randomness, per-layer openings, per-layer
+//!   validity. Proof size grows O(L).
+
+use crate::commit::CommitKey;
+use crate::curve::{G1, G1Affine};
+use crate::field::Fr;
+use crate::gkr;
+use crate::ipa::{self, EvalClaim, IpaProof};
+use crate::model::ModelConfig;
+use crate::poly::{eq_table, Mle};
+use crate::sumcheck::{self, Instance, SumcheckProof, Term};
+use crate::transcript::Transcript;
+use crate::util::rng::Rng;
+use crate::witness::StepWitness;
+use crate::zkrelu::{self, Protocol1Msg, ValidityBases, ValidityProof};
+use anyhow::{bail, ensure, Context, Result};
+
+/// Proof-generation order (Figure 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProofMode {
+    Parallel,
+    Sequential,
+}
+
+impl ProofMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProofMode::Parallel => "parallel",
+            ProofMode::Sequential => "sequential",
+        }
+    }
+}
+
+/// Commitment bases sized for one model configuration.
+pub struct ProverKey {
+    pub cfg: ModelConfig,
+    /// Stacked-aux basis, length N = L̄·D; layer ℓ owns block [ℓD, (ℓ+1)D).
+    pub g_aux: CommitKey,
+    /// Weight/weight-gradient basis, length d².
+    pub g_mat: CommitKey,
+    /// Input basis, length D.
+    pub g_x: CommitKey,
+}
+
+/// Padded layer count L̄ and stacked size N for a config.
+pub fn stack_dims(cfg: &ModelConfig) -> (usize, usize) {
+    let lbar = cfg.depth.next_power_of_two();
+    (lbar, lbar * cfg.d_size())
+}
+
+impl ProverKey {
+    pub fn setup(cfg: ModelConfig) -> Self {
+        let (_, n) = stack_dims(&cfg);
+        let d2 = cfg.width * cfg.width;
+        Self {
+            cfg,
+            g_aux: CommitKey::setup(b"zkdl/aux", n),
+            g_mat: CommitKey::setup(b"zkdl/mat", d2),
+            g_x: CommitKey::setup(b"zkdl/x", cfg.d_size()),
+        }
+    }
+
+    /// Commitment key slice for layer ℓ's aux block.
+    pub fn block(&self, l: usize) -> CommitKey {
+        let d = self.cfg.d_size();
+        CommitKey {
+            g: self.g_aux.g[l * d..(l + 1) * d].to_vec(),
+            h: self.g_aux.h,
+            label: self.g_aux.label.clone(),
+        }
+    }
+}
+
+/// One committed tensor with its opening (prover side).
+#[derive(Clone)]
+struct Committed {
+    values: Vec<Fr>,
+    blind: Fr,
+    com: G1,
+}
+
+fn commit(ck: &CommitKey, values: Vec<Fr>, rng: &mut Rng) -> Committed {
+    let blind = Fr::random(rng);
+    let com = ck.commit(&values, blind);
+    Committed { values, blind, com }
+}
+
+fn frs(v: &[i64]) -> Vec<Fr> {
+    v.iter().map(|&x| Fr::from_i64(x)).collect()
+}
+
+/// Proof of one layer group (all layers in Parallel mode, one layer per
+/// group in Sequential mode).
+#[derive(Clone, Debug)]
+pub struct GroupProof {
+    pub p1_main: Protocol1Msg,
+    pub p1_rem: Protocol1Msg,
+    /// Claimed output evaluations, per layer in group: Z̃(pz), G̃_A(pga)
+    /// (inner layers only), G̃_W(pgw).
+    pub v_z: Vec<Fr>,
+    pub v_ga: Vec<Fr>,
+    pub v_gw: Vec<Fr>,
+    pub mm30: SumcheckProof,
+    /// (Ã^{ℓ−1}(u_zr,r30), W̃^ℓ(r30,u_zc)) per layer in group.
+    pub mm30_evals: Vec<(Fr, Fr)>,
+    pub mm33: Option<SumcheckProof>,
+    /// (G̃_Z^{ℓ+1}(u_gar,r33), W̃^{ℓ+1}(u_gac,r33)).
+    pub mm33_evals: Vec<(Fr, Fr)>,
+    pub mm34: SumcheckProof,
+    /// (G̃_Z^ℓ(r34,u_gwr), Ã^{ℓ−1}(r34,u_gwc)).
+    pub mm34_evals: Vec<(Fr, Fr)>,
+    /// Stacking sumcheck (27); absent when the group has no inner-layer
+    /// claims (e.g. depth-1 networks / the last layer's group).
+    pub stack: Option<SumcheckProof>,
+    /// Prover-supplied slot claims for the four stacking terms (length L̄
+    /// of the group); entries covered by matmul factor evals are checked
+    /// against them by the verifier.
+    pub va1: Vec<Fr>,
+    pub va2: Vec<Fr>,
+    pub vgz1: Vec<Fr>,
+    pub vgz2: Vec<Fr>,
+    /// Opened stacked-aux evaluations at ρ: (sign, Z″, G_A′, R_Z, R_GA).
+    pub aux_evals: [Fr; 5],
+    /// Batched opening IPAs, in canonical group order.
+    pub openings: Vec<IpaProof>,
+    pub validity_main: ValidityProof,
+    pub validity_rem: ValidityProof,
+}
+
+/// Full proof of one training step.
+#[derive(Clone, Debug)]
+pub struct StepProof {
+    pub mode: ProofMode,
+    pub com_w: Vec<G1Affine>,
+    pub com_gw: Vec<G1Affine>,
+    pub com_zdp: Vec<G1Affine>,
+    pub com_sign: Vec<G1Affine>,
+    pub com_rz: Vec<G1Affine>,
+    pub com_gap: Vec<G1Affine>,
+    pub com_rga: Vec<G1Affine>,
+    pub com_x: G1Affine,
+    pub com_y: G1Affine,
+    pub groups: Vec<GroupProof>,
+}
+
+impl GroupProof {
+    pub fn size_bytes(&self) -> usize {
+        let scalars = self.v_z.len()
+            + self.v_ga.len()
+            + self.v_gw.len()
+            + 2 * (self.mm30_evals.len() + self.mm33_evals.len() + self.mm34_evals.len())
+            + self.va1.len()
+            + self.va2.len()
+            + self.vgz1.len()
+            + self.vgz2.len()
+            + 5;
+        let p1 = 32 + 32 + if self.p1_main.com_sign_prime.is_some() { 32 } else { 0 };
+        let sumchecks = self.mm30.size_bytes()
+            + self.mm33.as_ref().map_or(0, |p| p.size_bytes())
+            + self.mm34.size_bytes()
+            + self.stack.as_ref().map_or(0, |p| p.size_bytes());
+        let openings: usize = self.openings.iter().map(|o| o.size_bytes()).sum();
+        scalars * 32
+            + p1
+            + sumchecks
+            + openings
+            + self.validity_main.size_bytes()
+            + self.validity_rem.size_bytes()
+    }
+}
+
+impl StepProof {
+    /// Total proof size in bytes (compressed-point accounting, as the paper
+    /// reports kB figures).
+    pub fn size_bytes(&self) -> usize {
+        let coms = self.com_w.len()
+            + self.com_gw.len()
+            + self.com_zdp.len()
+            + self.com_sign.len()
+            + self.com_rz.len()
+            + self.com_gap.len()
+            + self.com_rga.len()
+            + 2;
+        coms * 32 + self.groups.iter().map(|g| g.size_bytes()).sum::<usize>()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prover
+// ---------------------------------------------------------------------------
+
+/// Prover-side tensors of one layer group.
+struct ProverLayers<'a> {
+    wit: &'a StepWitness,
+    // field copies of all tensors, indexed by layer
+    w: Vec<gkr::Matrix>,
+    a: Vec<gkr::Matrix>, // activations A^0..A^{L-1}; A^{-1} = X handled apart
+    x: gkr::Matrix,
+    g_z: Vec<gkr::Matrix>,
+    zdp: Vec<Vec<Fr>>,
+    sign: Vec<Vec<Fr>>,
+    rz: Vec<Vec<Fr>>,
+    gap: Vec<Vec<Fr>>,
+    rga: Vec<Vec<Fr>>,
+}
+
+impl<'a> ProverLayers<'a> {
+    fn build(wit: &'a StepWitness) -> Self {
+        let cfg = &wit.cfg;
+        let (b, d) = (cfg.batch, cfg.width);
+        let depth = cfg.depth;
+        let x = gkr::Matrix::from_i64(&wit.x, b, d);
+        let mut w = Vec::new();
+        let mut a = Vec::new();
+        let mut g_z = Vec::new();
+        let mut zdp = Vec::new();
+        let mut sign = Vec::new();
+        let mut rz = Vec::new();
+        let mut gap = Vec::new();
+        let mut rga = Vec::new();
+        for (l, lw) in wit.layers.iter().enumerate() {
+            w.push(gkr::Matrix::from_i64(&lw.w, d, d));
+            g_z.push(gkr::Matrix::from_i64(&lw.g_z, b, d));
+            zdp.push(frs(&lw.z_aux.dprime));
+            sign.push(frs(&lw.z_aux.sign));
+            rz.push(frs(&lw.z_aux.rem));
+            if l + 1 < depth {
+                a.push(gkr::Matrix::from_i64(lw.a.as_ref().unwrap(), b, d));
+                gap.push(frs(lw.g_a_prime.as_ref().unwrap()));
+                rga.push(frs(&lw.g_a_aux.as_ref().unwrap().rem));
+            } else {
+                // virtual A^{L−1} = (1−B)⊙Z″ (never used in matmuls) and
+                // zero gradient-aux tensors keep the stacks uniform.
+                let va: Vec<Fr> = zdp[l]
+                    .iter()
+                    .zip(sign[l].iter())
+                    .map(|(z, s)| (Fr::ONE - *s) * *z)
+                    .collect();
+                a.push(gkr::Matrix::new(va, b, d));
+                gap.push(vec![Fr::ZERO; b * d]);
+                rga.push(vec![Fr::ZERO; b * d]);
+            }
+        }
+        Self {
+            wit,
+            w,
+            a,
+            x,
+            g_z,
+            zdp,
+            sign,
+            rz,
+            gap,
+            rga,
+        }
+    }
+
+    /// Stacked tensor over `layers` slots (padded to L̄·D with zeros).
+    fn stacked(&self, per_layer: &[Vec<Fr>], layers: &[usize], lbar: usize, d: usize) -> Vec<Fr> {
+        let mut out = vec![Fr::ZERO; lbar * d];
+        for (slot, &l) in layers.iter().enumerate() {
+            out[slot * d..slot * d + d].copy_from_slice(&per_layer[l]);
+        }
+        out
+    }
+}
+
+/// All commitments + blinds for one step (prover side).
+struct StepCommitments {
+    w: Vec<Committed>,
+    gw: Vec<Committed>,
+    zdp: Vec<Committed>,
+    sign: Vec<Committed>,
+    rz: Vec<Committed>,
+    gap: Vec<Committed>,
+    rga: Vec<Committed>,
+    x: Committed,
+    y: Committed,
+}
+
+fn commit_step(pk: &ProverKey, pl: &ProverLayers, rng: &mut Rng) -> StepCommitments {
+    let depth = pk.cfg.depth;
+    let mut w = Vec::new();
+    let mut gw = Vec::new();
+    let mut zdp = Vec::new();
+    let mut sign = Vec::new();
+    let mut rz = Vec::new();
+    let mut gap = Vec::new();
+    let mut rga = Vec::new();
+    for l in 0..depth {
+        let blk = pk.block(l);
+        w.push(commit(&pk.g_mat, pl.w[l].data.clone(), rng));
+        gw.push(commit(&pk.g_mat, frs(&pl.wit.layers[l].g_w), rng));
+        zdp.push(commit(&blk, pl.zdp[l].clone(), rng));
+        sign.push(commit(&blk, pl.sign[l].clone(), rng));
+        rz.push(commit(&blk, pl.rz[l].clone(), rng));
+        gap.push(commit(&blk, pl.gap[l].clone(), rng));
+        rga.push(commit(&blk, pl.rga[l].clone(), rng));
+    }
+    let x = commit(&pk.g_x, pl.x.data.clone(), rng);
+    // Y lives in layer L−1's aux block so that the derived commitment of
+    // G_Z^{L−1} = Z″ − 2^{Q−1}B − Y stays single-basis.
+    let y = commit(&pk.block(depth - 1), frs(&pl.wit.y), rng);
+    StepCommitments {
+        w,
+        gw,
+        zdp,
+        sign,
+        rz,
+        gap,
+        rga,
+        x,
+        y,
+    }
+}
+
+fn absorb_commitments(t: &mut Transcript, coms: &[(&[u8], Vec<G1Affine>)]) {
+    for (label, pts) in coms {
+        t.absorb_points(label, pts);
+    }
+}
+
+/// Challenge bundle of one group's matmul phase.
+struct GroupChallenges {
+    gamma: Fr,
+    u_zr: Vec<Fr>,
+    u_zc: Vec<Fr>,
+    u_gar: Vec<Fr>,
+    u_gac: Vec<Fr>,
+    u_gwr: Vec<Fr>,
+    u_gwc: Vec<Fr>,
+}
+
+fn draw_group_challenges(t: &mut Transcript, log_b: usize, log_d: usize) -> GroupChallenges {
+    GroupChallenges {
+        gamma: t.challenge_fr(b"zkdl/gamma"),
+        u_zr: t.challenge_frs(b"zkdl/u_zr", log_b),
+        u_zc: t.challenge_frs(b"zkdl/u_zc", log_d),
+        u_gar: t.challenge_frs(b"zkdl/u_gar", log_b),
+        u_gac: t.challenge_frs(b"zkdl/u_gac", log_d),
+        u_gwr: t.challenge_frs(b"zkdl/u_gwr", log_d),
+        u_gwc: t.challenge_frs(b"zkdl/u_gwc", log_d),
+    }
+}
+
+/// Derived commitment of Z^ℓ via (3): com_zdp^{2^R}·com_sign^{−2^{Q+R−1}}·com_rz.
+fn derived_com_z(cfg: &ModelConfig, zdp: &G1, sign: &G1, rz: &G1) -> G1 {
+    let two_r = Fr::from_u128(1u128 << cfg.r_bits);
+    let two_qr = Fr::from_u128(1u128 << (cfg.q_bits + cfg.r_bits - 1));
+    zdp.mul(&two_r) + sign.mul(&(-two_qr)) + *rz
+}
+
+/// Derived commitment of G_A^ℓ via (5): com_gap^{2^R}·com_rga.
+fn derived_com_ga(cfg: &ModelConfig, gap: &G1, rga: &G1) -> G1 {
+    gap.mul(&Fr::from_u128(1u128 << cfg.r_bits)) + *rga
+}
+
+/// Derived commitment of G_Z^{L−1} via (32): com_zdp·com_sign^{−2^{Q−1}}·com_y^{−1}.
+fn derived_com_gz_last(cfg: &ModelConfig, zdp: &G1, sign: &G1, y: &G1) -> G1 {
+    let two_q = Fr::from_u128(1u128 << (cfg.q_bits - 1));
+    *zdp + sign.mul(&(-two_q)) + y.neg()
+}
+
+/// Prover-side derived openings (values + blinds follow the same linear
+/// combinations as the commitments).
+fn derived_open_z(cfg: &ModelConfig, zdp: &Committed, sign: &Committed, rz: &Committed) -> (Vec<Fr>, Fr) {
+    let two_r = Fr::from_u128(1u128 << cfg.r_bits);
+    let two_qr = Fr::from_u128(1u128 << (cfg.q_bits + cfg.r_bits - 1));
+    let vals = zdp
+        .values
+        .iter()
+        .zip(sign.values.iter())
+        .zip(rz.values.iter())
+        .map(|((z, s), r)| two_r * *z - two_qr * *s + *r)
+        .collect();
+    (vals, two_r * zdp.blind - two_qr * sign.blind + rz.blind)
+}
+
+fn derived_open_ga(cfg: &ModelConfig, gap: &Committed, rga: &Committed) -> (Vec<Fr>, Fr) {
+    let two_r = Fr::from_u128(1u128 << cfg.r_bits);
+    let vals = gap
+        .values
+        .iter()
+        .zip(rga.values.iter())
+        .map(|(g, r)| two_r * *g + *r)
+        .collect();
+    (vals, two_r * gap.blind + rga.blind)
+}
+
+fn derived_open_gz_last(cfg: &ModelConfig, zdp: &Committed, sign: &Committed, y: &Committed) -> (Vec<Fr>, Fr) {
+    let two_q = Fr::from_u128(1u128 << (cfg.q_bits - 1));
+    let vals = zdp
+        .values
+        .iter()
+        .zip(sign.values.iter())
+        .zip(y.values.iter())
+        .map(|((z, s), yv)| *z - two_q * *s - *yv)
+        .collect();
+    (vals, zdp.blind - two_q * sign.blind - y.blind)
+}
+
+/// A batched opening task: claims ⟨Vᵢ, evec⟩ = vᵢ against commitments Cᵢ,
+/// all sharing one public vector; proven with one RLC'd IPA.
+struct OpeningTask {
+    evec: Vec<Fr>,
+    claims: Vec<EvalClaim>,
+}
+
+/// Verifier-side mirror: (com, claimed value) pairs + the public vector.
+struct OpeningCheck {
+    evec: Vec<Fr>,
+    claims: Vec<(G1, Fr)>,
+}
+
+/// e(p) repeated in every slot block: ⟨V, tiled⟩ = ⟨V_slot, e(p)⟩ when V is
+/// zero outside one block. This is how per-layer claims open against
+/// commitments living in different blocks of the stacked basis.
+fn tiled_eq(p: &[Fr], lbar: usize) -> Vec<Fr> {
+    let e = eq_table(p);
+    let mut out = Vec::with_capacity(lbar * e.len());
+    for _ in 0..lbar {
+        out.extend_from_slice(&e);
+    }
+    out
+}
+
+/// Layer groups for a mode.
+fn layer_groups(mode: ProofMode, depth: usize) -> Vec<Vec<usize>> {
+    match mode {
+        ProofMode::Parallel => vec![(0..depth).collect()],
+        ProofMode::Sequential => (0..depth).map(|l| vec![l]).collect(),
+    }
+}
+
+/// Validity bases for a group: main instance ties the sign column to the
+/// group's aux blocks.
+fn group_validity_bases(pk: &ProverKey, layers: &[usize]) -> (ValidityBases, ValidityBases) {
+    let cfg = &pk.cfg;
+    let d = cfg.d_size();
+    let lbar = layers.len().next_power_of_two();
+    let n = lbar * d;
+    // group-local aux basis: blocks of the group's layers, zero-padded with
+    // deterministic extra generators for padding slots
+    let mut g = Vec::with_capacity(n);
+    for (slot, &l) in layers.iter().enumerate() {
+        let _ = slot;
+        g.extend_from_slice(&pk.g_aux.g[l * d..(l + 1) * d]);
+    }
+    if g.len() < n {
+        let extra = crate::curve::derive_generators(b"zkdl/aux-pad", n - g.len());
+        g.extend(extra);
+    }
+    let ck = CommitKey {
+        g,
+        h: pk.g_aux.h,
+        label: pk.g_aux.label.clone(),
+    };
+    // label must pin the exact block layout: first layer AND group length
+    // (a depth-3 and a depth-4 parallel group share lbar=4 but differ in
+    // which slots are real blocks vs padding)
+    let tag = layers.first().copied().unwrap_or(0) as u64;
+    let cnt = layers.len() as u64;
+    let main_label = [
+        b"zkdl/validity/main/".as_ref(),
+        &tag.to_le_bytes(),
+        &cnt.to_le_bytes(),
+    ]
+    .concat();
+    let rem_label = [
+        b"zkdl/validity/rem/".as_ref(),
+        &tag.to_le_bytes(),
+        &cnt.to_le_bytes(),
+    ]
+    .concat();
+    let q = cfg.q_bits as usize;
+    let r = cfg.r_bits as usize;
+    let vb_main = ValidityBases::setup_main(&main_label, &ck, n, q);
+    let vb_rem = ValidityBases::setup_plain(&rem_label, pk.g_aux.h, n, r);
+    (vb_main, vb_rem)
+}
+
+/// Prove one training step.
+pub fn prove_step(
+    pk: &ProverKey,
+    wit: &StepWitness,
+    mode: ProofMode,
+    rng: &mut Rng,
+) -> StepProof {
+    let cfg = &pk.cfg;
+    assert_eq!(*cfg, wit.cfg, "config mismatch");
+    let depth = cfg.depth;
+    let d = cfg.d_size();
+    let log_b = cfg.batch.trailing_zeros() as usize;
+    let log_d = cfg.width.trailing_zeros() as usize;
+    let log_dd = log_b + log_d;
+
+    let pl = ProverLayers::build(wit);
+    let sc = commit_step(pk, &pl, rng);
+
+    let mut t = Transcript::new(b"zkdl/step");
+    t.absorb_u64(b"depth", depth as u64);
+    t.absorb_u64(b"width", cfg.width as u64);
+    t.absorb_u64(b"batch", cfg.batch as u64);
+    t.absorb_u64(b"mode", mode as u64);
+    let affine = |cs: &[Committed]| -> Vec<G1Affine> {
+        G1::batch_to_affine(&cs.iter().map(|c| c.com).collect::<Vec<_>>())
+    };
+    let com_w = affine(&sc.w);
+    let com_gw = affine(&sc.gw);
+    let com_zdp = affine(&sc.zdp);
+    let com_sign = affine(&sc.sign);
+    let com_rz = affine(&sc.rz);
+    let com_gap = affine(&sc.gap);
+    let com_rga = affine(&sc.rga);
+    let com_x = sc.x.com.to_affine();
+    let com_y = sc.y.com.to_affine();
+    absorb_commitments(
+        &mut t,
+        &[
+            (b"com/w", com_w.clone()),
+            (b"com/gw", com_gw.clone()),
+            (b"com/zdp", com_zdp.clone()),
+            (b"com/sign", com_sign.clone()),
+            (b"com/rz", com_rz.clone()),
+            (b"com/gap", com_gap.clone()),
+            (b"com/rga", com_rga.clone()),
+            (b"com/x", vec![com_x]),
+            (b"com/y", vec![com_y]),
+        ],
+    );
+
+    let groups = layer_groups(mode, depth);
+
+    // ---- Protocol 1 per group (bit commitments precede all randomness) ----
+    struct GroupState {
+        layers: Vec<usize>,
+        lbar: usize,
+        vb_main: ValidityBases,
+        vb_rem: ValidityBases,
+        p1_main: Protocol1Msg,
+        p1_rem: Protocol1Msg,
+        aux_main: zkrelu::ProverAux,
+        aux_rem: zkrelu::ProverAux,
+        sign_stack: Vec<Fr>,
+        zdp_stack: Vec<Fr>,
+        gap_stack: Vec<Fr>,
+        rz_stack: Vec<Fr>,
+        rga_stack: Vec<Fr>,
+        sign_blind: Fr,
+    }
+    let mut gstates: Vec<GroupState> = Vec::new();
+    for layers in &groups {
+        let lbar = layers.len().next_power_of_two();
+        let n = lbar * d;
+        let (vb_main, vb_rem) = group_validity_bases(pk, layers);
+        let zdp_stack = pl.stacked(&pl.zdp, layers, lbar, d);
+        let gap_stack = pl.stacked(&pl.gap, layers, lbar, d);
+        let sign_stack = pl.stacked(&pl.sign, layers, lbar, d);
+        let rz_stack = pl.stacked(&pl.rz, layers, lbar, d);
+        let rga_stack = pl.stacked(&pl.rga, layers, lbar, d);
+        let sign_blind: Fr = layers.iter().map(|&l| sc.sign[l].blind).sum();
+        let paired: Vec<Fr> = zdp_stack.iter().chain(gap_stack.iter()).copied().collect();
+        let (p1_main, aux_main) =
+            zkrelu::protocol1_main(&vb_main, &paired, &sign_stack, sign_blind, rng);
+        let paired_rem: Vec<Fr> = rz_stack.iter().chain(rga_stack.iter()).copied().collect();
+        let (p1_rem, aux_rem) = zkrelu::protocol1_plain(&vb_rem, &paired_rem, rng);
+        t.absorb_point(b"p1/main", &p1_main.com_b_ip);
+        if let Some(p) = &p1_main.com_sign_prime {
+            t.absorb_point(b"p1/main/sign", p);
+        }
+        t.absorb_point(b"p1/rem", &p1_rem.com_b_ip);
+        let _ = n;
+        gstates.push(GroupState {
+            layers: layers.clone(),
+            lbar,
+            vb_main,
+            vb_rem,
+            p1_main,
+            p1_rem,
+            aux_main,
+            aux_rem,
+            sign_stack,
+            zdp_stack,
+            gap_stack,
+            rz_stack,
+            rga_stack,
+            sign_blind,
+        });
+    }
+
+    // ---- Phase 1: batched matmul sumchecks per group ----
+    // Per-layer claim registry for the stacking phase: claims on A^ℓ and
+    // G_Z^ℓ with the points they were made at.
+    #[derive(Clone, Default)]
+    struct TensorClaims {
+        a1: Option<(Vec<Fr>, Fr)>,
+        a2: Option<(Vec<Fr>, Fr)>,
+        gz1: Option<(Vec<Fr>, Fr)>,
+        gz2: Option<(Vec<Fr>, Fr)>,
+    }
+    let mut claims: Vec<TensorClaims> = vec![TensorClaims::default(); depth];
+
+    struct Phase1Out {
+        ch: GroupChallenges,
+        v_z: Vec<Fr>,
+        v_ga: Vec<Fr>,
+        v_gw: Vec<Fr>,
+        mm30: SumcheckProof,
+        mm30_evals: Vec<(Fr, Fr)>,
+        mm33: Option<SumcheckProof>,
+        mm33_evals: Vec<(Fr, Fr)>,
+        mm34: SumcheckProof,
+        mm34_evals: Vec<(Fr, Fr)>,
+        r30: Vec<Fr>,
+        r33: Vec<Fr>,
+        r34: Vec<Fr>,
+    }
+    let mut phase1: Vec<Phase1Out> = Vec::new();
+
+    for gs in &gstates {
+        let ch = draw_group_challenges(&mut t, log_b, log_d);
+        // (30): claimed Z̃^ℓ(u_zr,u_zc), factors A^{ℓ−1}(u_zr,·), W^{ℓᵀ}(u_zc,·)
+        let pz: Vec<Fr> = [ch.u_zr.clone(), ch.u_zc.clone()].concat();
+        let mut v_z = Vec::new();
+        let mut terms30 = Vec::new();
+        let mut coeff = Fr::ONE;
+        for &l in &gs.layers {
+            let z_mat = gkr::Matrix::from_i64(&wit.layers[l].z, cfg.batch, cfg.width);
+            let vz = z_mat.evaluate(&pz);
+            v_z.push(vz);
+            let a_prev = if l == 0 { &pl.x } else { &pl.a[l - 1] };
+            terms30.push(Term::new(
+                coeff,
+                vec![a_prev.fix_rows(&ch.u_zr), pl.w[l].transpose().fix_rows(&ch.u_zc)],
+            ));
+            coeff *= ch.gamma;
+        }
+        t.absorb_frs(b"v_z", &v_z);
+        let out30 = sumcheck::prove(Instance::new(terms30), &mut t);
+        let mm30_evals: Vec<(Fr, Fr)> =
+            out30.factor_evals.iter().map(|f| (f[0], f[1])).collect();
+        for (e, _) in mm30_evals.iter().zip(gs.layers.iter()) {
+            let _ = e;
+        }
+        t.absorb_frs(
+            b"mm30/evals",
+            &mm30_evals.iter().flat_map(|(a, b)| [*a, *b]).collect::<Vec<_>>(),
+        );
+        let r30 = out30.point.clone();
+
+        // register A^{ℓ−1} claims (ℓ≥1) at (u_zr, r30)
+        let p_a1: Vec<Fr> = [ch.u_zr.clone(), r30.clone()].concat();
+        for (i, &l) in gs.layers.iter().enumerate() {
+            if l >= 1 {
+                claims[l - 1].a1 = Some((p_a1.clone(), mm30_evals[i].0));
+            }
+        }
+
+        // (33): inner layers ℓ ≤ L−2: G̃_A^ℓ(u_gar,u_gac),
+        // factors G_Z^{ℓ+1}(u_gar,·), W^{ℓ+1}(u_gac,·)
+        let pga: Vec<Fr> = [ch.u_gar.clone(), ch.u_gac.clone()].concat();
+        let inner: Vec<usize> = gs.layers.iter().copied().filter(|&l| l + 1 < depth).collect();
+        let mut v_ga = Vec::new();
+        let mut mm33 = None;
+        let mut mm33_evals = Vec::new();
+        let mut r33 = Vec::new();
+        if !inner.is_empty() {
+            let mut terms33 = Vec::new();
+            let mut coeff = Fr::ONE;
+            for &l in &inner {
+                let ga_mat =
+                    gkr::Matrix::from_i64(wit.layers[l].g_a.as_ref().unwrap(), cfg.batch, cfg.width);
+                v_ga.push(ga_mat.evaluate(&pga));
+                terms33.push(Term::new(
+                    coeff,
+                    vec![
+                        pl.g_z[l + 1].fix_rows(&ch.u_gar),
+                        pl.w[l + 1].fix_rows(&ch.u_gac),
+                    ],
+                ));
+                coeff *= ch.gamma;
+            }
+            t.absorb_frs(b"v_ga", &v_ga);
+            let out33 = sumcheck::prove(Instance::new(terms33), &mut t);
+            mm33_evals = out33.factor_evals.iter().map(|f| (f[0], f[1])).collect();
+            t.absorb_frs(
+                b"mm33/evals",
+                &mm33_evals.iter().flat_map(|(a, b)| [*a, *b]).collect::<Vec<_>>(),
+            );
+            r33 = out33.point.clone();
+            mm33 = Some(out33.proof);
+            // register G_Z^{ℓ+1} claims at (u_gar, r33)
+            let q1: Vec<Fr> = [ch.u_gar.clone(), r33.clone()].concat();
+            for (i, &l) in inner.iter().enumerate() {
+                claims[l + 1].gz1 = Some((q1.clone(), mm33_evals[i].0));
+            }
+        }
+
+        // (34): G̃_W^ℓ(u_gwr,u_gwc), factors G_Z^{ℓᵀ}(u_gwr,·), A^{ℓ−1ᵀ}(u_gwc,·)
+        let pgw: Vec<Fr> = [ch.u_gwr.clone(), ch.u_gwc.clone()].concat();
+        let mut v_gw = Vec::new();
+        let mut terms34 = Vec::new();
+        let mut coeff = Fr::ONE;
+        for &l in &gs.layers {
+            let gw_mat = gkr::Matrix::from_i64(&wit.layers[l].g_w, cfg.width, cfg.width);
+            v_gw.push(gw_mat.evaluate(&pgw));
+            let a_prev = if l == 0 { &pl.x } else { &pl.a[l - 1] };
+            terms34.push(Term::new(
+                coeff,
+                vec![
+                    pl.g_z[l].transpose().fix_rows(&ch.u_gwr),
+                    a_prev.transpose().fix_rows(&ch.u_gwc),
+                ],
+            ));
+            coeff *= ch.gamma;
+        }
+        t.absorb_frs(b"v_gw", &v_gw);
+        let out34 = sumcheck::prove(Instance::new(terms34), &mut t);
+        let mm34_evals: Vec<(Fr, Fr)> =
+            out34.factor_evals.iter().map(|f| (f[0], f[1])).collect();
+        t.absorb_frs(
+            b"mm34/evals",
+            &mm34_evals.iter().flat_map(|(a, b)| [*a, *b]).collect::<Vec<_>>(),
+        );
+        let r34 = out34.point.clone();
+        // register claims: G_Z^ℓ at (r34, u_gwr); A^{ℓ−1} (ℓ≥1) at (r34, u_gwc)
+        let q2: Vec<Fr> = [r34.clone(), ch.u_gwr.clone()].concat();
+        let p_a2: Vec<Fr> = [r34.clone(), ch.u_gwc.clone()].concat();
+        for (i, &l) in gs.layers.iter().enumerate() {
+            claims[l].gz2 = Some((q2.clone(), mm34_evals[i].0));
+            if l >= 1 {
+                claims[l - 1].a2 = Some((p_a2.clone(), mm34_evals[i].1));
+            }
+        }
+
+        phase1.push(Phase1Out {
+            ch,
+            v_z,
+            v_ga,
+            v_gw,
+            mm30: out30.proof,
+            mm30_evals,
+            mm33,
+            mm33_evals,
+            mm34: out34.proof,
+            mm34_evals,
+            r30,
+            r33,
+            r34,
+        });
+    }
+
+    // ---- Phase 2: stacking sumcheck (27) per group + Phase 3 openings +
+    //      Phase 4 validity ----
+    let mut group_proofs = Vec::new();
+    for (gi, gs) in gstates.iter().enumerate() {
+        let p1 = &phase1[gi];
+        let lbar = gs.lbar;
+        let log_lbar = lbar.trailing_zeros() as usize;
+        let n = lbar * d;
+
+        // Stacking terms: for each of the four claim kinds, the claims of
+        // the group's layers must share a single point (true by
+        // construction: parallel mode uses shared challenges; sequential
+        // groups have one layer).
+        // Build full slot-claim vectors (virtual slots included).
+        let one_minus_sign: Vec<Fr> =
+            gs.sign_stack.iter().map(|s| Fr::ONE - *s).collect();
+        let zdp_mle = Mle::new(gs.zdp_stack.clone());
+        let gap_mle = Mle::new(gs.gap_stack.clone());
+        let oms_mle = Mle::new(one_minus_sign);
+
+        // helper: the point of the first present claim of a kind. Only
+        // inner layers (ℓ < L−1) flow through the stack; the last layer's
+        // G_Z claims are opened against the derived commitment instead.
+        let find_point = |get: &dyn Fn(&TensorClaims) -> Option<(Vec<Fr>, Fr)>| -> Option<Vec<Fr>> {
+            gs.layers
+                .iter()
+                .filter(|&&l| l < depth - 1)
+                .filter_map(|&l| get(&claims[l]).map(|(p, _)| p))
+                .next()
+        };
+        let pa1 = find_point(&|c| c.a1.clone());
+        let pa2 = find_point(&|c| c.a2.clone());
+        let qz1 = find_point(&|c| c.gz1.clone());
+        let qz2 = find_point(&|c| c.gz2.clone());
+
+        // Prover-supplied slot claim vectors (length lbar).
+        let slot_claims = |point: &Option<Vec<Fr>>, tensor: &dyn Fn(usize) -> Vec<Fr>| -> Vec<Fr> {
+            match point {
+                None => vec![Fr::ZERO; lbar],
+                Some(p) => {
+                    let e = eq_table(p);
+                    (0..lbar)
+                        .map(|slot| {
+                            if slot < gs.layers.len() {
+                                let tv = tensor(gs.layers[slot]);
+                                tv.iter().zip(e.iter()).map(|(a, b)| *a * *b).sum()
+                            } else {
+                                Fr::ZERO
+                            }
+                        })
+                        .collect()
+                }
+            }
+        };
+        let a_tensor = |l: usize| pl.a[l].data.clone();
+        let gz_virtual = |l: usize| -> Vec<Fr> {
+            pl.gap[l]
+                .iter()
+                .zip(pl.sign[l].iter())
+                .map(|(g, s)| (Fr::ONE - *s) * *g)
+                .collect()
+        };
+        let va1 = slot_claims(&pa1, &a_tensor);
+        let va2 = slot_claims(&pa2, &a_tensor);
+        let vgz1 = slot_claims(&qz1, &gz_virtual);
+        let vgz2 = slot_claims(&qz2, &gz_virtual);
+        t.absorb_frs(b"stack/va1", &va1);
+        t.absorb_frs(b"stack/va2", &va2);
+        t.absorb_frs(b"stack/vgz1", &vgz1);
+        t.absorb_frs(b"stack/vgz2", &vgz2);
+
+        let any_term = pa1.is_some() || pa2.is_some() || qz1.is_some() || qz2.is_some();
+        let u_stack = t.challenge_frs(b"stack/u", log_lbar);
+        let gammas = t.challenge_frs(b"stack/gamma", 4);
+        let e_stack = eq_table(&u_stack);
+
+        let (stack_proof, rho) = if any_term {
+            let mut terms = Vec::new();
+            let mut add_term = |coeff: Fr, point: &Option<Vec<Fr>>, tensor: &Mle| {
+                if let Some(p) = point {
+                    let full_point: Vec<Fr> = [u_stack.clone(), p.clone()].concat();
+                    terms.push(Term::new(
+                        coeff,
+                        vec![Mle::new(eq_table(&full_point)), oms_mle.clone(), tensor.clone()],
+                    ));
+                }
+            };
+            add_term(gammas[0], &pa1, &zdp_mle);
+            add_term(gammas[1], &pa2, &zdp_mle);
+            add_term(gammas[2], &qz1, &gap_mle);
+            add_term(gammas[3], &qz2, &gap_mle);
+            let out = sumcheck::prove(Instance::new(terms), &mut t);
+            (Some(out.proof), out.point)
+        } else {
+            (None, t.challenge_frs(b"stack/rho", log_lbar + log_dd))
+        };
+        let _ = e_stack;
+
+        // opened stacked-aux evaluations at ρ
+        let sign_mle = Mle::new(gs.sign_stack.clone());
+        let v_sign = sign_mle.evaluate(&rho);
+        let v_zdp = zdp_mle.evaluate(&rho);
+        let v_gap = gap_mle.evaluate(&rho);
+        let v_rz = Mle::new(gs.rz_stack.clone()).evaluate(&rho);
+        let v_rga = Mle::new(gs.rga_stack.clone()).evaluate(&rho);
+        let aux_evals = [v_sign, v_zdp, v_gap, v_rz, v_rga];
+        t.absorb_frs(b"aux/evals", &aux_evals);
+
+        // ---- Phase 3: batched openings ----
+        // group-local commitment key (blocks of this group's layers)
+        let mut gk_g = Vec::with_capacity(n);
+        for &l in &gs.layers {
+            gk_g.extend_from_slice(&pk.g_aux.g[l * d..(l + 1) * d]);
+        }
+        if gk_g.len() < n {
+            gk_g.extend(crate::curve::derive_generators(b"zkdl/aux-pad", n - gk_g.len()));
+        }
+        let gk = CommitKey {
+            g: gk_g,
+            h: pk.g_aux.h,
+            label: pk.g_aux.label.clone(),
+        };
+
+        let mut tasks: Vec<(CommitKey, OpeningTask)> = Vec::new();
+
+        // OG-A: stacked aux at ρ (5 claims, basis = group aux key)
+        {
+            let stack_com = |cs: &[Committed]| -> (G1, Fr, Vec<Fr>) {
+                let com: G1 = gs.layers.iter().map(|&l| cs[l].com).sum();
+                let blind: Fr = gs.layers.iter().map(|&l| cs[l].blind).sum();
+                let vals = pl.stacked(
+                    &cs.iter().map(|c| c.values.clone()).collect::<Vec<_>>(),
+                    &gs.layers,
+                    lbar,
+                    d,
+                );
+                (com, blind, vals)
+            };
+            let mk_claim = |cs: &[Committed], v: Fr| -> EvalClaim {
+                let (com, blind, values) = stack_com(cs);
+                EvalClaim {
+                    com,
+                    values,
+                    blind,
+                    v,
+                }
+            };
+            tasks.push((
+                gk.clone(),
+                OpeningTask {
+                    evec: eq_table(&rho),
+                    claims: vec![
+                        mk_claim(&sc.sign, v_sign),
+                        mk_claim(&sc.zdp, v_zdp),
+                        mk_claim(&sc.gap, v_gap),
+                        mk_claim(&sc.rz, v_rz),
+                        mk_claim(&sc.rga, v_rga),
+                    ],
+                },
+            ));
+        }
+
+        // OG-Z: derived Z commitments at pz (tiled-RLC over the group)
+        {
+            let pz: Vec<Fr> = [p1.ch.u_zr.clone(), p1.ch.u_zc.clone()].concat();
+            let claims_z: Vec<EvalClaim> = gs
+                .layers
+                .iter()
+                .zip(p1.v_z.iter())
+                .map(|(&l, &v)| {
+                    let (values, blind) = derived_open_z(cfg, &sc.zdp[l], &sc.sign[l], &sc.rz[l]);
+                    let com = derived_com_z(cfg, &sc.zdp[l].com, &sc.sign[l].com, &sc.rz[l].com);
+                    EvalClaim {
+                        com,
+                        values,
+                        blind,
+                        v,
+                    }
+                })
+                .collect();
+            // per-layer commitments live in different blocks → tile the point
+            tasks.push((
+                gk.clone(),
+                OpeningTask {
+                    evec: tiled_eq(&pz, lbar),
+                    claims: tile_claims(claims_z, lbar, d),
+                },
+            ));
+        }
+
+        // OG-GA: derived G_A commitments at pga (inner layers)
+        {
+            let inner: Vec<usize> =
+                gs.layers.iter().copied().filter(|&l| l + 1 < depth).collect();
+            if !inner.is_empty() {
+                let pga: Vec<Fr> = [p1.ch.u_gar.clone(), p1.ch.u_gac.clone()].concat();
+                let claims_ga: Vec<EvalClaim> = inner
+                    .iter()
+                    .zip(p1.v_ga.iter())
+                    .map(|(&l, &v)| {
+                        let (values, blind) = derived_open_ga(cfg, &sc.gap[l], &sc.rga[l]);
+                        let com = derived_com_ga(cfg, &sc.gap[l].com, &sc.rga[l].com);
+                        EvalClaim {
+                            com,
+                            values,
+                            blind,
+                            v,
+                        }
+                    })
+                    .collect();
+                let slots: Vec<usize> = inner
+                    .iter()
+                    .map(|l| gs.layers.iter().position(|x| x == l).unwrap())
+                    .collect();
+                tasks.push((
+                    gk.clone(),
+                    OpeningTask {
+                        evec: tiled_eq(&pga, lbar),
+                        claims: tile_claims_at(claims_ga, &slots, lbar, d),
+                    },
+                ));
+            }
+        }
+
+        // OG-GW: com_gw at pgw (same basis — plain RLC batch)
+        {
+            let pgw: Vec<Fr> = [p1.ch.u_gwr.clone(), p1.ch.u_gwc.clone()].concat();
+            let claims_gw: Vec<EvalClaim> = gs
+                .layers
+                .iter()
+                .zip(p1.v_gw.iter())
+                .map(|(&l, &v)| EvalClaim {
+                    com: sc.gw[l].com,
+                    values: sc.gw[l].values.clone(),
+                    blind: sc.gw[l].blind,
+                    v,
+                })
+                .collect();
+            tasks.push((
+                pk.g_mat.clone(),
+                OpeningTask {
+                    evec: eq_table(&pgw),
+                    claims: claims_gw,
+                },
+            ));
+        }
+
+        // OG-W30: com_w at (r30, u_zc)
+        {
+            let p: Vec<Fr> = [p1.r30.clone(), p1.ch.u_zc.clone()].concat();
+            let claims_w: Vec<EvalClaim> = gs
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| EvalClaim {
+                    com: sc.w[l].com,
+                    values: sc.w[l].values.clone(),
+                    blind: sc.w[l].blind,
+                    v: p1.mm30_evals[i].1,
+                })
+                .collect();
+            tasks.push((
+                pk.g_mat.clone(),
+                OpeningTask {
+                    evec: eq_table(&p),
+                    claims: claims_w,
+                },
+            ));
+        }
+
+        // OG-W33: com_w^{ℓ+1} at (u_gac, r33)
+        {
+            let inner: Vec<usize> =
+                gs.layers.iter().copied().filter(|&l| l + 1 < depth).collect();
+            if !inner.is_empty() {
+                let p: Vec<Fr> = [p1.ch.u_gac.clone(), p1.r33.clone()].concat();
+                let claims_w: Vec<EvalClaim> = inner
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &l)| EvalClaim {
+                        com: sc.w[l + 1].com,
+                        values: sc.w[l + 1].values.clone(),
+                        blind: sc.w[l + 1].blind,
+                        v: p1.mm33_evals[i].1,
+                    })
+                    .collect();
+                tasks.push((
+                    pk.g_mat.clone(),
+                    OpeningTask {
+                        evec: eq_table(&p),
+                        claims: claims_w,
+                    },
+                ));
+            }
+        }
+
+        // OG-X: com_x claims from layer 0's (30) and (34)
+        if gs.layers.contains(&0) {
+            let i0 = gs.layers.iter().position(|&l| l == 0).unwrap();
+            let p30: Vec<Fr> = [p1.ch.u_zr.clone(), p1.r30.clone()].concat();
+            tasks.push((
+                pk.g_x.clone(),
+                OpeningTask {
+                    evec: eq_table(&p30),
+                    claims: vec![EvalClaim {
+                        com: sc.x.com,
+                        values: sc.x.values.clone(),
+                        blind: sc.x.blind,
+                        v: p1.mm30_evals[i0].0,
+                    }],
+                },
+            ));
+            let p34: Vec<Fr> = [p1.r34.clone(), p1.ch.u_gwc.clone()].concat();
+            tasks.push((
+                pk.g_x.clone(),
+                OpeningTask {
+                    evec: eq_table(&p34),
+                    claims: vec![EvalClaim {
+                        com: sc.x.com,
+                        values: sc.x.values.clone(),
+                        blind: sc.x.blind,
+                        v: p1.mm34_evals[i0].1,
+                    }],
+                },
+            ));
+        }
+
+        // OG-GZlast: derived G_Z^{L−1} claims (from mm34 of layer L−1, and
+        // from mm33 whose inner layer is L−2)
+        {
+            let last = depth - 1;
+            let last_ck = pk.block(last);
+            let (gz_vals, gz_blind) =
+                derived_open_gz_last(cfg, &sc.zdp[last], &sc.sign[last], &sc.y);
+            let gz_com =
+                derived_com_gz_last(cfg, &sc.zdp[last].com, &sc.sign[last].com, &sc.y.com);
+            if let Some(i) = gs.layers.iter().position(|&l| l == last) {
+                let p: Vec<Fr> = [p1.r34.clone(), p1.ch.u_gwr.clone()].concat();
+                tasks.push((
+                    last_ck.clone(),
+                    OpeningTask {
+                        evec: eq_table(&p),
+                        claims: vec![EvalClaim {
+                            com: gz_com,
+                            values: gz_vals.clone(),
+                            blind: gz_blind,
+                            v: p1.mm34_evals[i].0,
+                        }],
+                    },
+                ));
+            }
+            let inner: Vec<usize> =
+                gs.layers.iter().copied().filter(|&l| l + 1 < depth).collect();
+            if let Some(j) = inner.iter().position(|&l| l + 1 == last) {
+                let p: Vec<Fr> = [p1.ch.u_gar.clone(), p1.r33.clone()].concat();
+                tasks.push((
+                    last_ck,
+                    OpeningTask {
+                        evec: eq_table(&p),
+                        claims: vec![EvalClaim {
+                            com: gz_com,
+                            values: gz_vals,
+                            blind: gz_blind,
+                            v: p1.mm33_evals[j].0,
+                        }],
+                    },
+                ));
+            }
+        }
+
+        let mut openings = Vec::new();
+        for (ck, task) in &tasks {
+            let (_, _, proof) = ipa::batch_prove_eval(ck, &task.claims, &task.evec, &mut t, rng);
+            openings.push(proof);
+        }
+
+        // ---- Phase 4: validity ----
+        let u_dd = t.challenge_fr(b"zkdl/u_dd");
+        let mut vpoint = vec![u_dd];
+        vpoint.extend_from_slice(&rho);
+        let e_row = eq_table(&vpoint);
+        let v = (Fr::ONE - u_dd) * v_zdp + u_dd * v_gap;
+        let validity_main = zkrelu::prove_validity(
+            &gs.vb_main,
+            &gs.aux_main,
+            &e_row,
+            u_dd,
+            v,
+            v_sign,
+            &mut t,
+            rng,
+        );
+        let u_dd_r = t.challenge_fr(b"zkdl/u_dd_rem");
+        let mut vpoint_r = vec![u_dd_r];
+        vpoint_r.extend_from_slice(&rho);
+        let e_row_r = eq_table(&vpoint_r);
+        let v_rem = (Fr::ONE - u_dd_r) * v_rz + u_dd_r * v_rga;
+        let validity_rem = zkrelu::prove_validity(
+            &gs.vb_rem,
+            &gs.aux_rem,
+            &e_row_r,
+            u_dd_r,
+            v_rem,
+            Fr::ZERO,
+            &mut t,
+            rng,
+        );
+
+        group_proofs.push(GroupProof {
+            p1_main: gs.p1_main.clone(),
+            p1_rem: gs.p1_rem.clone(),
+            v_z: p1.v_z.clone(),
+            v_ga: p1.v_ga.clone(),
+            v_gw: p1.v_gw.clone(),
+            mm30: p1.mm30.clone(),
+            mm30_evals: p1.mm30_evals.clone(),
+            mm33: p1.mm33.clone(),
+            mm33_evals: p1.mm33_evals.clone(),
+            mm34: p1.mm34.clone(),
+            mm34_evals: p1.mm34_evals.clone(),
+            stack: stack_proof,
+            va1,
+            va2,
+            vgz1,
+            vgz2,
+            aux_evals,
+            openings,
+            validity_main,
+            validity_rem,
+        });
+        let _ = gs.sign_blind;
+    }
+
+    StepProof {
+        mode,
+        com_w,
+        com_gw,
+        com_zdp,
+        com_sign,
+        com_rz,
+        com_gap,
+        com_rga,
+        com_x,
+        com_y,
+        groups: group_proofs,
+    }
+}
+
+/// Lay per-layer claims out over the stacked basis: claim i's value vector
+/// occupies slot i's block; the opening point is (0…0, point) so the tiled
+/// eq-table weights exactly one block per claim.
+fn tile_claims(claims: Vec<EvalClaim>, lbar: usize, d: usize) -> Vec<EvalClaim> {
+    let slots: Vec<usize> = (0..claims.len()).collect();
+    tile_claims_at(claims, &slots, lbar, d)
+}
+
+fn tile_claims_at(claims: Vec<EvalClaim>, slots: &[usize], lbar: usize, d: usize) -> Vec<EvalClaim> {
+    claims
+        .into_iter()
+        .zip(slots.iter())
+        .map(|(c, &slot)| {
+            let mut values = vec![Fr::ZERO; lbar * d];
+            values[slot * d..slot * d + d].copy_from_slice(&c.values);
+            // The commitment lives in the slot's block of the stacked
+            // basis; pairing the block-embedded vector with the *tiled*
+            // public vector (e(p) in every block) leaves the inner product
+            // ⟨V, e_tiled⟩ = ⟨values, e(p)⟩ unchanged.
+            EvalClaim {
+                com: c.com,
+                values,
+                blind: c.blind,
+                v: c.v,
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Verifier
+// ---------------------------------------------------------------------------
+
+/// Verify a [`StepProof`]. `pk` provides the public bases (no secrets).
+pub fn verify_step(pk: &ProverKey, proof: &StepProof) -> Result<()> {
+    let cfg = &pk.cfg;
+    let depth = cfg.depth;
+    let d = cfg.d_size();
+    let log_b = cfg.batch.trailing_zeros() as usize;
+    let log_d = cfg.width.trailing_zeros() as usize;
+    let log_dd = log_b + log_d;
+
+    ensure!(proof.com_w.len() == depth, "wrong commitment count");
+
+    let mut t = Transcript::new(b"zkdl/step");
+    t.absorb_u64(b"depth", depth as u64);
+    t.absorb_u64(b"width", cfg.width as u64);
+    t.absorb_u64(b"batch", cfg.batch as u64);
+    t.absorb_u64(b"mode", proof.mode as u64);
+    absorb_commitments(
+        &mut t,
+        &[
+            (b"com/w", proof.com_w.clone()),
+            (b"com/gw", proof.com_gw.clone()),
+            (b"com/zdp", proof.com_zdp.clone()),
+            (b"com/sign", proof.com_sign.clone()),
+            (b"com/rz", proof.com_rz.clone()),
+            (b"com/gap", proof.com_gap.clone()),
+            (b"com/rga", proof.com_rga.clone()),
+            (b"com/x", vec![proof.com_x]),
+            (b"com/y", vec![proof.com_y]),
+        ],
+    );
+
+    let groups = layer_groups(proof.mode, depth);
+    ensure!(proof.groups.len() == groups.len(), "wrong group count");
+
+    // Protocol 1 absorption + validity bases
+    let mut vbases = Vec::new();
+    for (layers, gp) in groups.iter().zip(proof.groups.iter()) {
+        let (vb_main, vb_rem) = group_validity_bases(pk, layers);
+        t.absorb_point(b"p1/main", &gp.p1_main.com_b_ip);
+        if let Some(p) = &gp.p1_main.com_sign_prime {
+            t.absorb_point(b"p1/main/sign", p);
+        } else {
+            bail!("main validity instance must carry com_sign_prime");
+        }
+        t.absorb_point(b"p1/rem", &gp.p1_rem.com_b_ip);
+        vbases.push((vb_main, vb_rem));
+    }
+
+    // Phase 1 verification
+    struct VClaims {
+        a1: Option<(Vec<Fr>, Fr)>,
+        a2: Option<(Vec<Fr>, Fr)>,
+        gz1: Option<(Vec<Fr>, Fr)>,
+        gz2: Option<(Vec<Fr>, Fr)>,
+    }
+    let mut claims: Vec<VClaims> = (0..depth)
+        .map(|_| VClaims {
+            a1: None,
+            a2: None,
+            gz1: None,
+            gz2: None,
+        })
+        .collect();
+    struct VPhase1 {
+        ch: GroupChallenges,
+        r30: Vec<Fr>,
+        r33: Vec<Fr>,
+        r34: Vec<Fr>,
+    }
+    let mut vphase1 = Vec::new();
+
+    for (layers, gp) in groups.iter().zip(proof.groups.iter()) {
+        let ch = draw_group_challenges(&mut t, log_b, log_d);
+        ensure!(gp.v_z.len() == layers.len(), "v_z length");
+        ensure!(gp.mm30_evals.len() == layers.len(), "mm30 evals length");
+        t.absorb_frs(b"v_z", &gp.v_z);
+        // claimed sum = Σ γ^i v_z[i]
+        let mut claimed = Fr::ZERO;
+        let mut coeff = Fr::ONE;
+        for v in &gp.v_z {
+            claimed += coeff * *v;
+            coeff *= ch.gamma;
+        }
+        let out30 = sumcheck::verify(claimed, &gp.mm30, &mut t).context("mm30")?;
+        // final claim = Σ γ^i·evalA_i·evalW_i
+        let mut expect = Fr::ZERO;
+        let mut coeff = Fr::ONE;
+        for (ea, ew) in &gp.mm30_evals {
+            expect += coeff * *ea * *ew;
+            coeff *= ch.gamma;
+        }
+        ensure!(expect == out30.final_claim, "mm30 factor evals mismatch");
+        t.absorb_frs(
+            b"mm30/evals",
+            &gp.mm30_evals.iter().flat_map(|(a, b)| [*a, *b]).collect::<Vec<_>>(),
+        );
+        let r30 = out30.point;
+        let p_a1: Vec<Fr> = [ch.u_zr.clone(), r30.clone()].concat();
+        for (i, &l) in layers.iter().enumerate() {
+            if l >= 1 {
+                claims[l - 1].a1 = Some((p_a1.clone(), gp.mm30_evals[i].0));
+            }
+        }
+
+        let inner: Vec<usize> = layers.iter().copied().filter(|&l| l + 1 < depth).collect();
+        let mut r33 = Vec::new();
+        if !inner.is_empty() {
+            ensure!(gp.v_ga.len() == inner.len(), "v_ga length");
+            ensure!(gp.mm33_evals.len() == inner.len(), "mm33 evals length");
+            t.absorb_frs(b"v_ga", &gp.v_ga);
+            let mut claimed = Fr::ZERO;
+            let mut coeff = Fr::ONE;
+            for v in &gp.v_ga {
+                claimed += coeff * *v;
+                coeff *= ch.gamma;
+            }
+            let sc33 = gp.mm33.as_ref().context("missing mm33")?;
+            let out33 = sumcheck::verify(claimed, sc33, &mut t).context("mm33")?;
+            let mut expect = Fr::ZERO;
+            let mut coeff = Fr::ONE;
+            for (ea, ew) in &gp.mm33_evals {
+                expect += coeff * *ea * *ew;
+                coeff *= ch.gamma;
+            }
+            ensure!(expect == out33.final_claim, "mm33 factor evals mismatch");
+            t.absorb_frs(
+                b"mm33/evals",
+                &gp.mm33_evals.iter().flat_map(|(a, b)| [*a, *b]).collect::<Vec<_>>(),
+            );
+            r33 = out33.point;
+            let q1: Vec<Fr> = [ch.u_gar.clone(), r33.clone()].concat();
+            for (i, &l) in inner.iter().enumerate() {
+                claims[l + 1].gz1 = Some((q1.clone(), gp.mm33_evals[i].0));
+            }
+        } else {
+            ensure!(gp.mm33.is_none(), "unexpected mm33");
+        }
+
+        ensure!(gp.v_gw.len() == layers.len(), "v_gw length");
+        t.absorb_frs(b"v_gw", &gp.v_gw);
+        let mut claimed = Fr::ZERO;
+        let mut coeff = Fr::ONE;
+        for v in &gp.v_gw {
+            claimed += coeff * *v;
+            coeff *= ch.gamma;
+        }
+        let out34 = sumcheck::verify(claimed, &gp.mm34, &mut t).context("mm34")?;
+        let mut expect = Fr::ZERO;
+        let mut coeff = Fr::ONE;
+        for (ea, eb) in &gp.mm34_evals {
+            expect += coeff * *ea * *eb;
+            coeff *= ch.gamma;
+        }
+        ensure!(expect == out34.final_claim, "mm34 factor evals mismatch");
+        t.absorb_frs(
+            b"mm34/evals",
+            &gp.mm34_evals.iter().flat_map(|(a, b)| [*a, *b]).collect::<Vec<_>>(),
+        );
+        let r34 = out34.point;
+        let q2: Vec<Fr> = [r34.clone(), ch.u_gwr.clone()].concat();
+        let p_a2: Vec<Fr> = [r34.clone(), ch.u_gwc.clone()].concat();
+        for (i, &l) in layers.iter().enumerate() {
+            claims[l].gz2 = Some((q2.clone(), gp.mm34_evals[i].0));
+            if l >= 1 {
+                claims[l - 1].a2 = Some((p_a2.clone(), gp.mm34_evals[i].1));
+            }
+        }
+        vphase1.push(VPhase1 { ch, r30, r33, r34 });
+    }
+
+    // Phases 2–4 per group
+    for (gi, (layers, gp)) in groups.iter().zip(proof.groups.iter()).enumerate() {
+        let p1 = &vphase1[gi];
+        let lbar = layers.len().next_power_of_two();
+        let log_lbar = lbar.trailing_zeros() as usize;
+
+        ensure!(gp.va1.len() == lbar && gp.va2.len() == lbar, "slot claims");
+        ensure!(gp.vgz1.len() == lbar && gp.vgz2.len() == lbar, "slot claims");
+        // slot claims covered by matmul factor evals must match
+        for (slot, &l) in layers.iter().enumerate() {
+            if let Some((_, v)) = &claims[l].a1 {
+                if l < depth - 1 {
+                    ensure!(gp.va1[slot] == *v, "va1 slot {slot} mismatch");
+                }
+            }
+            if let Some((_, v)) = &claims[l].a2 {
+                if l < depth - 1 {
+                    ensure!(gp.va2[slot] == *v, "va2 slot {slot} mismatch");
+                }
+            }
+            if let Some((_, v)) = &claims[l].gz1 {
+                if l < depth - 1 {
+                    ensure!(gp.vgz1[slot] == *v, "vgz1 slot {slot} mismatch");
+                }
+            }
+            if let Some((_, v)) = &claims[l].gz2 {
+                if l < depth - 1 {
+                    ensure!(gp.vgz2[slot] == *v, "vgz2 slot {slot} mismatch");
+                }
+            }
+        }
+        for slot in layers.len()..lbar {
+            ensure!(
+                gp.va1[slot].is_zero()
+                    && gp.va2[slot].is_zero()
+                    && gp.vgz1[slot].is_zero()
+                    && gp.vgz2[slot].is_zero(),
+                "padding slot claims must be zero"
+            );
+        }
+        t.absorb_frs(b"stack/va1", &gp.va1);
+        t.absorb_frs(b"stack/va2", &gp.va2);
+        t.absorb_frs(b"stack/vgz1", &gp.vgz1);
+        t.absorb_frs(b"stack/vgz2", &gp.vgz2);
+
+        // reconstruct the four stack points
+        let pick = |get: &dyn Fn(&VClaims) -> Option<(Vec<Fr>, Fr)>| -> Option<Vec<Fr>> {
+            layers
+                .iter()
+                .filter(|&&l| l < depth - 1)
+                .filter_map(|&l| get(&claims[l]).map(|(p, _)| p))
+                .next()
+        };
+        // A-claims on layer l<depth−1 tensors; note claim registry indexes
+        // the *owning* layer
+        let pa1 = pick(&|c| c.a1.clone());
+        let pa2 = pick(&|c| c.a2.clone());
+        let qz1 = pick(&|c| c.gz1.clone());
+        let qz2 = pick(&|c| c.gz2.clone());
+
+        let any_term = pa1.is_some() || pa2.is_some() || qz1.is_some() || qz2.is_some();
+        let u_stack = t.challenge_frs(b"stack/u", log_lbar);
+        let gammas = t.challenge_frs(b"stack/gamma", 4);
+        let e_stack = eq_table(&u_stack);
+
+        let rho = if any_term {
+            // claimed sum = Σ_t γ_t Σ_s β(u_stack,s)·v_t[s]
+            let lhs = |point: &Option<Vec<Fr>>, vs: &[Fr]| -> Fr {
+                if point.is_none() {
+                    return Fr::ZERO;
+                }
+                vs.iter().zip(e_stack.iter()).map(|(v, e)| *v * *e).sum()
+            };
+            let claimed = gammas[0] * lhs(&pa1, &gp.va1)
+                + gammas[1] * lhs(&pa2, &gp.va2)
+                + gammas[2] * lhs(&qz1, &gp.vgz1)
+                + gammas[3] * lhs(&qz2, &gp.vgz2);
+            let stack = gp.stack.as_ref().context("missing stack proof")?;
+            let out = sumcheck::verify(claimed, stack, &mut t).context("stack")?;
+            // final check uses the opened aux evals below
+            let [v_sign, v_zdp, v_gap, _, _] = gp.aux_evals;
+            let oms = Fr::ONE - v_sign;
+            let term = |point: &Option<Vec<Fr>>, tensor_eval: Fr, gamma: Fr| -> Fr {
+                match point {
+                    None => Fr::ZERO,
+                    Some(p) => {
+                        let full: Vec<Fr> = [u_stack.clone(), p.clone()].concat();
+                        gamma * crate::poly::eq_eval(&full, &out.point) * oms * tensor_eval
+                    }
+                }
+            };
+            let expect = term(&pa1, v_zdp, gammas[0])
+                + term(&pa2, v_zdp, gammas[1])
+                + term(&qz1, v_gap, gammas[2])
+                + term(&qz2, v_gap, gammas[3]);
+            ensure!(expect == out.final_claim, "stack final claim mismatch");
+            out.point
+        } else {
+            ensure!(gp.stack.is_none(), "unexpected stack proof");
+            t.challenge_frs(b"stack/rho", log_lbar + log_dd)
+        };
+        t.absorb_frs(b"aux/evals", &gp.aux_evals);
+        let [v_sign, v_zdp, v_gap, v_rz, v_rga] = gp.aux_evals;
+
+        // ---- Phase 3: opening checks (must mirror prover's task order) ----
+        let mut gk_g = Vec::with_capacity(lbar * d);
+        for &l in layers {
+            gk_g.extend_from_slice(&pk.g_aux.g[l * d..(l + 1) * d]);
+        }
+        if gk_g.len() < lbar * d {
+            gk_g.extend(crate::curve::derive_generators(
+                b"zkdl/aux-pad",
+                lbar * d - gk_g.len(),
+            ));
+        }
+        let gk = CommitKey {
+            g: gk_g,
+            h: pk.g_aux.h,
+            label: pk.g_aux.label.clone(),
+        };
+
+        let stack_com = |cs: &[G1Affine]| -> G1 {
+            layers.iter().map(|&l| cs[l].to_projective()).sum()
+        };
+        let mut checks: Vec<(CommitKey, OpeningCheck)> = Vec::new();
+        checks.push((
+            gk.clone(),
+            OpeningCheck {
+                evec: eq_table(&rho),
+                claims: vec![
+                    (stack_com(&proof.com_sign), v_sign),
+                    (stack_com(&proof.com_zdp), v_zdp),
+                    (stack_com(&proof.com_gap), v_gap),
+                    (stack_com(&proof.com_rz), v_rz),
+                    (stack_com(&proof.com_rga), v_rga),
+                ],
+            },
+        ));
+        {
+            let pz: Vec<Fr> = [p1.ch.u_zr.clone(), p1.ch.u_zc.clone()].concat();
+            let claims_z: Vec<(G1, Fr)> = layers
+                .iter()
+                .zip(gp.v_z.iter())
+                .map(|(&l, &v)| {
+                    (
+                        derived_com_z(
+                            cfg,
+                            &proof.com_zdp[l].to_projective(),
+                            &proof.com_sign[l].to_projective(),
+                            &proof.com_rz[l].to_projective(),
+                        ),
+                        v,
+                    )
+                })
+                .collect();
+            checks.push((
+                gk.clone(),
+                OpeningCheck {
+                    evec: tiled_eq(&pz, lbar),
+                    claims: claims_z,
+                },
+            ));
+        }
+        {
+            let inner: Vec<usize> = layers.iter().copied().filter(|&l| l + 1 < depth).collect();
+            if !inner.is_empty() {
+                let pga: Vec<Fr> = [p1.ch.u_gar.clone(), p1.ch.u_gac.clone()].concat();
+                let claims_ga: Vec<(G1, Fr)> = inner
+                    .iter()
+                    .zip(gp.v_ga.iter())
+                    .map(|(&l, &v)| {
+                        (
+                            derived_com_ga(
+                                cfg,
+                                &proof.com_gap[l].to_projective(),
+                                &proof.com_rga[l].to_projective(),
+                            ),
+                            v,
+                        )
+                    })
+                    .collect();
+                checks.push((
+                    gk.clone(),
+                    OpeningCheck {
+                        evec: tiled_eq(&pga, lbar),
+                        claims: claims_ga,
+                    },
+                ));
+            }
+        }
+        {
+            let pgw: Vec<Fr> = [p1.ch.u_gwr.clone(), p1.ch.u_gwc.clone()].concat();
+            let claims_gw: Vec<(G1, Fr)> = layers
+                .iter()
+                .zip(gp.v_gw.iter())
+                .map(|(&l, &v)| (proof.com_gw[l].to_projective(), v))
+                .collect();
+            checks.push((
+                pk.g_mat.clone(),
+                OpeningCheck {
+                    evec: eq_table(&pgw),
+                    claims: claims_gw,
+                },
+            ));
+        }
+        {
+            let p: Vec<Fr> = [p1.r30.clone(), p1.ch.u_zc.clone()].concat();
+            let claims_w: Vec<(G1, Fr)> = layers
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| (proof.com_w[l].to_projective(), gp.mm30_evals[i].1))
+                .collect();
+            checks.push((
+                pk.g_mat.clone(),
+                OpeningCheck {
+                    evec: eq_table(&p),
+                    claims: claims_w,
+                },
+            ));
+        }
+        {
+            let inner: Vec<usize> = layers.iter().copied().filter(|&l| l + 1 < depth).collect();
+            if !inner.is_empty() {
+                let p: Vec<Fr> = [p1.ch.u_gac.clone(), p1.r33.clone()].concat();
+                let claims_w: Vec<(G1, Fr)> = inner
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &l)| (proof.com_w[l + 1].to_projective(), gp.mm33_evals[i].1))
+                    .collect();
+                checks.push((
+                    pk.g_mat.clone(),
+                    OpeningCheck {
+                        evec: eq_table(&p),
+                        claims: claims_w,
+                    },
+                ));
+            }
+        }
+        if layers.contains(&0) {
+            let i0 = layers.iter().position(|&l| l == 0).unwrap();
+            let p30: Vec<Fr> = [p1.ch.u_zr.clone(), p1.r30.clone()].concat();
+            checks.push((
+                pk.g_x.clone(),
+                OpeningCheck {
+                    evec: eq_table(&p30),
+                    claims: vec![(proof.com_x.to_projective(), gp.mm30_evals[i0].0)],
+                },
+            ));
+            let p34: Vec<Fr> = [p1.r34.clone(), p1.ch.u_gwc.clone()].concat();
+            checks.push((
+                pk.g_x.clone(),
+                OpeningCheck {
+                    evec: eq_table(&p34),
+                    claims: vec![(proof.com_x.to_projective(), gp.mm34_evals[i0].1)],
+                },
+            ));
+        }
+        {
+            let last = depth - 1;
+            let last_ck = pk.block(last);
+            let gz_com = derived_com_gz_last(
+                cfg,
+                &proof.com_zdp[last].to_projective(),
+                &proof.com_sign[last].to_projective(),
+                &proof.com_y.to_projective(),
+            );
+            if let Some(i) = layers.iter().position(|&l| l == last) {
+                let p: Vec<Fr> = [p1.r34.clone(), p1.ch.u_gwr.clone()].concat();
+                checks.push((
+                    last_ck.clone(),
+                    OpeningCheck {
+                        evec: eq_table(&p),
+                        claims: vec![(gz_com, gp.mm34_evals[i].0)],
+                    },
+                ));
+            }
+            let inner: Vec<usize> = layers.iter().copied().filter(|&l| l + 1 < depth).collect();
+            if let Some(j) = inner.iter().position(|&l| l + 1 == last) {
+                let p: Vec<Fr> = [p1.ch.u_gar.clone(), p1.r33.clone()].concat();
+                checks.push((
+                    last_ck,
+                    OpeningCheck {
+                        evec: eq_table(&p),
+                        claims: vec![(gz_com, gp.mm33_evals[j].0)],
+                    },
+                ));
+            }
+        }
+
+        ensure!(
+            gp.openings.len() == checks.len(),
+            "opening count mismatch: {} vs {}",
+            gp.openings.len(),
+            checks.len()
+        );
+        for ((ck, check), opening) in checks.iter().zip(gp.openings.iter()) {
+            ipa::batch_verify_eval(ck, &check.claims, &check.evec, opening, &mut t)
+                .context("batched opening")?;
+        }
+
+        // ---- Phase 4: validity ----
+        let (vb_main, vb_rem) = &vbases[gi];
+        let u_dd = t.challenge_fr(b"zkdl/u_dd");
+        let mut vpoint = vec![u_dd];
+        vpoint.extend_from_slice(&rho);
+        let e_row = eq_table(&vpoint);
+        let v = (Fr::ONE - u_dd) * v_zdp + u_dd * v_gap;
+        let com_sign_stacked = stack_com(&proof.com_sign);
+        zkrelu::verify_validity(
+            vb_main,
+            &gp.p1_main,
+            Some(&com_sign_stacked),
+            &e_row,
+            u_dd,
+            v,
+            v_sign,
+            &gp.validity_main,
+            &mut t,
+        )
+        .context("main validity")?;
+        let u_dd_r = t.challenge_fr(b"zkdl/u_dd_rem");
+        let mut vpoint_r = vec![u_dd_r];
+        vpoint_r.extend_from_slice(&rho);
+        let e_row_r = eq_table(&vpoint_r);
+        let v_rem = (Fr::ONE - u_dd_r) * v_rz + u_dd_r * v_rga;
+        zkrelu::verify_validity(
+            vb_rem,
+            &gp.p1_rem,
+            None,
+            &e_row_r,
+            u_dd_r,
+            v_rem,
+            Fr::ZERO,
+            &gp.validity_rem,
+            &mut t,
+        )
+        .context("remainder validity")?;
+    }
+
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::model::Weights;
+    use crate::witness::native::compute_witness;
+
+    fn setup(depth: usize, width: usize, batch: usize) -> (ProverKey, StepWitness) {
+        let cfg = ModelConfig::new(depth, width, batch);
+        let mut rng = Rng::seed_from_u64(0xe2e);
+        let ds = Dataset::synthetic(64, width / 2, 4, cfg.r_bits, 3);
+        let (x, y) = ds.batch(&cfg, 0);
+        let w = Weights::init(cfg, &mut rng);
+        let wit = compute_witness(cfg, &x, &y, &w);
+        wit.validate().expect("witness valid");
+        (ProverKey::setup(cfg), wit)
+    }
+
+    #[test]
+    fn parallel_roundtrip_depth2() {
+        let (pk, wit) = setup(2, 8, 4);
+        let mut rng = Rng::seed_from_u64(1);
+        let proof = prove_step(&pk, &wit, ProofMode::Parallel, &mut rng);
+        verify_step(&pk, &proof).expect("verifies");
+        assert!(proof.size_bytes() > 0);
+    }
+
+    #[test]
+    fn parallel_roundtrip_depth3() {
+        let (pk, wit) = setup(3, 8, 4);
+        let mut rng = Rng::seed_from_u64(2);
+        let proof = prove_step(&pk, &wit, ProofMode::Parallel, &mut rng);
+        verify_step(&pk, &proof).expect("verifies");
+    }
+
+    #[test]
+    fn parallel_roundtrip_depth1() {
+        // no ReLU layers at all — stacking degenerates, validity still runs
+        let (pk, wit) = setup(1, 8, 4);
+        let mut rng = Rng::seed_from_u64(3);
+        let proof = prove_step(&pk, &wit, ProofMode::Parallel, &mut rng);
+        verify_step(&pk, &proof).expect("verifies");
+    }
+
+    #[test]
+    fn sequential_roundtrip_depth2() {
+        let (pk, wit) = setup(2, 8, 4);
+        let mut rng = Rng::seed_from_u64(4);
+        let proof = prove_step(&pk, &wit, ProofMode::Sequential, &mut rng);
+        verify_step(&pk, &proof).expect("verifies");
+    }
+
+    #[test]
+    fn sequential_larger_than_parallel() {
+        let (pk, wit) = setup(4, 8, 4);
+        let mut rng = Rng::seed_from_u64(5);
+        let par = prove_step(&pk, &wit, ProofMode::Parallel, &mut rng);
+        let seq = prove_step(&pk, &wit, ProofMode::Sequential, &mut rng);
+        verify_step(&pk, &par).expect("parallel verifies");
+        verify_step(&pk, &seq).expect("sequential verifies");
+        assert!(
+            seq.size_bytes() > par.size_bytes(),
+            "sequential {} should exceed parallel {}",
+            seq.size_bytes(),
+            par.size_bytes()
+        );
+    }
+
+    #[test]
+    fn rejects_tampered_witness_claims() {
+        let (pk, wit) = setup(2, 8, 4);
+        let mut rng = Rng::seed_from_u64(6);
+        let mut proof = prove_step(&pk, &wit, ProofMode::Parallel, &mut rng);
+        proof.groups[0].v_z[0] += Fr::ONE;
+        assert!(verify_step(&pk, &proof).is_err());
+    }
+
+    #[test]
+    fn rejects_tampered_commitment() {
+        let (pk, wit) = setup(2, 8, 4);
+        let mut rng = Rng::seed_from_u64(7);
+        let mut proof = prove_step(&pk, &wit, ProofMode::Parallel, &mut rng);
+        proof.com_w[0] = crate::curve::hash_to_curve(b"evil", 0);
+        assert!(verify_step(&pk, &proof).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_training_step() {
+        // prove with witness A, then swap in commitments from witness B
+        let (pk, wit) = setup(2, 8, 4);
+        let mut rng = Rng::seed_from_u64(8);
+        let proof_a = prove_step(&pk, &wit, ProofMode::Parallel, &mut rng);
+        let mut rng2 = Rng::seed_from_u64(9);
+        let mut wit_b = wit.clone();
+        wit_b.layers[0].w[0] += 1 << 10;
+        let wit_b = {
+            // recompute a fully consistent witness for the perturbed weights
+            let w = Weights {
+                layers: wit_b.layers.iter().map(|l| l.w.clone()).collect(),
+                cfg: wit.cfg,
+            };
+            compute_witness(wit.cfg, &wit.x, &wit.y, &w)
+        };
+        let proof_b = prove_step(&pk, &wit_b, ProofMode::Parallel, &mut rng2);
+        // splice group data across proofs → must fail
+        let mut frankenstein = proof_a.clone();
+        frankenstein.groups = proof_b.groups.clone();
+        assert!(verify_step(&pk, &frankenstein).is_err());
+    }
+}

@@ -1,0 +1,695 @@
+//! zkReLU — validity of the auxiliary inputs (paper §4.1).
+//!
+//! After the arithmetic sumchecks have produced verified evaluation claims
+//! on the stacked auxiliary tensors at a random point ρ —
+//!     v = (1−u″)·Z̃″(ρ) + u″·G̃_A′(ρ)   and   v_{Q−1} = B̃_{Q−1}(ρ) —
+//! this module proves that the *committed* auxiliary inputs lie in their
+//! prescribed ranges:
+//!     Z″ ∈ [0, 2^{Q−1})ᴺ,  B_{Q−1} ∈ {0,1}ᴺ,  G_A′ ∈ [−2^{Q−1}, 2^{Q−1})ᴺ,
+//! by reducing binarity + recomposition + pattern checks (eqs. 16–18) to the
+//! single inner product (19), proven with one Bulletproofs IPA over vectors
+//! of length 2NQ (Protocol 1 commitments + Algorithm 1 transformation).
+//! A structurally identical second instance covers the rounding remainders
+//! R_Z, R_{G_A} ∈ [−2^{R−1}, 2^{R−1})ᴺ.
+//!
+//! Key structural trick (paper Protocol 1, line 3): the commitment basis
+//! G ∈ 𝔾^{2N×Q} satisfies G[0:N, Q−1] = g[0:N] — the same basis the sign
+//! tensor B_{Q−1} is committed under — so com_{B_{Q−1}} *is* a valid
+//! commitment of the padded B̄_{Q−1} and the sign column needs no separate
+//! decomposition proof.
+
+use crate::commit::CommitKey;
+use crate::curve::{msm::msm, G1Affine, G1};
+use crate::field::Fr;
+use crate::ipa::{self, IpaBasis, IpaProof};
+use crate::poly::{eq_eval_index, eq_table};
+use crate::transcript::Transcript;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+
+/// Bases for one validity instance of row count 2N and bit width WIDTH.
+#[derive(Clone)]
+pub struct ValidityBases {
+    /// G ∈ 𝔾^{2N·W}; for the main instance G[i·W + (W−1)] = g_aux[i], i < N.
+    pub big_g: Vec<G1Affine>,
+    /// H ∈ 𝔾^{2N·W}, independent.
+    pub big_h: Vec<G1Affine>,
+    /// Σᵢ Gᵢ, precomputed for the verifier's G^{−z·1} term.
+    pub big_g_sum: G1,
+    /// Blinding base (shared with the aux commitment key).
+    pub blind_h: G1Affine,
+    pub n: usize,
+    pub width: usize,
+    pub label: Vec<u8>,
+}
+
+static VBASES_CACHE: once_cell::sync::Lazy<
+    std::sync::Mutex<std::collections::HashMap<(Vec<u8>, usize, usize), ValidityBases>>,
+> = once_cell::sync::Lazy::new(|| std::sync::Mutex::new(std::collections::HashMap::new()));
+
+impl ValidityBases {
+    /// Main-instance basis: ties column W−1 of the Z″ block to `g_aux`.
+    /// Cached: base derivation is a one-time setup cost per configuration.
+    pub fn setup_main(label: &[u8], g_aux: &CommitKey, n: usize, width: usize) -> Self {
+        assert!(g_aux.g.len() >= n);
+        let key = (label.to_vec(), n, width);
+        if let Some(vb) = VBASES_CACHE.lock().unwrap().get(&key) {
+            return vb.clone();
+        }
+        let mut glabel = label.to_vec();
+        glabel.extend_from_slice(b"/G");
+        let mut big_g = crate::curve::derive_generators(&glabel, 2 * n * width);
+        for i in 0..n {
+            big_g[i * width + (width - 1)] = g_aux.g[i];
+        }
+        let mut hlabel = label.to_vec();
+        hlabel.extend_from_slice(b"/H");
+        let big_h = crate::curve::derive_generators(&hlabel, 2 * n * width);
+        let big_g_sum = big_g
+            .iter()
+            .fold(G1::IDENTITY, |acc, p| acc.add_affine(p));
+        let vb = Self {
+            big_g,
+            big_h,
+            big_g_sum,
+            blind_h: g_aux.h,
+            n,
+            width,
+            label: label.to_vec(),
+        };
+        VBASES_CACHE.lock().unwrap().insert(key, vb.clone());
+        vb
+    }
+
+    /// Remainder-instance basis: fully independent generators. Cached.
+    pub fn setup_plain(label: &[u8], blind_h: G1Affine, n: usize, width: usize) -> Self {
+        let key = (label.to_vec(), n, width);
+        if let Some(vb) = VBASES_CACHE.lock().unwrap().get(&key) {
+            return vb.clone();
+        }
+        let mut glabel = label.to_vec();
+        glabel.extend_from_slice(b"/G");
+        let big_g = crate::curve::derive_generators(&glabel, 2 * n * width);
+        let mut hlabel = label.to_vec();
+        hlabel.extend_from_slice(b"/H");
+        let big_h = crate::curve::derive_generators(&hlabel, 2 * n * width);
+        let big_g_sum = big_g
+            .iter()
+            .fold(G1::IDENTITY, |acc, p| acc.add_affine(p));
+        let vb = Self {
+            big_g,
+            big_h,
+            big_g_sum,
+            blind_h,
+            n,
+            width,
+            label: label.to_vec(),
+        };
+        VBASES_CACHE.lock().unwrap().insert(key, vb.clone());
+        vb
+    }
+
+    /// H column extraction h = H[0:N, W−1] used by Protocol 1 line 2.
+    pub fn h_sign_column(&self) -> Vec<G1Affine> {
+        (0..self.n)
+            .map(|i| self.big_h[i * self.width + (self.width - 1)])
+            .collect()
+    }
+}
+
+/// The signed digit basis s_W = (1, 2, …, 2^{W−2}, −2^{W−1}).
+pub fn s_basis(width: usize) -> Vec<Fr> {
+    let mut s: Vec<Fr> = (0..width - 1)
+        .map(|j| Fr::from_u128(1u128 << j))
+        .collect();
+    s.push(-Fr::from_u128(1u128 << (width - 1)));
+    s
+}
+
+/// Bit-decompose signed values into the 2N×W matrices B (bits) and
+/// B′ (B − 1 on active cells). `zero_top_bit_rows`: number of leading rows
+/// whose column W−1 must be zero in B *and* B′ (the Z″ block's "|0" pad —
+/// those rows' values are unsigned (W−1)-bit).
+///
+/// Returns (B, B′) flattened row-major (i·W + j).
+pub fn bit_matrices(values: &[Fr], width: usize, zero_top_bit_rows: usize) -> (Vec<Fr>, Vec<Fr>) {
+    let rows = values.len();
+    let mut b = vec![Fr::ZERO; rows * width];
+    let mut bp = vec![Fr::ZERO; rows * width];
+    for (i, v) in values.iter().enumerate() {
+        let signed = v
+            .to_i128()
+            .expect("auxiliary value too large for bit decomposition");
+        let pad_top = i < zero_top_bit_rows;
+        let mag = if pad_top {
+            assert!(
+                (0..(1i128 << (width - 1))).contains(&signed),
+                "unsigned aux value out of range"
+            );
+            signed as u128
+        } else {
+            assert!(
+                (-(1i128 << (width - 1))..(1i128 << (width - 1))).contains(&signed),
+                "signed aux value out of range"
+            );
+            // <bits, s_W> = v: magnitude part = v + 2^{W-1}·sign
+            (signed + ((signed < 0) as i128) * (1i128 << (width - 1))) as u128
+        };
+        let sign_bit = !pad_top && signed < 0;
+        for j in 0..width {
+            let bit = if j == width - 1 {
+                if pad_top {
+                    // pad cell: B = B′ = 0
+                    continue;
+                }
+                u128::from(sign_bit)
+            } else {
+                (mag >> j) & 1
+            };
+            b[i * width + j] = Fr::from_u64(bit as u64);
+            bp[i * width + j] = Fr::from_u64(bit as u64) - Fr::ONE;
+        }
+    }
+    (b, bp)
+}
+
+/// Protocol 1 message: the prover's bit-tensor commitments.
+#[derive(Clone, Debug)]
+pub struct Protocol1Msg {
+    /// com_B^ip = h^ρ·G^B·H^{B′}.
+    pub com_b_ip: G1Affine,
+    /// com_{B′_{Q−1}} = h^{ρ′}·h_col^{B_{Q−1}−1} (main instance only).
+    pub com_sign_prime: Option<G1Affine>,
+}
+
+/// Prover state carried from Protocol 1 into the validity proof.
+pub struct ProverAux {
+    pub b: Vec<Fr>,
+    pub bp: Vec<Fr>,
+    pub rho: Fr,
+    /// sign tensor and blinds (main instance only)
+    pub sign: Option<Vec<Fr>>,
+    pub rho_sign: Fr,
+    pub rho_sign_prime: Fr,
+}
+
+/// Protocol 1 (main instance): commit to the bit decompositions of the
+/// paired tensor (Z″ ‖ G_A′), plus com_{B′_{Q−1}}.
+///
+/// `values`: 2N entries, first N unsigned (Q−1)-bit (Z″), last N signed
+/// Q-bit (G_A′). `sign`: the N sign bits B_{Q−1} (already committed as part
+/// of the aux commitments with blind `rho_sign`).
+pub fn protocol1_main(
+    bases: &ValidityBases,
+    values: &[Fr],
+    sign: &[Fr],
+    rho_sign: Fr,
+    rng: &mut Rng,
+) -> (Protocol1Msg, ProverAux) {
+    let n = bases.n;
+    assert_eq!(values.len(), 2 * n);
+    assert_eq!(sign.len(), n);
+    let (b, bp) = bit_matrices(values, bases.width, n);
+    let rho = Fr::random(rng);
+    let com_b_ip = (msm(&bases.big_g, &b)
+        + msm(&bases.big_h, &bp)
+        + bases.blind_h.to_projective().mul(&rho))
+    .to_affine();
+    let rho_sp = Fr::random(rng);
+    let h_col = bases.h_sign_column();
+    let sign_minus_1: Vec<Fr> = sign.iter().map(|s| *s - Fr::ONE).collect();
+    let com_sign_prime = (msm(&h_col, &sign_minus_1)
+        + bases.blind_h.to_projective().mul(&rho_sp))
+    .to_affine();
+    (
+        Protocol1Msg {
+            com_b_ip,
+            com_sign_prime: Some(com_sign_prime),
+        },
+        ProverAux {
+            b,
+            bp,
+            rho,
+            sign: Some(sign.to_vec()),
+            rho_sign,
+            rho_sign_prime: rho_sp,
+        },
+    )
+}
+
+/// Protocol 1 (remainder instance): all 2N rows are signed W-bit values, no
+/// sign-tensor coupling.
+pub fn protocol1_plain(
+    bases: &ValidityBases,
+    values: &[Fr],
+    rng: &mut Rng,
+) -> (Protocol1Msg, ProverAux) {
+    assert_eq!(values.len(), 2 * bases.n);
+    let (b, bp) = bit_matrices(values, bases.width, 0);
+    let rho = Fr::random(rng);
+    let com_b_ip = (msm(&bases.big_g, &b)
+        + msm(&bases.big_h, &bp)
+        + bases.blind_h.to_projective().mul(&rho))
+    .to_affine();
+    (
+        Protocol1Msg {
+            com_b_ip,
+            com_sign_prime: None,
+        },
+        ProverAux {
+            b,
+            bp,
+            rho,
+            sign: None,
+            rho_sign: Fr::ZERO,
+            rho_sign_prime: Fr::ZERO,
+        },
+    )
+}
+
+/// The zkReLU validity proof: a single IPA on equation (19).
+#[derive(Clone, Debug)]
+pub struct ValidityProof {
+    pub ipa: IpaProof,
+}
+
+impl ValidityProof {
+    pub fn size_bytes(&self) -> usize {
+        self.ipa.size_bytes()
+    }
+}
+
+/// Shared challenge bundle for one validity instance.
+struct Challenges {
+    k: Fr,
+    z: Fr,
+    u_bit: Vec<Fr>,
+    e_bit: Vec<Fr>,
+}
+
+fn draw_challenges(width: usize, transcript: &mut Transcript, main: bool) -> Challenges {
+    let tag: &[u8] = if main { b"relu" } else { b"rem" };
+    let k = if main {
+        transcript.challenge_fr(b"zkrelu/k")
+    } else {
+        Fr::ZERO
+    };
+    let log_w = width.trailing_zeros() as usize;
+    let mut lbl = tag.to_vec();
+    lbl.extend_from_slice(b"/u_bit");
+    let u_bit = transcript.challenge_frs(&lbl, log_w);
+    let mut lbl = tag.to_vec();
+    lbl.extend_from_slice(b"/z");
+    let z = loop {
+        let z = transcript.challenge_fr(&lbl);
+        if !z.is_zero() {
+            break z;
+        }
+    };
+    let e_bit = eq_table(&u_bit);
+    Challenges { k, z, u_bit, e_bit }
+}
+
+/// Build the two inner-product vectors of (19):
+///   a = B_k − z·1
+///   b = z²·(e_row ⊗ s_W) + (z·1 + B′_k) ⊙ (e_row ⊗ e_bit)
+/// and the target t = z³ − (1−v_k)·z² + z·v′_k.
+#[allow(clippy::too_many_arguments)]
+fn build_vectors(
+    aux: &ProverAux,
+    ch: &Challenges,
+    e_row: &[Fr],
+    width: usize,
+    n: usize,
+) -> (Vec<Fr>, Vec<Fr>) {
+    let s_w = s_basis(width);
+    let total = 2 * n * width;
+    let mut a = Vec::with_capacity(total);
+    let mut b = Vec::with_capacity(total);
+    // B_k = B + k·B̄_sign; B̄_sign only populates (i < n, j = width−1)
+    for i in 0..2 * n {
+        for j in 0..width {
+            let mut bk = aux.b[i * width + j];
+            let mut bpk = aux.bp[i * width + j];
+            if j == width - 1 && i < n {
+                if let Some(sign) = &aux.sign {
+                    bk += ch.k * sign[i];
+                    bpk += ch.k * (sign[i] - Fr::ONE);
+                }
+            }
+            a.push(bk - ch.z);
+            b.push(
+                ch.z.square() * e_row[i] * s_w[j]
+                    + (ch.z + bpk) * e_row[i] * ch.e_bit[j],
+            );
+        }
+    }
+    (a, b)
+}
+
+/// v_k and v′_k per eqs. (12) and (15).
+fn targets(
+    ch: &Challenges,
+    width: usize,
+    u_dd: Fr,
+    v: Fr,
+    v_sign: Fr,
+    main: bool,
+) -> Fr {
+    let (v_k, v_k_prime) = if main {
+        let q_top = Fr::from_u128(1u128 << (width - 1));
+        let v_k = v - ch.k * q_top * (Fr::ONE - u_dd) * v_sign;
+        // v′_k = 1 + (k−1)·β̃(bits(W−1), u_bit)·(1−u″)
+        let beta = eq_eval_index(&ch.u_bit, width - 1);
+        let v_k_prime = Fr::ONE + (ch.k - Fr::ONE) * beta * (Fr::ONE - u_dd);
+        (v_k, v_k_prime)
+    } else {
+        (v, Fr::ONE)
+    };
+    let z = ch.z;
+    z * z * z - (Fr::ONE - v_k) * z.square() + z * v_k_prime
+}
+
+/// The public scalar vector w_pub with H^{w_pub} entering P (Algorithm 1):
+/// w_pub[i,j] = z²·s_W[j]/e_bit[j] + z.
+fn w_pub(ch: &Challenges, width: usize, n: usize) -> Vec<Fr> {
+    let s_w = s_basis(width);
+    let mut inv_ebit = ch.e_bit.clone();
+    Fr::batch_invert(&mut inv_ebit);
+    let mut col = Vec::with_capacity(width);
+    for j in 0..width {
+        col.push(ch.z.square() * s_w[j] * inv_ebit[j] + ch.z);
+    }
+    let mut out = Vec::with_capacity(2 * n * width);
+    for _ in 0..2 * n {
+        out.extend_from_slice(&col);
+    }
+    out
+}
+
+/// Prove one validity instance. `e_row` = expansion e((u″, ρ)) of length 2N;
+/// `v`, `v_sign` are the (already opened) evaluation claims.
+#[allow(clippy::too_many_arguments)]
+pub fn prove_validity(
+    bases: &ValidityBases,
+    aux: &ProverAux,
+    e_row: &[Fr],
+    u_dd: Fr,
+    v: Fr,
+    v_sign: Fr,
+    transcript: &mut Transcript,
+    rng: &mut Rng,
+) -> ValidityProof {
+    let n = bases.n;
+    let width = bases.width;
+    let main = aux.sign.is_some();
+    let ch = draw_challenges(width, transcript, main);
+    let (a, b) = build_vectors(aux, &ch, e_row, width, n);
+    let t = targets(&ch, width, u_dd, v, v_sign, main);
+
+    // The transformed basis H′ = H^{e^{∘−1}} stays *virtual*: both prover
+    // and verifier fold e^{∘−1} into their MSM scalars (§Perf — avoids
+    // 2NW scalar multiplications per proof).
+    let mut e_inv: Vec<Fr> = (0..2 * n * width)
+        .map(|idx| e_row[idx / width] * ch.e_bit[idx % width])
+        .collect();
+    Fr::batch_invert(&mut e_inv);
+
+    // blinding of P: ρ_k = ρ + k(ρ_sign + ρ′_sign)
+    let blind = aux.rho + ch.k * (aux.rho_sign + aux.rho_sign_prime);
+    let basis = IpaBasis {
+        g: bases.big_g.clone(),
+        h: bases.big_h.clone(),
+        blind_h: bases.blind_h,
+        label: bases.label.clone(),
+    };
+    // P = blind^ρ · G^a · H′^b = blind^ρ · G^a · H^{b⊙e^{∘−1}}
+    let b_scaled: Vec<Fr> = b.iter().zip(e_inv.iter()).map(|(x, s)| *x * *s).collect();
+    let com = basis.commit(&a, &b_scaled, blind);
+    let ipa = ipa::prove_ip(
+        &basis,
+        &com,
+        &a,
+        &b,
+        blind,
+        t,
+        Some(&e_inv),
+        transcript,
+        rng,
+    );
+    ValidityProof { ipa }
+}
+
+/// Verify one validity instance.
+///
+/// `com_sign`: the aux commitment of B_{Q−1} (main instance), which by the
+/// shared-basis construction is a commitment of B̄_{Q−1} under G.
+#[allow(clippy::too_many_arguments)]
+pub fn verify_validity(
+    bases: &ValidityBases,
+    p1: &Protocol1Msg,
+    com_sign: Option<&G1>,
+    e_row: &[Fr],
+    u_dd: Fr,
+    v: Fr,
+    v_sign: Fr,
+    proof: &ValidityProof,
+    transcript: &mut Transcript,
+) -> Result<()> {
+    let n = bases.n;
+    let width = bases.width;
+    let main = p1.com_sign_prime.is_some();
+    ensure!(main == com_sign.is_some(), "validity: instance mismatch");
+    let ch = draw_challenges(width, transcript, main);
+    let t = targets(&ch, width, u_dd, v, v_sign, main);
+
+    // P = com_B^ip · (com_sign^ip)^k · G^{−z·1} · H^{w_pub}
+    let mut p = p1.com_b_ip.to_projective();
+    if main {
+        let com_sign_ip = *com_sign.unwrap() + p1.com_sign_prime.unwrap().to_projective();
+        p = p + com_sign_ip.mul(&ch.k);
+    }
+    p = p + bases.big_g_sum.mul(&(-ch.z));
+    p = p + msm(&bases.big_h, &w_pub(&ch, width, n));
+
+    // verify against virtual basis H′ = H^{e^{∘−1}}
+    let mut e_inv: Vec<Fr> = (0..2 * n * width)
+        .map(|idx| e_row[idx / width] * ch.e_bit[idx % width])
+        .collect();
+    Fr::batch_invert(&mut e_inv);
+    let basis = IpaBasis {
+        g: bases.big_g.clone(),
+        h: bases.big_h.clone(),
+        blind_h: bases.blind_h,
+        label: bases.label.clone(),
+    };
+    ipa::verify_ip(
+        &basis,
+        &p,
+        2 * n * width,
+        t,
+        &proof.ipa,
+        Some(&e_inv),
+        transcript,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poly::Mle;
+
+    fn rng() -> Rng {
+        Rng::seed_from_u64(0x2e1u64)
+    }
+
+    /// End-to-end validity roundtrip on a small main instance.
+    fn main_instance(
+        n: usize,
+        width: usize,
+        tamper: impl FnOnce(&mut Vec<Fr>, &mut Vec<Fr>),
+    ) -> Result<()> {
+        let mut r = rng();
+        let g_aux = CommitKey::setup(b"zkrelu-test-aux", n);
+        let bases = ValidityBases::setup_main(b"zkrelu-test", &g_aux, n, width);
+
+        // Z″ ∈ [0, 2^{W−1}), G_A′ ∈ [−2^{W−1}, 2^{W−1})
+        let half = 1i64 << (width - 1);
+        let mut zdp: Vec<Fr> = (0..n)
+            .map(|_| Fr::from_i64(r.gen_i64(0, half)))
+            .collect();
+        let mut gap: Vec<Fr> = (0..n)
+            .map(|_| Fr::from_i64(r.gen_i64(-half, half)))
+            .collect();
+        let sign: Vec<Fr> = (0..n).map(|_| Fr::from_u64(r.gen_range(2))).collect();
+        tamper(&mut zdp, &mut gap);
+
+        let rho_sign = Fr::random(&mut r);
+        let com_sign = g_aux.commit(&sign, rho_sign);
+
+        let values: Vec<Fr> = zdp.iter().chain(gap.iter()).copied().collect();
+        let (p1, aux) = protocol1_main(&bases, &values, &sign, rho_sign, &mut r);
+
+        // random evaluation point (u″, ρ) and honest claims
+        let mut t = Transcript::new(b"vt");
+        t.absorb_point(b"p1", &p1.com_b_ip);
+        let u_dd = Fr::random(&mut r);
+        let log_n = n.trailing_zeros() as usize;
+        let rho_pt: Vec<Fr> = (0..log_n).map(|_| Fr::random(&mut r)).collect();
+        let v_z = Mle::new(zdp.clone()).evaluate(&rho_pt);
+        let v_g = Mle::new(gap.clone()).evaluate(&rho_pt);
+        let v = (Fr::ONE - u_dd) * v_z + u_dd * v_g;
+        let v_sign = Mle::new(sign.clone()).evaluate(&rho_pt);
+
+        // e_row = e((u″, ρ))
+        let mut point = vec![u_dd];
+        point.extend_from_slice(&rho_pt);
+        let e_row = eq_table(&point);
+
+        let proof = prove_validity(&bases, &aux, &e_row, u_dd, v, v_sign, &mut t.clone(), &mut r);
+        verify_validity(
+            &bases,
+            &p1,
+            Some(&com_sign),
+            &e_row,
+            u_dd,
+            v,
+            v_sign,
+            &proof,
+            &mut t.clone(),
+        )
+    }
+
+    #[test]
+    fn validity_accepts_honest() {
+        main_instance(8, 8, |_, _| {}).expect("honest instance verifies");
+    }
+
+    #[test]
+    fn validity_wider() {
+        main_instance(4, 16, |_, _| {}).expect("width-16 instance verifies");
+    }
+
+    #[test]
+    fn remainder_instance_roundtrip() {
+        let mut r = rng();
+        let (n, width) = (8usize, 8usize);
+        let blind_h = crate::curve::hash_to_curve(b"rem-blind", 0);
+        let bases = ValidityBases::setup_plain(b"zkrelu-rem-test", blind_h, n, width);
+        let half = 1i64 << (width - 1);
+        let vals: Vec<Fr> = (0..2 * n)
+            .map(|_| Fr::from_i64(r.gen_i64(-half, half)))
+            .collect();
+        let (p1, aux) = protocol1_plain(&bases, &vals, &mut r);
+
+        let mut t = Transcript::new(b"vr");
+        t.absorb_point(b"p1", &p1.com_b_ip);
+        let u_dd = Fr::random(&mut r);
+        let log_n = n.trailing_zeros() as usize;
+        let rho_pt: Vec<Fr> = (0..log_n).map(|_| Fr::random(&mut r)).collect();
+        let v_lo = Mle::new(vals[..n].to_vec()).evaluate(&rho_pt);
+        let v_hi = Mle::new(vals[n..].to_vec()).evaluate(&rho_pt);
+        let v = (Fr::ONE - u_dd) * v_lo + u_dd * v_hi;
+        let mut point = vec![u_dd];
+        point.extend_from_slice(&rho_pt);
+        let e_row = eq_table(&point);
+
+        let proof =
+            prove_validity(&bases, &aux, &e_row, u_dd, v, Fr::ZERO, &mut t.clone(), &mut r);
+        verify_validity(
+            &bases,
+            &p1,
+            None,
+            &e_row,
+            u_dd,
+            v,
+            Fr::ZERO,
+            &proof,
+            &mut t.clone(),
+        )
+        .expect("remainder instance verifies");
+    }
+
+    #[test]
+    fn validity_rejects_wrong_claim() {
+        // honest tensors but the claimed evaluation v is shifted: the
+        // verifier's target t no longer matches the committed bits.
+        let mut r = rng();
+        let (n, width) = (8usize, 8usize);
+        let g_aux = CommitKey::setup(b"zkrelu-test-aux", n);
+        let bases = ValidityBases::setup_main(b"zkrelu-test", &g_aux, n, width);
+        let half = 1i64 << (width - 1);
+        let zdp: Vec<Fr> = (0..n).map(|_| Fr::from_i64(r.gen_i64(0, half))).collect();
+        let gap: Vec<Fr> = (0..n)
+            .map(|_| Fr::from_i64(r.gen_i64(-half, half)))
+            .collect();
+        let sign: Vec<Fr> = (0..n).map(|_| Fr::from_u64(r.gen_range(2))).collect();
+        let rho_sign = Fr::random(&mut r);
+        let com_sign = g_aux.commit(&sign, rho_sign);
+        let values: Vec<Fr> = zdp.iter().chain(gap.iter()).copied().collect();
+        let (p1, aux) = protocol1_main(&bases, &values, &sign, rho_sign, &mut r);
+
+        let mut t = Transcript::new(b"vt");
+        let u_dd = Fr::random(&mut r);
+        let rho_pt: Vec<Fr> = (0..3).map(|_| Fr::random(&mut r)).collect();
+        let v = (Fr::ONE - u_dd) * Mle::new(zdp).evaluate(&rho_pt)
+            + u_dd * Mle::new(gap).evaluate(&rho_pt)
+            + Fr::ONE; // ← lie
+        let v_sign = Mle::new(sign).evaluate(&rho_pt);
+        let mut point = vec![u_dd];
+        point.extend_from_slice(&rho_pt);
+        let e_row = eq_table(&point);
+        let proof =
+            prove_validity(&bases, &aux, &e_row, u_dd, v, v_sign, &mut t.clone(), &mut r);
+        assert!(verify_validity(
+            &bases,
+            &p1,
+            Some(&com_sign),
+            &e_row,
+            u_dd,
+            v,
+            v_sign,
+            &proof,
+            &mut t.clone(),
+        )
+        .is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_aux_cannot_be_decomposed() {
+        // a malicious Z″ ≥ 2^{W−1} has no valid unsigned decomposition:
+        // the honest decomposition path panics, and any forged bit matrix
+        // fails (16)–(18) w.h.p. (covered by validity_rejects_wrong_claim).
+        let vals = vec![Fr::from_u64(1 << 7); 2]; // width 8 ⇒ max 127
+        bit_matrices(&vals, 8, 2);
+    }
+
+    #[test]
+    fn bit_matrices_recompose() {
+        let mut r = rng();
+        let width = 12usize;
+        let half = 1i64 << (width - 1);
+        let n = 4;
+        let mut vals: Vec<Fr> = (0..n).map(|_| Fr::from_i64(r.gen_i64(0, half))).collect();
+        vals.extend((0..n).map(|_| Fr::from_i64(r.gen_i64(-half, half))));
+        let (b, bp) = bit_matrices(&vals, width, n);
+        let s = s_basis(width);
+        for i in 0..2 * n {
+            let recomposed: Fr = (0..width).map(|j| b[i * width + j] * s[j]).sum();
+            assert_eq!(recomposed, vals[i], "row {i}");
+            for j in 0..width {
+                let bij = b[i * width + j];
+                let bpij = bp[i * width + j];
+                // binarity via B⊙B′ = 0 and pattern via B−B′
+                assert_eq!(bij * bpij, Fr::ZERO);
+                if i < n && j == width - 1 {
+                    assert_eq!(bij, Fr::ZERO);
+                    assert_eq!(bpij, Fr::ZERO);
+                } else {
+                    assert_eq!(bij - bpij, Fr::ONE);
+                }
+            }
+        }
+    }
+}

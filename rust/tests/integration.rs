@@ -1,0 +1,155 @@
+//! Cross-module integration tests: the full pipeline from data through
+//! witness (both sources) to proof and verification, plus adversarial
+//! cases that cut across module boundaries.
+
+use std::path::Path;
+use zkdl::coordinator::{train_and_prove, TrainOptions};
+use zkdl::data::Dataset;
+use zkdl::hash::HashFn;
+use zkdl::merkle::{verify_membership, MerkleTree};
+use zkdl::model::{ModelConfig, Weights};
+use zkdl::runtime::{StepRuntime, WitnessSource};
+use zkdl::util::rng::Rng;
+use zkdl::witness::native::compute_witness;
+use zkdl::zkdl::{prove_step, verify_step, ProofMode, ProverKey};
+
+fn artifact_dir() -> &'static Path {
+    Path::new("artifacts")
+}
+
+#[test]
+fn full_pipeline_pjrt_witness_to_verified_proof() {
+    let cfg = ModelConfig::new(2, 64, 16);
+    let Ok(rt) = StepRuntime::load(artifact_dir(), cfg) else {
+        eprintln!("skipping (no artifact; run `make artifacts`)");
+        return;
+    };
+    let mut rng = Rng::seed_from_u64(1);
+    let ds = Dataset::synthetic(64, 32, 10, cfg.r_bits, 1);
+    let (x, y) = ds.batch(&cfg, 0);
+    let w = Weights::init(cfg, &mut rng);
+    let wit = rt.compute_witness(&x, &y, &w).expect("pjrt witness");
+    wit.validate().expect("relations hold");
+    let pk = ProverKey::setup(cfg);
+    let proof = prove_step(&pk, &wit, ProofMode::Parallel, &mut rng);
+    verify_step(&pk, &proof).expect("verifies");
+}
+
+#[test]
+fn proof_rejects_witness_with_wrong_relu() {
+    // forge a witness where one ReLU output is wrong but the decomposition
+    // ranges still hold: the Hadamard/stacking checks must catch it
+    let cfg = ModelConfig::new(2, 8, 4);
+    let mut rng = Rng::seed_from_u64(2);
+    let ds = Dataset::synthetic(16, 4, 4, cfg.r_bits, 2);
+    let (x, y) = ds.batch(&cfg, 0);
+    let w = Weights::init(cfg, &mut rng);
+    let mut wit = compute_witness(cfg, &x, &y, &w);
+    // flip one activation: A[0] := A[0] + 1 (violates (2))
+    if let Some(a) = wit.layers[0].a.as_mut() {
+        a[0] += 1;
+    }
+    assert!(wit.validate().is_err());
+    let pk = ProverKey::setup(cfg);
+    let proof = prove_step(&pk, &wit, ProofMode::Parallel, &mut rng);
+    assert!(
+        verify_step(&pk, &proof).is_err(),
+        "tampered ReLU output must not verify"
+    );
+}
+
+#[test]
+fn proof_rejects_forged_sign_bits() {
+    // a malicious trainer flips a sign bit to keep a negative activation:
+    // aux ranges stay valid but relations (2)/(3) break
+    let cfg = ModelConfig::new(2, 8, 4);
+    let mut rng = Rng::seed_from_u64(3);
+    let ds = Dataset::synthetic(16, 4, 4, cfg.r_bits, 3);
+    let (x, y) = ds.batch(&cfg, 0);
+    let w = Weights::init(cfg, &mut rng);
+    let mut wit = compute_witness(cfg, &x, &y, &w);
+    let aux = &mut wit.layers[0].z_aux;
+    let i = aux.sign.iter().position(|&s| s == 1).unwrap_or(0);
+    aux.sign[i] = 1 - aux.sign[i];
+    let pk = ProverKey::setup(cfg);
+    let proof = prove_step(&pk, &wit, ProofMode::Parallel, &mut rng);
+    assert!(verify_step(&pk, &proof).is_err());
+}
+
+#[test]
+fn proof_rejects_wrong_gradient() {
+    let cfg = ModelConfig::new(2, 8, 4);
+    let mut rng = Rng::seed_from_u64(4);
+    let ds = Dataset::synthetic(16, 4, 4, cfg.r_bits, 4);
+    let (x, y) = ds.batch(&cfg, 0);
+    let w = Weights::init(cfg, &mut rng);
+    let mut wit = compute_witness(cfg, &x, &y, &w);
+    wit.layers[1].g_w[3] += 1; // violates (34)
+    let pk = ProverKey::setup(cfg);
+    let proof = prove_step(&pk, &wit, ProofMode::Parallel, &mut rng);
+    assert!(verify_step(&pk, &proof).is_err());
+}
+
+#[test]
+fn native_and_pjrt_sources_prove_identically_sized_proofs() {
+    let cfg = ModelConfig::new(2, 8, 4);
+    let mut rng = Rng::seed_from_u64(5);
+    let ds = Dataset::synthetic(16, 4, 4, cfg.r_bits, 5);
+    let (x, y) = ds.batch(&cfg, 0);
+    let w = Weights::init(cfg, &mut rng);
+    let native = compute_witness(cfg, &x, &y, &w);
+    let src = WitnessSource::auto(artifact_dir(), cfg);
+    let other = src.compute_witness(&x, &y, &w).unwrap();
+    let pk = ProverKey::setup(cfg);
+    let p1 = prove_step(&pk, &native, ProofMode::Parallel, &mut rng);
+    let p2 = prove_step(&pk, &other, ProofMode::Parallel, &mut rng);
+    verify_step(&pk, &p1).unwrap();
+    verify_step(&pk, &p2).unwrap();
+    assert_eq!(p1.size_bytes(), p2.size_bytes());
+}
+
+#[test]
+fn coordinator_with_membership_audit() {
+    // the end-to-end story: train with proofs, then answer a copyright query
+    let cfg = ModelConfig::new(2, 8, 4);
+    let ds = Dataset::synthetic(32, 4, 4, cfg.r_bits, 6);
+    let opts = TrainOptions {
+        steps: 2,
+        prove_every: 1,
+        ..Default::default()
+    };
+    let report = train_and_prove(cfg, &ds, artifact_dir(), &opts).expect("train");
+    assert!(report.steps.iter().all(|s| s.proof_bytes > 0));
+
+    // commit the training points and build the audit tree
+    let ck = zkdl::commit::CommitKey::setup(b"itest/data", 4);
+    let coms: Vec<Vec<u8>> = ds
+        .points
+        .iter()
+        .map(|p| {
+            let frs: Vec<zkdl::Fr> = p.iter().map(|&v| zkdl::Fr::from_i64(v)).collect();
+            ck.commit_deterministic(&frs).to_affine().to_bytes().to_vec()
+        })
+        .collect();
+    let hash = HashFn::Sha256;
+    let tree = MerkleTree::build(hash, &coms);
+    let queries = vec![hash.hash(&coms[0])];
+    let proof = tree.prove(&queries);
+    verify_membership(hash, &tree.root, &queries, &proof).expect("audit verifies");
+    assert_eq!(proof.included.len(), 1);
+}
+
+#[test]
+fn sequential_and_parallel_agree_on_acceptance() {
+    let cfg = ModelConfig::new(3, 8, 4);
+    let mut rng = Rng::seed_from_u64(7);
+    let ds = Dataset::synthetic(16, 4, 4, cfg.r_bits, 7);
+    let (x, y) = ds.batch(&cfg, 0);
+    let w = Weights::init(cfg, &mut rng);
+    let wit = compute_witness(cfg, &x, &y, &w);
+    let pk = ProverKey::setup(cfg);
+    for mode in [ProofMode::Parallel, ProofMode::Sequential] {
+        let proof = prove_step(&pk, &wit, mode, &mut rng);
+        verify_step(&pk, &proof).unwrap_or_else(|e| panic!("{} failed: {e:#}", mode.name()));
+    }
+}
