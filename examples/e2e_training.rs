@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
         mode: ProofMode::Parallel,
         seed: cli.get_u64("seed", 7),
         skip_verify: false,
+        pipeline_depth: 2,
     };
     let report = train_and_prove(cfg, &ds, Path::new("artifacts"), &opts)?;
 

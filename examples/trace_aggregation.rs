@@ -1,0 +1,59 @@
+//! FAC4DNN multi-step aggregation end-to-end: train T SGD steps through the
+//! pipelined coordinator, aggregate them into one `TraceProof`, persist it
+//! in the wire format, then re-read and verify it from bytes alone — the
+//! out-of-process verifier workflow behind `zkdl verify-trace`.
+//!
+//!     cargo run --release --example trace_aggregation
+
+use std::path::Path;
+use zkdl::aggregate::{verify_trace, TraceKey};
+use zkdl::coordinator::{train_and_prove_trace, TraceTrainOptions};
+use zkdl::data::Dataset;
+use zkdl::model::ModelConfig;
+use zkdl::wire::{decode_trace_proof, encode_trace_proof};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ModelConfig::new(2, 16, 8);
+    let steps = 8;
+    println!(
+        "aggregating {steps} proven SGD steps: L={} d={} B={}",
+        cfg.depth, cfg.width, cfg.batch
+    );
+
+    // 1. pipelined training run feeding the aggregator (one window)
+    let ds = Dataset::synthetic(256, 8, 10, cfg.r_bits, 5);
+    let opts = TraceTrainOptions {
+        steps,
+        window: 0, // one trace over the whole run
+        seed: 42,
+        skip_verify: true, // verified from disk below instead
+    };
+    let report = train_and_prove_trace(cfg, &ds, Path::new("artifacts"), &opts)?;
+    println!("{}", report.summary());
+    println!(
+        "loss {:.4} → {:.4} over the trace",
+        report.losses.first().unwrap(),
+        report.losses.last().unwrap()
+    );
+
+    // 2. persist the aggregated proof
+    let proof = &report.proofs[0];
+    let bytes = encode_trace_proof(&cfg, proof);
+    println!(
+        "trace proof: {:.1} kB ({} wire bytes for {} steps)",
+        proof.size_bytes() as f64 / 1024.0,
+        bytes.len(),
+        proof.steps
+    );
+
+    // 3. the verifier's side: reconstruct everything from the bytes
+    let (cfg2, decoded) = decode_trace_proof(&bytes)?;
+    let tk = TraceKey::setup(cfg2, decoded.steps);
+    let t = std::time::Instant::now();
+    verify_trace(&tk, &decoded)?;
+    println!(
+        "re-read from wire and verified in {:.2} s — accept",
+        t.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

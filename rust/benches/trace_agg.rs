@@ -1,0 +1,96 @@
+//! FAC4DNN aggregation benchmark: aggregated T-step proving / verification /
+//! proof size versus T independent `StepProof`s, for T ∈ {1, 4, 16}.
+//!
+//!     cargo bench --bench trace_agg
+//!     cargo bench --bench trace_agg -- --depth 2 --width 16 --batch 8
+
+use zkdl::aggregate::{prove_trace, verify_trace, TraceKey};
+use zkdl::data::Dataset;
+use zkdl::model::{ModelConfig, Weights};
+use zkdl::util::bench::{fmt_dur, time_once, BenchArgs, Table};
+use zkdl::util::rng::Rng;
+use zkdl::witness::native::compute_witness;
+use zkdl::witness::StepWitness;
+use zkdl::zkdl::{prove_step, verify_step, ProofMode, ProverKey};
+
+fn witness_chain(cfg: ModelConfig, steps: usize, seed: u64) -> Vec<StepWitness> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let ds = Dataset::synthetic(256, cfg.width / 2, 4, cfg.r_bits, seed ^ 0x77);
+    let mut weights = Weights::init(cfg, &mut rng);
+    let mut out = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let (x, y) = ds.batch(&cfg, step);
+        let wit = compute_witness(cfg, &x, &y, &weights);
+        weights.apply_update(&wit.weight_grads());
+        out.push(wit);
+    }
+    out
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let cfg = ModelConfig::new(
+        args.get_usize("--depth", 2),
+        args.get_usize("--width", 16),
+        args.get_usize("--batch", 8),
+    );
+    println!(
+        "trace aggregation: L={} d={} B={} ({} threads)",
+        cfg.depth,
+        cfg.width,
+        cfg.batch,
+        zkdl::util::threads::num_threads()
+    );
+    let mut table = Table::new(&[
+        "T",
+        "scheme",
+        "prove",
+        "verify",
+        "proof kB",
+        "vs T× steps",
+    ]);
+
+    let mut rng = Rng::seed_from_u64(0xa66);
+    let pk = ProverKey::setup(cfg);
+    for t in [1usize, 4, 16] {
+        let wits = witness_chain(cfg, t, t as u64);
+
+        // T independent per-step proofs (parallel mode)
+        let (step_proofs, prove_d) = time_once(|| {
+            wits.iter()
+                .map(|w| prove_step(&pk, w, ProofMode::Parallel, &mut rng))
+                .collect::<Vec<_>>()
+        });
+        let (_, verify_d) = time_once(|| {
+            for p in &step_proofs {
+                verify_step(&pk, p).expect("step verifies");
+            }
+        });
+        let step_bytes: usize = step_proofs.iter().map(|p| p.size_bytes()).sum();
+        table.row(vec![
+            format!("{t}"),
+            "independent".into(),
+            fmt_dur(prove_d),
+            fmt_dur(verify_d),
+            format!("{:.1}", step_bytes as f64 / 1024.0),
+            "1.00×".into(),
+        ]);
+
+        // one aggregated trace proof
+        let tk = TraceKey::setup(cfg, t);
+        let (trace_proof, prove_d) = time_once(|| prove_trace(&tk, &wits, &mut rng));
+        let (_, verify_d) = time_once(|| {
+            verify_trace(&tk, &trace_proof).expect("trace verifies");
+        });
+        let trace_bytes = trace_proof.size_bytes();
+        table.row(vec![
+            format!("{t}"),
+            "aggregated".into(),
+            fmt_dur(prove_d),
+            fmt_dur(verify_d),
+            format!("{:.1}", trace_bytes as f64 / 1024.0),
+            format!("{:.2}×", trace_bytes as f64 / step_bytes as f64),
+        ]);
+    }
+    table.print();
+}

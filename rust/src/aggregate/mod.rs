@@ -1,0 +1,1391 @@
+//! FAC4DNN multi-step aggregation (paper §4): one [`TraceProof`] certifies
+//! T training steps at once, "without being constrained by their sequential
+//! order".
+//!
+//! Where [`crate::zkdl::prove_step`] batches the per-*layer* claims of one
+//! step by random linear combination under shared transcript randomness,
+//! this module extends the same construction with a *step* dimension:
+//!
+//! * the stacked-aux layout gains a step axis ([`trace_stack_dims`]):
+//!   slot(t, ℓ) = t·L̄ + ℓ of a T̄·L̄·D basis, so every step's aux
+//!   commitments live in mutually disjoint blocks of one basis;
+//! * all T·L matmul claims (30)/(33)/(34) share one challenge bundle and
+//!   are folded into three sumchecks via γ-powers, exactly as
+//!   `ProofMode::Parallel` folds layers;
+//! * one stacking sumcheck (27), one batch of opening IPAs, and one
+//!   zkReLU validity pair cover the whole trace.
+//!
+//! Proof size therefore grows as O(T·L) *commitments* (the statement) plus
+//! O(log(T·L·D)) *argument* — versus O(T) full arguments for T independent
+//! [`crate::zkdl::StepProof`]s. `benches/trace_agg.rs` measures the gap.
+//!
+//! The trace does **not** constrain step t+1's weights to step t's update
+//! (the rounding in the learning-rate shift is non-linear, so it cannot be
+//! checked homomorphically); like the per-step protocol, each step is
+//! proven against its own committed weights. See DESIGN.md §aggregate.
+
+use crate::commit::CommitKey;
+use crate::curve::{G1, G1Affine};
+use crate::field::Fr;
+use crate::gkr;
+use crate::ipa::{self, EvalClaim, IpaProof};
+use crate::model::ModelConfig;
+use crate::poly::{eq_eval, eq_table, Mle};
+use crate::sumcheck::{self, Instance, SumcheckProof, Term};
+use crate::transcript::Transcript;
+use crate::util::rng::Rng;
+use crate::witness::StepWitness;
+use crate::zkdl::{
+    self, commit, derived_com_ga, derived_com_gz_last, derived_com_z, derived_open_ga,
+    derived_open_gz_last, derived_open_z, draw_group_challenges, frs, tile_claims_at, tiled_eq,
+    Committed, ProverLayers,
+};
+use crate::zkrelu::{self, Protocol1Msg, ValidityBases, ValidityProof};
+use anyhow::{bail, ensure, Context, Result};
+
+/// Padded step count T̄, padded layer count L̄, and the trace-stacked aux
+/// size N = T̄·L̄·D. Step t's layer ℓ owns block (t·L̄ + ℓ)·D.
+pub fn trace_stack_dims(cfg: &ModelConfig, steps: usize) -> (usize, usize, usize) {
+    let lbar = cfg.depth.next_power_of_two();
+    let tbar = steps.next_power_of_two();
+    (tbar, lbar, tbar * lbar * cfg.d_size())
+}
+
+/// Commitment bases sized for a T-step trace of one model configuration.
+/// `g_mat`/`g_x` are shared with the per-step [`crate::zkdl::ProverKey`]
+/// (same labels); `g_aux` is the step-extended stacked basis.
+pub struct TraceKey {
+    pub cfg: ModelConfig,
+    /// Number of live steps T (T̄ − T trailing slots are padding).
+    pub steps: usize,
+    /// Trace-stacked aux basis, length T̄·L̄·D.
+    pub g_aux: CommitKey,
+    /// Weight/weight-gradient basis, length d².
+    pub g_mat: CommitKey,
+    /// Input basis, length D.
+    pub g_x: CommitKey,
+}
+
+impl TraceKey {
+    pub fn setup(cfg: ModelConfig, steps: usize) -> Self {
+        assert!(steps >= 1);
+        let (_, _, n) = trace_stack_dims(&cfg, steps);
+        let d2 = cfg.width * cfg.width;
+        Self {
+            cfg,
+            steps,
+            g_aux: CommitKey::setup(b"zkdl/trace-aux", n),
+            g_mat: CommitKey::setup(b"zkdl/mat", d2),
+            g_x: CommitKey::setup(b"zkdl/x", cfg.d_size()),
+        }
+    }
+
+    /// Commitment key slice for step t / layer ℓ's aux block.
+    pub fn block(&self, t: usize, l: usize) -> CommitKey {
+        let d = self.cfg.d_size();
+        let lbar = self.cfg.depth.next_power_of_two();
+        let s = t * lbar + l;
+        CommitKey {
+            g: self.g_aux.g[s * d..(s + 1) * d].to_vec(),
+            h: self.g_aux.h,
+            label: self.g_aux.label.clone(),
+        }
+    }
+}
+
+/// Validity bases for a trace; the label pins (T, L) so two traces with the
+/// same padded layout but different live extents never share an instance.
+fn trace_validity_bases(tk: &TraceKey) -> (ValidityBases, ValidityBases) {
+    let cfg = &tk.cfg;
+    let (_, _, n) = trace_stack_dims(cfg, tk.steps);
+    let t = tk.steps as u64;
+    let l = cfg.depth as u64;
+    let main_label = [
+        b"zkdl/trace/validity/main/".as_ref(),
+        &t.to_le_bytes(),
+        &l.to_le_bytes(),
+    ]
+    .concat();
+    let rem_label = [
+        b"zkdl/trace/validity/rem/".as_ref(),
+        &t.to_le_bytes(),
+        &l.to_le_bytes(),
+    ]
+    .concat();
+    let vb_main = ValidityBases::setup_main(&main_label, &tk.g_aux, n, cfg.q_bits as usize);
+    let vb_rem = ValidityBases::setup_plain(&rem_label, tk.g_aux.h, n, cfg.r_bits as usize);
+    (vb_main, vb_rem)
+}
+
+/// One step's commitments inside a trace (same layout as the commitment
+/// prefix of a [`crate::zkdl::StepProof`]).
+#[derive(Clone, Debug)]
+pub struct StepCommitmentSet {
+    pub com_w: Vec<G1Affine>,
+    pub com_gw: Vec<G1Affine>,
+    pub com_zdp: Vec<G1Affine>,
+    pub com_sign: Vec<G1Affine>,
+    pub com_rz: Vec<G1Affine>,
+    pub com_gap: Vec<G1Affine>,
+    pub com_rga: Vec<G1Affine>,
+    pub com_x: G1Affine,
+    pub com_y: G1Affine,
+}
+
+/// Aggregated proof of T training steps.
+#[derive(Clone, Debug)]
+pub struct TraceProof {
+    pub steps: usize,
+    /// Per-step tensor commitments (the statement), length T.
+    pub coms: Vec<StepCommitmentSet>,
+    pub p1_main: Protocol1Msg,
+    pub p1_rem: Protocol1Msg,
+    /// Claimed Z̃ evaluations, step-major: index t·L + ℓ.
+    pub v_z: Vec<Fr>,
+    /// Claimed G̃_A evaluations over inner layers: index t·(L−1) + ℓ.
+    pub v_ga: Vec<Fr>,
+    /// Claimed G̃_W evaluations, step-major.
+    pub v_gw: Vec<Fr>,
+    pub mm30: SumcheckProof,
+    pub mm30_evals: Vec<(Fr, Fr)>,
+    pub mm33: Option<SumcheckProof>,
+    pub mm33_evals: Vec<(Fr, Fr)>,
+    pub mm34: SumcheckProof,
+    pub mm34_evals: Vec<(Fr, Fr)>,
+    /// Trace-wide stacking sumcheck; absent for depth-1 networks.
+    pub stack: Option<SumcheckProof>,
+    /// Slot claims over T̄·L̄ slots for the four stacking terms.
+    pub va1: Vec<Fr>,
+    pub va2: Vec<Fr>,
+    pub vgz1: Vec<Fr>,
+    pub vgz2: Vec<Fr>,
+    /// Opened trace-stacked aux evaluations at ρ: (sign, Z″, G_A′, R_Z, R_GA).
+    pub aux_evals: [Fr; 5],
+    /// Batched opening IPAs in canonical task order.
+    pub openings: Vec<IpaProof>,
+    pub validity_main: ValidityProof,
+    pub validity_rem: ValidityProof,
+}
+
+impl StepCommitmentSet {
+    fn point_count(&self) -> usize {
+        self.com_w.len()
+            + self.com_gw.len()
+            + self.com_zdp.len()
+            + self.com_sign.len()
+            + self.com_rz.len()
+            + self.com_gap.len()
+            + self.com_rga.len()
+            + 2
+    }
+}
+
+impl TraceProof {
+    /// Total proof size in bytes (compressed-point accounting, matching
+    /// [`crate::zkdl::StepProof::size_bytes`]).
+    pub fn size_bytes(&self) -> usize {
+        let coms: usize = self.coms.iter().map(|c| c.point_count()).sum();
+        let scalars = self.v_z.len()
+            + self.v_ga.len()
+            + self.v_gw.len()
+            + 2 * (self.mm30_evals.len() + self.mm33_evals.len() + self.mm34_evals.len())
+            + self.va1.len()
+            + self.va2.len()
+            + self.vgz1.len()
+            + self.vgz2.len()
+            + 5;
+        let p1 = 32 + 32 + if self.p1_main.com_sign_prime.is_some() { 32 } else { 0 };
+        let sumchecks = self.mm30.size_bytes()
+            + self.mm33.as_ref().map_or(0, |p| p.size_bytes())
+            + self.mm34.size_bytes()
+            + self.stack.as_ref().map_or(0, |p| p.size_bytes());
+        let openings: usize = self.openings.iter().map(|o| o.size_bytes()).sum();
+        (coms + scalars) * 32
+            + p1
+            + sumchecks
+            + openings
+            + self.validity_main.size_bytes()
+            + self.validity_rem.size_bytes()
+    }
+}
+
+/// Prover-side commitments of one step in the trace.
+struct TraceStepCommitments {
+    w: Vec<Committed>,
+    gw: Vec<Committed>,
+    zdp: Vec<Committed>,
+    sign: Vec<Committed>,
+    rz: Vec<Committed>,
+    gap: Vec<Committed>,
+    rga: Vec<Committed>,
+    x: Committed,
+    y: Committed,
+}
+
+fn commit_trace_step(
+    tk: &TraceKey,
+    t: usize,
+    pl: &ProverLayers,
+    rng: &mut Rng,
+) -> TraceStepCommitments {
+    let depth = tk.cfg.depth;
+    let mut w = Vec::new();
+    let mut gw = Vec::new();
+    let mut zdp = Vec::new();
+    let mut sign = Vec::new();
+    let mut rz = Vec::new();
+    let mut gap = Vec::new();
+    let mut rga = Vec::new();
+    for l in 0..depth {
+        let blk = tk.block(t, l);
+        w.push(commit(&tk.g_mat, pl.w[l].data.clone(), rng));
+        gw.push(commit(&tk.g_mat, frs(&pl.wit.layers[l].g_w), rng));
+        zdp.push(commit(&blk, pl.zdp[l].clone(), rng));
+        sign.push(commit(&blk, pl.sign[l].clone(), rng));
+        rz.push(commit(&blk, pl.rz[l].clone(), rng));
+        gap.push(commit(&blk, pl.gap[l].clone(), rng));
+        rga.push(commit(&blk, pl.rga[l].clone(), rng));
+    }
+    let x = commit(&tk.g_x, pl.x.data.clone(), rng);
+    // Y lives in the step's last-layer block (cf. zkdl::commit_step).
+    let y = commit(&tk.block(t, depth - 1), frs(&pl.wit.y), rng);
+    TraceStepCommitments {
+        w,
+        gw,
+        zdp,
+        sign,
+        rz,
+        gap,
+        rga,
+        x,
+        y,
+    }
+}
+
+fn absorb_step_commitments(t: &mut Transcript, step: usize, set: &StepCommitmentSet) {
+    t.absorb_u64(b"trace/step", step as u64);
+    zkdl::absorb_commitments(
+        t,
+        &[
+            (b"com/w", set.com_w.clone()),
+            (b"com/gw", set.com_gw.clone()),
+            (b"com/zdp", set.com_zdp.clone()),
+            (b"com/sign", set.com_sign.clone()),
+            (b"com/rz", set.com_rz.clone()),
+            (b"com/gap", set.com_gap.clone()),
+            (b"com/rga", set.com_rga.clone()),
+            (b"com/x", vec![set.com_x]),
+            (b"com/y", vec![set.com_y]),
+        ],
+    );
+}
+
+/// A batched opening task (shared public vector, RLC'd claims).
+struct OpeningTask {
+    evec: Vec<Fr>,
+    claims: Vec<EvalClaim>,
+}
+
+/// Verifier-side mirror of [`OpeningTask`].
+struct OpeningCheck {
+    evec: Vec<Fr>,
+    claims: Vec<(G1, Fr)>,
+}
+
+// ---------------------------------------------------------------------------
+// Prover
+// ---------------------------------------------------------------------------
+
+/// Prove T training steps as one aggregated trace. `wits.len()` must equal
+/// `tk.steps`; every witness must share `tk.cfg`.
+pub fn prove_trace(tk: &TraceKey, wits: &[StepWitness], rng: &mut Rng) -> TraceProof {
+    let cfg = &tk.cfg;
+    let t_steps = wits.len();
+    assert_eq!(t_steps, tk.steps, "witness count mismatch");
+    assert!(t_steps >= 1);
+    for w in wits {
+        assert_eq!(*cfg, w.cfg, "config mismatch");
+    }
+    let depth = cfg.depth;
+    let d = cfg.d_size();
+    let (tbar, lbar, _n) = trace_stack_dims(cfg, t_steps);
+    let slots = tbar * lbar;
+    let log_b = cfg.batch.trailing_zeros() as usize;
+    let log_d = cfg.width.trailing_zeros() as usize;
+    let log_dd = log_b + log_d;
+    let log_s = slots.trailing_zeros() as usize;
+
+    let pls: Vec<ProverLayers> = wits.iter().map(ProverLayers::build).collect();
+    let scs: Vec<TraceStepCommitments> = pls
+        .iter()
+        .enumerate()
+        .map(|(t, pl)| commit_trace_step(tk, t, pl, rng))
+        .collect();
+
+    let mut tr = Transcript::new(b"zkdl/trace");
+    tr.absorb_u64(b"depth", depth as u64);
+    tr.absorb_u64(b"width", cfg.width as u64);
+    tr.absorb_u64(b"batch", cfg.batch as u64);
+    tr.absorb_u64(b"steps", t_steps as u64);
+
+    let affine = |cs: &[Committed]| -> Vec<G1Affine> {
+        G1::batch_to_affine(&cs.iter().map(|c| c.com).collect::<Vec<_>>())
+    };
+    let com_sets: Vec<StepCommitmentSet> = scs
+        .iter()
+        .map(|sc| StepCommitmentSet {
+            com_w: affine(&sc.w),
+            com_gw: affine(&sc.gw),
+            com_zdp: affine(&sc.zdp),
+            com_sign: affine(&sc.sign),
+            com_rz: affine(&sc.rz),
+            com_gap: affine(&sc.gap),
+            com_rga: affine(&sc.rga),
+            com_x: sc.x.com.to_affine(),
+            com_y: sc.y.com.to_affine(),
+        })
+        .collect();
+    for (t, set) in com_sets.iter().enumerate() {
+        absorb_step_commitments(&mut tr, t, set);
+    }
+
+    // ---- Protocol 1 over the trace stack ----
+    macro_rules! stack_trace {
+        ($field:ident) => {{
+            let mut out = vec![Fr::ZERO; slots * d];
+            for (t, pl) in pls.iter().enumerate() {
+                for l in 0..depth {
+                    let s = t * lbar + l;
+                    out[s * d..s * d + d].copy_from_slice(&pl.$field[l]);
+                }
+            }
+            out
+        }};
+    }
+    let zdp_stack = stack_trace!(zdp);
+    let gap_stack = stack_trace!(gap);
+    let sign_stack = stack_trace!(sign);
+    let rz_stack = stack_trace!(rz);
+    let rga_stack = stack_trace!(rga);
+
+    let (vb_main, vb_rem) = trace_validity_bases(tk);
+    let sign_blind: Fr = scs
+        .iter()
+        .flat_map(|sc| sc.sign.iter().map(|c| c.blind))
+        .sum();
+    let paired: Vec<Fr> = zdp_stack.iter().chain(gap_stack.iter()).copied().collect();
+    let (p1_main, aux_main) =
+        zkrelu::protocol1_main(&vb_main, &paired, &sign_stack, sign_blind, rng);
+    let paired_rem: Vec<Fr> = rz_stack.iter().chain(rga_stack.iter()).copied().collect();
+    let (p1_rem, aux_rem) = zkrelu::protocol1_plain(&vb_rem, &paired_rem, rng);
+    tr.absorb_point(b"p1/main", &p1_main.com_b_ip);
+    if let Some(p) = &p1_main.com_sign_prime {
+        tr.absorb_point(b"p1/main/sign", p);
+    }
+    tr.absorb_point(b"p1/rem", &p1_rem.com_b_ip);
+
+    // ---- Phase 1: one challenge bundle, three trace-wide matmul sumchecks ----
+    let ch = draw_group_challenges(&mut tr, log_b, log_d);
+
+    // (30): Z̃_t^ℓ(u_zr,u_zc) for every (t, ℓ), γ-folded step-major.
+    let pz: Vec<Fr> = [ch.u_zr.clone(), ch.u_zc.clone()].concat();
+    let mut v_z = Vec::with_capacity(t_steps * depth);
+    let mut terms30 = Vec::new();
+    let mut coeff = Fr::ONE;
+    for (t, pl) in pls.iter().enumerate() {
+        for l in 0..depth {
+            let z_mat = gkr::Matrix::from_i64(&wits[t].layers[l].z, cfg.batch, cfg.width);
+            v_z.push(z_mat.evaluate(&pz));
+            let a_prev = if l == 0 { &pl.x } else { &pl.a[l - 1] };
+            terms30.push(Term::new(
+                coeff,
+                vec![a_prev.fix_rows(&ch.u_zr), pl.w[l].transpose().fix_rows(&ch.u_zc)],
+            ));
+            coeff *= ch.gamma;
+        }
+    }
+    tr.absorb_frs(b"v_z", &v_z);
+    let out30 = sumcheck::prove(Instance::new(terms30), &mut tr);
+    let mm30_evals: Vec<(Fr, Fr)> = out30.factor_evals.iter().map(|f| (f[0], f[1])).collect();
+    tr.absorb_frs(
+        b"mm30/evals",
+        &mm30_evals.iter().flat_map(|(a, b)| [*a, *b]).collect::<Vec<_>>(),
+    );
+    let r30 = out30.point.clone();
+
+    // (33): inner layers of every step.
+    let pga: Vec<Fr> = [ch.u_gar.clone(), ch.u_gac.clone()].concat();
+    let mut v_ga = Vec::new();
+    let mut mm33 = None;
+    let mut mm33_evals: Vec<(Fr, Fr)> = Vec::new();
+    let mut r33 = Vec::new();
+    if depth >= 2 {
+        let mut terms33 = Vec::new();
+        let mut coeff = Fr::ONE;
+        for (t, pl) in pls.iter().enumerate() {
+            for l in 0..depth - 1 {
+                let ga_mat = gkr::Matrix::from_i64(
+                    wits[t].layers[l].g_a.as_ref().unwrap(),
+                    cfg.batch,
+                    cfg.width,
+                );
+                v_ga.push(ga_mat.evaluate(&pga));
+                terms33.push(Term::new(
+                    coeff,
+                    vec![
+                        pl.g_z[l + 1].fix_rows(&ch.u_gar),
+                        pl.w[l + 1].fix_rows(&ch.u_gac),
+                    ],
+                ));
+                coeff *= ch.gamma;
+            }
+        }
+        tr.absorb_frs(b"v_ga", &v_ga);
+        let out33 = sumcheck::prove(Instance::new(terms33), &mut tr);
+        mm33_evals = out33.factor_evals.iter().map(|f| (f[0], f[1])).collect();
+        tr.absorb_frs(
+            b"mm33/evals",
+            &mm33_evals.iter().flat_map(|(a, b)| [*a, *b]).collect::<Vec<_>>(),
+        );
+        r33 = out33.point.clone();
+        mm33 = Some(out33.proof);
+    }
+
+    // (34): G̃_W for every (t, ℓ).
+    let pgw: Vec<Fr> = [ch.u_gwr.clone(), ch.u_gwc.clone()].concat();
+    let mut v_gw = Vec::with_capacity(t_steps * depth);
+    let mut terms34 = Vec::new();
+    let mut coeff = Fr::ONE;
+    for (t, pl) in pls.iter().enumerate() {
+        for l in 0..depth {
+            let gw_mat = gkr::Matrix::from_i64(&wits[t].layers[l].g_w, cfg.width, cfg.width);
+            v_gw.push(gw_mat.evaluate(&pgw));
+            let a_prev = if l == 0 { &pl.x } else { &pl.a[l - 1] };
+            terms34.push(Term::new(
+                coeff,
+                vec![
+                    pl.g_z[l].transpose().fix_rows(&ch.u_gwr),
+                    a_prev.transpose().fix_rows(&ch.u_gwc),
+                ],
+            ));
+            coeff *= ch.gamma;
+        }
+    }
+    tr.absorb_frs(b"v_gw", &v_gw);
+    let out34 = sumcheck::prove(Instance::new(terms34), &mut tr);
+    let mm34_evals: Vec<(Fr, Fr)> = out34.factor_evals.iter().map(|f| (f[0], f[1])).collect();
+    tr.absorb_frs(
+        b"mm34/evals",
+        &mm34_evals.iter().flat_map(|(a, b)| [*a, *b]).collect::<Vec<_>>(),
+    );
+    let r34 = out34.point.clone();
+
+    // ---- Phase 2: trace-wide stacking sumcheck ----
+    // The four claim kinds share trace-global points (all steps use the same
+    // challenge bundle); presence depends only on depth.
+    let pa1: Option<Vec<Fr>> = (depth >= 2).then(|| [ch.u_zr.clone(), r30.clone()].concat());
+    let pa2: Option<Vec<Fr>> = (depth >= 2).then(|| [r34.clone(), ch.u_gwc.clone()].concat());
+    let qz1: Option<Vec<Fr>> = (depth >= 3).then(|| [ch.u_gar.clone(), r33.clone()].concat());
+    let qz2: Option<Vec<Fr>> = (depth >= 2).then(|| [r34.clone(), ch.u_gwr.clone()].concat());
+
+    let slot_claims = |point: &Option<Vec<Fr>>, use_a: bool| -> Vec<Fr> {
+        match point {
+            None => vec![Fr::ZERO; slots],
+            Some(p) => {
+                let e = eq_table(p);
+                let mut out = vec![Fr::ZERO; slots];
+                for (t, pl) in pls.iter().enumerate() {
+                    for l in 0..depth {
+                        let dot: Fr = if use_a {
+                            pl.a[l].data.iter().zip(e.iter()).map(|(a, b)| *a * *b).sum()
+                        } else {
+                            pl.gap[l]
+                                .iter()
+                                .zip(pl.sign[l].iter())
+                                .zip(e.iter())
+                                .map(|((g, s), b)| (Fr::ONE - *s) * *g * *b)
+                                .sum()
+                        };
+                        out[t * lbar + l] = dot;
+                    }
+                }
+                out
+            }
+        }
+    };
+    let va1 = slot_claims(&pa1, true);
+    let va2 = slot_claims(&pa2, true);
+    let vgz1 = slot_claims(&qz1, false);
+    let vgz2 = slot_claims(&qz2, false);
+    tr.absorb_frs(b"stack/va1", &va1);
+    tr.absorb_frs(b"stack/va2", &va2);
+    tr.absorb_frs(b"stack/vgz1", &vgz1);
+    tr.absorb_frs(b"stack/vgz2", &vgz2);
+
+    let any_term = depth >= 2;
+    let u_stack = tr.challenge_frs(b"stack/u", log_s);
+    let gammas = tr.challenge_frs(b"stack/gamma", 4);
+
+    let one_minus_sign: Vec<Fr> = sign_stack.iter().map(|s| Fr::ONE - *s).collect();
+    let zdp_mle = Mle::new(zdp_stack.clone());
+    let gap_mle = Mle::new(gap_stack.clone());
+    let oms_mle = Mle::new(one_minus_sign);
+
+    let (stack_proof, rho) = if any_term {
+        let mut terms = Vec::new();
+        let mut add_term = |coeff: Fr, point: &Option<Vec<Fr>>, tensor: &Mle| {
+            if let Some(p) = point {
+                let full_point: Vec<Fr> = [u_stack.clone(), p.clone()].concat();
+                terms.push(Term::new(
+                    coeff,
+                    vec![Mle::new(eq_table(&full_point)), oms_mle.clone(), tensor.clone()],
+                ));
+            }
+        };
+        add_term(gammas[0], &pa1, &zdp_mle);
+        add_term(gammas[1], &pa2, &zdp_mle);
+        add_term(gammas[2], &qz1, &gap_mle);
+        add_term(gammas[3], &qz2, &gap_mle);
+        let out = sumcheck::prove(Instance::new(terms), &mut tr);
+        (Some(out.proof), out.point)
+    } else {
+        (None, tr.challenge_frs(b"stack/rho", log_s + log_dd))
+    };
+
+    let sign_mle = Mle::new(sign_stack.clone());
+    let v_sign = sign_mle.evaluate(&rho);
+    let v_zdp = zdp_mle.evaluate(&rho);
+    let v_gap = gap_mle.evaluate(&rho);
+    let v_rz = Mle::new(rz_stack.clone()).evaluate(&rho);
+    let v_rga = Mle::new(rga_stack.clone()).evaluate(&rho);
+    let aux_evals = [v_sign, v_zdp, v_gap, v_rz, v_rga];
+    tr.absorb_frs(b"aux/evals", &aux_evals);
+
+    // ---- Phase 3: batched openings (one task list for the whole trace) ----
+    let gk = tk.g_aux.clone();
+    let mut tasks: Vec<(CommitKey, OpeningTask)> = Vec::new();
+
+    // OT-A: trace-stacked aux at ρ (5 claims).
+    {
+        macro_rules! stack_claim {
+            ($field:ident, $v:expr) => {{
+                let mut com = G1::IDENTITY;
+                let mut blind = Fr::ZERO;
+                let mut values = vec![Fr::ZERO; slots * d];
+                for (t, sc) in scs.iter().enumerate() {
+                    for l in 0..depth {
+                        let s = t * lbar + l;
+                        com = com + sc.$field[l].com;
+                        blind += sc.$field[l].blind;
+                        values[s * d..s * d + d].copy_from_slice(&sc.$field[l].values);
+                    }
+                }
+                EvalClaim {
+                    com,
+                    values,
+                    blind,
+                    v: $v,
+                }
+            }};
+        }
+        tasks.push((
+            gk.clone(),
+            OpeningTask {
+                evec: eq_table(&rho),
+                claims: vec![
+                    stack_claim!(sign, v_sign),
+                    stack_claim!(zdp, v_zdp),
+                    stack_claim!(gap, v_gap),
+                    stack_claim!(rz, v_rz),
+                    stack_claim!(rga, v_rga),
+                ],
+            },
+        ));
+    }
+
+    // OT-Z: derived Z commitments of every (t, ℓ) at pz, tiled over the
+    // trace basis.
+    {
+        let mut claims_z = Vec::with_capacity(t_steps * depth);
+        let mut z_slots = Vec::with_capacity(t_steps * depth);
+        for (t, sc) in scs.iter().enumerate() {
+            for l in 0..depth {
+                let (values, blind) = derived_open_z(cfg, &sc.zdp[l], &sc.sign[l], &sc.rz[l]);
+                let com = derived_com_z(cfg, &sc.zdp[l].com, &sc.sign[l].com, &sc.rz[l].com);
+                claims_z.push(EvalClaim {
+                    com,
+                    values,
+                    blind,
+                    v: v_z[t * depth + l],
+                });
+                z_slots.push(t * lbar + l);
+            }
+        }
+        tasks.push((
+            gk.clone(),
+            OpeningTask {
+                evec: tiled_eq(&pz, slots),
+                claims: tile_claims_at(claims_z, &z_slots, slots, d),
+            },
+        ));
+    }
+
+    // OT-GA: derived G_A commitments of inner layers at pga.
+    if depth >= 2 {
+        let mut claims_ga = Vec::new();
+        let mut ga_slots = Vec::new();
+        for (t, sc) in scs.iter().enumerate() {
+            for l in 0..depth - 1 {
+                let (values, blind) = derived_open_ga(cfg, &sc.gap[l], &sc.rga[l]);
+                let com = derived_com_ga(cfg, &sc.gap[l].com, &sc.rga[l].com);
+                claims_ga.push(EvalClaim {
+                    com,
+                    values,
+                    blind,
+                    v: v_ga[t * (depth - 1) + l],
+                });
+                ga_slots.push(t * lbar + l);
+            }
+        }
+        tasks.push((
+            gk.clone(),
+            OpeningTask {
+                evec: tiled_eq(&pga, slots),
+                claims: tile_claims_at(claims_ga, &ga_slots, slots, d),
+            },
+        ));
+    }
+
+    // OT-GW: com_gw at pgw (shared g_mat basis → plain RLC batch).
+    {
+        let mut claims_gw = Vec::with_capacity(t_steps * depth);
+        for (t, sc) in scs.iter().enumerate() {
+            for l in 0..depth {
+                claims_gw.push(EvalClaim {
+                    com: sc.gw[l].com,
+                    values: sc.gw[l].values.clone(),
+                    blind: sc.gw[l].blind,
+                    v: v_gw[t * depth + l],
+                });
+            }
+        }
+        tasks.push((
+            tk.g_mat.clone(),
+            OpeningTask {
+                evec: eq_table(&pgw),
+                claims: claims_gw,
+            },
+        ));
+    }
+
+    // OT-W30: com_w at (r30, u_zc).
+    {
+        let p: Vec<Fr> = [r30.clone(), ch.u_zc.clone()].concat();
+        let mut claims_w = Vec::with_capacity(t_steps * depth);
+        for (t, sc) in scs.iter().enumerate() {
+            for l in 0..depth {
+                claims_w.push(EvalClaim {
+                    com: sc.w[l].com,
+                    values: sc.w[l].values.clone(),
+                    blind: sc.w[l].blind,
+                    v: mm30_evals[t * depth + l].1,
+                });
+            }
+        }
+        tasks.push((
+            tk.g_mat.clone(),
+            OpeningTask {
+                evec: eq_table(&p),
+                claims: claims_w,
+            },
+        ));
+    }
+
+    // OT-W33: com_w^{ℓ+1} at (u_gac, r33).
+    if depth >= 2 {
+        let p: Vec<Fr> = [ch.u_gac.clone(), r33.clone()].concat();
+        let mut claims_w = Vec::new();
+        for (t, sc) in scs.iter().enumerate() {
+            for l in 0..depth - 1 {
+                claims_w.push(EvalClaim {
+                    com: sc.w[l + 1].com,
+                    values: sc.w[l + 1].values.clone(),
+                    blind: sc.w[l + 1].blind,
+                    v: mm33_evals[t * (depth - 1) + l].1,
+                });
+            }
+        }
+        tasks.push((
+            tk.g_mat.clone(),
+            OpeningTask {
+                evec: eq_table(&p),
+                claims: claims_w,
+            },
+        ));
+    }
+
+    // OT-X30 / OT-X34: per-step input commitments at layer 0's points.
+    {
+        let p30: Vec<Fr> = [ch.u_zr.clone(), r30.clone()].concat();
+        let claims_x: Vec<EvalClaim> = scs
+            .iter()
+            .enumerate()
+            .map(|(t, sc)| EvalClaim {
+                com: sc.x.com,
+                values: sc.x.values.clone(),
+                blind: sc.x.blind,
+                v: mm30_evals[t * depth].0,
+            })
+            .collect();
+        tasks.push((
+            tk.g_x.clone(),
+            OpeningTask {
+                evec: eq_table(&p30),
+                claims: claims_x,
+            },
+        ));
+        let p34: Vec<Fr> = [r34.clone(), ch.u_gwc.clone()].concat();
+        let claims_x: Vec<EvalClaim> = scs
+            .iter()
+            .enumerate()
+            .map(|(t, sc)| EvalClaim {
+                com: sc.x.com,
+                values: sc.x.values.clone(),
+                blind: sc.x.blind,
+                v: mm34_evals[t * depth].1,
+            })
+            .collect();
+        tasks.push((
+            tk.g_x.clone(),
+            OpeningTask {
+                evec: eq_table(&p34),
+                claims: claims_x,
+            },
+        ));
+    }
+
+    // OT-GZlast34 / OT-GZlast33: derived G_Z^{L−1} per step, tiled at the
+    // step's last-layer slot.
+    {
+        let last = depth - 1;
+        let gz_opens: Vec<(Vec<Fr>, Fr, G1)> = scs
+            .iter()
+            .map(|sc| {
+                let (vals, blind) = derived_open_gz_last(cfg, &sc.zdp[last], &sc.sign[last], &sc.y);
+                let com = derived_com_gz_last(cfg, &sc.zdp[last].com, &sc.sign[last].com, &sc.y.com);
+                (vals, blind, com)
+            })
+            .collect();
+        let gz_slots: Vec<usize> = (0..t_steps).map(|t| t * lbar + last).collect();
+        let p: Vec<Fr> = [r34.clone(), ch.u_gwr.clone()].concat();
+        let claims: Vec<EvalClaim> = gz_opens
+            .iter()
+            .enumerate()
+            .map(|(t, (vals, blind, com))| EvalClaim {
+                com: *com,
+                values: vals.clone(),
+                blind: *blind,
+                v: mm34_evals[t * depth + last].0,
+            })
+            .collect();
+        tasks.push((
+            gk.clone(),
+            OpeningTask {
+                evec: tiled_eq(&p, slots),
+                claims: tile_claims_at(claims, &gz_slots, slots, d),
+            },
+        ));
+        if depth >= 2 {
+            let p: Vec<Fr> = [ch.u_gar.clone(), r33.clone()].concat();
+            let claims: Vec<EvalClaim> = gz_opens
+                .iter()
+                .enumerate()
+                .map(|(t, (vals, blind, com))| EvalClaim {
+                    com: *com,
+                    values: vals.clone(),
+                    blind: *blind,
+                    v: mm33_evals[t * (depth - 1) + (depth - 2)].0,
+                })
+                .collect();
+            tasks.push((
+                gk.clone(),
+                OpeningTask {
+                    evec: tiled_eq(&p, slots),
+                    claims: tile_claims_at(claims, &gz_slots, slots, d),
+                },
+            ));
+        }
+    }
+
+    let mut openings = Vec::new();
+    for (ck, task) in &tasks {
+        let (_, _, proof) = ipa::batch_prove_eval(ck, &task.claims, &task.evec, &mut tr, rng);
+        openings.push(proof);
+    }
+
+    // ---- Phase 4: one validity pair for the whole trace ----
+    let u_dd = tr.challenge_fr(b"zkdl/u_dd");
+    let mut vpoint = vec![u_dd];
+    vpoint.extend_from_slice(&rho);
+    let e_row = eq_table(&vpoint);
+    let v = (Fr::ONE - u_dd) * v_zdp + u_dd * v_gap;
+    let validity_main =
+        zkrelu::prove_validity(&vb_main, &aux_main, &e_row, u_dd, v, v_sign, &mut tr, rng);
+    let u_dd_r = tr.challenge_fr(b"zkdl/u_dd_rem");
+    let mut vpoint_r = vec![u_dd_r];
+    vpoint_r.extend_from_slice(&rho);
+    let e_row_r = eq_table(&vpoint_r);
+    let v_rem = (Fr::ONE - u_dd_r) * v_rz + u_dd_r * v_rga;
+    let validity_rem = zkrelu::prove_validity(
+        &vb_rem,
+        &aux_rem,
+        &e_row_r,
+        u_dd_r,
+        v_rem,
+        Fr::ZERO,
+        &mut tr,
+        rng,
+    );
+
+    TraceProof {
+        steps: t_steps,
+        coms: com_sets,
+        p1_main,
+        p1_rem,
+        v_z,
+        v_ga,
+        v_gw,
+        mm30: out30.proof,
+        mm30_evals,
+        mm33,
+        mm33_evals,
+        mm34: out34.proof,
+        mm34_evals,
+        stack: stack_proof,
+        va1,
+        va2,
+        vgz1,
+        vgz2,
+        aux_evals,
+        openings,
+        validity_main,
+        validity_rem,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Verifier
+// ---------------------------------------------------------------------------
+
+/// Verify a [`TraceProof`] against the public trace key.
+pub fn verify_trace(tk: &TraceKey, proof: &TraceProof) -> Result<()> {
+    let cfg = &tk.cfg;
+    let t_steps = tk.steps;
+    let depth = cfg.depth;
+    let d = cfg.d_size();
+    let (tbar, lbar, _n) = trace_stack_dims(cfg, t_steps);
+    let slots = tbar * lbar;
+    let log_b = cfg.batch.trailing_zeros() as usize;
+    let log_d = cfg.width.trailing_zeros() as usize;
+    let log_dd = log_b + log_d;
+    let log_s = slots.trailing_zeros() as usize;
+
+    ensure!(proof.steps == t_steps, "step count mismatch");
+    ensure!(proof.coms.len() == t_steps, "commitment set count");
+    for set in &proof.coms {
+        ensure!(
+            set.com_w.len() == depth
+                && set.com_gw.len() == depth
+                && set.com_zdp.len() == depth
+                && set.com_sign.len() == depth
+                && set.com_rz.len() == depth
+                && set.com_gap.len() == depth
+                && set.com_rga.len() == depth,
+            "wrong per-step commitment count"
+        );
+    }
+
+    let mut tr = Transcript::new(b"zkdl/trace");
+    tr.absorb_u64(b"depth", depth as u64);
+    tr.absorb_u64(b"width", cfg.width as u64);
+    tr.absorb_u64(b"batch", cfg.batch as u64);
+    tr.absorb_u64(b"steps", t_steps as u64);
+    for (t, set) in proof.coms.iter().enumerate() {
+        absorb_step_commitments(&mut tr, t, set);
+    }
+
+    let (vb_main, vb_rem) = trace_validity_bases(tk);
+    tr.absorb_point(b"p1/main", &proof.p1_main.com_b_ip);
+    if let Some(p) = &proof.p1_main.com_sign_prime {
+        tr.absorb_point(b"p1/main/sign", p);
+    } else {
+        bail!("main validity instance must carry com_sign_prime");
+    }
+    tr.absorb_point(b"p1/rem", &proof.p1_rem.com_b_ip);
+
+    // ---- Phase 1 ----
+    let ch = draw_group_challenges(&mut tr, log_b, log_d);
+    let n_zl = t_steps * depth;
+    let n_inner = t_steps * (depth - 1);
+    ensure!(proof.v_z.len() == n_zl, "v_z length");
+    ensure!(proof.mm30_evals.len() == n_zl, "mm30 evals length");
+    tr.absorb_frs(b"v_z", &proof.v_z);
+    let rlc = |vs: &[Fr]| -> Fr {
+        let mut acc = Fr::ZERO;
+        let mut c = Fr::ONE;
+        for v in vs {
+            acc += c * *v;
+            c *= ch.gamma;
+        }
+        acc
+    };
+    let rlc_prod = |es: &[(Fr, Fr)]| -> Fr {
+        let mut acc = Fr::ZERO;
+        let mut c = Fr::ONE;
+        for (a, b) in es {
+            acc += c * *a * *b;
+            c *= ch.gamma;
+        }
+        acc
+    };
+    let out30 = sumcheck::verify(rlc(&proof.v_z), &proof.mm30, &mut tr).context("mm30")?;
+    ensure!(
+        rlc_prod(&proof.mm30_evals) == out30.final_claim,
+        "mm30 factor evals mismatch"
+    );
+    tr.absorb_frs(
+        b"mm30/evals",
+        &proof.mm30_evals.iter().flat_map(|(a, b)| [*a, *b]).collect::<Vec<_>>(),
+    );
+    let r30 = out30.point;
+
+    let mut r33 = Vec::new();
+    if depth >= 2 {
+        ensure!(proof.v_ga.len() == n_inner, "v_ga length");
+        ensure!(proof.mm33_evals.len() == n_inner, "mm33 evals length");
+        tr.absorb_frs(b"v_ga", &proof.v_ga);
+        let sc33 = proof.mm33.as_ref().context("missing mm33")?;
+        let out33 = sumcheck::verify(rlc(&proof.v_ga), sc33, &mut tr).context("mm33")?;
+        ensure!(
+            rlc_prod(&proof.mm33_evals) == out33.final_claim,
+            "mm33 factor evals mismatch"
+        );
+        tr.absorb_frs(
+            b"mm33/evals",
+            &proof.mm33_evals.iter().flat_map(|(a, b)| [*a, *b]).collect::<Vec<_>>(),
+        );
+        r33 = out33.point;
+    } else {
+        ensure!(proof.mm33.is_none(), "unexpected mm33");
+        ensure!(proof.v_ga.is_empty() && proof.mm33_evals.is_empty(), "unexpected mm33 evals");
+    }
+
+    ensure!(proof.v_gw.len() == n_zl, "v_gw length");
+    ensure!(proof.mm34_evals.len() == n_zl, "mm34 evals length");
+    tr.absorb_frs(b"v_gw", &proof.v_gw);
+    let out34 = sumcheck::verify(rlc(&proof.v_gw), &proof.mm34, &mut tr).context("mm34")?;
+    ensure!(
+        rlc_prod(&proof.mm34_evals) == out34.final_claim,
+        "mm34 factor evals mismatch"
+    );
+    tr.absorb_frs(
+        b"mm34/evals",
+        &proof.mm34_evals.iter().flat_map(|(a, b)| [*a, *b]).collect::<Vec<_>>(),
+    );
+    let r34 = out34.point;
+
+    // ---- Phase 2 ----
+    ensure!(
+        proof.va1.len() == slots
+            && proof.va2.len() == slots
+            && proof.vgz1.len() == slots
+            && proof.vgz2.len() == slots,
+        "slot claims"
+    );
+    // Slot claims covered by matmul factor evals must match them; the
+    // owning-layer index shift mirrors the per-step claim registry.
+    for t in 0..t_steps {
+        for l in 0..depth {
+            let s = t * lbar + l;
+            if l + 1 < depth {
+                ensure!(
+                    proof.va1[s] == proof.mm30_evals[t * depth + l + 1].0,
+                    "va1 slot {s} mismatch"
+                );
+                ensure!(
+                    proof.va2[s] == proof.mm34_evals[t * depth + l + 1].1,
+                    "va2 slot {s} mismatch"
+                );
+                ensure!(
+                    proof.vgz2[s] == proof.mm34_evals[t * depth + l].0,
+                    "vgz2 slot {s} mismatch"
+                );
+                if l >= 1 {
+                    ensure!(
+                        proof.vgz1[s] == proof.mm33_evals[t * (depth - 1) + l - 1].0,
+                        "vgz1 slot {s} mismatch"
+                    );
+                }
+            }
+        }
+    }
+    for s in 0..slots {
+        let (t, l) = (s / lbar, s % lbar);
+        if t >= t_steps || l >= depth {
+            ensure!(
+                proof.va1[s].is_zero()
+                    && proof.va2[s].is_zero()
+                    && proof.vgz1[s].is_zero()
+                    && proof.vgz2[s].is_zero(),
+                "padding slot claims must be zero"
+            );
+        }
+    }
+    tr.absorb_frs(b"stack/va1", &proof.va1);
+    tr.absorb_frs(b"stack/va2", &proof.va2);
+    tr.absorb_frs(b"stack/vgz1", &proof.vgz1);
+    tr.absorb_frs(b"stack/vgz2", &proof.vgz2);
+
+    let pa1: Option<Vec<Fr>> = (depth >= 2).then(|| [ch.u_zr.clone(), r30.clone()].concat());
+    let pa2: Option<Vec<Fr>> = (depth >= 2).then(|| [r34.clone(), ch.u_gwc.clone()].concat());
+    let qz1: Option<Vec<Fr>> = (depth >= 3).then(|| [ch.u_gar.clone(), r33.clone()].concat());
+    let qz2: Option<Vec<Fr>> = (depth >= 2).then(|| [r34.clone(), ch.u_gwr.clone()].concat());
+
+    let any_term = depth >= 2;
+    let u_stack = tr.challenge_frs(b"stack/u", log_s);
+    let gammas = tr.challenge_frs(b"stack/gamma", 4);
+    let e_stack = eq_table(&u_stack);
+
+    let rho = if any_term {
+        let lhs = |point: &Option<Vec<Fr>>, vs: &[Fr]| -> Fr {
+            if point.is_none() {
+                return Fr::ZERO;
+            }
+            vs.iter().zip(e_stack.iter()).map(|(v, e)| *v * *e).sum()
+        };
+        let claimed = gammas[0] * lhs(&pa1, &proof.va1)
+            + gammas[1] * lhs(&pa2, &proof.va2)
+            + gammas[2] * lhs(&qz1, &proof.vgz1)
+            + gammas[3] * lhs(&qz2, &proof.vgz2);
+        let stack = proof.stack.as_ref().context("missing stack proof")?;
+        let out = sumcheck::verify(claimed, stack, &mut tr).context("stack")?;
+        let [v_sign, v_zdp, v_gap, _, _] = proof.aux_evals;
+        let oms = Fr::ONE - v_sign;
+        let term = |point: &Option<Vec<Fr>>, tensor_eval: Fr, gamma: Fr| -> Fr {
+            match point {
+                None => Fr::ZERO,
+                Some(p) => {
+                    let full: Vec<Fr> = [u_stack.clone(), p.clone()].concat();
+                    gamma * eq_eval(&full, &out.point) * oms * tensor_eval
+                }
+            }
+        };
+        let expect = term(&pa1, v_zdp, gammas[0])
+            + term(&pa2, v_zdp, gammas[1])
+            + term(&qz1, v_gap, gammas[2])
+            + term(&qz2, v_gap, gammas[3]);
+        ensure!(expect == out.final_claim, "stack final claim mismatch");
+        out.point
+    } else {
+        ensure!(proof.stack.is_none(), "unexpected stack proof");
+        tr.challenge_frs(b"stack/rho", log_s + log_dd)
+    };
+    tr.absorb_frs(b"aux/evals", &proof.aux_evals);
+    let [v_sign, v_zdp, v_gap, v_rz, v_rga] = proof.aux_evals;
+
+    // ---- Phase 3: opening checks (must mirror the prover's task order) ----
+    let gk = tk.g_aux.clone();
+    let stack_com = |get: &dyn Fn(&StepCommitmentSet) -> &Vec<G1Affine>| -> G1 {
+        let mut acc = G1::IDENTITY;
+        for set in &proof.coms {
+            for p in get(set) {
+                acc = acc.add_affine(p);
+            }
+        }
+        acc
+    };
+    let mut checks: Vec<(CommitKey, OpeningCheck)> = Vec::new();
+    checks.push((
+        gk.clone(),
+        OpeningCheck {
+            evec: eq_table(&rho),
+            claims: vec![
+                (stack_com(&|s| &s.com_sign), v_sign),
+                (stack_com(&|s| &s.com_zdp), v_zdp),
+                (stack_com(&|s| &s.com_gap), v_gap),
+                (stack_com(&|s| &s.com_rz), v_rz),
+                (stack_com(&|s| &s.com_rga), v_rga),
+            ],
+        },
+    ));
+    {
+        let pz: Vec<Fr> = [ch.u_zr.clone(), ch.u_zc.clone()].concat();
+        let mut claims_z = Vec::with_capacity(n_zl);
+        for (t, set) in proof.coms.iter().enumerate() {
+            for l in 0..depth {
+                claims_z.push((
+                    derived_com_z(
+                        cfg,
+                        &set.com_zdp[l].to_projective(),
+                        &set.com_sign[l].to_projective(),
+                        &set.com_rz[l].to_projective(),
+                    ),
+                    proof.v_z[t * depth + l],
+                ));
+            }
+        }
+        checks.push((
+            gk.clone(),
+            OpeningCheck {
+                evec: tiled_eq(&pz, slots),
+                claims: claims_z,
+            },
+        ));
+    }
+    if depth >= 2 {
+        let pga: Vec<Fr> = [ch.u_gar.clone(), ch.u_gac.clone()].concat();
+        let mut claims_ga = Vec::with_capacity(n_inner);
+        for (t, set) in proof.coms.iter().enumerate() {
+            for l in 0..depth - 1 {
+                claims_ga.push((
+                    derived_com_ga(
+                        cfg,
+                        &set.com_gap[l].to_projective(),
+                        &set.com_rga[l].to_projective(),
+                    ),
+                    proof.v_ga[t * (depth - 1) + l],
+                ));
+            }
+        }
+        checks.push((
+            gk.clone(),
+            OpeningCheck {
+                evec: tiled_eq(&pga, slots),
+                claims: claims_ga,
+            },
+        ));
+    }
+    {
+        let pgw: Vec<Fr> = [ch.u_gwr.clone(), ch.u_gwc.clone()].concat();
+        let mut claims_gw = Vec::with_capacity(n_zl);
+        for (t, set) in proof.coms.iter().enumerate() {
+            for l in 0..depth {
+                claims_gw.push((set.com_gw[l].to_projective(), proof.v_gw[t * depth + l]));
+            }
+        }
+        checks.push((
+            tk.g_mat.clone(),
+            OpeningCheck {
+                evec: eq_table(&pgw),
+                claims: claims_gw,
+            },
+        ));
+    }
+    {
+        let p: Vec<Fr> = [r30.clone(), ch.u_zc.clone()].concat();
+        let mut claims_w = Vec::with_capacity(n_zl);
+        for (t, set) in proof.coms.iter().enumerate() {
+            for l in 0..depth {
+                claims_w.push((
+                    set.com_w[l].to_projective(),
+                    proof.mm30_evals[t * depth + l].1,
+                ));
+            }
+        }
+        checks.push((
+            tk.g_mat.clone(),
+            OpeningCheck {
+                evec: eq_table(&p),
+                claims: claims_w,
+            },
+        ));
+    }
+    if depth >= 2 {
+        let p: Vec<Fr> = [ch.u_gac.clone(), r33.clone()].concat();
+        let mut claims_w = Vec::with_capacity(n_inner);
+        for (t, set) in proof.coms.iter().enumerate() {
+            for l in 0..depth - 1 {
+                claims_w.push((
+                    set.com_w[l + 1].to_projective(),
+                    proof.mm33_evals[t * (depth - 1) + l].1,
+                ));
+            }
+        }
+        checks.push((
+            tk.g_mat.clone(),
+            OpeningCheck {
+                evec: eq_table(&p),
+                claims: claims_w,
+            },
+        ));
+    }
+    {
+        let p30: Vec<Fr> = [ch.u_zr.clone(), r30.clone()].concat();
+        let claims_x: Vec<(G1, Fr)> = proof
+            .coms
+            .iter()
+            .enumerate()
+            .map(|(t, set)| (set.com_x.to_projective(), proof.mm30_evals[t * depth].0))
+            .collect();
+        checks.push((
+            tk.g_x.clone(),
+            OpeningCheck {
+                evec: eq_table(&p30),
+                claims: claims_x,
+            },
+        ));
+        let p34: Vec<Fr> = [r34.clone(), ch.u_gwc.clone()].concat();
+        let claims_x: Vec<(G1, Fr)> = proof
+            .coms
+            .iter()
+            .enumerate()
+            .map(|(t, set)| (set.com_x.to_projective(), proof.mm34_evals[t * depth].1))
+            .collect();
+        checks.push((
+            tk.g_x.clone(),
+            OpeningCheck {
+                evec: eq_table(&p34),
+                claims: claims_x,
+            },
+        ));
+    }
+    {
+        let last = depth - 1;
+        let gz_coms: Vec<G1> = proof
+            .coms
+            .iter()
+            .map(|set| {
+                derived_com_gz_last(
+                    cfg,
+                    &set.com_zdp[last].to_projective(),
+                    &set.com_sign[last].to_projective(),
+                    &set.com_y.to_projective(),
+                )
+            })
+            .collect();
+        let p: Vec<Fr> = [r34.clone(), ch.u_gwr.clone()].concat();
+        let claims: Vec<(G1, Fr)> = gz_coms
+            .iter()
+            .enumerate()
+            .map(|(t, com)| (*com, proof.mm34_evals[t * depth + last].0))
+            .collect();
+        checks.push((
+            gk.clone(),
+            OpeningCheck {
+                evec: tiled_eq(&p, slots),
+                claims,
+            },
+        ));
+        if depth >= 2 {
+            let p: Vec<Fr> = [ch.u_gar.clone(), r33.clone()].concat();
+            let claims: Vec<(G1, Fr)> = gz_coms
+                .iter()
+                .enumerate()
+                .map(|(t, com)| (*com, proof.mm33_evals[t * (depth - 1) + (depth - 2)].0))
+                .collect();
+            checks.push((
+                gk.clone(),
+                OpeningCheck {
+                    evec: tiled_eq(&p, slots),
+                    claims,
+                },
+            ));
+        }
+    }
+
+    ensure!(
+        proof.openings.len() == checks.len(),
+        "opening count mismatch: {} vs {}",
+        proof.openings.len(),
+        checks.len()
+    );
+    for ((ck, check), opening) in checks.iter().zip(proof.openings.iter()) {
+        ipa::batch_verify_eval(ck, &check.claims, &check.evec, opening, &mut tr)
+            .context("batched opening")?;
+    }
+
+    // ---- Phase 4: validity ----
+    let u_dd = tr.challenge_fr(b"zkdl/u_dd");
+    let mut vpoint = vec![u_dd];
+    vpoint.extend_from_slice(&rho);
+    let e_row = eq_table(&vpoint);
+    let v = (Fr::ONE - u_dd) * v_zdp + u_dd * v_gap;
+    let com_sign_stacked = stack_com(&|s| &s.com_sign);
+    zkrelu::verify_validity(
+        &vb_main,
+        &proof.p1_main,
+        Some(&com_sign_stacked),
+        &e_row,
+        u_dd,
+        v,
+        v_sign,
+        &proof.validity_main,
+        &mut tr,
+    )
+    .context("main validity")?;
+    let u_dd_r = tr.challenge_fr(b"zkdl/u_dd_rem");
+    let mut vpoint_r = vec![u_dd_r];
+    vpoint_r.extend_from_slice(&rho);
+    let e_row_r = eq_table(&vpoint_r);
+    let v_rem = (Fr::ONE - u_dd_r) * v_rz + u_dd_r * v_rga;
+    zkrelu::verify_validity(
+        &vb_rem,
+        &proof.p1_rem,
+        None,
+        &e_row_r,
+        u_dd_r,
+        v_rem,
+        Fr::ZERO,
+        &proof.validity_rem,
+        &mut tr,
+    )
+    .context("remainder validity")?;
+
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::model::Weights;
+    use crate::witness::native::compute_witness;
+
+    /// T consecutive SGD-step witnesses (weights actually updated between
+    /// steps, as the coordinator would).
+    pub(crate) fn witness_chain(cfg: ModelConfig, steps: usize, seed: u64) -> Vec<StepWitness> {
+        let mut rng = Rng::seed_from_u64(seed);
+        let ds = Dataset::synthetic(64, cfg.width / 2, 4, cfg.r_bits, seed ^ 0x77);
+        let mut weights = Weights::init(cfg, &mut rng);
+        let mut out = Vec::with_capacity(steps);
+        for step in 0..steps {
+            let (x, y) = ds.batch(&cfg, step);
+            let wit = compute_witness(cfg, &x, &y, &weights);
+            wit.validate().expect("witness valid");
+            weights.apply_update(&wit.weight_grads());
+            out.push(wit);
+        }
+        out
+    }
+
+    #[test]
+    fn dims_extend_stack_with_step_axis() {
+        let cfg = ModelConfig::new(3, 8, 4);
+        let (tbar, lbar, n) = trace_stack_dims(&cfg, 5);
+        assert_eq!(tbar, 8);
+        assert_eq!(lbar, 4);
+        assert_eq!(n, 8 * 4 * cfg.d_size());
+    }
+
+    #[test]
+    fn trace_roundtrip_single_step_depth1() {
+        // smallest instance: no ReLU layers, no stack sumcheck
+        let cfg = ModelConfig::new(1, 8, 4);
+        let wits = witness_chain(cfg, 1, 0xa11);
+        let tk = TraceKey::setup(cfg, 1);
+        let mut rng = Rng::seed_from_u64(1);
+        let proof = prove_trace(&tk, &wits, &mut rng);
+        verify_trace(&tk, &proof).expect("verifies");
+        assert!(proof.size_bytes() > 0);
+    }
+}

@@ -1,14 +1,25 @@
 //! The training coordinator: drives batches through the AOT-compiled
-//! training step (PJRT), applies SGD updates, and generates + verifies a
-//! zkDL proof per step. This is the L3 request loop — pure rust, no Python.
+//! training step (PJRT), applies SGD updates, and generates + verifies
+//! zkDL proofs. This is the L3 request loop — pure rust, no Python.
+//!
+//! Proving is **pipelined**: witness generation for step k+1 runs on the
+//! coordinator thread while a dedicated prover worker handles step k,
+//! connected by a bounded channel (`TrainOptions::pipeline_depth` caps the
+//! number of in-flight witnesses, bounding memory). The same driver feeds
+//! the FAC4DNN aggregator: [`train_and_prove_trace`] collects witnesses
+//! into windows of T steps and emits one [`TraceProof`] per window, proving
+//! window k while the witnesses of window k+1 are being generated.
 
+use crate::aggregate::{prove_trace, verify_trace, TraceKey, TraceProof};
 use crate::data::Dataset;
 use crate::model::{ModelConfig, Weights};
 use crate::runtime::WitnessSource;
 use crate::util::rng::Rng;
+use crate::witness::StepWitness;
 use crate::zkdl::{prove_step, verify_step, ProofMode, ProverKey};
 use anyhow::{ensure, Context, Result};
 use std::path::Path;
+use std::sync::mpsc;
 use std::time::Instant;
 
 /// Per-step metrics of one proven training step.
@@ -28,9 +39,20 @@ pub struct StepMetrics {
 #[derive(Clone, Debug, Default)]
 pub struct TrainReport {
     pub steps: Vec<StepMetrics>,
+    /// End-to-end wall-clock of the pipelined run, in seconds.
+    pub wall_s: f64,
 }
 
 impl TrainReport {
+    /// Aggregate throughput of the pipelined run (steps per second of
+    /// wall-clock, witness + prove + verify overlapped).
+    pub fn throughput_steps_per_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.steps.len() as f64 / self.wall_s
+    }
+
     pub fn summary(&self) -> String {
         if self.steps.is_empty() {
             return "no steps".into();
@@ -38,7 +60,7 @@ impl TrainReport {
         let n = self.steps.len() as f64;
         let avg = |f: &dyn Fn(&StepMetrics) -> f64| self.steps.iter().map(|s| f(s)).sum::<f64>() / n;
         format!(
-            "steps={} loss {:.4}→{:.4} acc {:.2}→{:.2} | avg witness {:.1} ms, prove {:.1} ms, verify {:.1} ms, proof {:.1} kB",
+            "steps={} loss {:.4}→{:.4} acc {:.2}→{:.2} | avg witness {:.1} ms, prove {:.1} ms, verify {:.1} ms, proof {:.1} kB | {:.2} steps/s pipelined",
             self.steps.len(),
             self.steps.first().unwrap().loss,
             self.steps.last().unwrap().loss,
@@ -48,6 +70,7 @@ impl TrainReport {
             avg(&|s| s.prove_ms),
             avg(&|s| s.verify_ms),
             avg(&|s| s.proof_bytes as f64) / 1024.0,
+            self.throughput_steps_per_s(),
         )
     }
 
@@ -76,6 +99,9 @@ pub struct TrainOptions {
     pub seed: u64,
     /// Skip proof *verification* (prover-side timing runs).
     pub skip_verify: bool,
+    /// Max in-flight witnesses between the coordinator thread and the
+    /// prover worker; 1 degenerates to lock-step serial execution.
+    pub pipeline_depth: usize,
 }
 
 impl Default for TrainOptions {
@@ -86,68 +112,286 @@ impl Default for TrainOptions {
             mode: ProofMode::Parallel,
             seed: 0x5eed,
             skip_verify: false,
+            pipeline_depth: 2,
         }
     }
 }
 
+/// Work item flowing from the witness generator to the prover worker.
+struct PendingStep {
+    step: usize,
+    wit: StepWitness,
+    witness_ms: f64,
+    loss: f64,
+    accuracy: f64,
+}
+
 /// Train `opts.steps` SGD steps on `dataset`, proving each `prove_every`-th
-/// step end-to-end. Returns the metrics trail.
+/// step end-to-end. Witness generation (step k+1) overlaps with proving
+/// (step k) via a bounded channel. Returns the metrics trail.
 pub fn train_and_prove(
     cfg: ModelConfig,
     dataset: &Dataset,
     artifact_dir: &Path,
     opts: &TrainOptions,
 ) -> Result<TrainReport> {
-    ensure!(opts.steps > 0 && opts.prove_every > 0);
+    ensure!(opts.steps > 0 && opts.prove_every > 0 && opts.pipeline_depth > 0);
     let mut rng = Rng::seed_from_u64(opts.seed);
     let mut weights = Weights::init(cfg, &mut rng);
     let source = WitnessSource::auto(artifact_dir, cfg);
     // prover key setup is a one-time cost, shared across steps
     let pk = ProverKey::setup(cfg);
+    let pk = &pk;
+    let source_name = source.name();
 
-    let mut report = TrainReport::default();
-    for step in 0..opts.steps {
-        let (x, y) = dataset.batch(&cfg, step);
-        let t0 = Instant::now();
-        let wit = source
-            .compute_witness(&x, &y, &weights)
-            .with_context(|| format!("witness at step {step}"))?;
-        let witness_ms = t0.elapsed().as_secs_f64() * 1e3;
-
-        let loss = wit.loss();
-        let z_prime_last = &wit.layers[cfg.depth - 1].z_prime;
-        let accuracy = dataset.batch_accuracy(&cfg, step, z_prime_last);
-
-        let (prove_ms, verify_ms, proof_bytes) = if step % opts.prove_every == 0 {
-            let t1 = Instant::now();
-            let proof = prove_step(&pk, &wit, opts.mode, &mut rng);
-            let prove_ms = t1.elapsed().as_secs_f64() * 1e3;
-            let bytes = proof.size_bytes();
-            let verify_ms = if opts.skip_verify {
-                0.0
-            } else {
-                let t2 = Instant::now();
-                verify_step(&pk, &proof).with_context(|| format!("verify at step {step}"))?;
-                t2.elapsed().as_secs_f64() * 1e3
-            };
-            (prove_ms, verify_ms, bytes)
-        } else {
-            (0.0, 0.0, 0)
-        };
-
-        weights.apply_update(&wit.weight_grads());
-        report.steps.push(StepMetrics {
-            step,
-            loss,
-            accuracy,
-            witness_ms,
-            prove_ms,
-            verify_ms,
-            proof_bytes,
-            witness_source: source.name(),
+    let t_run = Instant::now();
+    let steps = std::thread::scope(|scope| -> Result<Vec<StepMetrics>> {
+        let (tx, rx) = mpsc::sync_channel::<PendingStep>(opts.pipeline_depth);
+        let prover = scope.spawn(move || -> Result<Vec<StepMetrics>> {
+            let mut prng = Rng::seed_from_u64(opts.seed ^ 0x9e3779b97f4a7c15);
+            let mut out = Vec::new();
+            while let Ok(pending) = rx.recv() {
+                let PendingStep {
+                    step,
+                    wit,
+                    witness_ms,
+                    loss,
+                    accuracy,
+                } = pending;
+                let (prove_ms, verify_ms, proof_bytes) = if step % opts.prove_every == 0 {
+                    let t1 = Instant::now();
+                    let proof = prove_step(pk, &wit, opts.mode, &mut prng);
+                    let prove_ms = t1.elapsed().as_secs_f64() * 1e3;
+                    let bytes = proof.size_bytes();
+                    let verify_ms = if opts.skip_verify {
+                        0.0
+                    } else {
+                        let t2 = Instant::now();
+                        verify_step(pk, &proof)
+                            .with_context(|| format!("verify at step {step}"))?;
+                        t2.elapsed().as_secs_f64() * 1e3
+                    };
+                    (prove_ms, verify_ms, bytes)
+                } else {
+                    (0.0, 0.0, 0)
+                };
+                out.push(StepMetrics {
+                    step,
+                    loss,
+                    accuracy,
+                    witness_ms,
+                    prove_ms,
+                    verify_ms,
+                    proof_bytes,
+                    witness_source: source_name,
+                });
+            }
+            Ok(out)
         });
+
+        for step in 0..opts.steps {
+            let (x, y) = dataset.batch(&cfg, step);
+            let t0 = Instant::now();
+            let wit = source
+                .compute_witness(&x, &y, &weights)
+                .with_context(|| format!("witness at step {step}"))?;
+            let witness_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let loss = wit.loss();
+            let z_prime_last = &wit.layers[cfg.depth - 1].z_prime;
+            let accuracy = dataset.batch_accuracy(&cfg, step, z_prime_last);
+            // the SGD update needs only the gradients, not the proof — so
+            // the next witness can be generated while this one is proven
+            weights.apply_update(&wit.weight_grads());
+            let pending = PendingStep {
+                step,
+                wit,
+                witness_ms,
+                loss,
+                accuracy,
+            };
+            if tx.send(pending).is_err() {
+                // worker exited early — stop feeding and surface its error
+                break;
+            }
+        }
+        drop(tx);
+        prover.join().expect("prover worker panicked")
+    })?;
+
+    Ok(TrainReport {
+        steps,
+        wall_s: t_run.elapsed().as_secs_f64(),
+    })
+}
+
+/// Options for an aggregated (FAC4DNN multi-step) proven training run.
+pub struct TraceTrainOptions {
+    pub steps: usize,
+    /// Aggregation window T: one [`TraceProof`] per `window` consecutive
+    /// steps (the final window may be shorter). 0 means one window covering
+    /// the whole run.
+    pub window: usize,
+    pub seed: u64,
+    pub skip_verify: bool,
+}
+
+impl Default for TraceTrainOptions {
+    fn default() -> Self {
+        Self {
+            steps: 8,
+            window: 0,
+            seed: 0x5eed,
+            skip_verify: false,
+        }
     }
-    Ok(report)
+}
+
+/// Metrics of one aggregated window.
+#[derive(Clone, Debug)]
+pub struct TraceWindowMetrics {
+    pub start_step: usize,
+    pub steps: usize,
+    pub prove_ms: f64,
+    pub verify_ms: f64,
+    pub proof_bytes: usize,
+}
+
+/// Outcome of an aggregated proven training run.
+pub struct TraceRunReport {
+    pub windows: Vec<TraceWindowMetrics>,
+    pub proofs: Vec<TraceProof>,
+    pub losses: Vec<f64>,
+    pub witness_ms_total: f64,
+    pub wall_s: f64,
+}
+
+impl TraceRunReport {
+    pub fn total_proof_bytes(&self) -> usize {
+        self.windows.iter().map(|w| w.proof_bytes).sum()
+    }
+
+    pub fn summary(&self) -> String {
+        let steps: usize = self.windows.iter().map(|w| w.steps).sum();
+        format!(
+            "trace windows={} steps={} | witness {:.1} ms total | prove {:.1} ms, verify {:.1} ms | {:.1} kB aggregated | wall {:.2} s",
+            self.windows.len(),
+            steps,
+            self.witness_ms_total,
+            self.windows.iter().map(|w| w.prove_ms).sum::<f64>(),
+            self.windows.iter().map(|w| w.verify_ms).sum::<f64>(),
+            self.total_proof_bytes() as f64 / 1024.0,
+            self.wall_s,
+        )
+    }
+}
+
+/// Train and prove with multi-step aggregation: witnesses stream through a
+/// bounded channel into the aggregator worker, which proves window k while
+/// the coordinator generates witnesses for window k+1.
+pub fn train_and_prove_trace(
+    cfg: ModelConfig,
+    dataset: &Dataset,
+    artifact_dir: &Path,
+    opts: &TraceTrainOptions,
+) -> Result<TraceRunReport> {
+    ensure!(opts.steps > 0);
+    let window = if opts.window == 0 { opts.steps } else { opts.window };
+    let mut rng = Rng::seed_from_u64(opts.seed);
+    let mut weights = Weights::init(cfg, &mut rng);
+    let source = WitnessSource::auto(artifact_dir, cfg);
+
+    let t_run = Instant::now();
+    let mut witness_ms_total = 0.0;
+    let mut losses = Vec::with_capacity(opts.steps);
+
+    struct WindowOut {
+        metrics: TraceWindowMetrics,
+        proof: TraceProof,
+    }
+
+    let (windows, proofs) = std::thread::scope(|scope| -> Result<(Vec<TraceWindowMetrics>, Vec<TraceProof>)> {
+        let (tx, rx) = mpsc::sync_channel::<(usize, StepWitness)>(window.max(2));
+        let skip_verify = opts.skip_verify;
+        let seed = opts.seed;
+        let aggregator = scope.spawn(move || -> Result<Vec<WindowOut>> {
+            let mut prng = Rng::seed_from_u64(seed ^ 0x7ace);
+            let mut out = Vec::new();
+            let mut buf: Vec<StepWitness> = Vec::with_capacity(window);
+            let mut start_step = 0usize;
+            let mut flush = |buf: &mut Vec<StepWitness>,
+                             start_step: usize,
+                             prng: &mut Rng|
+             -> Result<WindowOut> {
+                let t = buf.len();
+                let tk = TraceKey::setup(cfg, t);
+                let t1 = Instant::now();
+                let proof = prove_trace(&tk, buf, prng);
+                let prove_ms = t1.elapsed().as_secs_f64() * 1e3;
+                let verify_ms = if skip_verify {
+                    0.0
+                } else {
+                    let t2 = Instant::now();
+                    verify_trace(&tk, &proof)
+                        .with_context(|| format!("verify trace window at step {start_step}"))?;
+                    t2.elapsed().as_secs_f64() * 1e3
+                };
+                let metrics = TraceWindowMetrics {
+                    start_step,
+                    steps: t,
+                    prove_ms,
+                    verify_ms,
+                    proof_bytes: proof.size_bytes(),
+                };
+                buf.clear();
+                Ok(WindowOut { metrics, proof })
+            };
+            while let Ok((step, wit)) = rx.recv() {
+                if buf.is_empty() {
+                    start_step = step;
+                }
+                buf.push(wit);
+                if buf.len() == window {
+                    out.push(flush(&mut buf, start_step, &mut prng)?);
+                }
+            }
+            if !buf.is_empty() {
+                out.push(flush(&mut buf, start_step, &mut prng)?);
+            }
+            Ok(out)
+        });
+
+        for step in 0..opts.steps {
+            let (x, y) = dataset.batch(&cfg, step);
+            let t0 = Instant::now();
+            let wit = source
+                .compute_witness(&x, &y, &weights)
+                .with_context(|| format!("witness at step {step}"))?;
+            witness_ms_total += t0.elapsed().as_secs_f64() * 1e3;
+            losses.push(wit.loss());
+            weights.apply_update(&wit.weight_grads());
+            if tx.send((step, wit)).is_err() {
+                // worker exited early — stop feeding and surface its error
+                break;
+            }
+        }
+        drop(tx);
+        let outs = aggregator.join().expect("aggregator worker panicked")?;
+        let mut metrics = Vec::with_capacity(outs.len());
+        let mut proofs = Vec::with_capacity(outs.len());
+        for o in outs {
+            metrics.push(o.metrics);
+            proofs.push(o.proof);
+        }
+        Ok((metrics, proofs))
+    })?;
+
+    Ok(TraceRunReport {
+        windows,
+        proofs,
+        losses,
+        witness_ms_total,
+        wall_s: t_run.elapsed().as_secs_f64(),
+    })
 }
 
 #[cfg(test)]
@@ -171,6 +415,10 @@ mod tests {
         assert_eq!(report.steps[1].proof_bytes, 0);
         assert!(report.steps[2].proof_bytes > 0);
         assert!(report.to_csv().lines().count() == 4);
+        assert!(report.wall_s > 0.0);
+        assert!(report.throughput_steps_per_s() > 0.0);
+        // pipelining must preserve step order in the metrics trail
+        assert!(report.steps.windows(2).all(|w| w[0].step + 1 == w[1].step));
     }
 
     #[test]
@@ -188,5 +436,26 @@ mod tests {
         let first = report.steps[0].loss;
         let last = report.steps.last().unwrap().loss;
         assert!(last < first, "loss should fall: {first} → {last}");
+    }
+
+    #[test]
+    fn trace_driver_windows_cover_all_steps() {
+        let cfg = ModelConfig::new(2, 8, 4);
+        let ds = Dataset::synthetic(32, 4, 4, cfg.r_bits, 11);
+        let opts = TraceTrainOptions {
+            steps: 3,
+            window: 2, // windows of 2 and 1
+            seed: 3,
+            skip_verify: false,
+        };
+        let report =
+            train_and_prove_trace(cfg, &ds, Path::new("artifacts"), &opts).expect("trace run");
+        assert_eq!(report.windows.len(), 2);
+        assert_eq!(report.windows[0].steps, 2);
+        assert_eq!(report.windows[1].steps, 1);
+        assert_eq!(report.windows[1].start_step, 2);
+        assert_eq!(report.proofs.len(), 2);
+        assert_eq!(report.losses.len(), 3);
+        assert!(report.total_proof_bytes() > 0);
     }
 }

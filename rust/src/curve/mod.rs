@@ -80,6 +80,33 @@ impl G1Affine {
         }
         out
     }
+
+    /// Parse the [`Self::to_bytes`] encoding. All-zero bytes decode to the
+    /// identity; anything else must be a canonical (fully reduced) coordinate
+    /// pair on the curve — BN254 has cofactor 1, so on-curve implies
+    /// in-group. Returns `None` for any malformed encoding.
+    pub fn from_bytes(bytes: &[u8; 64]) -> Option<Self> {
+        if bytes.iter().all(|&b| b == 0) {
+            return Some(Self::IDENTITY);
+        }
+        let mut xb = [0u8; 32];
+        let mut yb = [0u8; 32];
+        xb.copy_from_slice(&bytes[..32]);
+        yb.copy_from_slice(&bytes[32..]);
+        let x = Fq::from_bytes(&xb);
+        let y = Fq::from_bytes(&yb);
+        // `Fq::from_bytes` reduces silently; demand canonical encodings so
+        // every point has exactly one wire representation.
+        if x.to_bytes() != xb || y.to_bytes() != yb {
+            return None;
+        }
+        let p = Self {
+            x,
+            y,
+            infinity: false,
+        };
+        p.is_on_curve().then_some(p)
+    }
 }
 
 impl G1 {

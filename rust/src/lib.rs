@@ -11,10 +11,14 @@
 //!   [`commit`], [`poly`], [`sumcheck`], [`ipa`]
 //! * the paper's contribution: [`gkr`] (anchored layer proofs),
 //!   [`zkrelu`] (auxiliary-input validity), [`zkdl`] (Protocol 2),
+//!   [`aggregate`] (FAC4DNN multi-step trace aggregation),
 //!   [`merkle`] (Appendix B), [`baseline`] (SC-BD comparator)
-//! * the workload: [`quant`], [`model`], [`witness`], [`data`]
+//! * the workload: [`model`] (fixed-point quantized network), [`witness`],
+//!   [`data`]
 //! * the runtime: [`runtime`] (PJRT AOT artifacts), [`coordinator`]
+//!   (pipelined proving driver), [`wire`] (persisted proof artifacts)
 
+pub mod aggregate;
 pub mod baseline;
 pub mod commit;
 pub mod coordinator;
@@ -25,6 +29,7 @@ pub mod field;
 pub mod gkr;
 pub mod ipa;
 pub mod model;
+pub mod wire;
 pub mod witness;
 pub mod zkdl;
 pub mod zkrelu;

@@ -1,19 +1,24 @@
 //! zkdl — CLI for the zkDL proving system.
 //!
 //! Subcommands:
-//!   prove       prove + verify one training step
-//!   train       proven training run (loss curve + per-step proof metrics)
-//!   membership  build the Merkle tree and answer (non-)membership queries
-//!   info        print configuration and environment
+//!   prove        prove + verify one training step (optionally persist it)
+//!   train        proven training run (loss curve + per-step proof metrics)
+//!   prove-trace  aggregate T training steps into one FAC4DNN trace proof
+//!   verify-trace re-read a persisted trace proof and verify out-of-process
+//!   membership   build the Merkle tree and answer (non-)membership queries
+//!   info         print configuration and environment
 //!
 //! Example:
-//!   zkdl prove --depth 2 --width 64 --batch 16 --mode parallel
+//!   zkdl prove --depth 2 --width 64 --batch 16 --mode parallel --out step.zkp
 //!   zkdl train --depth 3 --width 64 --batch 16 --steps 50 --prove-every 10
+//!   zkdl prove-trace --depth 2 --width 16 --batch 8 --steps 16 --out trace.zkp
+//!   zkdl verify-trace --in trace.zkp
 //!   zkdl membership --n 1000 --queries 100 --hash sha256 --positivity 0.5
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 use std::path::Path;
-use zkdl::coordinator::{train_and_prove, TrainOptions};
+use zkdl::aggregate::{verify_trace, TraceKey};
+use zkdl::coordinator::{train_and_prove, train_and_prove_trace, TraceTrainOptions, TrainOptions};
 use zkdl::data::Dataset;
 use zkdl::hash::HashFn;
 use zkdl::merkle::{verify_membership, MerkleTree};
@@ -75,7 +80,74 @@ fn cmd_prove(cli: &Cli) -> Result<()> {
         t.elapsed().as_secs_f64(),
         proof.size_bytes() as f64 / 1024.0
     );
+    if let Some(path) = cli.get("out") {
+        let bytes = zkdl::wire::encode_step_proof(&cfg, &proof);
+        std::fs::write(path, &bytes)?;
+        println!("wrote {path} ({} wire bytes)", bytes.len());
+    }
     Ok(())
+}
+
+fn cmd_prove_trace(cli: &Cli) -> Result<()> {
+    let cfg = model_config(cli);
+    let steps = cli.get_usize("steps", 8);
+    let out = cli.get("out").unwrap_or("trace.zkp");
+    let opts = TraceTrainOptions {
+        steps,
+        window: cli.get_usize("window", 0), // 0 = one window over the run
+        seed: cli.get_u64("seed", 1),
+        skip_verify: cli.flag("skip-verify"),
+    };
+    println!(
+        "aggregating {steps} training steps: L={} d={} B={}",
+        cfg.depth, cfg.width, cfg.batch
+    );
+    let ds = synthetic_dataset(cli, &cfg);
+    let report = train_and_prove_trace(cfg, &ds, Path::new("artifacts"), &opts)?;
+    println!("{}", report.summary());
+    for (i, (w, proof)) in report.windows.iter().zip(report.proofs.iter()).enumerate() {
+        let path = if report.proofs.len() == 1 {
+            out.to_string()
+        } else {
+            format!("{out}.{i}")
+        };
+        let bytes = zkdl::wire::encode_trace_proof(&cfg, proof);
+        std::fs::write(&path, &bytes)?;
+        println!(
+            "window {i}: steps {}..{} → {path} ({} wire bytes, {} proof bytes)",
+            w.start_step,
+            w.start_step + w.steps,
+            bytes.len(),
+            w.proof_bytes
+        );
+    }
+    Ok(())
+}
+
+fn cmd_verify_trace(cli: &Cli) -> Result<()> {
+    let path = cli.get("in").unwrap_or("trace.zkp");
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    let (cfg, proof) = zkdl::wire::decode_trace_proof(&bytes)?;
+    println!(
+        "trace proof: {} steps, L={} d={} B={}, {} wire bytes",
+        proof.steps, cfg.depth, cfg.width, cfg.batch, bytes.len()
+    );
+    let tk = TraceKey::setup(cfg, proof.steps);
+    let t = std::time::Instant::now();
+    verify_trace(&tk, &proof).context("trace verification failed")?;
+    println!("verified in {:.3} s", t.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// Shared synthetic-dataset recipe for the training verbs.
+fn synthetic_dataset(cli: &Cli, cfg: &ModelConfig) -> Dataset {
+    Dataset::synthetic(
+        cli.get_usize("data-n", 1024),
+        cfg.width.min(512),
+        10,
+        cfg.r_bits,
+        3,
+    )
 }
 
 fn cmd_train(cli: &Cli) -> Result<()> {
@@ -86,14 +158,9 @@ fn cmd_train(cli: &Cli) -> Result<()> {
         mode: proof_mode(cli),
         seed: cli.get_u64("seed", 1),
         skip_verify: cli.flag("skip-verify"),
+        pipeline_depth: cli.get_usize("pipeline-depth", 2),
     };
-    let ds = Dataset::synthetic(
-        cli.get_usize("data-n", 1024),
-        cfg.width.min(512),
-        10,
-        cfg.r_bits,
-        3,
-    );
+    let ds = synthetic_dataset(cli, &cfg);
     let report = train_and_prove(cfg, &ds, Path::new("artifacts"), &opts)?;
     println!("{}", report.summary());
     if let Some(path) = cli.get("csv") {
@@ -166,6 +233,8 @@ fn main() -> Result<()> {
     match cli.subcommand.as_deref() {
         Some("prove") => cmd_prove(&cli),
         Some("train") => cmd_train(&cli),
+        Some("prove-trace") => cmd_prove_trace(&cli),
+        Some("verify-trace") => cmd_verify_trace(&cli),
         Some("membership") => cmd_membership(&cli),
         Some("info") | None => {
             cmd_info();
@@ -173,7 +242,9 @@ fn main() -> Result<()> {
         }
         Some(other) => {
             eprintln!("unknown subcommand: {other}");
-            eprintln!("usage: zkdl [prove|train|membership|info] [--key value]");
+            eprintln!(
+                "usage: zkdl [prove|train|prove-trace|verify-trace|membership|info] [--key value]"
+            );
             std::process::exit(2);
         }
     }

@@ -1,0 +1,735 @@
+//! Canonical binary wire format for persisted proofs.
+//!
+//! Proofs become verifier-portable artifacts: `zkdl prove-trace --out f`
+//! writes a [`TraceProof`] to disk and a *separate* `zkdl verify-trace
+//! --in f` process re-reads and verifies it. The codec is deliberately
+//! serde-free and versioned:
+//!
+//! * envelope: magic `"ZKDL"` ‖ version u16 LE ‖ kind u16 LE ‖ embedded
+//!   [`ModelConfig`] ‖ payload — a file is self-describing, so the verifier
+//!   reconstructs the (deterministic, label-derived) keys from the file
+//!   alone;
+//! * scalars are canonical 32-byte little-endian [`Fr`]; points are the
+//!   64-byte uncompressed [`G1Affine`] encoding. Decoding *rejects*
+//!   non-canonical scalars and off-curve points, so every proof has exactly
+//!   one byte representation and `decode(encode(p)) == p` re-encodes to the
+//!   identical bytes;
+//! * vectors carry u32 length prefixes bounded by the remaining input, and
+//!   the envelope must be consumed exactly (no trailing garbage).
+//!
+//! Bumping [`VERSION`] is required for any layout change; the golden-bytes
+//! test in `rust/tests/wire_format.rs` pins the current header.
+
+use crate::aggregate::{StepCommitmentSet, TraceProof};
+use crate::curve::G1Affine;
+use crate::field::Fr;
+use crate::ipa::IpaProof;
+use crate::model::ModelConfig;
+use crate::sumcheck::SumcheckProof;
+use crate::zkdl::{GroupProof, ProofMode, StepProof};
+use crate::zkrelu::{Protocol1Msg, ValidityProof};
+use anyhow::{bail, ensure, Context, Result};
+
+/// File magic, first four bytes of every proof artifact.
+pub const MAGIC: [u8; 4] = *b"ZKDL";
+/// Format version; bump on any layout change.
+pub const VERSION: u16 = 1;
+
+/// Payload discriminant in the envelope header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProofKind {
+    Step,
+    Trace,
+}
+
+impl ProofKind {
+    fn tag(self) -> u16 {
+        match self {
+            ProofKind::Step => 1,
+            ProofKind::Trace => 2,
+        }
+    }
+
+    fn from_tag(tag: u16) -> Result<Self> {
+        match tag {
+            1 => Ok(ProofKind::Step),
+            2 => Ok(ProofKind::Trace),
+            other => bail!("wire: unknown proof kind {other}"),
+        }
+    }
+}
+
+/// Append-only byte sink.
+#[derive(Default)]
+pub struct WireWriter {
+    buf: Vec<u8>,
+}
+
+impl WireWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn put_len(&mut self, n: usize) {
+        assert!(n <= u32::MAX as usize, "wire: vector too long");
+        self.put_u32(n as u32);
+    }
+
+    pub fn put<T: ToWire + ?Sized>(&mut self, v: &T) {
+        v.to_wire(self);
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Checked cursor over an input buffer.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.remaining() >= n, "wire: unexpected end of input");
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Length prefix, sanity-bounded by the remaining input so corrupted
+    /// prefixes cannot trigger absurd allocations.
+    pub fn get_len(&mut self) -> Result<usize> {
+        let n = self.get_u32()? as usize;
+        ensure!(n <= self.remaining(), "wire: length prefix exceeds input");
+        Ok(n)
+    }
+
+    pub fn get<T: FromWire>(&mut self) -> Result<T> {
+        T::from_wire(self)
+    }
+
+    /// The input must be consumed exactly.
+    pub fn expect_end(&self) -> Result<()> {
+        ensure!(self.remaining() == 0, "wire: {} trailing bytes", self.remaining());
+        Ok(())
+    }
+}
+
+/// Encode `self` into the writer.
+pub trait ToWire {
+    fn to_wire(&self, w: &mut WireWriter);
+}
+
+/// Decode an instance from the reader, rejecting malformed input.
+pub trait FromWire: Sized {
+    fn from_wire(r: &mut WireReader) -> Result<Self>;
+}
+
+// ---------------------------------------------------------------------------
+// Primitives
+// ---------------------------------------------------------------------------
+
+impl ToWire for Fr {
+    fn to_wire(&self, w: &mut WireWriter) {
+        w.put_bytes(&self.to_bytes());
+    }
+}
+
+impl FromWire for Fr {
+    fn from_wire(r: &mut WireReader) -> Result<Self> {
+        let raw: [u8; 32] = r.take(32)?.try_into().unwrap();
+        let v = Fr::from_bytes(&raw);
+        // `from_bytes` reduces silently; only canonical encodings round-trip.
+        ensure!(v.to_bytes() == raw, "wire: non-canonical field element");
+        Ok(v)
+    }
+}
+
+impl ToWire for G1Affine {
+    fn to_wire(&self, w: &mut WireWriter) {
+        w.put_bytes(&self.to_bytes());
+    }
+}
+
+impl FromWire for G1Affine {
+    fn from_wire(r: &mut WireReader) -> Result<Self> {
+        let raw: [u8; 64] = r.take(64)?.try_into().unwrap();
+        G1Affine::from_bytes(&raw).context("wire: invalid curve point")
+    }
+}
+
+impl<T: ToWire> ToWire for Vec<T> {
+    fn to_wire(&self, w: &mut WireWriter) {
+        w.put_len(self.len());
+        for item in self {
+            item.to_wire(w);
+        }
+    }
+}
+
+impl<T: FromWire> FromWire for Vec<T> {
+    fn from_wire(r: &mut WireReader) -> Result<Self> {
+        let n = r.get_len()?;
+        // cap the up-front reservation: `n` is bounded by remaining *bytes*,
+        // but elements are many bytes wide — a corrupted prefix must not
+        // amplify into a huge allocation before the first element fails
+        let mut out = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            out.push(T::from_wire(r)?);
+        }
+        Ok(out)
+    }
+}
+
+impl<T: ToWire> ToWire for Option<T> {
+    fn to_wire(&self, w: &mut WireWriter) {
+        match self {
+            None => w.put_u8(0),
+            Some(v) => {
+                w.put_u8(1);
+                v.to_wire(w);
+            }
+        }
+    }
+}
+
+impl<T: FromWire> FromWire for Option<T> {
+    fn from_wire(r: &mut WireReader) -> Result<Self> {
+        match r.get_u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(T::from_wire(r)?)),
+            other => bail!("wire: invalid option tag {other}"),
+        }
+    }
+}
+
+impl ToWire for (Fr, Fr) {
+    fn to_wire(&self, w: &mut WireWriter) {
+        self.0.to_wire(w);
+        self.1.to_wire(w);
+    }
+}
+
+impl FromWire for (Fr, Fr) {
+    fn from_wire(r: &mut WireReader) -> Result<Self> {
+        Ok((r.get()?, r.get()?))
+    }
+}
+
+impl ToWire for [Fr; 5] {
+    fn to_wire(&self, w: &mut WireWriter) {
+        for v in self {
+            v.to_wire(w);
+        }
+    }
+}
+
+impl FromWire for [Fr; 5] {
+    fn from_wire(r: &mut WireReader) -> Result<Self> {
+        Ok([r.get()?, r.get()?, r.get()?, r.get()?, r.get()?])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Proof components
+// ---------------------------------------------------------------------------
+
+impl ToWire for ModelConfig {
+    fn to_wire(&self, w: &mut WireWriter) {
+        w.put_u32(self.depth as u32);
+        w.put_u32(self.width as u32);
+        w.put_u32(self.batch as u32);
+        w.put_u32(self.r_bits);
+        w.put_u32(self.q_bits);
+        w.put_u32(self.lr_shift);
+    }
+}
+
+impl FromWire for ModelConfig {
+    fn from_wire(r: &mut WireReader) -> Result<Self> {
+        let depth = r.get_u32()? as usize;
+        let width = r.get_u32()? as usize;
+        let batch = r.get_u32()? as usize;
+        let r_bits = r.get_u32()?;
+        let q_bits = r.get_u32()?;
+        let lr_shift = r.get_u32()?;
+        // resource bounds: decoded configs drive key setup before the proof
+        // body is validated, so untrusted files must not be able to request
+        // absurd basis sizes (paper maximum is width 4096)
+        ensure!(depth >= 1 && depth <= 256, "wire: bad depth");
+        ensure!(
+            width.is_power_of_two() && width <= 4096,
+            "wire: bad width (power of two ≤ 4096 required)"
+        );
+        ensure!(
+            batch.is_power_of_two() && batch <= 4096,
+            "wire: bad batch (power of two ≤ 4096 required)"
+        );
+        ensure!(
+            r_bits >= 1 && q_bits >= 2 && r_bits + q_bits <= 64,
+            "wire: bad quantization bits"
+        );
+        ensure!(lr_shift <= 63, "wire: bad lr shift");
+        Ok(ModelConfig {
+            depth,
+            width,
+            batch,
+            r_bits,
+            q_bits,
+            lr_shift,
+        })
+    }
+}
+
+impl ToWire for ProofMode {
+    fn to_wire(&self, w: &mut WireWriter) {
+        w.put_u8(match self {
+            ProofMode::Parallel => 0,
+            ProofMode::Sequential => 1,
+        });
+    }
+}
+
+impl FromWire for ProofMode {
+    fn from_wire(r: &mut WireReader) -> Result<Self> {
+        match r.get_u8()? {
+            0 => Ok(ProofMode::Parallel),
+            1 => Ok(ProofMode::Sequential),
+            other => bail!("wire: unknown proof mode {other}"),
+        }
+    }
+}
+
+impl ToWire for SumcheckProof {
+    fn to_wire(&self, w: &mut WireWriter) {
+        w.put_u32(self.degree as u32);
+        w.put_u32(self.num_vars as u32);
+        w.put(&self.round_evals);
+    }
+}
+
+impl FromWire for SumcheckProof {
+    fn from_wire(r: &mut WireReader) -> Result<Self> {
+        let degree = r.get_u32()? as usize;
+        let num_vars = r.get_u32()? as usize;
+        let round_evals: Vec<Vec<Fr>> = r.get()?;
+        Ok(SumcheckProof {
+            round_evals,
+            degree,
+            num_vars,
+        })
+    }
+}
+
+impl ToWire for IpaProof {
+    fn to_wire(&self, w: &mut WireWriter) {
+        w.put(&self.l);
+        w.put(&self.r);
+        w.put(&self.a);
+        w.put(&self.b);
+        w.put(&self.blind);
+    }
+}
+
+impl FromWire for IpaProof {
+    fn from_wire(r: &mut WireReader) -> Result<Self> {
+        Ok(IpaProof {
+            l: r.get()?,
+            r: r.get()?,
+            a: r.get()?,
+            b: r.get()?,
+            blind: r.get()?,
+        })
+    }
+}
+
+impl ToWire for Protocol1Msg {
+    fn to_wire(&self, w: &mut WireWriter) {
+        w.put(&self.com_b_ip);
+        w.put(&self.com_sign_prime);
+    }
+}
+
+impl FromWire for Protocol1Msg {
+    fn from_wire(r: &mut WireReader) -> Result<Self> {
+        Ok(Protocol1Msg {
+            com_b_ip: r.get()?,
+            com_sign_prime: r.get()?,
+        })
+    }
+}
+
+impl ToWire for ValidityProof {
+    fn to_wire(&self, w: &mut WireWriter) {
+        w.put(&self.ipa);
+    }
+}
+
+impl FromWire for ValidityProof {
+    fn from_wire(r: &mut WireReader) -> Result<Self> {
+        Ok(ValidityProof { ipa: r.get()? })
+    }
+}
+
+impl ToWire for GroupProof {
+    fn to_wire(&self, w: &mut WireWriter) {
+        w.put(&self.p1_main);
+        w.put(&self.p1_rem);
+        w.put(&self.v_z);
+        w.put(&self.v_ga);
+        w.put(&self.v_gw);
+        w.put(&self.mm30);
+        w.put(&self.mm30_evals);
+        w.put(&self.mm33);
+        w.put(&self.mm33_evals);
+        w.put(&self.mm34);
+        w.put(&self.mm34_evals);
+        w.put(&self.stack);
+        w.put(&self.va1);
+        w.put(&self.va2);
+        w.put(&self.vgz1);
+        w.put(&self.vgz2);
+        w.put(&self.aux_evals);
+        w.put(&self.openings);
+        w.put(&self.validity_main);
+        w.put(&self.validity_rem);
+    }
+}
+
+impl FromWire for GroupProof {
+    fn from_wire(r: &mut WireReader) -> Result<Self> {
+        Ok(GroupProof {
+            p1_main: r.get()?,
+            p1_rem: r.get()?,
+            v_z: r.get()?,
+            v_ga: r.get()?,
+            v_gw: r.get()?,
+            mm30: r.get()?,
+            mm30_evals: r.get()?,
+            mm33: r.get()?,
+            mm33_evals: r.get()?,
+            mm34: r.get()?,
+            mm34_evals: r.get()?,
+            stack: r.get()?,
+            va1: r.get()?,
+            va2: r.get()?,
+            vgz1: r.get()?,
+            vgz2: r.get()?,
+            aux_evals: r.get()?,
+            openings: r.get()?,
+            validity_main: r.get()?,
+            validity_rem: r.get()?,
+        })
+    }
+}
+
+impl ToWire for StepProof {
+    fn to_wire(&self, w: &mut WireWriter) {
+        w.put(&self.mode);
+        w.put(&self.com_w);
+        w.put(&self.com_gw);
+        w.put(&self.com_zdp);
+        w.put(&self.com_sign);
+        w.put(&self.com_rz);
+        w.put(&self.com_gap);
+        w.put(&self.com_rga);
+        w.put(&self.com_x);
+        w.put(&self.com_y);
+        w.put(&self.groups);
+    }
+}
+
+impl FromWire for StepProof {
+    fn from_wire(r: &mut WireReader) -> Result<Self> {
+        Ok(StepProof {
+            mode: r.get()?,
+            com_w: r.get()?,
+            com_gw: r.get()?,
+            com_zdp: r.get()?,
+            com_sign: r.get()?,
+            com_rz: r.get()?,
+            com_gap: r.get()?,
+            com_rga: r.get()?,
+            com_x: r.get()?,
+            com_y: r.get()?,
+            groups: r.get()?,
+        })
+    }
+}
+
+impl ToWire for StepCommitmentSet {
+    fn to_wire(&self, w: &mut WireWriter) {
+        w.put(&self.com_w);
+        w.put(&self.com_gw);
+        w.put(&self.com_zdp);
+        w.put(&self.com_sign);
+        w.put(&self.com_rz);
+        w.put(&self.com_gap);
+        w.put(&self.com_rga);
+        w.put(&self.com_x);
+        w.put(&self.com_y);
+    }
+}
+
+impl FromWire for StepCommitmentSet {
+    fn from_wire(r: &mut WireReader) -> Result<Self> {
+        Ok(StepCommitmentSet {
+            com_w: r.get()?,
+            com_gw: r.get()?,
+            com_zdp: r.get()?,
+            com_sign: r.get()?,
+            com_rz: r.get()?,
+            com_gap: r.get()?,
+            com_rga: r.get()?,
+            com_x: r.get()?,
+            com_y: r.get()?,
+        })
+    }
+}
+
+impl ToWire for TraceProof {
+    fn to_wire(&self, w: &mut WireWriter) {
+        w.put_u32(self.steps as u32);
+        w.put(&self.coms);
+        w.put(&self.p1_main);
+        w.put(&self.p1_rem);
+        w.put(&self.v_z);
+        w.put(&self.v_ga);
+        w.put(&self.v_gw);
+        w.put(&self.mm30);
+        w.put(&self.mm30_evals);
+        w.put(&self.mm33);
+        w.put(&self.mm33_evals);
+        w.put(&self.mm34);
+        w.put(&self.mm34_evals);
+        w.put(&self.stack);
+        w.put(&self.va1);
+        w.put(&self.va2);
+        w.put(&self.vgz1);
+        w.put(&self.vgz2);
+        w.put(&self.aux_evals);
+        w.put(&self.openings);
+        w.put(&self.validity_main);
+        w.put(&self.validity_rem);
+    }
+}
+
+impl FromWire for TraceProof {
+    fn from_wire(r: &mut WireReader) -> Result<Self> {
+        let steps = r.get_u32()? as usize;
+        ensure!(steps >= 1 && steps <= 1 << 16, "wire: bad step count");
+        Ok(TraceProof {
+            steps,
+            coms: r.get()?,
+            p1_main: r.get()?,
+            p1_rem: r.get()?,
+            v_z: r.get()?,
+            v_ga: r.get()?,
+            v_gw: r.get()?,
+            mm30: r.get()?,
+            mm30_evals: r.get()?,
+            mm33: r.get()?,
+            mm33_evals: r.get()?,
+            mm34: r.get()?,
+            mm34_evals: r.get()?,
+            stack: r.get()?,
+            va1: r.get()?,
+            va2: r.get()?,
+            vgz1: r.get()?,
+            vgz2: r.get()?,
+            aux_evals: r.get()?,
+            openings: r.get()?,
+            validity_main: r.get()?,
+            validity_rem: r.get()?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Envelope
+// ---------------------------------------------------------------------------
+
+fn encode_envelope(kind: ProofKind, cfg: &ModelConfig, body: &dyn ToWire) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.put_bytes(&MAGIC);
+    w.put_u16(VERSION);
+    w.put_u16(kind.tag());
+    w.put(cfg);
+    body.to_wire(&mut w);
+    w.finish()
+}
+
+fn decode_envelope<'a>(bytes: &'a [u8], want: ProofKind) -> Result<(ModelConfig, WireReader<'a>)> {
+    let mut r = WireReader::new(bytes);
+    let magic = r.take(4)?;
+    ensure!(magic == MAGIC.as_slice(), "wire: bad magic");
+    let version = r.get_u16()?;
+    ensure!(version == VERSION, "wire: unsupported version {version}");
+    let kind = ProofKind::from_tag(r.get_u16()?)?;
+    ensure!(kind == want, "wire: expected {want:?} payload, found {kind:?}");
+    let cfg: ModelConfig = r.get()?;
+    Ok((cfg, r))
+}
+
+/// Serialize one per-step proof with its configuration.
+pub fn encode_step_proof(cfg: &ModelConfig, proof: &StepProof) -> Vec<u8> {
+    encode_envelope(ProofKind::Step, cfg, proof)
+}
+
+/// Parse a [`encode_step_proof`] artifact, rejecting malformed input.
+pub fn decode_step_proof(bytes: &[u8]) -> Result<(ModelConfig, StepProof)> {
+    let (cfg, mut r) = decode_envelope(bytes, ProofKind::Step)?;
+    let proof: StepProof = r.get()?;
+    r.expect_end()?;
+    Ok((cfg, proof))
+}
+
+/// Serialize an aggregated trace proof with its configuration.
+pub fn encode_trace_proof(cfg: &ModelConfig, proof: &TraceProof) -> Vec<u8> {
+    encode_envelope(ProofKind::Trace, cfg, proof)
+}
+
+/// Largest trace-stacked aux basis a decoded artifact may request
+/// (`verify-trace` derives keys from the embedded config before the proof
+/// body can be checked, so this is the decoder's resource ceiling).
+pub const MAX_TRACE_AUX_SIZE: usize = 1 << 28;
+
+/// Parse an [`encode_trace_proof`] artifact, rejecting malformed input.
+/// Beyond the envelope, this enforces the structural invariants that key
+/// setup and verification rely on: per-step commitment counts match the
+/// config's depth, and the implied trace basis stays within
+/// [`MAX_TRACE_AUX_SIZE`].
+pub fn decode_trace_proof(bytes: &[u8]) -> Result<(ModelConfig, TraceProof)> {
+    let (cfg, mut r) = decode_envelope(bytes, ProofKind::Trace)?;
+    let proof: TraceProof = r.get()?;
+    r.expect_end()?;
+    ensure!(proof.coms.len() == proof.steps, "wire: commitment set count");
+    for set in &proof.coms {
+        ensure!(
+            set.com_w.len() == cfg.depth
+                && set.com_gw.len() == cfg.depth
+                && set.com_zdp.len() == cfg.depth
+                && set.com_sign.len() == cfg.depth
+                && set.com_rz.len() == cfg.depth
+                && set.com_gap.len() == cfg.depth
+                && set.com_rga.len() == cfg.depth,
+            "wire: per-step commitment count"
+        );
+    }
+    let n = proof
+        .steps
+        .next_power_of_two()
+        .checked_mul(cfg.depth.next_power_of_two())
+        .and_then(|x| x.checked_mul(cfg.d_size()))
+        .context("wire: trace dimensions overflow")?;
+    ensure!(
+        n <= MAX_TRACE_AUX_SIZE,
+        "wire: trace basis of {n} elements exceeds the decoder limit"
+    );
+    Ok((cfg, proof))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::curve::G1;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn primitive_roundtrips() {
+        let mut rng = Rng::seed_from_u64(0x111e);
+        let fr = Fr::random(&mut rng);
+        let pt = G1::random(&mut rng).to_affine();
+        let mut w = WireWriter::new();
+        w.put(&fr);
+        w.put(&pt);
+        w.put(&G1Affine::IDENTITY);
+        w.put(&Some(fr));
+        w.put(&None::<Fr>);
+        w.put(&vec![fr, fr + Fr::ONE]);
+        let bytes = w.finish();
+        let mut r = WireReader::new(&bytes);
+        assert_eq!(r.get::<Fr>().unwrap(), fr);
+        assert_eq!(r.get::<G1Affine>().unwrap(), pt);
+        assert_eq!(r.get::<G1Affine>().unwrap(), G1Affine::IDENTITY);
+        assert_eq!(r.get::<Option<Fr>>().unwrap(), Some(fr));
+        assert_eq!(r.get::<Option<Fr>>().unwrap(), None);
+        assert_eq!(r.get::<Vec<Fr>>().unwrap(), vec![fr, fr + Fr::ONE]);
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn rejects_non_canonical_scalar() {
+        let bytes = [0xffu8; 32];
+        let mut r = WireReader::new(&bytes);
+        assert!(r.get::<Fr>().is_err());
+    }
+
+    #[test]
+    fn rejects_off_curve_point() {
+        let mut bytes = [0u8; 64];
+        bytes[0] = 5; // x=5, y=0 is not on y² = x³ + 3
+        let mut r = WireReader::new(&bytes);
+        assert!(r.get::<G1Affine>().is_err());
+    }
+
+    #[test]
+    fn rejects_truncation_and_bad_length() {
+        let mut w = WireWriter::new();
+        w.put(&vec![Fr::ONE; 3]);
+        let bytes = w.finish();
+        let mut r = WireReader::new(&bytes[..bytes.len() - 1]);
+        assert!(r.get::<Vec<Fr>>().is_err());
+        // length prefix claiming more than the input holds
+        let mut huge = 1000u32.to_le_bytes().to_vec();
+        huge.extend_from_slice(&[0u8; 8]);
+        let mut r = WireReader::new(&huge);
+        assert!(r.get::<Vec<Fr>>().is_err());
+    }
+}

@@ -92,19 +92,19 @@ impl ProverKey {
 
 /// One committed tensor with its opening (prover side).
 #[derive(Clone)]
-struct Committed {
-    values: Vec<Fr>,
-    blind: Fr,
-    com: G1,
+pub(crate) struct Committed {
+    pub(crate) values: Vec<Fr>,
+    pub(crate) blind: Fr,
+    pub(crate) com: G1,
 }
 
-fn commit(ck: &CommitKey, values: Vec<Fr>, rng: &mut Rng) -> Committed {
+pub(crate) fn commit(ck: &CommitKey, values: Vec<Fr>, rng: &mut Rng) -> Committed {
     let blind = Fr::random(rng);
     let com = ck.commit(&values, blind);
     Committed { values, blind, com }
 }
 
-fn frs(v: &[i64]) -> Vec<Fr> {
+pub(crate) fn frs(v: &[i64]) -> Vec<Fr> {
     v.iter().map(|&x| Fr::from_i64(x)).collect()
 }
 
@@ -209,22 +209,22 @@ impl StepProof {
 // ---------------------------------------------------------------------------
 
 /// Prover-side tensors of one layer group.
-struct ProverLayers<'a> {
-    wit: &'a StepWitness,
+pub(crate) struct ProverLayers<'a> {
+    pub(crate) wit: &'a StepWitness,
     // field copies of all tensors, indexed by layer
-    w: Vec<gkr::Matrix>,
-    a: Vec<gkr::Matrix>, // activations A^0..A^{L-1}; A^{-1} = X handled apart
-    x: gkr::Matrix,
-    g_z: Vec<gkr::Matrix>,
-    zdp: Vec<Vec<Fr>>,
-    sign: Vec<Vec<Fr>>,
-    rz: Vec<Vec<Fr>>,
-    gap: Vec<Vec<Fr>>,
-    rga: Vec<Vec<Fr>>,
+    pub(crate) w: Vec<gkr::Matrix>,
+    pub(crate) a: Vec<gkr::Matrix>, // activations A^0..A^{L-1}; A^{-1} = X handled apart
+    pub(crate) x: gkr::Matrix,
+    pub(crate) g_z: Vec<gkr::Matrix>,
+    pub(crate) zdp: Vec<Vec<Fr>>,
+    pub(crate) sign: Vec<Vec<Fr>>,
+    pub(crate) rz: Vec<Vec<Fr>>,
+    pub(crate) gap: Vec<Vec<Fr>>,
+    pub(crate) rga: Vec<Vec<Fr>>,
 }
 
 impl<'a> ProverLayers<'a> {
-    fn build(wit: &'a StepWitness) -> Self {
+    pub(crate) fn build(wit: &'a StepWitness) -> Self {
         let cfg = &wit.cfg;
         let (b, d) = (cfg.batch, cfg.width);
         let depth = cfg.depth;
@@ -275,7 +275,7 @@ impl<'a> ProverLayers<'a> {
     }
 
     /// Stacked tensor over `layers` slots (padded to L̄·D with zeros).
-    fn stacked(&self, per_layer: &[Vec<Fr>], layers: &[usize], lbar: usize, d: usize) -> Vec<Fr> {
+    pub(crate) fn stacked(&self, per_layer: &[Vec<Fr>], layers: &[usize], lbar: usize, d: usize) -> Vec<Fr> {
         let mut out = vec![Fr::ZERO; lbar * d];
         for (slot, &l) in layers.iter().enumerate() {
             out[slot * d..slot * d + d].copy_from_slice(&per_layer[l]);
@@ -333,24 +333,24 @@ fn commit_step(pk: &ProverKey, pl: &ProverLayers, rng: &mut Rng) -> StepCommitme
     }
 }
 
-fn absorb_commitments(t: &mut Transcript, coms: &[(&[u8], Vec<G1Affine>)]) {
+pub(crate) fn absorb_commitments(t: &mut Transcript, coms: &[(&[u8], Vec<G1Affine>)]) {
     for (label, pts) in coms {
         t.absorb_points(label, pts);
     }
 }
 
 /// Challenge bundle of one group's matmul phase.
-struct GroupChallenges {
-    gamma: Fr,
-    u_zr: Vec<Fr>,
-    u_zc: Vec<Fr>,
-    u_gar: Vec<Fr>,
-    u_gac: Vec<Fr>,
-    u_gwr: Vec<Fr>,
-    u_gwc: Vec<Fr>,
+pub(crate) struct GroupChallenges {
+    pub(crate) gamma: Fr,
+    pub(crate) u_zr: Vec<Fr>,
+    pub(crate) u_zc: Vec<Fr>,
+    pub(crate) u_gar: Vec<Fr>,
+    pub(crate) u_gac: Vec<Fr>,
+    pub(crate) u_gwr: Vec<Fr>,
+    pub(crate) u_gwc: Vec<Fr>,
 }
 
-fn draw_group_challenges(t: &mut Transcript, log_b: usize, log_d: usize) -> GroupChallenges {
+pub(crate) fn draw_group_challenges(t: &mut Transcript, log_b: usize, log_d: usize) -> GroupChallenges {
     GroupChallenges {
         gamma: t.challenge_fr(b"zkdl/gamma"),
         u_zr: t.challenge_frs(b"zkdl/u_zr", log_b),
@@ -363,26 +363,26 @@ fn draw_group_challenges(t: &mut Transcript, log_b: usize, log_d: usize) -> Grou
 }
 
 /// Derived commitment of Z^ℓ via (3): com_zdp^{2^R}·com_sign^{−2^{Q+R−1}}·com_rz.
-fn derived_com_z(cfg: &ModelConfig, zdp: &G1, sign: &G1, rz: &G1) -> G1 {
+pub(crate) fn derived_com_z(cfg: &ModelConfig, zdp: &G1, sign: &G1, rz: &G1) -> G1 {
     let two_r = Fr::from_u128(1u128 << cfg.r_bits);
     let two_qr = Fr::from_u128(1u128 << (cfg.q_bits + cfg.r_bits - 1));
     zdp.mul(&two_r) + sign.mul(&(-two_qr)) + *rz
 }
 
 /// Derived commitment of G_A^ℓ via (5): com_gap^{2^R}·com_rga.
-fn derived_com_ga(cfg: &ModelConfig, gap: &G1, rga: &G1) -> G1 {
+pub(crate) fn derived_com_ga(cfg: &ModelConfig, gap: &G1, rga: &G1) -> G1 {
     gap.mul(&Fr::from_u128(1u128 << cfg.r_bits)) + *rga
 }
 
 /// Derived commitment of G_Z^{L−1} via (32): com_zdp·com_sign^{−2^{Q−1}}·com_y^{−1}.
-fn derived_com_gz_last(cfg: &ModelConfig, zdp: &G1, sign: &G1, y: &G1) -> G1 {
+pub(crate) fn derived_com_gz_last(cfg: &ModelConfig, zdp: &G1, sign: &G1, y: &G1) -> G1 {
     let two_q = Fr::from_u128(1u128 << (cfg.q_bits - 1));
     *zdp + sign.mul(&(-two_q)) + y.neg()
 }
 
 /// Prover-side derived openings (values + blinds follow the same linear
 /// combinations as the commitments).
-fn derived_open_z(cfg: &ModelConfig, zdp: &Committed, sign: &Committed, rz: &Committed) -> (Vec<Fr>, Fr) {
+pub(crate) fn derived_open_z(cfg: &ModelConfig, zdp: &Committed, sign: &Committed, rz: &Committed) -> (Vec<Fr>, Fr) {
     let two_r = Fr::from_u128(1u128 << cfg.r_bits);
     let two_qr = Fr::from_u128(1u128 << (cfg.q_bits + cfg.r_bits - 1));
     let vals = zdp
@@ -395,7 +395,7 @@ fn derived_open_z(cfg: &ModelConfig, zdp: &Committed, sign: &Committed, rz: &Com
     (vals, two_r * zdp.blind - two_qr * sign.blind + rz.blind)
 }
 
-fn derived_open_ga(cfg: &ModelConfig, gap: &Committed, rga: &Committed) -> (Vec<Fr>, Fr) {
+pub(crate) fn derived_open_ga(cfg: &ModelConfig, gap: &Committed, rga: &Committed) -> (Vec<Fr>, Fr) {
     let two_r = Fr::from_u128(1u128 << cfg.r_bits);
     let vals = gap
         .values
@@ -406,7 +406,7 @@ fn derived_open_ga(cfg: &ModelConfig, gap: &Committed, rga: &Committed) -> (Vec<
     (vals, two_r * gap.blind + rga.blind)
 }
 
-fn derived_open_gz_last(cfg: &ModelConfig, zdp: &Committed, sign: &Committed, y: &Committed) -> (Vec<Fr>, Fr) {
+pub(crate) fn derived_open_gz_last(cfg: &ModelConfig, zdp: &Committed, sign: &Committed, y: &Committed) -> (Vec<Fr>, Fr) {
     let two_q = Fr::from_u128(1u128 << (cfg.q_bits - 1));
     let vals = zdp
         .values
@@ -434,7 +434,7 @@ struct OpeningCheck {
 /// e(p) repeated in every slot block: ⟨V, tiled⟩ = ⟨V_slot, e(p)⟩ when V is
 /// zero outside one block. This is how per-layer claims open against
 /// commitments living in different blocks of the stacked basis.
-fn tiled_eq(p: &[Fr], lbar: usize) -> Vec<Fr> {
+pub(crate) fn tiled_eq(p: &[Fr], lbar: usize) -> Vec<Fr> {
     let e = eq_table(p);
     let mut out = Vec::with_capacity(lbar * e.len());
     for _ in 0..lbar {
@@ -1225,7 +1225,7 @@ fn tile_claims(claims: Vec<EvalClaim>, lbar: usize, d: usize) -> Vec<EvalClaim> 
     tile_claims_at(claims, &slots, lbar, d)
 }
 
-fn tile_claims_at(claims: Vec<EvalClaim>, slots: &[usize], lbar: usize, d: usize) -> Vec<EvalClaim> {
+pub(crate) fn tile_claims_at(claims: Vec<EvalClaim>, slots: &[usize], lbar: usize, d: usize) -> Vec<EvalClaim> {
     claims
         .into_iter()
         .zip(slots.iter())

@@ -1,0 +1,157 @@
+//! Integration tests for the FAC4DNN multi-step aggregation subsystem:
+//! honest roundtrips across trace shapes, the O(T)-vs-aggregated proof-size
+//! separation, and adversarial cases mirroring the per-step negative tests
+//! in `integration.rs` — a tampered step witness *inside* a trace must make
+//! `verify_trace` fail.
+
+use zkdl::aggregate::{prove_trace, trace_stack_dims, verify_trace, TraceKey};
+use zkdl::data::Dataset;
+use zkdl::model::{ModelConfig, Weights};
+use zkdl::util::rng::Rng;
+use zkdl::witness::native::compute_witness;
+use zkdl::witness::StepWitness;
+use zkdl::zkdl::{prove_step, verify_step, ProofMode, ProverKey};
+use zkdl::Fr;
+
+/// T consecutive SGD-step witnesses with real weight updates in between.
+fn witness_chain(cfg: ModelConfig, steps: usize, seed: u64) -> Vec<StepWitness> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let ds = Dataset::synthetic(64, cfg.width / 2, 4, cfg.r_bits, seed ^ 0x77);
+    let mut weights = Weights::init(cfg, &mut rng);
+    let mut out = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let (x, y) = ds.batch(&cfg, step);
+        let wit = compute_witness(cfg, &x, &y, &weights);
+        wit.validate().expect("witness valid");
+        weights.apply_update(&wit.weight_grads());
+        out.push(wit);
+    }
+    out
+}
+
+#[test]
+fn trace_roundtrip_two_steps_depth2() {
+    let cfg = ModelConfig::new(2, 8, 4);
+    let wits = witness_chain(cfg, 2, 1);
+    let tk = TraceKey::setup(cfg, 2);
+    let mut rng = Rng::seed_from_u64(10);
+    let proof = prove_trace(&tk, &wits, &mut rng);
+    verify_trace(&tk, &proof).expect("verifies");
+    assert_eq!(proof.steps, 2);
+    assert_eq!(proof.coms.len(), 2);
+}
+
+#[test]
+fn trace_roundtrip_non_power_of_two_steps() {
+    // T=3 pads to T̄=4: padding slots must be handled on both sides
+    let cfg = ModelConfig::new(2, 8, 4);
+    let (tbar, lbar, _) = trace_stack_dims(&cfg, 3);
+    assert_eq!((tbar, lbar), (4, 2));
+    let wits = witness_chain(cfg, 3, 2);
+    let tk = TraceKey::setup(cfg, 3);
+    let mut rng = Rng::seed_from_u64(11);
+    let proof = prove_trace(&tk, &wits, &mut rng);
+    verify_trace(&tk, &proof).expect("verifies");
+}
+
+#[test]
+fn trace_roundtrip_depth3() {
+    // depth ≥ 3 exercises the qz1 stacking term across steps
+    let cfg = ModelConfig::new(3, 8, 4);
+    let wits = witness_chain(cfg, 2, 3);
+    let tk = TraceKey::setup(cfg, 2);
+    let mut rng = Rng::seed_from_u64(12);
+    let proof = prove_trace(&tk, &wits, &mut rng);
+    verify_trace(&tk, &proof).expect("verifies");
+}
+
+#[test]
+fn trace_roundtrip_depth1_two_steps() {
+    // no ReLU layers: no stacking sumcheck, validity still runs per trace
+    let cfg = ModelConfig::new(1, 8, 4);
+    let wits = witness_chain(cfg, 2, 4);
+    let tk = TraceKey::setup(cfg, 2);
+    let mut rng = Rng::seed_from_u64(13);
+    let proof = prove_trace(&tk, &wits, &mut rng);
+    verify_trace(&tk, &proof).expect("verifies");
+}
+
+#[test]
+fn aggregated_proof_smaller_than_independent_steps() {
+    // StepProof size is determined by the configuration (not the witness),
+    // so T independent proofs cost exactly T × one proof's bytes.
+    let cfg = ModelConfig::new(2, 8, 4);
+    let t = 4;
+    let wits = witness_chain(cfg, t, 5);
+    let pk = ProverKey::setup(cfg);
+    let mut rng = Rng::seed_from_u64(14);
+    let step_proof = prove_step(&pk, &wits[0], ProofMode::Parallel, &mut rng);
+    verify_step(&pk, &step_proof).expect("step verifies");
+    let independent_bytes = t * step_proof.size_bytes();
+
+    let tk = TraceKey::setup(cfg, t);
+    let trace_proof = prove_trace(&tk, &wits, &mut rng);
+    verify_trace(&tk, &trace_proof).expect("trace verifies");
+    assert!(
+        trace_proof.size_bytes() < independent_bytes,
+        "aggregated {} B should beat {} B (T={t} independent steps)",
+        trace_proof.size_bytes(),
+        independent_bytes
+    );
+}
+
+#[test]
+fn rejects_tampered_step_witness_inside_trace() {
+    // mirror integration.rs::proof_rejects_wrong_gradient, but the bad step
+    // hides in the middle of an otherwise-honest aggregated trace
+    let cfg = ModelConfig::new(2, 8, 4);
+    let mut wits = witness_chain(cfg, 3, 6);
+    wits[1].layers[1].g_w[3] += 1; // violates (34) in step 1 only
+    let tk = TraceKey::setup(cfg, 3);
+    let mut rng = Rng::seed_from_u64(15);
+    let proof = prove_trace(&tk, &wits, &mut rng);
+    assert!(
+        verify_trace(&tk, &proof).is_err(),
+        "tampered step inside an aggregated trace must not verify"
+    );
+}
+
+#[test]
+fn rejects_forged_sign_bit_inside_trace() {
+    let cfg = ModelConfig::new(2, 8, 4);
+    let mut wits = witness_chain(cfg, 2, 7);
+    let aux = &mut wits[1].layers[0].z_aux;
+    let i = aux.sign.iter().position(|&s| s == 1).unwrap_or(0);
+    aux.sign[i] = 1 - aux.sign[i];
+    let tk = TraceKey::setup(cfg, 2);
+    let mut rng = Rng::seed_from_u64(16);
+    let proof = prove_trace(&tk, &wits, &mut rng);
+    assert!(verify_trace(&tk, &proof).is_err());
+}
+
+#[test]
+fn rejects_tampered_trace_proof_scalar() {
+    let cfg = ModelConfig::new(2, 8, 4);
+    let wits = witness_chain(cfg, 2, 8);
+    let tk = TraceKey::setup(cfg, 2);
+    let mut rng = Rng::seed_from_u64(17);
+    let mut proof = prove_trace(&tk, &wits, &mut rng);
+    proof.v_z[1] += Fr::ONE;
+    assert!(verify_trace(&tk, &proof).is_err());
+}
+
+#[test]
+fn rejects_spliced_commitments_across_traces() {
+    // prove two different traces, then graft trace B's argument onto trace
+    // A's commitments — Fiat–Shamir binding must reject the hybrid
+    let cfg = ModelConfig::new(2, 8, 4);
+    let wits_a = witness_chain(cfg, 2, 9);
+    let wits_b = witness_chain(cfg, 2, 10);
+    let tk = TraceKey::setup(cfg, 2);
+    let mut rng = Rng::seed_from_u64(18);
+    let proof_a = prove_trace(&tk, &wits_a, &mut rng);
+    let proof_b = prove_trace(&tk, &wits_b, &mut rng);
+    let mut hybrid = proof_b.clone();
+    hybrid.coms = proof_a.coms.clone();
+    assert!(verify_trace(&tk, &hybrid).is_err());
+}

@@ -1,0 +1,201 @@
+//! Wire-format tests: proptest-style randomized encode/decode roundtrips
+//! for every proof component, canonical re-encoding of real proofs, and a
+//! golden-bytes test pinning the versioned header so silent format drift is
+//! caught at CI time.
+
+use zkdl::aggregate::{prove_trace, verify_trace, TraceKey};
+use zkdl::curve::{G1Affine, G1};
+use zkdl::data::Dataset;
+use zkdl::ipa::IpaProof;
+use zkdl::model::{ModelConfig, Weights};
+use zkdl::sumcheck::SumcheckProof;
+use zkdl::util::rng::Rng;
+use zkdl::wire::{
+    decode_step_proof, decode_trace_proof, encode_step_proof, encode_trace_proof, FromWire,
+    ToWire, WireReader, WireWriter, MAGIC, VERSION,
+};
+use zkdl::witness::native::compute_witness;
+use zkdl::zkdl::{prove_step, verify_step, ProofMode, ProverKey};
+use zkdl::zkrelu::{Protocol1Msg, ValidityProof};
+use zkdl::Fr;
+
+fn roundtrip_bytes<T: ToWire + FromWire>(v: &T) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.put(v);
+    let bytes = w.finish();
+    let mut r = WireReader::new(&bytes);
+    let back: T = r.get().expect("decodes");
+    r.expect_end().expect("fully consumed");
+    let mut w2 = WireWriter::new();
+    w2.put(&back);
+    let bytes2 = w2.finish();
+    assert_eq!(bytes, bytes2, "re-encoding must be byte-identical");
+    bytes
+}
+
+fn random_point(rng: &mut Rng) -> G1Affine {
+    G1::random(rng).to_affine()
+}
+
+fn random_ipa(rng: &mut Rng, rounds: usize) -> IpaProof {
+    IpaProof {
+        l: (0..rounds).map(|_| random_point(rng)).collect(),
+        r: (0..rounds).map(|_| random_point(rng)).collect(),
+        a: Fr::random(rng),
+        b: Fr::random(rng),
+        blind: Fr::random(rng),
+    }
+}
+
+#[test]
+fn randomized_scalar_and_point_roundtrips() {
+    let mut rng = Rng::seed_from_u64(0x31e1);
+    for _ in 0..50 {
+        roundtrip_bytes(&Fr::random(&mut rng));
+        roundtrip_bytes(&random_point(&mut rng));
+    }
+    roundtrip_bytes(&G1Affine::IDENTITY);
+    roundtrip_bytes(&Fr::ZERO);
+}
+
+#[test]
+fn randomized_sumcheck_proof_roundtrips() {
+    let mut rng = Rng::seed_from_u64(0x31e2);
+    for _ in 0..20 {
+        let num_vars = 1 + (rng.gen_range(6) as usize);
+        let degree = 1 + (rng.gen_range(3) as usize);
+        let proof = SumcheckProof {
+            round_evals: (0..num_vars)
+                .map(|_| (0..degree + 1).map(|_| Fr::random(&mut rng)).collect())
+                .collect(),
+            degree,
+            num_vars,
+        };
+        roundtrip_bytes(&proof);
+    }
+}
+
+#[test]
+fn randomized_ipa_proof_roundtrips() {
+    let mut rng = Rng::seed_from_u64(0x31e3);
+    for _ in 0..20 {
+        let rounds = rng.gen_range(8) as usize;
+        roundtrip_bytes(&random_ipa(&mut rng, rounds));
+    }
+}
+
+#[test]
+fn randomized_protocol1_and_validity_roundtrips() {
+    let mut rng = Rng::seed_from_u64(0x31e4);
+    for i in 0..20usize {
+        let msg = Protocol1Msg {
+            com_b_ip: random_point(&mut rng),
+            com_sign_prime: (i % 2 == 0).then(|| random_point(&mut rng)),
+        };
+        roundtrip_bytes(&msg);
+        let vp = ValidityProof {
+            ipa: random_ipa(&mut rng, 1 + (i % 5)),
+        };
+        roundtrip_bytes(&vp);
+    }
+}
+
+#[test]
+fn golden_header_bytes() {
+    // Pins the envelope layout of VERSION 1. If this test fails, the wire
+    // format changed: bump `wire::VERSION` and update the constants here.
+    let cfg = ModelConfig::new(2, 8, 4);
+    let wits = trace_witnesses(cfg, 1, 0x601d);
+    let tk = TraceKey::setup(cfg, 1);
+    let mut rng = Rng::seed_from_u64(7);
+    let proof = prove_trace(&tk, &wits, &mut rng);
+    let bytes = encode_trace_proof(&cfg, &proof);
+    let expected_header: [u8; 32] = [
+        b'Z', b'K', b'D', b'L', // magic
+        0x01, 0x00, // version 1
+        0x02, 0x00, // kind: trace
+        0x02, 0x00, 0x00, 0x00, // depth 2
+        0x08, 0x00, 0x00, 0x00, // width 8
+        0x04, 0x00, 0x00, 0x00, // batch 4
+        0x10, 0x00, 0x00, 0x00, // r_bits 16
+        0x20, 0x00, 0x00, 0x00, // q_bits 32
+        0x08, 0x00, 0x00, 0x00, // lr_shift 8
+    ];
+    assert_eq!(&bytes[..32], expected_header.as_slice());
+    assert_eq!(MAGIC.as_slice(), b"ZKDL".as_slice());
+    assert_eq!(VERSION, 1);
+    // step-count field follows the header
+    assert_eq!(&bytes[32..36], 1u32.to_le_bytes().as_slice());
+}
+
+fn trace_witnesses(cfg: ModelConfig, steps: usize, seed: u64) -> Vec<zkdl::witness::StepWitness> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let ds = Dataset::synthetic(64, cfg.width / 2, 4, cfg.r_bits, seed ^ 0x77);
+    let mut weights = Weights::init(cfg, &mut rng);
+    let mut out = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let (x, y) = ds.batch(&cfg, step);
+        let wit = compute_witness(cfg, &x, &y, &weights);
+        weights.apply_update(&wit.weight_grads());
+        out.push(wit);
+    }
+    out
+}
+
+#[test]
+fn step_proof_disk_roundtrip_verifies() {
+    let cfg = ModelConfig::new(2, 8, 4);
+    let wits = trace_witnesses(cfg, 1, 0xd15c);
+    let pk = ProverKey::setup(cfg);
+    let mut rng = Rng::seed_from_u64(21);
+    let proof = prove_step(&pk, &wits[0], ProofMode::Parallel, &mut rng);
+    let bytes = encode_step_proof(&cfg, &proof);
+    let (cfg2, decoded) = decode_step_proof(&bytes).expect("decodes");
+    assert_eq!(cfg, cfg2);
+    // canonical: re-encoding the decoded proof is byte-identical
+    assert_eq!(bytes, encode_step_proof(&cfg2, &decoded));
+    verify_step(&ProverKey::setup(cfg2), &decoded).expect("decoded proof verifies");
+}
+
+#[test]
+fn trace_proof_disk_roundtrip_verifies() {
+    let cfg = ModelConfig::new(2, 8, 4);
+    let wits = trace_witnesses(cfg, 2, 0xd15d);
+    let tk = TraceKey::setup(cfg, 2);
+    let mut rng = Rng::seed_from_u64(22);
+    let proof = prove_trace(&tk, &wits, &mut rng);
+    let bytes = encode_trace_proof(&cfg, &proof);
+    let (cfg2, decoded) = decode_trace_proof(&bytes).expect("decodes");
+    assert_eq!(cfg, cfg2);
+    assert_eq!(bytes, encode_trace_proof(&cfg2, &decoded));
+    // out-of-process verification: keys rebuilt from the file alone
+    let tk2 = TraceKey::setup(cfg2, decoded.steps);
+    verify_trace(&tk2, &decoded).expect("decoded trace verifies");
+}
+
+#[test]
+fn decoder_rejects_malformed_envelopes() {
+    let cfg = ModelConfig::new(2, 8, 4);
+    let wits = trace_witnesses(cfg, 1, 0xbad);
+    let tk = TraceKey::setup(cfg, 1);
+    let mut rng = Rng::seed_from_u64(23);
+    let proof = prove_trace(&tk, &wits, &mut rng);
+    let bytes = encode_trace_proof(&cfg, &proof);
+
+    // bad magic
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xff;
+    assert!(decode_trace_proof(&bad).is_err());
+    // unsupported version
+    let mut bad = bytes.clone();
+    bad[4] = 0x63;
+    assert!(decode_trace_proof(&bad).is_err());
+    // wrong kind for the decoder entry point
+    assert!(decode_step_proof(&bytes).is_err());
+    // truncation
+    assert!(decode_trace_proof(&bytes[..bytes.len() - 1]).is_err());
+    // trailing garbage
+    let mut bad = bytes.clone();
+    bad.push(0);
+    assert!(decode_trace_proof(&bad).is_err());
+}
