@@ -1,0 +1,143 @@
+//! Verification-engine benchmark: the three verifier strategies at
+//! T ∈ {1, 4, 16} proofs —
+//!
+//! * `eager`   — one MSM per deferred equation (the pre-refactor cost
+//!               model: per-opening / per-validity Pippenger calls),
+//! * `one-msm` — the default wrappers: one MSM per proof,
+//! * `batched` — `verify_steps_batch` / `verify_traces_batch`: every
+//!               proof ρ-scaled into one shared accumulator, one MSM total.
+//!
+//!     cargo bench --bench verify_batch
+//!     cargo bench --bench verify_batch -- --depth 2 --width 8 --batch 4
+
+use zkdl::aggregate::{prove_trace, verify_trace, verify_traces_batch, TraceKey, TraceProof};
+use zkdl::curve::accum::MsmAccumulator;
+use zkdl::data::Dataset;
+use zkdl::model::{ModelConfig, Weights};
+use zkdl::util::bench::{fmt_dur, time_once, BenchArgs, Table};
+use zkdl::util::rng::Rng;
+use zkdl::witness::native::compute_witness;
+use zkdl::witness::StepWitness;
+use zkdl::zkdl::{
+    prove_step, verify_step, verify_step_accum, verify_steps_batch, ProofMode, ProverKey,
+    StepProof,
+};
+
+fn witness_chain(cfg: ModelConfig, steps: usize, seed: u64) -> Vec<StepWitness> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let ds = Dataset::synthetic(256, cfg.width / 2, 4, cfg.r_bits, seed ^ 0x77);
+    let mut weights = Weights::init(cfg, &mut rng);
+    let mut out = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let (x, y) = ds.batch(&cfg, step);
+        let wit = compute_witness(cfg, &x, &y, &weights);
+        weights.apply_update(&wit.weight_grads());
+        out.push(wit);
+    }
+    out
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let cfg = ModelConfig::new(
+        args.get_usize("--depth", 2),
+        args.get_usize("--width", 8),
+        args.get_usize("--batch", 4),
+    );
+    println!(
+        "verification engine: L={} d={} B={} ({} threads)",
+        cfg.depth,
+        cfg.width,
+        cfg.batch,
+        zkdl::util::threads::num_threads()
+    );
+
+    let mut table = Table::new(&["T", "proof", "mode", "verify", "MSMs"]);
+    let pk = ProverKey::setup(cfg);
+    for t in [1usize, 4, 16] {
+        let wits = witness_chain(cfg, t, t as u64);
+        let mut rng = Rng::seed_from_u64(0xbe2c);
+        let proofs: Vec<StepProof> = wits
+            .iter()
+            .map(|w| prove_step(&pk, w, ProofMode::Parallel, &mut rng))
+            .collect();
+
+        // eager: one MSM per deferred equation (pre-refactor cost model)
+        let mut msms = 0usize;
+        let (_, d_eager) = time_once(|| {
+            for p in &proofs {
+                let mut seed = Rng::seed_from_u64(1);
+                let mut acc = MsmAccumulator::eager_from_rng(&mut seed);
+                verify_step_accum(&pk, p, &mut acc).expect("verifies");
+                assert!(acc.flush(), "eager verification accepts");
+                msms += acc.flushes();
+            }
+        });
+        table.row(vec![
+            format!("{t}"),
+            "step".into(),
+            "eager".into(),
+            fmt_dur(d_eager),
+            format!("{msms}"),
+        ]);
+
+        // one MSM per proof (the verify_step wrapper)
+        let (_, d_one) = time_once(|| {
+            for p in &proofs {
+                verify_step(&pk, p).expect("verifies");
+            }
+        });
+        table.row(vec![
+            format!("{t}"),
+            "step".into(),
+            "one-msm".into(),
+            fmt_dur(d_one),
+            format!("{t}"),
+        ]);
+
+        // one MSM for the whole batch
+        let (_, d_batch) = time_once(|| {
+            let mut vrng = Rng::seed_from_u64(2);
+            verify_steps_batch(&pk, &proofs, &mut vrng).expect("batch verifies");
+        });
+        table.row(vec![
+            format!("{t}"),
+            "step".into(),
+            "batched".into(),
+            fmt_dur(d_batch),
+            "1".into(),
+        ]);
+
+        // trace proofs: per-proof wrappers vs cross-proof batch
+        let tk = TraceKey::setup(cfg, 1);
+        let trace_proofs: Vec<TraceProof> = (0..t)
+            .map(|i| prove_trace(&tk, &wits[i..i + 1], &mut rng))
+            .collect();
+        let (_, d_trace_one) = time_once(|| {
+            for p in &trace_proofs {
+                verify_trace(&tk, p).expect("verifies");
+            }
+        });
+        table.row(vec![
+            format!("{t}"),
+            "trace".into(),
+            "one-msm".into(),
+            fmt_dur(d_trace_one),
+            format!("{t}"),
+        ]);
+        let (_, d_trace_batch) = time_once(|| {
+            let pairs: Vec<(&TraceKey, &TraceProof)> =
+                trace_proofs.iter().map(|p| (&tk, p)).collect();
+            let mut vrng = Rng::seed_from_u64(3);
+            verify_traces_batch(&pairs, &mut vrng).expect("batch verifies");
+        });
+        table.row(vec![
+            format!("{t}"),
+            "trace".into(),
+            "batched".into(),
+            fmt_dur(d_trace_batch),
+            "1".into(),
+        ]);
+    }
+    table.print();
+}

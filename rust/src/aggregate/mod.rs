@@ -24,7 +24,8 @@
 //! checked homomorphically); like the per-step protocol, each step is
 //! proven against its own committed weights. See DESIGN.md §aggregate.
 
-use crate::commit::CommitKey;
+use crate::commit::{ComExpr, CommitKey};
+use crate::curve::accum::MsmAccumulator;
 use crate::curve::{G1, G1Affine};
 use crate::field::Fr;
 use crate::gkr;
@@ -36,9 +37,9 @@ use crate::transcript::Transcript;
 use crate::util::rng::Rng;
 use crate::witness::StepWitness;
 use crate::zkdl::{
-    self, commit, derived_com_ga, derived_com_gz_last, derived_com_z, derived_open_ga,
-    derived_open_gz_last, derived_open_z, draw_group_challenges, frs, tile_claims_at, tiled_eq,
-    Committed, ProverLayers,
+    self, commit, derived_com_ga, derived_com_gz_last, derived_com_z, derived_expr_ga,
+    derived_expr_gz_last, derived_expr_z, derived_open_ga, derived_open_gz_last, derived_open_z,
+    draw_group_challenges, frs, tile_claims_at, tiled_eq, Committed, ProverLayers,
 };
 use crate::zkrelu::{self, Protocol1Msg, ValidityBases, ValidityProof};
 use anyhow::{bail, ensure, Context, Result};
@@ -286,10 +287,11 @@ struct OpeningTask {
     claims: Vec<EvalClaim>,
 }
 
-/// Verifier-side mirror of [`OpeningTask`].
+/// Verifier-side mirror of [`OpeningTask`]: commitments stay symbolic so
+/// the whole check defers into the MSM accumulator.
 struct OpeningCheck {
     evec: Vec<Fr>,
-    claims: Vec<(G1, Fr)>,
+    claims: Vec<(ComExpr, Fr)>,
 }
 
 // ---------------------------------------------------------------------------
@@ -819,8 +821,14 @@ pub fn prove_trace(tk: &TraceKey, wits: &[StepWitness], rng: &mut Rng) -> TraceP
 
     let mut openings = Vec::new();
     for (ck, task) in &tasks {
-        let (_, _, proof) = ipa::batch_prove_eval(ck, &task.claims, &task.evec, &mut tr, rng);
-        openings.push(proof);
+        // values-only absorption — mirrors the verifier's symbolic claims
+        openings.push(ipa::batch_prove_eval_expr(
+            ck,
+            &task.claims,
+            &task.evec,
+            &mut tr,
+            rng,
+        ));
     }
 
     // ---- Phase 4: one validity pair for the whole trace ----
@@ -877,12 +885,41 @@ pub fn prove_trace(tk: &TraceKey, wits: &[StepWitness], rng: &mut Rng) -> TraceP
 // Verifier
 // ---------------------------------------------------------------------------
 
-/// Verify a [`TraceProof`] against the public trace key.
+/// Verify a [`TraceProof`] against the public trace key. Thin wrapper over
+/// [`verify_trace_accum`]: exactly one Pippenger MSM for the whole trace.
 pub fn verify_trace(tk: &TraceKey, proof: &TraceProof) -> Result<()> {
+    let mut acc = MsmAccumulator::new();
+    verify_trace_accum(tk, proof, &mut acc)?;
+    ensure!(acc.flush(), "trace proof: deferred MSM check failed");
+    Ok(())
+}
+
+/// Verify a batch of trace proofs (possibly over different keys) with ONE
+/// MSM total. Each proof's deferred terms are scaled by an independent
+/// verifier-chosen random ρᵢ before merging into the shared accumulator,
+/// preventing cross-proof cancellation.
+pub fn verify_traces_batch(pairs: &[(&TraceKey, &TraceProof)], rng: &mut Rng) -> Result<()> {
+    ensure!(!pairs.is_empty(), "empty trace batch");
+    let mut acc = MsmAccumulator::from_rng(rng);
+    for (i, (tk, proof)) in pairs.iter().enumerate() {
+        acc.set_scale(Fr::random_nonzero(rng));
+        verify_trace_accum(tk, proof, &mut acc)
+            .with_context(|| format!("batched trace {i}"))?;
+    }
+    ensure!(acc.flush(), "trace batch: aggregate MSM check failed");
+    Ok(())
+}
+
+/// Transcript replay and scalar checks of [`verify_trace`], every group
+/// equation deferred into `acc` — no curve arithmetic here.
+pub fn verify_trace_accum(
+    tk: &TraceKey,
+    proof: &TraceProof,
+    acc: &mut MsmAccumulator,
+) -> Result<()> {
     let cfg = &tk.cfg;
     let t_steps = tk.steps;
     let depth = cfg.depth;
-    let d = cfg.d_size();
     let (tbar, lbar, _n) = trace_stack_dims(cfg, t_steps);
     let slots = tbar * lbar;
     let log_b = cfg.batch.trailing_zeros() as usize;
@@ -1095,14 +1132,13 @@ pub fn verify_trace(tk: &TraceKey, proof: &TraceProof) -> Result<()> {
 
     // ---- Phase 3: opening checks (must mirror the prover's task order) ----
     let gk = tk.g_aux.clone();
-    let stack_com = |get: &dyn Fn(&StepCommitmentSet) -> &Vec<G1Affine>| -> G1 {
-        let mut acc = G1::IDENTITY;
-        for set in &proof.coms {
-            for p in get(set) {
-                acc = acc.add_affine(p);
-            }
-        }
-        acc
+    let stack_expr = |get: &dyn Fn(&StepCommitmentSet) -> &Vec<G1Affine>| -> ComExpr {
+        ComExpr::sum(
+            proof
+                .coms
+                .iter()
+                .flat_map(|set| get(set).iter().map(|p| p.to_projective())),
+        )
     };
     let mut checks: Vec<(CommitKey, OpeningCheck)> = Vec::new();
     checks.push((
@@ -1110,11 +1146,11 @@ pub fn verify_trace(tk: &TraceKey, proof: &TraceProof) -> Result<()> {
         OpeningCheck {
             evec: eq_table(&rho),
             claims: vec![
-                (stack_com(&|s| &s.com_sign), v_sign),
-                (stack_com(&|s| &s.com_zdp), v_zdp),
-                (stack_com(&|s| &s.com_gap), v_gap),
-                (stack_com(&|s| &s.com_rz), v_rz),
-                (stack_com(&|s| &s.com_rga), v_rga),
+                (stack_expr(&|s| &s.com_sign), v_sign),
+                (stack_expr(&|s| &s.com_zdp), v_zdp),
+                (stack_expr(&|s| &s.com_gap), v_gap),
+                (stack_expr(&|s| &s.com_rz), v_rz),
+                (stack_expr(&|s| &s.com_rga), v_rga),
             ],
         },
     ));
@@ -1124,11 +1160,11 @@ pub fn verify_trace(tk: &TraceKey, proof: &TraceProof) -> Result<()> {
         for (t, set) in proof.coms.iter().enumerate() {
             for l in 0..depth {
                 claims_z.push((
-                    derived_com_z(
+                    derived_expr_z(
                         cfg,
-                        &set.com_zdp[l].to_projective(),
-                        &set.com_sign[l].to_projective(),
-                        &set.com_rz[l].to_projective(),
+                        set.com_zdp[l].to_projective(),
+                        set.com_sign[l].to_projective(),
+                        set.com_rz[l].to_projective(),
                     ),
                     proof.v_z[t * depth + l],
                 ));
@@ -1148,10 +1184,10 @@ pub fn verify_trace(tk: &TraceKey, proof: &TraceProof) -> Result<()> {
         for (t, set) in proof.coms.iter().enumerate() {
             for l in 0..depth - 1 {
                 claims_ga.push((
-                    derived_com_ga(
+                    derived_expr_ga(
                         cfg,
-                        &set.com_gap[l].to_projective(),
-                        &set.com_rga[l].to_projective(),
+                        set.com_gap[l].to_projective(),
+                        set.com_rga[l].to_projective(),
                     ),
                     proof.v_ga[t * (depth - 1) + l],
                 ));
@@ -1170,7 +1206,10 @@ pub fn verify_trace(tk: &TraceKey, proof: &TraceProof) -> Result<()> {
         let mut claims_gw = Vec::with_capacity(n_zl);
         for (t, set) in proof.coms.iter().enumerate() {
             for l in 0..depth {
-                claims_gw.push((set.com_gw[l].to_projective(), proof.v_gw[t * depth + l]));
+                claims_gw.push((
+                    ComExpr::point(set.com_gw[l].to_projective()),
+                    proof.v_gw[t * depth + l],
+                ));
             }
         }
         checks.push((
@@ -1187,7 +1226,7 @@ pub fn verify_trace(tk: &TraceKey, proof: &TraceProof) -> Result<()> {
         for (t, set) in proof.coms.iter().enumerate() {
             for l in 0..depth {
                 claims_w.push((
-                    set.com_w[l].to_projective(),
+                    ComExpr::point(set.com_w[l].to_projective()),
                     proof.mm30_evals[t * depth + l].1,
                 ));
             }
@@ -1206,7 +1245,7 @@ pub fn verify_trace(tk: &TraceKey, proof: &TraceProof) -> Result<()> {
         for (t, set) in proof.coms.iter().enumerate() {
             for l in 0..depth - 1 {
                 claims_w.push((
-                    set.com_w[l + 1].to_projective(),
+                    ComExpr::point(set.com_w[l + 1].to_projective()),
                     proof.mm33_evals[t * (depth - 1) + l].1,
                 ));
             }
@@ -1221,11 +1260,16 @@ pub fn verify_trace(tk: &TraceKey, proof: &TraceProof) -> Result<()> {
     }
     {
         let p30: Vec<Fr> = [ch.u_zr.clone(), r30.clone()].concat();
-        let claims_x: Vec<(G1, Fr)> = proof
+        let claims_x: Vec<(ComExpr, Fr)> = proof
             .coms
             .iter()
             .enumerate()
-            .map(|(t, set)| (set.com_x.to_projective(), proof.mm30_evals[t * depth].0))
+            .map(|(t, set)| {
+                (
+                    ComExpr::point(set.com_x.to_projective()),
+                    proof.mm30_evals[t * depth].0,
+                )
+            })
             .collect();
         checks.push((
             tk.g_x.clone(),
@@ -1235,11 +1279,16 @@ pub fn verify_trace(tk: &TraceKey, proof: &TraceProof) -> Result<()> {
             },
         ));
         let p34: Vec<Fr> = [r34.clone(), ch.u_gwc.clone()].concat();
-        let claims_x: Vec<(G1, Fr)> = proof
+        let claims_x: Vec<(ComExpr, Fr)> = proof
             .coms
             .iter()
             .enumerate()
-            .map(|(t, set)| (set.com_x.to_projective(), proof.mm34_evals[t * depth].1))
+            .map(|(t, set)| {
+                (
+                    ComExpr::point(set.com_x.to_projective()),
+                    proof.mm34_evals[t * depth].1,
+                )
+            })
             .collect();
         checks.push((
             tk.g_x.clone(),
@@ -1251,23 +1300,23 @@ pub fn verify_trace(tk: &TraceKey, proof: &TraceProof) -> Result<()> {
     }
     {
         let last = depth - 1;
-        let gz_coms: Vec<G1> = proof
+        let gz_exprs: Vec<ComExpr> = proof
             .coms
             .iter()
             .map(|set| {
-                derived_com_gz_last(
+                derived_expr_gz_last(
                     cfg,
-                    &set.com_zdp[last].to_projective(),
-                    &set.com_sign[last].to_projective(),
-                    &set.com_y.to_projective(),
+                    set.com_zdp[last].to_projective(),
+                    set.com_sign[last].to_projective(),
+                    set.com_y.to_projective(),
                 )
             })
             .collect();
         let p: Vec<Fr> = [r34.clone(), ch.u_gwr.clone()].concat();
-        let claims: Vec<(G1, Fr)> = gz_coms
+        let claims: Vec<(ComExpr, Fr)> = gz_exprs
             .iter()
             .enumerate()
-            .map(|(t, com)| (*com, proof.mm34_evals[t * depth + last].0))
+            .map(|(t, expr)| (expr.clone(), proof.mm34_evals[t * depth + last].0))
             .collect();
         checks.push((
             gk.clone(),
@@ -1278,10 +1327,15 @@ pub fn verify_trace(tk: &TraceKey, proof: &TraceProof) -> Result<()> {
         ));
         if depth >= 2 {
             let p: Vec<Fr> = [ch.u_gar.clone(), r33.clone()].concat();
-            let claims: Vec<(G1, Fr)> = gz_coms
+            let claims: Vec<(ComExpr, Fr)> = gz_exprs
                 .iter()
                 .enumerate()
-                .map(|(t, com)| (*com, proof.mm33_evals[t * (depth - 1) + (depth - 2)].0))
+                .map(|(t, expr)| {
+                    (
+                        expr.clone(),
+                        proof.mm33_evals[t * (depth - 1) + (depth - 2)].0,
+                    )
+                })
                 .collect();
             checks.push((
                 gk.clone(),
@@ -1300,7 +1354,7 @@ pub fn verify_trace(tk: &TraceKey, proof: &TraceProof) -> Result<()> {
         checks.len()
     );
     for ((ck, check), opening) in checks.iter().zip(proof.openings.iter()) {
-        ipa::batch_verify_eval(ck, &check.claims, &check.evec, opening, &mut tr)
+        ipa::batch_verify_eval_expr(ck, &check.claims, &check.evec, opening, &mut tr, acc)
             .context("batched opening")?;
     }
 
@@ -1310,8 +1364,8 @@ pub fn verify_trace(tk: &TraceKey, proof: &TraceProof) -> Result<()> {
     vpoint.extend_from_slice(&rho);
     let e_row = eq_table(&vpoint);
     let v = (Fr::ONE - u_dd) * v_zdp + u_dd * v_gap;
-    let com_sign_stacked = stack_com(&|s| &s.com_sign);
-    zkrelu::verify_validity(
+    let com_sign_stacked = stack_expr(&|s| &s.com_sign);
+    zkrelu::verify_validity_accum(
         &vb_main,
         &proof.p1_main,
         Some(&com_sign_stacked),
@@ -1321,6 +1375,7 @@ pub fn verify_trace(tk: &TraceKey, proof: &TraceProof) -> Result<()> {
         v_sign,
         &proof.validity_main,
         &mut tr,
+        acc,
     )
     .context("main validity")?;
     let u_dd_r = tr.challenge_fr(b"zkdl/u_dd_rem");
@@ -1328,7 +1383,7 @@ pub fn verify_trace(tk: &TraceKey, proof: &TraceProof) -> Result<()> {
     vpoint_r.extend_from_slice(&rho);
     let e_row_r = eq_table(&vpoint_r);
     let v_rem = (Fr::ONE - u_dd_r) * v_rz + u_dd_r * v_rga;
-    zkrelu::verify_validity(
+    zkrelu::verify_validity_accum(
         &vb_rem,
         &proof.p1_rem,
         None,
@@ -1338,6 +1393,7 @@ pub fn verify_trace(tk: &TraceKey, proof: &TraceProof) -> Result<()> {
         Fr::ZERO,
         &proof.validity_rem,
         &mut tr,
+        acc,
     )
     .context("remainder validity")?;
 
@@ -1387,5 +1443,53 @@ mod tests {
         let proof = prove_trace(&tk, &wits, &mut rng);
         verify_trace(&tk, &proof).expect("verifies");
         assert!(proof.size_bytes() > 0);
+    }
+
+    #[test]
+    fn verify_trace_accum_defers_to_exactly_one_msm() {
+        let cfg = ModelConfig::new(2, 8, 4);
+        let wits = witness_chain(cfg, 2, 0xb22);
+        let tk = TraceKey::setup(cfg, 2);
+        let mut rng = Rng::seed_from_u64(2);
+        let proof = prove_trace(&tk, &wits, &mut rng);
+        let mut seed = Rng::seed_from_u64(3);
+        let mut acc = MsmAccumulator::from_rng(&mut seed);
+        verify_trace_accum(&tk, &proof, &mut acc).expect("deferred verification");
+        assert_eq!(acc.flushes(), 0, "no MSM before the flush");
+        assert!(acc.flush(), "single aggregate MSM decides the trace");
+        assert_eq!(acc.flushes(), 1);
+    }
+
+    #[test]
+    fn traces_batch_one_msm_accepts_good_rejects_tampered() {
+        let cfg = ModelConfig::new(2, 8, 4);
+        let tk = TraceKey::setup(cfg, 1);
+        let mut rng = Rng::seed_from_u64(4);
+        let a = prove_trace(&tk, &witness_chain(cfg, 1, 0x1), &mut rng);
+        let b = prove_trace(&tk, &witness_chain(cfg, 1, 0x2), &mut rng);
+
+        // good batch: one MSM total, accepted
+        let mut seed = Rng::seed_from_u64(5);
+        let mut acc = MsmAccumulator::from_rng(&mut seed);
+        for proof in [&a, &b] {
+            acc.set_scale(Fr::random_nonzero(&mut seed));
+            verify_trace_accum(&tk, proof, &mut acc).expect("defer");
+        }
+        assert_eq!(acc.flushes(), 0);
+        assert!(acc.flush(), "good trace batch verifies with one MSM");
+
+        let mut vrng = Rng::seed_from_u64(6);
+        verify_traces_batch(&[(&tk, &a), (&tk, &b)], &mut vrng).expect("public batch API");
+
+        // tamper one opening scalar — catchable only by the MSM check
+        let mut bad = b.clone();
+        bad.openings[0].a += Fr::ONE;
+        verify_trace(&tk, &a).expect("untampered trace verifies alone");
+        assert!(verify_trace(&tk, &bad).is_err(), "tampered trace fails alone");
+        let mut vrng2 = Rng::seed_from_u64(7);
+        assert!(
+            verify_traces_batch(&[(&tk, &a), (&tk, &bad)], &mut vrng2).is_err(),
+            "batch with exactly one tampered trace must fail"
+        );
     }
 }

@@ -132,6 +132,51 @@ pub fn combine(coms: &[G1], coeffs: &[Fr]) -> G1 {
     msm(&affine, coeffs)
 }
 
+/// A commitment kept *symbolic* as a public linear combination Σ cᵢ·Pᵢ of
+/// points, so that verifiers can defer its evaluation into the one-MSM
+/// engine (`curve::accum::MsmAccumulator`) instead of performing eager
+/// scalar multiplications. Every derived commitment the zkDL verifier
+/// checks — eq. (3)/(5)/(32) combinations, stacked aux commitments, RLC'd
+/// opening batches — is one of these.
+///
+/// Soundness note: the deferred-absorption IPA variants
+/// (`ipa::batch_verify_eval_expr`) skip re-absorbing the combined
+/// commitment into the transcript, so the constituent points of a
+/// `ComExpr` MUST already be transcript-bound (they are: every proof point
+/// is absorbed before any challenge is drawn) and the coefficients must be
+/// public constants or transcript challenges.
+#[derive(Clone, Debug, Default)]
+pub struct ComExpr {
+    pub terms: Vec<(Fr, G1)>,
+}
+
+impl ComExpr {
+    /// The single point `p` with coefficient 1.
+    pub fn point(p: G1) -> Self {
+        Self {
+            terms: vec![(Fr::ONE, p)],
+        }
+    }
+
+    /// Σᵢ pᵢ with unit coefficients.
+    pub fn sum<I: IntoIterator<Item = G1>>(points: I) -> Self {
+        Self {
+            terms: points.into_iter().map(|p| (Fr::ONE, p)).collect(),
+        }
+    }
+
+    pub fn push(&mut self, coeff: Fr, point: G1) {
+        self.terms.push((coeff, point));
+    }
+
+    /// Materialize the combination (wrappers and tests only — the verifier
+    /// hot path defers instead).
+    pub fn eval(&self) -> G1 {
+        let (coeffs, points): (Vec<Fr>, Vec<G1>) = self.terms.iter().copied().unzip();
+        combine(&points, &coeffs)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,375 @@
+//! Deferred multi-scalar-multiplication accumulator — the one-MSM
+//! verification engine.
+//!
+//! Every group-equation check in the verifier stack has the shape
+//! Σᵢ sᵢ·Pᵢ = 𝒪: an IPA final check, a batched-opening check, a zkReLU
+//! validity check. Instead of evaluating each equation eagerly (per-round
+//! Jacobian muls plus a fresh Pippenger MSM per opening), verifiers push the
+//! (scalar, point) terms into an [`MsmAccumulator`] and the whole proof —
+//! or a whole *batch* of proofs — is decided by a single Pippenger call
+//! over the union of terms.
+//!
+//! Soundness of the merge: equation j's terms are scaled by a fresh
+//! verifier-chosen random coefficient cⱼ (drawn at [`begin_equation`]), and
+//! each proof's contribution is additionally scaled by an outer ρᵢ
+//! ([`set_scale`]) in cross-proof batching. Σⱼ cⱼ·Eⱼ = 𝒪 with independent
+//! uniform cⱼ implies every Eⱼ = 𝒪 except with probability ≈ #eq/|Fr| —
+//! the standard random-linear-combination argument used by Bulletproofs
+//! batch verification. The coefficients are verifier-local (never shown to
+//! the prover), so no grinding is possible.
+//!
+//! [`begin_equation`]: MsmAccumulator::begin_equation
+//! [`set_scale`]: MsmAccumulator::set_scale
+
+use super::{msm::msm, G1, G1Affine};
+use crate::field::Fr;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// A deduplicated fixed-base block: one copy of a basis slice plus the
+/// running per-generator scalar sums contributed by every equation that
+/// pushed against it.
+struct FixedBlock {
+    points: Vec<G1Affine>,
+    scalars: Vec<Fr>,
+}
+
+/// Collects deferred Σ sᵢ·Pᵢ = 𝒪 checks and decides them with one MSM.
+pub struct MsmAccumulator {
+    rng: Rng,
+    /// Outer per-proof scale (cross-proof batching), set by [`Self::set_scale`].
+    scale: Fr,
+    /// Per-equation random coefficient, redrawn by [`Self::begin_equation`].
+    eq_coeff: Fr,
+    /// scale · eq_coeff, applied to every pushed scalar.
+    cur: Fr,
+    points: Vec<G1Affine>,
+    scalars: Vec<Fr>,
+    proj_points: Vec<G1>,
+    proj_scalars: Vec<Fr>,
+    /// Fixed-base blocks, merged scalar-wise across equations: repeated
+    /// pushes of the same basis slice (the common case in cross-proof
+    /// batching — every proof opens against the same commitment keys) cost
+    /// field additions, not duplicate MSM points, so the fixed-base share
+    /// of the final MSM stays constant-size in the batch length.
+    blocks: Vec<FixedBlock>,
+    /// (length, first-point encoding) → candidate block indices; candidates
+    /// are confirmed by full slice comparison before merging.
+    block_index: HashMap<(usize, [u8; 64]), Vec<usize>>,
+    /// Eager mode: run one MSM per equation instead of deferring — the
+    /// pre-refactor verification strategy, kept for benchmarking and for
+    /// differential tests against the deferred path.
+    eager: bool,
+    ok: bool,
+    flushes: usize,
+    equations: usize,
+}
+
+impl MsmAccumulator {
+    /// Accumulator with entropy-seeded batching coefficients (the normal
+    /// verifier entry point).
+    pub fn new() -> Self {
+        Self::from_rng(&mut Rng::from_entropy())
+    }
+
+    /// Accumulator whose batching coefficients derive from `seed` —
+    /// deterministic, for tests and benches. The child generator carries
+    /// the seed's full 256-bit state (`Rng::split`), so entropy-seeded
+    /// callers keep their full entropy width.
+    pub fn from_rng(seed: &mut Rng) -> Self {
+        Self {
+            rng: seed.split(),
+            scale: Fr::ONE,
+            eq_coeff: Fr::ONE,
+            cur: Fr::ONE,
+            points: Vec::new(),
+            scalars: Vec::new(),
+            proj_points: Vec::new(),
+            proj_scalars: Vec::new(),
+            blocks: Vec::new(),
+            block_index: HashMap::new(),
+            eager: false,
+            ok: true,
+            flushes: 0,
+            equations: 0,
+        }
+    }
+
+    /// Per-equation-MSM accumulator (see the `eager` field).
+    pub fn eager_from_rng(seed: &mut Rng) -> Self {
+        let mut acc = Self::from_rng(seed);
+        acc.eager = true;
+        acc
+    }
+
+    /// Set the outer scale applied to all subsequently pushed terms —
+    /// cross-proof batching sets an independent random ρᵢ before feeding
+    /// proof i's equations in. Must be nonzero (a zero scale would erase
+    /// the proof's contribution entirely).
+    pub fn set_scale(&mut self, scale: Fr) {
+        assert!(!scale.is_zero(), "accumulator scale must be nonzero");
+        self.scale = scale;
+        self.cur = self.scale * self.eq_coeff;
+    }
+
+    /// Start a new deferred equation: draws a fresh random coefficient so
+    /// distinct equations cannot cancel each other inside the shared MSM.
+    /// In eager mode, first decides the pending equation with its own MSM.
+    pub fn begin_equation(&mut self) {
+        if self.eager && self.pending_terms() > 0 {
+            self.run_msm();
+        }
+        self.equations += 1;
+        self.eq_coeff = Fr::random_nonzero(&mut self.rng);
+        self.cur = self.scale * self.eq_coeff;
+    }
+
+    /// Defer `scalar·point` into the current equation.
+    #[inline]
+    pub fn push(&mut self, scalar: Fr, point: G1Affine) {
+        self.scalars.push(self.cur * scalar);
+        self.points.push(point);
+    }
+
+    /// Defer `scalar·point` for a projective point (normalized in bulk at
+    /// flush time via Montgomery's trick).
+    #[inline]
+    pub fn push_proj(&mut self, scalar: Fr, point: &G1) {
+        self.proj_scalars.push(self.cur * scalar);
+        self.proj_points.push(*point);
+    }
+
+    /// Defer a fixed-base block Σᵢ scalars[i]·bases[i] (commitment-key
+    /// slices, IPA bases). Blocks over an identical basis slice — every
+    /// proof in a batch opening against the same keys — merge scalar-wise,
+    /// so repeats cost field additions instead of duplicate MSM points.
+    /// (Merging identical slices is always sound: Σ s·P + Σ s′·P =
+    /// Σ (s+s′)·P regardless of which equations the terms came from.)
+    pub fn push_fixed(&mut self, bases: &[G1Affine], scalars: &[Fr]) {
+        assert_eq!(bases.len(), scalars.len(), "accumulator block mismatch");
+        if bases.is_empty() {
+            return;
+        }
+        let cur = self.cur;
+        let key = (bases.len(), bases[0].to_bytes());
+        let found = self
+            .block_index
+            .get(&key)
+            .and_then(|cands| cands.iter().copied().find(|&bi| self.blocks[bi].points == bases));
+        match found {
+            Some(bi) => {
+                for (acc_s, s) in self.blocks[bi].scalars.iter_mut().zip(scalars.iter()) {
+                    *acc_s += cur * *s;
+                }
+            }
+            None => {
+                let bi = self.blocks.len();
+                self.blocks.push(FixedBlock {
+                    points: bases.to_vec(),
+                    scalars: scalars.iter().map(|s| cur * *s).collect(),
+                });
+                self.block_index.entry(key).or_default().push(bi);
+            }
+        }
+    }
+
+    fn run_msm(&mut self) {
+        if !self.proj_points.is_empty() {
+            let affine = G1::batch_to_affine(&self.proj_points);
+            self.points.extend(affine);
+            self.scalars.append(&mut self.proj_scalars);
+            self.proj_points.clear();
+        }
+        for blk in self.blocks.drain(..) {
+            self.points.extend(blk.points);
+            self.scalars.extend(blk.scalars);
+        }
+        self.block_index.clear();
+        let result = msm(&self.points, &self.scalars);
+        self.ok &= result.is_identity();
+        self.points.clear();
+        self.scalars.clear();
+        self.flushes += 1;
+    }
+
+    /// Decide every deferred equation with one Pippenger MSM. Returns true
+    /// iff all of them hold (in eager mode: iff every per-equation MSM
+    /// held). Resets the accumulator — terms, verdict, and scales — for
+    /// reuse.
+    pub fn flush(&mut self) -> bool {
+        self.run_msm();
+        let ok = self.ok;
+        self.ok = true;
+        self.scale = Fr::ONE;
+        self.eq_coeff = Fr::ONE;
+        self.cur = Fr::ONE;
+        ok
+    }
+
+    /// Number of MSMs executed so far — verification-cost ground truth for
+    /// the one-MSM-per-proof assertions in tests and benches.
+    pub fn flushes(&self) -> usize {
+        self.flushes
+    }
+
+    /// Number of equations begun so far.
+    pub fn equations(&self) -> usize {
+        self.equations
+    }
+
+    /// Deferred term count (loose affine + projective + merged fixed-base
+    /// blocks) awaiting the next flush.
+    pub fn pending_terms(&self) -> usize {
+        self.points.len()
+            + self.proj_points.len()
+            + self.blocks.iter().map(|b| b.points.len()).sum::<usize>()
+    }
+}
+
+impl Default for MsmAccumulator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::seed_from_u64(0xacc)
+    }
+
+    /// Push a random identity-summing equation: a·P + b·P − (a+b)·P.
+    fn push_true_equation(acc: &mut MsmAccumulator, r: &mut Rng) {
+        let p = G1::random(r).to_affine();
+        let a = Fr::random(r);
+        let b = Fr::random(r);
+        acc.begin_equation();
+        acc.push(a, p);
+        acc.push(b, p);
+        acc.push_proj(-(a + b), &p.to_projective());
+    }
+
+    #[test]
+    fn accepts_true_equations() {
+        let mut r = rng();
+        let mut acc = MsmAccumulator::from_rng(&mut r);
+        for _ in 0..5 {
+            push_true_equation(&mut acc, &mut r);
+        }
+        assert_eq!(acc.flushes(), 0);
+        assert!(acc.flush());
+        assert_eq!(acc.flushes(), 1);
+    }
+
+    #[test]
+    fn rejects_one_bad_equation_among_many() {
+        let mut r = rng();
+        let mut acc = MsmAccumulator::from_rng(&mut r);
+        for _ in 0..3 {
+            push_true_equation(&mut acc, &mut r);
+        }
+        acc.begin_equation();
+        acc.push(Fr::ONE, G1::random(&mut r).to_affine());
+        push_true_equation(&mut acc, &mut r);
+        assert!(!acc.flush());
+    }
+
+    #[test]
+    fn opposite_errors_do_not_cancel_across_equations() {
+        // two equations whose raw term sums cancel (E and −E): without the
+        // per-equation random coefficients one MSM over the union would
+        // accept; with them it must reject.
+        let mut r = rng();
+        let p = G1::random(&mut r).to_affine();
+        let mut acc = MsmAccumulator::from_rng(&mut r);
+        acc.begin_equation();
+        acc.push(Fr::ONE, p);
+        acc.begin_equation();
+        acc.push(-Fr::ONE, p);
+        assert!(!acc.flush());
+    }
+
+    #[test]
+    fn eager_mode_agrees_with_deferred() {
+        for bad in [false, true] {
+            let r = rng();
+            let mut seed_a = Rng::seed_from_u64(1);
+            let mut seed_b = Rng::seed_from_u64(2);
+            let mut deferred = MsmAccumulator::from_rng(&mut seed_a);
+            let mut eager = MsmAccumulator::eager_from_rng(&mut seed_b);
+            for acc in [&mut deferred, &mut eager] {
+                let mut rr = r.clone();
+                for _ in 0..4 {
+                    push_true_equation(acc, &mut rr);
+                }
+                if bad {
+                    acc.begin_equation();
+                    acc.push(Fr::from_u64(3), G1::random(&mut rr).to_affine());
+                }
+            }
+            assert_eq!(deferred.flush(), eager.flush());
+            assert_eq!(deferred.flushes(), 1);
+            assert!(eager.flushes() > 1);
+        }
+    }
+
+    #[test]
+    fn fixed_base_blocks_merge_across_equations() {
+        let mut r = rng();
+        let bases: Vec<G1Affine> = (0..4).map(|_| G1::random(&mut r).to_affine()).collect();
+        let mut acc = MsmAccumulator::from_rng(&mut r);
+        // two equations over the same basis slice; each individually holds
+        for _ in 0..2 {
+            let s: Vec<Fr> = (0..4).map(|_| Fr::random(&mut r)).collect();
+            let sum = bases
+                .iter()
+                .zip(&s)
+                .map(|(p, x)| p.to_projective().mul(x))
+                .fold(G1::IDENTITY, |a, b| a + b);
+            acc.begin_equation();
+            acc.push_fixed(&bases, &s);
+            acc.push_proj(-Fr::ONE, &sum);
+        }
+        // the basis is stored once despite two pushes (4 merged points +
+        // 2 projective sum terms), and the merged check still accepts
+        assert_eq!(acc.pending_terms(), 4 + 2);
+        assert!(acc.flush());
+
+        // a violated second equation over the same basis must still reject
+        let mut acc2 = MsmAccumulator::from_rng(&mut r);
+        let s: Vec<Fr> = (0..4).map(|_| Fr::random(&mut r)).collect();
+        let sum = bases
+            .iter()
+            .zip(&s)
+            .map(|(p, x)| p.to_projective().mul(x))
+            .fold(G1::IDENTITY, |a, b| a + b);
+        acc2.begin_equation();
+        acc2.push_fixed(&bases, &s);
+        acc2.push_proj(-Fr::ONE, &sum);
+        acc2.begin_equation();
+        acc2.push_fixed(&bases, &s); // same scalars, no cancelling term
+        assert!(!acc2.flush());
+    }
+
+    #[test]
+    fn scale_preserves_validity_of_true_batches() {
+        let mut r = rng();
+        let mut acc = MsmAccumulator::from_rng(&mut r);
+        for _ in 0..3 {
+            let rho = Fr::random(&mut r);
+            acc.set_scale(if rho.is_zero() { Fr::ONE } else { rho });
+            push_true_equation(&mut acc, &mut r);
+        }
+        assert!(acc.flush());
+    }
+
+    #[test]
+    fn empty_flush_is_vacuously_true() {
+        let mut r = rng();
+        let mut acc = MsmAccumulator::from_rng(&mut r);
+        assert!(acc.flush());
+        assert_eq!(acc.flushes(), 1);
+    }
+}

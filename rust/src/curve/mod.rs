@@ -4,6 +4,7 @@
 //! cofactor 1, generator (1, 2). Jacobian coordinates for arithmetic,
 //! affine for storage and transcript serialization.
 
+pub mod accum;
 pub mod msm;
 
 use crate::field::{Fq, Fr};

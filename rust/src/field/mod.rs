@@ -272,6 +272,18 @@ impl<P: FieldParams> Fp<P> {
         Self::from_bytes_wide(&b)
     }
 
+    /// Uniform random *nonzero* element (rejection sampling; one retry per
+    /// ~2^−254 draws) — the batching/scaling coefficients of the deferred
+    /// verification engine must never be zero.
+    pub fn random_nonzero(rng: &mut crate::util::rng::Rng) -> Self {
+        loop {
+            let v = Self::random(rng);
+            if !v.is_zero() {
+                return v;
+            }
+        }
+    }
+
     /// Batch inversion (Montgomery's trick): inverts all non-zero entries in
     /// place with one field inversion + 3n multiplications.
     pub fn batch_invert(values: &mut [Self]) {

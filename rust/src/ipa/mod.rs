@@ -14,8 +14,17 @@
 //! Blinding: fresh Pedersen randomness is folded through every L/R message,
 //! and only the final folded scalars are revealed — the random-linear-
 //! combination leakage this admits is the deviation documented in DESIGN.md.
+//!
+//! Verification is *deferred* (DESIGN.md §verification engine): every
+//! verifier here reduces its group equation to (scalar, point) terms pushed
+//! into a [`MsmAccumulator`] — no per-round point muls, no per-opening MSM.
+//! The classic entry points ([`verify_eval`], [`verify_ip`],
+//! [`batch_verify_eval`]) are thin wrappers that allocate an accumulator
+//! and flush it once; the `_accum`/`_expr` variants let callers thread one
+//! accumulator through many proofs and decide them with a single MSM.
 
-use crate::commit::CommitKey;
+use crate::commit::{ComExpr, CommitKey};
+use crate::curve::accum::MsmAccumulator;
 use crate::curve::{msm::msm, G1Affine, G1};
 use crate::field::Fr;
 use crate::transcript::Transcript;
@@ -79,6 +88,46 @@ fn s_vector(challenges: &[Fr]) -> Vec<Fr> {
     s
 }
 
+/// Folded public-vector value after all rounds in one pass: the per-round
+/// fold e′ = x⁻¹·e_L + x·e_R composes to exactly the s-pattern, so
+/// ev_final = ⟨s_vector(challenges), e⟩ — no round-by-round cloning.
+fn fold_public(s: &[Fr], e: &[Fr]) -> Fr {
+    s.iter().zip(e.iter()).map(|(a, b)| *a * *b).sum()
+}
+
+/// Replay the L/R rounds against the transcript, returning the challenge
+/// vector (shared by every verifier variant).
+fn replay_rounds(
+    proof: &IpaProof,
+    l_label: &'static [u8],
+    r_label: &'static [u8],
+    x_label: &'static [u8],
+    transcript: &mut Transcript,
+) -> Vec<Fr> {
+    let mut challenges = Vec::with_capacity(proof.l.len());
+    for (l, r) in proof.l.iter().zip(proof.r.iter()) {
+        transcript.absorb_point(l_label, l);
+        transcript.absorb_point(r_label, r);
+        challenges.push(nonzero_challenge(transcript, x_label));
+    }
+    challenges
+}
+
+/// Push the −(x²·L + x⁻²·R) round terms of the verification equation.
+fn push_round_terms(acc: &mut MsmAccumulator, proof: &IpaProof, challenges: &[Fr]) {
+    let mut xinv = challenges.to_vec();
+    Fr::batch_invert(&mut xinv);
+    for ((l, r), (x, xi)) in proof
+        .l
+        .iter()
+        .zip(proof.r.iter())
+        .zip(challenges.iter().zip(xinv.iter()))
+    {
+        acc.push(-x.square(), *l);
+        acc.push(-xi.square(), *r);
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Variant 1: evaluation opening ⟨S, e⟩ = v with public e
 // ---------------------------------------------------------------------------
@@ -95,9 +144,25 @@ pub fn prove_eval(
     transcript: &mut Transcript,
     rng: &mut Rng,
 ) -> IpaProof {
+    transcript.absorb_point(b"ipa/com", &com.to_affine());
+    prove_eval_core(ck, values, blind, e, v, transcript, rng)
+}
+
+/// [`prove_eval`] without the commitment absorption — used when the
+/// commitment is a public combination of already-transcript-bound points
+/// (the `_expr` batched openings), so re-absorbing it would only force the
+/// verifier to materialize it.
+pub(crate) fn prove_eval_core(
+    ck: &CommitKey,
+    values: &[Fr],
+    blind: Fr,
+    e: &[Fr],
+    v: Fr,
+    transcript: &mut Transcript,
+    rng: &mut Rng,
+) -> IpaProof {
     let n = values.len();
     assert!(n.is_power_of_two() && e.len() == n && ck.g.len() >= n);
-    transcript.absorb_point(b"ipa/com", &com.to_affine());
     transcript.absorb_fr(b"ipa/value", &v);
     transcript.absorb_u64(b"ipa/n", n as u64);
     let c = nonzero_challenge(transcript, b"ipa/u-scale");
@@ -177,7 +242,7 @@ pub fn prove_eval(
 }
 
 /// Verify an evaluation opening against commitment `com`, public vector `e`
-/// and claimed value `v`.
+/// and claimed value `v`. Thin wrapper: one accumulator, one MSM.
 pub fn verify_eval(
     ck: &CommitKey,
     com: &G1,
@@ -186,52 +251,67 @@ pub fn verify_eval(
     proof: &IpaProof,
     transcript: &mut Transcript,
 ) -> Result<()> {
+    let mut acc = MsmAccumulator::new();
+    verify_eval_accum(ck, com, e, v, proof, transcript, &mut acc)?;
+    ensure!(acc.flush(), "ipa: final check failed");
+    Ok(())
+}
+
+/// [`verify_eval`] deferring all group arithmetic into `acc` (same
+/// transcript schedule — the commitment is still absorbed).
+pub fn verify_eval_accum(
+    ck: &CommitKey,
+    com: &G1,
+    e: &[Fr],
+    v: Fr,
+    proof: &IpaProof,
+    transcript: &mut Transcript,
+    acc: &mut MsmAccumulator,
+) -> Result<()> {
+    transcript.absorb_point(b"ipa/com", &com.to_affine());
+    verify_eval_core(ck, &[(Fr::ONE, *com)], e, v, proof, transcript, acc)
+}
+
+/// Shared deferred verifier: the commitment is given symbolically as
+/// Σ coeffᵢ·Pᵢ over transcript-bound points and is NOT absorbed here. The
+/// entire check expect − p = 𝒪, i.e.
+///   Σ s[i]·a·gᵢ + c·(a·b − v)·U + blind·h − Σ coeffᵢ·Pᵢ − Σⱼ (x²ⱼLⱼ + x⁻²ⱼRⱼ) = 𝒪,
+/// lands in the accumulator as one equation — zero point operations here.
+fn verify_eval_core(
+    ck: &CommitKey,
+    com_terms: &[(Fr, G1)],
+    e: &[Fr],
+    v: Fr,
+    proof: &IpaProof,
+    transcript: &mut Transcript,
+    acc: &mut MsmAccumulator,
+) -> Result<()> {
     let n = e.len();
     ensure!(n.is_power_of_two(), "ipa: length must be a power of two");
     ensure!(
         proof.l.len() == n.trailing_zeros() as usize && proof.r.len() == proof.l.len(),
         "ipa: wrong number of rounds"
     );
-    transcript.absorb_point(b"ipa/com", &com.to_affine());
+    ensure!(ck.g.len() >= n, "ipa: commitment key too short");
     transcript.absorb_fr(b"ipa/value", &v);
     transcript.absorb_u64(b"ipa/n", n as u64);
     let c = nonzero_challenge(transcript, b"ipa/u-scale");
-    let u = ipa_u(&ck.label).to_projective().mul(&c);
+    let challenges = replay_rounds(proof, b"ipa/L", b"ipa/R", b"ipa/x", transcript);
 
-    let mut p = *com + u.mul(&v);
-    let mut challenges = Vec::with_capacity(proof.l.len());
-    for (l, r) in proof.l.iter().zip(proof.r.iter()) {
-        transcript.absorb_point(b"ipa/L", l);
-        transcript.absorb_point(b"ipa/R", r);
-        let x = nonzero_challenge(transcript, b"ipa/x");
-        let xi = x.inverse().unwrap();
-        p = l.to_projective().mul(&x.square()) + p + r.to_projective().mul(&xi.square());
-        challenges.push(x);
-    }
-
-    // fold e with the verifier's own challenges
-    let mut ev = e.to_vec();
-    for x in &challenges {
-        let xi = x.inverse().unwrap();
-        let half = ev.len() / 2;
-        let mut next = Vec::with_capacity(half);
-        for i in 0..half {
-            next.push(xi * ev[i] + *x * ev[i + half]);
-        }
-        ev = next;
-    }
-    if ev[0] != proof.b {
+    let s = s_vector(&challenges);
+    if fold_public(&s, e) != proof.b {
         bail!("ipa: folded public vector mismatch");
     }
 
-    let s = s_vector(&challenges);
-    let g_final = msm(&ck.g[..n], &s.iter().map(|si| *si * proof.a).collect::<Vec<_>>());
-    let expect = g_final
-        + u.mul(&(proof.a * ev[0]))
-        + ck.h.to_projective().mul(&proof.blind);
-    if expect != p {
-        bail!("ipa: final check failed");
+    acc.begin_equation();
+    let g_scalars: Vec<Fr> = s.iter().map(|si| *si * proof.a).collect();
+    acc.push_fixed(&ck.g[..n], &g_scalars);
+    acc.push(c * (proof.a * proof.b - v), ipa_u(&ck.label));
+    acc.push(proof.blind, ck.h);
+    for (coeff, com) in com_terms {
+        acc.push_proj(-*coeff, com);
     }
+    push_round_terms(acc, proof, &challenges);
     Ok(())
 }
 
@@ -272,10 +352,28 @@ pub fn prove_ip(
     transcript: &mut Transcript,
     rng: &mut Rng,
 ) -> IpaProof {
+    transcript.absorb_point(b"ipa2/com", &com.to_affine());
+    prove_ip_core(basis, a, b, blind, t, h_scale, transcript, rng)
+}
+
+/// [`prove_ip`] without the commitment absorption: used by zkReLU, where P
+/// is a public combination of already-absorbed commitments and challenge-
+/// derived exponents, so the verifier never needs to materialize it (and
+/// the prover saves the P-sized MSM it only computed in order to absorb).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn prove_ip_core(
+    basis: &IpaBasis,
+    a: &[Fr],
+    b: &[Fr],
+    blind: Fr,
+    t: Fr,
+    h_scale: Option<&[Fr]>,
+    transcript: &mut Transcript,
+    rng: &mut Rng,
+) -> IpaProof {
     let n = a.len();
     assert!(n.is_power_of_two() && b.len() == n);
     assert!(basis.g.len() >= n && basis.h.len() >= n);
-    transcript.absorb_point(b"ipa2/com", &com.to_affine());
     transcript.absorb_fr(b"ipa2/t", &t);
     transcript.absorb_u64(b"ipa2/n", n as u64);
     let c = nonzero_challenge(transcript, b"ipa2/u-scale");
@@ -392,39 +490,94 @@ pub fn verify_ip(
     h_scale: Option<&[Fr]>,
     transcript: &mut Transcript,
 ) -> Result<()> {
+    let mut acc = MsmAccumulator::new();
+    verify_ip_accum(basis, com, n, t, proof, h_scale, transcript, &mut acc)?;
+    ensure!(acc.flush(), "ipa2: final check failed");
+    Ok(())
+}
+
+/// [`verify_ip`] deferring all group arithmetic into `acc` (same transcript
+/// schedule — the commitment is still absorbed).
+#[allow(clippy::too_many_arguments)]
+pub fn verify_ip_accum(
+    basis: &IpaBasis,
+    com: &G1,
+    n: usize,
+    t: Fr,
+    proof: &IpaProof,
+    h_scale: Option<&[Fr]>,
+    transcript: &mut Transcript,
+    acc: &mut MsmAccumulator,
+) -> Result<()> {
+    transcript.absorb_point(b"ipa2/com", &com.to_affine());
+    verify_ip_core(
+        &basis.g,
+        &basis.h,
+        basis.blind_h,
+        &basis.label,
+        &[(Fr::ONE, *com)],
+        None,
+        None,
+        n,
+        t,
+        proof,
+        h_scale,
+        transcript,
+        acc,
+    )
+}
+
+/// Shared deferred two-vector verifier. The commitment P is given
+/// symbolically: point terms in `com_terms` plus optional public exponent
+/// vectors `g_pub`/`h_pub` on the two bases (zkReLU's G^{−z·1} and
+/// H^{w_pub} factors) — none of it is absorbed or materialized here; the
+/// caller guarantees every constituent is already transcript-bound. The
+/// whole check lands in the accumulator as one equation.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn verify_ip_core(
+    g: &[G1Affine],
+    h: &[G1Affine],
+    blind_h: G1Affine,
+    label: &[u8],
+    com_terms: &[(Fr, G1)],
+    g_pub: Option<&[Fr]>,
+    h_pub: Option<&[Fr]>,
+    n: usize,
+    t: Fr,
+    proof: &IpaProof,
+    h_scale: Option<&[Fr]>,
+    transcript: &mut Transcript,
+    acc: &mut MsmAccumulator,
+) -> Result<()> {
     ensure!(n.is_power_of_two(), "ipa2: length must be power of two");
     ensure!(
         proof.l.len() == n.trailing_zeros() as usize && proof.r.len() == proof.l.len(),
         "ipa2: wrong number of rounds"
     );
-    transcript.absorb_point(b"ipa2/com", &com.to_affine());
+    ensure!(g.len() >= n && h.len() >= n, "ipa2: basis too short");
     transcript.absorb_fr(b"ipa2/t", &t);
     transcript.absorb_u64(b"ipa2/n", n as u64);
     let c = nonzero_challenge(transcript, b"ipa2/u-scale");
-    let u = ipa_u(&basis.label).to_projective().mul(&c);
-
-    let mut p = *com + u.mul(&t);
-    let mut challenges = Vec::with_capacity(proof.l.len());
-    for (l, r) in proof.l.iter().zip(proof.r.iter()) {
-        transcript.absorb_point(b"ipa2/L", l);
-        transcript.absorb_point(b"ipa2/R", r);
-        let x = nonzero_challenge(transcript, b"ipa2/x");
-        let xi = x.inverse().unwrap();
-        p = l.to_projective().mul(&x.square()) + p + r.to_projective().mul(&xi.square());
-        challenges.push(x);
-    }
+    let challenges = replay_rounds(proof, b"ipa2/L", b"ipa2/R", b"ipa2/x", transcript);
 
     let s = s_vector(&challenges);
-    let mut s_inv = challenges.clone();
-    Fr::batch_invert(&mut s_inv);
     // h folds with inverted exponent pattern: s'[i] = 1/s[i]
     let mut s_rec = s.clone();
     Fr::batch_invert(&mut s_rec);
-    let g_final = msm(
-        &basis.g[..n],
-        &s.iter().map(|si| *si * proof.a).collect::<Vec<_>>(),
-    );
-    let h_scalars: Vec<Fr> = match h_scale {
+
+    acc.begin_equation();
+    let g_scalars: Vec<Fr> = match g_pub {
+        None => s.iter().map(|si| *si * proof.a).collect(),
+        Some(gp) => {
+            ensure!(gp.len() == n, "ipa2: g_pub length mismatch");
+            s.iter()
+                .zip(gp.iter())
+                .map(|(si, p)| *si * proof.a - *p)
+                .collect()
+        }
+    };
+    acc.push_fixed(&g[..n], &g_scalars);
+    let mut h_scalars: Vec<Fr> = match h_scale {
         None => s_rec.iter().map(|si| *si * proof.b).collect(),
         Some(scale) => {
             ensure!(scale.len() == n, "ipa2: h_scale length mismatch");
@@ -435,14 +588,19 @@ pub fn verify_ip(
                 .collect()
         }
     };
-    let h_final = msm(&basis.h[..n], &h_scalars);
-    let expect = g_final
-        + h_final
-        + u.mul(&(proof.a * proof.b))
-        + basis.blind_h.to_projective().mul(&proof.blind);
-    if expect != p {
-        bail!("ipa2: final check failed");
+    if let Some(hp) = h_pub {
+        ensure!(hp.len() == n, "ipa2: h_pub length mismatch");
+        for (hs, p) in h_scalars.iter_mut().zip(hp.iter()) {
+            *hs -= *p;
+        }
     }
+    acc.push_fixed(&h[..n], &h_scalars);
+    acc.push(c * (proof.a * proof.b - t), ipa_u(label));
+    acc.push(proof.blind, blind_h);
+    for (coeff, com) in com_terms {
+        acc.push_proj(-*coeff, com);
+    }
+    push_round_terms(acc, proof, &challenges);
     Ok(())
 }
 
@@ -456,6 +614,24 @@ pub struct EvalClaim {
     pub values: Vec<Fr>,
     pub blind: Fr,
     pub v: Fr,
+}
+
+/// ρ-powered fold of the prover-side claim data: combined (values, blind,
+/// value) — the one definition both batching provers share.
+fn fold_claims(claims: &[EvalClaim], e_len: usize, rho: Fr) -> (Vec<Fr>, Fr, Fr) {
+    let mut coeff = Fr::ONE;
+    let mut values = vec![Fr::ZERO; e_len];
+    let mut blind = Fr::ZERO;
+    let mut v = Fr::ZERO;
+    for cl in claims {
+        for (acc, x) in values.iter_mut().zip(cl.values.iter()) {
+            *acc += coeff * *x;
+        }
+        blind += coeff * cl.blind;
+        v += coeff * cl.v;
+        coeff *= rho;
+    }
+    (values, blind, v)
 }
 
 /// Batch multiple evaluation claims at the *same* public vector `e` into a
@@ -475,17 +651,10 @@ pub fn batch_prove_eval(
         transcript.absorb_fr(b"batch/v", &cl.v);
     }
     let rho = transcript.challenge_fr(b"batch/rho");
+    let (values, blind, v) = fold_claims(claims, e.len(), rho);
     let mut coeff = Fr::ONE;
-    let mut values = vec![Fr::ZERO; e.len()];
-    let mut blind = Fr::ZERO;
-    let mut v = Fr::ZERO;
     let mut com = G1::IDENTITY;
     for cl in claims {
-        for (acc, x) in values.iter_mut().zip(cl.values.iter()) {
-            *acc += coeff * *x;
-        }
-        blind += coeff * cl.blind;
-        v += coeff * cl.v;
         com = com + cl.com.mul(&coeff);
         coeff *= rho;
     }
@@ -493,13 +662,53 @@ pub fn batch_prove_eval(
     (com, v, proof)
 }
 
-/// Verifier side of [`batch_prove_eval`].
+/// [`batch_prove_eval`] for claims whose commitments are public
+/// combinations of already-transcript-bound points: absorbs only the
+/// claimed values (the commitments are bound transitively), so the matching
+/// verifier ([`batch_verify_eval_expr`]) never materializes a single point.
+/// Claim order must match the verifier's exactly.
+pub fn batch_prove_eval_expr(
+    ck: &CommitKey,
+    claims: &[EvalClaim],
+    e: &[Fr],
+    transcript: &mut Transcript,
+    rng: &mut Rng,
+) -> IpaProof {
+    assert!(!claims.is_empty());
+    for cl in claims {
+        transcript.absorb_fr(b"batch/v", &cl.v);
+    }
+    let rho = transcript.challenge_fr(b"batch/rho");
+    let (values, blind, v) = fold_claims(claims, e.len(), rho);
+    prove_eval_core(ck, &values, blind, e, v, transcript, rng)
+}
+
+/// Verifier side of [`batch_prove_eval`]. Thin wrapper: one accumulator,
+/// one MSM.
 pub fn batch_verify_eval(
     ck: &CommitKey,
     coms_and_values: &[(G1, Fr)],
     e: &[Fr],
     proof: &IpaProof,
     transcript: &mut Transcript,
+) -> Result<()> {
+    let mut acc = MsmAccumulator::new();
+    batch_verify_eval_accum(ck, coms_and_values, e, proof, transcript, &mut acc)?;
+    ensure!(acc.flush(), "ipa: batched final check failed");
+    Ok(())
+}
+
+/// [`batch_verify_eval`] deferring the verification equation into `acc`.
+/// Keeps the classic transcript schedule, which absorbs the RLC-combined
+/// commitment — materializing it costs one claims-sized MSM; use the
+/// `_expr` variant to avoid even that.
+pub fn batch_verify_eval_accum(
+    ck: &CommitKey,
+    coms_and_values: &[(G1, Fr)],
+    e: &[Fr],
+    proof: &IpaProof,
+    transcript: &mut Transcript,
+    acc: &mut MsmAccumulator,
 ) -> Result<()> {
     ensure!(!coms_and_values.is_empty(), "empty batch");
     for (com, v) in coms_and_values {
@@ -509,13 +718,44 @@ pub fn batch_verify_eval(
     let rho = transcript.challenge_fr(b"batch/rho");
     let mut coeff = Fr::ONE;
     let mut v = Fr::ZERO;
-    let mut com = G1::IDENTITY;
+    let mut expr = ComExpr::default();
     for (c, val) in coms_and_values {
         v += coeff * *val;
-        com = com + c.mul(&coeff);
+        expr.push(coeff, *c);
         coeff *= rho;
     }
-    verify_eval(ck, &com, e, v, proof, transcript)
+    let com = expr.eval();
+    verify_eval_accum(ck, &com, e, v, proof, transcript, acc)
+}
+
+/// Verifier side of [`batch_prove_eval_expr`]: claims carry symbolic
+/// commitments over transcript-bound points, only values are absorbed, and
+/// every group term — including the per-claim RLC — defers into `acc`.
+/// This is the zkDL verifier's workhorse: zero point operations per call.
+pub fn batch_verify_eval_expr(
+    ck: &CommitKey,
+    claims: &[(ComExpr, Fr)],
+    e: &[Fr],
+    proof: &IpaProof,
+    transcript: &mut Transcript,
+    acc: &mut MsmAccumulator,
+) -> Result<()> {
+    ensure!(!claims.is_empty(), "empty batch");
+    for (_, v) in claims {
+        transcript.absorb_fr(b"batch/v", v);
+    }
+    let rho = transcript.challenge_fr(b"batch/rho");
+    let mut coeff = Fr::ONE;
+    let mut v = Fr::ZERO;
+    let mut com_terms: Vec<(Fr, G1)> = Vec::new();
+    for (expr, val) in claims {
+        v += coeff * *val;
+        for (c, p) in &expr.terms {
+            com_terms.push((coeff * *c, *p));
+        }
+        coeff *= rho;
+    }
+    verify_eval_core(ck, &com_terms, e, v, proof, transcript, acc)
 }
 
 #[cfg(test)]
@@ -656,5 +896,71 @@ mod tests {
         bad[2].1 += Fr::ONE;
         let mut tv2 = Transcript::new(b"tb");
         assert!(batch_verify_eval(&ck, &bad, &e, &proof, &mut tv2).is_err());
+    }
+
+    #[test]
+    fn expr_batch_defers_to_a_single_shared_msm() {
+        let mut r = rng();
+        let n = 16;
+        let ck = CommitKey::setup(b"ipa-test", n);
+        let e: Vec<Fr> = (0..n).map(|_| Fr::random(&mut r)).collect();
+        let mut claims = Vec::new();
+        let mut publics: Vec<(ComExpr, Fr)> = Vec::new();
+        for _ in 0..3 {
+            let vals: Vec<Fr> = (0..n).map(|_| Fr::random(&mut r)).collect();
+            let v: Fr = vals.iter().zip(&e).map(|(a, b)| *a * *b).sum();
+            let blind = Fr::random(&mut r);
+            let com = ck.commit(&vals, blind);
+            publics.push((ComExpr::point(com), v));
+            claims.push(EvalClaim {
+                com,
+                values: vals,
+                blind,
+                v,
+            });
+        }
+        let mut tp = Transcript::new(b"te");
+        let proof = batch_prove_eval_expr(&ck, &claims, &e, &mut tp, &mut r);
+
+        // two independent openings share one accumulator → exactly one MSM
+        let mut seed = Rng::seed_from_u64(0xbeef);
+        let mut acc = MsmAccumulator::from_rng(&mut seed);
+        let mut tv = Transcript::new(b"te");
+        batch_verify_eval_expr(&ck, &publics, &e, &proof, &mut tv, &mut acc).expect("defer");
+        let mut tv_b = Transcript::new(b"te");
+        batch_verify_eval_expr(&ck, &publics, &e, &proof, &mut tv_b, &mut acc).expect("defer");
+        assert_eq!(acc.flushes(), 0, "no MSM before the flush");
+        assert!(acc.flush(), "deferred batch verifies");
+        assert_eq!(acc.flushes(), 1);
+
+        // tampering one claimed value must break the deferred batch too
+        let mut bad = publics.clone();
+        bad[1].1 += Fr::ONE;
+        let mut acc2 = MsmAccumulator::from_rng(&mut seed);
+        let mut tv2 = Transcript::new(b"te");
+        batch_verify_eval_expr(&ck, &bad, &e, &proof, &mut tv2, &mut acc2).expect("defer");
+        assert!(!acc2.flush(), "tampered value must fail at the flush");
+    }
+
+    #[test]
+    fn accum_variants_match_eager_wrappers() {
+        // verify_eval (wrapper) and verify_eval_accum agree on accept/reject
+        let mut r = rng();
+        let n = 8;
+        let ck = CommitKey::setup(b"ipa-test", n);
+        let vals: Vec<Fr> = (0..n).map(|_| Fr::random(&mut r)).collect();
+        let e: Vec<Fr> = (0..n).map(|_| Fr::random(&mut r)).collect();
+        let v: Fr = vals.iter().zip(&e).map(|(a, b)| *a * *b).sum();
+        let blind = Fr::random(&mut r);
+        let com = ck.commit(&vals, blind);
+        let mut tp = Transcript::new(b"ta");
+        let proof = prove_eval(&ck, &com, &vals, blind, &e, v, &mut tp, &mut r);
+        let mut seed = Rng::seed_from_u64(7);
+        let mut acc = MsmAccumulator::from_rng(&mut seed);
+        let mut tv = Transcript::new(b"ta");
+        verify_eval_accum(&ck, &com, &e, v, &proof, &mut tv, &mut acc).expect("defer");
+        assert!(acc.flush());
+        let mut tv2 = Transcript::new(b"ta");
+        verify_eval(&ck, &com, &e, v, &proof, &mut tv2).expect("wrapper verifies");
     }
 }

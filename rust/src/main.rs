@@ -4,7 +4,8 @@
 //!   prove        prove + verify one training step (optionally persist it)
 //!   train        proven training run (loss curve + per-step proof metrics)
 //!   prove-trace  aggregate T training steps into one FAC4DNN trace proof
-//!   verify-trace re-read a persisted trace proof and verify out-of-process
+//!   verify-trace re-read persisted trace proofs and verify out-of-process;
+//!                multiple `--in` files batch into ONE MSM
 //!   membership   build the Merkle tree and answer (non-)membership queries
 //!   info         print configuration and environment
 //!
@@ -13,11 +14,12 @@
 //!   zkdl train --depth 3 --width 64 --batch 16 --steps 50 --prove-every 10
 //!   zkdl prove-trace --depth 2 --width 16 --batch 8 --steps 16 --out trace.zkp
 //!   zkdl verify-trace --in trace.zkp
+//!   zkdl verify-trace --in a.zkp --in b.zkp --in c.zkp
 //!   zkdl membership --n 1000 --queries 100 --hash sha256 --positivity 0.5
 
 use anyhow::{Context, Result};
 use std::path::Path;
-use zkdl::aggregate::{verify_trace, TraceKey};
+use zkdl::aggregate::{verify_trace, verify_traces_batch, TraceKey, TraceProof};
 use zkdl::coordinator::{train_and_prove, train_and_prove_trace, TraceTrainOptions, TrainOptions};
 use zkdl::data::Dataset;
 use zkdl::hash::HashFn;
@@ -125,17 +127,41 @@ fn cmd_prove_trace(cli: &Cli) -> Result<()> {
 }
 
 fn cmd_verify_trace(cli: &Cli) -> Result<()> {
-    let path = cli.get("in").unwrap_or("trace.zkp");
-    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
-    let (cfg, proof) = zkdl::wire::decode_trace_proof(&bytes)?;
-    println!(
-        "trace proof: {} steps, L={} d={} B={}, {} wire bytes",
-        proof.steps, cfg.depth, cfg.width, cfg.batch, bytes.len()
-    );
-    let tk = TraceKey::setup(cfg, proof.steps);
+    let mut paths: Vec<String> = cli.get_all("in").iter().map(|s| s.to_string()).collect();
+    paths.extend(cli.positional.iter().cloned());
+    if paths.is_empty() {
+        paths.push("trace.zkp".to_string());
+    }
+    let mut decoded: Vec<TraceProof> = Vec::with_capacity(paths.len());
+    let mut keys: Vec<TraceKey> = Vec::with_capacity(paths.len());
+    for path in &paths {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+        let (cfg, proof) = zkdl::wire::decode_trace_proof(&bytes)?;
+        println!(
+            "{path}: {} steps, L={} d={} B={}, {} wire bytes",
+            proof.steps,
+            cfg.depth,
+            cfg.width,
+            cfg.batch,
+            bytes.len()
+        );
+        keys.push(TraceKey::setup(cfg, proof.steps));
+        decoded.push(proof);
+    }
     let t = std::time::Instant::now();
-    verify_trace(&tk, &proof).context("trace verification failed")?;
-    println!("verified in {:.3} s", t.elapsed().as_secs_f64());
+    if decoded.len() == 1 {
+        verify_trace(&keys[0], &decoded[0]).context("trace verification failed")?;
+        println!("verified in {:.3} s (one MSM)", t.elapsed().as_secs_f64());
+    } else {
+        let pairs: Vec<(&TraceKey, &TraceProof)> = keys.iter().zip(decoded.iter()).collect();
+        let mut rng = Rng::from_entropy();
+        verify_traces_batch(&pairs, &mut rng).context("batched trace verification failed")?;
+        println!(
+            "batch-verified {} proofs in {:.3} s (one MSM total)",
+            decoded.len(),
+            t.elapsed().as_secs_f64()
+        );
+    }
     Ok(())
 }
 

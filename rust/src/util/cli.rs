@@ -5,10 +5,12 @@
 use std::collections::HashMap;
 
 /// Parsed command line: a subcommand plus `--key value` options and flags.
+/// Options may repeat (`--in a --in b`): every value is kept in order;
+/// [`Cli::get`] returns the last, [`Cli::get_all`] returns all of them.
 #[derive(Debug, Default, Clone)]
 pub struct Cli {
     pub subcommand: Option<String>,
-    pub options: HashMap<String, String>,
+    pub options: HashMap<String, Vec<String>>,
     pub flags: Vec<String>,
     pub positional: Vec<String>,
 }
@@ -24,7 +26,10 @@ impl Cli {
                 // `--key value` if the next token is not another option,
                 // otherwise a bare flag.
                 if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                    cli.options.insert(key.to_string(), args[i + 1].clone());
+                    cli.options
+                        .entry(key.to_string())
+                        .or_default()
+                        .push(args[i + 1].clone());
                     i += 2;
                     continue;
                 }
@@ -47,8 +52,21 @@ impl Cli {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Last value of an option (single-value callers).
     pub fn get(&self, name: &str) -> Option<&str> {
-        self.options.get(name).map(|s| s.as_str())
+        self.options
+            .get(name)
+            .and_then(|vs| vs.last())
+            .map(|s| s.as_str())
+    }
+
+    /// All values of a repeated option, in the order given (empty if
+    /// absent) — e.g. `verify-trace --in a.zkp --in b.zkp`.
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.options
+            .get(name)
+            .map(|vs| vs.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
     }
 
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
@@ -91,6 +109,16 @@ mod tests {
         let c = parse("bench --full");
         assert!(c.flag("full"));
         assert_eq!(c.subcommand.as_deref(), Some("bench"));
+    }
+
+    #[test]
+    fn repeated_options_collect_in_order() {
+        let c = parse("verify-trace --in a.zkp --in b.zkp --in c.zkp --depth 2");
+        assert_eq!(c.get_all("in"), vec!["a.zkp", "b.zkp", "c.zkp"]);
+        // `get` keeps the last value for single-value callers
+        assert_eq!(c.get("in"), Some("c.zkp"));
+        assert_eq!(c.get_all("depth"), vec!["2"]);
+        assert!(c.get_all("missing").is_empty());
     }
 
     #[test]

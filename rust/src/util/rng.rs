@@ -12,6 +12,66 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seed from process-level entropy. All four state words are filled
+    /// (no collapse through a single u64), but they derive from std's
+    /// per-thread `RandomState` keys (one ~128-bit OS-random seed plus a
+    /// per-instance counter) mixed with the clock and an ASLR address —
+    /// so the underlying entropy is ~128 bits and the words are not
+    /// independent. Not a CSPRNG. Used for verifier-local batching
+    /// coefficients, which only need to be unpredictable to whoever
+    /// authored the proof bytes and never leave the process; Fiat–Shamir
+    /// challenges never come from here. Swap in an OS CSPRNG if a
+    /// stronger margin is ever needed.
+    pub fn from_entropy() -> Self {
+        use std::hash::{BuildHasher, Hasher};
+        let word = |tag: u64| {
+            let mut h = std::collections::hash_map::RandomState::new().build_hasher();
+            h.write_u64(tag);
+            h.finish()
+        };
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let marker = 0u8;
+        let addr = core::ptr::addr_of!(marker) as u64;
+        let mut rng = Self {
+            s: [
+                word(1) ^ nanos,
+                word(2) ^ addr,
+                word(3) ^ nanos.rotate_left(32),
+                word(4) ^ 0x7a6b646c, // "zkdl"
+            ],
+        };
+        if rng.s.iter().all(|&x| x == 0) {
+            rng.s[0] = 0x9e3779b97f4a7c15;
+        }
+        // decorrelate the raw source words before first use
+        for _ in 0..8 {
+            rng.next_u64();
+        }
+        rng
+    }
+
+    /// Derive an independent child generator carrying a fresh full-width
+    /// 256-bit state drawn from this one (unlike re-seeding through a
+    /// single u64, this preserves the parent's entropy width).
+    pub fn split(&mut self) -> Self {
+        let mut s = [
+            self.next_u64(),
+            self.next_u64(),
+            self.next_u64(),
+            self.next_u64(),
+        ];
+        if s.iter().all(|&x| x == 0) {
+            s[0] = 0x9e3779b97f4a7c15;
+        }
+        let mut child = Self { s };
+        // one round of mixing so parent and child streams decorrelate
+        child.next_u64();
+        child
+    }
+
     /// Seed via SplitMix64 so that similar seeds give unrelated streams.
     pub fn seed_from_u64(seed: u64) -> Self {
         let mut sm = seed;
@@ -89,6 +149,30 @@ mod tests {
         }
         let mut c = Rng::seed_from_u64(2);
         assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn split_streams_are_deterministic_and_diverge() {
+        let mut a1 = Rng::seed_from_u64(1);
+        let mut a2 = Rng::seed_from_u64(1);
+        let mut c1 = a1.split();
+        let mut c2 = a2.split();
+        for _ in 0..10 {
+            assert_eq!(c1.next_u64(), c2.next_u64());
+        }
+        // successive splits of one parent give unrelated streams
+        let mut d = a1.split();
+        assert_ne!(c1.next_u64(), d.next_u64());
+    }
+
+    #[test]
+    fn entropy_seeds_differ_across_calls() {
+        let mut a = Rng::from_entropy();
+        let mut b = Rng::from_entropy();
+        assert_ne!(
+            [a.next_u64(), a.next_u64()],
+            [b.next_u64(), b.next_u64()]
+        );
     }
 
     #[test]

@@ -12,9 +12,21 @@ pub fn num_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// Minimum item count before `par_map` spawns worker threads. Its call
+/// sites all have heavyweight per-item work (a hash-to-curve derivation, a
+/// Pippenger bucket window, a witness row batch), so below this count the
+/// per-thread spawn cost (tens of µs) dominates the work being split.
+pub const PAR_MIN_ITEMS: usize = 8;
+
+/// Minimum element count before `par_chunks_mut` spawns. Chunk callers
+/// (the i64 matmuls) do only a few ns per element, so the threshold is in
+/// elements rather than chunks.
+pub const PAR_MIN_ELEMS: usize = 1024;
+
 /// Map `f` over `items` in parallel, preserving order.
 /// Falls back to sequential when a single thread is available or the input
-/// is small enough that spawn overhead would dominate.
+/// has at most [`PAR_MIN_ITEMS`] items, where spawn overhead would
+/// dominate.
 pub fn par_map<T, U, F>(items: Vec<T>, f: F) -> Vec<U>
 where
     T: Send,
@@ -22,7 +34,7 @@ where
     F: Fn(T) -> U + Sync,
 {
     let n_threads = num_threads();
-    if n_threads == 1 || items.len() <= 1 {
+    if n_threads == 1 || items.len() <= PAR_MIN_ITEMS {
         return items.into_iter().map(f).collect();
     }
     let n = items.len();
@@ -45,6 +57,9 @@ where
 }
 
 /// Run `f(chunk_index, chunk)` over mutable chunks of `data` in parallel.
+/// Runs inline (same guard as [`par_map`]) when only one chunk would be
+/// spawned, a single thread is available, or the data is smaller than
+/// [`PAR_MIN_ELEMS`].
 pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_size: usize, f: F)
 where
     T: Send,
@@ -53,9 +68,17 @@ where
     if data.is_empty() {
         return;
     }
+    let chunk = chunk_size.max(1);
+    let n_chunks = data.len().div_ceil(chunk);
+    if num_threads() == 1 || n_chunks == 1 || data.len() < PAR_MIN_ELEMS {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
     let f = &f;
     std::thread::scope(|s| {
-        for (i, chunk) in data.chunks_mut(chunk_size.max(1)).enumerate() {
+        for (i, chunk) in data.chunks_mut(chunk).enumerate() {
             s.spawn(move || f(i, chunk));
         }
     });
@@ -79,6 +102,19 @@ mod tests {
         let v: Vec<usize> = (0..1000).collect();
         let out = par_map(v, |x| x * 2);
         assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn small_inputs_fall_back_sequentially() {
+        // below PAR_MIN_ITEMS / PAR_MIN_ELEMS the sequential path must give
+        // identical results
+        let out = par_map(vec![1, 2, 3], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+        let mut v = vec![0u8; 10];
+        par_chunks_mut(&mut v, 3, |i, c| {
+            c.iter_mut().for_each(|x| *x = i as u8 + 1)
+        });
+        assert_eq!(v, vec![1, 1, 1, 2, 2, 2, 3, 3, 3, 4]);
     }
 
     #[test]

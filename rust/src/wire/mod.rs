@@ -32,8 +32,12 @@ use anyhow::{bail, ensure, Context, Result};
 
 /// File magic, first four bytes of every proof artifact.
 pub const MAGIC: [u8; 4] = *b"ZKDL";
-/// Format version; bump on any layout change.
-pub const VERSION: u16 = 1;
+/// Format version; bump on any layout change *or* Fiat–Shamir transcript
+/// schedule change (a proof generated under an older schedule decodes fine
+/// but can never verify — better to reject it as an unsupported version).
+/// v2: deferred-verification transcript — batched openings absorb values
+/// only, zkReLU's statement point P is no longer absorbed.
+pub const VERSION: u16 = 2;
 
 /// Payload discriminant in the envelope header.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -20,7 +20,8 @@
 //!   (Liu et al. [1]): per-layer randomness, per-layer openings, per-layer
 //!   validity. Proof size grows O(L).
 
-use crate::commit::CommitKey;
+use crate::commit::{ComExpr, CommitKey};
+use crate::curve::accum::MsmAccumulator;
 use crate::curve::{G1, G1Affine};
 use crate::field::Fr;
 use crate::gkr;
@@ -362,22 +363,46 @@ pub(crate) fn draw_group_challenges(t: &mut Transcript, log_b: usize, log_d: usi
     }
 }
 
-/// Derived commitment of Z^ℓ via (3): com_zdp^{2^R}·com_sign^{−2^{Q+R−1}}·com_rz.
-pub(crate) fn derived_com_z(cfg: &ModelConfig, zdp: &G1, sign: &G1, rz: &G1) -> G1 {
+/// Symbolic derived commitment of Z^ℓ via (3):
+/// com_zdp^{2^R}·com_sign^{−2^{Q+R−1}}·com_rz. The expression form is the
+/// single source of the coefficients — the deferred verifier merges it into
+/// the one MSM, the prover materializes it via [`ComExpr::eval`].
+pub(crate) fn derived_expr_z(cfg: &ModelConfig, zdp: G1, sign: G1, rz: G1) -> ComExpr {
     let two_r = Fr::from_u128(1u128 << cfg.r_bits);
     let two_qr = Fr::from_u128(1u128 << (cfg.q_bits + cfg.r_bits - 1));
-    zdp.mul(&two_r) + sign.mul(&(-two_qr)) + *rz
+    ComExpr {
+        terms: vec![(two_r, zdp), (-two_qr, sign), (Fr::ONE, rz)],
+    }
 }
 
-/// Derived commitment of G_A^ℓ via (5): com_gap^{2^R}·com_rga.
-pub(crate) fn derived_com_ga(cfg: &ModelConfig, gap: &G1, rga: &G1) -> G1 {
-    gap.mul(&Fr::from_u128(1u128 << cfg.r_bits)) + *rga
+/// Symbolic derived commitment of G_A^ℓ via (5): com_gap^{2^R}·com_rga.
+pub(crate) fn derived_expr_ga(cfg: &ModelConfig, gap: G1, rga: G1) -> ComExpr {
+    ComExpr {
+        terms: vec![(Fr::from_u128(1u128 << cfg.r_bits), gap), (Fr::ONE, rga)],
+    }
 }
 
-/// Derived commitment of G_Z^{L−1} via (32): com_zdp·com_sign^{−2^{Q−1}}·com_y^{−1}.
-pub(crate) fn derived_com_gz_last(cfg: &ModelConfig, zdp: &G1, sign: &G1, y: &G1) -> G1 {
+/// Symbolic derived commitment of G_Z^{L−1} via (32):
+/// com_zdp·com_sign^{−2^{Q−1}}·com_y^{−1}.
+pub(crate) fn derived_expr_gz_last(cfg: &ModelConfig, zdp: G1, sign: G1, y: G1) -> ComExpr {
     let two_q = Fr::from_u128(1u128 << (cfg.q_bits - 1));
-    *zdp + sign.mul(&(-two_q)) + y.neg()
+    ComExpr {
+        terms: vec![(Fr::ONE, zdp), (-two_q, sign), (-Fr::ONE, y)],
+    }
+}
+
+/// Materialized forms (prover side), evaluated from the same expressions so
+/// prover and deferred verifier can never drift on a coefficient.
+pub(crate) fn derived_com_z(cfg: &ModelConfig, zdp: &G1, sign: &G1, rz: &G1) -> G1 {
+    derived_expr_z(cfg, *zdp, *sign, *rz).eval()
+}
+
+pub(crate) fn derived_com_ga(cfg: &ModelConfig, gap: &G1, rga: &G1) -> G1 {
+    derived_expr_ga(cfg, *gap, *rga).eval()
+}
+
+pub(crate) fn derived_com_gz_last(cfg: &ModelConfig, zdp: &G1, sign: &G1, y: &G1) -> G1 {
+    derived_expr_gz_last(cfg, *zdp, *sign, *y).eval()
 }
 
 /// Prover-side derived openings (values + blinds follow the same linear
@@ -425,10 +450,12 @@ struct OpeningTask {
     claims: Vec<EvalClaim>,
 }
 
-/// Verifier-side mirror: (com, claimed value) pairs + the public vector.
+/// Verifier-side mirror: (symbolic com, claimed value) pairs + the public
+/// vector. Commitments stay deferred expressions over transcript-bound
+/// proof points so the whole check lands in the MSM accumulator.
 struct OpeningCheck {
     evec: Vec<Fr>,
-    claims: Vec<(G1, Fr)>,
+    claims: Vec<(ComExpr, Fr)>,
 }
 
 /// e(p) repeated in every slot block: ⟨V, tiled⟩ = ⟨V_slot, e(p)⟩ when V is
@@ -1141,8 +1168,16 @@ pub fn prove_step(
 
         let mut openings = Vec::new();
         for (ck, task) in &tasks {
-            let (_, _, proof) = ipa::batch_prove_eval(ck, &task.claims, &task.evec, &mut t, rng);
-            openings.push(proof);
+            // values-only absorption: every constituent commitment point is
+            // already transcript-bound, so the verifier can keep the claims
+            // symbolic (batch_verify_eval_expr) and defer all group work
+            openings.push(ipa::batch_prove_eval_expr(
+                ck,
+                &task.claims,
+                &task.evec,
+                &mut t,
+                rng,
+            ));
         }
 
         // ---- Phase 4: validity ----
@@ -1251,7 +1286,40 @@ pub(crate) fn tile_claims_at(claims: Vec<EvalClaim>, slots: &[usize], lbar: usiz
 // ---------------------------------------------------------------------------
 
 /// Verify a [`StepProof`]. `pk` provides the public bases (no secrets).
+/// Thin wrapper over [`verify_step_accum`]: allocates one accumulator and
+/// flushes it once — exactly one Pippenger MSM for the whole proof.
 pub fn verify_step(pk: &ProverKey, proof: &StepProof) -> Result<()> {
+    let mut acc = MsmAccumulator::new();
+    verify_step_accum(pk, proof, &mut acc)?;
+    ensure!(acc.flush(), "step proof: deferred MSM check failed");
+    Ok(())
+}
+
+/// Verify a batch of step proofs with ONE MSM total: each proof's deferred
+/// terms are scaled by an independent verifier-chosen random ρᵢ before
+/// merging into the shared accumulator, so equations of different proofs
+/// cannot cancel each other (standard batch-verification argument).
+pub fn verify_steps_batch(pk: &ProverKey, proofs: &[StepProof], rng: &mut Rng) -> Result<()> {
+    ensure!(!proofs.is_empty(), "empty proof batch");
+    let mut acc = MsmAccumulator::from_rng(rng);
+    for (i, proof) in proofs.iter().enumerate() {
+        acc.set_scale(Fr::random_nonzero(rng));
+        verify_step_accum(pk, proof, &mut acc)
+            .with_context(|| format!("batched proof {i}"))?;
+    }
+    ensure!(acc.flush(), "step proof batch: aggregate MSM check failed");
+    Ok(())
+}
+
+/// The transcript replay and every scalar-side check of [`verify_step`],
+/// with all group equations deferred into `acc`. Performs no curve
+/// arithmetic itself — callers decide the proof by flushing the
+/// accumulator.
+pub fn verify_step_accum(
+    pk: &ProverKey,
+    proof: &StepProof,
+    acc: &mut MsmAccumulator,
+) -> Result<()> {
     let cfg = &pk.cfg;
     let depth = cfg.depth;
     let d = cfg.d_size();
@@ -1541,8 +1609,8 @@ pub fn verify_step(pk: &ProverKey, proof: &StepProof) -> Result<()> {
             label: pk.g_aux.label.clone(),
         };
 
-        let stack_com = |cs: &[G1Affine]| -> G1 {
-            layers.iter().map(|&l| cs[l].to_projective()).sum()
+        let stack_expr = |cs: &[G1Affine]| -> ComExpr {
+            ComExpr::sum(layers.iter().map(|&l| cs[l].to_projective()))
         };
         let mut checks: Vec<(CommitKey, OpeningCheck)> = Vec::new();
         checks.push((
@@ -1550,26 +1618,26 @@ pub fn verify_step(pk: &ProverKey, proof: &StepProof) -> Result<()> {
             OpeningCheck {
                 evec: eq_table(&rho),
                 claims: vec![
-                    (stack_com(&proof.com_sign), v_sign),
-                    (stack_com(&proof.com_zdp), v_zdp),
-                    (stack_com(&proof.com_gap), v_gap),
-                    (stack_com(&proof.com_rz), v_rz),
-                    (stack_com(&proof.com_rga), v_rga),
+                    (stack_expr(&proof.com_sign), v_sign),
+                    (stack_expr(&proof.com_zdp), v_zdp),
+                    (stack_expr(&proof.com_gap), v_gap),
+                    (stack_expr(&proof.com_rz), v_rz),
+                    (stack_expr(&proof.com_rga), v_rga),
                 ],
             },
         ));
         {
             let pz: Vec<Fr> = [p1.ch.u_zr.clone(), p1.ch.u_zc.clone()].concat();
-            let claims_z: Vec<(G1, Fr)> = layers
+            let claims_z: Vec<(ComExpr, Fr)> = layers
                 .iter()
                 .zip(gp.v_z.iter())
                 .map(|(&l, &v)| {
                     (
-                        derived_com_z(
+                        derived_expr_z(
                             cfg,
-                            &proof.com_zdp[l].to_projective(),
-                            &proof.com_sign[l].to_projective(),
-                            &proof.com_rz[l].to_projective(),
+                            proof.com_zdp[l].to_projective(),
+                            proof.com_sign[l].to_projective(),
+                            proof.com_rz[l].to_projective(),
                         ),
                         v,
                     )
@@ -1587,15 +1655,15 @@ pub fn verify_step(pk: &ProverKey, proof: &StepProof) -> Result<()> {
             let inner: Vec<usize> = layers.iter().copied().filter(|&l| l + 1 < depth).collect();
             if !inner.is_empty() {
                 let pga: Vec<Fr> = [p1.ch.u_gar.clone(), p1.ch.u_gac.clone()].concat();
-                let claims_ga: Vec<(G1, Fr)> = inner
+                let claims_ga: Vec<(ComExpr, Fr)> = inner
                     .iter()
                     .zip(gp.v_ga.iter())
                     .map(|(&l, &v)| {
                         (
-                            derived_com_ga(
+                            derived_expr_ga(
                                 cfg,
-                                &proof.com_gap[l].to_projective(),
-                                &proof.com_rga[l].to_projective(),
+                                proof.com_gap[l].to_projective(),
+                                proof.com_rga[l].to_projective(),
                             ),
                             v,
                         )
@@ -1612,10 +1680,10 @@ pub fn verify_step(pk: &ProverKey, proof: &StepProof) -> Result<()> {
         }
         {
             let pgw: Vec<Fr> = [p1.ch.u_gwr.clone(), p1.ch.u_gwc.clone()].concat();
-            let claims_gw: Vec<(G1, Fr)> = layers
+            let claims_gw: Vec<(ComExpr, Fr)> = layers
                 .iter()
                 .zip(gp.v_gw.iter())
-                .map(|(&l, &v)| (proof.com_gw[l].to_projective(), v))
+                .map(|(&l, &v)| (ComExpr::point(proof.com_gw[l].to_projective()), v))
                 .collect();
             checks.push((
                 pk.g_mat.clone(),
@@ -1627,10 +1695,15 @@ pub fn verify_step(pk: &ProverKey, proof: &StepProof) -> Result<()> {
         }
         {
             let p: Vec<Fr> = [p1.r30.clone(), p1.ch.u_zc.clone()].concat();
-            let claims_w: Vec<(G1, Fr)> = layers
+            let claims_w: Vec<(ComExpr, Fr)> = layers
                 .iter()
                 .enumerate()
-                .map(|(i, &l)| (proof.com_w[l].to_projective(), gp.mm30_evals[i].1))
+                .map(|(i, &l)| {
+                    (
+                        ComExpr::point(proof.com_w[l].to_projective()),
+                        gp.mm30_evals[i].1,
+                    )
+                })
                 .collect();
             checks.push((
                 pk.g_mat.clone(),
@@ -1644,10 +1717,15 @@ pub fn verify_step(pk: &ProverKey, proof: &StepProof) -> Result<()> {
             let inner: Vec<usize> = layers.iter().copied().filter(|&l| l + 1 < depth).collect();
             if !inner.is_empty() {
                 let p: Vec<Fr> = [p1.ch.u_gac.clone(), p1.r33.clone()].concat();
-                let claims_w: Vec<(G1, Fr)> = inner
+                let claims_w: Vec<(ComExpr, Fr)> = inner
                     .iter()
                     .enumerate()
-                    .map(|(i, &l)| (proof.com_w[l + 1].to_projective(), gp.mm33_evals[i].1))
+                    .map(|(i, &l)| {
+                        (
+                            ComExpr::point(proof.com_w[l + 1].to_projective()),
+                            gp.mm33_evals[i].1,
+                        )
+                    })
                     .collect();
                 checks.push((
                     pk.g_mat.clone(),
@@ -1665,7 +1743,10 @@ pub fn verify_step(pk: &ProverKey, proof: &StepProof) -> Result<()> {
                 pk.g_x.clone(),
                 OpeningCheck {
                     evec: eq_table(&p30),
-                    claims: vec![(proof.com_x.to_projective(), gp.mm30_evals[i0].0)],
+                    claims: vec![(
+                        ComExpr::point(proof.com_x.to_projective()),
+                        gp.mm30_evals[i0].0,
+                    )],
                 },
             ));
             let p34: Vec<Fr> = [p1.r34.clone(), p1.ch.u_gwc.clone()].concat();
@@ -1673,18 +1754,21 @@ pub fn verify_step(pk: &ProverKey, proof: &StepProof) -> Result<()> {
                 pk.g_x.clone(),
                 OpeningCheck {
                     evec: eq_table(&p34),
-                    claims: vec![(proof.com_x.to_projective(), gp.mm34_evals[i0].1)],
+                    claims: vec![(
+                        ComExpr::point(proof.com_x.to_projective()),
+                        gp.mm34_evals[i0].1,
+                    )],
                 },
             ));
         }
         {
             let last = depth - 1;
             let last_ck = pk.block(last);
-            let gz_com = derived_com_gz_last(
+            let gz_expr = derived_expr_gz_last(
                 cfg,
-                &proof.com_zdp[last].to_projective(),
-                &proof.com_sign[last].to_projective(),
-                &proof.com_y.to_projective(),
+                proof.com_zdp[last].to_projective(),
+                proof.com_sign[last].to_projective(),
+                proof.com_y.to_projective(),
             );
             if let Some(i) = layers.iter().position(|&l| l == last) {
                 let p: Vec<Fr> = [p1.r34.clone(), p1.ch.u_gwr.clone()].concat();
@@ -1692,7 +1776,7 @@ pub fn verify_step(pk: &ProverKey, proof: &StepProof) -> Result<()> {
                     last_ck.clone(),
                     OpeningCheck {
                         evec: eq_table(&p),
-                        claims: vec![(gz_com, gp.mm34_evals[i].0)],
+                        claims: vec![(gz_expr.clone(), gp.mm34_evals[i].0)],
                     },
                 ));
             }
@@ -1703,7 +1787,7 @@ pub fn verify_step(pk: &ProverKey, proof: &StepProof) -> Result<()> {
                     last_ck,
                     OpeningCheck {
                         evec: eq_table(&p),
-                        claims: vec![(gz_com, gp.mm33_evals[j].0)],
+                        claims: vec![(gz_expr, gp.mm33_evals[j].0)],
                     },
                 ));
             }
@@ -1716,7 +1800,7 @@ pub fn verify_step(pk: &ProverKey, proof: &StepProof) -> Result<()> {
             checks.len()
         );
         for ((ck, check), opening) in checks.iter().zip(gp.openings.iter()) {
-            ipa::batch_verify_eval(ck, &check.claims, &check.evec, opening, &mut t)
+            ipa::batch_verify_eval_expr(ck, &check.claims, &check.evec, opening, &mut t, acc)
                 .context("batched opening")?;
         }
 
@@ -1727,8 +1811,8 @@ pub fn verify_step(pk: &ProverKey, proof: &StepProof) -> Result<()> {
         vpoint.extend_from_slice(&rho);
         let e_row = eq_table(&vpoint);
         let v = (Fr::ONE - u_dd) * v_zdp + u_dd * v_gap;
-        let com_sign_stacked = stack_com(&proof.com_sign);
-        zkrelu::verify_validity(
+        let com_sign_stacked = stack_expr(&proof.com_sign);
+        zkrelu::verify_validity_accum(
             vb_main,
             &gp.p1_main,
             Some(&com_sign_stacked),
@@ -1738,6 +1822,7 @@ pub fn verify_step(pk: &ProverKey, proof: &StepProof) -> Result<()> {
             v_sign,
             &gp.validity_main,
             &mut t,
+            acc,
         )
         .context("main validity")?;
         let u_dd_r = t.challenge_fr(b"zkdl/u_dd_rem");
@@ -1745,7 +1830,7 @@ pub fn verify_step(pk: &ProverKey, proof: &StepProof) -> Result<()> {
         vpoint_r.extend_from_slice(&rho);
         let e_row_r = eq_table(&vpoint_r);
         let v_rem = (Fr::ONE - u_dd_r) * v_rz + u_dd_r * v_rga;
-        zkrelu::verify_validity(
+        zkrelu::verify_validity_accum(
             vb_rem,
             &gp.p1_rem,
             None,
@@ -1755,6 +1840,7 @@ pub fn verify_step(pk: &ProverKey, proof: &StepProof) -> Result<()> {
             Fr::ZERO,
             &gp.validity_rem,
             &mut t,
+            acc,
         )
         .context("remainder validity")?;
     }
@@ -1827,6 +1913,43 @@ mod tests {
             "sequential {} should exceed parallel {}",
             seq.size_bytes(),
             par.size_bytes()
+        );
+    }
+
+    #[test]
+    fn verify_step_accum_defers_to_exactly_one_msm() {
+        let (pk, wit) = setup(2, 8, 4);
+        let mut rng = Rng::seed_from_u64(10);
+        let proof = prove_step(&pk, &wit, ProofMode::Parallel, &mut rng);
+        let mut seed = Rng::seed_from_u64(11);
+        let mut acc = MsmAccumulator::from_rng(&mut seed);
+        verify_step_accum(&pk, &proof, &mut acc).expect("deferred verification");
+        assert_eq!(acc.flushes(), 0, "no MSM during deferred verification");
+        assert!(acc.pending_terms() > 0);
+        assert!(acc.flush(), "single aggregate MSM decides the proof");
+        assert_eq!(acc.flushes(), 1);
+    }
+
+    #[test]
+    fn steps_batch_accepts_good_rejects_single_tamper() {
+        let (pk, wit) = setup(2, 8, 4);
+        let mut rng = Rng::seed_from_u64(12);
+        let p1 = prove_step(&pk, &wit, ProofMode::Parallel, &mut rng);
+        let p2 = prove_step(&pk, &wit, ProofMode::Parallel, &mut rng);
+        let p3 = prove_step(&pk, &wit, ProofMode::Parallel, &mut rng);
+        let mut vrng = Rng::seed_from_u64(13);
+        verify_steps_batch(&pk, &[p1.clone(), p2.clone(), p3.clone()], &mut vrng)
+            .expect("good batch verifies with one MSM");
+        // tamper exactly one proof, in the one place only the deferred MSM
+        // check (not a transcript-level scalar check) can catch
+        let mut bad = p2.clone();
+        bad.groups[0].openings[0].a += Fr::ONE;
+        verify_step(&pk, &p1).expect("untouched proof verifies alone");
+        assert!(verify_step(&pk, &bad).is_err(), "tampered proof fails alone");
+        let mut vrng2 = Rng::seed_from_u64(14);
+        assert!(
+            verify_steps_batch(&pk, &[p1, bad, p3], &mut vrng2).is_err(),
+            "batch with exactly one tampered member must fail"
         );
     }
 

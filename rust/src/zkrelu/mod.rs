@@ -18,7 +18,8 @@
 //! commitment of the padded B̄_{Q−1} and the sign column needs no separate
 //! decomposition proof.
 
-use crate::commit::CommitKey;
+use crate::commit::{ComExpr, CommitKey};
+use crate::curve::accum::MsmAccumulator;
 use crate::curve::{msm::msm, G1Affine, G1};
 use crate::field::Fr;
 use crate::ipa::{self, IpaBasis, IpaProof};
@@ -34,8 +35,6 @@ pub struct ValidityBases {
     pub big_g: Vec<G1Affine>,
     /// H ∈ 𝔾^{2N·W}, independent.
     pub big_h: Vec<G1Affine>,
-    /// Σᵢ Gᵢ, precomputed for the verifier's G^{−z·1} term.
-    pub big_g_sum: G1,
     /// Blinding base (shared with the aux commitment key).
     pub blind_h: G1Affine,
     pub n: usize,
@@ -65,13 +64,9 @@ impl ValidityBases {
         let mut hlabel = label.to_vec();
         hlabel.extend_from_slice(b"/H");
         let big_h = crate::curve::derive_generators(&hlabel, 2 * n * width);
-        let big_g_sum = big_g
-            .iter()
-            .fold(G1::IDENTITY, |acc, p| acc.add_affine(p));
         let vb = Self {
             big_g,
             big_h,
-            big_g_sum,
             blind_h: g_aux.h,
             n,
             width,
@@ -93,13 +88,9 @@ impl ValidityBases {
         let mut hlabel = label.to_vec();
         hlabel.extend_from_slice(b"/H");
         let big_h = crate::curve::derive_generators(&hlabel, 2 * n * width);
-        let big_g_sum = big_g
-            .iter()
-            .fold(G1::IDENTITY, |acc, p| acc.add_affine(p));
         let vb = Self {
             big_g,
             big_h,
-            big_g_sum,
             blind_h,
             n,
             width,
@@ -423,24 +414,16 @@ pub fn prove_validity(
         blind_h: bases.blind_h,
         label: bases.label.clone(),
     };
-    // P = blind^ρ · G^a · H′^b = blind^ρ · G^a · H^{b⊙e^{∘−1}}
-    let b_scaled: Vec<Fr> = b.iter().zip(e_inv.iter()).map(|(x, s)| *x * *s).collect();
-    let com = basis.commit(&a, &b_scaled, blind);
-    let ipa = ipa::prove_ip(
-        &basis,
-        &com,
-        &a,
-        &b,
-        blind,
-        t,
-        Some(&e_inv),
-        transcript,
-        rng,
-    );
+    // P = blind^ρ · G^a · H′^b is a public combination of the already-
+    // absorbed Protocol-1 commitments and challenge-derived exponents, so
+    // neither side materializes or re-absorbs it (§verification engine) —
+    // the nocom IPA core drops the P-sized MSM the prover used to pay just
+    // to absorb the point.
+    let ipa = ipa::prove_ip_core(&basis, &a, &b, blind, t, Some(&e_inv), transcript, rng);
     ValidityProof { ipa }
 }
 
-/// Verify one validity instance.
+/// Verify one validity instance. Thin wrapper: one accumulator, one MSM.
 ///
 /// `com_sign`: the aux commitment of B_{Q−1} (main instance), which by the
 /// shared-basis construction is a commitment of B̄_{Q−1} under G.
@@ -456,41 +439,83 @@ pub fn verify_validity(
     proof: &ValidityProof,
     transcript: &mut Transcript,
 ) -> Result<()> {
+    let expr = com_sign.map(|c| ComExpr::point(*c));
+    let mut acc = MsmAccumulator::new();
+    verify_validity_accum(
+        bases,
+        p1,
+        expr.as_ref(),
+        e_row,
+        u_dd,
+        v,
+        v_sign,
+        proof,
+        transcript,
+        &mut acc,
+    )?;
+    ensure!(acc.flush(), "validity: final check failed");
+    Ok(())
+}
+
+/// [`verify_validity`] with every group operation deferred into `acc`.
+///
+/// The Algorithm-1 statement point P = com_B^ip · (com_sign^ip)^k ·
+/// G^{−z·1} · H^{w_pub} stays symbolic: its point factors become `com_terms`
+/// of the IPA core and its basis exponents ride along as `g_pub`/`h_pub`,
+/// merging with the final-check scalars — the w_pub MSM the eager verifier
+/// paid disappears entirely. Sound because every factor of P is already
+/// transcript-bound (Protocol-1 / aux commitments) or challenge-derived.
+#[allow(clippy::too_many_arguments)]
+pub fn verify_validity_accum(
+    bases: &ValidityBases,
+    p1: &Protocol1Msg,
+    com_sign: Option<&ComExpr>,
+    e_row: &[Fr],
+    u_dd: Fr,
+    v: Fr,
+    v_sign: Fr,
+    proof: &ValidityProof,
+    transcript: &mut Transcript,
+    acc: &mut MsmAccumulator,
+) -> Result<()> {
     let n = bases.n;
     let width = bases.width;
     let main = p1.com_sign_prime.is_some();
     ensure!(main == com_sign.is_some(), "validity: instance mismatch");
+    ensure!(e_row.len() == 2 * n, "validity: e_row length mismatch");
     let ch = draw_challenges(width, transcript, main);
     let t = targets(&ch, width, u_dd, v, v_sign, main);
 
-    // P = com_B^ip · (com_sign^ip)^k · G^{−z·1} · H^{w_pub}
-    let mut p = p1.com_b_ip.to_projective();
+    let mut com_terms: Vec<(Fr, G1)> = vec![(Fr::ONE, p1.com_b_ip.to_projective())];
     if main {
-        let com_sign_ip = *com_sign.unwrap() + p1.com_sign_prime.unwrap().to_projective();
-        p = p + com_sign_ip.mul(&ch.k);
+        for (c, p) in &com_sign.unwrap().terms {
+            com_terms.push((ch.k * *c, *p));
+        }
+        com_terms.push((ch.k, p1.com_sign_prime.unwrap().to_projective()));
     }
-    p = p + bases.big_g_sum.mul(&(-ch.z));
-    p = p + msm(&bases.big_h, &w_pub(&ch, width, n));
+    let total = 2 * n * width;
+    let g_pub = vec![-ch.z; total];
+    let h_pub = w_pub(&ch, width, n);
 
     // verify against virtual basis H′ = H^{e^{∘−1}}
-    let mut e_inv: Vec<Fr> = (0..2 * n * width)
+    let mut e_inv: Vec<Fr> = (0..total)
         .map(|idx| e_row[idx / width] * ch.e_bit[idx % width])
         .collect();
     Fr::batch_invert(&mut e_inv);
-    let basis = IpaBasis {
-        g: bases.big_g.clone(),
-        h: bases.big_h.clone(),
-        blind_h: bases.blind_h,
-        label: bases.label.clone(),
-    };
-    ipa::verify_ip(
-        &basis,
-        &p,
-        2 * n * width,
+    ipa::verify_ip_core(
+        &bases.big_g,
+        &bases.big_h,
+        bases.blind_h,
+        &bases.label,
+        &com_terms,
+        Some(&g_pub),
+        Some(&h_pub),
+        total,
         t,
         &proof.ipa,
         Some(&e_inv),
         transcript,
+        acc,
     )
 }
 

@@ -1,0 +1,163 @@
+//! One-MSM verification engine: cross-module tests.
+//!
+//! * property test: `MsmAccumulator` agrees with the naive eager per-
+//!   equation computation on random instances;
+//! * batch soundness: a batch with exactly one tampered proof is rejected
+//!   (no cross-proof cancellation) while the same proofs verify
+//!   individually;
+//! * the wire → batch-verify flow the `verify-trace --in a --in b` CLI
+//!   verb uses.
+
+use zkdl::aggregate::{
+    prove_trace, verify_trace, verify_trace_accum, verify_traces_batch, TraceKey, TraceProof,
+};
+use zkdl::curve::accum::MsmAccumulator;
+use zkdl::curve::G1;
+use zkdl::data::Dataset;
+use zkdl::model::{ModelConfig, Weights};
+use zkdl::util::rng::Rng;
+use zkdl::witness::native::compute_witness;
+use zkdl::witness::StepWitness;
+use zkdl::Fr;
+
+fn witness_chain(cfg: ModelConfig, steps: usize, seed: u64) -> Vec<StepWitness> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let ds = Dataset::synthetic(64, cfg.width / 2, 4, cfg.r_bits, seed ^ 0x77);
+    let mut weights = Weights::init(cfg, &mut rng);
+    let mut out = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let (x, y) = ds.batch(&cfg, step);
+        let wit = compute_witness(cfg, &x, &y, &weights);
+        wit.validate().expect("witness valid");
+        weights.apply_update(&wit.weight_grads());
+        out.push(wit);
+    }
+    out
+}
+
+/// The accumulator's verdict must equal the conjunction of naive eager
+/// per-equation checks, over random instances with and without violations.
+#[test]
+fn accumulator_agrees_with_naive_eager_computation() {
+    for seed in 0..8u64 {
+        let mut r = Rng::seed_from_u64(0x9a9a ^ seed);
+        let n_eq = 1 + (seed as usize % 4);
+        // equations as explicit (scalar, point) term lists
+        let mut equations: Vec<Vec<(Fr, G1)>> = Vec::new();
+        let mut all_hold = true;
+        for eq in 0..n_eq {
+            let mut terms: Vec<(Fr, G1)> = (0..3)
+                .map(|_| (Fr::random(&mut r), G1::random(&mut r)))
+                .collect();
+            // close the equation: append the negated sum so it holds…
+            let sum: G1 = terms
+                .iter()
+                .map(|(s, p)| p.mul(s))
+                .fold(G1::IDENTITY, |a, b| a + b);
+            terms.push((-Fr::ONE, sum));
+            // …except when this seed/equation is chosen to be violated
+            if seed % 3 == 0 && eq == 0 {
+                terms.push((Fr::ONE, G1::random(&mut r)));
+                all_hold = false;
+            }
+            equations.push(terms);
+        }
+
+        // naive eager evaluation
+        let naive_ok = equations.iter().all(|terms| {
+            terms
+                .iter()
+                .map(|(s, p)| p.mul(s))
+                .fold(G1::IDENTITY, |a, b| a + b)
+                .is_identity()
+        });
+        assert_eq!(naive_ok, all_hold);
+
+        // deferred: all equations, one MSM
+        let mut sr = Rng::seed_from_u64(seed);
+        let mut acc = MsmAccumulator::from_rng(&mut sr);
+        for terms in &equations {
+            acc.begin_equation();
+            for (s, p) in terms {
+                acc.push_proj(*s, p);
+            }
+        }
+        assert_eq!(acc.flush(), naive_ok, "seed {seed}");
+        assert_eq!(acc.flushes(), 1);
+
+        // eager-mode accumulator (one MSM per equation) agrees too
+        let mut sr2 = Rng::seed_from_u64(seed ^ 1);
+        let mut eager = MsmAccumulator::eager_from_rng(&mut sr2);
+        for terms in &equations {
+            eager.begin_equation();
+            for (s, p) in terms {
+                eager.push_proj(*s, p);
+            }
+        }
+        assert_eq!(eager.flush(), naive_ok, "eager seed {seed}");
+        assert_eq!(eager.flushes(), n_eq);
+    }
+}
+
+/// The CLI flow: persist trace proofs to wire bytes, decode, batch-verify
+/// with one MSM; a single tampered member breaks the batch while the
+/// others still verify individually.
+#[test]
+fn wire_roundtrip_batch_verification_and_tamper_soundness() {
+    let cfg = ModelConfig::new(2, 8, 4);
+    let tk = TraceKey::setup(cfg, 2);
+    let mut rng = Rng::seed_from_u64(0xeb);
+    let a = prove_trace(&tk, &witness_chain(cfg, 2, 1), &mut rng);
+    let b = prove_trace(&tk, &witness_chain(cfg, 2, 2), &mut rng);
+
+    // wire roundtrip, as the CLI's multi `--in` path does
+    let decode = |p: &TraceProof| -> (ModelConfig, TraceProof) {
+        let bytes = zkdl::wire::encode_trace_proof(&cfg, p);
+        zkdl::wire::decode_trace_proof(&bytes).expect("decodes")
+    };
+    let (cfg_a, da) = decode(&a);
+    let (_, db) = decode(&b);
+    assert_eq!(cfg_a, cfg);
+
+    let mut vrng = Rng::seed_from_u64(3);
+    verify_traces_batch(&[(&tk, &da), (&tk, &db)], &mut vrng).expect("good batch verifies");
+
+    // exactly one tampered member — only the aggregate MSM can catch a
+    // folded-scalar tamper, and random ρ-scaling must keep it visible
+    let mut bad = db.clone();
+    bad.openings[1].blind += Fr::ONE;
+    verify_trace(&tk, &da).expect("member A verifies individually");
+    assert!(verify_trace(&tk, &bad).is_err(), "tampered member fails alone");
+    for seed in [4u64, 5, 6] {
+        let mut vrng = Rng::seed_from_u64(seed);
+        assert!(
+            verify_traces_batch(&[(&tk, &da), (&tk, &bad)], &mut vrng).is_err(),
+            "tampered batch must fail (seed {seed})"
+        );
+    }
+}
+
+/// One accumulator across heterogeneous proofs (different trace keys):
+/// still exactly one MSM, still accepted.
+#[test]
+fn heterogeneous_trace_batch_shares_one_msm() {
+    let cfg = ModelConfig::new(2, 8, 4);
+    let tk1 = TraceKey::setup(cfg, 1);
+    let tk2 = TraceKey::setup(cfg, 2);
+    let mut rng = Rng::seed_from_u64(0x77);
+    let p1 = prove_trace(&tk1, &witness_chain(cfg, 1, 7), &mut rng);
+    let p2 = prove_trace(&tk2, &witness_chain(cfg, 2, 8), &mut rng);
+
+    let mut seed = Rng::seed_from_u64(9);
+    let mut acc = MsmAccumulator::from_rng(&mut seed);
+    acc.set_scale(Fr::from_u64(3));
+    verify_trace_accum(&tk1, &p1, &mut acc).expect("defer 1");
+    acc.set_scale(Fr::from_u64(5));
+    verify_trace_accum(&tk2, &p2, &mut acc).expect("defer 2");
+    assert_eq!(acc.flushes(), 0, "nothing flushed until the end");
+    assert!(acc.flush(), "heterogeneous batch verifies");
+    assert_eq!(acc.flushes(), 1, "one MSM total");
+
+    let mut vrng = Rng::seed_from_u64(10);
+    verify_traces_batch(&[(&tk1, &p1), (&tk2, &p2)], &mut vrng).expect("public API agrees");
+}

@@ -102,8 +102,9 @@ fn randomized_protocol1_and_validity_roundtrips() {
 
 #[test]
 fn golden_header_bytes() {
-    // Pins the envelope layout of VERSION 1. If this test fails, the wire
-    // format changed: bump `wire::VERSION` and update the constants here.
+    // Pins the envelope layout of VERSION 2 (v2 = deferred-verification
+    // transcript schedule). If this test fails, the wire format changed:
+    // bump `wire::VERSION` and update the constants here.
     let cfg = ModelConfig::new(2, 8, 4);
     let wits = trace_witnesses(cfg, 1, 0x601d);
     let tk = TraceKey::setup(cfg, 1);
@@ -112,7 +113,7 @@ fn golden_header_bytes() {
     let bytes = encode_trace_proof(&cfg, &proof);
     let expected_header: [u8; 32] = [
         b'Z', b'K', b'D', b'L', // magic
-        0x01, 0x00, // version 1
+        0x02, 0x00, // version 2
         0x02, 0x00, // kind: trace
         0x02, 0x00, 0x00, 0x00, // depth 2
         0x08, 0x00, 0x00, 0x00, // width 8
@@ -123,7 +124,7 @@ fn golden_header_bytes() {
     ];
     assert_eq!(&bytes[..32], expected_header.as_slice());
     assert_eq!(MAGIC.as_slice(), b"ZKDL".as_slice());
-    assert_eq!(VERSION, 1);
+    assert_eq!(VERSION, 2);
     // step-count field follows the header
     assert_eq!(&bytes[32..36], 1u32.to_le_bytes().as_slice());
 }
