@@ -1,0 +1,97 @@
+//! zkSGD chained training end-to-end: train 4 SGD steps through the
+//! pipelined coordinator, aggregate them into one *chained* `TraceProof` —
+//! every boundary's weights proven to be the exact quantized update
+//! W_{t+1} = W_t − ⌊G_W/2^{R+lr}⌉ of the previous step — persist it in the
+//! wire format, then re-read and verify it from bytes alone.
+//!
+//!     cargo run --release --example chained_training
+
+use std::path::Path;
+use zkdl::aggregate::{prove_trace, verify_trace, TraceKey};
+use zkdl::coordinator::{train_and_prove_trace, TraceTrainOptions};
+use zkdl::data::Dataset;
+use zkdl::model::ModelConfig;
+use zkdl::wire::{decode_trace_proof, encode_trace_proof};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ModelConfig::new(2, 16, 8);
+    let steps = 4;
+    println!(
+        "chained trace of {steps} proven SGD steps: L={} d={} B={} (lr = 2^-{})",
+        cfg.depth, cfg.width, cfg.batch, cfg.lr_shift
+    );
+
+    // 1. pipelined training run; the aggregator proves the window with the
+    //    zkSGD chain argument appended
+    let ds = Dataset::synthetic(256, 8, 10, cfg.r_bits, 5);
+    let opts = TraceTrainOptions {
+        steps,
+        window: 0, // one chained trace over the whole run
+        seed: 42,
+        skip_verify: true, // verified from disk below instead
+        chained: true,
+        ..Default::default()
+    };
+    let report = train_and_prove_trace(cfg, &ds, Path::new("artifacts"), &opts)?;
+    println!("{}", report.summary());
+    println!(
+        "loss {:.4} → {:.4} over the chained trace",
+        report.losses.first().unwrap(),
+        report.losses.last().unwrap()
+    );
+
+    // 2. persist the chained proof and compare against the unchained cost
+    let proof = &report.proofs[0];
+    let chain = proof
+        .chain
+        .as_ref()
+        .expect("coordinator produced a chained window");
+    let bytes = encode_trace_proof(&cfg, proof);
+    println!(
+        "chained trace proof: {:.1} kB total, {:.1} kB of it the chain ({} boundaries, {} wire bytes)",
+        proof.size_bytes() as f64 / 1024.0,
+        chain.size_bytes() as f64 / 1024.0,
+        chain.com_ru.len(),
+        bytes.len(),
+    );
+
+    // 3. the verifier's side: reconstruct everything from the bytes; the
+    //    chain rides the trace's single deferred MSM
+    let (cfg2, decoded) = decode_trace_proof(&bytes)?;
+    let tk = TraceKey::setup(cfg2, decoded.steps);
+    let t = std::time::Instant::now();
+    verify_trace(&tk, &decoded)?;
+    println!(
+        "re-read from wire and verified in {:.2} s (one MSM, chain included) — accept",
+        t.elapsed().as_secs_f64()
+    );
+
+    // 4. the property the chain buys: an unchained proof over *tampered*
+    //    step-2 weights still verifies (each step is self-consistent), but
+    //    the chained prover refuses the same tamper outright
+    let mut rng = zkdl::util::rng::Rng::seed_from_u64(7);
+    let mut wits = zkdl::witness::native::sgd_witness_chain(cfg, &ds, steps, 7);
+    wits[2].layers[0].w[0] += 1i64 << cfg.r_bits; // a whole unit of drift
+    // the drifted weights break relation (30) inside step 2, so rebuild a
+    // self-consistent witness from them — this is the "trainer substituted
+    // different weights mid-run" attack
+    {
+        use zkdl::model::Weights;
+        use zkdl::witness::native::compute_witness;
+        let drifted = Weights {
+            layers: wits[2].layers.iter().map(|l| l.w.clone()).collect(),
+            cfg,
+        };
+        let (x, y) = ds.batch(&cfg, 2);
+        wits[2] = compute_witness(cfg, &x, &y, &drifted);
+    }
+    let tk4 = TraceKey::setup(cfg, steps);
+    let unchained = prove_trace(&tk4, &wits, &mut rng);
+    verify_trace(&tk4, &unchained)?;
+    println!("unchained proof of the drifted run: ACCEPTED (steps are only individually checked)");
+    match zkdl::aggregate::prove_trace_chained(&tk4, &wits, &mut rng) {
+        Err(e) => println!("chained prover on the drifted run: REFUSED ({e:#})"),
+        Ok(_) => anyhow::bail!("drifted run must not be chainable"),
+    }
+    Ok(())
+}

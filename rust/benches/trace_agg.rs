@@ -1,30 +1,23 @@
 //! FAC4DNN aggregation benchmark: aggregated T-step proving / verification /
-//! proof size versus T independent `StepProof`s, for T ∈ {1, 4, 16}.
+//! proof size versus T independent `StepProof`s, for T ∈ {1, 4, 16}; at
+//! T ∈ {4, 16} a third row measures the zkSGD-chained trace (inter-step
+//! weight recurrence proven) against the unchained aggregate.
 //!
 //!     cargo bench --bench trace_agg
 //!     cargo bench --bench trace_agg -- --depth 2 --width 16 --batch 8
 
-use zkdl::aggregate::{prove_trace, verify_trace, TraceKey};
+use zkdl::aggregate::{prove_trace, prove_trace_chained, verify_trace, TraceKey};
 use zkdl::data::Dataset;
-use zkdl::model::{ModelConfig, Weights};
+use zkdl::model::ModelConfig;
 use zkdl::util::bench::{fmt_dur, time_once, BenchArgs, Table};
 use zkdl::util::rng::Rng;
-use zkdl::witness::native::compute_witness;
+use zkdl::witness::native::sgd_witness_chain;
 use zkdl::witness::StepWitness;
 use zkdl::zkdl::{prove_step, verify_step, ProofMode, ProverKey};
 
 fn witness_chain(cfg: ModelConfig, steps: usize, seed: u64) -> Vec<StepWitness> {
-    let mut rng = Rng::seed_from_u64(seed);
     let ds = Dataset::synthetic(256, cfg.width / 2, 4, cfg.r_bits, seed ^ 0x77);
-    let mut weights = Weights::init(cfg, &mut rng);
-    let mut out = Vec::with_capacity(steps);
-    for step in 0..steps {
-        let (x, y) = ds.batch(&cfg, step);
-        let wit = compute_witness(cfg, &x, &y, &weights);
-        weights.apply_update(&wit.weight_grads());
-        out.push(wit);
-    }
-    out
+    sgd_witness_chain(cfg, &ds, steps, seed)
 }
 
 fn main() {
@@ -91,6 +84,26 @@ fn main() {
             format!("{:.1}", trace_bytes as f64 / 1024.0),
             format!("{:.2}×", trace_bytes as f64 / step_bytes as f64),
         ]);
+
+        // zkSGD-chained trace (T ≥ 2): the weight-update recurrence proven
+        // on top of the per-step relations
+        if t >= 2 {
+            let (chained_proof, prove_d) = time_once(|| {
+                prove_trace_chained(&tk, &wits, &mut rng).expect("witnesses chain")
+            });
+            let (_, verify_d) = time_once(|| {
+                verify_trace(&tk, &chained_proof).expect("chained trace verifies");
+            });
+            let chained_bytes = chained_proof.size_bytes();
+            table.row(vec![
+                format!("{t}"),
+                "chained".into(),
+                fmt_dur(prove_d),
+                fmt_dur(verify_d),
+                format!("{:.1}", chained_bytes as f64 / 1024.0),
+                format!("{:.2}×", chained_bytes as f64 / step_bytes as f64),
+            ]);
+        }
     }
     table.print();
 }

@@ -19,10 +19,12 @@
 //! O(log(T·L·D)) *argument* — versus O(T) full arguments for T independent
 //! [`crate::zkdl::StepProof`]s. `benches/trace_agg.rs` measures the gap.
 //!
-//! The trace does **not** constrain step t+1's weights to step t's update
-//! (the rounding in the learning-rate shift is non-linear, so it cannot be
-//! checked homomorphically); like the per-step protocol, each step is
-//! proven against its own committed weights. See DESIGN.md §aggregate.
+//! A plain trace does **not** constrain step t+1's weights to step t's
+//! update; [`prove_trace_chained`] closes that gap with the zkSGD chain
+//! argument ([`crate::update`]): the rounded learning-rate shift is
+//! witnessed by committed remainder tensors whose exact range rides a
+//! zkReLU validity instance, turning "T proven steps" into a proof of
+//! *training*. See DESIGN.md §aggregate and §update.
 
 use crate::commit::{ComExpr, CommitKey};
 use crate::curve::accum::MsmAccumulator;
@@ -34,6 +36,7 @@ use crate::model::ModelConfig;
 use crate::poly::{eq_eval, eq_table, Mle};
 use crate::sumcheck::{self, Instance, SumcheckProof, Term};
 use crate::transcript::Transcript;
+use crate::update::{self, ChainProof, UpdateKey};
 use crate::util::rng::Rng;
 use crate::witness::StepWitness;
 use crate::zkdl::{
@@ -166,6 +169,9 @@ pub struct TraceProof {
     pub openings: Vec<IpaProof>,
     pub validity_main: ValidityProof,
     pub validity_rem: ValidityProof,
+    /// zkSGD chain argument tying consecutive steps' weights together
+    /// ([`prove_trace_chained`]); `None` for a plain trace.
+    pub chain: Option<ChainProof>,
 }
 
 impl StepCommitmentSet {
@@ -207,6 +213,7 @@ impl TraceProof {
             + openings
             + self.validity_main.size_bytes()
             + self.validity_rem.size_bytes()
+            + self.chain.as_ref().map_or(0, |c| c.size_bytes())
     }
 }
 
@@ -299,8 +306,33 @@ struct OpeningCheck {
 // ---------------------------------------------------------------------------
 
 /// Prove T training steps as one aggregated trace. `wits.len()` must equal
-/// `tk.steps`; every witness must share `tk.cfg`.
+/// `tk.steps`; every witness must share `tk.cfg`. Steps are proven
+/// independently (no inter-step weight constraint) — see
+/// [`prove_trace_chained`] for the zkSGD-chained variant.
 pub fn prove_trace(tk: &TraceKey, wits: &[StepWitness], rng: &mut Rng) -> TraceProof {
+    prove_trace_inner(tk, wits, None, rng)
+}
+
+/// Prove T ≥ 2 consecutive training steps as one *chained* trace: on top of
+/// the per-step relations, the zkSGD chain argument ([`crate::update`])
+/// proves that every boundary's weights are the exact quantized update
+/// W_{t+1} = W_t − ⌊G_W/2^{R+lr}⌉ of the previous step. Fails if the
+/// witnesses do not actually chain.
+pub fn prove_trace_chained(
+    tk: &TraceKey,
+    wits: &[StepWitness],
+    rng: &mut Rng,
+) -> Result<TraceProof> {
+    let cw = update::ChainWitness::build(wits)?;
+    Ok(prove_trace_inner(tk, wits, Some(cw), rng))
+}
+
+fn prove_trace_inner(
+    tk: &TraceKey,
+    wits: &[StepWitness],
+    chain_wit: Option<update::ChainWitness>,
+    rng: &mut Rng,
+) -> TraceProof {
     let cfg = &tk.cfg;
     let t_steps = wits.len();
     assert_eq!(t_steps, tk.steps, "witness count mismatch");
@@ -324,11 +356,20 @@ pub fn prove_trace(tk: &TraceKey, wits: &[StepWitness], rng: &mut Rng) -> TraceP
         .map(|(t, pl)| commit_trace_step(tk, t, pl, rng))
         .collect();
 
+    // zkSGD chain: remainder tensors committed before any challenge, so the
+    // shared-randomness property covers the chain too
+    let chain_cc = chain_wit.map(|cw| {
+        let uk = UpdateKey::setup(*cfg, t_steps);
+        let cc = update::commit_chain(&uk, &cw, rng);
+        (uk, cc)
+    });
+
     let mut tr = Transcript::new(b"zkdl/trace");
     tr.absorb_u64(b"depth", depth as u64);
     tr.absorb_u64(b"width", cfg.width as u64);
     tr.absorb_u64(b"batch", cfg.batch as u64);
     tr.absorb_u64(b"steps", t_steps as u64);
+    tr.absorb_u64(b"chained", chain_cc.is_some() as u64);
 
     let affine = |cs: &[Committed]| -> Vec<G1Affine> {
         G1::batch_to_affine(&cs.iter().map(|c| c.com).collect::<Vec<_>>())
@@ -349,6 +390,9 @@ pub fn prove_trace(tk: &TraceKey, wits: &[StepWitness], rng: &mut Rng) -> TraceP
         .collect();
     for (t, set) in com_sets.iter().enumerate() {
         absorb_step_commitments(&mut tr, t, set);
+    }
+    if let Some((_, cc)) = &chain_cc {
+        update::absorb_chain_ru(&mut tr, &cc.com_ru);
     }
 
     // ---- Protocol 1 over the trace stack ----
@@ -385,6 +429,9 @@ pub fn prove_trace(tk: &TraceKey, wits: &[StepWitness], rng: &mut Rng) -> TraceP
         tr.absorb_point(b"p1/main/sign", p);
     }
     tr.absorb_point(b"p1/rem", &p1_rem.com_b_ip);
+    if let Some((_, cc)) = &chain_cc {
+        tr.absorb_point(b"p1/upd", &cc.p1.com_b_ip);
+    }
 
     // ---- Phase 1: one challenge bundle, three trace-wide matmul sumchecks ----
     let ch = draw_group_challenges(&mut tr, log_b, log_d);
@@ -855,6 +902,13 @@ pub fn prove_trace(tk: &TraceKey, wits: &[StepWitness], rng: &mut Rng) -> TraceP
         rng,
     );
 
+    // ---- Phase 5: zkSGD chain argument (chained traces only) ----
+    let chain = chain_cc.map(|(uk, cc)| {
+        let w_refs: Vec<&[Committed]> = scs.iter().map(|sc| sc.w.as_slice()).collect();
+        let gw_refs: Vec<&[Committed]> = scs.iter().map(|sc| sc.gw.as_slice()).collect();
+        update::prove_chain(&uk, &tk.g_mat, &w_refs, &gw_refs, &cc, &mut tr, rng)
+    });
+
     TraceProof {
         steps: t_steps,
         coms: com_sets,
@@ -878,6 +932,7 @@ pub fn prove_trace(tk: &TraceKey, wits: &[StepWitness], rng: &mut Rng) -> TraceP
         openings,
         validity_main,
         validity_rem,
+        chain,
     }
 }
 
@@ -942,13 +997,23 @@ pub fn verify_trace_accum(
         );
     }
 
+    let chained = proof.chain.is_some();
+    ensure!(
+        !chained || t_steps >= 2,
+        "chained trace needs at least two steps"
+    );
+
     let mut tr = Transcript::new(b"zkdl/trace");
     tr.absorb_u64(b"depth", depth as u64);
     tr.absorb_u64(b"width", cfg.width as u64);
     tr.absorb_u64(b"batch", cfg.batch as u64);
     tr.absorb_u64(b"steps", t_steps as u64);
+    tr.absorb_u64(b"chained", chained as u64);
     for (t, set) in proof.coms.iter().enumerate() {
         absorb_step_commitments(&mut tr, t, set);
+    }
+    if let Some(chain) = &proof.chain {
+        update::absorb_chain_ru(&mut tr, &chain.com_ru);
     }
 
     let (vb_main, vb_rem) = trace_validity_bases(tk);
@@ -959,6 +1024,9 @@ pub fn verify_trace_accum(
         bail!("main validity instance must carry com_sign_prime");
     }
     tr.absorb_point(b"p1/rem", &proof.p1_rem.com_b_ip);
+    if let Some(chain) = &proof.chain {
+        tr.absorb_point(b"p1/upd", &chain.p1_upd.com_b_ip);
+    }
 
     // ---- Phase 1 ----
     let ch = draw_group_challenges(&mut tr, log_b, log_d);
@@ -1397,6 +1465,13 @@ pub fn verify_trace_accum(
     )
     .context("remainder validity")?;
 
+    // ---- Phase 5: zkSGD chain argument (chained traces only) ----
+    if let Some(chain) = &proof.chain {
+        let uk = UpdateKey::setup(*cfg, t_steps);
+        update::verify_chain_accum(&uk, &tk.g_mat, &proof.coms, chain, &mut tr, acc)
+            .context("zkSGD chain")?;
+    }
+
     Ok(())
 }
 
@@ -1457,6 +1532,23 @@ mod tests {
         verify_trace_accum(&tk, &proof, &mut acc).expect("deferred verification");
         assert_eq!(acc.flushes(), 0, "no MSM before the flush");
         assert!(acc.flush(), "single aggregate MSM decides the trace");
+        assert_eq!(acc.flushes(), 1);
+    }
+
+    #[test]
+    fn chained_trace_verifies_with_exactly_one_msm_flush() {
+        let cfg = ModelConfig::new(2, 8, 4);
+        let wits = witness_chain(cfg, 3, 0xc0de);
+        let tk = TraceKey::setup(cfg, 3);
+        let mut rng = Rng::seed_from_u64(20);
+        let proof = prove_trace_chained(&tk, &wits, &mut rng).expect("witnesses chain");
+        assert!(proof.chain.is_some());
+        verify_trace(&tk, &proof).expect("chained trace verifies");
+        let mut seed = Rng::seed_from_u64(21);
+        let mut acc = MsmAccumulator::from_rng(&mut seed);
+        verify_trace_accum(&tk, &proof, &mut acc).expect("deferred verification");
+        assert_eq!(acc.flushes(), 0, "no MSM before the flush");
+        assert!(acc.flush(), "single aggregate MSM decides the chained trace");
         assert_eq!(acc.flushes(), 1);
     }
 

@@ -10,7 +10,7 @@
 //! into windows of T steps and emits one [`TraceProof`] per window, proving
 //! window k while the witnesses of window k+1 are being generated.
 
-use crate::aggregate::{prove_trace, verify_trace, TraceKey, TraceProof};
+use crate::aggregate::{prove_trace, prove_trace_chained, verify_trace, TraceKey, TraceProof};
 use crate::data::Dataset;
 use crate::model::{ModelConfig, Weights};
 use crate::runtime::WitnessSource;
@@ -233,6 +233,14 @@ pub struct TraceTrainOptions {
     pub window: usize,
     pub seed: u64,
     pub skip_verify: bool,
+    /// Prove each window with the zkSGD chain argument (inter-step weight
+    /// recurrence); a trailing 1-step window falls back to an unchained
+    /// proof, since it has no boundary to chain.
+    pub chained: bool,
+    /// Max in-flight *windows* of witnesses between the coordinator thread
+    /// and the aggregator worker (channel capacity = window × depth).
+    /// Affects scheduling only: artifacts are byte-identical at any depth.
+    pub pipeline_depth: usize,
 }
 
 impl Default for TraceTrainOptions {
@@ -242,6 +250,8 @@ impl Default for TraceTrainOptions {
             window: 0,
             seed: 0x5eed,
             skip_verify: false,
+            chained: false,
+            pipeline_depth: 2,
         }
     }
 }
@@ -294,7 +304,7 @@ pub fn train_and_prove_trace(
     artifact_dir: &Path,
     opts: &TraceTrainOptions,
 ) -> Result<TraceRunReport> {
-    ensure!(opts.steps > 0);
+    ensure!(opts.steps > 0 && opts.pipeline_depth > 0);
     let window = if opts.window == 0 { opts.steps } else { opts.window };
     let mut rng = Rng::seed_from_u64(opts.seed);
     let mut weights = Weights::init(cfg, &mut rng);
@@ -310,8 +320,10 @@ pub fn train_and_prove_trace(
     }
 
     let (windows, proofs) = std::thread::scope(|scope| -> Result<(Vec<TraceWindowMetrics>, Vec<TraceProof>)> {
-        let (tx, rx) = mpsc::sync_channel::<(usize, StepWitness)>(window.max(2));
+        let capacity = window.saturating_mul(opts.pipeline_depth).max(2);
+        let (tx, rx) = mpsc::sync_channel::<(usize, StepWitness)>(capacity);
         let skip_verify = opts.skip_verify;
+        let chained = opts.chained;
         let seed = opts.seed;
         let aggregator = scope.spawn(move || -> Result<Vec<WindowOut>> {
             let mut prng = Rng::seed_from_u64(seed ^ 0x7ace);
@@ -325,7 +337,11 @@ pub fn train_and_prove_trace(
                 let t = buf.len();
                 let tk = TraceKey::setup(cfg, t);
                 let t1 = Instant::now();
-                let proof = prove_trace(&tk, buf, prng);
+                let proof = if chained && t >= 2 {
+                    prove_trace_chained(&tk, buf, prng)?
+                } else {
+                    prove_trace(&tk, buf, prng)
+                };
                 let prove_ms = t1.elapsed().as_secs_f64() * 1e3;
                 let verify_ms = if skip_verify {
                     0.0
@@ -447,6 +463,7 @@ mod tests {
             window: 2, // windows of 2 and 1
             seed: 3,
             skip_verify: false,
+            ..Default::default()
         };
         let report =
             train_and_prove_trace(cfg, &ds, Path::new("artifacts"), &opts).expect("trace run");
@@ -457,5 +474,59 @@ mod tests {
         assert_eq!(report.proofs.len(), 2);
         assert_eq!(report.losses.len(), 3);
         assert!(report.total_proof_bytes() > 0);
+    }
+
+    #[test]
+    fn chained_trace_driver_verifies_and_marks_chain() {
+        let cfg = ModelConfig::new(2, 8, 4);
+        let ds = Dataset::synthetic(32, 4, 4, cfg.r_bits, 12);
+        let opts = TraceTrainOptions {
+            steps: 5,
+            window: 2, // windows of 2, 2, and a 1-step tail
+            seed: 4,
+            chained: true,
+            ..Default::default()
+        };
+        let report =
+            train_and_prove_trace(cfg, &ds, Path::new("artifacts"), &opts).expect("chained run");
+        assert_eq!(report.proofs.len(), 3);
+        // full windows carry the chain; the 1-step tail has no boundary
+        assert!(report.proofs[0].chain.is_some());
+        assert!(report.proofs[1].chain.is_some());
+        assert!(report.proofs[2].chain.is_none());
+    }
+
+    #[test]
+    fn pipeline_depth_yields_byte_identical_trace_artifacts() {
+        // pipeline_depth changes only the channel capacity (scheduling);
+        // the persisted artifacts must not depend on it
+        let cfg = ModelConfig::new(2, 8, 4);
+        let ds = Dataset::synthetic(32, 4, 4, cfg.r_bits, 13);
+        let run = |pipeline_depth: usize| -> Vec<Vec<u8>> {
+            let opts = TraceTrainOptions {
+                steps: 4,
+                window: 2,
+                seed: 5,
+                skip_verify: true,
+                chained: true,
+                pipeline_depth,
+            };
+            let report = train_and_prove_trace(cfg, &ds, Path::new("artifacts"), &opts)
+                .expect("trace run");
+            report
+                .proofs
+                .iter()
+                .map(|p| crate::wire::encode_trace_proof(&cfg, p))
+                .collect()
+        };
+        let base = run(1);
+        assert_eq!(base.len(), 2);
+        for depth in [2usize, 4] {
+            assert_eq!(
+                base,
+                run(depth),
+                "pipeline_depth={depth} must not change the artifacts"
+            );
+        }
     }
 }

@@ -108,7 +108,70 @@ impl G1Affine {
         };
         p.is_on_curve().then_some(p)
     }
+
+    /// 32-byte compressed encoding: canonical little-endian x with the sign
+    /// of y in bit 7 of byte 31 (the parity of y's canonical representative;
+    /// q < 2²⁵⁴, so the top two bits of a canonical x are always clear) and
+    /// an identity flag in bit 6. This is the representation the paper's
+    /// proof-size figures count, and the wire format serializes.
+    pub fn to_bytes_compressed(&self) -> [u8; 32] {
+        let mut out = [0u8; 32];
+        if self.infinity {
+            out[31] = COMPRESSED_INFINITY_BIT;
+            return out;
+        }
+        out.copy_from_slice(&self.x.to_bytes());
+        debug_assert_eq!(out[31] & (COMPRESSED_SIGN_BIT | COMPRESSED_INFINITY_BIT), 0);
+        if self.y.to_repr()[0] & 1 == 1 {
+            out[31] |= COMPRESSED_SIGN_BIT;
+        }
+        out
+    }
+
+    /// Parse the [`Self::to_bytes_compressed`] encoding. Rejects
+    /// non-canonical x coordinates, x with no square root of x³ + 3 (not a
+    /// curve point), and malformed identity encodings, so every group
+    /// element has exactly one compressed byte representation.
+    pub fn from_bytes_compressed(bytes: &[u8; 32]) -> Option<Self> {
+        let flags = bytes[31] & (COMPRESSED_SIGN_BIT | COMPRESSED_INFINITY_BIT);
+        let mut xb = *bytes;
+        xb[31] &= !(COMPRESSED_SIGN_BIT | COMPRESSED_INFINITY_BIT);
+        if flags & COMPRESSED_INFINITY_BIT != 0 {
+            // identity: the flag alone, no sign bit, zero x
+            if flags != COMPRESSED_INFINITY_BIT || xb.iter().any(|&b| b != 0) {
+                return None;
+            }
+            return Some(Self::IDENTITY);
+        }
+        let x = Fq::from_bytes(&xb);
+        // `Fq::from_bytes` reduces silently; demand the canonical encoding
+        if x.to_bytes() != xb {
+            return None;
+        }
+        let y2 = x.square() * x + Fq::from_u64(CURVE_B);
+        let y = y2.sqrt()?;
+        let want_odd = flags & COMPRESSED_SIGN_BIT != 0;
+        // y = 0 would make both signs encode identically; no such point
+        // exists on an odd-order curve, but reject the malformed encoding
+        if y.is_zero() && want_odd {
+            return None;
+        }
+        let y = if (y.to_repr()[0] & 1 == 1) == want_odd {
+            y
+        } else {
+            -y
+        };
+        Some(Self {
+            x,
+            y,
+            infinity: false,
+        })
+    }
 }
+
+/// Flag bits of the compressed encoding (free because q < 2²⁵⁴).
+const COMPRESSED_SIGN_BIT: u8 = 0x80;
+const COMPRESSED_INFINITY_BIT: u8 = 0x40;
 
 impl G1 {
     pub const IDENTITY: Self = Self {
@@ -460,5 +523,61 @@ mod tests {
         let mut r = rng();
         let p = G1::random(&mut r).to_affine();
         assert_ne!(p.to_bytes(), G1Affine::IDENTITY.to_bytes());
+    }
+
+    #[test]
+    fn compressed_roundtrip_both_signs_and_identity() {
+        let mut r = rng();
+        for _ in 0..20 {
+            let p = G1::random(&mut r).to_affine();
+            let n = p.neg();
+            let pc = p.to_bytes_compressed();
+            let nc = n.to_bytes_compressed();
+            // same x, opposite sign bit
+            assert_eq!(&pc[..31], &nc[..31]);
+            assert_eq!(pc[31] ^ nc[31], 0x80);
+            assert_eq!(G1Affine::from_bytes_compressed(&pc), Some(p));
+            assert_eq!(G1Affine::from_bytes_compressed(&nc), Some(n));
+        }
+        let id = G1Affine::IDENTITY.to_bytes_compressed();
+        assert_eq!(G1Affine::from_bytes_compressed(&id), Some(G1Affine::IDENTITY));
+        assert_eq!(id[31], 0x40);
+        assert!(id[..31].iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn compressed_rejects_malformed() {
+        // non-canonical x: the field modulus itself (reduces to 0)
+        let mut nc = [0u8; 32];
+        let q_le: [u64; 4] =
+            <crate::field::FqParams as crate::field::FieldParams>::MODULUS;
+        for i in 0..4 {
+            nc[i * 8..i * 8 + 8].copy_from_slice(&q_le[i].to_le_bytes());
+        }
+        assert!(G1Affine::from_bytes_compressed(&nc).is_none());
+        // identity flag with a sign bit or nonzero x
+        let mut bad = [0u8; 32];
+        bad[31] = 0xc0;
+        assert!(G1Affine::from_bytes_compressed(&bad).is_none());
+        let mut bad = [0u8; 32];
+        bad[31] = 0x40;
+        bad[0] = 1;
+        assert!(G1Affine::from_bytes_compressed(&bad).is_none());
+        // some x in 0..32 must have no square root of x³+3 (half the field
+        // elements are non-residues; all-residue runs of 32 don't happen)
+        let rejected = (0u64..32).any(|v| {
+            let mut b = [0u8; 32];
+            b[..8].copy_from_slice(&v.to_le_bytes());
+            G1Affine::from_bytes_compressed(&b).is_none()
+        });
+        assert!(rejected, "expected at least one non-residue x below 32");
+    }
+
+    #[test]
+    fn compressed_matches_uncompressed_semantics() {
+        let mut r = rng();
+        let p = G1::random(&mut r).to_affine();
+        let back = G1Affine::from_bytes_compressed(&p.to_bytes_compressed()).unwrap();
+        assert_eq!(G1Affine::from_bytes(&p.to_bytes()), Some(back));
     }
 }

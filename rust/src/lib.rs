@@ -12,6 +12,7 @@
 //! * the paper's contribution: [`gkr`] (anchored layer proofs),
 //!   [`zkrelu`] (auxiliary-input validity), [`zkdl`] (Protocol 2),
 //!   [`aggregate`] (FAC4DNN multi-step trace aggregation),
+//!   [`update`] (zkSGD weight-update chaining),
 //!   [`merkle`] (Appendix B), [`baseline`] (SC-BD comparator)
 //! * the workload: [`model`] (fixed-point quantized network), [`witness`],
 //!   [`data`]
@@ -38,6 +39,7 @@ pub mod poly;
 pub mod runtime;
 pub mod sumcheck;
 pub mod transcript;
+pub mod update;
 pub mod util;
 
 pub use field::{Fq, Fr};

@@ -3,7 +3,8 @@
 //! Subcommands:
 //!   prove        prove + verify one training step (optionally persist it)
 //!   train        proven training run (loss curve + per-step proof metrics)
-//!   prove-trace  aggregate T training steps into one FAC4DNN trace proof
+//!   prove-trace  aggregate T training steps into one FAC4DNN trace proof;
+//!                `--chained` adds the zkSGD weight-update chain argument
 //!   verify-trace re-read persisted trace proofs and verify out-of-process;
 //!                multiple `--in` files batch into ONE MSM
 //!   membership   build the Merkle tree and answer (non-)membership queries
@@ -13,6 +14,7 @@
 //!   zkdl prove --depth 2 --width 64 --batch 16 --mode parallel --out step.zkp
 //!   zkdl train --depth 3 --width 64 --batch 16 --steps 50 --prove-every 10
 //!   zkdl prove-trace --depth 2 --width 16 --batch 8 --steps 16 --out trace.zkp
+//!   zkdl prove-trace --chained --depth 2 --width 16 --batch 8 --steps 4
 //!   zkdl verify-trace --in trace.zkp
 //!   zkdl verify-trace --in a.zkp --in b.zkp --in c.zkp
 //!   zkdl membership --n 1000 --queries 100 --hash sha256 --positivity 0.5
@@ -99,10 +101,15 @@ fn cmd_prove_trace(cli: &Cli) -> Result<()> {
         window: cli.get_usize("window", 0), // 0 = one window over the run
         seed: cli.get_u64("seed", 1),
         skip_verify: cli.flag("skip-verify"),
+        chained: cli.flag("chained"),
+        pipeline_depth: cli.get_usize("pipeline-depth", 2),
     };
     println!(
-        "aggregating {steps} training steps: L={} d={} B={}",
-        cfg.depth, cfg.width, cfg.batch
+        "aggregating {steps} training steps: L={} d={} B={}{}",
+        cfg.depth,
+        cfg.width,
+        cfg.batch,
+        if opts.chained { " (zkSGD chained)" } else { "" }
     );
     let ds = synthetic_dataset(cli, &cfg);
     let report = train_and_prove_trace(cfg, &ds, Path::new("artifacts"), &opts)?;
@@ -138,8 +145,9 @@ fn cmd_verify_trace(cli: &Cli) -> Result<()> {
         let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
         let (cfg, proof) = zkdl::wire::decode_trace_proof(&bytes)?;
         println!(
-            "{path}: {} steps, L={} d={} B={}, {} wire bytes",
+            "{path}: {} steps{}, L={} d={} B={}, {} wire bytes",
             proof.steps,
+            if proof.chain.is_some() { " (chained)" } else { "" },
             cfg.depth,
             cfg.width,
             cfg.batch,

@@ -1,0 +1,528 @@
+//! zkSGD — weight-update chaining for end-to-end verifiable training traces.
+//!
+//! A plain [`crate::aggregate::TraceProof`] certifies T *independent* SGD
+//! steps: each step is proven against its own committed weights, and nothing
+//! ties step t+1's weights to step t's update. This module closes that gap
+//! with the paper's own zkReLU recipe (§4.1: turn a non-arithmetic relation
+//! into a committed auxiliary decomposition). The coordinator's quantized
+//! update W_{t+1} = W_t − ⌊G_W / 2^{R+lr}⌉ rounds, so it is not linear over
+//! the committed integers — but its *decomposition* is:
+//!
+//! ```text
+//! G_W = 2^S·(W_t − W_{t+1}) + R,   R ∈ [−2^{S−1}, 2^{S−1}),  S = R+lr,
+//! ```
+//!
+//! and the remainder range makes the decomposition unique: proving it proves
+//! the exact rounded update. Per step boundary t→t+1 and layer ℓ the prover
+//! commits the remainder tensor R (d² entries) into block (t·L̄ + ℓ) of a
+//! stacked basis, then
+//!
+//! * **linear part, checked homomorphically against the already-committed
+//!   tensors**: one transcript point p over the d² weight-index space; the
+//!   batched-opening engine opens every W̃_t(p) and G̃_W(p) (one RLC'd IPA on
+//!   the shared `zkdl/mat` basis) and opens each R̃(p) against the claimed
+//!   value G̃_W(p) − 2^S·(W̃_t(p) − W̃_{t+1}(p)) — the verifier *derives* the
+//!   remainder claims from the weight/gradient claims, so the boundary
+//!   relation holds iff the openings do (Schwartz–Zippel over p);
+//! * **range part**: the stacked remainders feed one zkReLU Protocol-1 /
+//!   Algorithm-1 validity instance over the padded digit basis
+//!   ([`crate::zkrelu::s_basis_digits`]): S = R+lr bits is not a power of
+//!   two, so the instance uses width S̄ = 2^⌈log S⌉ with zero-weight pad
+//!   columns — the pattern check forces pad bits to zero, keeping the proven
+//!   range *exactly* [−2^{S−1}, 2^{S−1}).
+//!
+//! Everything defers into the trace's `MsmAccumulator`: a chained
+//! `TraceProof` still verifies with exactly one MSM flush. See
+//! DESIGN.md §update.
+
+use crate::aggregate::StepCommitmentSet;
+use crate::commit::{ComExpr, CommitKey};
+use crate::curve::accum::MsmAccumulator;
+use crate::curve::{G1, G1Affine};
+use crate::field::Fr;
+use crate::ipa::{self, EvalClaim, IpaProof};
+use crate::model::ModelConfig;
+use crate::poly::eq_table;
+use crate::transcript::Transcript;
+use crate::util::rng::Rng;
+use crate::witness::StepWitness;
+use crate::zkdl::{commit, frs, tile_claims_at, tiled_eq, Committed};
+use crate::zkrelu::{self, Protocol1Msg, ProverAux, ValidityBases, ValidityProof};
+use anyhow::{ensure, Context, Result};
+
+/// Padded boundary count B̄ = (T−1)̄, padded layer count L̄, and the stacked
+/// remainder size N_U = B̄·L̄·d². Boundary b's layer ℓ owns block (b·L̄ + ℓ).
+pub fn update_stack_dims(cfg: &ModelConfig, steps: usize) -> (usize, usize, usize) {
+    assert!(steps >= 2, "chaining needs at least two steps");
+    let bbar = (steps - 1).next_power_of_two();
+    let lbar = cfg.depth.next_power_of_two();
+    let n = bbar * lbar * cfg.width * cfg.width;
+    assert!(n >= 2, "degenerate update stack");
+    (bbar, lbar, n)
+}
+
+/// Active digit count S = R + lr of an update remainder and the padded
+/// power-of-two decomposition width the validity instance runs at.
+pub fn update_widths(cfg: &ModelConfig) -> (usize, usize) {
+    let digits = (cfg.r_bits + cfg.lr_shift) as usize;
+    (digits, digits.next_power_of_two())
+}
+
+/// Commitment basis for the stacked update remainders of a T-step trace.
+pub struct UpdateKey {
+    pub cfg: ModelConfig,
+    /// Number of live steps T (T−1 live boundaries).
+    pub steps: usize,
+    /// Stacked remainder basis, length B̄·L̄·d².
+    pub g_upd: CommitKey,
+}
+
+impl UpdateKey {
+    pub fn setup(cfg: ModelConfig, steps: usize) -> Self {
+        let (_, _, n) = update_stack_dims(&cfg, steps);
+        Self {
+            cfg,
+            steps,
+            g_upd: CommitKey::setup(b"zkdl/trace-aux/upd", n),
+        }
+    }
+
+    /// Commitment key slice for boundary b / layer ℓ's remainder block.
+    pub fn block(&self, b: usize, l: usize) -> CommitKey {
+        let d2 = self.cfg.width * self.cfg.width;
+        let lbar = self.cfg.depth.next_power_of_two();
+        let s = b * lbar + l;
+        CommitKey {
+            g: self.g_upd.g[s * d2..(s + 1) * d2].to_vec(),
+            h: self.g_upd.h,
+            label: self.g_upd.label.clone(),
+        }
+    }
+}
+
+/// Validity bases for the remainder range instance; the label pins (T, L)
+/// like the trace validity labels do.
+fn update_validity_bases(uk: &UpdateKey) -> ValidityBases {
+    let (_, _, n) = update_stack_dims(&uk.cfg, uk.steps);
+    let (digits, width) = update_widths(&uk.cfg);
+    let t = uk.steps as u64;
+    let l = uk.cfg.depth as u64;
+    let label = [
+        b"zkdl/trace/validity/upd/".as_ref(),
+        &t.to_le_bytes(),
+        &l.to_le_bytes(),
+    ]
+    .concat();
+    ValidityBases::setup_plain_digits(&label, uk.g_upd.h, n / 2, width, digits)
+}
+
+/// 2^S as a field scalar, S = R + lr.
+fn two_s(cfg: &ModelConfig) -> Fr {
+    Fr::from_u128(1u128 << (cfg.r_bits + cfg.lr_shift))
+}
+
+fn dot(a: &[Fr], b: &[Fr]) -> Fr {
+    a.iter().zip(b.iter()).map(|(x, y)| *x * *y).sum()
+}
+
+/// The chain argument appended to a [`crate::aggregate::TraceProof`].
+#[derive(Clone, Debug)]
+pub struct ChainProof {
+    /// Per-boundary, per-layer remainder commitments, (T−1)×L.
+    pub com_ru: Vec<Vec<G1Affine>>,
+    pub p1_upd: Protocol1Msg,
+    /// W̃ evaluations at the boundary point, step-major, length T·L.
+    pub v_w: Vec<Fr>,
+    /// G̃_W evaluations at the boundary point for steps 0..T−1, (T−1)·L.
+    pub v_gw: Vec<Fr>,
+    /// Stacked R̃ evaluation at the validity point.
+    pub v_stack: Fr,
+    /// Opening IPAs: [W+G_W @ p, R @ p (tiled), stacked R @ validity point].
+    pub openings: Vec<IpaProof>,
+    pub validity: ValidityProof,
+}
+
+impl ChainProof {
+    /// Compressed-point accounting, matching
+    /// [`crate::aggregate::TraceProof::size_bytes`].
+    pub fn size_bytes(&self) -> usize {
+        let coms: usize = self.com_ru.iter().map(|row| row.len()).sum();
+        let scalars = self.v_w.len() + self.v_gw.len() + 1;
+        let openings: usize = self.openings.iter().map(|o| o.size_bytes()).sum();
+        (coms + scalars) * 32 + 32 + openings + self.validity.size_bytes()
+    }
+}
+
+/// Prover-side chain witness: one remainder tensor per (boundary, layer).
+pub struct ChainWitness {
+    /// (T−1) × L × d² remainders, embedded in 𝔽.
+    pub rems: Vec<Vec<Vec<Fr>>>,
+}
+
+impl ChainWitness {
+    /// Compute the remainders from consecutive step witnesses
+    /// ([`crate::witness::chain_remainders`]), failing if any boundary's
+    /// weights are not the exact rounded update.
+    pub fn build(wits: &[StepWitness]) -> Result<Self> {
+        ensure!(wits.len() >= 2, "chaining needs at least two steps");
+        let rems: Vec<Vec<Vec<Fr>>> = crate::witness::chain_remainders(wits)?
+            .iter()
+            .map(|per_layer| per_layer.iter().map(|r| frs(r)).collect())
+            .collect();
+        Ok(Self { rems })
+    }
+}
+
+/// Prover-side commitments of the chain, produced before any transcript
+/// challenge is drawn (the trace absorbs them up front, alongside the step
+/// commitments, so the shared-randomness property extends to the chain).
+pub(crate) struct ChainCommitments {
+    pub(crate) ru: Vec<Vec<Committed>>,
+    pub(crate) com_ru: Vec<Vec<G1Affine>>,
+    pub(crate) p1: Protocol1Msg,
+    pub(crate) aux: ProverAux,
+    /// The stacked remainder tensor, length N_U (padding slots zero).
+    pub(crate) stacked: Vec<Fr>,
+}
+
+pub(crate) fn commit_chain(uk: &UpdateKey, cw: &ChainWitness, rng: &mut Rng) -> ChainCommitments {
+    let cfg = &uk.cfg;
+    let depth = cfg.depth;
+    let d2 = cfg.width * cfg.width;
+    let (_, lbar, n_upd) = update_stack_dims(cfg, uk.steps);
+    assert_eq!(cw.rems.len(), uk.steps - 1, "boundary count mismatch");
+    let mut ru = Vec::with_capacity(cw.rems.len());
+    let mut stacked = vec![Fr::ZERO; n_upd];
+    for (b, per_layer) in cw.rems.iter().enumerate() {
+        assert_eq!(per_layer.len(), depth, "layer count mismatch");
+        let mut row = Vec::with_capacity(depth);
+        for (l, vals) in per_layer.iter().enumerate() {
+            let s = b * lbar + l;
+            stacked[s * d2..(s + 1) * d2].copy_from_slice(vals);
+            row.push(commit(&uk.block(b, l), vals.clone(), rng));
+        }
+        ru.push(row);
+    }
+    let com_ru: Vec<Vec<G1Affine>> = ru
+        .iter()
+        .map(|row| G1::batch_to_affine(&row.iter().map(|c| c.com).collect::<Vec<_>>()))
+        .collect();
+    let vb = update_validity_bases(uk);
+    let (p1, aux) = zkrelu::protocol1_plain(&vb, &stacked, rng);
+    ChainCommitments {
+        ru,
+        com_ru,
+        p1,
+        aux,
+        stacked,
+    }
+}
+
+/// Absorb the chain's remainder commitments (call sites: right after the
+/// per-step commitment sets, before Protocol 1 / any challenge).
+pub(crate) fn absorb_chain_ru(tr: &mut Transcript, com_ru: &[Vec<G1Affine>]) {
+    for (b, row) in com_ru.iter().enumerate() {
+        tr.absorb_u64(b"chain/boundary", b as u64);
+        tr.absorb_points(b"com/ru", row);
+    }
+}
+
+/// The chain argument proper, appended after the trace's Phase 4. `w` and
+/// `gw` are the per-step weight / weight-gradient commitments on `g_mat`
+/// (the same objects the trace's matmul openings use).
+pub(crate) fn prove_chain(
+    uk: &UpdateKey,
+    g_mat: &CommitKey,
+    w: &[&[Committed]],
+    gw: &[&[Committed]],
+    cc: &ChainCommitments,
+    tr: &mut Transcript,
+    rng: &mut Rng,
+) -> ChainProof {
+    let cfg = &uk.cfg;
+    let t_steps = uk.steps;
+    let depth = cfg.depth;
+    let d2 = cfg.width * cfg.width;
+    let log_d2 = d2.trailing_zeros() as usize;
+    let (bbar, lbar, n_upd) = update_stack_dims(cfg, t_steps);
+    let slots = bbar * lbar;
+    let nb = t_steps - 1;
+    let two_s = two_s(cfg);
+
+    // one boundary point over the d² weight-index space, shared by every
+    // (boundary, layer) — the chain analogue of the trace-global bundle
+    let p_u = tr.challenge_frs(b"upd/p", log_d2);
+    let e_u = eq_table(&p_u);
+
+    let mut v_w = Vec::with_capacity(t_steps * depth);
+    for step in w.iter().take(t_steps) {
+        for c in step.iter().take(depth) {
+            v_w.push(dot(&c.values, &e_u));
+        }
+    }
+    let mut v_gw = Vec::with_capacity(nb * depth);
+    for step in gw.iter().take(nb) {
+        for c in step.iter().take(depth) {
+            v_gw.push(dot(&c.values, &e_u));
+        }
+    }
+    // derived remainder evaluations — the linear boundary relation at p:
+    // R̃(p) = G̃_W(p) − 2^S·(W̃_t(p) − W̃_{t+1}(p))
+    let mut v_ru = Vec::with_capacity(nb * depth);
+    for b in 0..nb {
+        for l in 0..depth {
+            let v = v_gw[b * depth + l] - two_s * (v_w[b * depth + l] - v_w[(b + 1) * depth + l]);
+            debug_assert_eq!(v, dot(&cc.ru[b][l].values, &e_u), "chain witness drift");
+            v_ru.push(v);
+        }
+    }
+
+    let mut openings = Vec::with_capacity(3);
+    // U1: every W̃_t(p) and G̃_W(p) on the shared g_mat basis, one RLC'd IPA
+    {
+        let mut claims = Vec::with_capacity((t_steps + nb) * depth);
+        for (t, step) in w.iter().enumerate().take(t_steps) {
+            for (l, c) in step.iter().enumerate().take(depth) {
+                claims.push(EvalClaim {
+                    com: c.com,
+                    values: c.values.clone(),
+                    blind: c.blind,
+                    v: v_w[t * depth + l],
+                });
+            }
+        }
+        for (b, step) in gw.iter().enumerate().take(nb) {
+            for (l, c) in step.iter().enumerate().take(depth) {
+                claims.push(EvalClaim {
+                    com: c.com,
+                    values: c.values.clone(),
+                    blind: c.blind,
+                    v: v_gw[b * depth + l],
+                });
+            }
+        }
+        openings.push(ipa::batch_prove_eval_expr(g_mat, &claims, &e_u, tr, rng));
+    }
+    // U2: each remainder block at p, tiled over the stacked basis
+    {
+        let mut claims = Vec::with_capacity(nb * depth);
+        let mut slot_idx = Vec::with_capacity(nb * depth);
+        for (b, row) in cc.ru.iter().enumerate() {
+            for (l, c) in row.iter().enumerate() {
+                claims.push(EvalClaim {
+                    com: c.com,
+                    values: c.values.clone(),
+                    blind: c.blind,
+                    v: v_ru[b * depth + l],
+                });
+                slot_idx.push(b * lbar + l);
+            }
+        }
+        openings.push(ipa::batch_prove_eval_expr(
+            &uk.g_upd,
+            &tile_claims_at(claims, &slot_idx, slots, d2),
+            &tiled_eq(&p_u, slots),
+            tr,
+            rng,
+        ));
+    }
+    // validity point over the stacked remainder tensor
+    let u_dd = tr.challenge_fr(b"upd/u_dd");
+    let log_n = n_upd.trailing_zeros() as usize;
+    let rho = tr.challenge_frs(b"upd/rho", log_n - 1);
+    let mut vpoint = vec![u_dd];
+    vpoint.extend_from_slice(&rho);
+    let e_row = eq_table(&vpoint);
+    // ⟨stacked, e(vpoint)⟩ IS the MLE evaluation — no tensor copy needed
+    let v_stack = dot(&cc.stacked, &e_row);
+    // U3: the stacked opening binding v_stack to the summed commitments
+    {
+        let mut com = G1::IDENTITY;
+        let mut blind = Fr::ZERO;
+        for row in &cc.ru {
+            for c in row {
+                com = com + c.com;
+                blind += c.blind;
+            }
+        }
+        let claim = EvalClaim {
+            com,
+            values: cc.stacked.clone(),
+            blind,
+            v: v_stack,
+        };
+        openings.push(ipa::batch_prove_eval_expr(&uk.g_upd, &[claim], &e_row, tr, rng));
+    }
+    let vb = update_validity_bases(uk);
+    let validity = zkrelu::prove_validity(&vb, &cc.aux, &e_row, u_dd, v_stack, Fr::ZERO, tr, rng);
+
+    ChainProof {
+        com_ru: cc.com_ru.clone(),
+        p1_upd: cc.p1.clone(),
+        v_w,
+        v_gw,
+        v_stack,
+        openings,
+        validity,
+    }
+}
+
+/// Transcript replay + deferred checks of the chain argument (mirrors
+/// [`prove_chain`] exactly). No curve arithmetic: every group equation —
+/// the three batched openings and the validity instance — lands in `acc`,
+/// preserving the trace's one-MSM invariant.
+pub(crate) fn verify_chain_accum(
+    uk: &UpdateKey,
+    g_mat: &CommitKey,
+    coms: &[StepCommitmentSet],
+    chain: &ChainProof,
+    tr: &mut Transcript,
+    acc: &mut MsmAccumulator,
+) -> Result<()> {
+    let cfg = &uk.cfg;
+    let t_steps = uk.steps;
+    let depth = cfg.depth;
+    let log_d2 = (cfg.width * cfg.width).trailing_zeros() as usize;
+    let (bbar, lbar, n_upd) = update_stack_dims(cfg, t_steps);
+    let slots = bbar * lbar;
+    let nb = t_steps - 1;
+
+    ensure!(coms.len() == t_steps, "chain: step commitment count");
+    ensure!(chain.com_ru.len() == nb, "chain: boundary count");
+    for row in &chain.com_ru {
+        ensure!(row.len() == depth, "chain: per-boundary layer count");
+    }
+    ensure!(chain.v_w.len() == t_steps * depth, "chain: v_w length");
+    ensure!(chain.v_gw.len() == nb * depth, "chain: v_gw length");
+    ensure!(chain.openings.len() == 3, "chain: opening count");
+    ensure!(
+        chain.p1_upd.com_sign_prime.is_none(),
+        "chain: unexpected sign coupling"
+    );
+
+    let two_s = two_s(cfg);
+    let p_u = tr.challenge_frs(b"upd/p", log_d2);
+    let e_u = eq_table(&p_u);
+
+    // the boundary relation *defines* the remainder claims
+    let mut v_ru = Vec::with_capacity(nb * depth);
+    for b in 0..nb {
+        for l in 0..depth {
+            v_ru.push(
+                chain.v_gw[b * depth + l]
+                    - two_s * (chain.v_w[b * depth + l] - chain.v_w[(b + 1) * depth + l]),
+            );
+        }
+    }
+
+    // U1
+    {
+        let mut claims = Vec::with_capacity((t_steps + nb) * depth);
+        for (t, set) in coms.iter().enumerate() {
+            for l in 0..depth {
+                claims.push((
+                    ComExpr::point(set.com_w[l].to_projective()),
+                    chain.v_w[t * depth + l],
+                ));
+            }
+        }
+        for (b, set) in coms.iter().enumerate().take(nb) {
+            for l in 0..depth {
+                claims.push((
+                    ComExpr::point(set.com_gw[l].to_projective()),
+                    chain.v_gw[b * depth + l],
+                ));
+            }
+        }
+        ipa::batch_verify_eval_expr(g_mat, &claims, &e_u, &chain.openings[0], tr, acc)
+            .context("chain boundary opening")?;
+    }
+    // U2
+    {
+        let mut claims = Vec::with_capacity(nb * depth);
+        for (b, row) in chain.com_ru.iter().enumerate() {
+            for (l, p) in row.iter().enumerate() {
+                claims.push((ComExpr::point(p.to_projective()), v_ru[b * depth + l]));
+            }
+        }
+        ipa::batch_verify_eval_expr(
+            &uk.g_upd,
+            &claims,
+            &tiled_eq(&p_u, slots),
+            &chain.openings[1],
+            tr,
+            acc,
+        )
+        .context("chain remainder opening")?;
+    }
+    let u_dd = tr.challenge_fr(b"upd/u_dd");
+    let log_n = n_upd.trailing_zeros() as usize;
+    let rho = tr.challenge_frs(b"upd/rho", log_n - 1);
+    let mut vpoint = vec![u_dd];
+    vpoint.extend_from_slice(&rho);
+    let e_row = eq_table(&vpoint);
+    // U3
+    {
+        let stack = ComExpr::sum(
+            chain
+                .com_ru
+                .iter()
+                .flat_map(|row| row.iter().map(|p| p.to_projective())),
+        );
+        ipa::batch_verify_eval_expr(
+            &uk.g_upd,
+            &[(stack, chain.v_stack)],
+            &e_row,
+            &chain.openings[2],
+            tr,
+            acc,
+        )
+        .context("chain stacked opening")?;
+    }
+    let vb = update_validity_bases(uk);
+    zkrelu::verify_validity_accum(
+        &vb,
+        &chain.p1_upd,
+        None,
+        &e_row,
+        u_dd,
+        chain.v_stack,
+        Fr::ZERO,
+        &chain.validity,
+        tr,
+        acc,
+    )
+    .context("chain validity")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_pad_boundaries_and_layers() {
+        let cfg = ModelConfig::new(3, 8, 4);
+        let (bbar, lbar, n) = update_stack_dims(&cfg, 4);
+        assert_eq!((bbar, lbar), (4, 4)); // 3 boundaries pad to 4
+        assert_eq!(n, 4 * 4 * 64);
+        let (digits, width) = update_widths(&cfg);
+        assert_eq!(digits, 24); // R=16 + lr=8
+        assert_eq!(width, 32);
+    }
+
+    #[test]
+    fn chain_witness_rejects_broken_boundary() {
+        use crate::data::Dataset;
+        use crate::witness::native::sgd_witness_chain;
+        let cfg = ModelConfig::new(2, 8, 4);
+        let ds = Dataset::synthetic(64, 4, 4, cfg.r_bits, 9);
+        let mut wits = sgd_witness_chain(cfg, &ds, 3, 0xc4a1);
+        assert!(ChainWitness::build(&wits).is_ok());
+        crate::witness::validate_chain(&wits).expect("honest chain validates");
+        // perturb one weight of step 1: boundary 0 no longer chains
+        wits[1].layers[0].w[5] += 1;
+        assert!(ChainWitness::build(&wits).is_err());
+        assert!(crate::witness::validate_chain(&wits).is_err());
+    }
+}

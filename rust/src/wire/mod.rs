@@ -10,10 +10,11 @@
 //!   reconstructs the (deterministic, label-derived) keys from the file
 //!   alone;
 //! * scalars are canonical 32-byte little-endian [`Fr`]; points are the
-//!   64-byte uncompressed [`G1Affine`] encoding. Decoding *rejects*
-//!   non-canonical scalars and off-curve points, so every proof has exactly
-//!   one byte representation and `decode(encode(p)) == p` re-encodes to the
-//!   identical bytes;
+//!   32-byte compressed [`G1Affine`] encoding (sign bit + x), so serialized
+//!   sizes match the paper's compressed-point proof-size accounting.
+//!   Decoding *rejects* non-canonical scalars and encodings that are not a
+//!   curve point, so every proof has exactly one byte representation and
+//!   `decode(encode(p)) == p` re-encodes to the identical bytes;
 //! * vectors carry u32 length prefixes bounded by the remaining input, and
 //!   the envelope must be consumed exactly (no trailing garbage).
 //!
@@ -26,6 +27,7 @@ use crate::field::Fr;
 use crate::ipa::IpaProof;
 use crate::model::ModelConfig;
 use crate::sumcheck::SumcheckProof;
+use crate::update::ChainProof;
 use crate::zkdl::{GroupProof, ProofMode, StepProof};
 use crate::zkrelu::{Protocol1Msg, ValidityProof};
 use anyhow::{bail, ensure, Context, Result};
@@ -37,7 +39,10 @@ pub const MAGIC: [u8; 4] = *b"ZKDL";
 /// but can never verify — better to reject it as an unsupported version).
 /// v2: deferred-verification transcript — batched openings absorb values
 /// only, zkReLU's statement point P is no longer absorbed.
-pub const VERSION: u16 = 2;
+/// v3: 32-byte compressed point encoding; trace envelope carries the
+/// optional zkSGD chain payload; the trace transcript absorbs a chained
+/// flag.
+pub const VERSION: u16 = 3;
 
 /// Payload discriminant in the envelope header.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -197,14 +202,14 @@ impl FromWire for Fr {
 
 impl ToWire for G1Affine {
     fn to_wire(&self, w: &mut WireWriter) {
-        w.put_bytes(&self.to_bytes());
+        w.put_bytes(&self.to_bytes_compressed());
     }
 }
 
 impl FromWire for G1Affine {
     fn from_wire(r: &mut WireReader) -> Result<Self> {
-        let raw: [u8; 64] = r.take(64)?.try_into().unwrap();
-        G1Affine::from_bytes(&raw).context("wire: invalid curve point")
+        let raw: [u8; 32] = r.take(32)?.try_into().unwrap();
+        G1Affine::from_bytes_compressed(&raw).context("wire: invalid curve point")
     }
 }
 
@@ -319,7 +324,18 @@ impl FromWire for ModelConfig {
             r_bits >= 1 && q_bits >= 2 && r_bits + q_bits <= 64,
             "wire: bad quantization bits"
         );
+        // the zkReLU e_bit tables require power-of-two decomposition widths,
+        // and the zkSGD chain needs ≥ 2 update-remainder digits — reject
+        // configs the verifier would otherwise abort on
+        ensure!(
+            r_bits.is_power_of_two() && q_bits.is_power_of_two(),
+            "wire: quantization widths must be powers of two"
+        );
         ensure!(lr_shift <= 63, "wire: bad lr shift");
+        ensure!(
+            r_bits + lr_shift >= 2,
+            "wire: degenerate update-remainder width"
+        );
         Ok(ModelConfig {
             depth,
             width,
@@ -537,6 +553,32 @@ impl FromWire for StepCommitmentSet {
     }
 }
 
+impl ToWire for ChainProof {
+    fn to_wire(&self, w: &mut WireWriter) {
+        w.put(&self.com_ru);
+        w.put(&self.p1_upd);
+        w.put(&self.v_w);
+        w.put(&self.v_gw);
+        w.put(&self.v_stack);
+        w.put(&self.openings);
+        w.put(&self.validity);
+    }
+}
+
+impl FromWire for ChainProof {
+    fn from_wire(r: &mut WireReader) -> Result<Self> {
+        Ok(ChainProof {
+            com_ru: r.get()?,
+            p1_upd: r.get()?,
+            v_w: r.get()?,
+            v_gw: r.get()?,
+            v_stack: r.get()?,
+            openings: r.get()?,
+            validity: r.get()?,
+        })
+    }
+}
+
 impl ToWire for TraceProof {
     fn to_wire(&self, w: &mut WireWriter) {
         w.put_u32(self.steps as u32);
@@ -561,6 +603,7 @@ impl ToWire for TraceProof {
         w.put(&self.openings);
         w.put(&self.validity_main);
         w.put(&self.validity_rem);
+        w.put(&self.chain);
     }
 }
 
@@ -591,6 +634,7 @@ impl FromWire for TraceProof {
             openings: r.get()?,
             validity_main: r.get()?,
             validity_rem: r.get()?,
+            chain: r.get()?,
         })
     }
 }
@@ -676,6 +720,28 @@ pub fn decode_trace_proof(bytes: &[u8]) -> Result<(ModelConfig, TraceProof)> {
         n <= MAX_TRACE_AUX_SIZE,
         "wire: trace basis of {n} elements exceeds the decoder limit"
     );
+    if let Some(chain) = &proof.chain {
+        ensure!(
+            proof.steps >= 2,
+            "wire: chained trace needs at least two steps"
+        );
+        ensure!(
+            chain.com_ru.len() == proof.steps - 1,
+            "wire: chain boundary count"
+        );
+        for row in &chain.com_ru {
+            ensure!(row.len() == cfg.depth, "wire: chain per-boundary layer count");
+        }
+        let n_upd = (proof.steps - 1)
+            .next_power_of_two()
+            .checked_mul(cfg.depth.next_power_of_two())
+            .and_then(|x| x.checked_mul(cfg.width * cfg.width))
+            .context("wire: chain dimensions overflow")?;
+        ensure!(
+            n_upd <= MAX_TRACE_AUX_SIZE,
+            "wire: chain basis of {n_upd} elements exceeds the decoder limit"
+        );
+    }
     Ok((cfg, proof))
 }
 
@@ -716,11 +782,19 @@ mod tests {
     }
 
     #[test]
-    fn rejects_off_curve_point() {
-        let mut bytes = [0u8; 64];
-        bytes[0] = 5; // x=5, y=0 is not on y² = x³ + 3
+    fn rejects_invalid_point_encodings() {
+        // malformed identity: infinity flag plus a sign bit
+        let mut bytes = [0u8; 32];
+        bytes[31] = 0xc0;
         let mut r = WireReader::new(&bytes);
         assert!(r.get::<G1Affine>().is_err());
+        // some x below 32 has no y with y² = x³ + 3 (non-residue)
+        let rejected = (0u64..32).any(|v| {
+            let mut b = [0u8; 32];
+            b[..8].copy_from_slice(&v.to_le_bytes());
+            WireReader::new(&b).get::<G1Affine>().is_err()
+        });
+        assert!(rejected, "expected a non-decodable x below 32");
     }
 
     #[test]

@@ -11,7 +11,7 @@
 pub mod native;
 
 use crate::model::ModelConfig;
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 
 /// Rescale decomposition of a tensor T (scale 2^{2R}) into
 /// T = 2^R·T″ − 2^{Q+R−1}·B + R_T with T″ ∈ [0, 2^{Q−1}), B ∈ {0,1},
@@ -188,6 +188,73 @@ impl StepWitness {
     }
 }
 
+/// Exact remainder of one quantized SGD update (the zkSGD chain witness).
+///
+/// The coordinator's update is W_{t+1} = W_t − ⌊G_W / 2^{R+lr}⌉, whose
+/// round-to-nearest remainder is the unique R with
+///     G_W = 2^{R+lr}·(W_t − W_{t+1}) + R,   R ∈ [−2^{S−1}, 2^{S−1}),
+/// S = R_bits + lr_shift. Returns an error — "the weights do not chain" —
+/// if any entry's remainder falls outside that range, which happens exactly
+/// when W_{t+1} is not the rounded update of (W_t, G_W).
+pub fn update_remainder(
+    cfg: &ModelConfig,
+    w_prev: &[i64],
+    w_next: &[i64],
+    g_w: &[i64],
+) -> Result<Vec<i64>> {
+    let s_bits = cfg.r_bits + cfg.lr_shift;
+    let half = 1i128 << (s_bits - 1);
+    ensure!(
+        w_prev.len() == w_next.len() && w_prev.len() == g_w.len(),
+        "update tensor shape mismatch"
+    );
+    let mut out = Vec::with_capacity(g_w.len());
+    for i in 0..g_w.len() {
+        let r = g_w[i] as i128 - ((w_prev[i] as i128 - w_next[i] as i128) << s_bits);
+        ensure!(
+            (-half..half).contains(&r),
+            "update remainder out of range at index {i}: the weights do not chain"
+        );
+        out.push(r as i64);
+    }
+    Ok(out)
+}
+
+/// Update remainders of every boundary and layer of a consecutive witness
+/// chain: `result[b][l]` is boundary b / layer ℓ's remainder tensor. Fails
+/// — naming the boundary and layer — if any boundary's weights are not the
+/// exact rounded update of the previous step. The single source of the
+/// chain-walk logic: [`validate_chain`] and the zkSGD prover
+/// (`update::ChainWitness`) both build on it.
+pub fn chain_remainders(wits: &[StepWitness]) -> Result<Vec<Vec<Vec<i64>>>> {
+    let mut out = Vec::with_capacity(wits.len().saturating_sub(1));
+    for b in 0..wits.len().saturating_sub(1) {
+        let (prev, next) = (&wits[b], &wits[b + 1]);
+        ensure!(prev.cfg == next.cfg, "config mismatch at boundary {b}");
+        let mut per_layer = Vec::with_capacity(prev.cfg.depth);
+        for l in 0..prev.cfg.depth {
+            per_layer.push(
+                update_remainder(
+                    &prev.cfg,
+                    &prev.layers[l].w,
+                    &next.layers[l].w,
+                    &prev.layers[l].g_w,
+                )
+                .with_context(|| format!("boundary {b}, layer {l}"))?,
+            );
+        }
+        out.push(per_layer);
+    }
+    Ok(out)
+}
+
+/// Validate that consecutive step witnesses chain: every boundary's weights
+/// satisfy W_{t+1} = W_t − ⌊G_W/2^{R+lr}⌉ exactly (equivalently, all update
+/// remainders are in range — the decomposition is unique).
+pub fn validate_chain(wits: &[StepWitness]) -> Result<()> {
+    chain_remainders(wits).map(|_| ())
+}
+
 /// Decompose a scale-2^{2R} tensor into its zkReLU auxiliary inputs.
 /// Returns (aux, rescaled values T′).
 pub fn rescale_decompose(t: &[i64], r_bits: u32, q_bits: u32) -> (RescaleAux, Vec<i64>) {
@@ -214,6 +281,33 @@ pub fn rescale_decompose(t: &[i64], r_bits: u32, q_bits: u32) -> (RescaleAux, Ve
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn update_remainder_matches_rounded_update() {
+        let cfg = ModelConfig::new(1, 2, 2);
+        let shift = cfg.r_bits + cfg.lr_shift;
+        let w_prev = vec![1000i64, -1000, 0, 12345];
+        let g_w = vec![1i64 << 40, -(1i64 << 40), 17, -(1i64 << 25)];
+        let w_next: Vec<i64> = w_prev
+            .iter()
+            .zip(g_w.iter())
+            .map(|(w, g)| w - crate::model::round_div_pow2(*g, shift))
+            .collect();
+        let rem = update_remainder(&cfg, &w_prev, &w_next, &g_w).expect("chains");
+        let half = 1i64 << (shift - 1);
+        for i in 0..4 {
+            assert!((-half..half).contains(&rem[i]));
+            assert_eq!(
+                g_w[i],
+                ((w_prev[i] - w_next[i]) << shift) + rem[i],
+                "decomposition at {i}"
+            );
+        }
+        // any off-by-one weight breaks the range — the decomposition is unique
+        let mut bad = w_next.clone();
+        bad[2] += 1;
+        assert!(update_remainder(&cfg, &w_prev, &bad, &g_w).is_err());
+    }
 
     #[test]
     fn rescale_decompose_relation3() {

@@ -95,6 +95,28 @@ pub fn compute_witness(cfg: ModelConfig, x: &[i64], y: &[i64], weights: &Weights
     }
 }
 
+/// T consecutive SGD-step witnesses with the real weight update applied
+/// between steps — the canonical chained-trace input. Weights initialize
+/// from `seed`; step t consumes batch t of `ds`. Shared by the examples,
+/// benches, and tests that need a witness chain.
+pub fn sgd_witness_chain(
+    cfg: ModelConfig,
+    ds: &crate::data::Dataset,
+    steps: usize,
+    seed: u64,
+) -> Vec<StepWitness> {
+    let mut rng = crate::util::rng::Rng::seed_from_u64(seed);
+    let mut weights = Weights::init(cfg, &mut rng);
+    let mut out = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let (x, y) = ds.batch(&cfg, step);
+        let wit = compute_witness(cfg, &x, &y, &weights);
+        weights.apply_update(&wit.weight_grads());
+        out.push(wit);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

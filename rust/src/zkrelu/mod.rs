@@ -29,6 +29,12 @@ use crate::util::rng::Rng;
 use anyhow::{ensure, Result};
 
 /// Bases for one validity instance of row count 2N and bit width WIDTH.
+///
+/// `digits ≤ width` is the number of *active* digit columns: the signed
+/// digit basis is zero-weighted above column `digits − 1`, so the proven
+/// range is exactly [−2^{digits−1}, 2^{digits−1}) even when that bit count
+/// is not a power of two (the e_bit eq-table forces `width` to be one).
+/// `digits == width` recovers the paper's instances verbatim.
 #[derive(Clone)]
 pub struct ValidityBases {
     /// G ∈ 𝔾^{2N·W}; for the main instance G[i·W + (W−1)] = g_aux[i], i < N.
@@ -39,19 +45,24 @@ pub struct ValidityBases {
     pub blind_h: G1Affine,
     pub n: usize,
     pub width: usize,
+    /// Active digit columns (≤ width); columns ≥ digits are zero-weight pads.
+    pub digits: usize,
     pub label: Vec<u8>,
 }
 
 static VBASES_CACHE: once_cell::sync::Lazy<
-    std::sync::Mutex<std::collections::HashMap<(Vec<u8>, usize, usize), ValidityBases>>,
+    std::sync::Mutex<std::collections::HashMap<(Vec<u8>, usize, usize, usize), ValidityBases>>,
 > = once_cell::sync::Lazy::new(|| std::sync::Mutex::new(std::collections::HashMap::new()));
 
 impl ValidityBases {
     /// Main-instance basis: ties column W−1 of the Z″ block to `g_aux`.
     /// Cached: base derivation is a one-time setup cost per configuration.
+    /// The sign-column coupling lives in column W−1, so the main instance
+    /// always uses the full digit width.
     pub fn setup_main(label: &[u8], g_aux: &CommitKey, n: usize, width: usize) -> Self {
         assert!(g_aux.g.len() >= n);
-        let key = (label.to_vec(), n, width);
+        assert!(width.is_power_of_two());
+        let key = (label.to_vec(), n, width, width);
         if let Some(vb) = VBASES_CACHE.lock().unwrap().get(&key) {
             return vb.clone();
         }
@@ -70,6 +81,7 @@ impl ValidityBases {
             blind_h: g_aux.h,
             n,
             width,
+            digits: width,
             label: label.to_vec(),
         };
         VBASES_CACHE.lock().unwrap().insert(key, vb.clone());
@@ -78,7 +90,24 @@ impl ValidityBases {
 
     /// Remainder-instance basis: fully independent generators. Cached.
     pub fn setup_plain(label: &[u8], blind_h: G1Affine, n: usize, width: usize) -> Self {
-        let key = (label.to_vec(), n, width);
+        Self::setup_plain_digits(label, blind_h, n, width, width)
+    }
+
+    /// [`Self::setup_plain`] with a padded digit basis: values are signed
+    /// `digits`-bit, decomposed over a power-of-two `width` whose top
+    /// `width − digits` columns carry zero weight (and are forced to zero
+    /// bits by the pattern check). Used by zkSGD, whose update remainders
+    /// are (R + lr)-bit — not a power of two.
+    pub fn setup_plain_digits(
+        label: &[u8],
+        blind_h: G1Affine,
+        n: usize,
+        width: usize,
+        digits: usize,
+    ) -> Self {
+        assert!(width.is_power_of_two());
+        assert!((2..=width).contains(&digits));
+        let key = (label.to_vec(), n, width, digits);
         if let Some(vb) = VBASES_CACHE.lock().unwrap().get(&key) {
             return vb.clone();
         }
@@ -94,6 +123,7 @@ impl ValidityBases {
             blind_h,
             n,
             width,
+            digits,
             label: label.to_vec(),
         };
         VBASES_CACHE.lock().unwrap().insert(key, vb.clone());
@@ -110,20 +140,37 @@ impl ValidityBases {
 
 /// The signed digit basis s_W = (1, 2, …, 2^{W−2}, −2^{W−1}).
 pub fn s_basis(width: usize) -> Vec<Fr> {
-    let mut s: Vec<Fr> = (0..width - 1)
+    s_basis_digits(width, width)
+}
+
+/// Padded signed digit basis: (1, 2, …, 2^{D−2}, −2^{D−1}, 0, …, 0) with
+/// `digits` active columns out of `width`. Recomposition ⟨bits, s⟩ over
+/// binary digits spans exactly [−2^{D−1}, 2^{D−1}), so the zero-weight tail
+/// lets a non-power-of-two bit budget ride a power-of-two e_bit table.
+pub fn s_basis_digits(width: usize, digits: usize) -> Vec<Fr> {
+    assert!((2..=width).contains(&digits));
+    let mut s: Vec<Fr> = (0..digits - 1)
         .map(|j| Fr::from_u128(1u128 << j))
         .collect();
-    s.push(-Fr::from_u128(1u128 << (width - 1)));
+    s.push(-Fr::from_u128(1u128 << (digits - 1)));
+    s.resize(width, Fr::ZERO);
     s
 }
 
-/// Bit-decompose signed values into the 2N×W matrices B (bits) and
-/// B′ (B − 1 on active cells). `zero_top_bit_rows`: number of leading rows
-/// whose column W−1 must be zero in B *and* B′ (the Z″ block's "|0" pad —
-/// those rows' values are unsigned (W−1)-bit).
+/// Bit-decompose signed `digits`-bit values into the 2N×W matrices B (bits)
+/// and B′ (B − 1 on active cells). Columns ≥ `digits` are zero-weight pads
+/// with B = B′ = 0. `zero_top_bit_rows`: number of leading rows whose sign
+/// column `digits−1` must also be zero in B *and* B′ (the Z″ block's "|0"
+/// pad — those rows' values are unsigned (digits−1)-bit).
 ///
 /// Returns (B, B′) flattened row-major (i·W + j).
-pub fn bit_matrices(values: &[Fr], width: usize, zero_top_bit_rows: usize) -> (Vec<Fr>, Vec<Fr>) {
+pub fn bit_matrices(
+    values: &[Fr],
+    width: usize,
+    digits: usize,
+    zero_top_bit_rows: usize,
+) -> (Vec<Fr>, Vec<Fr>) {
+    assert!((2..=width).contains(&digits));
     let rows = values.len();
     let mut b = vec![Fr::ZERO; rows * width];
     let mut bp = vec![Fr::ZERO; rows * width];
@@ -132,23 +179,28 @@ pub fn bit_matrices(values: &[Fr], width: usize, zero_top_bit_rows: usize) -> (V
             .to_i128()
             .expect("auxiliary value too large for bit decomposition");
         let pad_top = i < zero_top_bit_rows;
+        let half = 1i128 << (digits - 1);
         let mag = if pad_top {
             assert!(
-                (0..(1i128 << (width - 1))).contains(&signed),
+                (0..half).contains(&signed),
                 "unsigned aux value out of range"
             );
             signed as u128
         } else {
             assert!(
-                (-(1i128 << (width - 1))..(1i128 << (width - 1))).contains(&signed),
+                (-half..half).contains(&signed),
                 "signed aux value out of range"
             );
-            // <bits, s_W> = v: magnitude part = v + 2^{W-1}·sign
-            (signed + ((signed < 0) as i128) * (1i128 << (width - 1))) as u128
+            // <bits, s> = v: magnitude part = v + 2^{D-1}·sign
+            (signed + ((signed < 0) as i128) * half) as u128
         };
         let sign_bit = !pad_top && signed < 0;
         for j in 0..width {
-            let bit = if j == width - 1 {
+            if j >= digits {
+                // zero-weight pad column: B = B′ = 0
+                continue;
+            }
+            let bit = if j == digits - 1 {
                 if pad_top {
                     // pad cell: B = B′ = 0
                     continue;
@@ -200,7 +252,11 @@ pub fn protocol1_main(
     let n = bases.n;
     assert_eq!(values.len(), 2 * n);
     assert_eq!(sign.len(), n);
-    let (b, bp) = bit_matrices(values, bases.width, n);
+    assert_eq!(
+        bases.digits, bases.width,
+        "main instance requires the full digit width (sign-column coupling)"
+    );
+    let (b, bp) = bit_matrices(values, bases.width, bases.width, n);
     let rho = Fr::random(rng);
     let com_b_ip = (msm(&bases.big_g, &b)
         + msm(&bases.big_h, &bp)
@@ -228,15 +284,15 @@ pub fn protocol1_main(
     )
 }
 
-/// Protocol 1 (remainder instance): all 2N rows are signed W-bit values, no
-/// sign-tensor coupling.
+/// Protocol 1 (remainder instance): all 2N rows are signed `digits`-bit
+/// values, no sign-tensor coupling.
 pub fn protocol1_plain(
     bases: &ValidityBases,
     values: &[Fr],
     rng: &mut Rng,
 ) -> (Protocol1Msg, ProverAux) {
     assert_eq!(values.len(), 2 * bases.n);
-    let (b, bp) = bit_matrices(values, bases.width, 0);
+    let (b, bp) = bit_matrices(values, bases.width, bases.digits, 0);
     let rho = Fr::random(rng);
     let com_b_ip = (msm(&bases.big_g, &b)
         + msm(&bases.big_h, &bp)
@@ -311,9 +367,10 @@ fn build_vectors(
     ch: &Challenges,
     e_row: &[Fr],
     width: usize,
+    digits: usize,
     n: usize,
 ) -> (Vec<Fr>, Vec<Fr>) {
-    let s_w = s_basis(width);
+    let s_w = s_basis_digits(width, digits);
     let total = 2 * n * width;
     let mut a = Vec::with_capacity(total);
     let mut b = Vec::with_capacity(total);
@@ -342,6 +399,7 @@ fn build_vectors(
 fn targets(
     ch: &Challenges,
     width: usize,
+    digits: usize,
     u_dd: Fr,
     v: Fr,
     v_sign: Fr,
@@ -355,7 +413,15 @@ fn targets(
         let v_k_prime = Fr::ONE + (ch.k - Fr::ONE) * beta * (Fr::ONE - u_dd);
         (v_k, v_k_prime)
     } else {
-        (v, Fr::ONE)
+        // pattern target (B − B′)~(u_bit): 1 on a full-width instance
+        // (Σ_j e_bit[j] = 1); with zero-weight pad columns only the active
+        // digits contribute, forcing pad cells to B = B′ = 0.
+        let v_k_prime = if digits == width {
+            Fr::ONE
+        } else {
+            (0..digits).map(|j| eq_eval_index(&ch.u_bit, j)).sum()
+        };
+        (v, v_k_prime)
     };
     let z = ch.z;
     z * z * z - (Fr::ONE - v_k) * z.square() + z * v_k_prime
@@ -363,8 +429,8 @@ fn targets(
 
 /// The public scalar vector w_pub with H^{w_pub} entering P (Algorithm 1):
 /// w_pub[i,j] = z²·s_W[j]/e_bit[j] + z.
-fn w_pub(ch: &Challenges, width: usize, n: usize) -> Vec<Fr> {
-    let s_w = s_basis(width);
+fn w_pub(ch: &Challenges, width: usize, digits: usize, n: usize) -> Vec<Fr> {
+    let s_w = s_basis_digits(width, digits);
     let mut inv_ebit = ch.e_bit.clone();
     Fr::batch_invert(&mut inv_ebit);
     let mut col = Vec::with_capacity(width);
@@ -393,10 +459,12 @@ pub fn prove_validity(
 ) -> ValidityProof {
     let n = bases.n;
     let width = bases.width;
+    let digits = bases.digits;
     let main = aux.sign.is_some();
+    assert!(!main || digits == width, "main instance is full-width");
     let ch = draw_challenges(width, transcript, main);
-    let (a, b) = build_vectors(aux, &ch, e_row, width, n);
-    let t = targets(&ch, width, u_dd, v, v_sign, main);
+    let (a, b) = build_vectors(aux, &ch, e_row, width, digits, n);
+    let t = targets(&ch, width, digits, u_dd, v, v_sign, main);
 
     // The transformed basis H′ = H^{e^{∘−1}} stays *virtual*: both prover
     // and verifier fold e^{∘−1} into their MSM scalars (§Perf — avoids
@@ -480,11 +548,16 @@ pub fn verify_validity_accum(
 ) -> Result<()> {
     let n = bases.n;
     let width = bases.width;
+    let digits = bases.digits;
     let main = p1.com_sign_prime.is_some();
     ensure!(main == com_sign.is_some(), "validity: instance mismatch");
+    ensure!(
+        !main || digits == width,
+        "validity: main instance is full-width"
+    );
     ensure!(e_row.len() == 2 * n, "validity: e_row length mismatch");
     let ch = draw_challenges(width, transcript, main);
-    let t = targets(&ch, width, u_dd, v, v_sign, main);
+    let t = targets(&ch, width, digits, u_dd, v, v_sign, main);
 
     let mut com_terms: Vec<(Fr, G1)> = vec![(Fr::ONE, p1.com_b_ip.to_projective())];
     if main {
@@ -495,7 +568,7 @@ pub fn verify_validity_accum(
     }
     let total = 2 * n * width;
     let g_pub = vec![-ch.z; total];
-    let h_pub = w_pub(&ch, width, n);
+    let h_pub = w_pub(&ch, width, digits, n);
 
     // verify against virtual basis H′ = H^{e^{∘−1}}
     let mut e_inv: Vec<Fr> = (0..total)
@@ -687,7 +760,106 @@ mod tests {
         // the honest decomposition path panics, and any forged bit matrix
         // fails (16)–(18) w.h.p. (covered by validity_rejects_wrong_claim).
         let vals = vec![Fr::from_u64(1 << 7); 2]; // width 8 ⇒ max 127
-        bit_matrices(&vals, 8, 2);
+        bit_matrices(&vals, 8, 8, 2);
+    }
+
+    /// Roundtrip of a padded-digit plain instance (the zkSGD remainder
+    /// shape: signed `digits`-bit values, digits < width). When `tamper`
+    /// swaps in a forged full-width decomposition, verification must fail.
+    fn padded_digit_instance(digits: usize, forge_out_of_range: bool) -> Result<()> {
+        let mut r = rng();
+        let (n, width) = (8usize, 16usize);
+        let blind_h = crate::curve::hash_to_curve(b"upd-test-blind", 0);
+        let label = format!("zkrelu-upd-test-{digits}-{forge_out_of_range}");
+        let bases =
+            ValidityBases::setup_plain_digits(label.as_bytes(), blind_h, n, width, digits);
+        let half = 1i64 << (digits - 1);
+        let mut vals: Vec<Fr> = (0..2 * n)
+            .map(|_| Fr::from_i64(r.gen_i64(-half, half)))
+            .collect();
+
+        let (p1, aux) = if forge_out_of_range {
+            // a value outside the digit range but inside the full width:
+            // forge its decomposition over all `width` columns (pad bits
+            // set) — the verifier's padded pattern target must reject it
+            vals[3] = Fr::from_i64(half + 3);
+            let (b, bp) = bit_matrices(&vals, width, width, 0);
+            let rho = Fr::random(&mut r);
+            let com_b_ip = (msm(&bases.big_g, &b)
+                + msm(&bases.big_h, &bp)
+                + bases.blind_h.to_projective().mul(&rho))
+            .to_affine();
+            (
+                Protocol1Msg {
+                    com_b_ip,
+                    com_sign_prime: None,
+                },
+                ProverAux {
+                    b,
+                    bp,
+                    rho,
+                    sign: None,
+                    rho_sign: Fr::ZERO,
+                    rho_sign_prime: Fr::ZERO,
+                },
+            )
+        } else {
+            protocol1_plain(&bases, &vals, &mut r)
+        };
+
+        let mut t = Transcript::new(b"vu");
+        t.absorb_point(b"p1", &p1.com_b_ip);
+        let u_dd = Fr::random(&mut r);
+        let log_n = n.trailing_zeros() as usize;
+        let rho_pt: Vec<Fr> = (0..log_n).map(|_| Fr::random(&mut r)).collect();
+        let v_lo = Mle::new(vals[..n].to_vec()).evaluate(&rho_pt);
+        let v_hi = Mle::new(vals[n..].to_vec()).evaluate(&rho_pt);
+        let v = (Fr::ONE - u_dd) * v_lo + u_dd * v_hi;
+        let mut point = vec![u_dd];
+        point.extend_from_slice(&rho_pt);
+        let e_row = eq_table(&point);
+        let proof =
+            prove_validity(&bases, &aux, &e_row, u_dd, v, Fr::ZERO, &mut t.clone(), &mut r);
+        verify_validity(
+            &bases,
+            &p1,
+            None,
+            &e_row,
+            u_dd,
+            v,
+            Fr::ZERO,
+            &proof,
+            &mut t.clone(),
+        )
+    }
+
+    #[test]
+    fn padded_digit_instance_accepts_honest() {
+        // 11 active digits over width 16: the zkSGD remainder shape
+        padded_digit_instance(11, false).expect("padded-digit instance verifies");
+    }
+
+    #[test]
+    fn padded_digit_instance_rejects_out_of_range_value() {
+        assert!(
+            padded_digit_instance(11, true).is_err(),
+            "a value ≥ 2^{{digits−1}} forged via the pad columns must not verify"
+        );
+    }
+
+    #[test]
+    fn padded_digit_basis_recomposes_exact_range() {
+        let (width, digits) = (16usize, 11usize);
+        let s = s_basis_digits(width, digits);
+        assert_eq!(s.len(), width);
+        assert!(s[digits..].iter().all(|v| v.is_zero()));
+        let half = 1i64 << (digits - 1);
+        for v in [0i64, 1, -1, half - 1, -half, 37, -1000] {
+            let (b, _) = bit_matrices(&[Fr::from_i64(v)], width, digits, 0);
+            let recomposed: Fr = (0..width).map(|j| b[j] * s[j]).sum();
+            assert_eq!(recomposed, Fr::from_i64(v), "v={v}");
+            assert!(b[digits..].iter().all(|x| x.is_zero()));
+        }
     }
 
     #[test]
@@ -698,7 +870,7 @@ mod tests {
         let n = 4;
         let mut vals: Vec<Fr> = (0..n).map(|_| Fr::from_i64(r.gen_i64(0, half))).collect();
         vals.extend((0..n).map(|_| Fr::from_i64(r.gen_i64(-half, half))));
-        let (b, bp) = bit_matrices(&vals, width, n);
+        let (b, bp) = bit_matrices(&vals, width, width, n);
         let s = s_basis(width);
         for i in 0..2 * n {
             let recomposed: Fr = (0..width).map(|j| b[i * width + j] * s[j]).sum();

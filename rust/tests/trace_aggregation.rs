@@ -4,7 +4,11 @@
 //! in `integration.rs` — a tampered step witness *inside* a trace must make
 //! `verify_trace` fail.
 
-use zkdl::aggregate::{prove_trace, trace_stack_dims, verify_trace, TraceKey};
+use zkdl::aggregate::{
+    prove_trace, prove_trace_chained, trace_stack_dims, verify_trace, verify_traces_batch,
+    TraceKey,
+};
+use zkdl::curve::G1;
 use zkdl::data::Dataset;
 use zkdl::model::{ModelConfig, Weights};
 use zkdl::util::rng::Rng;
@@ -138,6 +142,109 @@ fn rejects_tampered_trace_proof_scalar() {
     let mut proof = prove_trace(&tk, &wits, &mut rng);
     proof.v_z[1] += Fr::ONE;
     assert!(verify_trace(&tk, &proof).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// zkSGD chained traces
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chained_trace_roundtrip_with_boundary_padding() {
+    // T=3 → 2 boundaries pad to B̄=2; depth 2 exercises the layer axis
+    let cfg = ModelConfig::new(2, 8, 4);
+    let wits = witness_chain(cfg, 3, 21);
+    let tk = TraceKey::setup(cfg, 3);
+    let mut rng = Rng::seed_from_u64(31);
+    let proof = prove_trace_chained(&tk, &wits, &mut rng).expect("witnesses chain");
+    assert!(proof.chain.is_some());
+    verify_trace(&tk, &proof).expect("chained trace verifies");
+    // the chain argument costs commitments + 3 IPAs + 1 validity instance
+    let chain = proof.chain.as_ref().unwrap();
+    assert_eq!(chain.com_ru.len(), 2);
+    assert_eq!(chain.openings.len(), 3);
+}
+
+#[test]
+fn chained_trace_roundtrip_depth1_and_depth3() {
+    for depth in [1usize, 3] {
+        let cfg = ModelConfig::new(depth, 8, 4);
+        let wits = witness_chain(cfg, 2, 22 + depth as u64);
+        let tk = TraceKey::setup(cfg, 2);
+        let mut rng = Rng::seed_from_u64(32);
+        let proof = prove_trace_chained(&tk, &wits, &mut rng).expect("witnesses chain");
+        verify_trace(&tk, &proof).expect("chained trace verifies");
+    }
+}
+
+#[test]
+fn chained_prover_rejects_witnesses_that_do_not_chain() {
+    // an out-of-range update remainder (broken boundary) cannot even be
+    // witnessed: the chain builder reports the exact boundary and layer
+    let cfg = ModelConfig::new(2, 8, 4);
+    let mut wits = witness_chain(cfg, 3, 23);
+    wits[2].layers[0].w[7] += 1; // step 2's weights are not step 1's update
+    let tk = TraceKey::setup(cfg, 3);
+    let mut rng = Rng::seed_from_u64(33);
+    let err = prove_trace_chained(&tk, &wits, &mut rng);
+    assert!(err.is_err(), "broken weight chain must not be provable");
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("boundary 1"), "error names the boundary: {msg}");
+}
+
+#[test]
+fn chained_trace_rejects_tampered_weights_gradients_and_remainders() {
+    let cfg = ModelConfig::new(2, 8, 4);
+    let wits = witness_chain(cfg, 3, 24);
+    let tk = TraceKey::setup(cfg, 3);
+    let mut rng = Rng::seed_from_u64(34);
+    let proof = prove_trace_chained(&tk, &wits, &mut rng).expect("witnesses chain");
+    verify_trace(&tk, &proof).expect("untampered chained trace verifies");
+
+    // W_{t+1} mutated: the chain's boundary openings (and the trace's own
+    // weight openings) no longer match
+    let mut bad = proof.clone();
+    bad.coms[1].com_w[0] = G1::random(&mut rng).to_affine();
+    assert!(verify_trace(&tk, &bad).is_err(), "mutated W_{{t+1}} accepted");
+
+    // G_W mutated
+    let mut bad = proof.clone();
+    bad.coms[0].com_gw[1] = G1::random(&mut rng).to_affine();
+    assert!(verify_trace(&tk, &bad).is_err(), "mutated G_W accepted");
+
+    // remainder commitment mutated: stacked opening + validity fail
+    let mut bad = proof.clone();
+    bad.chain.as_mut().unwrap().com_ru[0][0] = G1::random(&mut rng).to_affine();
+    assert!(verify_trace(&tk, &bad).is_err(), "mutated R accepted");
+
+    // a lying boundary evaluation: the derived remainder claim shifts and
+    // the opening IPAs cannot satisfy both sides
+    let mut bad = proof.clone();
+    bad.chain.as_mut().unwrap().v_w[2] += Fr::ONE;
+    assert!(verify_trace(&tk, &bad).is_err(), "lying v_w accepted");
+
+    // stripping the chain flips the transcript's chained flag
+    let mut bad = proof.clone();
+    bad.chain = None;
+    assert!(verify_trace(&tk, &bad).is_err(), "stripped chain accepted");
+
+    // grafting another trace's chain cannot satisfy Fiat–Shamir binding
+    let wits_b = witness_chain(cfg, 3, 25);
+    let proof_b = prove_trace_chained(&tk, &wits_b, &mut rng).expect("chains");
+    let mut bad = proof.clone();
+    bad.chain = proof_b.chain.clone();
+    assert!(verify_trace(&tk, &bad).is_err(), "grafted chain accepted");
+}
+
+#[test]
+fn chained_traces_batch_with_one_msm() {
+    let cfg = ModelConfig::new(2, 8, 4);
+    let tk = TraceKey::setup(cfg, 2);
+    let mut rng = Rng::seed_from_u64(35);
+    let a = prove_trace_chained(&tk, &witness_chain(cfg, 2, 26), &mut rng).expect("chains");
+    let b = prove_trace(&tk, &witness_chain(cfg, 2, 27), &mut rng);
+    let mut vrng = Rng::seed_from_u64(36);
+    verify_traces_batch(&[(&tk, &a), (&tk, &b)], &mut vrng)
+        .expect("mixed chained/unchained batch verifies with one MSM");
 }
 
 #[test]

@@ -3,7 +3,7 @@
 //! golden-bytes test pinning the versioned header so silent format drift is
 //! caught at CI time.
 
-use zkdl::aggregate::{prove_trace, verify_trace, TraceKey};
+use zkdl::aggregate::{prove_trace, prove_trace_chained, verify_trace, TraceKey};
 use zkdl::curve::{G1Affine, G1};
 use zkdl::data::Dataset;
 use zkdl::ipa::IpaProof;
@@ -102,9 +102,10 @@ fn randomized_protocol1_and_validity_roundtrips() {
 
 #[test]
 fn golden_header_bytes() {
-    // Pins the envelope layout of VERSION 2 (v2 = deferred-verification
-    // transcript schedule). If this test fails, the wire format changed:
-    // bump `wire::VERSION` and update the constants here.
+    // Pins the envelope layout of VERSION 3 (v3 = 32-byte compressed
+    // points + optional zkSGD chain payload + chained-flag transcript).
+    // If this test fails, the wire format changed: bump `wire::VERSION`
+    // and update the constants here.
     let cfg = ModelConfig::new(2, 8, 4);
     let wits = trace_witnesses(cfg, 1, 0x601d);
     let tk = TraceKey::setup(cfg, 1);
@@ -113,7 +114,7 @@ fn golden_header_bytes() {
     let bytes = encode_trace_proof(&cfg, &proof);
     let expected_header: [u8; 32] = [
         b'Z', b'K', b'D', b'L', // magic
-        0x02, 0x00, // version 2
+        0x03, 0x00, // version 3
         0x02, 0x00, // kind: trace
         0x02, 0x00, 0x00, 0x00, // depth 2
         0x08, 0x00, 0x00, 0x00, // width 8
@@ -124,9 +125,20 @@ fn golden_header_bytes() {
     ];
     assert_eq!(&bytes[..32], expected_header.as_slice());
     assert_eq!(MAGIC.as_slice(), b"ZKDL".as_slice());
-    assert_eq!(VERSION, 2);
+    assert_eq!(VERSION, 3);
     // step-count field follows the header
     assert_eq!(&bytes[32..36], 1u32.to_le_bytes().as_slice());
+}
+
+#[test]
+fn compressed_points_halve_serialized_point_size() {
+    // v3 serializes points compressed: the wire cost of one point is the
+    // 4-byte vector prefix amortized out — spot-check via a bare roundtrip
+    let mut rng = Rng::seed_from_u64(0x31e9);
+    let p = random_point(&mut rng);
+    let mut w = WireWriter::new();
+    w.put(&p);
+    assert_eq!(w.finish().len(), 32);
 }
 
 fn trace_witnesses(cfg: ModelConfig, steps: usize, seed: u64) -> Vec<zkdl::witness::StepWitness> {
@@ -172,6 +184,27 @@ fn trace_proof_disk_roundtrip_verifies() {
     // out-of-process verification: keys rebuilt from the file alone
     let tk2 = TraceKey::setup(cfg2, decoded.steps);
     verify_trace(&tk2, &decoded).expect("decoded trace verifies");
+}
+
+#[test]
+fn chained_trace_proof_disk_roundtrip_verifies() {
+    let cfg = ModelConfig::new(2, 8, 4);
+    let wits = trace_witnesses(cfg, 3, 0xd15e);
+    let tk = TraceKey::setup(cfg, 3);
+    let mut rng = Rng::seed_from_u64(24);
+    let proof = prove_trace_chained(&tk, &wits, &mut rng).expect("witnesses chain");
+    let bytes = encode_trace_proof(&cfg, &proof);
+    let (cfg2, decoded) = decode_trace_proof(&bytes).expect("decodes");
+    assert_eq!(cfg, cfg2);
+    assert!(decoded.chain.is_some());
+    assert_eq!(bytes, encode_trace_proof(&cfg2, &decoded));
+    let tk2 = TraceKey::setup(cfg2, decoded.steps);
+    verify_trace(&tk2, &decoded).expect("decoded chained trace verifies");
+    // a chained proof with a boundary-count mismatch must not decode
+    let mut truncated = proof.clone();
+    truncated.chain.as_mut().unwrap().com_ru.pop();
+    let bad = encode_trace_proof(&cfg, &truncated);
+    assert!(decode_trace_proof(&bad).is_err());
 }
 
 #[test]
