@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
         "chained trace proof: {:.1} kB total, {:.1} kB of it the chain ({} boundaries, {} wire bytes)",
         proof.size_bytes() as f64 / 1024.0,
         chain.size_bytes() as f64 / 1024.0,
-        chain.com_ru.len(),
+        chain.v_gw.len() / cfg.depth,
         bytes.len(),
     );
 

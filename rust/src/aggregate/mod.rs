@@ -99,7 +99,9 @@ impl TraceKey {
 
 /// Validity bases for a trace; the label pins (T, L) so two traces with the
 /// same padded layout but different live extents never share an instance.
-fn trace_validity_bases(tk: &TraceKey) -> (ValidityBases, ValidityBases) {
+fn trace_validity_bases(
+    tk: &TraceKey,
+) -> (std::sync::Arc<ValidityBases>, std::sync::Arc<ValidityBases>) {
     let cfg = &tk.cfg;
     let (_, _, n) = trace_stack_dims(cfg, tk.steps);
     let t = tk.steps as u64;
@@ -323,6 +325,7 @@ pub fn prove_trace_chained(
     wits: &[StepWitness],
     rng: &mut Rng,
 ) -> Result<TraceProof> {
+    update::checked_stack_dims(&tk.cfg, wits.len()).context("chained trace")?;
     let cw = update::ChainWitness::build(wits)?;
     Ok(prove_trace_inner(tk, wits, Some(cw), rng))
 }
@@ -392,7 +395,7 @@ fn prove_trace_inner(
         absorb_step_commitments(&mut tr, t, set);
     }
     if let Some((_, cc)) = &chain_cc {
-        update::absorb_chain_ru(&mut tr, &cc.com_ru);
+        update::absorb_chain_com(&mut tr, &cc.com_u);
     }
 
     // ---- Protocol 1 over the trace stack ----
@@ -906,7 +909,7 @@ fn prove_trace_inner(
     let chain = chain_cc.map(|(uk, cc)| {
         let w_refs: Vec<&[Committed]> = scs.iter().map(|sc| sc.w.as_slice()).collect();
         let gw_refs: Vec<&[Committed]> = scs.iter().map(|sc| sc.gw.as_slice()).collect();
-        update::prove_chain(&uk, &tk.g_mat, &w_refs, &gw_refs, &cc, &mut tr, rng)
+        update::prove_chain(&uk, &tk.g_mat, &w_refs, &gw_refs, cc, &mut tr, rng)
     });
 
     TraceProof {
@@ -1013,7 +1016,7 @@ pub fn verify_trace_accum(
         absorb_step_commitments(&mut tr, t, set);
     }
     if let Some(chain) = &proof.chain {
-        update::absorb_chain_ru(&mut tr, &chain.com_ru);
+        update::absorb_chain_com(&mut tr, &chain.com_u);
     }
 
     let (vb_main, vb_rem) = trace_validity_bases(tk);
@@ -1467,6 +1470,9 @@ pub fn verify_trace_accum(
 
     // ---- Phase 5: zkSGD chain argument (chained traces only) ----
     if let Some(chain) = &proof.chain {
+        // key setup asserts on invalid dimensions; fail cleanly on
+        // untrusted proofs instead (the wire decoder rejects these too)
+        update::checked_stack_dims(cfg, t_steps).context("chained trace")?;
         let uk = UpdateKey::setup(*cfg, t_steps);
         update::verify_chain_accum(&uk, &tk.g_mat, &proof.coms, chain, &mut tr, acc)
             .context("zkSGD chain")?;
@@ -1479,24 +1485,17 @@ pub fn verify_trace_accum(
 mod tests {
     use super::*;
     use crate::data::Dataset;
-    use crate::model::Weights;
-    use crate::witness::native::compute_witness;
+    use crate::witness::native::sgd_witness_chain;
 
     /// T consecutive SGD-step witnesses (weights actually updated between
-    /// steps, as the coordinator would).
+    /// steps, as the coordinator would), validated before use.
     pub(crate) fn witness_chain(cfg: ModelConfig, steps: usize, seed: u64) -> Vec<StepWitness> {
-        let mut rng = Rng::seed_from_u64(seed);
         let ds = Dataset::synthetic(64, cfg.width / 2, 4, cfg.r_bits, seed ^ 0x77);
-        let mut weights = Weights::init(cfg, &mut rng);
-        let mut out = Vec::with_capacity(steps);
-        for step in 0..steps {
-            let (x, y) = ds.batch(&cfg, step);
-            let wit = compute_witness(cfg, &x, &y, &weights);
+        let wits = sgd_witness_chain(cfg, &ds, steps, seed);
+        for wit in &wits {
             wit.validate().expect("witness valid");
-            weights.apply_update(&wit.weight_grads());
-            out.push(wit);
         }
-        out
+        wits
     }
 
     #[test]

@@ -306,6 +306,13 @@ pub fn train_and_prove_trace(
 ) -> Result<TraceRunReport> {
     ensure!(opts.steps > 0 && opts.pipeline_depth > 0);
     let window = if opts.window == 0 { opts.steps } else { opts.window };
+    // window = 1 would hit the 1-step fallback on EVERY window: the run
+    // would silently produce only unchained proofs while the caller asked
+    // for chained ones
+    ensure!(
+        !opts.chained || window >= 2,
+        "chained proving needs windows of at least two steps (window = 1 chains nothing)"
+    );
     let mut rng = Rng::seed_from_u64(opts.seed);
     let mut weights = Weights::init(cfg, &mut rng);
     let source = WitnessSource::auto(artifact_dir, cfg);

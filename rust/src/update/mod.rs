@@ -13,23 +13,33 @@
 //! ```
 //!
 //! and the remainder range makes the decomposition unique: proving it proves
-//! the exact rounded update. Per step boundary t→t+1 and layer ℓ the prover
-//! commits the remainder tensor R (d² entries) into block (t·L̄ + ℓ) of a
-//! stacked basis, then
+//! the exact rounded update. The prover lays every boundary/layer remainder
+//! tensor R (d² entries, boundary b / layer ℓ in block b·L̄ + ℓ) into ONE
+//! stacked tensor U of size B̄·L̄·d² and commits it with a single Pedersen
+//! commitment `com_u` on the `zkdl/trace-aux/upd` basis. One commitment —
+//! not one per block — is what makes the argument sound: every sub-claim
+//! below opens the *same* committed vector, so a block's content cannot be
+//! smuggled into another block or cancelled across commitments. Then
 //!
 //! * **linear part, checked homomorphically against the already-committed
 //!   tensors**: one transcript point p over the d² weight-index space; the
 //!   batched-opening engine opens every W̃_t(p) and G̃_W(p) (one RLC'd IPA on
-//!   the shared `zkdl/mat` basis) and opens each R̃(p) against the claimed
-//!   value G̃_W(p) − 2^S·(W̃_t(p) − W̃_{t+1}(p)) — the verifier *derives* the
-//!   remainder claims from the weight/gradient claims, so the boundary
-//!   relation holds iff the openings do (Schwartz–Zippel over p);
-//! * **range part**: the stacked remainders feed one zkReLU Protocol-1 /
+//!   the shared `zkdl/mat` basis), and the verifier *derives* each boundary's
+//!   remainder claim G̃_W(p) − 2^S·(W̃_t(p) − W̃_{t+1}(p)). A fresh challenge
+//!   γ then folds the live blocks of U into one opening: the public vector
+//!   puts γⁱ·e(p) in live block i and zero in every pad block, so
+//!   ⟨U, ·⟩ = Σᵢ γⁱ·Ũᵢ(p) and Schwartz–Zippel over γ pins *each* live
+//!   block's MLE at p to its derived claim (equivalently: the stacked MLE
+//!   opened at (bits(slotᵢ) ∥ p), γ-batched). The boundary relation holds
+//!   iff the openings do (Schwartz–Zippel over p);
+//! * **range part**: the same stacked tensor U feeds one zkReLU Protocol-1 /
 //!   Algorithm-1 validity instance over the padded digit basis
 //!   ([`crate::zkrelu::s_basis_digits`]): S = R+lr bits is not a power of
 //!   two, so the instance uses width S̄ = 2^⌈log S⌉ with zero-weight pad
 //!   columns — the pattern check forces pad bits to zero, keeping the proven
-//!   range *exactly* [−2^{S−1}, 2^{S−1}).
+//!   range *exactly* [−2^{S−1}, 2^{S−1}). The instance is bound to `com_u`
+//!   by opening U at the validity point, so the range check is entrywise on
+//!   the very tensor the linear part constrained.
 //!
 //! Everything defers into the trace's `MsmAccumulator`: a chained
 //! `TraceProof` still verifies with exactly one MSM flush. See
@@ -38,7 +48,7 @@
 use crate::aggregate::StepCommitmentSet;
 use crate::commit::{ComExpr, CommitKey};
 use crate::curve::accum::MsmAccumulator;
-use crate::curve::{G1, G1Affine};
+use crate::curve::G1Affine;
 use crate::field::Fr;
 use crate::ipa::{self, EvalClaim, IpaProof};
 use crate::model::ModelConfig;
@@ -46,19 +56,37 @@ use crate::poly::eq_table;
 use crate::transcript::Transcript;
 use crate::util::rng::Rng;
 use crate::witness::StepWitness;
-use crate::zkdl::{commit, frs, tile_claims_at, tiled_eq, Committed};
+use crate::zkdl::{commit, frs, Committed};
 use crate::zkrelu::{self, Protocol1Msg, ProverAux, ValidityBases, ValidityProof};
 use anyhow::{ensure, Context, Result};
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// Padded boundary count B̄ = (T−1)̄, padded layer count L̄, and the stacked
 /// remainder size N_U = B̄·L̄·d². Boundary b's layer ℓ owns block (b·L̄ + ℓ).
+/// Panics on invalid dimensions — callers on untrusted input must guard
+/// with [`checked_stack_dims`] first.
 pub fn update_stack_dims(cfg: &ModelConfig, steps: usize) -> (usize, usize, usize) {
-    assert!(steps >= 2, "chaining needs at least two steps");
+    checked_stack_dims(cfg, steps).expect("invalid update stack dimensions")
+}
+
+/// [`update_stack_dims`] that reports too-few steps, overflow, and the
+/// degenerate 1-element stack (width 1, depth 1, one boundary — the chain
+/// argument cannot run on it) as errors instead of panicking. The single
+/// source of the size formula: the wire decoder, `prove_trace_chained`,
+/// and `verify_trace_accum` all guard with this before any key setup.
+pub fn checked_stack_dims(cfg: &ModelConfig, steps: usize) -> Result<(usize, usize, usize)> {
+    ensure!(steps >= 2, "chaining needs at least two steps");
     let bbar = (steps - 1).next_power_of_two();
     let lbar = cfg.depth.next_power_of_two();
-    let n = bbar * lbar * cfg.width * cfg.width;
-    assert!(n >= 2, "degenerate update stack");
-    (bbar, lbar, n)
+    let n = bbar
+        .checked_mul(lbar)
+        .and_then(|x| x.checked_mul(cfg.width))
+        .and_then(|x| x.checked_mul(cfg.width))
+        .context("update stack dimensions overflow")?;
+    ensure!(n >= 2, "degenerate update stack");
+    Ok((bbar, lbar, n))
 }
 
 /// Active digit count S = R + lr of an update remainder and the padded
@@ -77,32 +105,38 @@ pub struct UpdateKey {
     pub g_upd: CommitKey,
 }
 
+#[allow(clippy::type_complexity)]
+static UPDKEY_CACHE: Lazy<
+    Mutex<HashMap<((usize, usize, usize, u32, u32, u32), usize), Arc<UpdateKey>>>,
+> = Lazy::new(|| Mutex::new(HashMap::new()));
+
 impl UpdateKey {
-    pub fn setup(cfg: ModelConfig, steps: usize) -> Self {
+    /// Derive (or fetch) the key for (cfg, steps). Cached behind an `Arc`
+    /// like the zkReLU `VBASES_CACHE`: `CommitKey::setup` already caches the
+    /// hash-to-curve derivation, but `verify_trace_accum` runs once per
+    /// proof and cloning a B̄·L̄·d²-point basis per verified proof is a
+    /// measurable cost under batched multi-proof verification.
+    pub fn setup(cfg: ModelConfig, steps: usize) -> Arc<Self> {
+        let cfg_key = (cfg.depth, cfg.width, cfg.batch, cfg.r_bits, cfg.q_bits, cfg.lr_shift);
+        let key = (cfg_key, steps);
+        if let Some(uk) = UPDKEY_CACHE.lock().unwrap().get(&key) {
+            return uk.clone();
+        }
         let (_, _, n) = update_stack_dims(&cfg, steps);
-        Self {
+        let uk = Arc::new(Self {
             cfg,
             steps,
             g_upd: CommitKey::setup(b"zkdl/trace-aux/upd", n),
-        }
-    }
-
-    /// Commitment key slice for boundary b / layer ℓ's remainder block.
-    pub fn block(&self, b: usize, l: usize) -> CommitKey {
-        let d2 = self.cfg.width * self.cfg.width;
-        let lbar = self.cfg.depth.next_power_of_two();
-        let s = b * lbar + l;
-        CommitKey {
-            g: self.g_upd.g[s * d2..(s + 1) * d2].to_vec(),
-            h: self.g_upd.h,
-            label: self.g_upd.label.clone(),
-        }
+        });
+        UPDKEY_CACHE.lock().unwrap().insert(key, uk.clone());
+        uk
     }
 }
 
 /// Validity bases for the remainder range instance; the label pins (T, L)
-/// like the trace validity labels do.
-fn update_validity_bases(uk: &UpdateKey) -> ValidityBases {
+/// like the trace validity labels do. Arc-cached inside `VBASES_CACHE`, so
+/// repeated calls (prove + per-proof verify) never clone the bases.
+fn update_validity_bases(uk: &UpdateKey) -> Arc<ValidityBases> {
     let (_, _, n) = update_stack_dims(&uk.cfg, uk.steps);
     let (digits, width) = update_widths(&uk.cfg);
     let t = uk.steps as u64;
@@ -125,19 +159,65 @@ fn dot(a: &[Fr], b: &[Fr]) -> Fr {
     a.iter().zip(b.iter()).map(|(x, y)| *x * *y).sum()
 }
 
+/// γ-folded slot selector over the stacked basis: block `slots[i]` of the
+/// returned length-`n` vector carries γⁱ·e, every other block — pads
+/// included — is zero. Pairing the stacked tensor U with it gives
+/// Σᵢ γⁱ·⟨U_blockᵢ, e⟩, i.e. the γ-batch of the per-block MLE openings
+/// (block i's weight equals eq((bits(slotᵢ) ∥ p), ·) scaled by γⁱ, since
+/// eq at boolean slot bits is the slot indicator). This is what binds each
+/// live block *individually* — a tiled e (same weight in every block) would
+/// only constrain the sum over blocks, letting mass hide in pad blocks or
+/// cancel across boundaries.
+fn gamma_selected_eq(e: &[Fr], n: usize, slots: &[usize], gamma: Fr) -> Vec<Fr> {
+    let d = e.len();
+    let mut out = vec![Fr::ZERO; n];
+    let mut coeff = Fr::ONE;
+    for &s in slots {
+        for (o, x) in out[s * d..(s + 1) * d].iter_mut().zip(e.iter()) {
+            *o = coeff * *x;
+        }
+        coeff *= gamma;
+    }
+    out
+}
+
+/// Σᵢ γⁱ·valsᵢ — the claimed-value side of [`gamma_selected_eq`].
+fn gamma_fold(vals: &[Fr], gamma: Fr) -> Fr {
+    let mut coeff = Fr::ONE;
+    let mut acc = Fr::ZERO;
+    for v in vals {
+        acc += coeff * *v;
+        coeff *= gamma;
+    }
+    acc
+}
+
+/// Live block indices in claim order (boundary-major): slot b·L̄ + ℓ.
+fn live_slots(nb: usize, depth: usize, lbar: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(nb * depth);
+    for b in 0..nb {
+        for l in 0..depth {
+            out.push(b * lbar + l);
+        }
+    }
+    out
+}
+
 /// The chain argument appended to a [`crate::aggregate::TraceProof`].
 #[derive(Clone, Debug)]
 pub struct ChainProof {
-    /// Per-boundary, per-layer remainder commitments, (T−1)×L.
-    pub com_ru: Vec<Vec<G1Affine>>,
+    /// The single commitment to the stacked remainder tensor U (all T−1
+    /// boundaries × L layers, pad blocks zero) on `g_upd`.
+    pub com_u: G1Affine,
     pub p1_upd: Protocol1Msg,
     /// W̃ evaluations at the boundary point, step-major, length T·L.
     pub v_w: Vec<Fr>,
     /// G̃_W evaluations at the boundary point for steps 0..T−1, (T−1)·L.
     pub v_gw: Vec<Fr>,
-    /// Stacked R̃ evaluation at the validity point.
+    /// Stacked Ũ evaluation at the validity point.
     pub v_stack: Fr,
-    /// Opening IPAs: [W+G_W @ p, R @ p (tiled), stacked R @ validity point].
+    /// Opening IPAs: [W+G_W @ p, γ-folded live blocks of U @ p,
+    /// U @ validity point].
     pub openings: Vec<IpaProof>,
     pub validity: ValidityProof,
 }
@@ -146,7 +226,7 @@ impl ChainProof {
     /// Compressed-point accounting, matching
     /// [`crate::aggregate::TraceProof::size_bytes`].
     pub fn size_bytes(&self) -> usize {
-        let coms: usize = self.com_ru.iter().map(|row| row.len()).sum();
+        let coms = 1; // com_u
         let scalars = self.v_w.len() + self.v_gw.len() + 1;
         let openings: usize = self.openings.iter().map(|o| o.size_bytes()).sum();
         (coms + scalars) * 32 + 32 + openings + self.validity.size_bytes()
@@ -177,12 +257,11 @@ impl ChainWitness {
 /// challenge is drawn (the trace absorbs them up front, alongside the step
 /// commitments, so the shared-randomness property extends to the chain).
 pub(crate) struct ChainCommitments {
-    pub(crate) ru: Vec<Vec<Committed>>,
-    pub(crate) com_ru: Vec<Vec<G1Affine>>,
+    /// The stacked remainder tensor U with its single opening (blind).
+    pub(crate) u: Committed,
+    pub(crate) com_u: G1Affine,
     pub(crate) p1: Protocol1Msg,
     pub(crate) aux: ProverAux,
-    /// The stacked remainder tensor, length N_U (padding slots zero).
-    pub(crate) stacked: Vec<Fr>,
 }
 
 pub(crate) fn commit_chain(uk: &UpdateKey, cw: &ChainWitness, rng: &mut Rng) -> ChainCommitments {
@@ -191,40 +270,25 @@ pub(crate) fn commit_chain(uk: &UpdateKey, cw: &ChainWitness, rng: &mut Rng) -> 
     let d2 = cfg.width * cfg.width;
     let (_, lbar, n_upd) = update_stack_dims(cfg, uk.steps);
     assert_eq!(cw.rems.len(), uk.steps - 1, "boundary count mismatch");
-    let mut ru = Vec::with_capacity(cw.rems.len());
     let mut stacked = vec![Fr::ZERO; n_upd];
     for (b, per_layer) in cw.rems.iter().enumerate() {
         assert_eq!(per_layer.len(), depth, "layer count mismatch");
-        let mut row = Vec::with_capacity(depth);
         for (l, vals) in per_layer.iter().enumerate() {
             let s = b * lbar + l;
             stacked[s * d2..(s + 1) * d2].copy_from_slice(vals);
-            row.push(commit(&uk.block(b, l), vals.clone(), rng));
         }
-        ru.push(row);
     }
-    let com_ru: Vec<Vec<G1Affine>> = ru
-        .iter()
-        .map(|row| G1::batch_to_affine(&row.iter().map(|c| c.com).collect::<Vec<_>>()))
-        .collect();
     let vb = update_validity_bases(uk);
     let (p1, aux) = zkrelu::protocol1_plain(&vb, &stacked, rng);
-    ChainCommitments {
-        ru,
-        com_ru,
-        p1,
-        aux,
-        stacked,
-    }
+    let u = commit(&uk.g_upd, stacked, rng);
+    let com_u = u.com.to_affine();
+    ChainCommitments { u, com_u, p1, aux }
 }
 
-/// Absorb the chain's remainder commitments (call sites: right after the
-/// per-step commitment sets, before Protocol 1 / any challenge).
-pub(crate) fn absorb_chain_ru(tr: &mut Transcript, com_ru: &[Vec<G1Affine>]) {
-    for (b, row) in com_ru.iter().enumerate() {
-        tr.absorb_u64(b"chain/boundary", b as u64);
-        tr.absorb_points(b"com/ru", row);
-    }
+/// Absorb the chain's stacked-remainder commitment (call sites: right after
+/// the per-step commitment sets, before Protocol 1 / any challenge).
+pub(crate) fn absorb_chain_com(tr: &mut Transcript, com_u: &G1Affine) {
+    tr.absorb_point(b"com/u", com_u);
 }
 
 /// The chain argument proper, appended after the trace's Phase 4. `w` and
@@ -235,17 +299,19 @@ pub(crate) fn prove_chain(
     g_mat: &CommitKey,
     w: &[&[Committed]],
     gw: &[&[Committed]],
-    cc: &ChainCommitments,
+    cc: ChainCommitments,
     tr: &mut Transcript,
     rng: &mut Rng,
 ) -> ChainProof {
+    // taken by value so the stacked tensor (up to B̄·L̄·d² field elements)
+    // is moved into the final opening instead of cloned per claim
+    let ChainCommitments { u, com_u, p1, aux } = cc;
     let cfg = &uk.cfg;
     let t_steps = uk.steps;
     let depth = cfg.depth;
     let d2 = cfg.width * cfg.width;
     let log_d2 = d2.trailing_zeros() as usize;
-    let (bbar, lbar, n_upd) = update_stack_dims(cfg, t_steps);
-    let slots = bbar * lbar;
+    let (_, lbar, n_upd) = update_stack_dims(cfg, t_steps);
     let nb = t_steps - 1;
     let two_s = two_s(cfg);
 
@@ -267,12 +333,16 @@ pub(crate) fn prove_chain(
         }
     }
     // derived remainder evaluations — the linear boundary relation at p:
-    // R̃(p) = G̃_W(p) − 2^S·(W̃_t(p) − W̃_{t+1}(p))
+    // Ũ_{b,ℓ}(p) = G̃_W(p) − 2^S·(W̃_t(p) − W̃_{t+1}(p))
     let mut v_ru = Vec::with_capacity(nb * depth);
     for b in 0..nb {
         for l in 0..depth {
             let v = v_gw[b * depth + l] - two_s * (v_w[b * depth + l] - v_w[(b + 1) * depth + l]);
-            debug_assert_eq!(v, dot(&cc.ru[b][l].values, &e_u), "chain witness drift");
+            debug_assert_eq!(
+                v,
+                dot(&u.values[(b * lbar + l) * d2..(b * lbar + l + 1) * d2], &e_u),
+                "chain witness drift"
+            );
             v_ru.push(v);
         }
     }
@@ -303,28 +373,19 @@ pub(crate) fn prove_chain(
         }
         openings.push(ipa::batch_prove_eval_expr(g_mat, &claims, &e_u, tr, rng));
     }
-    // U2: each remainder block at p, tiled over the stacked basis
+    // U2: the γ-folded live blocks of U at p. γ is drawn after p and after
+    // U1 absorbed every v_w/v_gw (which fix the derived claims), so
+    // Schwartz–Zippel over γ pins each live block's MLE at p individually.
     {
-        let mut claims = Vec::with_capacity(nb * depth);
-        let mut slot_idx = Vec::with_capacity(nb * depth);
-        for (b, row) in cc.ru.iter().enumerate() {
-            for (l, c) in row.iter().enumerate() {
-                claims.push(EvalClaim {
-                    com: c.com,
-                    values: c.values.clone(),
-                    blind: c.blind,
-                    v: v_ru[b * depth + l],
-                });
-                slot_idx.push(b * lbar + l);
-            }
-        }
-        openings.push(ipa::batch_prove_eval_expr(
-            &uk.g_upd,
-            &tile_claims_at(claims, &slot_idx, slots, d2),
-            &tiled_eq(&p_u, slots),
-            tr,
-            rng,
-        ));
+        let gamma = tr.challenge_fr(b"upd/gamma");
+        let w_sel = gamma_selected_eq(&e_u, n_upd, &live_slots(nb, depth, lbar), gamma);
+        let claim = EvalClaim {
+            com: u.com,
+            values: u.values.clone(),
+            blind: u.blind,
+            v: gamma_fold(&v_ru, gamma),
+        };
+        openings.push(ipa::batch_prove_eval_expr(&uk.g_upd, &[claim], &w_sel, tr, rng));
     }
     // validity point over the stacked remainder tensor
     let u_dd = tr.challenge_fr(b"upd/u_dd");
@@ -333,32 +394,26 @@ pub(crate) fn prove_chain(
     let mut vpoint = vec![u_dd];
     vpoint.extend_from_slice(&rho);
     let e_row = eq_table(&vpoint);
-    // ⟨stacked, e(vpoint)⟩ IS the MLE evaluation — no tensor copy needed
-    let v_stack = dot(&cc.stacked, &e_row);
-    // U3: the stacked opening binding v_stack to the summed commitments
+    // ⟨U, e(vpoint)⟩ IS the MLE evaluation — no tensor copy needed
+    let v_stack = dot(&u.values, &e_row);
+    // U3: the stacked opening binding v_stack (and thus the range instance)
+    // to com_u — the same commitment U2 constrained; the last use of the
+    // tensor, so it moves into the claim
     {
-        let mut com = G1::IDENTITY;
-        let mut blind = Fr::ZERO;
-        for row in &cc.ru {
-            for c in row {
-                com = com + c.com;
-                blind += c.blind;
-            }
-        }
         let claim = EvalClaim {
-            com,
-            values: cc.stacked.clone(),
-            blind,
+            com: u.com,
+            values: u.values,
+            blind: u.blind,
             v: v_stack,
         };
         openings.push(ipa::batch_prove_eval_expr(&uk.g_upd, &[claim], &e_row, tr, rng));
     }
     let vb = update_validity_bases(uk);
-    let validity = zkrelu::prove_validity(&vb, &cc.aux, &e_row, u_dd, v_stack, Fr::ZERO, tr, rng);
+    let validity = zkrelu::prove_validity(&vb, &aux, &e_row, u_dd, v_stack, Fr::ZERO, tr, rng);
 
     ChainProof {
-        com_ru: cc.com_ru.clone(),
-        p1_upd: cc.p1.clone(),
+        com_u,
+        p1_upd: p1,
         v_w,
         v_gw,
         v_stack,
@@ -383,15 +438,10 @@ pub(crate) fn verify_chain_accum(
     let t_steps = uk.steps;
     let depth = cfg.depth;
     let log_d2 = (cfg.width * cfg.width).trailing_zeros() as usize;
-    let (bbar, lbar, n_upd) = update_stack_dims(cfg, t_steps);
-    let slots = bbar * lbar;
+    let (_, lbar, n_upd) = update_stack_dims(cfg, t_steps);
     let nb = t_steps - 1;
 
     ensure!(coms.len() == t_steps, "chain: step commitment count");
-    ensure!(chain.com_ru.len() == nb, "chain: boundary count");
-    for row in &chain.com_ru {
-        ensure!(row.len() == depth, "chain: per-boundary layer count");
-    }
     ensure!(chain.v_w.len() == t_steps * depth, "chain: v_w length");
     ensure!(chain.v_gw.len() == nb * depth, "chain: v_gw length");
     ensure!(chain.openings.len() == 3, "chain: opening count");
@@ -439,16 +489,12 @@ pub(crate) fn verify_chain_accum(
     }
     // U2
     {
-        let mut claims = Vec::with_capacity(nb * depth);
-        for (b, row) in chain.com_ru.iter().enumerate() {
-            for (l, p) in row.iter().enumerate() {
-                claims.push((ComExpr::point(p.to_projective()), v_ru[b * depth + l]));
-            }
-        }
+        let gamma = tr.challenge_fr(b"upd/gamma");
+        let w_sel = gamma_selected_eq(&e_u, n_upd, &live_slots(nb, depth, lbar), gamma);
         ipa::batch_verify_eval_expr(
             &uk.g_upd,
-            &claims,
-            &tiled_eq(&p_u, slots),
+            &[(ComExpr::point(chain.com_u.to_projective()), gamma_fold(&v_ru, gamma))],
+            &w_sel,
             &chain.openings[1],
             tr,
             acc,
@@ -463,15 +509,9 @@ pub(crate) fn verify_chain_accum(
     let e_row = eq_table(&vpoint);
     // U3
     {
-        let stack = ComExpr::sum(
-            chain
-                .com_ru
-                .iter()
-                .flat_map(|row| row.iter().map(|p| p.to_projective())),
-        );
         ipa::batch_verify_eval_expr(
             &uk.g_upd,
-            &[(stack, chain.v_stack)],
+            &[(ComExpr::point(chain.com_u.to_projective()), chain.v_stack)],
             &e_row,
             &chain.openings[2],
             tr,
@@ -509,6 +549,52 @@ mod tests {
         let (digits, width) = update_widths(&cfg);
         assert_eq!(digits, 24); // R=16 + lr=8
         assert_eq!(width, 32);
+    }
+
+    #[test]
+    fn checked_dims_reject_degenerate_stacks() {
+        // width 1 × depth 1 × one boundary: 1-element stack, unprovable
+        assert!(checked_stack_dims(&ModelConfig::new(1, 1, 1), 2).is_err());
+        // fewer than two steps: nothing to chain
+        assert!(checked_stack_dims(&ModelConfig::new(2, 8, 4), 1).is_err());
+        assert!(checked_stack_dims(&ModelConfig::new(2, 8, 4), 3).is_ok());
+    }
+
+    #[test]
+    fn gamma_selector_binds_blocks_individually() {
+        // 4 slots of 4 entries, slots {0, 2} live; the selector must weight
+        // live block i by γⁱ·e and ignore pad blocks entirely — the property
+        // a tiled e lacks (it only constrains the sum over ALL blocks,
+        // letting a cheating prover park cancelling mass in pad blocks).
+        let mut rng = Rng::seed_from_u64(0x5e1);
+        let d = 4;
+        let n = 4 * d;
+        let e: Vec<Fr> = (0..d).map(|_| Fr::random(&mut rng)).collect();
+        let gamma = Fr::random(&mut rng);
+        let mut stacked: Vec<Fr> = (0..n).map(|_| Fr::random(&mut rng)).collect();
+        let slots = [0usize, 2];
+        let w_sel = gamma_selected_eq(&e, n, &slots, gamma);
+        let block_evals = [dot(&stacked[0..d], &e), dot(&stacked[2 * d..3 * d], &e)];
+        let expect = block_evals[0] + gamma * block_evals[1];
+        assert_eq!(dot(&stacked, &w_sel), expect);
+        assert_eq!(expect, gamma_fold(&block_evals, gamma));
+        // pad-block mass (slots 1 and 3) does not move the opening
+        stacked[d] += Fr::from_u128(1 << 20);
+        stacked[3 * d + 2] -= Fr::from_u128(1 << 20);
+        assert_eq!(dot(&stacked, &w_sel), expect);
+        // but live-block mass does — the claim is really per-block
+        stacked[2 * d] += Fr::ONE;
+        assert_ne!(dot(&stacked, &w_sel), expect);
+    }
+
+    #[test]
+    fn update_key_setup_is_cached() {
+        let cfg = ModelConfig::new(2, 8, 4);
+        let a = UpdateKey::setup(cfg, 3);
+        let b = UpdateKey::setup(cfg, 3);
+        assert!(Arc::ptr_eq(&a, &b), "same (cfg, steps) shares one key");
+        let c = UpdateKey::setup(cfg, 4);
+        assert!(!Arc::ptr_eq(&a, &c), "different step count, different key");
     }
 
     #[test]

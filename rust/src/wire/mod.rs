@@ -42,7 +42,10 @@ pub const MAGIC: [u8; 4] = *b"ZKDL";
 /// v3: 32-byte compressed point encoding; trace envelope carries the
 /// optional zkSGD chain payload; the trace transcript absorbs a chained
 /// flag.
-pub const VERSION: u16 = 3;
+/// v4: chain payload carries one stacked remainder commitment `com_u`
+/// (was per-boundary commitment rows) and the chain transcript absorbs
+/// `com/u` and draws the `upd/gamma` block-selector challenge.
+pub const VERSION: u16 = 4;
 
 /// Payload discriminant in the envelope header.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -555,7 +558,7 @@ impl FromWire for StepCommitmentSet {
 
 impl ToWire for ChainProof {
     fn to_wire(&self, w: &mut WireWriter) {
-        w.put(&self.com_ru);
+        w.put(&self.com_u);
         w.put(&self.p1_upd);
         w.put(&self.v_w);
         w.put(&self.v_gw);
@@ -568,7 +571,7 @@ impl ToWire for ChainProof {
 impl FromWire for ChainProof {
     fn from_wire(r: &mut WireReader) -> Result<Self> {
         Ok(ChainProof {
-            com_ru: r.get()?,
+            com_u: r.get()?,
             p1_upd: r.get()?,
             v_w: r.get()?,
             v_gw: r.get()?,
@@ -726,17 +729,17 @@ pub fn decode_trace_proof(bytes: &[u8]) -> Result<(ModelConfig, TraceProof)> {
             "wire: chained trace needs at least two steps"
         );
         ensure!(
-            chain.com_ru.len() == proof.steps - 1,
-            "wire: chain boundary count"
+            chain.v_w.len() == proof.steps * cfg.depth,
+            "wire: chain boundary-evaluation count"
         );
-        for row in &chain.com_ru {
-            ensure!(row.len() == cfg.depth, "wire: chain per-boundary layer count");
-        }
-        let n_upd = (proof.steps - 1)
-            .next_power_of_two()
-            .checked_mul(cfg.depth.next_power_of_two())
-            .and_then(|x| x.checked_mul(cfg.width * cfg.width))
-            .context("wire: chain dimensions overflow")?;
+        ensure!(
+            chain.v_gw.len() == (proof.steps - 1) * cfg.depth,
+            "wire: chain gradient-evaluation count"
+        );
+        // rejects the degenerate 1-element stack and dimension overflow —
+        // the verifier's key setup would otherwise panic on untrusted input
+        let (_, _, n_upd) = crate::update::checked_stack_dims(&cfg, proof.steps)
+            .context("wire: chain dimensions")?;
         ensure!(
             n_upd <= MAX_TRACE_AUX_SIZE,
             "wire: chain basis of {n_upd} elements exceeds the decoder limit"

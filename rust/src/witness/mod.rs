@@ -203,6 +203,14 @@ pub fn update_remainder(
     g_w: &[i64],
 ) -> Result<Vec<i64>> {
     let s_bits = cfg.r_bits + cfg.lr_shift;
+    // wire validation allows R+lr up to 125; beyond 64 the shift below would
+    // silently drop high bits of the weight difference and an in-range R
+    // would not fit the i64 the prover embeds, so refuse to witness such
+    // configs (an honest chain there updates no weights anyway)
+    ensure!(
+        (2..=64).contains(&s_bits),
+        "update-remainder width R+lr = {s_bits} outside the provable 2..=64"
+    );
     let half = 1i128 << (s_bits - 1);
     ensure!(
         w_prev.len() == w_next.len() && w_prev.len() == g_w.len(),
@@ -210,12 +218,17 @@ pub fn update_remainder(
     );
     let mut out = Vec::with_capacity(g_w.len());
     for i in 0..g_w.len() {
-        let r = g_w[i] as i128 - ((w_prev[i] as i128 - w_next[i] as i128) << s_bits);
-        ensure!(
-            (-half..half).contains(&r),
-            "update remainder out of range at index {i}: the weights do not chain"
-        );
-        out.push(r as i64);
+        let r = (w_prev[i] as i128 - w_next[i] as i128)
+            .checked_mul(1i128 << s_bits)
+            .and_then(|scaled| (g_w[i] as i128).checked_sub(scaled));
+        // overflow of the exact i128 value certainly exceeds the range
+        match r {
+            // |r| ≤ 2^63 inside the range (s_bits ≤ 64), so the cast is exact
+            Some(r) if (-half..half).contains(&r) => out.push(r as i64),
+            _ => anyhow::bail!(
+                "update remainder out of range at index {i}: the weights do not chain"
+            ),
+        }
     }
     Ok(out)
 }
@@ -307,6 +320,28 @@ mod tests {
         let mut bad = w_next.clone();
         bad[2] += 1;
         assert!(update_remainder(&cfg, &w_prev, &bad, &g_w).is_err());
+    }
+
+    #[test]
+    fn update_remainder_rejects_unprovable_widths() {
+        // R+lr beyond 64 would shift high bits out silently and truncate the
+        // i64 embedding — refused up front rather than mis-accepted
+        let mut cfg = ModelConfig::new(1, 2, 2);
+        cfg.r_bits = 62;
+        cfg.lr_shift = 63;
+        let err = update_remainder(&cfg, &[0], &[0], &[0]);
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("R+lr"), "{msg}");
+
+        // extreme weight swings stay exact: the i128-checked path reports
+        // "does not chain" instead of wrapping into range
+        let cfg = ModelConfig::new(1, 2, 2); // S = 24
+        assert!(update_remainder(&cfg, &[i64::MAX], &[i64::MIN], &[0]).is_err());
+        let mut cfg = ModelConfig::new(1, 2, 2);
+        cfg.r_bits = 32;
+        cfg.lr_shift = 32; // S = 64: diff·2^S overflows i128 → must error
+        assert!(update_remainder(&cfg, &[i64::MAX], &[i64::MIN], &[0]).is_err());
     }
 
     #[test]

@@ -480,7 +480,10 @@ fn layer_groups(mode: ProofMode, depth: usize) -> Vec<Vec<usize>> {
 
 /// Validity bases for a group: main instance ties the sign column to the
 /// group's aux blocks.
-fn group_validity_bases(pk: &ProverKey, layers: &[usize]) -> (ValidityBases, ValidityBases) {
+fn group_validity_bases(
+    pk: &ProverKey,
+    layers: &[usize],
+) -> (std::sync::Arc<ValidityBases>, std::sync::Arc<ValidityBases>) {
     let cfg = &pk.cfg;
     let d = cfg.d_size();
     let lbar = layers.len().next_power_of_two();
@@ -581,8 +584,8 @@ pub fn prove_step(
     struct GroupState {
         layers: Vec<usize>,
         lbar: usize,
-        vb_main: ValidityBases,
-        vb_rem: ValidityBases,
+        vb_main: std::sync::Arc<ValidityBases>,
+        vb_rem: std::sync::Arc<ValidityBases>,
         p1_main: Protocol1Msg,
         p1_rem: Protocol1Msg,
         aux_main: zkrelu::ProverAux,

@@ -50,16 +50,26 @@ pub struct ValidityBases {
     pub label: Vec<u8>,
 }
 
+#[allow(clippy::type_complexity)]
 static VBASES_CACHE: once_cell::sync::Lazy<
-    std::sync::Mutex<std::collections::HashMap<(Vec<u8>, usize, usize, usize), ValidityBases>>,
+    std::sync::Mutex<
+        std::collections::HashMap<(Vec<u8>, usize, usize, usize), std::sync::Arc<ValidityBases>>,
+    >,
 > = once_cell::sync::Lazy::new(|| std::sync::Mutex::new(std::collections::HashMap::new()));
 
 impl ValidityBases {
     /// Main-instance basis: ties column W−1 of the Z″ block to `g_aux`.
-    /// Cached: base derivation is a one-time setup cost per configuration.
-    /// The sign-column coupling lives in column W−1, so the main instance
+    /// Cached behind an `Arc` (provers and verifiers call this once per
+    /// proof; the 4·n·width-point bases must not be cloned per call) — base
+    /// derivation is a one-time setup cost per configuration. The
+    /// sign-column coupling lives in column W−1, so the main instance
     /// always uses the full digit width.
-    pub fn setup_main(label: &[u8], g_aux: &CommitKey, n: usize, width: usize) -> Self {
+    pub fn setup_main(
+        label: &[u8],
+        g_aux: &CommitKey,
+        n: usize,
+        width: usize,
+    ) -> std::sync::Arc<Self> {
         assert!(g_aux.g.len() >= n);
         assert!(width.is_power_of_two());
         let key = (label.to_vec(), n, width, width);
@@ -75,7 +85,7 @@ impl ValidityBases {
         let mut hlabel = label.to_vec();
         hlabel.extend_from_slice(b"/H");
         let big_h = crate::curve::derive_generators(&hlabel, 2 * n * width);
-        let vb = Self {
+        let vb = std::sync::Arc::new(Self {
             big_g,
             big_h,
             blind_h: g_aux.h,
@@ -83,13 +93,18 @@ impl ValidityBases {
             width,
             digits: width,
             label: label.to_vec(),
-        };
+        });
         VBASES_CACHE.lock().unwrap().insert(key, vb.clone());
         vb
     }
 
     /// Remainder-instance basis: fully independent generators. Cached.
-    pub fn setup_plain(label: &[u8], blind_h: G1Affine, n: usize, width: usize) -> Self {
+    pub fn setup_plain(
+        label: &[u8],
+        blind_h: G1Affine,
+        n: usize,
+        width: usize,
+    ) -> std::sync::Arc<Self> {
         Self::setup_plain_digits(label, blind_h, n, width, width)
     }
 
@@ -104,7 +119,7 @@ impl ValidityBases {
         n: usize,
         width: usize,
         digits: usize,
-    ) -> Self {
+    ) -> std::sync::Arc<Self> {
         assert!(width.is_power_of_two());
         assert!((2..=width).contains(&digits));
         let key = (label.to_vec(), n, width, digits);
@@ -117,7 +132,7 @@ impl ValidityBases {
         let mut hlabel = label.to_vec();
         hlabel.extend_from_slice(b"/H");
         let big_h = crate::curve::derive_generators(&hlabel, 2 * n * width);
-        let vb = Self {
+        let vb = std::sync::Arc::new(Self {
             big_g,
             big_h,
             blind_h,
@@ -125,7 +140,7 @@ impl ValidityBases {
             width,
             digits,
             label: label.to_vec(),
-        };
+        });
         VBASES_CACHE.lock().unwrap().insert(key, vb.clone());
         vb
     }

@@ -10,27 +10,23 @@ use zkdl::aggregate::{
 };
 use zkdl::curve::G1;
 use zkdl::data::Dataset;
-use zkdl::model::{ModelConfig, Weights};
+use zkdl::model::ModelConfig;
 use zkdl::util::rng::Rng;
-use zkdl::witness::native::compute_witness;
+use zkdl::witness::native::sgd_witness_chain;
 use zkdl::witness::StepWitness;
 use zkdl::zkdl::{prove_step, verify_step, ProofMode, ProverKey};
 use zkdl::Fr;
 
-/// T consecutive SGD-step witnesses with real weight updates in between.
+/// T consecutive SGD-step witnesses with real weight updates in between
+/// ([`sgd_witness_chain`] plus per-step validation: tests must not start
+/// from a broken witness).
 fn witness_chain(cfg: ModelConfig, steps: usize, seed: u64) -> Vec<StepWitness> {
-    let mut rng = Rng::seed_from_u64(seed);
     let ds = Dataset::synthetic(64, cfg.width / 2, 4, cfg.r_bits, seed ^ 0x77);
-    let mut weights = Weights::init(cfg, &mut rng);
-    let mut out = Vec::with_capacity(steps);
-    for step in 0..steps {
-        let (x, y) = ds.batch(&cfg, step);
-        let wit = compute_witness(cfg, &x, &y, &weights);
+    let wits = sgd_witness_chain(cfg, &ds, steps, seed);
+    for wit in &wits {
         wit.validate().expect("witness valid");
-        weights.apply_update(&wit.weight_grads());
-        out.push(wit);
     }
-    out
+    wits
 }
 
 #[test]
@@ -158,9 +154,10 @@ fn chained_trace_roundtrip_with_boundary_padding() {
     let proof = prove_trace_chained(&tk, &wits, &mut rng).expect("witnesses chain");
     assert!(proof.chain.is_some());
     verify_trace(&tk, &proof).expect("chained trace verifies");
-    // the chain argument costs commitments + 3 IPAs + 1 validity instance
+    // the chain argument costs one stacked commitment + 3 IPAs + 1 validity
+    // instance; the boundary evaluations cover both live boundaries
     let chain = proof.chain.as_ref().unwrap();
-    assert_eq!(chain.com_ru.len(), 2);
+    assert_eq!(chain.v_gw.len(), 2 * cfg.depth);
     assert_eq!(chain.openings.len(), 3);
 }
 
@@ -211,9 +208,9 @@ fn chained_trace_rejects_tampered_weights_gradients_and_remainders() {
     bad.coms[0].com_gw[1] = G1::random(&mut rng).to_affine();
     assert!(verify_trace(&tk, &bad).is_err(), "mutated G_W accepted");
 
-    // remainder commitment mutated: stacked opening + validity fail
+    // remainder commitment mutated: block opening + validity fail
     let mut bad = proof.clone();
-    bad.chain.as_mut().unwrap().com_ru[0][0] = G1::random(&mut rng).to_affine();
+    bad.chain.as_mut().unwrap().com_u = G1::random(&mut rng).to_affine();
     assert!(verify_trace(&tk, &bad).is_err(), "mutated R accepted");
 
     // a lying boundary evaluation: the derived remainder claim shifts and

@@ -102,10 +102,10 @@ fn randomized_protocol1_and_validity_roundtrips() {
 
 #[test]
 fn golden_header_bytes() {
-    // Pins the envelope layout of VERSION 3 (v3 = 32-byte compressed
-    // points + optional zkSGD chain payload + chained-flag transcript).
-    // If this test fails, the wire format changed: bump `wire::VERSION`
-    // and update the constants here.
+    // Pins the envelope layout of VERSION 4 (32-byte compressed points +
+    // optional zkSGD chain payload carrying one stacked commitment +
+    // chained-flag transcript). If this test fails, the wire format
+    // changed: bump `wire::VERSION` and update the constants here.
     let cfg = ModelConfig::new(2, 8, 4);
     let wits = trace_witnesses(cfg, 1, 0x601d);
     let tk = TraceKey::setup(cfg, 1);
@@ -114,7 +114,7 @@ fn golden_header_bytes() {
     let bytes = encode_trace_proof(&cfg, &proof);
     let expected_header: [u8; 32] = [
         b'Z', b'K', b'D', b'L', // magic
-        0x03, 0x00, // version 3
+        0x04, 0x00, // version 4
         0x02, 0x00, // kind: trace
         0x02, 0x00, 0x00, 0x00, // depth 2
         0x08, 0x00, 0x00, 0x00, // width 8
@@ -125,14 +125,14 @@ fn golden_header_bytes() {
     ];
     assert_eq!(&bytes[..32], expected_header.as_slice());
     assert_eq!(MAGIC.as_slice(), b"ZKDL".as_slice());
-    assert_eq!(VERSION, 3);
+    assert_eq!(VERSION, 4);
     // step-count field follows the header
     assert_eq!(&bytes[32..36], 1u32.to_le_bytes().as_slice());
 }
 
 #[test]
 fn compressed_points_halve_serialized_point_size() {
-    // v3 serializes points compressed: the wire cost of one point is the
+    // v3+ serializes points compressed: the wire cost of one point is the
     // 4-byte vector prefix amortized out — spot-check via a bare roundtrip
     let mut rng = Rng::seed_from_u64(0x31e9);
     let p = random_point(&mut rng);
@@ -200,9 +200,10 @@ fn chained_trace_proof_disk_roundtrip_verifies() {
     assert_eq!(bytes, encode_trace_proof(&cfg2, &decoded));
     let tk2 = TraceKey::setup(cfg2, decoded.steps);
     verify_trace(&tk2, &decoded).expect("decoded chained trace verifies");
-    // a chained proof with a boundary-count mismatch must not decode
+    // a chained proof with a boundary-evaluation count mismatch must not
+    // decode
     let mut truncated = proof.clone();
-    truncated.chain.as_mut().unwrap().com_ru.pop();
+    truncated.chain.as_mut().unwrap().v_w.pop();
     let bad = encode_trace_proof(&cfg, &truncated);
     assert!(decode_trace_proof(&bad).is_err());
 }
