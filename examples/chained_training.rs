@@ -1,16 +1,20 @@
-//! zkSGD chained training end-to-end: train 4 SGD steps through the
+//! zkOptim chained training end-to-end: train SGD steps through the
 //! pipelined coordinator, aggregate them into one *chained* `TraceProof` —
-//! every boundary's weights proven to be the exact quantized update
-//! W_{t+1} = W_t − ⌊G_W/2^{R+lr}⌉ of the previous step — persist it in the
-//! wire format, then re-read and verify it from bytes alone.
+//! every boundary's weights proven to be the exact quantized update of the
+//! previous step — persist it in the wire format, then re-read and verify
+//! it from bytes alone. A second act proves a *momentum* run under a
+//! decaying learning-rate schedule: the same chain argument, driven by a
+//! different rule table (two relations, a committed accumulator m, and a
+//! per-boundary shift table).
 //!
 //!     cargo run --release --example chained_training
 
 use std::path::Path;
-use zkdl::aggregate::{prove_trace, verify_trace, TraceKey};
+use zkdl::aggregate::{prove_trace, prove_trace_chained_with, verify_trace, TraceKey};
 use zkdl::coordinator::{train_and_prove_trace, TraceTrainOptions};
 use zkdl::data::Dataset;
 use zkdl::model::ModelConfig;
+use zkdl::update::{LrSchedule, UpdateRule};
 use zkdl::wire::{decode_trace_proof, encode_trace_proof};
 
 fn main() -> anyhow::Result<()> {
@@ -22,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 1. pipelined training run; the aggregator proves the window with the
-    //    zkSGD chain argument appended
+    //    zkOptim chain argument appended (plain-SGD rule)
     let ds = Dataset::synthetic(256, 8, 10, cfg.r_bits, 5);
     let opts = TraceTrainOptions {
         steps,
@@ -92,6 +96,53 @@ fn main() -> anyhow::Result<()> {
     match zkdl::aggregate::prove_trace_chained(&tk4, &wits, &mut rng) {
         Err(e) => println!("chained prover on the drifted run: REFUSED ({e:#})"),
         Ok(_) => anyhow::bail!("drifted run must not be chainable"),
+    }
+
+    // 5. zkOptim act two — heavy-ball momentum under a *decaying* lr
+    //    schedule: lr starts at 2^-8 and halves every 2 steps. The chain
+    //    now proves two relations per boundary (accumulator decay + weight
+    //    step), each remainder range-checked at its own digit budget, and
+    //    the per-boundary shift table rides the artifact as statement.
+    let rule = UpdateRule::momentum_default();
+    let schedule = LrSchedule::StepDecay {
+        base: cfg.lr_shift,
+        period: 2,
+        max: cfg.lr_shift + 4,
+    };
+    println!(
+        "\nmomentum act: optimizer={} (β = 7/8), lr 2^-{} decaying every 2 steps",
+        rule.name(),
+        cfg.lr_shift
+    );
+    let m_wits =
+        zkdl::witness::native::rule_witness_chain(cfg, &rule, &schedule, &ds, steps, 43);
+    let table = schedule.window_table(0, steps - 1);
+    println!("per-boundary shift table: {table:?}");
+    let m_proof = prove_trace_chained_with(&tk4, &m_wits, &rule, &table, &mut rng)?;
+    let m_bytes = encode_trace_proof(&cfg, &m_proof);
+    let (m_cfg, m_decoded) = decode_trace_proof(&m_bytes)?;
+    let m_chain = m_decoded.chain.as_ref().expect("momentum chain present");
+    println!(
+        "momentum chained proof: {:.1} kB ({} state commitments, rule tag {:?}, shifts {:?})",
+        m_decoded.size_bytes() as f64 / 1024.0,
+        m_chain.com_state.iter().map(|r| r.len()).sum::<usize>(),
+        m_chain.rule.name(),
+        m_chain.lr_shifts,
+    );
+    verify_trace(&TraceKey::setup(m_cfg, m_decoded.steps), &m_decoded)?;
+    println!("momentum trace re-read from wire and verified (one MSM) — accept");
+
+    // ... and the momentum trace is NOT an SGD trace: re-tagging the rule
+    // breaks the transcript binding
+    let mut swapped = m_proof.clone();
+    if let Some(c) = swapped.chain.as_mut() {
+        c.rule = UpdateRule::Sgd;
+        c.com_state.clear();
+        c.v_state.clear();
+    }
+    match verify_trace(&tk4, &swapped) {
+        Err(e) => println!("momentum artifact re-tagged as sgd: REJECTED ({e:#})"),
+        Ok(_) => anyhow::bail!("rule-tag swap must not verify"),
     }
     Ok(())
 }

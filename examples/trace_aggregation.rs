@@ -27,6 +27,7 @@ fn main() -> anyhow::Result<()> {
         window: 0, // one trace over the whole run
         seed: 42,
         skip_verify: true, // verified from disk below instead
+        ..Default::default()
     };
     let report = train_and_prove_trace(cfg, &ds, Path::new("artifacts"), &opts)?;
     println!("{}", report.summary());

@@ -1,23 +1,38 @@
 //! FAC4DNN aggregation benchmark: aggregated T-step proving / verification /
 //! proof size versus T independent `StepProof`s, for T ∈ {1, 4, 16}; at
-//! T ∈ {4, 16} a third row measures the zkSGD-chained trace (inter-step
-//! weight recurrence proven) against the unchained aggregate.
+//! T ∈ {4, 16} a third row measures the zkOptim-chained trace (inter-step
+//! weight recurrence proven, plain-SGD rule) against the unchained
+//! aggregate, and a fourth the heavy-ball momentum rule (two relations per
+//! boundary + a committed accumulator per step).
 //!
 //!     cargo bench --bench trace_agg
 //!     cargo bench --bench trace_agg -- --depth 2 --width 16 --batch 8
 
-use zkdl::aggregate::{prove_trace, prove_trace_chained, verify_trace, TraceKey};
+use zkdl::aggregate::{prove_trace, prove_trace_chained, prove_trace_chained_with, verify_trace, TraceKey};
 use zkdl::data::Dataset;
 use zkdl::model::ModelConfig;
+use zkdl::update::{LrSchedule, UpdateRule};
 use zkdl::util::bench::{fmt_dur, time_once, BenchArgs, Table};
 use zkdl::util::rng::Rng;
-use zkdl::witness::native::sgd_witness_chain;
+use zkdl::witness::native::{rule_witness_chain, sgd_witness_chain};
 use zkdl::witness::StepWitness;
 use zkdl::zkdl::{prove_step, verify_step, ProofMode, ProverKey};
 
 fn witness_chain(cfg: ModelConfig, steps: usize, seed: u64) -> Vec<StepWitness> {
     let ds = Dataset::synthetic(256, cfg.width / 2, 4, cfg.r_bits, seed ^ 0x77);
     sgd_witness_chain(cfg, &ds, steps, seed)
+}
+
+fn momentum_witness_chain(cfg: ModelConfig, steps: usize, seed: u64) -> Vec<StepWitness> {
+    let ds = Dataset::synthetic(256, cfg.width / 2, 4, cfg.r_bits, seed ^ 0x77);
+    rule_witness_chain(
+        cfg,
+        &UpdateRule::momentum_default(),
+        &LrSchedule::Constant(cfg.lr_shift),
+        &ds,
+        steps,
+        seed,
+    )
 }
 
 fn main() {
@@ -85,8 +100,8 @@ fn main() {
             format!("{:.2}×", trace_bytes as f64 / step_bytes as f64),
         ]);
 
-        // zkSGD-chained trace (T ≥ 2): the weight-update recurrence proven
-        // on top of the per-step relations
+        // zkOptim-chained trace (T ≥ 2): the weight-update recurrence proven
+        // on top of the per-step relations, plain-SGD rule
         if t >= 2 {
             let (chained_proof, prove_d) = time_once(|| {
                 prove_trace_chained(&tk, &wits, &mut rng).expect("witnesses chain")
@@ -102,6 +117,28 @@ fn main() {
                 fmt_dur(verify_d),
                 format!("{:.1}", chained_bytes as f64 / 1024.0),
                 format!("{:.2}×", chained_bytes as f64 / step_bytes as f64),
+            ]);
+
+            // heavy-ball momentum rule: double the remainder stack plus
+            // T·L committed accumulators
+            let m_wits = momentum_witness_chain(cfg, t, t as u64 ^ 0x6d);
+            let rule = UpdateRule::momentum_default();
+            let shifts = vec![cfg.lr_shift; t - 1];
+            let (m_proof, prove_d) = time_once(|| {
+                prove_trace_chained_with(&tk, &m_wits, &rule, &shifts, &mut rng)
+                    .expect("momentum witnesses chain")
+            });
+            let (_, verify_d) = time_once(|| {
+                verify_trace(&tk, &m_proof).expect("momentum trace verifies");
+            });
+            let m_bytes = m_proof.size_bytes();
+            table.row(vec![
+                format!("{t}"),
+                "momentum".into(),
+                fmt_dur(prove_d),
+                fmt_dur(verify_d),
+                format!("{:.1}", m_bytes as f64 / 1024.0),
+                format!("{:.2}×", m_bytes as f64 / step_bytes as f64),
             ]);
         }
     }

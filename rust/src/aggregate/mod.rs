@@ -36,7 +36,7 @@ use crate::model::ModelConfig;
 use crate::poly::{eq_eval, eq_table, Mle};
 use crate::sumcheck::{self, Instance, SumcheckProof, Term};
 use crate::transcript::Transcript;
-use crate::update::{self, ChainProof, UpdateKey};
+use crate::update::{self, ChainProof, LrSchedule, UpdateKey, UpdateRule};
 use crate::util::rng::Rng;
 use crate::witness::StepWitness;
 use crate::zkdl::{
@@ -315,25 +315,47 @@ pub fn prove_trace(tk: &TraceKey, wits: &[StepWitness], rng: &mut Rng) -> TraceP
     prove_trace_inner(tk, wits, None, rng)
 }
 
-/// Prove T ≥ 2 consecutive training steps as one *chained* trace: on top of
-/// the per-step relations, the zkSGD chain argument ([`crate::update`])
-/// proves that every boundary's weights are the exact quantized update
-/// W_{t+1} = W_t − ⌊G_W/2^{R+lr}⌉ of the previous step. Fails if the
-/// witnesses do not actually chain.
+/// Prove T ≥ 2 consecutive training steps as one *chained* trace under an
+/// [`UpdateRule`] and per-boundary shift table: on top of the per-step
+/// relations, the zkOptim chain argument ([`crate::update`]) proves that
+/// every boundary satisfies the rule's exact quantized update relations
+/// (plain SGD: W_{t+1} = W_t − ⌊G_W/2^{R+lr_b}⌉; heavy-ball momentum
+/// additionally chains the committed accumulator m). Fails if the
+/// witnesses do not actually chain under the rule.
+pub fn prove_trace_chained_with(
+    tk: &TraceKey,
+    wits: &[StepWitness],
+    rule: &UpdateRule,
+    lr_shifts: &[u32],
+    rng: &mut Rng,
+) -> Result<TraceProof> {
+    update::checked_stack_dims(&tk.cfg, wits.len(), rule.n_rem()).context("chained trace")?;
+    let cw = update::ChainWitness::build(rule, lr_shifts, wits)?;
+    Ok(prove_trace_inner(
+        tk,
+        wits,
+        Some((*rule, lr_shifts.to_vec(), cw)),
+        rng,
+    ))
+}
+
+/// [`prove_trace_chained_with`] specialized to plain SGD at the config's
+/// constant shift — the pre-rule entry point, byte-identical artifacts
+/// for byte-identical inputs.
 pub fn prove_trace_chained(
     tk: &TraceKey,
     wits: &[StepWitness],
     rng: &mut Rng,
 ) -> Result<TraceProof> {
-    update::checked_stack_dims(&tk.cfg, wits.len()).context("chained trace")?;
-    let cw = update::ChainWitness::build(wits)?;
-    Ok(prove_trace_inner(tk, wits, Some(cw), rng))
+    let shifts = LrSchedule::Constant(tk.cfg.lr_shift)
+        .window_table(0, wits.len().saturating_sub(1));
+    prove_trace_chained_with(tk, wits, &UpdateRule::Sgd, &shifts, rng)
 }
 
 fn prove_trace_inner(
     tk: &TraceKey,
     wits: &[StepWitness],
-    chain_wit: Option<update::ChainWitness>,
+    chain_wit: Option<(UpdateRule, Vec<u32>, update::ChainWitness)>,
     rng: &mut Rng,
 ) -> TraceProof {
     let cfg = &tk.cfg;
@@ -359,11 +381,12 @@ fn prove_trace_inner(
         .map(|(t, pl)| commit_trace_step(tk, t, pl, rng))
         .collect();
 
-    // zkSGD chain: remainder tensors committed before any challenge, so the
-    // shared-randomness property covers the chain too
-    let chain_cc = chain_wit.map(|cw| {
-        let uk = UpdateKey::setup(*cfg, t_steps);
-        let cc = update::commit_chain(&uk, &cw, rng);
+    // zkOptim chain: remainder and state tensors committed before any
+    // challenge, so the shared-randomness property covers the chain too
+    let chain_cc = chain_wit.map(|(rule, lr_shifts, cw)| {
+        let uk = UpdateKey::setup(*cfg, t_steps, &rule);
+        let cc = update::commit_chain(&uk, &tk.g_mat, lr_shifts, cw, rng)
+            .expect("chain witness validated at build");
         (uk, cc)
     });
 
@@ -394,8 +417,8 @@ fn prove_trace_inner(
     for (t, set) in com_sets.iter().enumerate() {
         absorb_step_commitments(&mut tr, t, set);
     }
-    if let Some((_, cc)) = &chain_cc {
-        update::absorb_chain_com(&mut tr, &cc.com_u);
+    if let Some((uk, cc)) = &chain_cc {
+        update::absorb_chain_statement(&mut tr, &uk.rule, &cc.lr_shifts, &cc.com_state, &cc.com_u);
     }
 
     // ---- Protocol 1 over the trace stack ----
@@ -1016,7 +1039,13 @@ pub fn verify_trace_accum(
         absorb_step_commitments(&mut tr, t, set);
     }
     if let Some(chain) = &proof.chain {
-        update::absorb_chain_com(&mut tr, &chain.com_u);
+        update::absorb_chain_statement(
+            &mut tr,
+            &chain.rule,
+            &chain.lr_shifts,
+            &chain.com_state,
+            &chain.com_u,
+        );
     }
 
     let (vb_main, vb_rem) = trace_validity_bases(tk);
@@ -1468,14 +1497,16 @@ pub fn verify_trace_accum(
     )
     .context("remainder validity")?;
 
-    // ---- Phase 5: zkSGD chain argument (chained traces only) ----
+    // ---- Phase 5: zkOptim chain argument (chained traces only) ----
     if let Some(chain) = &proof.chain {
-        // key setup asserts on invalid dimensions; fail cleanly on
-        // untrusted proofs instead (the wire decoder rejects these too)
-        update::checked_stack_dims(cfg, t_steps).context("chained trace")?;
-        let uk = UpdateKey::setup(*cfg, t_steps);
+        // key setup asserts on invalid dimensions; guard just the sizing
+        // here so untrusted proofs fail cleanly — the full statement
+        // validation (shift table, tensor counts) lives in
+        // `verify_chain_accum`, its single source
+        update::checked_stack_dims(cfg, t_steps, chain.rule.n_rem()).context("chained trace")?;
+        let uk = UpdateKey::setup(*cfg, t_steps, &chain.rule);
         update::verify_chain_accum(&uk, &tk.g_mat, &proof.coms, chain, &mut tr, acc)
-            .context("zkSGD chain")?;
+            .context("zkOptim chain")?;
     }
 
     Ok(())
@@ -1548,6 +1579,38 @@ mod tests {
         verify_trace_accum(&tk, &proof, &mut acc).expect("deferred verification");
         assert_eq!(acc.flushes(), 0, "no MSM before the flush");
         assert!(acc.flush(), "single aggregate MSM decides the chained trace");
+        assert_eq!(acc.flushes(), 1);
+    }
+
+    #[test]
+    fn momentum_chained_trace_verifies_with_exactly_one_msm_flush() {
+        // the one-MSM invariant must survive the rule generalization: a
+        // momentum chain (two relations, committed accumulator, decaying
+        // shift table) still defers everything into one flush
+        let cfg = ModelConfig::new(2, 8, 4);
+        let rule = UpdateRule::momentum_default();
+        let sched = LrSchedule::StepDecay {
+            base: cfg.lr_shift,
+            period: 1,
+            max: cfg.lr_shift + 2,
+        };
+        let ds = Dataset::synthetic(64, cfg.width / 2, 4, cfg.r_bits, 0x7777);
+        let wits = crate::witness::native::rule_witness_chain(cfg, &rule, &sched, &ds, 3, 0xd0d0);
+        let tk = TraceKey::setup(cfg, 3);
+        let mut rng = Rng::seed_from_u64(22);
+        let table = sched.window_table(0, 2);
+        let proof = prove_trace_chained_with(&tk, &wits, &rule, &table, &mut rng)
+            .expect("momentum witnesses chain");
+        let chain = proof.chain.as_ref().expect("chained");
+        assert_eq!(chain.rule, rule);
+        assert_eq!(chain.lr_shifts, table);
+        assert_eq!(chain.com_state.len(), 1, "one committed accumulator slot");
+        verify_trace(&tk, &proof).expect("momentum chained trace verifies");
+        let mut seed = Rng::seed_from_u64(23);
+        let mut acc = MsmAccumulator::from_rng(&mut seed);
+        verify_trace_accum(&tk, &proof, &mut acc).expect("deferred verification");
+        assert_eq!(acc.flushes(), 0, "no MSM before the flush");
+        assert!(acc.flush(), "single aggregate MSM decides the momentum chain");
         assert_eq!(acc.flushes(), 1);
     }
 

@@ -10,10 +10,11 @@
 //! into windows of T steps and emits one [`TraceProof`] per window, proving
 //! window k while the witnesses of window k+1 are being generated.
 
-use crate::aggregate::{prove_trace, prove_trace_chained, verify_trace, TraceKey, TraceProof};
+use crate::aggregate::{prove_trace, prove_trace_chained_with, verify_trace, TraceKey, TraceProof};
 use crate::data::Dataset;
 use crate::model::{ModelConfig, Weights};
 use crate::runtime::WitnessSource;
+use crate::update::{LrSchedule, UpdateRule};
 use crate::util::rng::Rng;
 use crate::witness::StepWitness;
 use crate::zkdl::{prove_step, verify_step, ProofMode, ProverKey};
@@ -233,10 +234,15 @@ pub struct TraceTrainOptions {
     pub window: usize,
     pub seed: u64,
     pub skip_verify: bool,
-    /// Prove each window with the zkSGD chain argument (inter-step weight
-    /// recurrence); a trailing 1-step window falls back to an unchained
-    /// proof, since it has no boundary to chain.
+    /// Prove each window with the zkOptim chain argument (inter-step
+    /// weight/state recurrence under `rule`); a trailing 1-step window
+    /// falls back to an unchained proof, since it has no boundary to chain.
     pub chained: bool,
+    /// The optimizer driving (and, when `chained`, proven by) the run.
+    pub rule: UpdateRule,
+    /// Per-step learning-rate schedule; `None` = the config's constant
+    /// `lr_shift` (the pre-schedule behavior).
+    pub lr_schedule: Option<LrSchedule>,
     /// Max in-flight *windows* of witnesses between the coordinator thread
     /// and the aggregator worker (channel capacity = window × depth).
     /// Affects scheduling only: artifacts are byte-identical at any depth.
@@ -251,6 +257,8 @@ impl Default for TraceTrainOptions {
             seed: 0x5eed,
             skip_verify: false,
             chained: false,
+            rule: UpdateRule::Sgd,
+            lr_schedule: None,
             pipeline_depth: 2,
         }
     }
@@ -313,8 +321,18 @@ pub fn train_and_prove_trace(
         !opts.chained || window >= 2,
         "chained proving needs windows of at least two steps (window = 1 chains nothing)"
     );
+    let rule = opts.rule;
+    let schedule = opts.lr_schedule.unwrap_or(LrSchedule::Constant(cfg.lr_shift));
+    // fail the whole run up front, not at the first window flush, if any
+    // step's digit budget is unprovable
+    crate::update::rule::validate_shift_table(
+        &cfg,
+        &rule,
+        &schedule.window_table(0, opts.steps),
+    )?;
     let mut rng = Rng::seed_from_u64(opts.seed);
     let mut weights = Weights::init(cfg, &mut rng);
+    let mut opt_state = rule.init_state(&cfg);
     let source = WitnessSource::auto(artifact_dir, cfg);
 
     let t_run = Instant::now();
@@ -345,7 +363,10 @@ pub fn train_and_prove_trace(
                 let tk = TraceKey::setup(cfg, t);
                 let t1 = Instant::now();
                 let proof = if chained && t >= 2 {
-                    prove_trace_chained(&tk, buf, prng)?
+                    // boundary b of this window is the update applied after
+                    // global step start_step + b
+                    let shifts = schedule.window_table(start_step, t - 1);
+                    prove_trace_chained_with(&tk, buf, &rule, &shifts, prng)?
                 } else {
                     prove_trace(&tk, buf, prng)
                 };
@@ -386,12 +407,21 @@ pub fn train_and_prove_trace(
         for step in 0..opts.steps {
             let (x, y) = dataset.batch(&cfg, step);
             let t0 = Instant::now();
-            let wit = source
+            let mut wit = source
                 .compute_witness(&x, &y, &weights)
                 .with_context(|| format!("witness at step {step}"))?;
             witness_ms_total += t0.elapsed().as_secs_f64() * 1e3;
             losses.push(wit.loss());
-            weights.apply_update(&wit.weight_grads());
+            // the witness carries the optimizer state *entering* its step;
+            // the rule's exact quantized update then advances weights and
+            // state for the next one
+            wit.opt_state = opt_state.clone();
+            rule.apply_update(
+                schedule.shift_at(step),
+                &mut weights,
+                &mut opt_state,
+                &wit.weight_grads(),
+            );
             if tx.send((step, wit)).is_err() {
                 // worker exited early — stop feeding and surface its error
                 break;
@@ -501,6 +531,42 @@ mod tests {
         assert!(report.proofs[0].chain.is_some());
         assert!(report.proofs[1].chain.is_some());
         assert!(report.proofs[2].chain.is_none());
+    }
+
+    #[test]
+    fn momentum_chained_driver_with_decay_schedule_verifies() {
+        let cfg = ModelConfig::new(2, 8, 4);
+        let ds = Dataset::synthetic(32, 4, 4, cfg.r_bits, 14);
+        let opts = TraceTrainOptions {
+            steps: 4,
+            window: 2,
+            seed: 6,
+            chained: true,
+            rule: UpdateRule::momentum_default(),
+            lr_schedule: Some(LrSchedule::StepDecay {
+                base: cfg.lr_shift,
+                period: 2,
+                max: cfg.lr_shift + 3,
+            }),
+            ..Default::default()
+        };
+        let report =
+            train_and_prove_trace(cfg, &ds, Path::new("artifacts"), &opts).expect("momentum run");
+        assert_eq!(report.proofs.len(), 2);
+        for (i, proof) in report.proofs.iter().enumerate() {
+            let chain = proof.chain.as_ref().expect("window chained");
+            assert_eq!(chain.rule, UpdateRule::momentum_default());
+            // window 0 covers boundary 0 (shift 8), window 1 boundary 2
+            // (shift 9) — the per-window tables track the global schedule
+            let want = if i == 0 { vec![cfg.lr_shift] } else { vec![cfg.lr_shift + 1] };
+            assert_eq!(chain.lr_shifts, want, "window {i}");
+        }
+        // an unprovable schedule is refused before any training happens
+        let bad = TraceTrainOptions {
+            lr_schedule: Some(LrSchedule::Constant(60)), // S = 76 > 64
+            ..opts
+        };
+        assert!(train_and_prove_trace(cfg, &ds, Path::new("artifacts"), &bad).is_err());
     }
 
     #[test]

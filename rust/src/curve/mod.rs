@@ -128,6 +128,81 @@ impl G1Affine {
         out
     }
 
+    /// Decode a batch of compressed encodings in one pass — the bulk-load
+    /// path for `verify-trace` artifacts, whose point vectors dominate
+    /// file-decode time on big traces. One sweep parses and canonicality-
+    /// checks every x and computes the y² = x³ + 3 candidates; the square
+    /// roots — one ~254-bit exponentiation each, the irreducible per-point
+    /// cost (roots, unlike inverses, admit no Montgomery-style product
+    /// sharing: the ± ambiguity makes individual roots unrecoverable from
+    /// a combined root) — then run data-parallel across worker threads,
+    /// and a final sweep validates each candidate and selects the signed
+    /// root. Exactly equivalent to [`Self::from_bytes_compressed`] per
+    /// element (a unit test pins this); returns `None` if *any* encoding
+    /// is malformed.
+    pub fn batch_from_bytes_compressed(encodings: &[[u8; 32]]) -> Option<Vec<Self>> {
+        // pass 1: flags + canonical x + y² candidates (cheap, sequential)
+        struct Parsed {
+            x: Fq,
+            want_odd: bool,
+            /// index into the sqrt batch; identity points have none
+            sqrt_slot: Option<usize>,
+        }
+        let mut parsed = Vec::with_capacity(encodings.len());
+        let mut y2s: Vec<Fq> = Vec::with_capacity(encodings.len());
+        for bytes in encodings {
+            let flags = bytes[31] & (COMPRESSED_SIGN_BIT | COMPRESSED_INFINITY_BIT);
+            let mut xb = *bytes;
+            xb[31] &= !(COMPRESSED_SIGN_BIT | COMPRESSED_INFINITY_BIT);
+            if flags & COMPRESSED_INFINITY_BIT != 0 {
+                if flags != COMPRESSED_INFINITY_BIT || xb.iter().any(|&b| b != 0) {
+                    return None;
+                }
+                parsed.push(Parsed {
+                    x: Fq::ZERO,
+                    want_odd: false,
+                    sqrt_slot: None,
+                });
+                continue;
+            }
+            let x = Fq::from_bytes(&xb);
+            if x.to_bytes() != xb {
+                return None;
+            }
+            parsed.push(Parsed {
+                x,
+                want_odd: flags & COMPRESSED_SIGN_BIT != 0,
+                sqrt_slot: Some(y2s.len()),
+            });
+            y2s.push(x.square() * x + Fq::from_u64(CURVE_B));
+        }
+        // pass 2: the square-root exponentiations, across threads
+        let roots = crate::util::threads::par_map(y2s, |y2| y2.sqrt());
+        // pass 3: validate + sign-select (sqrt() already verified s² = y²)
+        let mut out = Vec::with_capacity(parsed.len());
+        for p in parsed {
+            let Some(slot) = p.sqrt_slot else {
+                out.push(Self::IDENTITY);
+                continue;
+            };
+            let y = roots[slot]?;
+            if y.is_zero() && p.want_odd {
+                return None;
+            }
+            let y = if (y.to_repr()[0] & 1 == 1) == p.want_odd {
+                y
+            } else {
+                -y
+            };
+            out.push(Self {
+                x: p.x,
+                y,
+                infinity: false,
+            });
+        }
+        Some(out)
+    }
+
     /// Parse the [`Self::to_bytes_compressed`] encoding. Rejects
     /// non-canonical x coordinates, x with no square root of x³ + 3 (not a
     /// curve point), and malformed identity encodings, so every group
@@ -571,6 +646,55 @@ mod tests {
             G1Affine::from_bytes_compressed(&b).is_none()
         });
         assert!(rejected, "expected at least one non-residue x below 32");
+    }
+
+    #[test]
+    fn batch_decompression_matches_scalar_path() {
+        let mut r = rng();
+        // a mixed batch: random points, both signs, and identities sprinkled
+        let mut encs: Vec<[u8; 32]> = Vec::new();
+        let mut expect: Vec<G1Affine> = Vec::new();
+        for i in 0..37 {
+            let p = if i % 7 == 3 {
+                G1Affine::IDENTITY
+            } else if i % 2 == 0 {
+                G1::random(&mut r).to_affine()
+            } else {
+                G1::random(&mut r).to_affine().neg()
+            };
+            encs.push(p.to_bytes_compressed());
+            expect.push(p);
+        }
+        let batch = G1Affine::batch_from_bytes_compressed(&encs).expect("all valid");
+        assert_eq!(batch.len(), expect.len());
+        for (i, (b, e)) in batch.iter().zip(expect.iter()).enumerate() {
+            assert_eq!(b, e, "batch element {i} diverges from scalar decode");
+            assert_eq!(
+                Some(*b),
+                G1Affine::from_bytes_compressed(&encs[i]),
+                "scalar path agrees"
+            );
+        }
+        // the empty batch is fine
+        assert_eq!(
+            G1Affine::batch_from_bytes_compressed(&[]).expect("empty ok"),
+            Vec::new()
+        );
+        // one malformed element poisons the whole batch, exactly like the
+        // scalar decoder rejects it alone
+        let mut bad = encs.clone();
+        bad[5][31] = 0xc0; // identity flag + sign bit: invalid
+        assert!(G1Affine::batch_from_bytes_compressed(&bad).is_none());
+        assert!(G1Affine::from_bytes_compressed(&bad[5]).is_none());
+        // a non-residue x is caught by the batched sqrt validation too
+        let non_residue = (0u64..32).find_map(|v| {
+            let mut b = [0u8; 32];
+            b[..8].copy_from_slice(&v.to_le_bytes());
+            G1Affine::from_bytes_compressed(&b).is_none().then_some(b)
+        });
+        let mut bad = encs;
+        bad[11] = non_residue.expect("a non-residue below 32 exists");
+        assert!(G1Affine::batch_from_bytes_compressed(&bad).is_none());
     }
 
     #[test]

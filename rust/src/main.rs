@@ -4,7 +4,10 @@
 //!   prove        prove + verify one training step (optionally persist it)
 //!   train        proven training run (loss curve + per-step proof metrics)
 //!   prove-trace  aggregate T training steps into one FAC4DNN trace proof;
-//!                `--chained` adds the zkSGD weight-update chain argument
+//!                `--chained` adds the zkOptim update-chain argument;
+//!                `--optimizer {sgd,momentum}` picks the proven update
+//!                rule and `--lr-schedule {N,const:N,decay:b,p,m}` the
+//!                per-step learning-rate shifts
 //!   verify-trace re-read persisted trace proofs and verify out-of-process;
 //!                multiple `--in` files batch into ONE MSM
 //!   membership   build the Merkle tree and answer (non-)membership queries
@@ -15,6 +18,7 @@
 //!   zkdl train --depth 3 --width 64 --batch 16 --steps 50 --prove-every 10
 //!   zkdl prove-trace --depth 2 --width 16 --batch 8 --steps 16 --out trace.zkp
 //!   zkdl prove-trace --chained --depth 2 --width 16 --batch 8 --steps 4
+//!   zkdl prove-trace --chained --optimizer momentum --lr-schedule decay:8,2,12 --steps 4
 //!   zkdl verify-trace --in trace.zkp
 //!   zkdl verify-trace --in a.zkp --in b.zkp --in c.zkp
 //!   zkdl membership --n 1000 --queries 100 --hash sha256 --positivity 0.5
@@ -28,6 +32,7 @@ use zkdl::hash::HashFn;
 use zkdl::merkle::{verify_membership, MerkleTree};
 use zkdl::model::{ModelConfig, Weights};
 use zkdl::runtime::WitnessSource;
+use zkdl::update::{LrSchedule, UpdateRule};
 use zkdl::util::cli::Cli;
 use zkdl::util::rng::Rng;
 use zkdl::zkdl::{prove_step, verify_step, ProofMode, ProverKey};
@@ -96,20 +101,39 @@ fn cmd_prove_trace(cli: &Cli) -> Result<()> {
     let cfg = model_config(cli);
     let steps = cli.get_usize("steps", 8);
     let out = cli.get("out").unwrap_or("trace.zkp");
+    let rule = match cli.get_str("optimizer", "sgd") {
+        "sgd" => UpdateRule::Sgd,
+        "momentum" => UpdateRule::momentum_default(),
+        other => anyhow::bail!("unknown optimizer {other:?} (want sgd or momentum)"),
+    };
+    let lr_schedule = cli
+        .get("lr-schedule")
+        .map(LrSchedule::parse)
+        .transpose()
+        .context("parsing --lr-schedule")?;
     let opts = TraceTrainOptions {
         steps,
         window: cli.get_usize("window", 0), // 0 = one window over the run
         seed: cli.get_u64("seed", 1),
         skip_verify: cli.flag("skip-verify"),
         chained: cli.flag("chained"),
+        rule,
+        lr_schedule,
         pipeline_depth: cli.get_usize("pipeline-depth", 2),
     };
     println!(
-        "aggregating {steps} training steps: L={} d={} B={}{}",
+        "aggregating {steps} training steps: L={} d={} B={} optimizer={}{}{}",
         cfg.depth,
         cfg.width,
         cfg.batch,
-        if opts.chained { " (zkSGD chained)" } else { "" }
+        rule.name(),
+        match lr_schedule {
+            Some(LrSchedule::StepDecay { base, period, max }) =>
+                format!(" lr=2^-{base}→2^-{max} (decay every {period})"),
+            Some(LrSchedule::Constant(s)) => format!(" lr=2^-{s}"),
+            None => format!(" lr=2^-{}", cfg.lr_shift),
+        },
+        if opts.chained { " (zkOptim chained)" } else { "" }
     );
     let ds = synthetic_dataset(cli, &cfg);
     let report = train_and_prove_trace(cfg, &ds, Path::new("artifacts"), &opts)?;
@@ -147,7 +171,10 @@ fn cmd_verify_trace(cli: &Cli) -> Result<()> {
         println!(
             "{path}: {} steps{}, L={} d={} B={}, {} wire bytes",
             proof.steps,
-            if proof.chain.is_some() { " (chained)" } else { "" },
+            match &proof.chain {
+                Some(chain) => format!(" (chained, {})", chain.rule.name()),
+                None => String::new(),
+            },
             cfg.depth,
             cfg.width,
             cfg.batch,

@@ -118,6 +118,9 @@ impl StepRuntime {
             x: x.to_vec(),
             y: y.to_vec(),
             layers,
+            // rule-owned optimizer state is attached by the coordinator,
+            // which owns the update loop; the runtime computes one step
+            opt_state: Vec::new(),
         })
     }
 }

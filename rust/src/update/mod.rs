@@ -1,49 +1,64 @@
-//! zkSGD — weight-update chaining for end-to-end verifiable training traces.
+//! zkOptim — rule-driven weight-update chaining for end-to-end verifiable
+//! training traces.
 //!
-//! A plain [`crate::aggregate::TraceProof`] certifies T *independent* SGD
-//! steps: each step is proven against its own committed weights, and nothing
-//! ties step t+1's weights to step t's update. This module closes that gap
-//! with the paper's own zkReLU recipe (§4.1: turn a non-arithmetic relation
-//! into a committed auxiliary decomposition). The coordinator's quantized
-//! update W_{t+1} = W_t − ⌊G_W / 2^{R+lr}⌉ rounds, so it is not linear over
-//! the committed integers — but its *decomposition* is:
+//! A plain [`crate::aggregate::TraceProof`] certifies T *independent*
+//! training steps: each step is proven against its own committed weights,
+//! and nothing ties step t+1's weights to step t's update. This module
+//! closes that gap with the paper's own zkReLU recipe (§4.1: turn a
+//! non-arithmetic relation into a committed auxiliary decomposition),
+//! generalized from the original zkSGD argument to any optimizer expressed
+//! as an [`UpdateRule`]: a table of linear update relations
 //!
 //! ```text
-//! G_W = 2^S·(W_t − W_{t+1}) + R,   R ∈ [−2^{S−1}, 2^{S−1}),  S = R+lr,
+//! Σ_k c_k·X_k = 2^{S_{j,b}}·(Σ_k d_k·Y_k) + R_j,
+//! R_j ∈ [−2^{S_{j,b}−1}, 2^{S_{j,b}−1}),
 //! ```
 //!
-//! and the remainder range makes the decomposition unique: proving it proves
-//! the exact rounded update. The prover lays every boundary/layer remainder
-//! tensor R (d² entries, boundary b / layer ℓ in block b·L̄ + ℓ) into ONE
-//! stacked tensor U of size B̄·L̄·d² and commits it with a single Pedersen
-//! commitment `com_u` on the `zkdl/trace-aux/upd` basis. One commitment —
-//! not one per block — is what makes the argument sound: every sub-claim
-//! below opens the *same* committed vector, so a block's content cannot be
+//! one per rounded division the optimizer performs at boundary b (plain
+//! SGD: one; heavy-ball momentum: two, with a committed accumulator tensor
+//! m per step), each with its own remainder tensor and per-boundary digit
+//! budget S_{j,b} = R + lr_shift_b for the learning-rate relation — so
+//! per-step lr schedules are first-class. The remainder ranges make every
+//! decomposition unique: proving the relations proves the exact quantized
+//! updates.
+//!
+//! The prover lays every (boundary, layer, relation) remainder tensor
+//! (d² entries, slot (b·L̄ + ℓ)·R̄ + j) into ONE stacked tensor U of size
+//! B̄·L̄·R̄·d² and commits it with a single Pedersen commitment `com_u` on
+//! the rule-labelled `zkdl/trace-aux/upd` basis. One commitment — not one
+//! per block — is what makes the argument sound: every sub-claim below
+//! opens the *same* committed vector, so a block's content cannot be
 //! smuggled into another block or cancelled across commitments. Then
 //!
-//! * **linear part, checked homomorphically against the already-committed
+//! * **linear part, checked homomorphically against the committed
 //!   tensors**: one transcript point p over the d² weight-index space; the
-//!   batched-opening engine opens every W̃_t(p) and G̃_W(p) (one RLC'd IPA on
-//!   the shared `zkdl/mat` basis), and the verifier *derives* each boundary's
-//!   remainder claim G̃_W(p) − 2^S·(W̃_t(p) − W̃_{t+1}(p)). A fresh challenge
-//!   γ then folds the live blocks of U into one opening: the public vector
-//!   puts γⁱ·e(p) in live block i and zero in every pad block, so
-//!   ⟨U, ·⟩ = Σᵢ γⁱ·Ũᵢ(p) and Schwartz–Zippel over γ pins *each* live
-//!   block's MLE at p to its derived claim (equivalently: the stacked MLE
-//!   opened at (bits(slotᵢ) ∥ p), γ-batched). The boundary relation holds
-//!   iff the openings do (Schwartz–Zippel over p);
-//! * **range part**: the same stacked tensor U feeds one zkReLU Protocol-1 /
-//!   Algorithm-1 validity instance over the padded digit basis
-//!   ([`crate::zkrelu::s_basis_digits`]): S = R+lr bits is not a power of
-//!   two, so the instance uses width S̄ = 2^⌈log S⌉ with zero-weight pad
-//!   columns — the pattern check forces pad bits to zero, keeping the proven
-//!   range *exactly* [−2^{S−1}, 2^{S−1}). The instance is bound to `com_u`
-//!   by opening U at the validity point, so the range check is entrywise on
+//!   batched-opening engine opens every W̃_t(p), G̃_W(p), and rule-state
+//!   m̃_t(p) (one RLC'd IPA on the shared `zkdl/mat` basis), and the
+//!   verifier *derives* each slot's remainder claim from the rule's
+//!   relation table. A fresh challenge γ then folds the live blocks of U
+//!   into one opening: the public vector puts γⁱ·e(p) in live block i and
+//!   zero in every pad block, so ⟨U, ·⟩ = Σᵢ γⁱ·Ũᵢ(p) and Schwartz–Zippel
+//!   over γ pins *each* live block's MLE at p to its derived claim
+//!   (equivalently: the stacked MLE opened at (bits(slotᵢ) ∥ p),
+//!   γ-batched). The relations hold iff the openings do (Schwartz–Zippel
+//!   over p);
+//! * **range part**: the same stacked tensor U feeds one zkReLU
+//!   Protocol-1 / Algorithm-1 validity instance over a *multi-width*
+//!   padded digit basis ([`crate::zkrelu::DigitLayout::PerBlock`]): each
+//!   slot's rows carry exactly its relation's digit budget at its
+//!   boundary, with zero-weight pad columns above — the pattern check
+//!   forces pad bits to zero, keeping each proven range exactly
+//!   [−2^{S−1}, 2^{S−1}) per slot. The instance is bound to `com_u` by
+//!   opening U at the validity point, so the range check is entrywise on
 //!   the very tensor the linear part constrained.
 //!
 //! Everything defers into the trace's `MsmAccumulator`: a chained
-//! `TraceProof` still verifies with exactly one MSM flush. See
-//! DESIGN.md §update.
+//! `TraceProof` still verifies with exactly one MSM flush, whatever the
+//! rule. See DESIGN.md §update.
+
+pub mod rule;
+
+pub use rule::{LrSchedule, UpdateRule};
 
 use crate::aggregate::StepCommitmentSet;
 use crate::commit::{ComExpr, CommitKey};
@@ -57,102 +72,166 @@ use crate::transcript::Transcript;
 use crate::util::rng::Rng;
 use crate::witness::StepWitness;
 use crate::zkdl::{commit, frs, Committed};
-use crate::zkrelu::{self, Protocol1Msg, ProverAux, ValidityBases, ValidityProof};
+use crate::zkrelu::{self, DigitLayout, Protocol1Msg, ProverAux, ValidityBases, ValidityProof};
 use anyhow::{ensure, Context, Result};
 use once_cell::sync::Lazy;
+use rule::Operand;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-/// Padded boundary count B̄ = (T−1)̄, padded layer count L̄, and the stacked
-/// remainder size N_U = B̄·L̄·d². Boundary b's layer ℓ owns block (b·L̄ + ℓ).
-/// Panics on invalid dimensions — callers on untrusted input must guard
-/// with [`checked_stack_dims`] first.
-pub fn update_stack_dims(cfg: &ModelConfig, steps: usize) -> (usize, usize, usize) {
-    checked_stack_dims(cfg, steps).expect("invalid update stack dimensions")
+/// Padded boundary count B̄ = (T−1)̄, padded layer count L̄, padded relation
+/// count R̄ = n_rem̄, and the stacked remainder size N_U = B̄·L̄·R̄·d².
+/// Boundary b's layer ℓ, relation j owns block (b·L̄ + ℓ)·R̄ + j. Panics on
+/// invalid dimensions — callers on untrusted input must guard with
+/// [`checked_stack_dims`] first.
+pub fn update_stack_dims(
+    cfg: &ModelConfig,
+    steps: usize,
+    n_rem: usize,
+) -> (usize, usize, usize, usize) {
+    checked_stack_dims(cfg, steps, n_rem).expect("invalid update stack dimensions")
 }
 
-/// [`update_stack_dims`] that reports too-few steps, overflow, and the
-/// degenerate 1-element stack (width 1, depth 1, one boundary — the chain
-/// argument cannot run on it) as errors instead of panicking. The single
-/// source of the size formula: the wire decoder, `prove_trace_chained`,
-/// and `verify_trace_accum` all guard with this before any key setup.
-pub fn checked_stack_dims(cfg: &ModelConfig, steps: usize) -> Result<(usize, usize, usize)> {
+/// [`update_stack_dims`] that reports too-few steps, a relation-free rule,
+/// overflow, and the degenerate 1-element stack (width 1, depth 1, one
+/// boundary, one relation — the chain argument cannot run on it) as errors
+/// instead of panicking. The single source of the size formula: the wire
+/// decoder, `prove_trace_chained_with`, and `verify_trace_accum` all guard
+/// with this before any key setup.
+pub fn checked_stack_dims(
+    cfg: &ModelConfig,
+    steps: usize,
+    n_rem: usize,
+) -> Result<(usize, usize, usize, usize)> {
     ensure!(steps >= 2, "chaining needs at least two steps");
+    ensure!(n_rem >= 1, "update rule declares no relations");
     let bbar = (steps - 1).next_power_of_two();
     let lbar = cfg.depth.next_power_of_two();
+    let rbar = n_rem.next_power_of_two();
     let n = bbar
         .checked_mul(lbar)
+        .and_then(|x| x.checked_mul(rbar))
         .and_then(|x| x.checked_mul(cfg.width))
         .and_then(|x| x.checked_mul(cfg.width))
         .context("update stack dimensions overflow")?;
     ensure!(n >= 2, "degenerate update stack");
-    Ok((bbar, lbar, n))
+    Ok((bbar, lbar, rbar, n))
 }
 
-/// Active digit count S = R + lr of an update remainder and the padded
-/// power-of-two decomposition width the validity instance runs at.
-pub fn update_widths(cfg: &ModelConfig) -> (usize, usize) {
-    let digits = (cfg.r_bits + cfg.lr_shift) as usize;
-    (digits, digits.next_power_of_two())
+/// Per-slot digit budgets of the stacked remainder tensor plus the shared
+/// power-of-two decomposition width: slot (b·L̄ + ℓ)·R̄ + j carries relation
+/// j's budget at boundary b; pad slots (whose values are zero) get the
+/// minimal 2 digits. Deterministic in (cfg, rule, shift table), so prover
+/// and verifier derive identical layouts from the artifact statement.
+pub fn chain_digit_layout(
+    cfg: &ModelConfig,
+    steps: usize,
+    r: &UpdateRule,
+    lr_shifts: &[u32],
+) -> Result<(DigitLayout, usize)> {
+    rule::validate_shift_table(cfg, r, lr_shifts)?;
+    ensure!(
+        lr_shifts.len() == steps - 1,
+        "shift table length {} != {} boundaries",
+        lr_shifts.len(),
+        steps - 1
+    );
+    let relations = r.relations();
+    let (bbar, lbar, rbar, _) = checked_stack_dims(cfg, steps, relations.len())?;
+    let nb = steps - 1;
+    let mut digits = Vec::with_capacity(bbar * lbar * rbar);
+    for b in 0..bbar {
+        for l in 0..lbar {
+            for j in 0..rbar {
+                let live = b < nb && l < cfg.depth && j < relations.len();
+                digits.push(if live {
+                    relations[j].digits(cfg, lr_shifts[b]) as usize
+                } else {
+                    2
+                });
+            }
+        }
+    }
+    let width = digits.iter().copied().max().unwrap_or(2).next_power_of_two();
+    let d2 = cfg.width * cfg.width;
+    Ok((DigitLayout::PerBlock { block: d2, digits }, width))
 }
 
-/// Commitment basis for the stacked update remainders of a T-step trace.
+/// Commitment basis for the stacked update remainders of a T-step trace
+/// under one update rule.
 pub struct UpdateKey {
     pub cfg: ModelConfig,
     /// Number of live steps T (T−1 live boundaries).
     pub steps: usize,
-    /// Stacked remainder basis, length B̄·L̄·d².
+    /// The rule whose relation table sizes this key.
+    pub rule: UpdateRule,
+    /// Stacked remainder basis, length B̄·L̄·R̄·d².
     pub g_upd: CommitKey,
 }
 
 #[allow(clippy::type_complexity)]
 static UPDKEY_CACHE: Lazy<
-    Mutex<HashMap<((usize, usize, usize, u32, u32, u32), usize), Arc<UpdateKey>>>,
+    Mutex<HashMap<((usize, usize, usize, u32, u32, u32), usize, Vec<u8>), Arc<UpdateKey>>>,
 > = Lazy::new(|| Mutex::new(HashMap::new()));
 
+/// Cache-entry ceiling: the key includes artifact-controlled rule
+/// parameters, so verifying hostile artifacts must not grow resident
+/// memory without bound — at the cap, an arbitrary entry is evicted
+/// (honest deployments use a handful of (cfg, T, rule) tuples).
+const UPDKEY_CACHE_CAP: usize = 128;
+
 impl UpdateKey {
-    /// Derive (or fetch) the key for (cfg, steps). Cached behind an `Arc`
-    /// like the zkReLU `VBASES_CACHE`: `CommitKey::setup` already caches the
-    /// hash-to-curve derivation, but `verify_trace_accum` runs once per
-    /// proof and cloning a B̄·L̄·d²-point basis per verified proof is a
-    /// measurable cost under batched multi-proof verification.
-    pub fn setup(cfg: ModelConfig, steps: usize) -> Arc<Self> {
+    /// Derive (or fetch) the key for (cfg, steps, rule). Cached behind an
+    /// `Arc` like the zkReLU `VBASES_CACHE`; the cache key includes the
+    /// full rule descriptor (tag, parameters — hence tensor and relation
+    /// counts), so distinct rules never share stale bases even when their
+    /// stacks happen to be the same size.
+    pub fn setup(cfg: ModelConfig, steps: usize, r: &UpdateRule) -> Arc<Self> {
         let cfg_key = (cfg.depth, cfg.width, cfg.batch, cfg.r_bits, cfg.q_bits, cfg.lr_shift);
-        let key = (cfg_key, steps);
+        let desc = r.descriptor_bytes();
+        let key = (cfg_key, steps, desc.clone());
         if let Some(uk) = UPDKEY_CACHE.lock().unwrap().get(&key) {
             return uk.clone();
         }
-        let (_, _, n) = update_stack_dims(&cfg, steps);
+        let (_, _, _, n) = update_stack_dims(&cfg, steps, r.n_rem());
+        let label = [b"zkdl/trace-aux/upd/".as_ref(), &desc].concat();
         let uk = Arc::new(Self {
             cfg,
             steps,
-            g_upd: CommitKey::setup(b"zkdl/trace-aux/upd", n),
+            rule: *r,
+            g_upd: CommitKey::setup(&label, n),
         });
-        UPDKEY_CACHE.lock().unwrap().insert(key, uk.clone());
+        let mut cache = UPDKEY_CACHE.lock().unwrap();
+        if cache.len() >= UPDKEY_CACHE_CAP {
+            // bounded eviction rather than insert-refusal: hostile key
+            // churn cannot grow memory OR permanently disable caching
+            let evict = cache.keys().next().cloned();
+            if let Some(evict) = evict {
+                cache.remove(&evict);
+            }
+        }
+        cache.insert(key, uk.clone());
         uk
     }
 }
 
 /// Validity bases for the remainder range instance; the label pins (T, L)
-/// like the trace validity labels do. Arc-cached inside `VBASES_CACHE`, so
-/// repeated calls (prove + per-proof verify) never clone the bases.
-fn update_validity_bases(uk: &UpdateKey) -> Arc<ValidityBases> {
-    let (_, _, n) = update_stack_dims(&uk.cfg, uk.steps);
-    let (digits, width) = update_widths(&uk.cfg);
+/// and the rule descriptor, and the `VBASES_CACHE` key additionally pins
+/// the full digit layout — so two schedules over the same shape never
+/// share an instance. Arc-cached: repeated calls (prove + per-proof
+/// verify) never clone the bases.
+fn update_validity_bases(uk: &UpdateKey, layout: &DigitLayout, width: usize) -> Arc<ValidityBases> {
+    let (_, _, _, n) = update_stack_dims(&uk.cfg, uk.steps, uk.rule.n_rem());
     let t = uk.steps as u64;
     let l = uk.cfg.depth as u64;
     let label = [
         b"zkdl/trace/validity/upd/".as_ref(),
         &t.to_le_bytes(),
         &l.to_le_bytes(),
+        &uk.rule.descriptor_bytes(),
     ]
     .concat();
-    ValidityBases::setup_plain_digits(&label, uk.g_upd.h, n / 2, width, digits)
-}
-
-/// 2^S as a field scalar, S = R + lr.
-fn two_s(cfg: &ModelConfig) -> Fr {
-    Fr::from_u128(1u128 << (cfg.r_bits + cfg.lr_shift))
+    ValidityBases::setup_plain_layout(&label, uk.g_upd.h, n / 2, width, layout.clone())
 }
 
 fn dot(a: &[Fr], b: &[Fr]) -> Fr {
@@ -192,31 +271,91 @@ fn gamma_fold(vals: &[Fr], gamma: Fr) -> Fr {
     acc
 }
 
-/// Live block indices in claim order (boundary-major): slot b·L̄ + ℓ.
-fn live_slots(nb: usize, depth: usize, lbar: usize) -> Vec<usize> {
-    let mut out = Vec::with_capacity(nb * depth);
+/// Live block indices in claim order (boundary-major, then layer, then
+/// relation): slot (b·L̄ + ℓ)·R̄ + j.
+fn live_slots(nb: usize, depth: usize, lbar: usize, n_rem: usize, rbar: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(nb * depth * n_rem);
     for b in 0..nb {
         for l in 0..depth {
-            out.push(b * lbar + l);
+            for j in 0..n_rem {
+                out.push((b * lbar + l) * rbar + j);
+            }
         }
     }
     out
 }
 
-/// The chain argument appended to a [`crate::aggregate::TraceProof`].
+/// Derived remainder claims at the boundary point, in live-slot order:
+/// v[b·L·J + ℓ·J + j] = (Σ c_k·X̃_k(p)) − 2^{S_{j,b}}·(Σ d_k·Ỹ_k(p)),
+/// the field-side mirror of [`crate::witness::relation_remainder`]. Both
+/// sides compute this from opened evaluations — the relation *defines* the
+/// remainder claims.
+fn derived_remainder_claims(
+    cfg: &ModelConfig,
+    r: &UpdateRule,
+    lr_shifts: &[u32],
+    depth: usize,
+    v_w: &[Fr],
+    v_gw: &[Fr],
+    v_state: &[Vec<Fr>],
+) -> Vec<Fr> {
+    let relations = r.relations();
+    let nb = lr_shifts.len();
+    let mut out = Vec::with_capacity(nb * depth * relations.len());
+    for (b, &shift) in lr_shifts.iter().enumerate() {
+        for l in 0..depth {
+            let op_eval = |op: Operand| -> Fr {
+                match op {
+                    Operand::WPrev => v_w[b * depth + l],
+                    Operand::WNext => v_w[(b + 1) * depth + l],
+                    Operand::GradW => v_gw[b * depth + l],
+                    Operand::StatePrev(s) => v_state[s][b * depth + l],
+                    Operand::StateNext(s) => v_state[s][(b + 1) * depth + l],
+                }
+            };
+            for rel in &relations {
+                let side = |terms: &[rule::RelTerm]| -> Fr {
+                    terms
+                        .iter()
+                        .map(|t| Fr::from_i64(t.coeff) * op_eval(t.op))
+                        .sum()
+                };
+                let pow2 = Fr::from_u128(1u128 << rel.digits(cfg, shift));
+                out.push(side(&rel.lhs) - pow2 * side(&rel.shifted));
+            }
+        }
+    }
+    out
+}
+
+/// The chain argument appended to a [`crate::aggregate::TraceProof`]. The
+/// rule descriptor, shift table, and state commitments are part of the
+/// *statement* — a verifying party audits them exactly like the step
+/// commitments (and the initial state m_0, like W_0 itself, is pinned by
+/// its commitment, not recomputed).
 #[derive(Clone, Debug)]
 pub struct ChainProof {
+    /// The optimizer whose exact updates this chain proves.
+    pub rule: UpdateRule,
+    /// Per-boundary learning-rate shifts (length T−1).
+    pub lr_shifts: Vec<u32>,
+    /// Rule state commitments on `g_mat`: `com_state[s][t·L + ℓ]` is state
+    /// slot s of step t, layer ℓ (empty for SGD).
+    pub com_state: Vec<Vec<G1Affine>>,
     /// The single commitment to the stacked remainder tensor U (all T−1
-    /// boundaries × L layers, pad blocks zero) on `g_upd`.
+    /// boundaries × L layers × n_rem relations, pad blocks zero).
     pub com_u: G1Affine,
     pub p1_upd: Protocol1Msg,
     /// W̃ evaluations at the boundary point, step-major, length T·L.
     pub v_w: Vec<Fr>,
     /// G̃_W evaluations at the boundary point for steps 0..T−1, (T−1)·L.
     pub v_gw: Vec<Fr>,
+    /// State-tensor evaluations at the boundary point: `v_state[s]` is
+    /// step-major of length T·L.
+    pub v_state: Vec<Vec<Fr>>,
     /// Stacked Ũ evaluation at the validity point.
     pub v_stack: Fr,
-    /// Opening IPAs: [W+G_W @ p, γ-folded live blocks of U @ p,
+    /// Opening IPAs: [W+G_W+state @ p, γ-folded live blocks of U @ p,
     /// U @ validity point].
     pub openings: Vec<IpaProof>,
     pub validity: ValidityProof,
@@ -226,30 +365,63 @@ impl ChainProof {
     /// Compressed-point accounting, matching
     /// [`crate::aggregate::TraceProof::size_bytes`].
     pub fn size_bytes(&self) -> usize {
-        let coms = 1; // com_u
-        let scalars = self.v_w.len() + self.v_gw.len() + 1;
+        let coms = 1 + self.com_state.iter().map(|r| r.len()).sum::<usize>();
+        let scalars = self.v_w.len()
+            + self.v_gw.len()
+            + self.v_state.iter().map(|r| r.len()).sum::<usize>()
+            + 1;
+        let statement = self.rule.descriptor_bytes().len() + 4 * self.lr_shifts.len();
         let openings: usize = self.openings.iter().map(|o| o.size_bytes()).sum();
-        (coms + scalars) * 32 + 32 + openings + self.validity.size_bytes()
+        (coms + scalars) * 32 + 32 + statement + openings + self.validity.size_bytes()
     }
 }
 
-/// Prover-side chain witness: one remainder tensor per (boundary, layer).
+/// Prover-side chain witness: remainder tensors per (boundary, layer,
+/// relation) plus the rule's committed state tensors per (step, layer).
 pub struct ChainWitness {
-    /// (T−1) × L × d² remainders, embedded in 𝔽.
-    pub rems: Vec<Vec<Vec<Fr>>>,
+    /// (T−1) × L × n_rem remainders, embedded in 𝔽.
+    pub rems: Vec<Vec<Vec<Vec<Fr>>>>,
+    /// State tensors, `state[s][t·L + ℓ]`, embedded in 𝔽.
+    pub state: Vec<Vec<Vec<Fr>>>,
 }
 
 impl ChainWitness {
     /// Compute the remainders from consecutive step witnesses
-    /// ([`crate::witness::chain_remainders`]), failing if any boundary's
-    /// weights are not the exact rounded update.
-    pub fn build(wits: &[StepWitness]) -> Result<Self> {
+    /// ([`crate::witness::rule_chain_remainders`]), failing if any boundary
+    /// is not the exact rounded update of the previous step under `r`.
+    pub fn build(r: &UpdateRule, lr_shifts: &[u32], wits: &[StepWitness]) -> Result<Self> {
         ensure!(wits.len() >= 2, "chaining needs at least two steps");
-        let rems: Vec<Vec<Vec<Fr>>> = crate::witness::chain_remainders(wits)?
-            .iter()
-            .map(|per_layer| per_layer.iter().map(|r| frs(r)).collect())
-            .collect();
-        Ok(Self { rems })
+        let cfg = wits[0].cfg;
+        let rems: Vec<Vec<Vec<Vec<Fr>>>> =
+            crate::witness::rule_chain_remainders(r, lr_shifts, wits)?
+                .iter()
+                .map(|per_layer| {
+                    per_layer
+                        .iter()
+                        .map(|per_rel| per_rel.iter().map(|t| frs(t)).collect())
+                        .collect()
+                })
+                .collect();
+        let mut state = vec![Vec::with_capacity(wits.len() * cfg.depth); r.n_state()];
+        for (t, wit) in wits.iter().enumerate() {
+            ensure!(
+                wit.opt_state.len() == r.n_state(),
+                "step {t} carries {} state tensors, rule wants {}",
+                wit.opt_state.len(),
+                r.n_state()
+            );
+            for (s, per_layer) in wit.opt_state.iter().enumerate() {
+                ensure!(per_layer.len() == cfg.depth, "state layer count at step {t}");
+                for tensor in per_layer {
+                    ensure!(
+                        tensor.len() == cfg.width * cfg.width,
+                        "state tensor shape at step {t}"
+                    );
+                    state[s].push(frs(tensor));
+                }
+            }
+        }
+        Ok(Self { rems, state })
     }
 }
 
@@ -257,37 +429,99 @@ impl ChainWitness {
 /// challenge is drawn (the trace absorbs them up front, alongside the step
 /// commitments, so the shared-randomness property extends to the chain).
 pub(crate) struct ChainCommitments {
+    /// Shift table (statement, absorbed with the commitments).
+    pub(crate) lr_shifts: Vec<u32>,
+    /// Rule state tensors on `g_mat`, `state[s][t·L + ℓ]`.
+    pub(crate) state: Vec<Vec<Committed>>,
+    pub(crate) com_state: Vec<Vec<G1Affine>>,
     /// The stacked remainder tensor U with its single opening (blind).
     pub(crate) u: Committed,
     pub(crate) com_u: G1Affine,
     pub(crate) p1: Protocol1Msg,
     pub(crate) aux: ProverAux,
+    /// Validity bases of the range instance, derived once here and reused
+    /// by [`prove_chain`] (their digit layout is a pure function of the
+    /// statement, so recomputing would only duplicate work).
+    pub(crate) vb: Arc<ValidityBases>,
 }
 
-pub(crate) fn commit_chain(uk: &UpdateKey, cw: &ChainWitness, rng: &mut Rng) -> ChainCommitments {
+pub(crate) fn commit_chain(
+    uk: &UpdateKey,
+    g_mat: &CommitKey,
+    lr_shifts: Vec<u32>,
+    cw: ChainWitness,
+    rng: &mut Rng,
+) -> Result<ChainCommitments> {
     let cfg = &uk.cfg;
     let depth = cfg.depth;
     let d2 = cfg.width * cfg.width;
-    let (_, lbar, n_upd) = update_stack_dims(cfg, uk.steps);
-    assert_eq!(cw.rems.len(), uk.steps - 1, "boundary count mismatch");
+    let n_rem = uk.rule.n_rem();
+    let (_, lbar, rbar, n_upd) = update_stack_dims(cfg, uk.steps, n_rem);
+    ensure!(cw.rems.len() == uk.steps - 1, "boundary count mismatch");
     let mut stacked = vec![Fr::ZERO; n_upd];
     for (b, per_layer) in cw.rems.iter().enumerate() {
-        assert_eq!(per_layer.len(), depth, "layer count mismatch");
-        for (l, vals) in per_layer.iter().enumerate() {
-            let s = b * lbar + l;
-            stacked[s * d2..(s + 1) * d2].copy_from_slice(vals);
+        ensure!(per_layer.len() == depth, "layer count mismatch");
+        for (l, per_rel) in per_layer.iter().enumerate() {
+            ensure!(per_rel.len() == n_rem, "relation count mismatch");
+            for (j, vals) in per_rel.iter().enumerate() {
+                let s = (b * lbar + l) * rbar + j;
+                stacked[s * d2..(s + 1) * d2].copy_from_slice(vals);
+            }
         }
     }
-    let vb = update_validity_bases(uk);
+    let (layout, width) = chain_digit_layout(cfg, uk.steps, &uk.rule, &lr_shifts)?;
+    let vb = update_validity_bases(uk, &layout, width);
     let (p1, aux) = zkrelu::protocol1_plain(&vb, &stacked, rng);
+    let state: Vec<Vec<Committed>> = cw
+        .state
+        .into_iter()
+        .map(|per_slot| {
+            per_slot
+                .into_iter()
+                .map(|tensor| commit(g_mat, tensor, rng))
+                .collect()
+        })
+        .collect();
+    let com_state: Vec<Vec<G1Affine>> = state
+        .iter()
+        .map(|per_slot| {
+            crate::curve::G1::batch_to_affine(
+                &per_slot.iter().map(|c| c.com).collect::<Vec<_>>(),
+            )
+        })
+        .collect();
     let u = commit(&uk.g_upd, stacked, rng);
     let com_u = u.com.to_affine();
-    ChainCommitments { u, com_u, p1, aux }
+    Ok(ChainCommitments {
+        lr_shifts,
+        state,
+        com_state,
+        u,
+        com_u,
+        p1,
+        aux,
+        vb,
+    })
 }
 
-/// Absorb the chain's stacked-remainder commitment (call sites: right after
-/// the per-step commitment sets, before Protocol 1 / any challenge).
-pub(crate) fn absorb_chain_com(tr: &mut Transcript, com_u: &G1Affine) {
+/// Absorb the chain's statement — rule descriptor, shift table, state
+/// commitments, stacked-remainder commitment — right after the per-step
+/// commitment sets, before Protocol 1 / any challenge. A swapped rule tag,
+/// edited schedule, or substituted state tensor therefore lands in a
+/// different transcript and fails every subsequent check.
+pub(crate) fn absorb_chain_statement(
+    tr: &mut Transcript,
+    r: &UpdateRule,
+    lr_shifts: &[u32],
+    com_state: &[Vec<G1Affine>],
+    com_u: &G1Affine,
+) {
+    tr.absorb_bytes(b"upd/rule", &r.descriptor_bytes());
+    let shift_bytes: Vec<u8> = lr_shifts.iter().flat_map(|s| s.to_le_bytes()).collect();
+    tr.absorb_bytes(b"upd/shifts", &shift_bytes);
+    for per_slot in com_state {
+        tr.absorb_points(b"com/state", per_slot);
+    }
     tr.absorb_point(b"com/u", com_u);
 }
 
@@ -303,20 +537,30 @@ pub(crate) fn prove_chain(
     tr: &mut Transcript,
     rng: &mut Rng,
 ) -> ChainProof {
-    // taken by value so the stacked tensor (up to B̄·L̄·d² field elements)
+    // taken by value so the stacked tensor (up to B̄·L̄·R̄·d² field elements)
     // is moved into the final opening instead of cloned per claim
-    let ChainCommitments { u, com_u, p1, aux } = cc;
+    let ChainCommitments {
+        lr_shifts,
+        state,
+        com_state,
+        u,
+        com_u,
+        p1,
+        aux,
+        vb,
+    } = cc;
     let cfg = &uk.cfg;
     let t_steps = uk.steps;
     let depth = cfg.depth;
     let d2 = cfg.width * cfg.width;
     let log_d2 = d2.trailing_zeros() as usize;
-    let (_, lbar, n_upd) = update_stack_dims(cfg, t_steps);
+    let n_rem = uk.rule.n_rem();
+    let (_, lbar, rbar, n_upd) = update_stack_dims(cfg, t_steps, n_rem);
     let nb = t_steps - 1;
-    let two_s = two_s(cfg);
 
     // one boundary point over the d² weight-index space, shared by every
-    // (boundary, layer) — the chain analogue of the trace-global bundle
+    // (boundary, layer, relation) — the chain analogue of the trace-global
+    // bundle
     let p_u = tr.challenge_frs(b"upd/p", log_d2);
     let e_u = eq_table(&p_u);
 
@@ -332,25 +576,24 @@ pub(crate) fn prove_chain(
             v_gw.push(dot(&c.values, &e_u));
         }
     }
-    // derived remainder evaluations — the linear boundary relation at p:
-    // Ũ_{b,ℓ}(p) = G̃_W(p) − 2^S·(W̃_t(p) − W̃_{t+1}(p))
-    let mut v_ru = Vec::with_capacity(nb * depth);
-    for b in 0..nb {
-        for l in 0..depth {
-            let v = v_gw[b * depth + l] - two_s * (v_w[b * depth + l] - v_w[(b + 1) * depth + l]);
-            debug_assert_eq!(
-                v,
-                dot(&u.values[(b * lbar + l) * d2..(b * lbar + l + 1) * d2], &e_u),
-                "chain witness drift"
-            );
-            v_ru.push(v);
-        }
-    }
+    let v_state: Vec<Vec<Fr>> = state
+        .iter()
+        .map(|per_slot| per_slot.iter().map(|c| dot(&c.values, &e_u)).collect())
+        .collect();
+    // derived remainder evaluations — the rule's relations at p
+    let v_ru = derived_remainder_claims(cfg, &uk.rule, &lr_shifts, depth, &v_w, &v_gw, &v_state);
+    debug_assert!({
+        let slots = live_slots(nb, depth, lbar, n_rem, rbar);
+        slots.iter().zip(v_ru.iter()).all(|(&s, v)| {
+            *v == dot(&u.values[s * d2..(s + 1) * d2], &e_u)
+        })
+    }, "chain witness drift");
 
     let mut openings = Vec::with_capacity(3);
-    // U1: every W̃_t(p) and G̃_W(p) on the shared g_mat basis, one RLC'd IPA
+    // U1: every W̃_t(p), G̃_W(p), and state m̃_t(p) on the shared g_mat
+    // basis, one RLC'd IPA
     {
-        let mut claims = Vec::with_capacity((t_steps + nb) * depth);
+        let mut claims = Vec::with_capacity((t_steps + nb + uk.rule.n_state() * t_steps) * depth);
         for (t, step) in w.iter().enumerate().take(t_steps) {
             for (l, c) in step.iter().enumerate().take(depth) {
                 claims.push(EvalClaim {
@@ -371,14 +614,30 @@ pub(crate) fn prove_chain(
                 });
             }
         }
+        for (s, per_slot) in state.iter().enumerate() {
+            for (i, c) in per_slot.iter().enumerate() {
+                claims.push(EvalClaim {
+                    com: c.com,
+                    values: c.values.clone(),
+                    blind: c.blind,
+                    v: v_state[s][i],
+                });
+            }
+        }
         openings.push(ipa::batch_prove_eval_expr(g_mat, &claims, &e_u, tr, rng));
     }
     // U2: the γ-folded live blocks of U at p. γ is drawn after p and after
-    // U1 absorbed every v_w/v_gw (which fix the derived claims), so
-    // Schwartz–Zippel over γ pins each live block's MLE at p individually.
+    // U1 absorbed every opened evaluation (which fix the derived claims),
+    // so Schwartz–Zippel over γ pins each live block's MLE at p
+    // individually.
     {
         let gamma = tr.challenge_fr(b"upd/gamma");
-        let w_sel = gamma_selected_eq(&e_u, n_upd, &live_slots(nb, depth, lbar), gamma);
+        let w_sel = gamma_selected_eq(
+            &e_u,
+            n_upd,
+            &live_slots(nb, depth, lbar, n_rem, rbar),
+            gamma,
+        );
         let claim = EvalClaim {
             com: u.com,
             values: u.values.clone(),
@@ -408,18 +667,53 @@ pub(crate) fn prove_chain(
         };
         openings.push(ipa::batch_prove_eval_expr(&uk.g_upd, &[claim], &e_row, tr, rng));
     }
-    let vb = update_validity_bases(uk);
     let validity = zkrelu::prove_validity(&vb, &aux, &e_row, u_dd, v_stack, Fr::ZERO, tr, rng);
 
     ChainProof {
+        rule: uk.rule,
+        lr_shifts,
+        com_state,
         com_u,
         p1_upd: p1,
         v_w,
         v_gw,
+        v_state,
         v_stack,
         openings,
         validity,
     }
+}
+
+/// Structural validation shared by the wire decoder and the verifier:
+/// rule parameters, shift-table shape and digit budgets, stack dimensions,
+/// and the per-step tensor counts the proof must carry.
+pub fn validate_chain_shape(cfg: &ModelConfig, steps: usize, chain: &ChainProof) -> Result<()> {
+    let r = &chain.rule;
+    ensure!(steps >= 2, "chained trace needs at least two steps");
+    ensure!(
+        chain.lr_shifts.len() == steps - 1,
+        "chain: shift table length {} != {} boundaries",
+        chain.lr_shifts.len(),
+        steps - 1
+    );
+    rule::validate_shift_table(cfg, r, &chain.lr_shifts).context("chain: shift table")?;
+    checked_stack_dims(cfg, steps, r.n_rem())?;
+    ensure!(chain.v_w.len() == steps * cfg.depth, "chain: v_w length");
+    ensure!(
+        chain.v_gw.len() == (steps - 1) * cfg.depth,
+        "chain: v_gw length"
+    );
+    ensure!(
+        chain.v_state.len() == r.n_state() && chain.com_state.len() == r.n_state(),
+        "chain: state slot count"
+    );
+    for (vs, cs) in chain.v_state.iter().zip(chain.com_state.iter()) {
+        ensure!(
+            vs.len() == steps * cfg.depth && cs.len() == steps * cfg.depth,
+            "chain: state tensor count"
+        );
+    }
+    Ok(())
 }
 
 /// Transcript replay + deferred checks of the chain argument (mirrors
@@ -438,36 +732,37 @@ pub(crate) fn verify_chain_accum(
     let t_steps = uk.steps;
     let depth = cfg.depth;
     let log_d2 = (cfg.width * cfg.width).trailing_zeros() as usize;
-    let (_, lbar, n_upd) = update_stack_dims(cfg, t_steps);
+    ensure!(chain.rule == uk.rule, "chain: rule/key mismatch");
+    validate_chain_shape(cfg, t_steps, chain)?;
+    let n_rem = uk.rule.n_rem();
+    let (_, lbar, rbar, n_upd) = update_stack_dims(cfg, t_steps, n_rem);
     let nb = t_steps - 1;
 
     ensure!(coms.len() == t_steps, "chain: step commitment count");
-    ensure!(chain.v_w.len() == t_steps * depth, "chain: v_w length");
-    ensure!(chain.v_gw.len() == nb * depth, "chain: v_gw length");
     ensure!(chain.openings.len() == 3, "chain: opening count");
     ensure!(
         chain.p1_upd.com_sign_prime.is_none(),
         "chain: unexpected sign coupling"
     );
 
-    let two_s = two_s(cfg);
     let p_u = tr.challenge_frs(b"upd/p", log_d2);
     let e_u = eq_table(&p_u);
 
-    // the boundary relation *defines* the remainder claims
-    let mut v_ru = Vec::with_capacity(nb * depth);
-    for b in 0..nb {
-        for l in 0..depth {
-            v_ru.push(
-                chain.v_gw[b * depth + l]
-                    - two_s * (chain.v_w[b * depth + l] - chain.v_w[(b + 1) * depth + l]),
-            );
-        }
-    }
+    // the rule's relation table *defines* the remainder claims
+    let v_ru = derived_remainder_claims(
+        cfg,
+        &uk.rule,
+        &chain.lr_shifts,
+        depth,
+        &chain.v_w,
+        &chain.v_gw,
+        &chain.v_state,
+    );
 
     // U1
     {
-        let mut claims = Vec::with_capacity((t_steps + nb) * depth);
+        let mut claims =
+            Vec::with_capacity((t_steps + nb + uk.rule.n_state() * t_steps) * depth);
         for (t, set) in coms.iter().enumerate() {
             for l in 0..depth {
                 claims.push((
@@ -484,13 +779,23 @@ pub(crate) fn verify_chain_accum(
                 ));
             }
         }
+        for (s, per_slot) in chain.com_state.iter().enumerate() {
+            for (i, p) in per_slot.iter().enumerate() {
+                claims.push((ComExpr::point(p.to_projective()), chain.v_state[s][i]));
+            }
+        }
         ipa::batch_verify_eval_expr(g_mat, &claims, &e_u, &chain.openings[0], tr, acc)
             .context("chain boundary opening")?;
     }
     // U2
     {
         let gamma = tr.challenge_fr(b"upd/gamma");
-        let w_sel = gamma_selected_eq(&e_u, n_upd, &live_slots(nb, depth, lbar), gamma);
+        let w_sel = gamma_selected_eq(
+            &e_u,
+            n_upd,
+            &live_slots(nb, depth, lbar, n_rem, rbar),
+            gamma,
+        );
         ipa::batch_verify_eval_expr(
             &uk.g_upd,
             &[(ComExpr::point(chain.com_u.to_projective()), gamma_fold(&v_ru, gamma))],
@@ -519,7 +824,8 @@ pub(crate) fn verify_chain_accum(
         )
         .context("chain stacked opening")?;
     }
-    let vb = update_validity_bases(uk);
+    let (layout, width) = chain_digit_layout(cfg, t_steps, &uk.rule, &chain.lr_shifts)?;
+    let vb = update_validity_bases(uk, &layout, width);
     zkrelu::verify_validity_accum(
         &vb,
         &chain.p1_upd,
@@ -541,23 +847,45 @@ mod tests {
     use super::*;
 
     #[test]
-    fn dims_pad_boundaries_and_layers() {
+    fn dims_pad_boundaries_layers_and_relations() {
         let cfg = ModelConfig::new(3, 8, 4);
-        let (bbar, lbar, n) = update_stack_dims(&cfg, 4);
-        assert_eq!((bbar, lbar), (4, 4)); // 3 boundaries pad to 4
+        let (bbar, lbar, rbar, n) = update_stack_dims(&cfg, 4, 1);
+        assert_eq!((bbar, lbar, rbar), (4, 4, 1)); // 3 boundaries pad to 4
         assert_eq!(n, 4 * 4 * 64);
-        let (digits, width) = update_widths(&cfg);
-        assert_eq!(digits, 24); // R=16 + lr=8
-        assert_eq!(width, 32);
+        // momentum: two relations pad to R̄ = 2, doubling the stack
+        let (_, _, rbar2, n2) = update_stack_dims(&cfg, 4, 2);
+        assert_eq!(rbar2, 2);
+        assert_eq!(n2, 2 * n);
+        // three relations (an Adam-shaped rule) pad to 4
+        let (_, _, rbar3, _) = update_stack_dims(&cfg, 4, 3);
+        assert_eq!(rbar3, 4);
     }
 
     #[test]
     fn checked_dims_reject_degenerate_stacks() {
-        // width 1 × depth 1 × one boundary: 1-element stack, unprovable
-        assert!(checked_stack_dims(&ModelConfig::new(1, 1, 1), 2).is_err());
+        // width 1 × depth 1 × one boundary × one relation: 1-element stack
+        assert!(checked_stack_dims(&ModelConfig::new(1, 1, 1), 2, 1).is_err());
         // fewer than two steps: nothing to chain
-        assert!(checked_stack_dims(&ModelConfig::new(2, 8, 4), 1).is_err());
-        assert!(checked_stack_dims(&ModelConfig::new(2, 8, 4), 3).is_ok());
+        assert!(checked_stack_dims(&ModelConfig::new(2, 8, 4), 1, 1).is_err());
+        // a relation-free rule has nothing to prove
+        assert!(checked_stack_dims(&ModelConfig::new(2, 8, 4), 3, 0).is_err());
+        assert!(checked_stack_dims(&ModelConfig::new(2, 8, 4), 3, 1).is_ok());
+    }
+
+    #[test]
+    fn digit_layout_tracks_schedule_and_relations() {
+        let cfg = ModelConfig::new(1, 2, 2); // L̄ = 1, d² = 4, R = 16
+        let r = UpdateRule::momentum_default(); // budgets: [3, 16 + lr_b]
+        let (layout, width) = chain_digit_layout(&cfg, 3, &r, &[8, 9]).expect("layout");
+        // B̄ = 2, L̄ = 1, R̄ = 2 → 4 slots of 4 rows each
+        assert_eq!(width, 32); // max budget 16 + 9 = 25 → next pow2
+        let DigitLayout::PerBlock { block, digits } = &layout else {
+            panic!("chain layouts are per-block");
+        };
+        assert_eq!(*block, 4);
+        assert_eq!(digits.as_slice(), &[3, 24, 3, 25]);
+        // an S_b beyond 64 is refused outright
+        assert!(chain_digit_layout(&cfg, 3, &r, &[8, 49]).is_err());
     }
 
     #[test]
@@ -588,13 +916,43 @@ mod tests {
     }
 
     #[test]
-    fn update_key_setup_is_cached() {
+    fn live_slots_interleave_relations() {
+        // nb=2, depth=2 (lbar 2), n_rem=2 (rbar 2): slot (b·2+l)·2+j
+        assert_eq!(
+            live_slots(2, 2, 2, 2, 2),
+            vec![0, 1, 2, 3, 4, 5, 6, 7]
+        );
+        // padded layers (depth 3 → lbar 4) leave holes
+        assert_eq!(
+            live_slots(1, 3, 4, 1, 1),
+            vec![0, 1, 2]
+        );
+    }
+
+    #[test]
+    fn update_key_cache_keys_on_rule_descriptor() {
         let cfg = ModelConfig::new(2, 8, 4);
-        let a = UpdateKey::setup(cfg, 3);
-        let b = UpdateKey::setup(cfg, 3);
-        assert!(Arc::ptr_eq(&a, &b), "same (cfg, steps) shares one key");
-        let c = UpdateKey::setup(cfg, 4);
+        let a = UpdateKey::setup(cfg, 3, &UpdateRule::Sgd);
+        let b = UpdateKey::setup(cfg, 3, &UpdateRule::Sgd);
+        assert!(Arc::ptr_eq(&a, &b), "same (cfg, steps, rule) shares one key");
+        let c = UpdateKey::setup(cfg, 4, &UpdateRule::Sgd);
         assert!(!Arc::ptr_eq(&a, &c), "different step count, different key");
+        // distinct rules never share a key, even at identical stack sizes:
+        // momentum with R̄ = 2 vs SGD at double the boundary padding
+        let m = UpdateKey::setup(cfg, 3, &UpdateRule::momentum_default());
+        assert!(!Arc::ptr_eq(&a, &m), "cache miss across rule descriptors");
+        assert_eq!(m.g_upd.g.len(), 2 * a.g_upd.g.len());
+        // ... and two momentum parameterizations are distinct descriptors
+        let m2 = UpdateKey::setup(
+            cfg,
+            3,
+            &UpdateRule::Momentum {
+                beta_num: 3,
+                beta_shift: 2,
+            },
+        );
+        assert!(!Arc::ptr_eq(&m, &m2), "β is part of the descriptor");
+        assert_eq!(m.g_upd.g.len(), m2.g_upd.g.len(), "same size, different bases");
     }
 
     #[test]
@@ -604,11 +962,33 @@ mod tests {
         let cfg = ModelConfig::new(2, 8, 4);
         let ds = Dataset::synthetic(64, 4, 4, cfg.r_bits, 9);
         let mut wits = sgd_witness_chain(cfg, &ds, 3, 0xc4a1);
-        assert!(ChainWitness::build(&wits).is_ok());
+        let shifts = vec![cfg.lr_shift; 2];
+        assert!(ChainWitness::build(&UpdateRule::Sgd, &shifts, &wits).is_ok());
         crate::witness::validate_chain(&wits).expect("honest chain validates");
         // perturb one weight of step 1: boundary 0 no longer chains
         wits[1].layers[0].w[5] += 1;
-        assert!(ChainWitness::build(&wits).is_err());
+        assert!(ChainWitness::build(&UpdateRule::Sgd, &shifts, &wits).is_err());
         assert!(crate::witness::validate_chain(&wits).is_err());
+    }
+
+    #[test]
+    fn momentum_chain_witness_builds_state_tensors() {
+        use crate::data::Dataset;
+        use crate::witness::native::rule_witness_chain;
+        let cfg = ModelConfig::new(2, 8, 4);
+        let r = UpdateRule::momentum_default();
+        let sched = LrSchedule::Constant(cfg.lr_shift);
+        let ds = Dataset::synthetic(64, 4, 4, cfg.r_bits, 10);
+        let wits = rule_witness_chain(cfg, &r, &sched, &ds, 3, 0xc4a2);
+        let shifts = sched.window_table(0, 2);
+        let cw = ChainWitness::build(&r, &shifts, &wits).expect("momentum chain builds");
+        assert_eq!(cw.rems.len(), 2);
+        assert_eq!(cw.rems[0][0].len(), 2, "two remainders per (b, ℓ)");
+        assert_eq!(cw.state.len(), 1);
+        assert_eq!(cw.state[0].len(), 3 * cfg.depth);
+        // a tampered accumulator cannot be witnessed
+        let mut bad = wits;
+        bad[1].opt_state[0][1][3] += 1;
+        assert!(ChainWitness::build(&r, &shifts, &bad).is_err());
     }
 }

@@ -1,0 +1,516 @@
+//! zkOptim update rules — optimizers as *data*, not chain machinery.
+//!
+//! ISSUE 3's chain argument hard-coded plain SGD: one remainder tensor per
+//! boundary, one global learning-rate shift, one digit width everywhere.
+//! This module factors the optimizer out of the chain: an [`UpdateRule`]
+//! declares, per training step, a set of committed *state tensors* (the
+//! momentum accumulator `m` for heavy-ball; none for SGD — weights are
+//! already the trace's statement) and, per boundary, a table of linear
+//! *update relations*
+//!
+//! ```text
+//!     Σ_k c_k·X_k = 2^{S_b}·(Σ_k d_k·Y_k) + R_j,
+//!     R_j ∈ [−2^{S_b−1}, 2^{S_b−1}),
+//! ```
+//!
+//! one per rounded division the optimizer performs, each with its own
+//! remainder tensor R_j and per-boundary digit budget S_b. Because the
+//! remainder range is exactly the round-to-nearest range of
+//! [`crate::model::round_div_pow2`], the decomposition is *unique*:
+//! proving every relation proves the exact quantized update, whatever the
+//! rule. The chain prover/verifier ([`crate::update`]) consume only this
+//! table — a new optimizer is a new relation table, not a new argument.
+//!
+//! Rules shipped here:
+//!
+//! * **SGD** — `W_{t+1} = W_t − ⌊G_W/2^{S_b}⌉`, the trivial one-relation
+//!   rule, byte-for-byte the semantics of the pre-rule chain;
+//! * **heavy-ball momentum** — `m_{t+1} = ⌊β·m_t⌉ + G_W` and
+//!   `W_{t+1} = W_t − ⌊m_{t+1}/2^{S_b}⌉` with β = β_num/2^{β_shift} < 1:
+//!   two relations, two remainders, one committed state tensor per
+//!   (step, layer). Adam's (m, v) pair slots into the same shape — two
+//!   state slots, three relations — see DESIGN.md §update.
+//!
+//! The learning rate is a per-boundary shift table ([`LrSchedule`]):
+//! lr at step t = 2^{−shift(t)}, so S_b = R + shift(b) varies across the
+//! window and each boundary's remainder gets its own digit budget.
+
+use crate::model::{round_div_pow2, round_div_pow2_i128, ModelConfig, Weights};
+use anyhow::{bail, ensure, Result};
+
+/// A committed tensor referenced by a relation at boundary b (the boundary
+/// between step b and step b+1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Operand {
+    /// Weights W_b entering the boundary (trace commitment, scale 2^R).
+    WPrev,
+    /// Weights W_{b+1} leaving the boundary.
+    WNext,
+    /// Weight gradient G_W of step b (trace commitment, scale 2^{2R}).
+    GradW,
+    /// Rule state tensor `slot` of step b (chain commitment).
+    StatePrev(usize),
+    /// Rule state tensor `slot` of step b+1.
+    StateNext(usize),
+}
+
+/// One term c·X of a relation side; coefficients are small signed integers
+/// (exact over i128 on the witness side, embedded via `Fr::from_i64` on
+/// the field side).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RelTerm {
+    pub coeff: i64,
+    pub op: Operand,
+}
+
+/// Digit budget S_b of a relation's remainder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShiftKind {
+    /// S_b = r_bits + lr_shift_b — the learning-rate division, the one
+    /// place the per-boundary schedule enters the argument.
+    LrSchedule,
+    /// S_b = const — boundary-independent divisions (momentum decay).
+    Fixed(u32),
+}
+
+/// One linear update relation; see the module doc for the equation.
+#[derive(Clone, Debug)]
+pub struct Relation {
+    pub name: &'static str,
+    /// Σ_k c_k·X_k — the dividend side.
+    pub lhs: Vec<RelTerm>,
+    /// Σ_k d_k·Y_k — the side multiplied by 2^{S_b}.
+    pub shifted: Vec<RelTerm>,
+    pub shift: ShiftKind,
+}
+
+impl Relation {
+    /// Digit budget at boundary b given the per-boundary lr shift.
+    pub fn digits(&self, cfg: &ModelConfig, lr_shift_b: u32) -> u32 {
+        match self.shift {
+            ShiftKind::LrSchedule => cfg.r_bits + lr_shift_b,
+            ShiftKind::Fixed(s) => s,
+        }
+    }
+}
+
+/// Wire tag byte of a rule (part of the artifact statement).
+pub const RULE_TAG_SGD: u8 = 1;
+/// Wire tag byte of the heavy-ball momentum rule.
+pub const RULE_TAG_MOMENTUM: u8 = 2;
+
+/// The optimizer whose exact quantized updates a chained trace proves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum UpdateRule {
+    /// Plain SGD: W_{t+1} = W_t − ⌊G_W/2^{R+lr_b}⌉.
+    Sgd,
+    /// Heavy-ball momentum with β = beta_num/2^{beta_shift} < 1:
+    /// m_{t+1} = ⌊β·m_t⌉ + G_W,  W_{t+1} = W_t − ⌊m_{t+1}/2^{R+lr_b}⌉.
+    Momentum { beta_num: u32, beta_shift: u32 },
+}
+
+impl UpdateRule {
+    /// Heavy-ball with the conventional β = 7/8.
+    pub fn momentum_default() -> Self {
+        UpdateRule::Momentum {
+            beta_num: 7,
+            beta_shift: 3,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            UpdateRule::Sgd => "sgd",
+            UpdateRule::Momentum { .. } => "momentum",
+        }
+    }
+
+    pub fn tag(&self) -> u8 {
+        match self {
+            UpdateRule::Sgd => RULE_TAG_SGD,
+            UpdateRule::Momentum { .. } => RULE_TAG_MOMENTUM,
+        }
+    }
+
+    /// Number of rule-owned state tensors committed per (step, layer).
+    pub fn n_state(&self) -> usize {
+        match self {
+            UpdateRule::Sgd => 0,
+            UpdateRule::Momentum { .. } => 1,
+        }
+    }
+
+    /// Display names of the state slots (for CLI/report output).
+    pub fn state_names(&self) -> &'static [&'static str] {
+        match self {
+            UpdateRule::Sgd => &[],
+            UpdateRule::Momentum { .. } => &["m"],
+        }
+    }
+
+    /// Number of update relations — remainder tensors per (boundary, layer).
+    pub fn n_rem(&self) -> usize {
+        self.relations().len()
+    }
+
+    /// The relation table (see the module doc for the derivations).
+    pub fn relations(&self) -> Vec<Relation> {
+        match *self {
+            // G_W = 2^{S_b}·(W_b − W_{b+1}) + R
+            UpdateRule::Sgd => vec![Relation {
+                name: "sgd-step",
+                lhs: vec![RelTerm {
+                    coeff: 1,
+                    op: Operand::GradW,
+                }],
+                shifted: vec![
+                    RelTerm {
+                        coeff: 1,
+                        op: Operand::WPrev,
+                    },
+                    RelTerm {
+                        coeff: -1,
+                        op: Operand::WNext,
+                    },
+                ],
+                shift: ShiftKind::LrSchedule,
+            }],
+            // β_num·m_b = 2^{β_shift}·(m_{b+1} − G_W) + R_m
+            // m_{b+1}   = 2^{S_b}·(W_b − W_{b+1}) + R_w
+            UpdateRule::Momentum {
+                beta_num,
+                beta_shift,
+            } => vec![
+                Relation {
+                    name: "momentum-accum",
+                    lhs: vec![RelTerm {
+                        coeff: beta_num as i64,
+                        op: Operand::StatePrev(0),
+                    }],
+                    shifted: vec![
+                        RelTerm {
+                            coeff: 1,
+                            op: Operand::StateNext(0),
+                        },
+                        RelTerm {
+                            coeff: -1,
+                            op: Operand::GradW,
+                        },
+                    ],
+                    shift: ShiftKind::Fixed(beta_shift),
+                },
+                Relation {
+                    name: "momentum-step",
+                    lhs: vec![RelTerm {
+                        coeff: 1,
+                        op: Operand::StateNext(0),
+                    }],
+                    shifted: vec![
+                        RelTerm {
+                            coeff: 1,
+                            op: Operand::WPrev,
+                        },
+                        RelTerm {
+                            coeff: -1,
+                            op: Operand::WNext,
+                        },
+                    ],
+                    shift: ShiftKind::LrSchedule,
+                },
+            ],
+        }
+    }
+
+    /// Reject malformed rule parameters (decoded artifacts reach this
+    /// before any key setup).
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            UpdateRule::Sgd => Ok(()),
+            UpdateRule::Momentum {
+                beta_num,
+                beta_shift,
+            } => {
+                // β_shift is a Fixed digit budget: zkReLU needs ≥ 2 digits
+                // and the i64 remainder embedding caps it at 64; β < 1
+                // keeps the accumulator geometrically bounded.
+                ensure!(
+                    (2..=63).contains(&beta_shift),
+                    "momentum beta_shift {beta_shift} outside 2..=63"
+                );
+                ensure!(
+                    beta_num >= 1 && (beta_num as u64) < (1u64 << beta_shift),
+                    "momentum beta {beta_num}/2^{beta_shift} not in (0, 1)"
+                );
+                Ok(())
+            }
+        }
+    }
+
+    /// Canonical descriptor bytes: tag ‖ params. Pins commitment-key and
+    /// validity-basis cache entries and feeds the transcript, so distinct
+    /// rules can never share bases or challenges.
+    pub fn descriptor_bytes(&self) -> Vec<u8> {
+        match *self {
+            UpdateRule::Sgd => vec![RULE_TAG_SGD],
+            UpdateRule::Momentum {
+                beta_num,
+                beta_shift,
+            } => {
+                let mut out = vec![RULE_TAG_MOMENTUM];
+                out.extend_from_slice(&beta_num.to_le_bytes());
+                out.extend_from_slice(&beta_shift.to_le_bytes());
+                out
+            }
+        }
+    }
+
+    /// Zero-initialized optimizer state (the canonical start of a run; a
+    /// mid-run window's state commitment is part of its statement, like
+    /// W_0 itself).
+    pub fn init_state(&self, cfg: &ModelConfig) -> Vec<Vec<Vec<i64>>> {
+        let d2 = cfg.width * cfg.width;
+        (0..self.n_state())
+            .map(|_| (0..cfg.depth).map(|_| vec![0i64; d2]).collect())
+            .collect()
+    }
+
+    /// Apply one step's exact quantized update in place — the integer
+    /// semantics the chain argument proves. `lr_shift_b` is this
+    /// boundary's schedule entry; `grads` are the step's G_W tensors.
+    /// Panics if a momentum accumulator overflows i64 (scale down inputs),
+    /// mirroring the matmul overflow policy.
+    pub fn apply_update(
+        &self,
+        lr_shift_b: u32,
+        weights: &mut Weights,
+        state: &mut [Vec<Vec<i64>>],
+        grads: &[Vec<i64>],
+    ) {
+        let cfg = weights.cfg;
+        let s_bits = cfg.r_bits + lr_shift_b;
+        assert_eq!(grads.len(), cfg.depth);
+        assert_eq!(state.len(), self.n_state());
+        match *self {
+            UpdateRule::Sgd => {
+                for (w, g) in weights.layers.iter_mut().zip(grads.iter()) {
+                    for (wi, gi) in w.iter_mut().zip(g.iter()) {
+                        *wi -= round_div_pow2(*gi, s_bits);
+                    }
+                }
+            }
+            UpdateRule::Momentum {
+                beta_num,
+                beta_shift,
+            } => {
+                let m_state = &mut state[0];
+                for l in 0..cfg.depth {
+                    let (w, m, g) = (&mut weights.layers[l], &mut m_state[l], &grads[l]);
+                    for i in 0..g.len() {
+                        let decayed =
+                            round_div_pow2_i128(beta_num as i128 * m[i] as i128, beta_shift);
+                        m[i] = i64::try_from(decayed + g[i] as i128)
+                            .expect("momentum accumulator overflow: scale down inputs");
+                        w[i] -= round_div_pow2(m[i], s_bits);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Per-step learning-rate schedule: lr at step t = 2^{−shift_at(t)}.
+/// A *decaying* learning rate is an *increasing* shift.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LrSchedule {
+    /// The same shift at every step (the pre-schedule behavior when set to
+    /// `cfg.lr_shift`).
+    Constant(u32),
+    /// shift(t) = min(base + t/period, max): the lr halves every `period`
+    /// steps until it reaches 2^{−max}.
+    StepDecay { base: u32, period: usize, max: u32 },
+}
+
+impl LrSchedule {
+    pub fn shift_at(&self, step: usize) -> u32 {
+        match *self {
+            LrSchedule::Constant(s) => s,
+            LrSchedule::StepDecay { base, period, max } => {
+                let bump = (step / period.max(1)) as u64;
+                let shifted = (base as u64).saturating_add(bump);
+                shifted.min(max as u64) as u32
+            }
+        }
+    }
+
+    /// The explicit shift table a window's chain proof carries: one entry
+    /// per boundary, boundary b of a window starting at `start_step` being
+    /// the update applied after global step `start_step + b`.
+    pub fn window_table(&self, start_step: usize, boundaries: usize) -> Vec<u32> {
+        (0..boundaries)
+            .map(|b| self.shift_at(start_step + b))
+            .collect()
+    }
+
+    /// Parse the CLI spec: `"8"` or `"const:8"` for a constant shift,
+    /// `"decay:base,period,max"` (e.g. `decay:6,2,12`) for step decay.
+    pub fn parse(spec: &str) -> Result<Self> {
+        if let Some(rest) = spec.strip_prefix("decay:") {
+            let parts: Vec<&str> = rest.split(',').collect();
+            ensure!(
+                parts.len() == 3,
+                "lr-schedule decay wants base,period,max — got {spec:?}"
+            );
+            let base: u32 = parts[0].parse()?;
+            let period: usize = parts[1].parse()?;
+            let max: u32 = parts[2].parse()?;
+            ensure!(period >= 1, "lr-schedule decay period must be ≥ 1");
+            ensure!(max >= base, "lr-schedule decay max {max} below base {base}");
+            Ok(LrSchedule::StepDecay { base, period, max })
+        } else {
+            let plain = spec.strip_prefix("const:").unwrap_or(spec);
+            match plain.parse::<u32>() {
+                Ok(s) => Ok(LrSchedule::Constant(s)),
+                Err(_) => bail!("unrecognized lr-schedule {spec:?} (want N, const:N, or decay:base,period,max)"),
+            }
+        }
+    }
+}
+
+/// Validate a per-boundary shift table against the provable digit range:
+/// every S_b = r_bits + shift_b (and every fixed relation budget) must be
+/// a signed digit count in 2..=64 — beyond 64 the i64 remainder embedding
+/// and the i128 witness arithmetic lose exactness, so such schedules are
+/// refused at prove, verify, *and* decode time.
+pub fn validate_shift_table(cfg: &ModelConfig, rule: &UpdateRule, lr_shifts: &[u32]) -> Result<()> {
+    rule.validate()?;
+    for rel in rule.relations() {
+        for (b, &shift) in lr_shifts.iter().enumerate() {
+            let s = rel.digits(cfg, shift) as u64;
+            ensure!(
+                (2..=64).contains(&s),
+                "relation {} digit budget {s} at boundary {b} outside the provable 2..=64",
+                rel.name
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rule_shapes() {
+        assert_eq!(UpdateRule::Sgd.n_rem(), 1);
+        assert_eq!(UpdateRule::Sgd.n_state(), 0);
+        let m = UpdateRule::momentum_default();
+        assert_eq!(m.n_rem(), 2);
+        assert_eq!(m.n_state(), 1);
+        assert_ne!(
+            UpdateRule::Sgd.descriptor_bytes(),
+            m.descriptor_bytes(),
+            "descriptors separate rules"
+        );
+        m.validate().unwrap();
+        assert!(UpdateRule::Momentum {
+            beta_num: 8,
+            beta_shift: 3
+        }
+        .validate()
+        .is_err());
+        assert!(UpdateRule::Momentum {
+            beta_num: 1,
+            beta_shift: 1
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn sgd_apply_matches_legacy_weights_update() {
+        let cfg = ModelConfig::new(2, 8, 4);
+        let mut rng = Rng::seed_from_u64(0x5d);
+        let mut a = Weights::init(cfg, &mut rng);
+        let mut b = a.clone();
+        let grads: Vec<Vec<i64>> = (0..cfg.depth)
+            .map(|_| {
+                (0..cfg.width * cfg.width)
+                    .map(|_| rng.gen_i64(-(1 << 40), 1 << 40))
+                    .collect()
+            })
+            .collect();
+        a.apply_update(&grads);
+        let mut state = UpdateRule::Sgd.init_state(&cfg);
+        UpdateRule::Sgd.apply_update(cfg.lr_shift, &mut b, &mut state, &grads);
+        assert_eq!(a.layers, b.layers, "trivial rule = legacy SGD update");
+    }
+
+    #[test]
+    fn momentum_update_satisfies_its_relations() {
+        let cfg = ModelConfig::new(1, 2, 2);
+        let rule = UpdateRule::momentum_default();
+        let (bn, bs) = (7i128, 3u32);
+        let mut rng = Rng::seed_from_u64(0x6d);
+        let mut w = Weights {
+            layers: vec![(0..4).map(|_| rng.gen_i64(-1000, 1000)).collect()],
+            cfg,
+        };
+        let mut state = rule.init_state(&cfg);
+        state[0][0] = (0..4).map(|_| rng.gen_i64(-(1 << 30), 1 << 30)).collect();
+        let grads = vec![(0..4).map(|_| rng.gen_i64(-(1 << 38), 1 << 38)).collect::<Vec<i64>>()];
+        let (w0, m0) = (w.layers[0].clone(), state[0][0].clone());
+        let lr_b = 9u32;
+        rule.apply_update(lr_b, &mut w, &mut state, &grads);
+        let s_bits = cfg.r_bits + lr_b;
+        for i in 0..4 {
+            let (m1, w1) = (state[0][0][i], w.layers[0][i]);
+            // β_num·m0 = 2^{βs}·(m1 − g) + R_m with R_m in range
+            let r_m = bn * m0[i] as i128 - ((m1 - grads[0][i]) as i128) * (1i128 << bs);
+            assert!((-(1i128 << (bs - 1))..(1i128 << (bs - 1))).contains(&r_m), "i={i}");
+            // m1 = 2^{S}·(w0 − w1) + R_w with R_w in range
+            let r_w = m1 as i128 - ((w0[i] - w1) as i128) * (1i128 << s_bits);
+            let half = 1i128 << (s_bits - 1);
+            assert!((-half..half).contains(&r_w), "i={i}");
+        }
+    }
+
+    #[test]
+    fn schedule_shapes_and_parsing() {
+        let s = LrSchedule::StepDecay {
+            base: 6,
+            period: 2,
+            max: 8,
+        };
+        assert_eq!(
+            (0..7).map(|t| s.shift_at(t)).collect::<Vec<_>>(),
+            vec![6, 6, 7, 7, 8, 8, 8]
+        );
+        assert_eq!(s.window_table(2, 3), vec![7, 7, 8]);
+        assert_eq!(LrSchedule::parse("8").unwrap(), LrSchedule::Constant(8));
+        assert_eq!(
+            LrSchedule::parse("const:11").unwrap(),
+            LrSchedule::Constant(11)
+        );
+        assert_eq!(
+            LrSchedule::parse("decay:6,2,12").unwrap(),
+            LrSchedule::StepDecay {
+                base: 6,
+                period: 2,
+                max: 12
+            }
+        );
+        assert!(LrSchedule::parse("warmup:3").is_err());
+        assert!(LrSchedule::parse("decay:6,0,12").is_err());
+    }
+
+    #[test]
+    fn shift_table_rejects_unprovable_widths() {
+        let cfg = ModelConfig::new(2, 8, 4); // R = 16
+        let rule = UpdateRule::Sgd;
+        validate_shift_table(&cfg, &rule, &[8, 9, 48]).expect("S ≤ 64 ok");
+        // S = 16 + 49 = 65 > 64: refused
+        assert!(validate_shift_table(&cfg, &rule, &[8, 49]).is_err());
+    }
+}

@@ -27,7 +27,8 @@ use crate::field::Fr;
 use crate::ipa::IpaProof;
 use crate::model::ModelConfig;
 use crate::sumcheck::SumcheckProof;
-use crate::update::ChainProof;
+use crate::update::rule::{RULE_TAG_MOMENTUM, RULE_TAG_SGD};
+use crate::update::{ChainProof, UpdateRule};
 use crate::zkdl::{GroupProof, ProofMode, StepProof};
 use crate::zkrelu::{Protocol1Msg, ValidityProof};
 use anyhow::{bail, ensure, Context, Result};
@@ -45,7 +46,13 @@ pub const MAGIC: [u8; 4] = *b"ZKDL";
 /// v4: chain payload carries one stacked remainder commitment `com_u`
 /// (was per-boundary commitment rows) and the chain transcript absorbs
 /// `com/u` and draws the `upd/gamma` block-selector challenge.
-pub const VERSION: u16 = 4;
+/// v5: zkOptim — the chain payload opens with an update-rule tag (plus
+/// rule parameters), a per-boundary lr-shift table, and per-step rule
+/// state commitments (momentum accumulators); the stacked remainder
+/// tensor gains a relation axis and the transcript absorbs the full rule
+/// statement. v4 chained artifacts are rejected as unsupported, not
+/// misparsed.
+pub const VERSION: u16 = 5;
 
 /// Payload discriminant in the envelope header.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -166,6 +173,24 @@ impl<'a> WireReader<'a> {
         T::from_wire(self)
     }
 
+    /// Length-prefixed vector of compressed points, decoded with ONE
+    /// batched decompression pass ([`G1Affine::batch_from_bytes_compressed`])
+    /// instead of a sqrt per element in the element loop — the point
+    /// vectors dominate artifact decode time, and the batch path runs the
+    /// root exponentiations across worker threads. Byte-compatible with
+    /// the generic `Vec<G1Affine>` element-wise codec (equivalence is
+    /// pinned by tests).
+    pub fn get_points(&mut self) -> Result<Vec<G1Affine>> {
+        let n = self.get_len()?;
+        let total = n.checked_mul(32).context("wire: point vector overflow")?;
+        let raw = self.take(total)?;
+        let encodings: Vec<[u8; 32]> = raw
+            .chunks_exact(32)
+            .map(|c| c.try_into().unwrap())
+            .collect();
+        G1Affine::batch_from_bytes_compressed(&encodings).context("wire: invalid curve point")
+    }
+
     /// The input must be consumed exactly.
     pub fn expect_end(&self) -> Result<()> {
         ensure!(self.remaining() == 0, "wire: {} trailing bytes", self.remaining());
@@ -213,6 +238,18 @@ impl FromWire for G1Affine {
     fn from_wire(r: &mut WireReader) -> Result<Self> {
         let raw: [u8; 32] = r.take(32)?.try_into().unwrap();
         G1Affine::from_bytes_compressed(&raw).context("wire: invalid curve point")
+    }
+}
+
+impl ToWire for u32 {
+    fn to_wire(&self, w: &mut WireWriter) {
+        w.put_u32(*self);
+    }
+}
+
+impl FromWire for u32 {
+    fn from_wire(r: &mut WireReader) -> Result<Self> {
+        r.get_u32()
     }
 }
 
@@ -403,8 +440,8 @@ impl ToWire for IpaProof {
 impl FromWire for IpaProof {
     fn from_wire(r: &mut WireReader) -> Result<Self> {
         Ok(IpaProof {
-            l: r.get()?,
-            r: r.get()?,
+            l: r.get_points()?,
+            r: r.get_points()?,
             a: r.get()?,
             b: r.get()?,
             blind: r.get()?,
@@ -512,13 +549,13 @@ impl FromWire for StepProof {
     fn from_wire(r: &mut WireReader) -> Result<Self> {
         Ok(StepProof {
             mode: r.get()?,
-            com_w: r.get()?,
-            com_gw: r.get()?,
-            com_zdp: r.get()?,
-            com_sign: r.get()?,
-            com_rz: r.get()?,
-            com_gap: r.get()?,
-            com_rga: r.get()?,
+            com_w: r.get_points()?,
+            com_gw: r.get_points()?,
+            com_zdp: r.get_points()?,
+            com_sign: r.get_points()?,
+            com_rz: r.get_points()?,
+            com_gap: r.get_points()?,
+            com_rga: r.get_points()?,
             com_x: r.get()?,
             com_y: r.get()?,
             groups: r.get()?,
@@ -543,25 +580,60 @@ impl ToWire for StepCommitmentSet {
 impl FromWire for StepCommitmentSet {
     fn from_wire(r: &mut WireReader) -> Result<Self> {
         Ok(StepCommitmentSet {
-            com_w: r.get()?,
-            com_gw: r.get()?,
-            com_zdp: r.get()?,
-            com_sign: r.get()?,
-            com_rz: r.get()?,
-            com_gap: r.get()?,
-            com_rga: r.get()?,
+            com_w: r.get_points()?,
+            com_gw: r.get_points()?,
+            com_zdp: r.get_points()?,
+            com_sign: r.get_points()?,
+            com_rz: r.get_points()?,
+            com_gap: r.get_points()?,
+            com_rga: r.get_points()?,
             com_x: r.get()?,
             com_y: r.get()?,
         })
     }
 }
 
+impl ToWire for UpdateRule {
+    fn to_wire(&self, w: &mut WireWriter) {
+        match *self {
+            UpdateRule::Sgd => w.put_u8(RULE_TAG_SGD),
+            UpdateRule::Momentum {
+                beta_num,
+                beta_shift,
+            } => {
+                w.put_u8(RULE_TAG_MOMENTUM);
+                w.put_u32(beta_num);
+                w.put_u32(beta_shift);
+            }
+        }
+    }
+}
+
+impl FromWire for UpdateRule {
+    fn from_wire(r: &mut WireReader) -> Result<Self> {
+        let rule = match r.get_u8()? {
+            RULE_TAG_SGD => UpdateRule::Sgd,
+            RULE_TAG_MOMENTUM => UpdateRule::Momentum {
+                beta_num: r.get_u32()?,
+                beta_shift: r.get_u32()?,
+            },
+            other => bail!("wire: unknown update-rule tag {other}"),
+        };
+        rule.validate().context("wire: update rule")?;
+        Ok(rule)
+    }
+}
+
 impl ToWire for ChainProof {
     fn to_wire(&self, w: &mut WireWriter) {
+        w.put(&self.rule);
+        w.put(&self.lr_shifts);
+        w.put(&self.com_state);
         w.put(&self.com_u);
         w.put(&self.p1_upd);
         w.put(&self.v_w);
         w.put(&self.v_gw);
+        w.put(&self.v_state);
         w.put(&self.v_stack);
         w.put(&self.openings);
         w.put(&self.validity);
@@ -570,11 +642,22 @@ impl ToWire for ChainProof {
 
 impl FromWire for ChainProof {
     fn from_wire(r: &mut WireReader) -> Result<Self> {
+        let rule: UpdateRule = r.get()?;
+        let lr_shifts: Vec<u32> = r.get()?;
+        let n_rows = r.get_len()?;
+        let mut com_state = Vec::with_capacity(n_rows.min(4096));
+        for _ in 0..n_rows {
+            com_state.push(r.get_points()?);
+        }
         Ok(ChainProof {
+            rule,
+            lr_shifts,
+            com_state,
             com_u: r.get()?,
             p1_upd: r.get()?,
             v_w: r.get()?,
             v_gw: r.get()?,
+            v_state: r.get()?,
             v_stack: r.get()?,
             openings: r.get()?,
             validity: r.get()?,
@@ -724,22 +807,15 @@ pub fn decode_trace_proof(bytes: &[u8]) -> Result<(ModelConfig, TraceProof)> {
         "wire: trace basis of {n} elements exceeds the decoder limit"
     );
     if let Some(chain) = &proof.chain {
-        ensure!(
-            proof.steps >= 2,
-            "wire: chained trace needs at least two steps"
-        );
-        ensure!(
-            chain.v_w.len() == proof.steps * cfg.depth,
-            "wire: chain boundary-evaluation count"
-        );
-        ensure!(
-            chain.v_gw.len() == (proof.steps - 1) * cfg.depth,
-            "wire: chain gradient-evaluation count"
-        );
-        // rejects the degenerate 1-element stack and dimension overflow —
-        // the verifier's key setup would otherwise panic on untrusted input
-        let (_, _, n_upd) = crate::update::checked_stack_dims(&cfg, proof.steps)
-            .context("wire: chain dimensions")?;
+        // rule parameters, shift-table digit budgets, state/evaluation
+        // tensor counts, the degenerate 1-element stack, and dimension
+        // overflow — the verifier's key setup would otherwise panic (or
+        // compute a wrong-shaped instance) on untrusted input
+        crate::update::validate_chain_shape(&cfg, proof.steps, chain)
+            .context("wire: chain payload")?;
+        let (_, _, _, n_upd) =
+            crate::update::checked_stack_dims(&cfg, proof.steps, chain.rule.n_rem())
+                .context("wire: chain dimensions")?;
         ensure!(
             n_upd <= MAX_TRACE_AUX_SIZE,
             "wire: chain basis of {n_upd} elements exceeds the decoder limit"
@@ -775,6 +851,61 @@ mod tests {
         assert_eq!(r.get::<Option<Fr>>().unwrap(), None);
         assert_eq!(r.get::<Vec<Fr>>().unwrap(), vec![fr, fr + Fr::ONE]);
         r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn point_vectors_roundtrip_through_batched_decoder() {
+        // get_points must parse exactly the bytes the element-wise encoder
+        // writes — including identities — and reject malformed elements
+        let mut rng = Rng::seed_from_u64(0x917);
+        let mut pts: Vec<G1Affine> = (0..9).map(|_| G1::random(&mut rng).to_affine()).collect();
+        pts.push(G1Affine::IDENTITY);
+        let mut w = WireWriter::new();
+        w.put(&pts);
+        let bytes = w.finish();
+        let mut r = WireReader::new(&bytes);
+        assert_eq!(r.get_points().unwrap(), pts);
+        r.expect_end().unwrap();
+        // corrupt one element: the batch fails like the scalar path would
+        let mut bad = bytes.clone();
+        bad[4 + 3 * 32 + 31] = 0xc0;
+        let mut r = WireReader::new(&bad);
+        assert!(r.get_points().is_err());
+        // truncation inside the vector body
+        let mut r = WireReader::new(&bytes[..bytes.len() - 1]);
+        assert!(r.get_points().is_err());
+    }
+
+    #[test]
+    fn update_rule_and_shift_table_roundtrip() {
+        for rule in [
+            UpdateRule::Sgd,
+            UpdateRule::momentum_default(),
+            UpdateRule::Momentum {
+                beta_num: 3,
+                beta_shift: 2,
+            },
+        ] {
+            let shifts: Vec<u32> = vec![8, 9, 10];
+            let mut w = WireWriter::new();
+            w.put(&rule);
+            w.put(&shifts);
+            let bytes = w.finish();
+            let mut r = WireReader::new(&bytes);
+            assert_eq!(r.get::<UpdateRule>().unwrap(), rule);
+            assert_eq!(r.get::<Vec<u32>>().unwrap(), vec![8, 9, 10]);
+            r.expect_end().unwrap();
+        }
+        // unknown tag and invalid β are rejected at decode time
+        let mut r = WireReader::new(&[7u8]);
+        assert!(r.get::<UpdateRule>().is_err());
+        let mut w = WireWriter::new();
+        w.put_u8(crate::update::rule::RULE_TAG_MOMENTUM);
+        w.put_u32(8); // β = 8/8 = 1: not a contraction
+        w.put_u32(3);
+        let bytes = w.finish();
+        let mut r = WireReader::new(&bytes);
+        assert!(r.get::<UpdateRule>().is_err());
     }
 
     #[test]

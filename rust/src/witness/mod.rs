@@ -11,6 +11,7 @@
 pub mod native;
 
 use crate::model::ModelConfig;
+use crate::update::rule::{Operand, UpdateRule};
 use anyhow::{ensure, Context, Result};
 
 /// Rescale decomposition of a tensor T (scale 2^{2R}) into
@@ -54,7 +55,7 @@ pub struct LayerWitness {
     pub g_w: Vec<i64>,
 }
 
-/// Full witness of one SGD step.
+/// Full witness of one training step.
 #[derive(Clone, Debug)]
 pub struct StepWitness {
     pub cfg: ModelConfig,
@@ -63,6 +64,12 @@ pub struct StepWitness {
     /// Targets Y (B×d, scale 2^R; one-hot·2^R for classification).
     pub y: Vec<i64>,
     pub layers: Vec<LayerWitness>,
+    /// Rule-owned optimizer state *entering* this step, `opt_state[s][l]`
+    /// a d² tensor for state slot s, layer ℓ (the momentum accumulator m_t
+    /// for heavy-ball; empty for plain SGD). Not constrained by
+    /// [`Self::validate`] — the zkOptim chain relations constrain it
+    /// across boundaries.
+    pub opt_state: Vec<Vec<Vec<i64>>>,
 }
 
 impl StepWitness {
@@ -188,82 +195,185 @@ impl StepWitness {
     }
 }
 
-/// Exact remainder of one quantized SGD update (the zkSGD chain witness).
+/// Exact remainder of one linear update relation over committed tensors
+/// (the zkOptim chain witness primitive):
+///     Σ_k c_k·X_k = 2^{s_bits}·(Σ_k d_k·Y_k) + R,  R ∈ [−2^{s−1}, 2^{s−1}).
 ///
-/// The coordinator's update is W_{t+1} = W_t − ⌊G_W / 2^{R+lr}⌉, whose
-/// round-to-nearest remainder is the unique R with
-///     G_W = 2^{R+lr}·(W_t − W_{t+1}) + R,   R ∈ [−2^{S−1}, 2^{S−1}),
-/// S = R_bits + lr_shift. Returns an error — "the weights do not chain" —
-/// if any entry's remainder falls outside that range, which happens exactly
-/// when W_{t+1} is not the rounded update of (W_t, G_W).
-pub fn update_remainder(
-    cfg: &ModelConfig,
-    w_prev: &[i64],
-    w_next: &[i64],
-    g_w: &[i64],
+/// The range is exactly the round-to-nearest remainder range of
+/// [`crate::model::round_div_pow2`], so the decomposition is unique and an
+/// out-of-range entry means the tensors are *not* the exact rounded update
+/// — reported as "does not chain". All arithmetic is checked i128; an
+/// overflow of the exact value certainly exceeds the range and errors the
+/// same way (the witness is refused, never silently wrong).
+pub fn relation_remainder(
+    s_bits: u32,
+    lhs: &[(i64, &[i64])],
+    shifted: &[(i64, &[i64])],
 ) -> Result<Vec<i64>> {
-    let s_bits = cfg.r_bits + cfg.lr_shift;
-    // wire validation allows R+lr up to 125; beyond 64 the shift below would
-    // silently drop high bits of the weight difference and an in-range R
-    // would not fit the i64 the prover embeds, so refuse to witness such
-    // configs (an honest chain there updates no weights anyway)
+    // beyond 64 the shifted side drops high bits and an in-range R would
+    // not fit the i64 the prover embeds, so refuse to witness such widths
     ensure!(
         (2..=64).contains(&s_bits),
-        "update-remainder width R+lr = {s_bits} outside the provable 2..=64"
+        "relation digit budget {s_bits} outside the provable 2..=64"
     );
+    let n = lhs
+        .first()
+        .or(shifted.first())
+        .map(|(_, t)| t.len())
+        .unwrap_or(0);
+    ensure!(n > 0, "empty update relation");
+    for (_, t) in lhs.iter().chain(shifted.iter()) {
+        ensure!(t.len() == n, "update tensor shape mismatch");
+    }
     let half = 1i128 << (s_bits - 1);
-    ensure!(
-        w_prev.len() == w_next.len() && w_prev.len() == g_w.len(),
-        "update tensor shape mismatch"
-    );
-    let mut out = Vec::with_capacity(g_w.len());
-    for i in 0..g_w.len() {
-        let r = (w_prev[i] as i128 - w_next[i] as i128)
-            .checked_mul(1i128 << s_bits)
-            .and_then(|scaled| (g_w[i] as i128).checked_sub(scaled));
-        // overflow of the exact i128 value certainly exceeds the range
+    let side = |terms: &[(i64, &[i64])], i: usize| -> Option<i128> {
+        let mut acc = 0i128;
+        for (c, t) in terms {
+            acc = acc.checked_add((*c as i128).checked_mul(t[i] as i128)?)?;
+        }
+        Some(acc)
+    };
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let r = side(lhs, i).and_then(|l| {
+            side(shifted, i)
+                .and_then(|s| s.checked_mul(1i128 << s_bits))
+                .and_then(|s| l.checked_sub(s))
+        });
         match r {
             // |r| ≤ 2^63 inside the range (s_bits ≤ 64), so the cast is exact
             Some(r) if (-half..half).contains(&r) => out.push(r as i64),
             _ => anyhow::bail!(
-                "update remainder out of range at index {i}: the weights do not chain"
+                "update remainder out of range at index {i}: the tensors do not chain"
             ),
         }
     }
     Ok(out)
 }
 
-/// Update remainders of every boundary and layer of a consecutive witness
-/// chain: `result[b][l]` is boundary b / layer ℓ's remainder tensor. Fails
-/// — naming the boundary and layer — if any boundary's weights are not the
-/// exact rounded update of the previous step. The single source of the
-/// chain-walk logic: [`validate_chain`] and the zkSGD prover
-/// (`update::ChainWitness`) both build on it.
-pub fn chain_remainders(wits: &[StepWitness]) -> Result<Vec<Vec<Vec<i64>>>> {
-    let mut out = Vec::with_capacity(wits.len().saturating_sub(1));
-    for b in 0..wits.len().saturating_sub(1) {
+/// SGD remainder of one boundary/layer: G_W = 2^{R+lr}·(W_t − W_{t+1}) + R.
+/// Thin wrapper over [`relation_remainder`], kept as the legacy entry
+/// point (and the reference the SGD rule is tested against).
+pub fn update_remainder(
+    cfg: &ModelConfig,
+    w_prev: &[i64],
+    w_next: &[i64],
+    g_w: &[i64],
+) -> Result<Vec<i64>> {
+    relation_remainder(
+        cfg.r_bits + cfg.lr_shift,
+        &[(1, g_w)],
+        &[(1, w_prev), (-1, w_next)],
+    )
+}
+
+/// Resolve a relation operand to its witness tensor at boundary b
+/// (`prev` = wits[b], `next` = wits[b+1]).
+fn operand_tensor<'a>(
+    prev: &'a StepWitness,
+    next: &'a StepWitness,
+    l: usize,
+    op: Operand,
+) -> Result<&'a [i64]> {
+    let state = |w: &'a StepWitness, slot: usize| -> Result<&'a [i64]> {
+        let s = w
+            .opt_state
+            .get(slot)
+            .and_then(|per_layer| per_layer.get(l))
+            .map(|t| t.as_slice());
+        s.context("witness is missing the rule's optimizer state tensor")
+    };
+    Ok(match op {
+        Operand::WPrev => &prev.layers[l].w,
+        Operand::WNext => &next.layers[l].w,
+        Operand::GradW => &prev.layers[l].g_w,
+        Operand::StatePrev(s) => state(prev, s)?,
+        Operand::StateNext(s) => state(next, s)?,
+    })
+}
+
+/// Remainder tensors of every (boundary, layer, relation) of a consecutive
+/// witness chain under `rule`: `result[b][l][j]` is relation j's remainder
+/// at boundary b / layer ℓ. `lr_shifts[b]` is the boundary's learning-rate
+/// shift (length T−1). Fails — naming boundary, layer, and relation — if
+/// any boundary is not the exact rounded update of the previous step. The
+/// single source of the chain-walk logic: [`validate_chain_rule`] and the
+/// zkOptim prover (`update::ChainWitness`) both build on it.
+pub fn rule_chain_remainders(
+    rule: &UpdateRule,
+    lr_shifts: &[u32],
+    wits: &[StepWitness],
+) -> Result<Vec<Vec<Vec<Vec<i64>>>>> {
+    ensure!(wits.len() >= 2, "chaining needs at least two steps");
+    ensure!(
+        lr_shifts.len() == wits.len() - 1,
+        "shift table length {} != {} boundaries",
+        lr_shifts.len(),
+        wits.len() - 1
+    );
+    let cfg = wits[0].cfg;
+    crate::update::rule::validate_shift_table(&cfg, rule, lr_shifts)?;
+    let relations = rule.relations();
+    let mut out = Vec::with_capacity(wits.len() - 1);
+    for b in 0..wits.len() - 1 {
         let (prev, next) = (&wits[b], &wits[b + 1]);
         ensure!(prev.cfg == next.cfg, "config mismatch at boundary {b}");
-        let mut per_layer = Vec::with_capacity(prev.cfg.depth);
-        for l in 0..prev.cfg.depth {
-            per_layer.push(
-                update_remainder(
-                    &prev.cfg,
-                    &prev.layers[l].w,
-                    &next.layers[l].w,
-                    &prev.layers[l].g_w,
-                )
-                .with_context(|| format!("boundary {b}, layer {l}"))?,
-            );
+        let mut per_layer = Vec::with_capacity(cfg.depth);
+        for l in 0..cfg.depth {
+            let mut per_rel = Vec::with_capacity(relations.len());
+            for rel in &relations {
+                let gather = |terms: &[crate::update::rule::RelTerm]| -> Result<Vec<(i64, &[i64])>> {
+                    terms
+                        .iter()
+                        .map(|t| Ok((t.coeff, operand_tensor(prev, next, l, t.op)?)))
+                        .collect()
+                };
+                let lhs = gather(&rel.lhs)?;
+                let shifted = gather(&rel.shifted)?;
+                per_rel.push(
+                    relation_remainder(rel.digits(&cfg, lr_shifts[b]), &lhs, &shifted)
+                        .with_context(|| {
+                            format!("boundary {b}, layer {l}, relation {}", rel.name)
+                        })?,
+                );
+            }
+            per_layer.push(per_rel);
         }
         out.push(per_layer);
     }
     Ok(out)
 }
 
-/// Validate that consecutive step witnesses chain: every boundary's weights
-/// satisfy W_{t+1} = W_t − ⌊G_W/2^{R+lr}⌉ exactly (equivalently, all update
-/// remainders are in range — the decomposition is unique).
+/// SGD remainders at the config's constant shift, in the legacy
+/// `result[b][l]` shape (relation axis flattened — SGD has one relation).
+pub fn chain_remainders(wits: &[StepWitness]) -> Result<Vec<Vec<Vec<i64>>>> {
+    ensure!(wits.len() >= 2, "chaining needs at least two steps");
+    let shifts = vec![wits[0].cfg.lr_shift; wits.len() - 1];
+    let rems = rule_chain_remainders(&UpdateRule::Sgd, &shifts, wits)?;
+    Ok(rems
+        .into_iter()
+        .map(|per_layer| {
+            per_layer
+                .into_iter()
+                .map(|mut per_rel| per_rel.swap_remove(0))
+                .collect()
+        })
+        .collect())
+}
+
+/// Validate that consecutive step witnesses chain under `rule`: every
+/// boundary satisfies the rule's relations exactly (equivalently, all
+/// relation remainders are in range — the decompositions are unique).
+pub fn validate_chain_rule(
+    rule: &UpdateRule,
+    lr_shifts: &[u32],
+    wits: &[StepWitness],
+) -> Result<()> {
+    rule_chain_remainders(rule, lr_shifts, wits).map(|_| ())
+}
+
+/// [`validate_chain_rule`] specialized to plain SGD at the config's
+/// constant shift — the pre-rule behavior.
 pub fn validate_chain(wits: &[StepWitness]) -> Result<()> {
     chain_remainders(wits).map(|_| ())
 }
@@ -332,7 +442,7 @@ mod tests {
         let err = update_remainder(&cfg, &[0], &[0], &[0]);
         assert!(err.is_err());
         let msg = format!("{:#}", err.unwrap_err());
-        assert!(msg.contains("R+lr"), "{msg}");
+        assert!(msg.contains("2..=64"), "{msg}");
 
         // extreme weight swings stay exact: the i128-checked path reports
         // "does not chain" instead of wrapping into range
@@ -342,6 +452,99 @@ mod tests {
         cfg.r_bits = 32;
         cfg.lr_shift = 32; // S = 64: diff·2^S overflows i128 → must error
         assert!(update_remainder(&cfg, &[i64::MAX], &[i64::MIN], &[0]).is_err());
+    }
+
+    /// Property test backing the zkOptim refactor: the SGD rule's
+    /// remainder witnesses are identical to the pre-refactor direct
+    /// computation (round-to-nearest remainder of ⌊G_W/2^{R+lr}⌉) on
+    /// random chaining weight updates.
+    #[test]
+    fn sgd_rule_remainders_match_legacy_path() {
+        use crate::model::round_div_pow2;
+        use crate::util::rng::Rng;
+        let cfg = ModelConfig::new(1, 2, 2);
+        let shift = cfg.r_bits + cfg.lr_shift;
+        let mut rng = Rng::seed_from_u64(0x1e6);
+        for _ in 0..50 {
+            let w_prev: Vec<i64> = (0..4).map(|_| rng.gen_i64(-100_000, 100_000)).collect();
+            let g_w: Vec<i64> = (0..4)
+                .map(|_| rng.gen_i64(-(1 << 45), 1 << 45))
+                .collect();
+            let w_next: Vec<i64> = w_prev
+                .iter()
+                .zip(g_w.iter())
+                .map(|(w, g)| w - round_div_pow2(*g, shift))
+                .collect();
+            // legacy closed form: R = G_W − 2^S·(W_t − W_{t+1})
+            let legacy: Vec<i64> = (0..4)
+                .map(|i| g_w[i] - ((w_prev[i] - w_next[i]) << shift))
+                .collect();
+            let rule = update_remainder(&cfg, &w_prev, &w_next, &g_w).expect("chains");
+            assert_eq!(rule, legacy);
+        }
+    }
+
+    #[test]
+    fn rule_chain_remainders_cover_momentum_relations() {
+        use crate::update::rule::UpdateRule;
+        let cfg = ModelConfig::new(1, 2, 2);
+        let rule = UpdateRule::momentum_default();
+        // hand-build a two-step momentum chain: m1 = ⌊7m0/8⌉ + g,
+        // w1 = w0 − ⌊m1/2^S⌉, shift 8 (S = 24)
+        let shift = 8u32;
+        let s_bits = cfg.r_bits + shift;
+        let m0 = vec![1000i64, -4096, 7, 0];
+        let g = vec![1i64 << 30, -(1i64 << 28), 123, -9];
+        let m1: Vec<i64> = m0
+            .iter()
+            .zip(g.iter())
+            .map(|(m, gi)| crate::model::round_div_pow2(7 * m, 3) + gi)
+            .collect();
+        let w0 = vec![500i64, -500, 0, 42];
+        let w1: Vec<i64> = w0
+            .iter()
+            .zip(m1.iter())
+            .map(|(w, m)| w - crate::model::round_div_pow2(*m, s_bits))
+            .collect();
+        let zeros = vec![0i64; cfg.batch * cfg.width];
+        let mk = |w: &[i64], m: &[i64], g: &[i64]| {
+            let mut wit = native::compute_witness(
+                cfg,
+                &zeros,
+                &zeros,
+                &crate::model::Weights {
+                    layers: vec![w.to_vec()],
+                    cfg,
+                },
+            );
+            wit.layers[0].g_w = g.to_vec();
+            wit.opt_state = vec![vec![m.to_vec()]];
+            wit
+        };
+        let wits = vec![mk(&w0, &m0, &g), mk(&w1, &m1, &[0, 0, 0, 0])];
+        let rems = rule_chain_remainders(&rule, &[shift], &wits).expect("chains");
+        assert_eq!(rems.len(), 1);
+        assert_eq!(rems[0][0].len(), 2, "two relations, two remainders");
+        for i in 0..4 {
+            // relation 0: 7·m0 = 8·(m1 − g) + R_m
+            assert_eq!(7 * m0[i], 8 * (m1[i] - g[i]) + rems[0][0][0][i]);
+            // relation 1: m1 = 2^S·(w0 − w1) + R_w
+            assert_eq!(
+                m1[i] as i128,
+                ((w0[i] - w1[i]) as i128) * (1i128 << s_bits) + rems[0][0][1][i] as i128
+            );
+        }
+        // a perturbed momentum accumulator no longer chains
+        let mut bad = wits.clone();
+        bad[1].opt_state[0][0][2] += 1;
+        let err = rule_chain_remainders(&rule, &[shift], &bad);
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("momentum"), "{msg}");
+        // missing state tensors are reported, not panicked on
+        let mut stripped = wits.clone();
+        stripped[0].opt_state.clear();
+        assert!(rule_chain_remainders(&rule, &[shift], &stripped).is_err());
     }
 
     #[test]

@@ -5,6 +5,7 @@
 
 use super::{rescale_decompose, LayerWitness, StepWitness};
 use crate::model::{matmul_a_bt, matmul_at_b, matmul_i64, ModelConfig, Weights};
+use crate::update::rule::{LrSchedule, UpdateRule};
 
 /// Execute one quantized training step and collect the full witness.
 ///
@@ -92,12 +93,45 @@ pub fn compute_witness(cfg: ModelConfig, x: &[i64], y: &[i64], weights: &Weights
         x: x.to_vec(),
         y: y.to_vec(),
         layers,
+        opt_state: Vec::new(),
     }
 }
 
-/// T consecutive SGD-step witnesses with the real weight update applied
-/// between steps — the canonical chained-trace input. Weights initialize
-/// from `seed`; step t consumes batch t of `ds`. Shared by the examples,
+/// T consecutive training-step witnesses under an [`UpdateRule`] and
+/// per-step [`LrSchedule`], with the rule's exact quantized update applied
+/// between steps — the canonical chained-trace input. Each witness carries
+/// the optimizer state *entering* its step (`opt_state`), zero-initialized
+/// at step 0. Weights initialize from `seed`; step t consumes batch t of
+/// `ds`.
+pub fn rule_witness_chain(
+    cfg: ModelConfig,
+    rule: &UpdateRule,
+    schedule: &LrSchedule,
+    ds: &crate::data::Dataset,
+    steps: usize,
+    seed: u64,
+) -> Vec<StepWitness> {
+    let mut rng = crate::util::rng::Rng::seed_from_u64(seed);
+    let mut weights = Weights::init(cfg, &mut rng);
+    let mut state = rule.init_state(&cfg);
+    let mut out = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let (x, y) = ds.batch(&cfg, step);
+        let mut wit = compute_witness(cfg, &x, &y, &weights);
+        wit.opt_state = state.clone();
+        rule.apply_update(
+            schedule.shift_at(step),
+            &mut weights,
+            &mut state,
+            &wit.weight_grads(),
+        );
+        out.push(wit);
+    }
+    out
+}
+
+/// [`rule_witness_chain`] specialized to plain SGD at the config's
+/// constant shift — the pre-rule behavior, shared by the examples,
 /// benches, and tests that need a witness chain.
 pub fn sgd_witness_chain(
     cfg: ModelConfig,
@@ -105,16 +139,14 @@ pub fn sgd_witness_chain(
     steps: usize,
     seed: u64,
 ) -> Vec<StepWitness> {
-    let mut rng = crate::util::rng::Rng::seed_from_u64(seed);
-    let mut weights = Weights::init(cfg, &mut rng);
-    let mut out = Vec::with_capacity(steps);
-    for step in 0..steps {
-        let (x, y) = ds.batch(&cfg, step);
-        let wit = compute_witness(cfg, &x, &y, &weights);
-        weights.apply_update(&wit.weight_grads());
-        out.push(wit);
-    }
-    out
+    rule_witness_chain(
+        cfg,
+        &UpdateRule::Sgd,
+        &LrSchedule::Constant(cfg.lr_shift),
+        ds,
+        steps,
+        seed,
+    )
 }
 
 #[cfg(test)]
@@ -187,6 +219,34 @@ mod tests {
         let mut bad = good.clone();
         bad.layers[0].z_aux.rem[0] += 1i64 << cfg.r_bits;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn momentum_witness_chain_validates_under_its_rule() {
+        let cfg = ModelConfig::new(2, 8, 4);
+        let rule = UpdateRule::momentum_default();
+        let schedule = LrSchedule::StepDecay {
+            base: cfg.lr_shift,
+            period: 2,
+            max: cfg.lr_shift + 2,
+        };
+        let ds = crate::data::Dataset::synthetic(64, 4, 4, cfg.r_bits, 0xbeef);
+        let steps = 5;
+        let wits = rule_witness_chain(cfg, &rule, &schedule, &ds, steps, 0x5eed);
+        assert_eq!(wits.len(), steps);
+        for wit in &wits {
+            wit.validate().expect("per-step relations hold");
+            assert_eq!(wit.opt_state.len(), 1, "one momentum slot");
+            assert_eq!(wit.opt_state[0].len(), cfg.depth);
+        }
+        assert!(wits[0].opt_state[0].iter().all(|t| t.iter().all(|&v| v == 0)));
+        // momentum actually accumulates: later states are non-zero
+        assert!(wits[2].opt_state[0][0].iter().any(|&v| v != 0));
+        let table = schedule.window_table(0, steps - 1);
+        crate::witness::validate_chain_rule(&rule, &table, &wits)
+            .expect("momentum chain validates under its own rule");
+        // ... and does NOT chain under plain SGD (the updates differ)
+        assert!(crate::witness::validate_chain(&wits).is_err());
     }
 
     #[test]

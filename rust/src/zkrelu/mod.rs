@@ -28,13 +28,62 @@ use crate::transcript::Transcript;
 use crate::util::rng::Rng;
 use anyhow::{ensure, Result};
 
-/// Bases for one validity instance of row count 2N and bit width WIDTH.
+/// Active-digit layout of a validity instance: row i of the 2N rows has
+/// `digits_at(i)` active digit columns out of the shared power-of-two
+/// `width`; columns ≥ its digit count are zero-weight pads whose bits the
+/// pattern check forces to zero, so row i's proven range is exactly
+/// [−2^{digits_at(i)−1}, 2^{digits_at(i)−1}).
 ///
-/// `digits ≤ width` is the number of *active* digit columns: the signed
-/// digit basis is zero-weighted above column `digits − 1`, so the proven
-/// range is exactly [−2^{digits−1}, 2^{digits−1}) even when that bit count
-/// is not a power of two (the e_bit eq-table forces `width` to be one).
-/// `digits == width` recovers the paper's instances verbatim.
+/// `Uniform(width)` recovers the paper's instances verbatim; a uniform
+/// `digits < width` is the zkSGD padded-digit instance; `PerBlock` is the
+/// zkOptim multi-width instance — one digit budget per remainder-tensor
+/// block, so a momentum remainder (β_shift digits) and a learning-rate
+/// remainder (R + lr_b digits, *varying per boundary*) ride one instance.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum DigitLayout {
+    /// Every row uses the same digit count.
+    Uniform(usize),
+    /// Row i uses `digits[i / block]` — block-constant per-slot widths.
+    PerBlock { block: usize, digits: Vec<usize> },
+}
+
+impl DigitLayout {
+    pub fn digits_at(&self, row: usize) -> usize {
+        match self {
+            DigitLayout::Uniform(d) => *d,
+            DigitLayout::PerBlock { block, digits } => digits[row / *block],
+        }
+    }
+
+    /// Largest digit count of any row (the instance width must cover it).
+    pub fn max_digits(&self) -> usize {
+        match self {
+            DigitLayout::Uniform(d) => *d,
+            DigitLayout::PerBlock { digits, .. } => digits.iter().copied().max().unwrap_or(0),
+        }
+    }
+
+    pub fn is_uniform_full(&self, width: usize) -> bool {
+        matches!(self, DigitLayout::Uniform(d) if *d == width)
+    }
+
+    /// Structural validity against an instance of 2N rows and `width`
+    /// columns: every digit count in 2..=width, and per-block layouts
+    /// tiling the rows exactly.
+    fn validate(&self, rows: usize, width: usize) {
+        match self {
+            DigitLayout::Uniform(d) => assert!((2..=width).contains(d)),
+            DigitLayout::PerBlock { block, digits } => {
+                assert!(*block >= 1);
+                assert_eq!(block * digits.len(), rows, "layout must tile the rows");
+                assert!(digits.iter().all(|d| (2..=width).contains(d)));
+            }
+        }
+    }
+}
+
+/// Bases for one validity instance of row count 2N and bit width WIDTH;
+/// see [`DigitLayout`] for the active-digit structure.
 #[derive(Clone)]
 pub struct ValidityBases {
     /// G ∈ 𝔾^{2N·W}; for the main instance G[i·W + (W−1)] = g_aux[i], i < N.
@@ -45,17 +94,44 @@ pub struct ValidityBases {
     pub blind_h: G1Affine,
     pub n: usize,
     pub width: usize,
-    /// Active digit columns (≤ width); columns ≥ digits are zero-weight pads.
-    pub digits: usize,
+    /// Active digit columns per row; pads are zero-weight.
+    pub layout: DigitLayout,
     pub label: Vec<u8>,
 }
 
 #[allow(clippy::type_complexity)]
 static VBASES_CACHE: once_cell::sync::Lazy<
     std::sync::Mutex<
-        std::collections::HashMap<(Vec<u8>, usize, usize, usize), std::sync::Arc<ValidityBases>>,
+        std::collections::HashMap<
+            (Vec<u8>, usize, usize, DigitLayout),
+            std::sync::Arc<ValidityBases>,
+        >,
     >,
 > = once_cell::sync::Lazy::new(|| std::sync::Mutex::new(std::collections::HashMap::new()));
+
+/// Cache-entry ceiling: digit layouts (and hence keys) derive from
+/// artifact-controlled statements (rule parameters, lr-shift tables), so
+/// verifying hostile artifacts must not grow resident memory without
+/// bound — at the cap, an arbitrary entry is evicted.
+const VBASES_CACHE_CAP: usize = 128;
+
+/// Bounded-insert helper shared by the `ValidityBases` constructors: at
+/// the cap an arbitrary entry is evicted rather than refusing the insert,
+/// so hostile key churn can neither grow memory nor permanently disable
+/// caching for honest configurations.
+fn vbases_cache_put(
+    key: (Vec<u8>, usize, usize, DigitLayout),
+    vb: &std::sync::Arc<ValidityBases>,
+) {
+    let mut cache = VBASES_CACHE.lock().unwrap();
+    if cache.len() >= VBASES_CACHE_CAP {
+        let evict = cache.keys().next().cloned();
+        if let Some(evict) = evict {
+            cache.remove(&evict);
+        }
+    }
+    cache.insert(key, vb.clone());
+}
 
 impl ValidityBases {
     /// Main-instance basis: ties column W−1 of the Z″ block to `g_aux`.
@@ -72,7 +148,7 @@ impl ValidityBases {
     ) -> std::sync::Arc<Self> {
         assert!(g_aux.g.len() >= n);
         assert!(width.is_power_of_two());
-        let key = (label.to_vec(), n, width, width);
+        let key = (label.to_vec(), n, width, DigitLayout::Uniform(width));
         if let Some(vb) = VBASES_CACHE.lock().unwrap().get(&key) {
             return vb.clone();
         }
@@ -91,10 +167,10 @@ impl ValidityBases {
             blind_h: g_aux.h,
             n,
             width,
-            digits: width,
+            layout: DigitLayout::Uniform(width),
             label: label.to_vec(),
         });
-        VBASES_CACHE.lock().unwrap().insert(key, vb.clone());
+        vbases_cache_put(key, &vb);
         vb
     }
 
@@ -108,11 +184,10 @@ impl ValidityBases {
         Self::setup_plain_digits(label, blind_h, n, width, width)
     }
 
-    /// [`Self::setup_plain`] with a padded digit basis: values are signed
-    /// `digits`-bit, decomposed over a power-of-two `width` whose top
-    /// `width − digits` columns carry zero weight (and are forced to zero
-    /// bits by the pattern check). Used by zkSGD, whose update remainders
-    /// are (R + lr)-bit — not a power of two.
+    /// [`Self::setup_plain`] with a uniform padded digit basis: values are
+    /// signed `digits`-bit, decomposed over a power-of-two `width` whose
+    /// top `width − digits` columns carry zero weight (and are forced to
+    /// zero bits by the pattern check).
     pub fn setup_plain_digits(
         label: &[u8],
         blind_h: G1Affine,
@@ -120,9 +195,25 @@ impl ValidityBases {
         width: usize,
         digits: usize,
     ) -> std::sync::Arc<Self> {
+        Self::setup_plain_layout(label, blind_h, n, width, DigitLayout::Uniform(digits))
+    }
+
+    /// The general plain-instance constructor: an arbitrary [`DigitLayout`]
+    /// over 2N rows. Used by the zkOptim chain, whose remainder tensors
+    /// have per-relation, per-boundary digit budgets. Cached — the key
+    /// includes the full layout, so instances with the same shape but
+    /// different digit budgets (e.g. two lr schedules) never share an
+    /// entry.
+    pub fn setup_plain_layout(
+        label: &[u8],
+        blind_h: G1Affine,
+        n: usize,
+        width: usize,
+        layout: DigitLayout,
+    ) -> std::sync::Arc<Self> {
         assert!(width.is_power_of_two());
-        assert!((2..=width).contains(&digits));
-        let key = (label.to_vec(), n, width, digits);
+        layout.validate(2 * n, width);
+        let key = (label.to_vec(), n, width, layout.clone());
         if let Some(vb) = VBASES_CACHE.lock().unwrap().get(&key) {
             return vb.clone();
         }
@@ -138,10 +229,10 @@ impl ValidityBases {
             blind_h,
             n,
             width,
-            digits,
+            layout,
             label: label.to_vec(),
         });
-        VBASES_CACHE.lock().unwrap().insert(key, vb.clone());
+        vbases_cache_put(key, &vb);
         vb
     }
 
@@ -172,24 +263,26 @@ pub fn s_basis_digits(width: usize, digits: usize) -> Vec<Fr> {
     s
 }
 
-/// Bit-decompose signed `digits`-bit values into the 2N×W matrices B (bits)
-/// and B′ (B − 1 on active cells). Columns ≥ `digits` are zero-weight pads
-/// with B = B′ = 0. `zero_top_bit_rows`: number of leading rows whose sign
+/// Bit-decompose signed values into the 2N×W matrices B (bits) and B′
+/// (B − 1 on active cells), row i carrying `layout.digits_at(i)` active
+/// digits. Columns ≥ a row's digit count are zero-weight pads with
+/// B = B′ = 0. `zero_top_bit_rows`: number of leading rows whose sign
 /// column `digits−1` must also be zero in B *and* B′ (the Z″ block's "|0"
 /// pad — those rows' values are unsigned (digits−1)-bit).
 ///
 /// Returns (B, B′) flattened row-major (i·W + j).
-pub fn bit_matrices(
+pub fn bit_matrices_layout(
     values: &[Fr],
     width: usize,
-    digits: usize,
+    layout: &DigitLayout,
     zero_top_bit_rows: usize,
 ) -> (Vec<Fr>, Vec<Fr>) {
-    assert!((2..=width).contains(&digits));
+    layout.validate(values.len(), width);
     let rows = values.len();
     let mut b = vec![Fr::ZERO; rows * width];
     let mut bp = vec![Fr::ZERO; rows * width];
     for (i, v) in values.iter().enumerate() {
+        let digits = layout.digits_at(i);
         let signed = v
             .to_i128()
             .expect("auxiliary value too large for bit decomposition");
@@ -231,6 +324,17 @@ pub fn bit_matrices(
     (b, bp)
 }
 
+/// [`bit_matrices_layout`] with a uniform digit count — the paper's
+/// instances and the single-width zkSGD padded basis.
+pub fn bit_matrices(
+    values: &[Fr],
+    width: usize,
+    digits: usize,
+    zero_top_bit_rows: usize,
+) -> (Vec<Fr>, Vec<Fr>) {
+    bit_matrices_layout(values, width, &DigitLayout::Uniform(digits), zero_top_bit_rows)
+}
+
 /// Protocol 1 message: the prover's bit-tensor commitments.
 #[derive(Clone, Debug)]
 pub struct Protocol1Msg {
@@ -267,8 +371,8 @@ pub fn protocol1_main(
     let n = bases.n;
     assert_eq!(values.len(), 2 * n);
     assert_eq!(sign.len(), n);
-    assert_eq!(
-        bases.digits, bases.width,
+    assert!(
+        bases.layout.is_uniform_full(bases.width),
         "main instance requires the full digit width (sign-column coupling)"
     );
     let (b, bp) = bit_matrices(values, bases.width, bases.width, n);
@@ -307,7 +411,7 @@ pub fn protocol1_plain(
     rng: &mut Rng,
 ) -> (Protocol1Msg, ProverAux) {
     assert_eq!(values.len(), 2 * bases.n);
-    let (b, bp) = bit_matrices(values, bases.width, bases.digits, 0);
+    let (b, bp) = bit_matrices_layout(values, bases.width, &bases.layout, 0);
     let rho = Fr::random(rng);
     let com_b_ip = (msm(&bases.big_g, &b)
         + msm(&bases.big_h, &bp)
@@ -372,25 +476,49 @@ fn draw_challenges(width: usize, transcript: &mut Transcript, main: bool) -> Cha
     Challenges { k, z, u_bit, e_bit }
 }
 
-/// Build the two inner-product vectors of (19):
+/// Per-distinct-digit-count tables of [`s_basis_digits`], built lazily so a
+/// multi-width layout costs one small table per budget, not one per row.
+struct STables {
+    width: usize,
+    tables: Vec<Option<Vec<Fr>>>,
+}
+
+impl STables {
+    fn new(width: usize) -> Self {
+        Self {
+            width,
+            tables: vec![None; width + 1],
+        }
+    }
+
+    fn get(&mut self, digits: usize) -> &[Fr] {
+        let width = self.width;
+        self.tables[digits].get_or_insert_with(|| s_basis_digits(width, digits))
+    }
+}
+
+/// Build the two inner-product vectors of (19), row i using its layout's
+/// signed digit basis s_{D_i}:
 ///   a = B_k − z·1
-///   b = z²·(e_row ⊗ s_W) + (z·1 + B′_k) ⊙ (e_row ⊗ e_bit)
-/// and the target t = z³ − (1−v_k)·z² + z·v′_k.
-#[allow(clippy::too_many_arguments)]
+///   b[i,·] = z²·e_row[i]·s_{D_i} + (z·1 + B′_k[i,·]) ⊙ (e_row[i]·e_bit)
+/// and (in [`targets`]) the target t = z³ − (1−v_k)·z² + z·v′_k. The
+/// per-row basis is sound because every s_{D} sums to −1 (1 + 2 + … +
+/// 2^{D−2} − 2^{D−1}), so the z³ coefficient of ⟨a, b⟩ is row-independent.
 fn build_vectors(
     aux: &ProverAux,
     ch: &Challenges,
     e_row: &[Fr],
     width: usize,
-    digits: usize,
+    layout: &DigitLayout,
     n: usize,
 ) -> (Vec<Fr>, Vec<Fr>) {
-    let s_w = s_basis_digits(width, digits);
+    let mut s_tables = STables::new(width);
     let total = 2 * n * width;
     let mut a = Vec::with_capacity(total);
     let mut b = Vec::with_capacity(total);
     // B_k = B + k·B̄_sign; B̄_sign only populates (i < n, j = width−1)
     for i in 0..2 * n {
+        let s_w = s_tables.get(layout.digits_at(i));
         for j in 0..width {
             let mut bk = aux.b[i * width + j];
             let mut bpk = aux.bp[i * width + j];
@@ -410,11 +538,14 @@ fn build_vectors(
     (a, b)
 }
 
-/// v_k and v′_k per eqs. (12) and (15).
+/// v_k and v′_k per eqs. (12) and (15). `e_row` enters only for per-block
+/// layouts, whose pattern target is row-weighted.
+#[allow(clippy::too_many_arguments)]
 fn targets(
     ch: &Challenges,
     width: usize,
-    digits: usize,
+    layout: &DigitLayout,
+    e_row: &[Fr],
     u_dd: Fr,
     v: Fr,
     v_sign: Fr,
@@ -428,13 +559,27 @@ fn targets(
         let v_k_prime = Fr::ONE + (ch.k - Fr::ONE) * beta * (Fr::ONE - u_dd);
         (v_k, v_k_prime)
     } else {
-        // pattern target (B − B′)~(u_bit): 1 on a full-width instance
-        // (Σ_j e_bit[j] = 1); with zero-weight pad columns only the active
-        // digits contribute, forcing pad cells to B = B′ = 0.
-        let v_k_prime = if digits == width {
-            Fr::ONE
-        } else {
-            (0..digits).map(|j| eq_eval_index(&ch.u_bit, j)).sum()
+        // pattern target (B − B′)~(u_dd, ρ, u_bit): row i contributes
+        // e_row[i]·Σ_{j<D_i} e_bit[j] — the prefix weight of its active
+        // digits. Uniform full width gives 1 (Σ_j e_bit[j] = 1 and
+        // Σ_i e_row[i] = 1); a uniform padded width drops the common
+        // row factor; per-block layouts weight each row by its budget,
+        // which is exactly what forces every pad cell to B = B′ = 0.
+        let v_k_prime = match layout {
+            DigitLayout::Uniform(d) if *d == width => Fr::ONE,
+            DigitLayout::Uniform(d) => (0..*d).map(|j| eq_eval_index(&ch.u_bit, j)).sum(),
+            DigitLayout::PerBlock { .. } => {
+                // prefix sums of e_bit: prefix[d] = Σ_{j<d} e_bit[j]
+                let mut prefix = vec![Fr::ZERO; width + 1];
+                for j in 0..width {
+                    prefix[j + 1] = prefix[j] + ch.e_bit[j];
+                }
+                e_row
+                    .iter()
+                    .enumerate()
+                    .map(|(i, e)| *e * prefix[layout.digits_at(i)])
+                    .sum()
+            }
         };
         (v, v_k_prime)
     };
@@ -443,18 +588,23 @@ fn targets(
 }
 
 /// The public scalar vector w_pub with H^{w_pub} entering P (Algorithm 1):
-/// w_pub[i,j] = z²·s_W[j]/e_bit[j] + z.
-fn w_pub(ch: &Challenges, width: usize, digits: usize, n: usize) -> Vec<Fr> {
-    let s_w = s_basis_digits(width, digits);
+/// w_pub[i,j] = z²·s_{D_i}[j]/e_bit[j] + z, row i using its layout's digit
+/// basis (mirroring [`build_vectors`]).
+fn w_pub(ch: &Challenges, width: usize, layout: &DigitLayout, n: usize) -> Vec<Fr> {
     let mut inv_ebit = ch.e_bit.clone();
     Fr::batch_invert(&mut inv_ebit);
-    let mut col = Vec::with_capacity(width);
-    for j in 0..width {
-        col.push(ch.z.square() * s_w[j] * inv_ebit[j] + ch.z);
-    }
+    // one column vector per distinct digit budget, built on first use
+    let mut cols: Vec<Option<Vec<Fr>>> = vec![None; width + 1];
     let mut out = Vec::with_capacity(2 * n * width);
-    for _ in 0..2 * n {
-        out.extend_from_slice(&col);
+    for i in 0..2 * n {
+        let digits = layout.digits_at(i);
+        let col = cols[digits].get_or_insert_with(|| {
+            let s_w = s_basis_digits(width, digits);
+            (0..width)
+                .map(|j| ch.z.square() * s_w[j] * inv_ebit[j] + ch.z)
+                .collect()
+        });
+        out.extend_from_slice(col);
     }
     out
 }
@@ -474,12 +624,15 @@ pub fn prove_validity(
 ) -> ValidityProof {
     let n = bases.n;
     let width = bases.width;
-    let digits = bases.digits;
+    let layout = &bases.layout;
     let main = aux.sign.is_some();
-    assert!(!main || digits == width, "main instance is full-width");
+    assert!(
+        !main || layout.is_uniform_full(width),
+        "main instance is full-width"
+    );
     let ch = draw_challenges(width, transcript, main);
-    let (a, b) = build_vectors(aux, &ch, e_row, width, digits, n);
-    let t = targets(&ch, width, digits, u_dd, v, v_sign, main);
+    let (a, b) = build_vectors(aux, &ch, e_row, width, layout, n);
+    let t = targets(&ch, width, layout, e_row, u_dd, v, v_sign, main);
 
     // The transformed basis H′ = H^{e^{∘−1}} stays *virtual*: both prover
     // and verifier fold e^{∘−1} into their MSM scalars (§Perf — avoids
@@ -563,16 +716,16 @@ pub fn verify_validity_accum(
 ) -> Result<()> {
     let n = bases.n;
     let width = bases.width;
-    let digits = bases.digits;
+    let layout = &bases.layout;
     let main = p1.com_sign_prime.is_some();
     ensure!(main == com_sign.is_some(), "validity: instance mismatch");
     ensure!(
-        !main || digits == width,
+        !main || layout.is_uniform_full(width),
         "validity: main instance is full-width"
     );
     ensure!(e_row.len() == 2 * n, "validity: e_row length mismatch");
     let ch = draw_challenges(width, transcript, main);
-    let t = targets(&ch, width, digits, u_dd, v, v_sign, main);
+    let t = targets(&ch, width, layout, e_row, u_dd, v, v_sign, main);
 
     let mut com_terms: Vec<(Fr, G1)> = vec![(Fr::ONE, p1.com_b_ip.to_projective())];
     if main {
@@ -583,7 +736,7 @@ pub fn verify_validity_accum(
     }
     let total = 2 * n * width;
     let g_pub = vec![-ch.z; total];
-    let h_pub = w_pub(&ch, width, digits, n);
+    let h_pub = w_pub(&ch, width, layout, n);
 
     // verify against virtual basis H′ = H^{e^{∘−1}}
     let mut e_inv: Vec<Fr> = (0..total)
@@ -860,6 +1013,117 @@ mod tests {
             padded_digit_instance(11, true).is_err(),
             "a value ≥ 2^{{digits−1}} forged via the pad columns must not verify"
         );
+    }
+
+    /// Roundtrip of a *per-block* layout (the zkOptim multi-width shape):
+    /// block 0 holds 4-digit remainders, block 1 holds 11-digit ones, one
+    /// instance covers both. With `forge`, a block-0 value outside its
+    /// 4-digit range (but inside block 1's) is decomposed over extra
+    /// columns — the row-weighted pattern target must reject it.
+    fn per_block_instance(forge: bool) -> Result<()> {
+        let mut r = rng();
+        let (n, width) = (8usize, 16usize);
+        let blind_h = crate::curve::hash_to_curve(b"mixw-test-blind", 0);
+        let layout = DigitLayout::PerBlock {
+            block: n,
+            digits: vec![4, 11],
+        };
+        let label = format!("zkrelu-mixw-test-{forge}");
+        let bases =
+            ValidityBases::setup_plain_layout(label.as_bytes(), blind_h, n, width, layout);
+        let mut vals: Vec<Fr> = (0..n)
+            .map(|_| Fr::from_i64(r.gen_i64(-8, 8)))
+            .collect();
+        vals.extend((0..n).map(|_| Fr::from_i64(r.gen_i64(-1024, 1024))));
+
+        let (p1, aux) = if forge {
+            // 100 ∉ [−8, 8) but fits 11 digits: decompose every row at 11
+            // digits so the out-of-range bits land in block 0's pad columns
+            vals[3] = Fr::from_i64(100);
+            let (b, bp) = bit_matrices(&vals, width, 11, 0);
+            let rho = Fr::random(&mut r);
+            let com_b_ip = (msm(&bases.big_g, &b)
+                + msm(&bases.big_h, &bp)
+                + bases.blind_h.to_projective().mul(&rho))
+            .to_affine();
+            (
+                Protocol1Msg {
+                    com_b_ip,
+                    com_sign_prime: None,
+                },
+                ProverAux {
+                    b,
+                    bp,
+                    rho,
+                    sign: None,
+                    rho_sign: Fr::ZERO,
+                    rho_sign_prime: Fr::ZERO,
+                },
+            )
+        } else {
+            protocol1_plain(&bases, &vals, &mut r)
+        };
+
+        let mut t = Transcript::new(b"vm");
+        t.absorb_point(b"p1", &p1.com_b_ip);
+        let u_dd = Fr::random(&mut r);
+        let log_n = n.trailing_zeros() as usize;
+        let rho_pt: Vec<Fr> = (0..log_n).map(|_| Fr::random(&mut r)).collect();
+        let v_lo = Mle::new(vals[..n].to_vec()).evaluate(&rho_pt);
+        let v_hi = Mle::new(vals[n..].to_vec()).evaluate(&rho_pt);
+        let v = (Fr::ONE - u_dd) * v_lo + u_dd * v_hi;
+        let mut point = vec![u_dd];
+        point.extend_from_slice(&rho_pt);
+        let e_row = eq_table(&point);
+        let proof =
+            prove_validity(&bases, &aux, &e_row, u_dd, v, Fr::ZERO, &mut t.clone(), &mut r);
+        verify_validity(
+            &bases,
+            &p1,
+            None,
+            &e_row,
+            u_dd,
+            v,
+            Fr::ZERO,
+            &proof,
+            &mut t.clone(),
+        )
+    }
+
+    #[test]
+    fn per_block_layout_accepts_honest() {
+        per_block_instance(false).expect("multi-width instance verifies");
+    }
+
+    #[test]
+    fn per_block_layout_rejects_cross_block_forgery() {
+        assert!(
+            per_block_instance(true).is_err(),
+            "a value outside its own block's digit budget must not verify"
+        );
+    }
+
+    #[test]
+    fn per_block_layout_bases_are_cached_per_layout() {
+        let blind_h = crate::curve::hash_to_curve(b"mixw-cache-blind", 0);
+        let (n, width) = (4usize, 8usize);
+        let la = DigitLayout::PerBlock {
+            block: n,
+            digits: vec![3, 7],
+        };
+        let lb = DigitLayout::PerBlock {
+            block: n,
+            digits: vec![4, 7],
+        };
+        let a1 = ValidityBases::setup_plain_layout(b"mixw-cache", blind_h, n, width, la.clone());
+        let a2 = ValidityBases::setup_plain_layout(b"mixw-cache", blind_h, n, width, la);
+        let b1 = ValidityBases::setup_plain_layout(b"mixw-cache", blind_h, n, width, lb);
+        assert!(std::sync::Arc::ptr_eq(&a1, &a2), "same layout shares bases");
+        assert!(
+            !std::sync::Arc::ptr_eq(&a1, &b1),
+            "a different digit layout must not reuse a cached instance"
+        );
+        assert_eq!(b1.layout.digits_at(0), 4);
     }
 
     #[test]

@@ -36,6 +36,38 @@ fn full_pipeline_pjrt_witness_to_verified_proof() {
 }
 
 #[test]
+fn per_step_proofs_are_oblivious_to_optimizer_state() {
+    // the zkOptim rule state (momentum accumulator) is chain-level
+    // statement, not per-step witness: a momentum run's steps prove and
+    // verify with the ordinary per-step argument, byte-identically to the
+    // same tensors with the state stripped
+    use zkdl::update::{LrSchedule, UpdateRule};
+    use zkdl::witness::native::rule_witness_chain;
+    let cfg = ModelConfig::new(2, 8, 4);
+    let ds = Dataset::synthetic(32, 4, 4, cfg.r_bits, 3);
+    let wits = rule_witness_chain(
+        cfg,
+        &UpdateRule::momentum_default(),
+        &LrSchedule::Constant(cfg.lr_shift),
+        &ds,
+        2,
+        0x1f2e,
+    );
+    assert!(!wits[1].opt_state.is_empty(), "momentum state attached");
+    let pk = ProverKey::setup(cfg);
+    let proof = prove_step(&pk, &wits[1], ProofMode::Parallel, &mut Rng::seed_from_u64(4));
+    verify_step(&pk, &proof).expect("momentum step verifies per-step");
+    let mut stripped = wits[1].clone();
+    stripped.opt_state.clear();
+    let proof2 = prove_step(&pk, &stripped, ProofMode::Parallel, &mut Rng::seed_from_u64(4));
+    assert_eq!(
+        zkdl::wire::encode_step_proof(&cfg, &proof),
+        zkdl::wire::encode_step_proof(&cfg, &proof2),
+        "state tensors do not leak into the per-step argument"
+    );
+}
+
+#[test]
 fn proof_rejects_witness_with_wrong_relu() {
     // forge a witness where one ReLU output is wrong but the decomposition
     // ranges still hold: the Hadamard/stacking checks must catch it

@@ -5,14 +5,15 @@
 //! `verify_trace` fail.
 
 use zkdl::aggregate::{
-    prove_trace, prove_trace_chained, trace_stack_dims, verify_trace, verify_traces_batch,
-    TraceKey,
+    prove_trace, prove_trace_chained, prove_trace_chained_with, trace_stack_dims, verify_trace,
+    verify_traces_batch, TraceKey,
 };
 use zkdl::curve::G1;
 use zkdl::data::Dataset;
 use zkdl::model::ModelConfig;
+use zkdl::update::{LrSchedule, UpdateRule};
 use zkdl::util::rng::Rng;
-use zkdl::witness::native::sgd_witness_chain;
+use zkdl::witness::native::{rule_witness_chain, sgd_witness_chain};
 use zkdl::witness::StepWitness;
 use zkdl::zkdl::{prove_step, verify_step, ProofMode, ProverKey};
 use zkdl::Fr;
@@ -230,6 +231,158 @@ fn chained_trace_rejects_tampered_weights_gradients_and_remainders() {
     let mut bad = proof.clone();
     bad.chain = proof_b.chain.clone();
     assert!(verify_trace(&tk, &bad).is_err(), "grafted chain accepted");
+}
+
+/// A T-step heavy-ball momentum chain under a decaying shift schedule,
+/// plus the schedule's window table.
+fn momentum_chain(
+    cfg: ModelConfig,
+    steps: usize,
+    seed: u64,
+) -> (Vec<StepWitness>, UpdateRule, Vec<u32>) {
+    let rule = UpdateRule::momentum_default();
+    let sched = LrSchedule::StepDecay {
+        base: cfg.lr_shift,
+        period: 2,
+        max: cfg.lr_shift + 2,
+    };
+    let ds = Dataset::synthetic(64, cfg.width / 2, 4, cfg.r_bits, seed ^ 0x77);
+    let wits = rule_witness_chain(cfg, &rule, &sched, &ds, steps, seed);
+    for wit in &wits {
+        wit.validate().expect("witness valid");
+    }
+    (wits, rule, sched.window_table(0, steps - 1))
+}
+
+#[test]
+fn momentum_chained_trace_roundtrip_with_decaying_schedule() {
+    // T=4 → 3 boundaries with shifts [8, 8, 9]: per-boundary digit budgets
+    // differ inside one instance, and the momentum relation rides at its
+    // own fixed budget
+    let cfg = ModelConfig::new(2, 8, 4);
+    let (wits, rule, table) = momentum_chain(cfg, 4, 41);
+    assert!(table.windows(2).any(|w| w[0] != w[1]), "schedule actually decays");
+    let tk = TraceKey::setup(cfg, 4);
+    let mut rng = Rng::seed_from_u64(51);
+    let proof = prove_trace_chained_with(&tk, &wits, &rule, &table, &mut rng)
+        .expect("momentum witnesses chain");
+    verify_trace(&tk, &proof).expect("momentum chained trace verifies");
+    let chain = proof.chain.as_ref().unwrap();
+    assert_eq!(chain.v_state.len(), 1);
+    assert_eq!(chain.v_state[0].len(), 4 * cfg.depth);
+    assert_eq!(chain.openings.len(), 3, "still three opening IPAs");
+}
+
+#[test]
+fn momentum_prover_rejects_witnesses_that_do_not_chain() {
+    let cfg = ModelConfig::new(2, 8, 4);
+    let (mut wits, rule, table) = momentum_chain(cfg, 3, 42);
+    // perturb the committed accumulator entering step 1
+    wits[1].opt_state[0][0][3] += 1;
+    let tk = TraceKey::setup(cfg, 3);
+    let mut rng = Rng::seed_from_u64(52);
+    let err = prove_trace_chained_with(&tk, &wits, &rule, &table, &mut rng);
+    assert!(err.is_err(), "broken momentum chain must not be provable");
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("momentum"), "error names the relation: {msg}");
+}
+
+#[test]
+fn momentum_chained_trace_rejects_tampered_state_and_statement() {
+    let cfg = ModelConfig::new(2, 8, 4);
+    let (wits, rule, table) = momentum_chain(cfg, 3, 43);
+    let tk = TraceKey::setup(cfg, 3);
+    let mut rng = Rng::seed_from_u64(53);
+    let proof = prove_trace_chained_with(&tk, &wits, &rule, &table, &mut rng)
+        .expect("momentum witnesses chain");
+    verify_trace(&tk, &proof).expect("untampered momentum trace verifies");
+
+    // mutated momentum accumulator commitment m
+    let mut bad = proof.clone();
+    bad.chain.as_mut().unwrap().com_state[0][1] = G1::random(&mut rng).to_affine();
+    assert!(verify_trace(&tk, &bad).is_err(), "mutated m accepted");
+
+    // lying momentum evaluation (the derived remainder claims shift)
+    let mut bad = proof.clone();
+    bad.chain.as_mut().unwrap().v_state[0][2] += Fr::ONE;
+    assert!(verify_trace(&tk, &bad).is_err(), "lying m̃(p) accepted");
+
+    // mutated stacked remainder commitment (covers both relations' tensors)
+    let mut bad = proof.clone();
+    bad.chain.as_mut().unwrap().com_u = G1::random(&mut rng).to_affine();
+    assert!(verify_trace(&tk, &bad).is_err(), "mutated remainders accepted");
+
+    // truncated shift table: statement shape check fails
+    let mut bad = proof.clone();
+    bad.chain.as_mut().unwrap().lr_shifts.pop();
+    assert!(verify_trace(&tk, &bad).is_err(), "truncated shift table accepted");
+
+    // edited shift table entry: transcript + derived claims diverge
+    let mut bad = proof.clone();
+    bad.chain.as_mut().unwrap().lr_shifts[0] += 1;
+    assert!(verify_trace(&tk, &bad).is_err(), "edited shift table accepted");
+}
+
+#[test]
+fn swapped_rule_tags_fail_both_directions() {
+    let cfg = ModelConfig::new(2, 8, 4);
+    let mut rng = Rng::seed_from_u64(54);
+    let tk = TraceKey::setup(cfg, 3);
+
+    // momentum artifact re-tagged as SGD (state stripped to match shape)
+    let (m_wits, rule, table) = momentum_chain(cfg, 3, 44);
+    let m_proof = prove_trace_chained_with(&tk, &m_wits, &rule, &table, &mut rng)
+        .expect("momentum chains");
+    let mut swapped = m_proof.clone();
+    {
+        let chain = swapped.chain.as_mut().unwrap();
+        chain.rule = UpdateRule::Sgd;
+        chain.com_state.clear();
+        chain.v_state.clear();
+    }
+    assert!(
+        verify_trace(&tk, &swapped).is_err(),
+        "momentum artifact verified as sgd"
+    );
+    // ... and with the state left in place the shape check itself rejects
+    let mut swapped = m_proof.clone();
+    swapped.chain.as_mut().unwrap().rule = UpdateRule::Sgd;
+    assert!(verify_trace(&tk, &swapped).is_err());
+
+    // SGD artifact re-tagged as momentum (zero state grafted on)
+    let s_wits = witness_chain(cfg, 3, 45);
+    let s_proof = prove_trace_chained(&tk, &s_wits, &mut rng).expect("sgd chains");
+    let mut swapped = s_proof.clone();
+    {
+        let chain = swapped.chain.as_mut().unwrap();
+        chain.rule = UpdateRule::momentum_default();
+        chain.com_state = vec![vec![zkdl::curve::G1Affine::IDENTITY; 3 * cfg.depth]];
+        chain.v_state = vec![vec![Fr::ZERO; 3 * cfg.depth]];
+    }
+    assert!(
+        verify_trace(&tk, &swapped).is_err(),
+        "sgd artifact verified as momentum"
+    );
+}
+
+#[test]
+fn sgd_rule_artifacts_match_legacy_entry_point() {
+    // the trivial rule is the pre-refactor chain: the compat wrapper and
+    // the explicit (Sgd, constant-table) invocation must produce
+    // byte-identical artifacts from identical inputs and randomness
+    let cfg = ModelConfig::new(2, 8, 4);
+    let wits = witness_chain(cfg, 3, 46);
+    let tk = TraceKey::setup(cfg, 3);
+    let a = prove_trace_chained(&tk, &wits, &mut Rng::seed_from_u64(55)).expect("chains");
+    let shifts = vec![cfg.lr_shift; 2];
+    let b = prove_trace_chained_with(&tk, &wits, &UpdateRule::Sgd, &shifts, &mut Rng::seed_from_u64(55))
+        .expect("chains");
+    assert_eq!(
+        zkdl::wire::encode_trace_proof(&cfg, &a),
+        zkdl::wire::encode_trace_proof(&cfg, &b),
+        "SGD rule is byte-for-byte the legacy chain"
+    );
+    verify_trace(&tk, &a).expect("verifies");
 }
 
 #[test]

@@ -9,12 +9,14 @@
 //!   verb uses.
 
 use zkdl::aggregate::{
-    prove_trace, verify_trace, verify_trace_accum, verify_traces_batch, TraceKey, TraceProof,
+    prove_trace, prove_trace_chained, prove_trace_chained_with, verify_trace, verify_trace_accum,
+    verify_traces_batch, TraceKey, TraceProof,
 };
 use zkdl::curve::accum::MsmAccumulator;
 use zkdl::curve::G1;
 use zkdl::data::Dataset;
 use zkdl::model::{ModelConfig, Weights};
+use zkdl::update::{LrSchedule, UpdateRule};
 use zkdl::util::rng::Rng;
 use zkdl::witness::native::compute_witness;
 use zkdl::witness::StepWitness;
@@ -160,4 +162,52 @@ fn heterogeneous_trace_batch_shares_one_msm() {
 
     let mut vrng = Rng::seed_from_u64(10);
     verify_traces_batch(&[(&tk1, &p1), (&tk2, &p2)], &mut vrng).expect("public API agrees");
+}
+
+/// Mixed update rules inside one batch: an unchained trace, an SGD-chained
+/// trace, and a momentum-chained trace (distinct update keys, distinct
+/// validity layouts) all defer into ONE accumulator and one MSM.
+#[test]
+fn mixed_rule_trace_batch_shares_one_msm() {
+    let cfg = ModelConfig::new(2, 8, 4);
+    let tk = TraceKey::setup(cfg, 3);
+    let mut rng = Rng::seed_from_u64(0x88);
+    let plain = prove_trace(&tk, &witness_chain(cfg, 3, 11), &mut rng);
+    let sgd = prove_trace_chained(&tk, &zkdl::witness::native::sgd_witness_chain(
+        cfg,
+        &Dataset::synthetic(64, cfg.width / 2, 4, cfg.r_bits, 0x99),
+        3,
+        12,
+    ), &mut rng)
+    .expect("sgd chains");
+    let rule = UpdateRule::momentum_default();
+    let sched = LrSchedule::Constant(cfg.lr_shift);
+    let m_wits = zkdl::witness::native::rule_witness_chain(
+        cfg,
+        &rule,
+        &sched,
+        &Dataset::synthetic(64, cfg.width / 2, 4, cfg.r_bits, 0x9a),
+        3,
+        13,
+    );
+    let momentum =
+        prove_trace_chained_with(&tk, &m_wits, &rule, &sched.window_table(0, 2), &mut rng)
+            .expect("momentum chains");
+
+    let mut seed = Rng::seed_from_u64(14);
+    let mut acc = MsmAccumulator::from_rng(&mut seed);
+    for proof in [&plain, &sgd, &momentum] {
+        acc.set_scale(Fr::random_nonzero(&mut seed));
+        verify_trace_accum(&tk, proof, &mut acc).expect("defer");
+    }
+    assert_eq!(acc.flushes(), 0);
+    assert!(acc.flush(), "mixed-rule batch verifies with one MSM");
+    assert_eq!(acc.flushes(), 1);
+
+    let mut vrng = Rng::seed_from_u64(15);
+    verify_traces_batch(
+        &[(&tk, &plain), (&tk, &sgd), (&tk, &momentum)],
+        &mut vrng,
+    )
+    .expect("public batch API agrees");
 }

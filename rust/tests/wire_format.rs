@@ -102,9 +102,9 @@ fn randomized_protocol1_and_validity_roundtrips() {
 
 #[test]
 fn golden_header_bytes() {
-    // Pins the envelope layout of VERSION 4 (32-byte compressed points +
-    // optional zkSGD chain payload carrying one stacked commitment +
-    // chained-flag transcript). If this test fails, the wire format
+    // Pins the envelope layout of VERSION 5 (zkOptim: chain payload opens
+    // with a rule tag + shift table + state commitments, stacked remainder
+    // tensor gains a relation axis). If this test fails, the wire format
     // changed: bump `wire::VERSION` and update the constants here.
     let cfg = ModelConfig::new(2, 8, 4);
     let wits = trace_witnesses(cfg, 1, 0x601d);
@@ -114,7 +114,7 @@ fn golden_header_bytes() {
     let bytes = encode_trace_proof(&cfg, &proof);
     let expected_header: [u8; 32] = [
         b'Z', b'K', b'D', b'L', // magic
-        0x04, 0x00, // version 4
+        0x05, 0x00, // version 5
         0x02, 0x00, // kind: trace
         0x02, 0x00, 0x00, 0x00, // depth 2
         0x08, 0x00, 0x00, 0x00, // width 8
@@ -125,9 +125,29 @@ fn golden_header_bytes() {
     ];
     assert_eq!(&bytes[..32], expected_header.as_slice());
     assert_eq!(MAGIC.as_slice(), b"ZKDL".as_slice());
-    assert_eq!(VERSION, 4);
+    assert_eq!(VERSION, 5);
     // step-count field follows the header
     assert_eq!(&bytes[32..36], 1u32.to_le_bytes().as_slice());
+}
+
+#[test]
+fn rejects_v4_chained_artifacts_as_unsupported() {
+    // a v4 chain payload has no rule tag / shift table / state
+    // commitments: decoding it under v5 rules would misparse, so the
+    // envelope version check must reject it outright
+    let cfg = ModelConfig::new(2, 8, 4);
+    let wits = trace_witnesses(cfg, 3, 0x0405);
+    let tk = TraceKey::setup(cfg, 3);
+    let mut rng = Rng::seed_from_u64(45);
+    let proof = prove_trace_chained(&tk, &wits, &mut rng).expect("chains");
+    let mut bytes = encode_trace_proof(&cfg, &proof);
+    bytes[4] = 0x04; // rewrite the version field to v4
+    bytes[5] = 0x00;
+    let err = decode_trace_proof(&bytes).expect_err("v4 must not decode");
+    assert!(
+        format!("{err:#}").contains("unsupported version"),
+        "rejected as unsupported, not misparsed: {err:#}"
+    );
 }
 
 #[test]
@@ -205,6 +225,53 @@ fn chained_trace_proof_disk_roundtrip_verifies() {
     let mut truncated = proof.clone();
     truncated.chain.as_mut().unwrap().v_w.pop();
     let bad = encode_trace_proof(&cfg, &truncated);
+    assert!(decode_trace_proof(&bad).is_err());
+    // ... nor one whose shift table is shorter than its boundary count
+    let mut truncated = proof.clone();
+    truncated.chain.as_mut().unwrap().lr_shifts.pop();
+    let bad = encode_trace_proof(&cfg, &truncated);
+    assert!(decode_trace_proof(&bad).is_err());
+    // ... nor a schedule whose digit budget exceeds the provable 64
+    let mut wide = proof;
+    wide.chain.as_mut().unwrap().lr_shifts[0] = 60; // S = 76
+    let bad = encode_trace_proof(&cfg, &wide);
+    assert!(decode_trace_proof(&bad).is_err());
+}
+
+#[test]
+fn momentum_chained_trace_proof_disk_roundtrip_verifies() {
+    use zkdl::aggregate::prove_trace_chained_with;
+    use zkdl::update::{LrSchedule, UpdateRule};
+    use zkdl::witness::native::rule_witness_chain;
+    let cfg = ModelConfig::new(2, 8, 4);
+    let rule = UpdateRule::momentum_default();
+    let sched = LrSchedule::StepDecay {
+        base: cfg.lr_shift,
+        period: 1,
+        max: cfg.lr_shift + 1,
+    };
+    let ds = Dataset::synthetic(64, cfg.width / 2, 4, cfg.r_bits, 0x3d1);
+    let wits = rule_witness_chain(cfg, &rule, &sched, &ds, 3, 0xd15f);
+    let tk = TraceKey::setup(cfg, 3);
+    let mut rng = Rng::seed_from_u64(25);
+    let table = sched.window_table(0, 2);
+    let proof =
+        prove_trace_chained_with(&tk, &wits, &rule, &table, &mut rng).expect("momentum chains");
+    let bytes = encode_trace_proof(&cfg, &proof);
+    let (cfg2, decoded) = decode_trace_proof(&bytes).expect("decodes");
+    let chain = decoded.chain.as_ref().expect("chain present");
+    assert_eq!(chain.rule, rule);
+    assert_eq!(chain.lr_shifts, table);
+    assert_eq!(chain.com_state.len(), 1);
+    assert_eq!(chain.com_state[0].len(), 3 * cfg.depth);
+    // canonical: re-encoding the decoded proof is byte-identical
+    assert_eq!(bytes, encode_trace_proof(&cfg2, &decoded));
+    verify_trace(&TraceKey::setup(cfg2, decoded.steps), &decoded)
+        .expect("decoded momentum trace verifies");
+    // a state-commitment count mismatch must not decode
+    let mut bad_proof = proof;
+    bad_proof.chain.as_mut().unwrap().com_state[0].pop();
+    let bad = encode_trace_proof(&cfg, &bad_proof);
     assert!(decode_trace_proof(&bad).is_err());
 }
 
