@@ -12,7 +12,7 @@ use std::time::Instant;
 use zkdl::commit::CommitKey;
 use zkdl::data::Dataset;
 use zkdl::hash::HashFn;
-use zkdl::merkle::{verify_membership, MerkleTree};
+use zkdl::merkle::{point_leaf, verify_membership, MerkleTree};
 use zkdl::util::cli::Cli;
 use zkdl::Fr;
 
@@ -22,7 +22,9 @@ fn main() -> anyhow::Result<()> {
     let dim = cli.get_usize("dim", 64);
     let hash = HashFn::parse(cli.get_str("hash", "sha256")).expect("md5|sha1|sha256");
 
-    // 1. trainer commits every data point deterministically (§3.1)
+    // 1. trainer commits every data point deterministically (§3.1); leaves
+    // use the canonical 32-byte compressed-point codec shared with the
+    // wire format, so endorsement material and artifacts agree byte-wise
     let ds = Dataset::synthetic(n, dim, 10, 16, 11);
     let ck = CommitKey::setup(b"zkdl/data", dim);
     let t = Instant::now();
@@ -31,7 +33,7 @@ fn main() -> anyhow::Result<()> {
         .iter()
         .map(|p| {
             let frs: Vec<Fr> = p.iter().map(|&v| Fr::from_i64(v)).collect();
-            ck.commit_deterministic(&frs).to_affine().to_bytes().to_vec()
+            point_leaf(&ck.commit_deterministic(&frs).to_affine())
         })
         .collect();
     println!("committed {n} data points in {:.2} s", t.elapsed().as_secs_f64());
@@ -60,7 +62,7 @@ fn main() -> anyhow::Result<()> {
     // 3b. an outsider confirms their work was NOT trained on
     let outsider = Dataset::synthetic(1, dim, 10, 16, 999);
     let frs: Vec<Fr> = outsider.points[0].iter().map(|&v| Fr::from_i64(v)).collect();
-    let out_com = ck.commit_deterministic(&frs).to_affine().to_bytes().to_vec();
+    let out_com = point_leaf(&ck.commit_deterministic(&frs).to_affine());
     let out_query = vec![hash.hash(&out_com)];
     let proof = tree.prove(&out_query);
     let t = Instant::now();

@@ -1,0 +1,111 @@
+//! zkData end-to-end: commit a dataset once, get its Appendix-B root
+//! endorsed, then prove a chained training trace whose every batch is
+//! bound to that dataset — the full "trained THIS model on THIS data"
+//! statement, verified with one MSM.
+//!
+//!     cargo run --release --example provenance_training -- --steps 4 --data-n 64
+//!
+//! Act one builds the dataset commitment and plays the endorser; act two
+//! trains and proves with provenance; act three shows the tamper classes
+//! being rejected; act four bridges back to the Appendix-B membership
+//! audit over the very same root.
+
+use std::time::Instant;
+use zkdl::aggregate::{prove_trace_chained_provenance_with, verify_trace, TraceKey};
+use zkdl::data::Dataset;
+use zkdl::merkle::verify_membership;
+use zkdl::model::ModelConfig;
+use zkdl::provenance::{verify_dataset_endorsement, ProverDataset, PROVENANCE_HASH};
+use zkdl::update::UpdateRule;
+use zkdl::util::cli::Cli;
+use zkdl::util::rng::Rng;
+use zkdl::witness::native::sgd_witness_chain;
+
+fn hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::from_env();
+    let steps = cli.get_usize("steps", 4);
+    let n = cli.get_usize("data-n", 64);
+    let cfg = ModelConfig::new(
+        cli.get_usize("depth", 2),
+        cli.get_usize("width", 16),
+        cli.get_usize("batch", 8),
+    );
+
+    // ---- act one: one-time dataset commitment + endorsement ----
+    let ds = Dataset::synthetic(n, cfg.width / 2, 4, cfg.r_bits, 21);
+    let t = Instant::now();
+    let pd = ProverDataset::build(&ds, &cfg)?;
+    println!(
+        "committed {n} dataset rows in {:.2} s — root {}",
+        t.elapsed().as_secs_f64(),
+        hex(&pd.commitment.root)
+    );
+    // the endorser re-derives the root from the released leaves and checks
+    // that they sum to the dataset MLE commitment, then signs the root
+    verify_dataset_endorsement(&pd.leaves, &pd.commitment.root, &pd.commitment.com_d)?;
+    println!("endorser: leaves rebuild the root and sum to com_d — root ENDORSED");
+
+    // ---- act two: chained training trace bound to the dataset ----
+    let wits = sgd_witness_chain(cfg, &ds, steps, 0x5eed);
+    let tk = TraceKey::setup(cfg, steps);
+    let mut rng = Rng::seed_from_u64(1);
+    let shifts = vec![cfg.lr_shift; steps - 1];
+    let t = Instant::now();
+    let proof =
+        prove_trace_chained_provenance_with(&tk, &wits, &UpdateRule::Sgd, &shifts, &pd, &mut rng)?;
+    let prove_s = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    verify_trace(&tk, &proof)?;
+    println!(
+        "chained+provenance trace over {steps} steps: prove {:.2} s | verify {:.3} s (one MSM) | {:.1} kB",
+        prove_s,
+        t.elapsed().as_secs_f64(),
+        proof.size_bytes() as f64 / 1024.0
+    );
+
+    // ---- act three: the tamper classes are rejected ----
+    let mut bad = proof.clone();
+    bad.provenance.as_mut().unwrap().dataset.root[0] ^= 1;
+    assert!(verify_trace(&tk, &bad).is_err());
+    println!("swapped endorsement root: REJECTED");
+    let mut bad = proof.clone();
+    bad.provenance = None;
+    assert!(verify_trace(&tk, &bad).is_err());
+    println!("stripped provenance payload: REJECTED");
+    let mut tampered = wits.clone();
+    tampered[0].batch_rows[0] = (tampered[0].batch_rows[0] + 1) % n;
+    assert!(prove_trace_chained_provenance_with(
+        &tk,
+        &tampered,
+        &UpdateRule::Sgd,
+        &shifts,
+        &pd,
+        &mut rng
+    )
+    .is_err());
+    println!("swapped batch row: cannot even be witnessed");
+
+    // ---- act four: Appendix-B audit against the SAME root ----
+    // a data owner checks their row was (and an outsider's was not) in the
+    // endorsed training set — the root the trace proved against
+    let row = wits[0].batch_rows[0];
+    let member_query = vec![PROVENANCE_HASH.hash(&pd.leaves[row])];
+    let mproof = pd.tree.prove(&member_query);
+    verify_membership(PROVENANCE_HASH, &pd.commitment.root, &member_query, &mproof)?;
+    println!(
+        "membership audit: dataset row {row} (used in step 0) IS under the endorsed root ({} hashes)",
+        mproof.size_hashes()
+    );
+    let out_query = vec![PROVENANCE_HASH.hash(b"not a leaf")];
+    let oproof = pd.tree.prove(&out_query);
+    verify_membership(PROVENANCE_HASH, &pd.commitment.root, &out_query, &oproof)?;
+    println!(
+        "non-membership audit: outsider NOT under the endorsed root ({} hashes)",
+        oproof.size_hashes()
+    );
+    Ok(())
+}

@@ -2,15 +2,20 @@
 //! proof size versus T independent `StepProof`s, for T ∈ {1, 4, 16}; at
 //! T ∈ {4, 16} a third row measures the zkOptim-chained trace (inter-step
 //! weight recurrence proven, plain-SGD rule) against the unchained
-//! aggregate, and a fourth the heavy-ball momentum rule (two relations per
-//! boundary + a committed accumulator per step).
+//! aggregate, a fourth the heavy-ball momentum rule (two relations per
+//! boundary + a committed accumulator per step), and a fifth the zkData
+//! provenance trace (batch selection against a committed 256-row dataset).
 //!
 //!     cargo bench --bench trace_agg
 //!     cargo bench --bench trace_agg -- --depth 2 --width 16 --batch 8
 
-use zkdl::aggregate::{prove_trace, prove_trace_chained, prove_trace_chained_with, verify_trace, TraceKey};
+use zkdl::aggregate::{
+    prove_trace, prove_trace_chained, prove_trace_chained_with, prove_trace_provenance,
+    verify_trace, TraceKey,
+};
 use zkdl::data::Dataset;
 use zkdl::model::ModelConfig;
+use zkdl::provenance::ProverDataset;
 use zkdl::update::{LrSchedule, UpdateRule};
 use zkdl::util::bench::{fmt_dur, time_once, BenchArgs, Table};
 use zkdl::util::rng::Rng;
@@ -18,13 +23,18 @@ use zkdl::witness::native::{rule_witness_chain, sgd_witness_chain};
 use zkdl::witness::StepWitness;
 use zkdl::zkdl::{prove_step, verify_step, ProofMode, ProverKey};
 
-fn witness_chain(cfg: ModelConfig, steps: usize, seed: u64) -> Vec<StepWitness> {
-    let ds = Dataset::synthetic(256, cfg.width / 2, 4, cfg.r_bits, seed ^ 0x77);
-    sgd_witness_chain(cfg, &ds, steps, seed)
+fn bench_dataset(cfg: &ModelConfig, seed: u64) -> Dataset {
+    Dataset::synthetic(256, cfg.width / 2, 4, cfg.r_bits, seed ^ 0x77)
+}
+
+fn witness_chain(cfg: ModelConfig, steps: usize, seed: u64) -> (Dataset, Vec<StepWitness>) {
+    let ds = bench_dataset(&cfg, seed);
+    let wits = sgd_witness_chain(cfg, &ds, steps, seed);
+    (ds, wits)
 }
 
 fn momentum_witness_chain(cfg: ModelConfig, steps: usize, seed: u64) -> Vec<StepWitness> {
-    let ds = Dataset::synthetic(256, cfg.width / 2, 4, cfg.r_bits, seed ^ 0x77);
+    let ds = bench_dataset(&cfg, seed);
     rule_witness_chain(
         cfg,
         &UpdateRule::momentum_default(),
@@ -61,7 +71,7 @@ fn main() {
     let mut rng = Rng::seed_from_u64(0xa66);
     let pk = ProverKey::setup(cfg);
     for t in [1usize, 4, 16] {
-        let wits = witness_chain(cfg, t, t as u64);
+        let (ds, wits) = witness_chain(cfg, t, t as u64);
 
         // T independent per-step proofs (parallel mode)
         let (step_proofs, prove_d) = time_once(|| {
@@ -139,6 +149,26 @@ fn main() {
                 fmt_dur(verify_d),
                 format!("{:.1}", m_bytes as f64 / 1024.0),
                 format!("{:.2}×", m_bytes as f64 / step_bytes as f64),
+            ]);
+
+            // zkData provenance: every step's batch bound to the committed
+            // 256-row dataset (dataset commitment amortized outside the
+            // timed region, as in deployment — one commitment per dataset)
+            let pd = ProverDataset::build(&ds, &cfg).expect("dataset commits");
+            let (p_proof, prove_d) = time_once(|| {
+                prove_trace_provenance(&tk, &wits, &pd, &mut rng).expect("rows open")
+            });
+            let (_, verify_d) = time_once(|| {
+                verify_trace(&tk, &p_proof).expect("provenance trace verifies");
+            });
+            let p_bytes = p_proof.size_bytes();
+            table.row(vec![
+                format!("{t}"),
+                "provenance".into(),
+                fmt_dur(prove_d),
+                fmt_dur(verify_d),
+                format!("{:.1}", p_bytes as f64 / 1024.0),
+                format!("{:.2}×", p_bytes as f64 / step_bytes as f64),
             ]);
         }
     }

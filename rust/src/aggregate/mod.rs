@@ -34,6 +34,7 @@ use crate::gkr;
 use crate::ipa::{self, EvalClaim, IpaProof};
 use crate::model::ModelConfig;
 use crate::poly::{eq_eval, eq_table, Mle};
+use crate::provenance::{self, ProvenanceCommitments, ProvenanceKey, ProvenanceProof, ProverDataset};
 use crate::sumcheck::{self, Instance, SumcheckProof, Term};
 use crate::transcript::Transcript;
 use crate::update::{self, ChainProof, LrSchedule, UpdateKey, UpdateRule};
@@ -174,6 +175,10 @@ pub struct TraceProof {
     /// zkSGD chain argument tying consecutive steps' weights together
     /// ([`prove_trace_chained`]); `None` for a plain trace.
     pub chain: Option<ChainProof>,
+    /// zkData batch-provenance argument binding every step's `com_x` and
+    /// labels to a committed, endorsable dataset
+    /// ([`prove_trace_provenance`]); `None` for an unbound trace.
+    pub provenance: Option<ProvenanceProof>,
 }
 
 impl StepCommitmentSet {
@@ -216,6 +221,7 @@ impl TraceProof {
             + self.validity_main.size_bytes()
             + self.validity_rem.size_bytes()
             + self.chain.as_ref().map_or(0, |c| c.size_bytes())
+            + self.provenance.as_ref().map_or(0, |p| p.size_bytes())
     }
 }
 
@@ -312,7 +318,63 @@ struct OpeningCheck {
 /// independently (no inter-step weight constraint) — see
 /// [`prove_trace_chained`] for the zkSGD-chained variant.
 pub fn prove_trace(tk: &TraceKey, wits: &[StepWitness], rng: &mut Rng) -> TraceProof {
-    prove_trace_inner(tk, wits, None, rng)
+    prove_trace_with_parts(tk, wits, None, None, rng)
+}
+
+/// Build the zkData selection commitment bundle for a trace: recover the
+/// per-step batch rows from the witnesses, validate them against the
+/// committed dataset, and commit the stacked selection tensor (before any
+/// transcript challenge, like every other commitment).
+fn build_provenance(
+    tk: &TraceKey,
+    wits: &[StepWitness],
+    pd: &ProverDataset,
+    rng: &mut Rng,
+) -> Result<(std::sync::Arc<ProvenanceKey>, ProvenanceCommitments)> {
+    provenance::checked_selection_dims(&tk.cfg, wits.len(), pd.n_rows())
+        .context("provenance trace")?;
+    let pw = provenance::ProvenanceWitness::build(pd, wits)?;
+    let pkey = ProvenanceKey::setup(tk.cfg, wits.len(), pd.n_rows());
+    let pc = provenance::commit_provenance(&pkey, pd, &pw, rng)?;
+    Ok((pkey, pc))
+}
+
+/// Prove T training steps with the zkData batch-provenance argument
+/// ([`crate::provenance`]) on top: every step's committed input X_t and
+/// target Y_t is proven to be rows of `pd`'s committed dataset, whose
+/// Merkle root rides the statement for Appendix-B endorsement. Fails if
+/// any witness's batch rows do not actually open against the dataset.
+pub fn prove_trace_provenance(
+    tk: &TraceKey,
+    wits: &[StepWitness],
+    pd: &ProverDataset,
+    rng: &mut Rng,
+) -> Result<TraceProof> {
+    let prov = build_provenance(tk, wits, pd, rng)?;
+    Ok(prove_trace_with_parts(tk, wits, None, Some(prov), rng))
+}
+
+/// [`prove_trace_chained_with`] + [`prove_trace_provenance`] combined: the
+/// chained trace additionally binds every step's inputs to the committed
+/// dataset — the full "trained THIS model on THIS data" statement.
+pub fn prove_trace_chained_provenance_with(
+    tk: &TraceKey,
+    wits: &[StepWitness],
+    rule: &UpdateRule,
+    lr_shifts: &[u32],
+    pd: &ProverDataset,
+    rng: &mut Rng,
+) -> Result<TraceProof> {
+    update::checked_stack_dims(&tk.cfg, wits.len(), rule.n_rem()).context("chained trace")?;
+    let cw = update::ChainWitness::build(rule, lr_shifts, wits)?;
+    let prov = build_provenance(tk, wits, pd, rng)?;
+    Ok(prove_trace_with_parts(
+        tk,
+        wits,
+        Some((*rule, lr_shifts.to_vec(), cw)),
+        Some(prov),
+        rng,
+    ))
 }
 
 /// Prove T ≥ 2 consecutive training steps as one *chained* trace under an
@@ -331,10 +393,11 @@ pub fn prove_trace_chained_with(
 ) -> Result<TraceProof> {
     update::checked_stack_dims(&tk.cfg, wits.len(), rule.n_rem()).context("chained trace")?;
     let cw = update::ChainWitness::build(rule, lr_shifts, wits)?;
-    Ok(prove_trace_inner(
+    Ok(prove_trace_with_parts(
         tk,
         wits,
         Some((*rule, lr_shifts.to_vec(), cw)),
+        None,
         rng,
     ))
 }
@@ -352,10 +415,11 @@ pub fn prove_trace_chained(
     prove_trace_chained_with(tk, wits, &UpdateRule::Sgd, &shifts, rng)
 }
 
-fn prove_trace_inner(
+pub(crate) fn prove_trace_with_parts(
     tk: &TraceKey,
     wits: &[StepWitness],
     chain_wit: Option<(UpdateRule, Vec<u32>, update::ChainWitness)>,
+    prov: Option<(std::sync::Arc<ProvenanceKey>, ProvenanceCommitments)>,
     rng: &mut Rng,
 ) -> TraceProof {
     let cfg = &tk.cfg;
@@ -396,6 +460,7 @@ fn prove_trace_inner(
     tr.absorb_u64(b"batch", cfg.batch as u64);
     tr.absorb_u64(b"steps", t_steps as u64);
     tr.absorb_u64(b"chained", chain_cc.is_some() as u64);
+    tr.absorb_u64(b"provenance", prov.is_some() as u64);
 
     let affine = |cs: &[Committed]| -> Vec<G1Affine> {
         G1::batch_to_affine(&cs.iter().map(|c| c.com).collect::<Vec<_>>())
@@ -419,6 +484,9 @@ fn prove_trace_inner(
     }
     if let Some((uk, cc)) = &chain_cc {
         update::absorb_chain_statement(&mut tr, &uk.rule, &cc.lr_shifts, &cc.com_state, &cc.com_u);
+    }
+    if let Some((_, pc)) = &prov {
+        provenance::absorb_provenance_statement(&mut tr, &pc.dataset, &pc.com_s);
     }
 
     // ---- Protocol 1 over the trace stack ----
@@ -457,6 +525,12 @@ fn prove_trace_inner(
     tr.absorb_point(b"p1/rem", &p1_rem.com_b_ip);
     if let Some((_, cc)) = &chain_cc {
         tr.absorb_point(b"p1/upd", &cc.p1.com_b_ip);
+    }
+    if let Some((_, pc)) = &prov {
+        tr.absorb_point(b"p1/sel", &pc.p1.com_b_ip);
+        if let Some(p) = &pc.p1.com_sign_prime {
+            tr.absorb_point(b"p1/sel/sign", p);
+        }
     }
 
     // ---- Phase 1: one challenge bundle, three trace-wide matmul sumchecks ----
@@ -935,6 +1009,16 @@ fn prove_trace_inner(
         update::prove_chain(&uk, &tk.g_mat, &w_refs, &gw_refs, cc, &mut tr, rng)
     });
 
+    // ---- Phase 6: zkData batch-provenance argument ----
+    let provenance = prov.map(|(pkey, pc)| {
+        let x_refs: Vec<&Committed> = scs.iter().map(|sc| &sc.x).collect();
+        let y_refs: Vec<&Committed> = scs.iter().map(|sc| &sc.y).collect();
+        let y_slots: Vec<usize> = (0..t_steps).map(|t| t * lbar + (depth - 1)).collect();
+        provenance::prove_provenance(
+            &pkey, &tk.g_x, &tk.g_aux, slots, &y_slots, &x_refs, &y_refs, pc, &mut tr, rng,
+        )
+    });
+
     TraceProof {
         steps: t_steps,
         coms: com_sets,
@@ -959,6 +1043,7 @@ fn prove_trace_inner(
         validity_main,
         validity_rem,
         chain,
+        provenance,
     }
 }
 
@@ -1035,6 +1120,7 @@ pub fn verify_trace_accum(
     tr.absorb_u64(b"batch", cfg.batch as u64);
     tr.absorb_u64(b"steps", t_steps as u64);
     tr.absorb_u64(b"chained", chained as u64);
+    tr.absorb_u64(b"provenance", proof.provenance.is_some() as u64);
     for (t, set) in proof.coms.iter().enumerate() {
         absorb_step_commitments(&mut tr, t, set);
     }
@@ -1047,6 +1133,9 @@ pub fn verify_trace_accum(
             &chain.com_u,
         );
     }
+    if let Some(prov) = &proof.provenance {
+        provenance::absorb_provenance_statement(&mut tr, &prov.dataset, &prov.com_s);
+    }
 
     let (vb_main, vb_rem) = trace_validity_bases(tk);
     tr.absorb_point(b"p1/main", &proof.p1_main.com_b_ip);
@@ -1058,6 +1147,13 @@ pub fn verify_trace_accum(
     tr.absorb_point(b"p1/rem", &proof.p1_rem.com_b_ip);
     if let Some(chain) = &proof.chain {
         tr.absorb_point(b"p1/upd", &chain.p1_upd.com_b_ip);
+    }
+    if let Some(prov) = &proof.provenance {
+        tr.absorb_point(b"p1/sel", &prov.p1_sel.com_b_ip);
+        match &prov.p1_sel.com_sign_prime {
+            Some(p) => tr.absorb_point(b"p1/sel/sign", p),
+            None => bail!("selection booleanity instance must carry com_sign_prime"),
+        }
     }
 
     // ---- Phase 1 ----
@@ -1509,6 +1605,20 @@ pub fn verify_trace_accum(
             .context("zkOptim chain")?;
     }
 
+    // ---- Phase 6: zkData batch-provenance argument ----
+    if let Some(prov) = &proof.provenance {
+        // sizing + structural guards before any key setup, so untrusted
+        // proofs fail cleanly instead of panicking the verifier
+        provenance::validate_provenance_shape(cfg, t_steps, prov)
+            .context("provenance payload")?;
+        let pkey = ProvenanceKey::setup(*cfg, t_steps, prov.dataset.n_rows);
+        let y_slots: Vec<usize> = (0..t_steps).map(|t| t * lbar + (depth - 1)).collect();
+        provenance::verify_provenance_accum(
+            &pkey, &tk.g_x, &tk.g_aux, slots, &y_slots, &proof.coms, prov, &mut tr, acc,
+        )
+        .context("zkData provenance")?;
+    }
+
     Ok(())
 }
 
@@ -1611,6 +1721,53 @@ mod tests {
         verify_trace_accum(&tk, &proof, &mut acc).expect("deferred verification");
         assert_eq!(acc.flushes(), 0, "no MSM before the flush");
         assert!(acc.flush(), "single aggregate MSM decides the momentum chain");
+        assert_eq!(acc.flushes(), 1);
+    }
+
+    #[test]
+    fn provenance_trace_verifies_with_exactly_one_msm_flush() {
+        // the one-MSM invariant must survive the zkData extension: a trace
+        // with the batch-selection argument (and its booleanity instance)
+        // still defers everything into one flush
+        let cfg = ModelConfig::new(2, 8, 4);
+        let ds = Dataset::synthetic(24, cfg.width / 2, 4, cfg.r_bits, 0x9a7a);
+        let wits = sgd_witness_chain(cfg, &ds, 3, 0xf00d);
+        let pd = ProverDataset::build(&ds, &cfg).expect("dataset commits");
+        let tk = TraceKey::setup(cfg, 3);
+        let mut rng = Rng::seed_from_u64(30);
+        let proof = prove_trace_provenance(&tk, &wits, &pd, &mut rng).expect("rows open");
+        let prov = proof.provenance.as_ref().expect("provenance present");
+        assert_eq!(prov.dataset.root, pd.commitment.root, "endorsed root rides the statement");
+        verify_trace(&tk, &proof).expect("provenance trace verifies");
+        let mut seed = Rng::seed_from_u64(31);
+        let mut acc = MsmAccumulator::from_rng(&mut seed);
+        verify_trace_accum(&tk, &proof, &mut acc).expect("deferred verification");
+        assert_eq!(acc.flushes(), 0, "no MSM before the flush");
+        assert!(acc.flush(), "single aggregate MSM decides the provenance trace");
+        assert_eq!(acc.flushes(), 1);
+    }
+
+    #[test]
+    fn chained_provenance_trace_verifies_with_exactly_one_msm_flush() {
+        // chain + provenance together: the full "this model, this data"
+        // statement still costs one MSM
+        let cfg = ModelConfig::new(2, 8, 4);
+        let ds = Dataset::synthetic(24, cfg.width / 2, 4, cfg.r_bits, 0x9a7b);
+        let wits = sgd_witness_chain(cfg, &ds, 3, 0xf00e);
+        let pd = ProverDataset::build(&ds, &cfg).expect("dataset commits");
+        let tk = TraceKey::setup(cfg, 3);
+        let mut rng = Rng::seed_from_u64(32);
+        let shifts = vec![cfg.lr_shift; 2];
+        let proof =
+            prove_trace_chained_provenance_with(&tk, &wits, &UpdateRule::Sgd, &shifts, &pd, &mut rng)
+                .expect("chains and opens");
+        assert!(proof.chain.is_some() && proof.provenance.is_some());
+        verify_trace(&tk, &proof).expect("chained provenance trace verifies");
+        let mut seed = Rng::seed_from_u64(33);
+        let mut acc = MsmAccumulator::from_rng(&mut seed);
+        verify_trace_accum(&tk, &proof, &mut acc).expect("deferred verification");
+        assert_eq!(acc.flushes(), 0, "no MSM before the flush");
+        assert!(acc.flush());
         assert_eq!(acc.flushes(), 1);
     }
 

@@ -10,9 +10,13 @@
 //! into windows of T steps and emits one [`TraceProof`] per window, proving
 //! window k while the witnesses of window k+1 are being generated.
 
-use crate::aggregate::{prove_trace, prove_trace_chained_with, verify_trace, TraceKey, TraceProof};
-use crate::data::Dataset;
+use crate::aggregate::{
+    prove_trace, prove_trace_chained_provenance_with, prove_trace_chained_with,
+    prove_trace_provenance, verify_trace, TraceKey, TraceProof,
+};
+use crate::data::{BatchSampler, Dataset};
 use crate::model::{ModelConfig, Weights};
+use crate::provenance::ProverDataset;
 use crate::runtime::WitnessSource;
 use crate::update::{LrSchedule, UpdateRule};
 use crate::util::rng::Rng;
@@ -243,6 +247,11 @@ pub struct TraceTrainOptions {
     /// Per-step learning-rate schedule; `None` = the config's constant
     /// `lr_shift` (the pre-schedule behavior).
     pub lr_schedule: Option<LrSchedule>,
+    /// Prove every window with the zkData batch-provenance argument: the
+    /// dataset is committed ONCE up front (its Merkle root is the
+    /// endorsable Appendix-B statement) and every window's proof binds its
+    /// steps' inputs to that one commitment.
+    pub provenance: bool,
     /// Max in-flight *windows* of witnesses between the coordinator thread
     /// and the aggregator worker (channel capacity = window × depth).
     /// Affects scheduling only: artifacts are byte-identical at any depth.
@@ -259,6 +268,7 @@ impl Default for TraceTrainOptions {
             chained: false,
             rule: UpdateRule::Sgd,
             lr_schedule: None,
+            provenance: false,
             pipeline_depth: 2,
         }
     }
@@ -281,6 +291,9 @@ pub struct TraceRunReport {
     pub losses: Vec<f64>,
     pub witness_ms_total: f64,
     pub wall_s: f64,
+    /// The Appendix-B root of the committed dataset (provenance runs only)
+    /// — the statement a trusted verifier endorses once for the whole run.
+    pub dataset_root: Option<Vec<u8>>,
 }
 
 impl TraceRunReport {
@@ -334,6 +347,26 @@ pub fn train_and_prove_trace(
     let mut weights = Weights::init(cfg, &mut rng);
     let mut opt_state = rule.init_state(&cfg);
     let source = WitnessSource::auto(artifact_dir, cfg);
+    // provenance proves one-hot selections, so a batch cannot repeat rows;
+    // plain runs with batch > dataset keep the legacy wrapping schedule
+    ensure!(
+        !opts.provenance || cfg.batch <= dataset.len(),
+        "batch {} exceeds dataset size {} (provenance needs without-replacement sampling)",
+        cfg.batch,
+        dataset.len()
+    );
+    // seeded without-replacement batch schedule — reproducible from the
+    // run seed, and the source of each witness's provenance rows
+    let mut sampler = (cfg.batch <= dataset.len())
+        .then(|| BatchSampler::new(dataset.len(), opts.seed ^ 0xda7a));
+    // the dataset commitment is a one-time cost, shared by every window of
+    // the run (and across runs: its root is what gets endorsed)
+    let prover_dataset: Option<ProverDataset> = opts
+        .provenance
+        .then(|| ProverDataset::build(dataset, &cfg))
+        .transpose()
+        .context("committing the dataset")?;
+    let dataset_root = prover_dataset.as_ref().map(|pd| pd.commitment.root.clone());
 
     let t_run = Instant::now();
     let mut witness_ms_total = 0.0;
@@ -350,6 +383,7 @@ pub fn train_and_prove_trace(
         let skip_verify = opts.skip_verify;
         let chained = opts.chained;
         let seed = opts.seed;
+        let prover_dataset = &prover_dataset;
         let aggregator = scope.spawn(move || -> Result<Vec<WindowOut>> {
             let mut prng = Rng::seed_from_u64(seed ^ 0x7ace);
             let mut out = Vec::new();
@@ -362,13 +396,19 @@ pub fn train_and_prove_trace(
                 let t = buf.len();
                 let tk = TraceKey::setup(cfg, t);
                 let t1 = Instant::now();
-                let proof = if chained && t >= 2 {
-                    // boundary b of this window is the update applied after
-                    // global step start_step + b
-                    let shifts = schedule.window_table(start_step, t - 1);
-                    prove_trace_chained_with(&tk, buf, &rule, &shifts, prng)?
-                } else {
-                    prove_trace(&tk, buf, prng)
+                let proof = match (chained && t >= 2, prover_dataset) {
+                    (true, Some(pd)) => {
+                        // boundary b of this window is the update applied
+                        // after global step start_step + b
+                        let shifts = schedule.window_table(start_step, t - 1);
+                        prove_trace_chained_provenance_with(&tk, buf, &rule, &shifts, pd, prng)?
+                    }
+                    (true, None) => {
+                        let shifts = schedule.window_table(start_step, t - 1);
+                        prove_trace_chained_with(&tk, buf, &rule, &shifts, prng)?
+                    }
+                    (false, Some(pd)) => prove_trace_provenance(&tk, buf, pd, prng)?,
+                    (false, None) => prove_trace(&tk, buf, prng),
                 };
                 let prove_ms = t1.elapsed().as_secs_f64() * 1e3;
                 let verify_ms = if skip_verify {
@@ -405,17 +445,22 @@ pub fn train_and_prove_trace(
         });
 
         for step in 0..opts.steps {
-            let (x, y) = dataset.batch(&cfg, step);
+            let rows = match sampler.as_mut() {
+                Some(s) => s.next_batch(cfg.batch),
+                None => dataset.batch_indices(&cfg, step),
+            };
+            let (x, y) = dataset.batch_at(&cfg, &rows);
             let t0 = Instant::now();
             let mut wit = source
                 .compute_witness(&x, &y, &weights)
                 .with_context(|| format!("witness at step {step}"))?;
             witness_ms_total += t0.elapsed().as_secs_f64() * 1e3;
             losses.push(wit.loss());
-            // the witness carries the optimizer state *entering* its step;
-            // the rule's exact quantized update then advances weights and
-            // state for the next one
+            // the witness carries the optimizer state *entering* its step
+            // and the provenance rows behind its batch; the rule's exact
+            // quantized update then advances weights and state
             wit.opt_state = opt_state.clone();
+            wit.batch_rows = rows;
             rule.apply_update(
                 schedule.shift_at(step),
                 &mut weights,
@@ -444,6 +489,7 @@ pub fn train_and_prove_trace(
         losses,
         witness_ms_total,
         wall_s: t_run.elapsed().as_secs_f64(),
+        dataset_root,
     })
 }
 
@@ -570,6 +616,34 @@ mod tests {
     }
 
     #[test]
+    fn provenance_driver_reuses_one_dataset_commitment_across_windows() {
+        let cfg = ModelConfig::new(2, 8, 4);
+        let ds = Dataset::synthetic(32, 4, 4, cfg.r_bits, 15);
+        let opts = TraceTrainOptions {
+            steps: 4,
+            window: 2,
+            seed: 7,
+            chained: true,
+            provenance: true,
+            ..Default::default()
+        };
+        let report = train_and_prove_trace(cfg, &ds, Path::new("artifacts"), &opts)
+            .expect("provenance run");
+        let root = report.dataset_root.as_ref().expect("root reported");
+        assert_eq!(report.proofs.len(), 2);
+        for proof in &report.proofs {
+            let prov = proof.provenance.as_ref().expect("window carries provenance");
+            assert_eq!(&prov.dataset.root, root, "one commitment, every window");
+            assert_eq!(prov.dataset.n_rows, 32);
+            assert!(proof.chain.is_some(), "chain and provenance compose");
+        }
+        // a batch larger than the dataset cannot be sampled without
+        // replacement — refused up front
+        let tiny = Dataset::synthetic(2, 4, 2, cfg.r_bits, 16);
+        assert!(train_and_prove_trace(cfg, &tiny, Path::new("artifacts"), &opts).is_err());
+    }
+
+    #[test]
     fn pipeline_depth_yields_byte_identical_trace_artifacts() {
         // pipeline_depth changes only the channel capacity (scheduling);
         // the persisted artifacts must not depend on it
@@ -583,6 +657,7 @@ mod tests {
                 skip_verify: true,
                 chained: true,
                 pipeline_depth,
+                ..Default::default()
             };
             let report = train_and_prove_trace(cfg, &ds, Path::new("artifacts"), &opts)
                 .expect("trace run");

@@ -69,20 +69,33 @@ impl Dataset {
         self.points.is_empty()
     }
 
-    /// Assemble batch `idx` (wrapping) as padded X, one-hot Y at scale 2^R
-    /// for a model of config `cfg`.
-    pub fn batch(&self, cfg: &ModelConfig, idx: usize) -> (Vec<i64>, Vec<i64>) {
+    /// Row indices of batch `idx` under the legacy wrapping schedule.
+    pub fn batch_indices(&self, cfg: &ModelConfig, idx: usize) -> Vec<usize> {
+        (0..cfg.batch).map(|i| (idx * cfg.batch + i) % self.len()).collect()
+    }
+
+    /// Assemble the given dataset rows as padded X, one-hot Y at scale 2^R
+    /// for a model of config `cfg` — the row-indexed core every batch
+    /// schedule ([`Self::batch`], [`BatchSampler`]) goes through.
+    pub fn batch_at(&self, cfg: &ModelConfig, rows: &[usize]) -> (Vec<i64>, Vec<i64>) {
         let (b, d) = (cfg.batch, cfg.width);
+        assert_eq!(rows.len(), b, "row count must match the batch size");
         assert!(d >= self.dim, "model width must cover data dim");
         let scale = cfg.scale();
         let mut x = vec![0i64; b * d];
         let mut y = vec![0i64; b * d];
-        for i in 0..b {
-            let j = (idx * b + i) % self.len();
+        for (i, &j) in rows.iter().enumerate() {
+            assert!(j < self.len(), "dataset row out of range");
             x[i * d..i * d + self.dim].copy_from_slice(&self.points[j]);
             y[i * d + self.labels[j]] = scale;
         }
         (x, y)
+    }
+
+    /// Assemble batch `idx` (wrapping) as padded X, one-hot Y at scale 2^R
+    /// for a model of config `cfg`.
+    pub fn batch(&self, cfg: &ModelConfig, idx: usize) -> (Vec<i64>, Vec<i64>) {
+        self.batch_at(cfg, &self.batch_indices(cfg, idx))
     }
 
     /// Fraction of batch points classified correctly by arg-max of the last
@@ -101,6 +114,45 @@ impl Dataset {
             }
         }
         correct as f64 / b as f64
+    }
+}
+
+/// Seeded without-replacement batch sampler: a Fisher–Yates-shuffled pass
+/// over the dataset per epoch, reshuffling when fewer than a full batch
+/// remains. Deterministic in (n, seed), so the coordinator's batch schedule
+/// — and hence the provenance witness — reproduces exactly from the run
+/// seed.
+pub struct BatchSampler {
+    order: Vec<usize>,
+    pos: usize,
+    rng: Rng,
+}
+
+impl BatchSampler {
+    pub fn new(n: usize, seed: u64) -> Self {
+        assert!(n >= 1, "cannot sample an empty dataset");
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        Self { order, pos: 0, rng }
+    }
+
+    /// The next `b` distinct row indices of the current epoch (`b` must not
+    /// exceed the dataset size). An epoch's leftover shorter than `b` is
+    /// folded into the next reshuffle.
+    pub fn next_batch(&mut self, b: usize) -> Vec<usize> {
+        assert!(
+            b <= self.order.len(),
+            "batch {b} exceeds dataset size {}",
+            self.order.len()
+        );
+        if self.pos + b > self.order.len() {
+            self.rng.shuffle(&mut self.order);
+            self.pos = 0;
+        }
+        let out = self.order[self.pos..self.pos + b].to_vec();
+        self.pos += b;
+        out
     }
 }
 
@@ -144,6 +196,49 @@ mod tests {
         for i in 0..4 {
             let s: i64 = y[i * 8..(i + 1) * 8].iter().sum();
             assert_eq!(s, cfg.scale());
+        }
+    }
+
+    #[test]
+    fn batch_at_matches_wrapping_batch() {
+        let ds = Dataset::synthetic(10, 6, 3, 16, 2);
+        let cfg = ModelConfig::new(1, 8, 4);
+        let rows = ds.batch_indices(&cfg, 3);
+        assert_eq!(rows, vec![12 % 10, 13 % 10, 14 % 10, 15 % 10]);
+        assert_eq!(ds.batch_at(&cfg, &rows), ds.batch(&cfg, 3));
+    }
+
+    #[test]
+    fn sampler_is_deterministic_and_covers_each_epoch() {
+        let n = 12;
+        let b = 4;
+        let mut a = BatchSampler::new(n, 9);
+        let mut c = BatchSampler::new(n, 9);
+        let batches_a: Vec<Vec<usize>> = (0..6).map(|_| a.next_batch(b)).collect();
+        let batches_c: Vec<Vec<usize>> = (0..6).map(|_| c.next_batch(b)).collect();
+        assert_eq!(batches_a, batches_c, "same seed, same schedule");
+        // one epoch (n/b batches) covers every row exactly once
+        let mut seen: Vec<usize> = batches_a[..3].iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n).collect::<Vec<_>>(), "first epoch covers all rows");
+        let mut seen2: Vec<usize> = batches_a[3..6].iter().flatten().copied().collect();
+        seen2.sort_unstable();
+        assert_eq!(seen2, (0..n).collect::<Vec<_>>(), "second epoch covers all rows");
+        // a different seed yields a different order
+        let mut d = BatchSampler::new(n, 10);
+        let other: Vec<Vec<usize>> = (0..3).map(|_| d.next_batch(b)).collect();
+        assert_ne!(batches_a[..3], other[..], "seed changes the schedule");
+        // non-dividing batch size: the short tail triggers a reshuffle and
+        // every draw still yields b distinct in-range rows
+        let mut e = BatchSampler::new(10, 3);
+        for _ in 0..7 {
+            let batch = e.next_batch(4);
+            assert_eq!(batch.len(), 4);
+            let mut sorted = batch.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 4, "rows within a batch are distinct");
+            assert!(batch.iter().all(|&r| r < 10));
         }
     }
 

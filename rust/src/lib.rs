@@ -13,6 +13,7 @@
 //!   [`zkrelu`] (auxiliary-input validity), [`zkdl`] (Protocol 2),
 //!   [`aggregate`] (FAC4DNN multi-step trace aggregation),
 //!   [`update`] (zkSGD weight-update chaining),
+//!   [`provenance`] (zkData batch-provenance against a committed dataset),
 //!   [`merkle`] (Appendix B), [`baseline`] (SC-BD comparator)
 //! * the workload: [`model`] (fixed-point quantized network), [`witness`],
 //!   [`data`]
@@ -36,6 +37,7 @@ pub mod zkdl;
 pub mod zkrelu;
 pub mod hash;
 pub mod poly;
+pub mod provenance;
 pub mod runtime;
 pub mod sumcheck;
 pub mod transcript;

@@ -7,9 +7,13 @@
 //!                `--chained` adds the zkOptim update-chain argument;
 //!                `--optimizer {sgd,momentum}` picks the proven update
 //!                rule and `--lr-schedule {N,const:N,decay:b,p,m}` the
-//!                per-step learning-rate shifts
+//!                per-step learning-rate shifts; `--provenance` commits
+//!                the dataset once and binds every step's batch to it
+//!                (the printed root is the endorsable Appendix-B statement)
 //!   verify-trace re-read persisted trace proofs and verify out-of-process;
-//!                multiple `--in` files batch into ONE MSM
+//!                multiple `--in` files batch into ONE MSM; `--expect-root
+//!                <hex>` additionally pins provenance artifacts to an
+//!                endorsed dataset root
 //!   membership   build the Merkle tree and answer (non-)membership queries
 //!   info         print configuration and environment
 //!
@@ -19,6 +23,7 @@
 //!   zkdl prove-trace --depth 2 --width 16 --batch 8 --steps 16 --out trace.zkp
 //!   zkdl prove-trace --chained --depth 2 --width 16 --batch 8 --steps 4
 //!   zkdl prove-trace --chained --optimizer momentum --lr-schedule decay:8,2,12 --steps 4
+//!   zkdl prove-trace --provenance --depth 2 --width 16 --batch 8 --steps 4 --data-n 64
 //!   zkdl verify-trace --in trace.zkp
 //!   zkdl verify-trace --in a.zkp --in b.zkp --in c.zkp
 //!   zkdl membership --n 1000 --queries 100 --hash sha256 --positivity 0.5
@@ -50,6 +55,22 @@ fn proof_mode(cli: &Cli) -> ProofMode {
         "sequential" => ProofMode::Sequential,
         _ => ProofMode::Parallel,
     }
+}
+
+fn hex_encode(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+fn hex_decode(s: &str) -> Result<Vec<u8>> {
+    // byte-offset slicing below would panic mid-char on non-ASCII input
+    anyhow::ensure!(s.is_ascii(), "hex string must be ASCII");
+    anyhow::ensure!(s.len() % 2 == 0, "odd-length hex string");
+    (0..s.len() / 2)
+        .map(|i| {
+            u8::from_str_radix(&s[2 * i..2 * i + 2], 16)
+                .with_context(|| format!("bad hex at byte {i}"))
+        })
+        .collect()
 }
 
 fn cmd_prove(cli: &Cli) -> Result<()> {
@@ -119,10 +140,11 @@ fn cmd_prove_trace(cli: &Cli) -> Result<()> {
         chained: cli.flag("chained"),
         rule,
         lr_schedule,
+        provenance: cli.flag("provenance"),
         pipeline_depth: cli.get_usize("pipeline-depth", 2),
     };
     println!(
-        "aggregating {steps} training steps: L={} d={} B={} optimizer={}{}{}",
+        "aggregating {steps} training steps: L={} d={} B={} optimizer={}{}{}{}",
         cfg.depth,
         cfg.width,
         cfg.batch,
@@ -133,11 +155,19 @@ fn cmd_prove_trace(cli: &Cli) -> Result<()> {
             Some(LrSchedule::Constant(s)) => format!(" lr=2^-{s}"),
             None => format!(" lr=2^-{}", cfg.lr_shift),
         },
-        if opts.chained { " (zkOptim chained)" } else { "" }
+        if opts.chained { " (zkOptim chained)" } else { "" },
+        if opts.provenance { " (zkData provenance)" } else { "" }
     );
     let ds = synthetic_dataset(cli, &cfg);
     let report = train_and_prove_trace(cfg, &ds, Path::new("artifacts"), &opts)?;
     println!("{}", report.summary());
+    if let Some(root) = &report.dataset_root {
+        println!(
+            "dataset: {} rows committed, endorsable root {}",
+            ds.len(),
+            hex_encode(root)
+        );
+    }
     for (i, (w, proof)) in report.windows.iter().zip(report.proofs.iter()).enumerate() {
         let path = if report.proofs.len() == 1 {
             out.to_string()
@@ -163,16 +193,29 @@ fn cmd_verify_trace(cli: &Cli) -> Result<()> {
     if paths.is_empty() {
         paths.push("trace.zkp".to_string());
     }
+    let expect_root = cli
+        .get("expect-root")
+        .map(hex_decode)
+        .transpose()
+        .context("parsing --expect-root")?;
     let mut decoded: Vec<TraceProof> = Vec::with_capacity(paths.len());
     let mut keys: Vec<TraceKey> = Vec::with_capacity(paths.len());
     for path in &paths {
         let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
         let (cfg, proof) = zkdl::wire::decode_trace_proof(&bytes)?;
         println!(
-            "{path}: {} steps{}, L={} d={} B={}, {} wire bytes",
+            "{path}: {} steps{}{}, L={} d={} B={}, {} wire bytes",
             proof.steps,
             match &proof.chain {
                 Some(chain) => format!(" (chained, {})", chain.rule.name()),
+                None => String::new(),
+            },
+            match &proof.provenance {
+                Some(prov) => format!(
+                    " (provenance: {} rows, root {})",
+                    prov.dataset.n_rows,
+                    hex_encode(&prov.dataset.root)
+                ),
                 None => String::new(),
             },
             cfg.depth,
@@ -180,6 +223,16 @@ fn cmd_verify_trace(cli: &Cli) -> Result<()> {
             cfg.batch,
             bytes.len()
         );
+        if let Some(root) = &expect_root {
+            let prov = proof
+                .provenance
+                .as_ref()
+                .with_context(|| format!("{path}: --expect-root given but artifact has no provenance"))?;
+            anyhow::ensure!(
+                &prov.dataset.root == root,
+                "{path}: dataset root does not match the endorsed root"
+            );
+        }
         keys.push(TraceKey::setup(cfg, proof.steps));
         decoded.push(proof);
     }
@@ -238,7 +291,8 @@ fn cmd_membership(cli: &Cli) -> Result<()> {
     let hash = HashFn::parse(cli.get_str("hash", "sha256")).expect("md5|sha1|sha256");
     let mut rng = Rng::seed_from_u64(cli.get_u64("seed", 1));
 
-    // deterministic per-point Pedersen commitments (paper §3.1, r = 0)
+    // deterministic per-point Pedersen commitments (paper §3.1, r = 0),
+    // leaf-encoded with the canonical 32-byte compressed-point codec
     let dim = cli.get_usize("dim", 64);
     let ck = zkdl::commit::CommitKey::setup(b"zkdl/data", dim);
     let ds = Dataset::synthetic(n, dim, 10, 16, 9);
@@ -248,7 +302,7 @@ fn cmd_membership(cli: &Cli) -> Result<()> {
         .iter()
         .map(|p| {
             let frs: Vec<zkdl::Fr> = p.iter().map(|&v| zkdl::Fr::from_i64(v)).collect();
-            ck.commit_deterministic(&frs).to_affine().to_bytes().to_vec()
+            zkdl::merkle::point_leaf(&ck.commit_deterministic(&frs).to_affine())
         })
         .collect();
     println!("committed {n} points in {:.2} s", t.elapsed().as_secs_f64());

@@ -11,11 +11,33 @@
 //! owner folds back to the root (Protocol 4 / Algorithm 2).
 //!
 //! Node hashing uses length-prefixed child encodings so the empty value ε,
-//! 64-byte leaf commitments, and fixed-length digests cannot collide.
+//! leaf commitments, and fixed-length digests cannot collide.
+//!
+//! Leaf encoding is the canonical 32-byte compressed-point codec shared
+//! with the wire format ([`point_leaf`]/[`leaf_point`]): endorsement leaves
+//! and persisted artifacts agree on one byte representation per point, so
+//! a dataset commitment can be cross-checked against an endorsed root
+//! ([`crate::provenance::verify_dataset_endorsement`]).
 
+use crate::curve::G1Affine;
 use crate::hash::HashFn;
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::BTreeMap;
+
+/// Canonical leaf encoding of a data-point commitment: the same 32-byte
+/// compressed form the wire codec serializes (sign bit + x).
+pub fn point_leaf(p: &G1Affine) -> Vec<u8> {
+    p.to_bytes_compressed().to_vec()
+}
+
+/// Decode a [`point_leaf`] back to its point, rejecting malformed bytes.
+pub fn leaf_point(bytes: &[u8]) -> Result<G1Affine> {
+    let raw: [u8; 32] = bytes
+        .try_into()
+        .ok()
+        .context("merkle: leaf is not 32 bytes")?;
+    G1Affine::from_bytes_compressed(&raw).context("merkle: leaf is not a curve point")
+}
 
 /// A node identifier: its depth and the path bits from the root (one bool
 /// per level). The root is (0, []).
@@ -118,6 +140,12 @@ impl MerkleTree {
         };
         tree.root = tree.value_of_range(0, 0, tree.leaves.len()).bytes().to_vec();
         tree
+    }
+
+    /// [`Self::build`] over point commitments, leaf-encoded canonically.
+    pub fn build_points(hash: HashFn, points: &[G1Affine]) -> Self {
+        let leaves: Vec<Vec<u8>> = points.iter().map(point_leaf).collect();
+        Self::build(hash, &leaves)
     }
 
     pub fn len(&self) -> usize {
@@ -431,6 +459,39 @@ mod tests {
         let id = (tree.k, digest_bits(&q));
         proof.nodes.insert(id, Val::Leaf(data[8].clone()));
         assert!(verify_membership(hash, &tree.root, &queries, &proof).is_err());
+    }
+
+    #[test]
+    fn leaf_encoding_matches_the_wire_point_codec() {
+        // cross-module: an endorsement leaf and a wire artifact must share
+        // one canonical byte representation per point
+        let mut r = Rng::seed_from_u64(0x1eaf);
+        let mut points: Vec<crate::curve::G1Affine> = (0..8)
+            .map(|_| crate::curve::G1::random(&mut r).to_affine())
+            .collect();
+        points.push(crate::curve::G1Affine::IDENTITY);
+        for p in &points {
+            let leaf = point_leaf(p);
+            assert_eq!(leaf.len(), 32, "compressed leaves");
+            let mut w = crate::wire::WireWriter::new();
+            w.put(p);
+            assert_eq!(leaf, w.finish(), "leaf bytes == wire point bytes");
+            assert_eq!(leaf_point(&leaf).expect("roundtrips"), *p);
+        }
+        // malformed leaves are rejected, not mis-decoded
+        assert!(leaf_point(&[0u8; 31]).is_err());
+        let mut bad = point_leaf(&points[0]);
+        bad[31] |= 0xc0; // sign + infinity flags together are invalid
+        assert!(leaf_point(&bad).is_err());
+        // build_points == build over the encoded leaves
+        let leaves: Vec<Vec<u8>> = points.iter().map(point_leaf).collect();
+        let a = MerkleTree::build_points(HashFn::Sha256, &points);
+        let b = MerkleTree::build(HashFn::Sha256, &leaves);
+        assert_eq!(a.root, b.root);
+        // ... and (non-)membership proofs verify against it
+        let queries = vec![HashFn::Sha256.hash(&leaves[2])];
+        let proof = a.prove(&queries);
+        verify_membership(HashFn::Sha256, &a.root, &queries, &proof).expect("verifies");
     }
 
     #[test]

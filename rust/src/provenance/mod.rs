@@ -1,0 +1,1135 @@
+//! zkData — batch provenance: binding every training step's inputs to a
+//! committed, endorsable dataset.
+//!
+//! A [`crate::aggregate::TraceProof`] (chained or not) proves that each
+//! step's relations hold over *its own* committed input `com_x` and target
+//! `com_y` — but nothing ties those commitments to any particular dataset.
+//! A prover holding an Appendix-B endorsement for dataset D can still train
+//! on arbitrary data. This module closes that gap:
+//!
+//! * **One-time dataset commitment.** The full quantized dataset — points
+//!   *and* one-hot labels — is laid out as one tiled tensor on a dedicated
+//!   `zkdl/data` basis: row k owns block k·2d with its padded point in the
+//!   first d entries and scale·onehot(label) in the second d. Each row's
+//!   block commitment C_k (deterministic, r = 0, paper §3.1) is a leaf of
+//!   the Appendix-B Merkle tree via the canonical 32-byte compressed-point
+//!   codec ([`crate::merkle::point_leaf`]); the single dataset commitment
+//!   `com_d = Σ_k C_k` is then *derivable from the endorsed leaf set* — the
+//!   endorser checks exactly this ([`verify_dataset_endorsement`]) before
+//!   signing the root, so "com_d is the dataset under the endorsed root" is
+//!   a public, recomputable fact, not a trust assumption.
+//!
+//! * **Per-trace batch-selection argument.** The prover commits one stacked
+//!   selection tensor S (T̄ slots of B×n̄ each, slot t = the step's selection
+//!   matrix S_t) with a single commitment `com_s` on a `zkdl/data/sel`
+//!   basis, and proves, for every step t:
+//!     X_t = S_t·D_pts  and  Y_t = S_t·D_lab
+//!   via ONE γ-folded matmul sumcheck over the dataset-row axis, with the
+//!   claims bound homomorphically: X̃_t/Ỹ_t open against the trace's own
+//!   `com_x`/`com_y`, D̃ against `com_d` (a δ-fold of the points/labels
+//!   halves), and the per-step S̃_t(u, r) against `com_s` through the same
+//!   γ-powered slot selector the zkOptim chain uses ([`crate::update`]).
+//!
+//! * **One-hot rows.** Booleanity of every S entry rides the existing
+//!   zkReLU validity machinery: a Protocol-1 *main* instance whose sign
+//!   tensor is S itself (`com_s` plays com_{B_{Q−1}}; the paired value
+//!   tensor is identically zero), so S ∈ {0,1}ᴺ follows from the paper's
+//!   k-coupled binarity check — no new range gadget. A row-sum claim
+//!   (⟨S, e_rows(u)⊗1_{k<n}⟩ = Σ_{live rows} e_rows(u), RLC'd into the same
+//!   S opening) then pins every live row to exactly one live selection.
+//!   Together: every batch row of X_t *is* a dataset row and its Y_t row is
+//!   that row's label — the `com_x`/`com_y` the trace's matmul and loss
+//!   arguments already constrain.
+//!
+//! Everything defers into the trace's `MsmAccumulator`; a provenance trace
+//! still verifies with exactly one MSM flush. See DESIGN.md §provenance.
+
+use crate::aggregate::StepCommitmentSet;
+use crate::commit::{ComExpr, CommitKey};
+use crate::curve::accum::MsmAccumulator;
+use crate::curve::{msm::msm, G1Affine, G1};
+use crate::data::Dataset;
+use crate::field::Fr;
+use crate::hash::HashFn;
+use crate::ipa::{self, EvalClaim, IpaProof};
+use crate::merkle::{leaf_point, point_leaf, MerkleTree};
+use crate::model::ModelConfig;
+use crate::poly::{eq_table, Mle};
+use crate::sumcheck::{self, Instance, SumcheckProof, Term};
+use crate::transcript::Transcript;
+use crate::util::rng::Rng;
+use crate::witness::StepWitness;
+use crate::zkdl::{commit, frs, tile_claims_at, tiled_eq, Committed};
+use crate::zkrelu::{self, Protocol1Msg, ProverAux, ValidityBases, ValidityProof};
+use anyhow::{ensure, Context, Result};
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// The endorsement hash of the Appendix-B bridge. Pinned (rather than
+/// artifact-chosen) so every provenance statement's root lives in one
+/// 32-byte domain.
+pub const PROVENANCE_HASH: HashFn = HashFn::Sha256;
+
+/// Digit width of the booleanity instance: S entries are {0,1}, so the
+/// minimal power-of-two width suffices (the sign column is column 1).
+const SEL_WIDTH: usize = 2;
+
+/// Padded step count T̄, padded dataset-row count n̄, the stacked selection
+/// size N_S = T̄·B·n̄ (slot t's row i, dataset column k lives at index
+/// (t·B + i)·n̄ + k), and the dataset tensor size N_D = n̄·2d. Errors on
+/// degenerate or overflowing shapes — the wire decoder, the provers, and
+/// `verify_trace_accum` all guard with this before any key setup.
+pub fn checked_selection_dims(
+    cfg: &ModelConfig,
+    steps: usize,
+    n_rows: usize,
+) -> Result<(usize, usize, usize, usize)> {
+    ensure!(steps >= 1, "provenance needs at least one step");
+    ensure!(n_rows >= 1, "empty dataset");
+    ensure!(cfg.width >= 2, "provenance needs width >= 2");
+    // n_rows is wire-controlled: the unchecked next_power_of_two would
+    // panic (debug) or wrap to 0 (release) past 2^63 — fail cleanly instead
+    let tbar = steps
+        .checked_next_power_of_two()
+        .context("step count overflows padding")?;
+    let nbar = n_rows
+        .checked_next_power_of_two()
+        .context("dataset row count overflows padding")?
+        .max(2);
+    let n_sel = tbar
+        .checked_mul(cfg.batch)
+        .and_then(|x| x.checked_mul(nbar))
+        .context("selection stack dimensions overflow")?;
+    let n_data = nbar
+        .checked_mul(2 * cfg.width)
+        .context("dataset tensor dimensions overflow")?;
+    ensure!(n_sel >= 2, "degenerate selection stack");
+    Ok((tbar, nbar, n_sel, n_data))
+}
+
+/// The public dataset statement a provenance trace carries: the one MLE
+/// commitment to the full dataset tensor plus the Appendix-B root its
+/// per-row leaf commitments hash to. Both are absorbed into the trace
+/// transcript before any challenge.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DatasetCommitment {
+    /// Live dataset rows n (the statement; padding rows are zero).
+    pub n_rows: usize,
+    /// com_d = Σ_k C_k — the tiled dataset MLE commitment (deterministic).
+    pub com_d: G1Affine,
+    /// Merkle root over the 32-byte compressed leaf encodings of the C_k,
+    /// the object a trusted verifier endorses (paper Appendix B).
+    pub root: Vec<u8>,
+}
+
+/// Prover-side dataset: the embedded tensor, its commitment, and the
+/// endorsement material (leaves + tree). Built once, reused across every
+/// trace window proving against this dataset.
+pub struct ProverDataset {
+    /// Model width d the tensor was embedded for.
+    pub width: usize,
+    /// Scale 2^R the labels were embedded at.
+    pub r_bits: u32,
+    /// The tiled dataset tensor, length n̄·2d — shared (`Arc`) so the
+    /// coordinator's per-window proofs never deep-copy it.
+    tensor: Arc<Vec<Fr>>,
+    pub commitment: DatasetCommitment,
+    /// Canonical 32-byte leaf encodings of the per-row commitments C_k.
+    pub leaves: Vec<Vec<u8>>,
+    /// The Appendix-B tree over `leaves`; `tree.root` is what gets endorsed.
+    pub tree: MerkleTree,
+}
+
+impl ProverDataset {
+    /// Embed and commit `ds` for models of configuration `cfg`. Row k's
+    /// block is [point_k ∥ scale·onehot(label_k)], zero-padded to 2d.
+    pub fn build(ds: &Dataset, cfg: &ModelConfig) -> Result<Self> {
+        let d = cfg.width;
+        let n = ds.len();
+        let (_, nbar, _, n_data) = checked_selection_dims(cfg, 1, n)?;
+        ensure!(ds.dim <= d, "dataset dim {} exceeds model width {d}", ds.dim);
+        ensure!(
+            ds.num_classes <= d,
+            "dataset classes {} exceed model width {d}",
+            ds.num_classes
+        );
+        let scale = cfg.scale();
+        let mut tensor = vec![Fr::ZERO; n_data];
+        for k in 0..n {
+            let base = k * 2 * d;
+            for (j, &v) in ds.points[k].iter().enumerate() {
+                tensor[base + j] = Fr::from_i64(v);
+            }
+            tensor[base + d + ds.labels[k]] = Fr::from_i64(scale);
+        }
+        let g_data = CommitKey::setup(b"zkdl/data", n_data);
+        // per-row leaf commitments C_k on the row's basis block (r = 0)
+        let row_coms: Vec<G1> = (0..n)
+            .map(|k| msm(&g_data.g[k * 2 * d..(k + 1) * 2 * d], &tensor[k * 2 * d..(k + 1) * 2 * d]))
+            .collect();
+        let affine = G1::batch_to_affine(&row_coms);
+        let leaves: Vec<Vec<u8>> = affine.iter().map(point_leaf).collect();
+        let tree = MerkleTree::build(PROVENANCE_HASH, &leaves);
+        let mut com_d = G1::IDENTITY;
+        for c in &row_coms {
+            com_d = com_d + *c;
+        }
+        let commitment = DatasetCommitment {
+            n_rows: n,
+            com_d: com_d.to_affine(),
+            root: tree.root.clone(),
+        };
+        Ok(Self {
+            width: d,
+            r_bits: cfg.r_bits,
+            tensor: Arc::new(tensor),
+            commitment,
+            leaves,
+            tree,
+        })
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.commitment.n_rows
+    }
+
+    /// The embedded dataset tensor (n̄·2d field elements).
+    pub fn tensor(&self) -> &[Fr] {
+        &self.tensor
+    }
+}
+
+/// The endorser's side of the Appendix-B bridge: given the released leaf
+/// set, check that (a) the leaves rebuild `root` under the canonical
+/// encoding and (b) the claimed dataset MLE commitment is exactly the sum
+/// of the leaf points. A root endorsed after this check binds `com_d`
+/// transitively: any trace proving against `com_d` proves against the
+/// endorsed dataset.
+pub fn verify_dataset_endorsement(
+    leaves: &[Vec<u8>],
+    root: &[u8],
+    com_d: &G1Affine,
+) -> Result<()> {
+    ensure!(!leaves.is_empty(), "endorsement: empty leaf set");
+    let tree = MerkleTree::build(PROVENANCE_HASH, leaves);
+    ensure!(tree.root == root, "endorsement: leaf set does not rebuild the root");
+    let mut sum = G1::IDENTITY;
+    for leaf in leaves {
+        let p = leaf_point(leaf).context("endorsement: malformed leaf")?;
+        sum = sum + p.to_projective();
+    }
+    ensure!(
+        sum.to_affine() == *com_d,
+        "endorsement: leaf commitments do not sum to the dataset commitment"
+    );
+    Ok(())
+}
+
+/// Commitment bases for the provenance argument of a T-step trace against
+/// an n-row dataset.
+pub struct ProvenanceKey {
+    pub cfg: ModelConfig,
+    pub steps: usize,
+    pub n_rows: usize,
+    /// Padded step count T̄ and dataset-row count n̄.
+    pub tbar: usize,
+    pub nbar: usize,
+    /// Stacked selection size N_S = T̄·B·n̄.
+    pub n_sel: usize,
+    /// Dataset tensor basis, length n̄·2d (shared with [`ProverDataset`]).
+    pub g_data: CommitKey,
+    /// Stacked selection basis, length N_S.
+    pub g_sel: CommitKey,
+}
+
+#[allow(clippy::type_complexity)]
+static PROVKEY_CACHE: Lazy<
+    Mutex<HashMap<((usize, usize, usize, u32, u32, u32), usize, usize), Arc<ProvenanceKey>>>,
+> = Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Cache-entry ceiling: (steps, n_rows) come from artifact statements, so
+/// verifying hostile artifacts must not grow resident memory without bound.
+const PROVKEY_CACHE_CAP: usize = 128;
+
+impl ProvenanceKey {
+    /// Derive (or fetch) the key for (cfg, steps, n_rows). Callers on
+    /// untrusted input must guard with [`checked_selection_dims`] first —
+    /// this panics on degenerate shapes.
+    pub fn setup(cfg: ModelConfig, steps: usize, n_rows: usize) -> Arc<Self> {
+        let cfg_key = (cfg.depth, cfg.width, cfg.batch, cfg.r_bits, cfg.q_bits, cfg.lr_shift);
+        let key = (cfg_key, steps, n_rows);
+        if let Some(pk) = PROVKEY_CACHE.lock().unwrap().get(&key) {
+            return pk.clone();
+        }
+        let (tbar, nbar, n_sel, n_data) =
+            checked_selection_dims(&cfg, steps, n_rows).expect("invalid provenance dimensions");
+        let pk = Arc::new(Self {
+            cfg,
+            steps,
+            n_rows,
+            tbar,
+            nbar,
+            n_sel,
+            g_data: CommitKey::setup(b"zkdl/data", n_data),
+            g_sel: CommitKey::setup(b"zkdl/data/sel", n_sel),
+        });
+        let mut cache = PROVKEY_CACHE.lock().unwrap();
+        if cache.len() >= PROVKEY_CACHE_CAP {
+            let evict = cache.keys().next().cloned();
+            if let Some(evict) = evict {
+                cache.remove(&evict);
+            }
+        }
+        cache.insert(key, pk.clone());
+        pk
+    }
+}
+
+/// Booleanity bases: a zkReLU *main* instance over N_S rows at the minimal
+/// width, the sign column tied to `g_sel` — so `com_s` itself is the sign
+/// commitment and S ∈ {0,1}ᴺ rides the paper's k-coupled binarity check.
+/// The label pins (T, n), so two traces with the same padded layout but
+/// different live extents never share an instance.
+fn selection_validity_bases(pk: &ProvenanceKey) -> Arc<ValidityBases> {
+    let t = pk.steps as u64;
+    let n = pk.n_rows as u64;
+    let label = [
+        b"zkdl/trace/validity/sel/".as_ref(),
+        &t.to_le_bytes(),
+        &n.to_le_bytes(),
+    ]
+    .concat();
+    ValidityBases::setup_main(&label, &pk.g_sel, pk.n_sel, SEL_WIDTH)
+}
+
+fn dot(a: &[Fr], b: &[Fr]) -> Fr {
+    a.iter().zip(b.iter()).map(|(x, y)| *x * *y).sum()
+}
+
+/// Σᵢ γⁱ·valsᵢ.
+fn gamma_fold(vals: &[Fr], gamma: Fr) -> Fr {
+    let mut coeff = Fr::ONE;
+    let mut acc = Fr::ZERO;
+    for v in vals {
+        acc += coeff * *v;
+        coeff *= gamma;
+    }
+    acc
+}
+
+/// The prover's batch-provenance witness: `rows[t][i]` is the dataset row
+/// index behind step t's batch row i.
+pub struct ProvenanceWitness {
+    pub rows: Vec<Vec<usize>>,
+}
+
+impl ProvenanceWitness {
+    /// Recover the selection witness from the step witnesses' `batch_rows`
+    /// and validate it against the committed dataset: every X row must be
+    /// exactly the claimed dataset point row and every Y row its one-hot
+    /// label row. Fails — naming step and batch row — otherwise ("does not
+    /// open against the dataset").
+    pub fn build(pd: &ProverDataset, wits: &[StepWitness]) -> Result<Self> {
+        ensure!(!wits.is_empty(), "provenance needs at least one step");
+        let cfg = wits[0].cfg;
+        ensure!(pd.width == cfg.width, "dataset embedded for a different width");
+        ensure!(pd.r_bits == cfg.r_bits, "dataset embedded at a different scale");
+        let (b, d) = (cfg.batch, cfg.width);
+        let n = pd.n_rows();
+        let mut rows = Vec::with_capacity(wits.len());
+        for (t, wit) in wits.iter().enumerate() {
+            ensure!(
+                wit.batch_rows.len() == b,
+                "step {t} carries {} batch-row indices, batch is {b} \
+                 (witness generated without provenance tracking?)",
+                wit.batch_rows.len()
+            );
+            let x = frs(&wit.x);
+            let y = frs(&wit.y);
+            for (i, &k) in wit.batch_rows.iter().enumerate() {
+                ensure!(k < n, "step {t} row {i}: dataset row {k} out of range (n = {n})");
+                let base = k * 2 * d;
+                ensure!(
+                    x[i * d..(i + 1) * d] == pd.tensor[base..base + d],
+                    "step {t} row {i}: X does not open against dataset row {k}"
+                );
+                ensure!(
+                    y[i * d..(i + 1) * d] == pd.tensor[base + d..base + 2 * d],
+                    "step {t} row {i}: labels do not open against dataset row {k}"
+                );
+            }
+            rows.push(wit.batch_rows.clone());
+        }
+        Ok(Self { rows })
+    }
+}
+
+/// The provenance argument appended to a [`crate::aggregate::TraceProof`].
+/// The dataset commitment (with its endorsed root) and `com_s` are part of
+/// the *statement* — a verifying party audits the root against the
+/// endorsement exactly like the step commitments.
+#[derive(Clone, Debug)]
+pub struct ProvenanceProof {
+    pub dataset: DatasetCommitment,
+    /// The single commitment to the stacked selection tensor S.
+    pub com_s: G1Affine,
+    /// Protocol-1 message of the booleanity instance (sign tensor = S).
+    pub p1_sel: Protocol1Msg,
+    /// X̃_t(u_r, u_c) per step.
+    pub v_x: Vec<Fr>,
+    /// Ỹ_t(u_r, u_c) per step.
+    pub v_y: Vec<Fr>,
+    /// The γ-folded selection sumcheck over the dataset-row axis.
+    pub sel: SumcheckProof,
+    /// S̃_t(u_r, r_k) per step.
+    pub sel_evals: Vec<Fr>,
+    /// D̃_pts(r_k, u_c) and D̃_lab(r_k, u_c).
+    pub v_dpts: Fr,
+    pub v_dlab: Fr,
+    /// S̃(ρ_v) — the booleanity instance's sign-tensor opening.
+    pub v_sel: Fr,
+    /// Opening IPAs: [X @ p, Y @ p (tiled), D δ-fold @ (r_k, ·, u_c),
+    /// S γ-fold slots + row-sum, S @ validity point].
+    pub openings: Vec<IpaProof>,
+    pub validity: ValidityProof,
+}
+
+impl ProvenanceProof {
+    /// Compressed-point accounting, matching
+    /// [`crate::aggregate::TraceProof::size_bytes`].
+    pub fn size_bytes(&self) -> usize {
+        let coms = 2 + 1 + usize::from(self.p1_sel.com_sign_prime.is_some());
+        let scalars = self.v_x.len() + self.v_y.len() + self.sel_evals.len() + 3;
+        let statement = 8 + self.dataset.root.len();
+        let openings: usize = self.openings.iter().map(|o| o.size_bytes()).sum();
+        (coms + scalars) * 32
+            + statement
+            + self.sel.size_bytes()
+            + openings
+            + self.validity.size_bytes()
+    }
+}
+
+/// Prover-side commitments of the provenance argument, produced before any
+/// transcript challenge (the trace absorbs them up front, alongside the
+/// step and chain commitments, so the shared-randomness property covers the
+/// selection tensor too).
+pub(crate) struct ProvenanceCommitments {
+    pub(crate) dataset: DatasetCommitment,
+    /// The dataset tensor (opening values of `com_d`; blind 0) — shared
+    /// with the [`ProverDataset`], copied only once, at the P3 claim.
+    pub(crate) d_tensor: Arc<Vec<Fr>>,
+    /// The stacked selection tensor with its single hiding commitment.
+    pub(crate) s: Committed,
+    pub(crate) com_s: G1Affine,
+    pub(crate) p1: Protocol1Msg,
+    pub(crate) aux: ProverAux,
+    pub(crate) vb: Arc<ValidityBases>,
+}
+
+pub(crate) fn commit_provenance(
+    pk: &ProvenanceKey,
+    pd: &ProverDataset,
+    pw: &ProvenanceWitness,
+    rng: &mut Rng,
+) -> Result<ProvenanceCommitments> {
+    let cfg = &pk.cfg;
+    let (b, nbar, n_sel) = (cfg.batch, pk.nbar, pk.n_sel);
+    ensure!(pw.rows.len() == pk.steps, "provenance witness step count");
+    ensure!(
+        pd.n_rows() == pk.n_rows && pd.width == cfg.width,
+        "dataset/key mismatch"
+    );
+    let mut stacked = vec![Fr::ZERO; n_sel];
+    for (t, per_step) in pw.rows.iter().enumerate() {
+        ensure!(per_step.len() == b, "provenance witness batch shape");
+        for (i, &k) in per_step.iter().enumerate() {
+            ensure!(k < pk.n_rows, "provenance witness row index");
+            stacked[(t * b + i) * nbar + k] = Fr::ONE;
+        }
+    }
+    let s = commit(&pk.g_sel, stacked, rng);
+    let com_s = s.com.to_affine();
+    let vb = selection_validity_bases(pk);
+    // booleanity: a main instance whose paired value tensor is identically
+    // zero and whose sign tensor is S — com_s doubles as com_{B_{Q−1}}
+    let zeros = vec![Fr::ZERO; 2 * n_sel];
+    let (p1, aux) = zkrelu::protocol1_main(&vb, &zeros, &s.values, s.blind, rng);
+    Ok(ProvenanceCommitments {
+        dataset: pd.commitment.clone(),
+        d_tensor: pd.tensor.clone(),
+        s,
+        com_s,
+        p1,
+        aux,
+        vb,
+    })
+}
+
+/// Absorb the provenance statement — dataset size, MLE commitment, endorsed
+/// root, selection commitment — right after the chain statement, before
+/// Protocol 1 / any challenge. A swapped root, substituted dataset, or
+/// edited selection tensor therefore lands in a different transcript and
+/// fails every subsequent check.
+pub(crate) fn absorb_provenance_statement(
+    tr: &mut Transcript,
+    dataset: &DatasetCommitment,
+    com_s: &G1Affine,
+) {
+    tr.absorb_u64(b"prov/n_rows", dataset.n_rows as u64);
+    tr.absorb_point(b"com/d", &dataset.com_d);
+    tr.absorb_bytes(b"prov/root", &dataset.root);
+    tr.absorb_point(b"com/s", com_s);
+}
+
+/// Structural validation shared by the wire decoder and the verifier.
+pub fn validate_provenance_shape(
+    cfg: &ModelConfig,
+    steps: usize,
+    proof: &ProvenanceProof,
+) -> Result<()> {
+    checked_selection_dims(cfg, steps, proof.dataset.n_rows)?;
+    ensure!(
+        proof.dataset.root.len() == PROVENANCE_HASH.output_len(),
+        "provenance: root is not a {} digest",
+        PROVENANCE_HASH.name()
+    );
+    ensure!(proof.v_x.len() == steps, "provenance: v_x length");
+    ensure!(proof.v_y.len() == steps, "provenance: v_y length");
+    ensure!(proof.sel_evals.len() == steps, "provenance: sel_evals length");
+    ensure!(proof.openings.len() == 5, "provenance: opening count");
+    ensure!(
+        proof.p1_sel.com_sign_prime.is_some(),
+        "provenance: booleanity instance must carry com_sign_prime"
+    );
+    Ok(())
+}
+
+/// The provenance argument proper, appended after the trace's chain phase.
+/// `x`/`y` are the per-step input/target commitments (the same objects the
+/// trace's matmul and loss openings use); `y_slots[t]` is step t's
+/// last-layer slot in the `trace_slots`-slot stacked aux basis.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn prove_provenance(
+    pk: &ProvenanceKey,
+    g_x: &CommitKey,
+    g_aux: &CommitKey,
+    trace_slots: usize,
+    y_slots: &[usize],
+    x: &[&Committed],
+    y: &[&Committed],
+    pc: ProvenanceCommitments,
+    tr: &mut Transcript,
+    rng: &mut Rng,
+) -> ProvenanceProof {
+    let ProvenanceCommitments {
+        dataset,
+        d_tensor,
+        s,
+        com_s,
+        p1,
+        aux,
+        vb,
+    } = pc;
+    let cfg = &pk.cfg;
+    let (b, d) = (cfg.batch, cfg.width);
+    let dd = cfg.d_size();
+    let t_steps = pk.steps;
+    let nbar = pk.nbar;
+    let n_sel = pk.n_sel;
+    let log_b = b.trailing_zeros() as usize;
+    let log_d = d.trailing_zeros() as usize;
+
+    // one challenge pair over the (batch-row, feature) space, shared by the
+    // X and Y claims of every step
+    let u_pr = tr.challenge_frs(b"prov/u_r", log_b);
+    let u_pc = tr.challenge_frs(b"prov/u_c", log_d);
+    let p_xy: Vec<Fr> = [u_pr.clone(), u_pc.clone()].concat();
+    let e_xy = eq_table(&p_xy);
+    let v_x: Vec<Fr> = x.iter().map(|c| dot(&c.values, &e_xy)).collect();
+    let v_y: Vec<Fr> = y.iter().map(|c| dot(&c.values, &e_xy)).collect();
+    tr.absorb_frs(b"prov/v_x", &v_x);
+    tr.absorb_frs(b"prov/v_y", &v_y);
+    let gamma = tr.challenge_fr(b"prov/gamma");
+
+    // γ-folded selection sumcheck over the dataset-row axis k:
+    //   Σ_t γ^{2t}·X̃_t(u) + γ^{2t+1}·Ỹ_t(u)
+    //     = Σ_k [Σ_t γ^{2t}·S̃_t(u_r,k)]·D̃_pts(k,u_c) + (labels analogue)
+    let e_r = eq_table(&u_pr);
+    let e_c = eq_table(&u_pc);
+    let mut dp_fix = vec![Fr::ZERO; nbar];
+    let mut dl_fix = vec![Fr::ZERO; nbar];
+    for k in 0..nbar {
+        let base = k * 2 * d;
+        for c in 0..d {
+            dp_fix[k] += e_c[c] * d_tensor[base + c];
+            dl_fix[k] += e_c[c] * d_tensor[base + d + c];
+        }
+    }
+    let dp_mle = Mle::new(dp_fix);
+    let dl_mle = Mle::new(dl_fix);
+    let mut terms = Vec::with_capacity(2 * t_steps);
+    let mut coeff = Fr::ONE;
+    for t in 0..t_steps {
+        let mut s_fix = vec![Fr::ZERO; nbar];
+        let base = t * b * nbar;
+        for (i, er) in e_r.iter().enumerate() {
+            for (k, sf) in s_fix.iter_mut().enumerate() {
+                *sf += *er * s.values[base + i * nbar + k];
+            }
+        }
+        let s_mle = Mle::new(s_fix);
+        terms.push(Term::new(coeff, vec![s_mle.clone(), dp_mle.clone()]));
+        coeff *= gamma;
+        terms.push(Term::new(coeff, vec![s_mle, dl_mle.clone()]));
+        coeff *= gamma;
+    }
+    let out = sumcheck::prove(Instance::new(terms), tr);
+    let r_k = out.point.clone();
+    let sel_evals: Vec<Fr> = (0..t_steps).map(|t| out.factor_evals[2 * t][0]).collect();
+    let v_dpts = out.factor_evals[0][1];
+    let v_dlab = out.factor_evals[1][1];
+    tr.absorb_frs(b"prov/sel_evals", &sel_evals);
+    tr.absorb_fr(b"prov/v_dpts", &v_dpts);
+    tr.absorb_fr(b"prov/v_dlab", &v_dlab);
+
+    let mut openings = Vec::with_capacity(5);
+    // P1: every X̃_t(u) on the shared g_x basis, one RLC'd IPA
+    {
+        let claims: Vec<EvalClaim> = x
+            .iter()
+            .zip(v_x.iter())
+            .map(|(c, v)| EvalClaim {
+                com: c.com,
+                values: c.values.clone(),
+                blind: c.blind,
+                v: *v,
+            })
+            .collect();
+        openings.push(ipa::batch_prove_eval_expr(g_x, &claims, &e_xy, tr, rng));
+    }
+    // P2: every Ỹ_t(u), tiled at the step's last-layer slot of g_aux
+    {
+        let claims: Vec<EvalClaim> = y
+            .iter()
+            .zip(v_y.iter())
+            .map(|(c, v)| EvalClaim {
+                com: c.com,
+                values: c.values.clone(),
+                blind: c.blind,
+                v: *v,
+            })
+            .collect();
+        let claims = tile_claims_at(claims, y_slots, trace_slots, dd);
+        openings.push(ipa::batch_prove_eval_expr(
+            g_aux,
+            &claims,
+            &tiled_eq(&p_xy, trace_slots),
+            tr,
+            rng,
+        ));
+    }
+    // P3: the dataset tensor at (r_k, ·, u_c): a δ-fold of the points half
+    // (middle variable 0) and the labels half (1) — one opening of com_d
+    {
+        let delta = tr.challenge_fr(b"prov/delta");
+        let mut pt0 = r_k.clone();
+        pt0.push(Fr::ZERO);
+        pt0.extend_from_slice(&u_pc);
+        let mut pt1 = r_k.clone();
+        pt1.push(Fr::ONE);
+        pt1.extend_from_slice(&u_pc);
+        let e0 = eq_table(&pt0);
+        let e1 = eq_table(&pt1);
+        let evec: Vec<Fr> = e0
+            .iter()
+            .zip(e1.iter())
+            .map(|(a, b)| *a + delta * *b)
+            .collect();
+        let claim = EvalClaim {
+            com: dataset.com_d.to_projective(),
+            values: (*d_tensor).clone(),
+            blind: Fr::ZERO,
+            v: v_dpts + delta * v_dlab,
+        };
+        openings.push(ipa::batch_prove_eval_expr(&pk.g_data, &[claim], &evec, tr, rng));
+    }
+    // P4: com_s — the γ_s-folded live-slot openings S̃_t(u_r, r_k) plus the
+    // row-sum claim ⟨S, e_rows(u_row) ⊗ 1_{k<n}⟩ = Σ_{live rows} e_rows,
+    // all RLC'd into one IPA. γ_s is drawn after the sumcheck absorbed the
+    // per-slot evals, so Schwartz–Zippel over γ_s pins each live slot (and
+    // the row-sum identity) individually.
+    {
+        let gamma_s = tr.challenge_fr(b"prov/gamma_s");
+        let log_rows = (pk.tbar * b).trailing_zeros() as usize;
+        let u_row = tr.challenge_frs(b"prov/u_row", log_rows);
+        let e_row_tbl = eq_table(&u_row);
+        let e_a = eq_table(&[u_pr.clone(), r_k.clone()].concat());
+        let mut w = vec![Fr::ZERO; n_sel];
+        let mut coeff = Fr::ONE;
+        for t in 0..t_steps {
+            let base = t * b * nbar;
+            for (o, v) in w[base..base + b * nbar].iter_mut().zip(e_a.iter()) {
+                *o += coeff * *v;
+            }
+            coeff *= gamma_s;
+        }
+        let mut rowsum_target = Fr::ZERO;
+        for t in 0..t_steps {
+            for i in 0..b {
+                let row = t * b + i;
+                for k in 0..pk.n_rows {
+                    w[row * nbar + k] += coeff * e_row_tbl[row];
+                }
+                rowsum_target += e_row_tbl[row];
+            }
+        }
+        let claim = EvalClaim {
+            com: s.com,
+            values: s.values.clone(),
+            blind: s.blind,
+            v: gamma_fold(&sel_evals, gamma_s) + coeff * rowsum_target,
+        };
+        openings.push(ipa::batch_prove_eval_expr(&pk.g_sel, &[claim], &w, tr, rng));
+    }
+
+    // validity point over the stacked selection tensor
+    let u_dd = tr.challenge_fr(b"prov/u_dd");
+    let log_s = n_sel.trailing_zeros() as usize;
+    let rho_v = tr.challenge_frs(b"prov/rho", log_s);
+    let e_rho = eq_table(&rho_v);
+    let v_sel = dot(&s.values, &e_rho);
+    // P5: the sign-tensor opening binding v_sel (and thus the booleanity
+    // instance) to com_s — the last use of the tensor, so it moves in
+    {
+        let claim = EvalClaim {
+            com: s.com,
+            values: s.values,
+            blind: s.blind,
+            v: v_sel,
+        };
+        openings.push(ipa::batch_prove_eval_expr(&pk.g_sel, &[claim], &e_rho, tr, rng));
+    }
+    let mut vpoint = vec![u_dd];
+    vpoint.extend_from_slice(&rho_v);
+    let e_row_v = eq_table(&vpoint);
+    // the paired value tensor is identically zero by construction, so the
+    // claimed paired evaluation is the constant 0 on both sides
+    let validity = zkrelu::prove_validity(&vb, &aux, &e_row_v, u_dd, Fr::ZERO, v_sel, tr, rng);
+
+    ProvenanceProof {
+        dataset,
+        com_s,
+        p1_sel: p1,
+        v_x,
+        v_y,
+        sel: out.proof,
+        sel_evals,
+        v_dpts,
+        v_dlab,
+        v_sel,
+        openings,
+        validity,
+    }
+}
+
+/// Transcript replay + deferred checks of the provenance argument (mirrors
+/// [`prove_provenance`] exactly). No curve arithmetic: every group equation
+/// lands in `acc`, preserving the trace's one-MSM invariant.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn verify_provenance_accum(
+    pk: &ProvenanceKey,
+    g_x: &CommitKey,
+    g_aux: &CommitKey,
+    trace_slots: usize,
+    y_slots: &[usize],
+    coms: &[StepCommitmentSet],
+    proof: &ProvenanceProof,
+    tr: &mut Transcript,
+    acc: &mut MsmAccumulator,
+) -> Result<()> {
+    let cfg = &pk.cfg;
+    let (b, d) = (cfg.batch, cfg.width);
+    let t_steps = pk.steps;
+    let nbar = pk.nbar;
+    let n_sel = pk.n_sel;
+    let log_b = b.trailing_zeros() as usize;
+    let log_d = d.trailing_zeros() as usize;
+    validate_provenance_shape(cfg, t_steps, proof)?;
+    ensure!(proof.dataset.n_rows == pk.n_rows, "provenance: dataset/key mismatch");
+    ensure!(coms.len() == t_steps, "provenance: step commitment count");
+    ensure!(y_slots.len() == t_steps, "provenance: y slot count");
+
+    let u_pr = tr.challenge_frs(b"prov/u_r", log_b);
+    let u_pc = tr.challenge_frs(b"prov/u_c", log_d);
+    let p_xy: Vec<Fr> = [u_pr.clone(), u_pc.clone()].concat();
+    let e_xy = eq_table(&p_xy);
+    tr.absorb_frs(b"prov/v_x", &proof.v_x);
+    tr.absorb_frs(b"prov/v_y", &proof.v_y);
+    let gamma = tr.challenge_fr(b"prov/gamma");
+
+    let mut claimed = Fr::ZERO;
+    let mut coeff = Fr::ONE;
+    for t in 0..t_steps {
+        claimed += coeff * proof.v_x[t];
+        coeff *= gamma;
+        claimed += coeff * proof.v_y[t];
+        coeff *= gamma;
+    }
+    let out = sumcheck::verify(claimed, &proof.sel, tr).context("selection sumcheck")?;
+    ensure!(
+        out.point.len() == nbar.trailing_zeros() as usize,
+        "provenance: selection sumcheck variable count"
+    );
+    let r_k = out.point;
+    let mut expect = Fr::ZERO;
+    let mut coeff = Fr::ONE;
+    for t in 0..t_steps {
+        expect += coeff * proof.sel_evals[t] * proof.v_dpts;
+        coeff *= gamma;
+        expect += coeff * proof.sel_evals[t] * proof.v_dlab;
+        coeff *= gamma;
+    }
+    ensure!(expect == out.final_claim, "selection factor evals mismatch");
+    tr.absorb_frs(b"prov/sel_evals", &proof.sel_evals);
+    tr.absorb_fr(b"prov/v_dpts", &proof.v_dpts);
+    tr.absorb_fr(b"prov/v_dlab", &proof.v_dlab);
+
+    // P1: X openings
+    {
+        let claims: Vec<(ComExpr, Fr)> = coms
+            .iter()
+            .zip(proof.v_x.iter())
+            .map(|(set, v)| (ComExpr::point(set.com_x.to_projective()), *v))
+            .collect();
+        ipa::batch_verify_eval_expr(g_x, &claims, &e_xy, &proof.openings[0], tr, acc)
+            .context("provenance X opening")?;
+    }
+    // P2: Y openings (tiled)
+    {
+        let claims: Vec<(ComExpr, Fr)> = coms
+            .iter()
+            .zip(proof.v_y.iter())
+            .map(|(set, v)| (ComExpr::point(set.com_y.to_projective()), *v))
+            .collect();
+        ipa::batch_verify_eval_expr(
+            g_aux,
+            &claims,
+            &tiled_eq(&p_xy, trace_slots),
+            &proof.openings[1],
+            tr,
+            acc,
+        )
+        .context("provenance Y opening")?;
+    }
+    // P3: dataset δ-fold opening
+    {
+        let delta = tr.challenge_fr(b"prov/delta");
+        let mut pt0 = r_k.clone();
+        pt0.push(Fr::ZERO);
+        pt0.extend_from_slice(&u_pc);
+        let mut pt1 = r_k.clone();
+        pt1.push(Fr::ONE);
+        pt1.extend_from_slice(&u_pc);
+        let e0 = eq_table(&pt0);
+        let e1 = eq_table(&pt1);
+        let evec: Vec<Fr> = e0
+            .iter()
+            .zip(e1.iter())
+            .map(|(a, b)| *a + delta * *b)
+            .collect();
+        ipa::batch_verify_eval_expr(
+            &pk.g_data,
+            &[(
+                ComExpr::point(proof.dataset.com_d.to_projective()),
+                proof.v_dpts + delta * proof.v_dlab,
+            )],
+            &evec,
+            &proof.openings[2],
+            tr,
+            acc,
+        )
+        .context("provenance dataset opening")?;
+    }
+    // P4: folded slot + row-sum opening of com_s
+    {
+        let gamma_s = tr.challenge_fr(b"prov/gamma_s");
+        let log_rows = (pk.tbar * b).trailing_zeros() as usize;
+        let u_row = tr.challenge_frs(b"prov/u_row", log_rows);
+        let e_row_tbl = eq_table(&u_row);
+        let e_a = eq_table(&[u_pr.clone(), r_k.clone()].concat());
+        let mut w = vec![Fr::ZERO; n_sel];
+        let mut coeff = Fr::ONE;
+        for t in 0..t_steps {
+            let base = t * b * nbar;
+            for (o, v) in w[base..base + b * nbar].iter_mut().zip(e_a.iter()) {
+                *o += coeff * *v;
+            }
+            coeff *= gamma_s;
+        }
+        let mut rowsum_target = Fr::ZERO;
+        for t in 0..t_steps {
+            for i in 0..b {
+                let row = t * b + i;
+                for k in 0..pk.n_rows {
+                    w[row * nbar + k] += coeff * e_row_tbl[row];
+                }
+                rowsum_target += e_row_tbl[row];
+            }
+        }
+        let v = gamma_fold(&proof.sel_evals, gamma_s) + coeff * rowsum_target;
+        ipa::batch_verify_eval_expr(
+            &pk.g_sel,
+            &[(ComExpr::point(proof.com_s.to_projective()), v)],
+            &w,
+            &proof.openings[3],
+            tr,
+            acc,
+        )
+        .context("provenance selection opening")?;
+    }
+    // validity point + P5 + booleanity instance
+    let u_dd = tr.challenge_fr(b"prov/u_dd");
+    let log_s = n_sel.trailing_zeros() as usize;
+    let rho_v = tr.challenge_frs(b"prov/rho", log_s);
+    let e_rho = eq_table(&rho_v);
+    {
+        ipa::batch_verify_eval_expr(
+            &pk.g_sel,
+            &[(ComExpr::point(proof.com_s.to_projective()), proof.v_sel)],
+            &e_rho,
+            &proof.openings[4],
+            tr,
+            acc,
+        )
+        .context("provenance sign opening")?;
+    }
+    let mut vpoint = vec![u_dd];
+    vpoint.extend_from_slice(&rho_v);
+    let e_row_v = eq_table(&vpoint);
+    let vb = selection_validity_bases(pk);
+    let com_s_expr = ComExpr::point(proof.com_s.to_projective());
+    zkrelu::verify_validity_accum(
+        &vb,
+        &proof.p1_sel,
+        Some(&com_s_expr),
+        &e_row_v,
+        u_dd,
+        Fr::ZERO,
+        proof.v_sel,
+        &proof.validity,
+        tr,
+        acc,
+    )
+    .context("selection booleanity")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregate::{self, TraceKey};
+    use crate::witness::native::sgd_witness_chain;
+
+    fn setup(steps: usize, seed: u64) -> (ModelConfig, Dataset, Vec<StepWitness>, ProverDataset) {
+        let cfg = ModelConfig::new(2, 8, 4);
+        let ds = Dataset::synthetic(24, cfg.width / 2, 4, cfg.r_bits, seed ^ 0x77);
+        let wits = sgd_witness_chain(cfg, &ds, steps, seed);
+        let pd = ProverDataset::build(&ds, &cfg).expect("dataset commits");
+        (cfg, ds, wits, pd)
+    }
+
+    #[test]
+    fn dims_pad_steps_and_rows() {
+        let cfg = ModelConfig::new(2, 8, 4);
+        let (tbar, nbar, n_sel, n_data) = checked_selection_dims(&cfg, 3, 24).expect("dims");
+        assert_eq!((tbar, nbar), (4, 32));
+        assert_eq!(n_sel, 4 * 4 * 32);
+        assert_eq!(n_data, 32 * 16);
+        // a single dataset row still pads to a 2-row MLE
+        let (_, nbar1, _, _) = checked_selection_dims(&cfg, 1, 1).expect("dims");
+        assert_eq!(nbar1, 2);
+        assert!(checked_selection_dims(&cfg, 0, 4).is_err());
+        assert!(checked_selection_dims(&cfg, 2, 0).is_err());
+    }
+
+    #[test]
+    fn dataset_commitment_bridges_to_the_merkle_root() {
+        let (_, _, _, pd) = setup(1, 0xd5);
+        // leaves rebuild the root AND sum to the MLE commitment — the
+        // endorser's check that makes com_d ↔ root a public fact
+        verify_dataset_endorsement(&pd.leaves, &pd.commitment.root, &pd.commitment.com_d)
+            .expect("honest dataset endorses");
+        // any tampered leaf breaks it
+        let mut bad = pd.leaves.clone();
+        bad[3] = bad[4].clone();
+        assert!(verify_dataset_endorsement(&bad, &pd.commitment.root, &pd.commitment.com_d).is_err());
+        // a different dataset commitment with the right root breaks it
+        let other = G1Affine::IDENTITY;
+        assert!(verify_dataset_endorsement(&pd.leaves, &pd.commitment.root, &other).is_err());
+        // determinism: rebuilding yields the identical statement
+        let cfg = ModelConfig::new(2, 8, 4);
+        let ds = Dataset::synthetic(24, cfg.width / 2, 4, cfg.r_bits, 0xd5 ^ 0x77);
+        let pd2 = ProverDataset::build(&ds, &cfg).expect("dataset commits");
+        assert_eq!(pd.commitment, pd2.commitment);
+    }
+
+    #[test]
+    fn witness_build_validates_rows_against_the_dataset() {
+        let (_cfg, _ds, mut wits, pd) = setup(2, 0xa0);
+        ProvenanceWitness::build(&pd, &wits).expect("honest rows open");
+        // swapped row index: X no longer matches the claimed dataset row
+        let good = wits[0].batch_rows[0];
+        wits[0].batch_rows[0] = (good + 1) % pd.n_rows();
+        let err = ProvenanceWitness::build(&pd, &wits).unwrap_err();
+        assert!(format!("{err:#}").contains("does not open"), "{err:#}");
+        wits[0].batch_rows[0] = good;
+        // out-of-dataset row: X itself tampered
+        wits[1].x[2] += 1;
+        assert!(ProvenanceWitness::build(&pd, &wits).is_err());
+        wits[1].x[2] -= 1;
+        // label swap: Y row 0 re-pointed at a different class
+        let d = wits[1].cfg.width;
+        let hot = (0..d).find(|&c| wits[1].y[c] != 0).expect("one-hot row");
+        wits[1].y[hot] = 0;
+        wits[1].y[(hot + 1) % d] = wits[1].cfg.scale();
+        assert!(ProvenanceWitness::build(&pd, &wits).is_err());
+        // stripped provenance info
+        let (_, _, mut wits2, _) = setup(2, 0xa0);
+        wits2[0].batch_rows.clear();
+        assert!(ProvenanceWitness::build(&pd, &wits2).is_err());
+    }
+
+    /// Rebuild step 0's witness from (x, y) while keeping its weights and
+    /// batch-row indices — every per-step relation still holds, so only the
+    /// provenance argument can reject the result.
+    fn rewitness_step0(wits: &mut [StepWitness], x: &[i64], y: &[i64]) {
+        let cfg = wits[0].cfg;
+        let w = crate::model::Weights {
+            layers: wits[0].layers.iter().map(|l| l.w.clone()).collect(),
+            cfg,
+        };
+        let rows = wits[0].batch_rows.clone();
+        wits[0] = crate::witness::native::compute_witness(cfg, x, y, &w);
+        wits[0].batch_rows = rows;
+    }
+
+    /// Drive the full trace pipeline with a doctored selection stack: the
+    /// white-box seam for tamper classes the honest witness API refuses to
+    /// produce. `craft` may rewrite the committed stack and the witnesses.
+    fn prove_with_stack(
+        craft: impl FnOnce(&ProvenanceKey, &Dataset, &mut Vec<Fr>, &mut Vec<StepWitness>),
+    ) -> Result<()> {
+        let (cfg, ds, mut wits, pd) = setup(2, 0xbead);
+        let steps = wits.len();
+        let pk = ProvenanceKey::setup(cfg, steps, pd.n_rows());
+        let (b, nbar) = (cfg.batch, pk.nbar);
+        let mut stacked = vec![Fr::ZERO; pk.n_sel];
+        for (t, wit) in wits.iter().enumerate() {
+            for (i, &k) in wit.batch_rows.iter().enumerate() {
+                stacked[(t * b + i) * nbar + k] = Fr::ONE;
+            }
+        }
+        craft(&pk, &ds, &mut stacked, &mut wits);
+        let mut rng = Rng::seed_from_u64(0x5e1ec7);
+        let s = commit(&pk.g_sel, stacked, &mut rng);
+        let com_s = s.com.to_affine();
+        let vb = selection_validity_bases(&pk);
+        let zeros = vec![Fr::ZERO; 2 * pk.n_sel];
+        let (p1, aux) = zkrelu::protocol1_main(&vb, &zeros, &s.values, s.blind, &mut rng);
+        let pc = ProvenanceCommitments {
+            dataset: pd.commitment.clone(),
+            d_tensor: pd.tensor.clone(),
+            s,
+            com_s,
+            p1,
+            aux,
+            vb,
+        };
+        let tk = TraceKey::setup(cfg, steps);
+        let proof = aggregate::prove_trace_with_parts(&tk, &wits, None, Some((pk, pc)), &mut rng);
+        aggregate::verify_trace(&tk, &proof)
+    }
+
+    #[test]
+    fn honest_stack_roundtrips_through_the_white_box_seam() {
+        prove_with_stack(|_, _, _, _| {}).expect("honest selection verifies");
+    }
+
+    #[test]
+    fn two_hot_selection_row_is_rejected_by_the_row_sum() {
+        // select TWO dataset rows for batch row (t=0, i=0) and make X/Y the
+        // matching sums, so the matmul claims hold and booleanity holds —
+        // only the row-sum claim can catch it
+        assert!(prove_with_stack(|pk, ds, stacked, wits| {
+            let cfg = wits[0].cfg;
+            let k0 = wits[0].batch_rows[0];
+            let k1 = (k0 + 1) % pk.n_rows;
+            stacked[k1] = Fr::ONE; // batch row (0, 0) selects k0 AND k1
+            let mut x = wits[0].x.clone();
+            let mut y = wits[0].y.clone();
+            for (j, &v) in ds.points[k1].iter().enumerate() {
+                x[j] += v;
+            }
+            y[ds.labels[k1]] += cfg.scale();
+            rewitness_step0(wits, &x, &y);
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn swapped_selection_row_is_rejected_by_the_matmul() {
+        // S points at a different dataset row than the one X was built
+        // from: booleanity and row sums hold, the matmul claim cannot
+        assert!(prove_with_stack(|pk, _, stacked, wits| {
+            let k0 = wits[0].batch_rows[0];
+            let k1 = (k0 + 1) % pk.n_rows;
+            stacked[k0] = Fr::ZERO;
+            stacked[k1] = Fr::ONE;
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn out_of_dataset_input_is_rejected() {
+        // X row 0 tampered away from every dataset row; S left honest
+        assert!(prove_with_stack(|_, _, _, wits| {
+            let mut x = wits[0].x.clone();
+            x[0] += 1;
+            let y = wits[0].y.clone();
+            rewitness_step0(wits, &x, &y);
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn label_swap_is_rejected_by_the_label_matmul() {
+        // Y row 0 re-pointed at a different class; X and S honest — only
+        // the labels half of the selection argument can catch it
+        assert!(prove_with_stack(|_, _, _, wits| {
+            let cfg = wits[0].cfg;
+            let d = cfg.width;
+            let x = wits[0].x.clone();
+            let mut y = wits[0].y.clone();
+            let hot = (0..d).find(|&c| y[c] != 0).expect("one-hot row");
+            y[hot] = 0;
+            y[(hot + 1) % d] = cfg.scale();
+            rewitness_step0(wits, &x, &y);
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn provenance_key_cache_is_keyed_on_steps_and_rows() {
+        let cfg = ModelConfig::new(2, 8, 4);
+        let a = ProvenanceKey::setup(cfg, 2, 24);
+        let b = ProvenanceKey::setup(cfg, 2, 24);
+        assert!(Arc::ptr_eq(&a, &b), "same (cfg, T, n) shares one key");
+        let c = ProvenanceKey::setup(cfg, 3, 24);
+        assert!(!Arc::ptr_eq(&a, &c));
+        let d = ProvenanceKey::setup(cfg, 2, 25);
+        assert!(!Arc::ptr_eq(&a, &d));
+        assert_eq!(a.n_sel, 2 * 4 * 32);
+    }
+}

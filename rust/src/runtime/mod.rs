@@ -118,9 +118,11 @@ impl StepRuntime {
             x: x.to_vec(),
             y: y.to_vec(),
             layers,
-            // rule-owned optimizer state is attached by the coordinator,
-            // which owns the update loop; the runtime computes one step
+            // rule-owned optimizer state and batch provenance are attached
+            // by the coordinator, which owns the update loop and the batch
+            // sampler; the runtime computes one step
             opt_state: Vec::new(),
+            batch_rows: Vec::new(),
         })
     }
 }

@@ -26,6 +26,7 @@ use crate::curve::G1Affine;
 use crate::field::Fr;
 use crate::ipa::IpaProof;
 use crate::model::ModelConfig;
+use crate::provenance::{DatasetCommitment, ProvenanceProof};
 use crate::sumcheck::SumcheckProof;
 use crate::update::rule::{RULE_TAG_MOMENTUM, RULE_TAG_SGD};
 use crate::update::{ChainProof, UpdateRule};
@@ -52,7 +53,12 @@ pub const MAGIC: [u8; 4] = *b"ZKDL";
 /// tensor gains a relation axis and the transcript absorbs the full rule
 /// statement. v4 chained artifacts are rejected as unsupported, not
 /// misparsed.
-pub const VERSION: u16 = 5;
+/// v6: zkData — the trace envelope carries an optional batch-provenance
+/// payload (dataset commitment + endorsed root, selection commitment,
+/// selection sumcheck, five openings, booleanity instance) and the trace
+/// transcript absorbs a provenance flag for EVERY trace, so v5 artifacts
+/// are rejected as unsupported, not misparsed.
+pub const VERSION: u16 = 6;
 
 /// Payload discriminant in the envelope header.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -159,6 +165,11 @@ impl<'a> WireReader<'a> {
 
     pub fn get_u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Raw byte run of a known length (e.g. an endorsement root digest).
+    pub fn get_raw(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
     }
 
     /// Length prefix, sanity-bounded by the remaining input so corrupted
@@ -665,6 +676,66 @@ impl FromWire for ChainProof {
     }
 }
 
+impl ToWire for DatasetCommitment {
+    fn to_wire(&self, w: &mut WireWriter) {
+        w.put_u64(self.n_rows as u64);
+        w.put(&self.com_d);
+        w.put_len(self.root.len());
+        w.put_bytes(&self.root);
+    }
+}
+
+impl FromWire for DatasetCommitment {
+    fn from_wire(r: &mut WireReader) -> Result<Self> {
+        let n_rows = r.get_u64()? as usize;
+        ensure!(n_rows >= 1, "wire: empty dataset commitment");
+        let com_d: G1Affine = r.get()?;
+        let n = r.get_len()?;
+        ensure!(
+            n == crate::provenance::PROVENANCE_HASH.output_len(),
+            "wire: bad endorsement root length {n}"
+        );
+        let root = r.get_raw(n)?.to_vec();
+        Ok(DatasetCommitment { n_rows, com_d, root })
+    }
+}
+
+impl ToWire for ProvenanceProof {
+    fn to_wire(&self, w: &mut WireWriter) {
+        w.put(&self.dataset);
+        w.put(&self.com_s);
+        w.put(&self.p1_sel);
+        w.put(&self.v_x);
+        w.put(&self.v_y);
+        w.put(&self.sel);
+        w.put(&self.sel_evals);
+        w.put(&self.v_dpts);
+        w.put(&self.v_dlab);
+        w.put(&self.v_sel);
+        w.put(&self.openings);
+        w.put(&self.validity);
+    }
+}
+
+impl FromWire for ProvenanceProof {
+    fn from_wire(r: &mut WireReader) -> Result<Self> {
+        Ok(ProvenanceProof {
+            dataset: r.get()?,
+            com_s: r.get()?,
+            p1_sel: r.get()?,
+            v_x: r.get()?,
+            v_y: r.get()?,
+            sel: r.get()?,
+            sel_evals: r.get()?,
+            v_dpts: r.get()?,
+            v_dlab: r.get()?,
+            v_sel: r.get()?,
+            openings: r.get()?,
+            validity: r.get()?,
+        })
+    }
+}
+
 impl ToWire for TraceProof {
     fn to_wire(&self, w: &mut WireWriter) {
         w.put_u32(self.steps as u32);
@@ -690,6 +761,7 @@ impl ToWire for TraceProof {
         w.put(&self.validity_main);
         w.put(&self.validity_rem);
         w.put(&self.chain);
+        w.put(&self.provenance);
     }
 }
 
@@ -721,6 +793,7 @@ impl FromWire for TraceProof {
             validity_main: r.get()?,
             validity_rem: r.get()?,
             chain: r.get()?,
+            provenance: r.get()?,
         })
     }
 }
@@ -819,6 +892,20 @@ pub fn decode_trace_proof(bytes: &[u8]) -> Result<(ModelConfig, TraceProof)> {
         ensure!(
             n_upd <= MAX_TRACE_AUX_SIZE,
             "wire: chain basis of {n_upd} elements exceeds the decoder limit"
+        );
+    }
+    if let Some(prov) = &proof.provenance {
+        // claim-vector lengths, opening count, the booleanity instance's
+        // sign commitment, degenerate shapes, dimension overflow — the
+        // verifier's key setup would otherwise panic on untrusted input
+        crate::provenance::validate_provenance_shape(&cfg, proof.steps, prov)
+            .context("wire: provenance payload")?;
+        let (_, _, n_sel, n_data) =
+            crate::provenance::checked_selection_dims(&cfg, proof.steps, prov.dataset.n_rows)
+                .context("wire: provenance dimensions")?;
+        ensure!(
+            n_sel <= MAX_TRACE_AUX_SIZE && n_data <= MAX_TRACE_AUX_SIZE,
+            "wire: provenance bases ({n_sel} selection, {n_data} dataset) exceed the decoder limit"
         );
     }
     Ok((cfg, proof))

@@ -70,6 +70,12 @@ pub struct StepWitness {
     /// [`Self::validate`] — the zkOptim chain relations constrain it
     /// across boundaries.
     pub opt_state: Vec<Vec<Vec<i64>>>,
+    /// Dataset row index behind each batch row (length B), the zkData
+    /// provenance witness; empty when the batch was assembled without
+    /// row tracking. Not constrained by [`Self::validate`] — the batch
+    /// selection argument ([`crate::provenance`]) constrains it against
+    /// the committed dataset.
+    pub batch_rows: Vec<usize>,
 }
 
 impl StepWitness {

@@ -94,6 +94,7 @@ pub fn compute_witness(cfg: ModelConfig, x: &[i64], y: &[i64], weights: &Weights
         y: y.to_vec(),
         layers,
         opt_state: Vec::new(),
+        batch_rows: Vec::new(),
     }
 }
 
@@ -116,9 +117,11 @@ pub fn rule_witness_chain(
     let mut state = rule.init_state(&cfg);
     let mut out = Vec::with_capacity(steps);
     for step in 0..steps {
-        let (x, y) = ds.batch(&cfg, step);
+        let rows = ds.batch_indices(&cfg, step);
+        let (x, y) = ds.batch_at(&cfg, &rows);
         let mut wit = compute_witness(cfg, &x, &y, &weights);
         wit.opt_state = state.clone();
+        wit.batch_rows = rows;
         rule.apply_update(
             schedule.shift_at(step),
             &mut weights,

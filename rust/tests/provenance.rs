@@ -1,0 +1,176 @@
+//! zkData end-to-end tests: provenance traces round-trip through the wire
+//! format and verify; every artifact-level tamper class — swapped dataset
+//! statement, forged claims, stripped or grafted payloads — is rejected;
+//! and the endorsement bridge ties the artifact root to the leaf set.
+
+use zkdl::aggregate::{
+    prove_trace, prove_trace_chained_provenance_with, prove_trace_provenance, verify_trace,
+    TraceKey,
+};
+use zkdl::data::Dataset;
+use zkdl::model::ModelConfig;
+use zkdl::provenance::{verify_dataset_endorsement, ProverDataset};
+use zkdl::update::UpdateRule;
+use zkdl::util::rng::Rng;
+use zkdl::wire::{decode_trace_proof, encode_trace_proof};
+use zkdl::witness::native::sgd_witness_chain;
+use zkdl::witness::StepWitness;
+use zkdl::Fr;
+
+fn setup(steps: usize, seed: u64) -> (ModelConfig, Dataset, Vec<StepWitness>, ProverDataset) {
+    let cfg = ModelConfig::new(2, 8, 4);
+    let ds = Dataset::synthetic(24, cfg.width / 2, 4, cfg.r_bits, seed ^ 0x77);
+    let wits = sgd_witness_chain(cfg, &ds, steps, seed);
+    let pd = ProverDataset::build(&ds, &cfg).expect("dataset commits");
+    (cfg, ds, wits, pd)
+}
+
+#[test]
+fn provenance_trace_disk_roundtrip_verifies() {
+    let (cfg, _, wits, pd) = setup(2, 0xd160);
+    let tk = TraceKey::setup(cfg, 2);
+    let mut rng = Rng::seed_from_u64(40);
+    let proof = prove_trace_provenance(&tk, &wits, &pd, &mut rng).expect("rows open");
+    let bytes = encode_trace_proof(&cfg, &proof);
+    let (cfg2, decoded) = decode_trace_proof(&bytes).expect("decodes");
+    assert_eq!(cfg, cfg2);
+    let prov = decoded.provenance.as_ref().expect("payload survives");
+    assert_eq!(prov.dataset.root, pd.commitment.root);
+    assert_eq!(prov.dataset.n_rows, 24);
+    // canonical: re-encoding the decoded proof is byte-identical
+    assert_eq!(bytes, encode_trace_proof(&cfg2, &decoded));
+    // out-of-process verification: keys rebuilt from the file alone
+    verify_trace(&TraceKey::setup(cfg2, decoded.steps), &decoded)
+        .expect("decoded provenance trace verifies");
+    // ... and the endorsement bridge ties the artifact's root to the
+    // released leaf set + dataset commitment
+    verify_dataset_endorsement(&pd.leaves, &prov.dataset.root, &prov.dataset.com_d)
+        .expect("endorsement checks out");
+}
+
+#[test]
+fn chained_provenance_trace_disk_roundtrip_verifies() {
+    let (cfg, _, wits, pd) = setup(3, 0xd161);
+    let tk = TraceKey::setup(cfg, 3);
+    let mut rng = Rng::seed_from_u64(41);
+    let shifts = vec![cfg.lr_shift; 2];
+    let proof =
+        prove_trace_chained_provenance_with(&tk, &wits, &UpdateRule::Sgd, &shifts, &pd, &mut rng)
+            .expect("chains and opens");
+    assert!(proof.chain.is_some() && proof.provenance.is_some());
+    let bytes = encode_trace_proof(&cfg, &proof);
+    let (cfg2, decoded) = decode_trace_proof(&bytes).expect("decodes");
+    assert_eq!(bytes, encode_trace_proof(&cfg2, &decoded));
+    verify_trace(&TraceKey::setup(cfg2, decoded.steps), &decoded)
+        .expect("decoded chained provenance trace verifies");
+}
+
+#[test]
+fn stripped_provenance_payload_is_rejected() {
+    // removing the payload flips the transcript's provenance flag: the
+    // remaining (otherwise valid) trace must not verify as unbound
+    let (cfg, _, wits, pd) = setup(2, 0xd162);
+    let tk = TraceKey::setup(cfg, 2);
+    let mut rng = Rng::seed_from_u64(42);
+    let mut proof = prove_trace_provenance(&tk, &wits, &pd, &mut rng).expect("rows open");
+    proof.provenance = None;
+    assert!(
+        verify_trace(&tk, &proof).is_err(),
+        "stripping the provenance payload must not yield a valid plain trace"
+    );
+}
+
+#[test]
+fn grafted_provenance_payload_is_rejected() {
+    // a provenance payload transplanted onto a plain trace (same config,
+    // same step count) lands in a different transcript and fails
+    let (cfg, _, wits, pd) = setup(2, 0xd163);
+    let tk = TraceKey::setup(cfg, 2);
+    let mut rng = Rng::seed_from_u64(43);
+    let donor = prove_trace_provenance(&tk, &wits, &pd, &mut rng).expect("rows open");
+    let (_, _, wits2, _) = setup(2, 0xd164);
+    let mut plain = prove_trace(&tk, &wits2, &mut rng);
+    verify_trace(&tk, &plain).expect("plain trace verifies");
+    plain.provenance = donor.provenance;
+    assert!(
+        verify_trace(&tk, &plain).is_err(),
+        "grafting a provenance payload onto another trace must fail"
+    );
+}
+
+#[test]
+fn tampered_provenance_statement_and_claims_are_rejected() {
+    let (cfg, _, wits, pd) = setup(2, 0xd165);
+    let tk = TraceKey::setup(cfg, 2);
+    let mut rng = Rng::seed_from_u64(44);
+    let proof = prove_trace_provenance(&tk, &wits, &pd, &mut rng).expect("rows open");
+    verify_trace(&tk, &proof).expect("honest proof verifies");
+
+    // swapped endorsement root (the dataset-substitution attack)
+    let mut bad = proof.clone();
+    bad.provenance.as_mut().unwrap().dataset.root[0] ^= 1;
+    assert!(verify_trace(&tk, &bad).is_err(), "edited root must fail");
+
+    // lying dataset opening
+    let mut bad = proof.clone();
+    bad.provenance.as_mut().unwrap().v_dpts += Fr::ONE;
+    assert!(verify_trace(&tk, &bad).is_err(), "edited D̃ claim must fail");
+
+    // lying label opening
+    let mut bad = proof.clone();
+    bad.provenance.as_mut().unwrap().v_dlab += Fr::ONE;
+    assert!(verify_trace(&tk, &bad).is_err(), "edited label claim must fail");
+
+    // lying selection evaluation
+    let mut bad = proof.clone();
+    bad.provenance.as_mut().unwrap().sel_evals[0] += Fr::ONE;
+    assert!(verify_trace(&tk, &bad).is_err(), "edited S̃ claim must fail");
+
+    // lying input evaluation
+    let mut bad = proof.clone();
+    bad.provenance.as_mut().unwrap().v_x[1] += Fr::ONE;
+    assert!(verify_trace(&tk, &bad).is_err(), "edited X̃ claim must fail");
+
+    // lying booleanity opening
+    let mut bad = proof.clone();
+    bad.provenance.as_mut().unwrap().v_sel += Fr::ONE;
+    assert!(verify_trace(&tk, &bad).is_err(), "edited sign opening must fail");
+
+    // shrunk dataset statement (n_rows drives the key + row-sum mask)
+    let mut bad = proof.clone();
+    bad.provenance.as_mut().unwrap().dataset.n_rows -= 1;
+    assert!(verify_trace(&tk, &bad).is_err(), "edited row count must fail");
+}
+
+#[test]
+fn decoder_rejects_malformed_provenance_payloads() {
+    let (cfg, _, wits, pd) = setup(2, 0xd166);
+    let tk = TraceKey::setup(cfg, 2);
+    let mut rng = Rng::seed_from_u64(45);
+    let proof = prove_trace_provenance(&tk, &wits, &pd, &mut rng).expect("rows open");
+
+    // claim-vector length mismatch
+    let mut bad = proof.clone();
+    bad.provenance.as_mut().unwrap().v_x.pop();
+    assert!(decode_trace_proof(&encode_trace_proof(&cfg, &bad)).is_err());
+
+    // missing opening
+    let mut bad = proof.clone();
+    bad.provenance.as_mut().unwrap().openings.pop();
+    assert!(decode_trace_proof(&encode_trace_proof(&cfg, &bad)).is_err());
+
+    // missing booleanity sign commitment
+    let mut bad = proof.clone();
+    bad.provenance.as_mut().unwrap().p1_sel.com_sign_prime = None;
+    assert!(decode_trace_proof(&encode_trace_proof(&cfg, &bad)).is_err());
+
+    // empty dataset statement
+    let mut bad = proof.clone();
+    bad.provenance.as_mut().unwrap().dataset.n_rows = 0;
+    assert!(decode_trace_proof(&encode_trace_proof(&cfg, &bad)).is_err());
+
+    // absurd dataset size (decoder resource ceiling)
+    let mut bad = proof;
+    bad.provenance.as_mut().unwrap().dataset.n_rows = usize::MAX / 2;
+    assert!(decode_trace_proof(&encode_trace_proof(&cfg, &bad)).is_err());
+}

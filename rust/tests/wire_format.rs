@@ -102,10 +102,10 @@ fn randomized_protocol1_and_validity_roundtrips() {
 
 #[test]
 fn golden_header_bytes() {
-    // Pins the envelope layout of VERSION 5 (zkOptim: chain payload opens
-    // with a rule tag + shift table + state commitments, stacked remainder
-    // tensor gains a relation axis). If this test fails, the wire format
-    // changed: bump `wire::VERSION` and update the constants here.
+    // Pins the envelope layout of VERSION 6 (zkData: trace envelope gains
+    // an optional batch-provenance payload and the transcript absorbs a
+    // provenance flag for every trace). If this test fails, the wire
+    // format changed: bump `wire::VERSION` and update the constants here.
     let cfg = ModelConfig::new(2, 8, 4);
     let wits = trace_witnesses(cfg, 1, 0x601d);
     let tk = TraceKey::setup(cfg, 1);
@@ -114,7 +114,7 @@ fn golden_header_bytes() {
     let bytes = encode_trace_proof(&cfg, &proof);
     let expected_header: [u8; 32] = [
         b'Z', b'K', b'D', b'L', // magic
-        0x05, 0x00, // version 5
+        0x06, 0x00, // version 6
         0x02, 0x00, // kind: trace
         0x02, 0x00, 0x00, 0x00, // depth 2
         0x08, 0x00, 0x00, 0x00, // width 8
@@ -125,9 +125,28 @@ fn golden_header_bytes() {
     ];
     assert_eq!(&bytes[..32], expected_header.as_slice());
     assert_eq!(MAGIC.as_slice(), b"ZKDL".as_slice());
-    assert_eq!(VERSION, 5);
+    assert_eq!(VERSION, 6);
     // step-count field follows the header
     assert_eq!(&bytes[32..36], 1u32.to_le_bytes().as_slice());
+}
+
+#[test]
+fn rejects_v5_artifacts_as_unsupported() {
+    // the v6 transcript absorbs a provenance flag for EVERY trace, so a
+    // v5 artifact can decode but never verify — reject it up front
+    let cfg = ModelConfig::new(2, 8, 4);
+    let wits = trace_witnesses(cfg, 1, 0x0506);
+    let tk = TraceKey::setup(cfg, 1);
+    let mut rng = Rng::seed_from_u64(46);
+    let proof = prove_trace(&tk, &wits, &mut rng);
+    let mut bytes = encode_trace_proof(&cfg, &proof);
+    bytes[4] = 0x05;
+    bytes[5] = 0x00;
+    let err = decode_trace_proof(&bytes).expect_err("v5 must not decode");
+    assert!(
+        format!("{err:#}").contains("unsupported version"),
+        "rejected as unsupported, not misparsed: {err:#}"
+    );
 }
 
 #[test]
