@@ -73,6 +73,7 @@ pub struct TraceKey {
 
 impl TraceKey {
     pub fn setup(cfg: ModelConfig, steps: usize) -> Self {
+        crate::span!("aggregate/key_setup");
         assert!(steps >= 1);
         let (_, _, n) = trace_stack_dims(&cfg, steps);
         let d2 = cfg.width * cfg.width;
@@ -422,6 +423,7 @@ pub(crate) fn prove_trace_with_parts(
     prov: Option<(std::sync::Arc<ProvenanceKey>, ProvenanceCommitments)>,
     rng: &mut Rng,
 ) -> TraceProof {
+    crate::span!("aggregate/prove_trace");
     let cfg = &tk.cfg;
     let t_steps = wits.len();
     assert_eq!(t_steps, tk.steps, "witness count mismatch");
@@ -438,12 +440,15 @@ pub(crate) fn prove_trace_with_parts(
     let log_dd = log_b + log_d;
     let log_s = slots.trailing_zeros() as usize;
 
-    let pls: Vec<ProverLayers> = wits.iter().map(ProverLayers::build).collect();
-    let scs: Vec<TraceStepCommitments> = pls
-        .iter()
-        .enumerate()
-        .map(|(t, pl)| commit_trace_step(tk, t, pl, rng))
-        .collect();
+    let pls: Vec<ProverLayers> = crate::telemetry::timed("aggregate/witness_layers", || {
+        wits.iter().map(ProverLayers::build).collect()
+    });
+    let scs: Vec<TraceStepCommitments> = crate::telemetry::timed("aggregate/commit", || {
+        pls.iter()
+            .enumerate()
+            .map(|(t, pl)| commit_trace_step(tk, t, pl, rng))
+            .collect()
+    });
 
     // zkOptim chain: remainder and state tensors committed before any
     // challenge, so the shared-randomness property covers the chain too
@@ -490,6 +495,7 @@ pub(crate) fn prove_trace_with_parts(
     }
 
     // ---- Protocol 1 over the trace stack ----
+    let p1_span = crate::telemetry::maybe_span("aggregate/protocol1");
     macro_rules! stack_trace {
         ($field:ident) => {{
             let mut out = vec![Fr::ZERO; slots * d];
@@ -534,6 +540,8 @@ pub(crate) fn prove_trace_with_parts(
     }
 
     // ---- Phase 1: one challenge bundle, three trace-wide matmul sumchecks ----
+    drop(p1_span);
+    let mm_span = crate::telemetry::maybe_span("aggregate/matmul_sumcheck");
     let ch = draw_group_challenges(&mut tr, log_b, log_d);
 
     // (30): Z̃_t^ℓ(u_zr,u_zc) for every (t, ℓ), γ-folded step-major.
@@ -632,6 +640,8 @@ pub(crate) fn prove_trace_with_parts(
     // ---- Phase 2: trace-wide stacking sumcheck ----
     // The four claim kinds share trace-global points (all steps use the same
     // challenge bundle); presence depends only on depth.
+    drop(mm_span);
+    let stack_span = crate::telemetry::maybe_span("aggregate/stacking");
     let pa1: Option<Vec<Fr>> = (depth >= 2).then(|| [ch.u_zr.clone(), r30.clone()].concat());
     let pa2: Option<Vec<Fr>> = (depth >= 2).then(|| [r34.clone(), ch.u_gwc.clone()].concat());
     let qz1: Option<Vec<Fr>> = (depth >= 3).then(|| [ch.u_gar.clone(), r33.clone()].concat());
@@ -711,6 +721,8 @@ pub(crate) fn prove_trace_with_parts(
     tr.absorb_frs(b"aux/evals", &aux_evals);
 
     // ---- Phase 3: batched openings (one task list for the whole trace) ----
+    drop(stack_span);
+    let open_span = crate::telemetry::maybe_span("aggregate/openings");
     let gk = tk.g_aux.clone();
     let mut tasks: Vec<(CommitKey, OpeningTask)> = Vec::new();
 
@@ -979,6 +991,8 @@ pub(crate) fn prove_trace_with_parts(
     }
 
     // ---- Phase 4: one validity pair for the whole trace ----
+    drop(open_span);
+    let validity_span = crate::telemetry::maybe_span("aggregate/validity");
     let u_dd = tr.challenge_fr(b"zkdl/u_dd");
     let mut vpoint = vec![u_dd];
     vpoint.extend_from_slice(&rho);
@@ -1003,6 +1017,7 @@ pub(crate) fn prove_trace_with_parts(
     );
 
     // ---- Phase 5: zkSGD chain argument (chained traces only) ----
+    drop(validity_span);
     let chain = chain_cc.map(|(uk, cc)| {
         let w_refs: Vec<&[Committed]> = scs.iter().map(|sc| sc.w.as_slice()).collect();
         let gw_refs: Vec<&[Committed]> = scs.iter().map(|sc| sc.gw.as_slice()).collect();
@@ -1083,6 +1098,7 @@ pub fn verify_trace_accum(
     proof: &TraceProof,
     acc: &mut MsmAccumulator,
 ) -> Result<()> {
+    crate::span!("aggregate/verify_trace");
     let cfg = &tk.cfg;
     let t_steps = tk.steps;
     let depth = cfg.depth;
@@ -1157,6 +1173,7 @@ pub fn verify_trace_accum(
     }
 
     // ---- Phase 1 ----
+    let mm_span = crate::telemetry::maybe_span("aggregate/matmul_sumcheck");
     let ch = draw_group_challenges(&mut tr, log_b, log_d);
     let n_zl = t_steps * depth;
     let n_inner = t_steps * (depth - 1);
@@ -1228,6 +1245,8 @@ pub fn verify_trace_accum(
     let r34 = out34.point;
 
     // ---- Phase 2 ----
+    drop(mm_span);
+    let stack_span = crate::telemetry::maybe_span("aggregate/stacking");
     ensure!(
         proof.va1.len() == slots
             && proof.va2.len() == slots
@@ -1327,6 +1346,8 @@ pub fn verify_trace_accum(
     let [v_sign, v_zdp, v_gap, v_rz, v_rga] = proof.aux_evals;
 
     // ---- Phase 3: opening checks (must mirror the prover's task order) ----
+    drop(stack_span);
+    let open_span = crate::telemetry::maybe_span("aggregate/openings");
     let gk = tk.g_aux.clone();
     let stack_expr = |get: &dyn Fn(&StepCommitmentSet) -> &Vec<G1Affine>| -> ComExpr {
         ComExpr::sum(
@@ -1555,6 +1576,8 @@ pub fn verify_trace_accum(
     }
 
     // ---- Phase 4: validity ----
+    drop(open_span);
+    let validity_span = crate::telemetry::maybe_span("aggregate/validity");
     let u_dd = tr.challenge_fr(b"zkdl/u_dd");
     let mut vpoint = vec![u_dd];
     vpoint.extend_from_slice(&rho);
@@ -1594,6 +1617,7 @@ pub fn verify_trace_accum(
     .context("remainder validity")?;
 
     // ---- Phase 5: zkOptim chain argument (chained traces only) ----
+    drop(validity_span);
     if let Some(chain) = &proof.chain {
         // key setup asserts on invalid dimensions; guard just the sizing
         // here so untrusted proofs fail cleanly — the full statement

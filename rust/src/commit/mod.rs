@@ -33,9 +33,11 @@ impl CommitKey {
     /// Derive (or fetch from cache) a key of size `n` under `label`.
     /// Different labels give bases with mutually unknown discrete logs.
     pub fn setup(label: &[u8], n: usize) -> Self {
+        use crate::telemetry::{self, Counter};
         {
             let cache = KEY_CACHE.lock().unwrap();
             if let Some(k) = cache.get(&(label.to_vec(), n)) {
+                telemetry::count(Counter::CommitKeyHits, 1);
                 return k.clone();
             }
             // reuse a longer cached key with the same label: a prefix of a
@@ -46,6 +48,7 @@ impl CommitKey {
                 .min_by_key(|((_, m), _)| *m)
                 .map(|(_, k)| k)
             {
+                telemetry::count(Counter::CommitKeyHits, 1);
                 return CommitKey {
                     g: k.g[..n].to_vec(),
                     h: k.h,
@@ -53,6 +56,7 @@ impl CommitKey {
                 };
             }
         }
+        telemetry::count(Counter::CommitKeyMisses, 1);
         let g = derive_generators(label, n);
         let mut blind_label = label.to_vec();
         blind_label.extend_from_slice(b"/blind");

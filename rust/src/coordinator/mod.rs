@@ -38,6 +38,25 @@ pub struct StepMetrics {
     pub verify_ms: f64,
     pub proof_bytes: usize,
     pub witness_source: &'static str,
+    /// Span-sourced `(phase, ms)` breakdown of the prove call (zkObs);
+    /// empty when telemetry is disabled or the step was not proven.
+    pub phases: Vec<(String, f64)>,
+}
+
+impl StepMetrics {
+    /// One-line phase breakdown, e.g. `"zkdl/commit 12.3 ms, sumcheck/prove
+    /// 4.5 ms"`; empty string when no phases were recorded.
+    pub fn phase_summary(&self) -> String {
+        fmt_phases(&self.phases)
+    }
+}
+
+fn fmt_phases(phases: &[(String, f64)]) -> String {
+    phases
+        .iter()
+        .map(|(name, ms)| format!("{name} {ms:.1} ms"))
+        .collect::<Vec<_>>()
+        .join(", ")
 }
 
 /// Outcome of a proven training run.
@@ -163,9 +182,13 @@ pub fn train_and_prove(
                     loss,
                     accuracy,
                 } = pending;
-                let (prove_ms, verify_ms, proof_bytes) = if step % opts.prove_every == 0 {
+                let (prove_ms, verify_ms, proof_bytes, phases) = if step % opts.prove_every == 0 {
                     let t1 = Instant::now();
-                    let proof = prove_step(pk, &wit, opts.mode, &mut prng);
+                    // isolate: the worker runs at top level (no open span),
+                    // so each step gets its own per-call phase tree
+                    let (proof, prove_tree) = crate::telemetry::isolate(|| {
+                        prove_step(pk, &wit, opts.mode, &mut prng)
+                    });
                     let prove_ms = t1.elapsed().as_secs_f64() * 1e3;
                     let bytes = proof.size_bytes();
                     let verify_ms = if opts.skip_verify {
@@ -176,9 +199,9 @@ pub fn train_and_prove(
                             .with_context(|| format!("verify at step {step}"))?;
                         t2.elapsed().as_secs_f64() * 1e3
                     };
-                    (prove_ms, verify_ms, bytes)
+                    (prove_ms, verify_ms, bytes, prove_tree.phase_breakdown())
                 } else {
-                    (0.0, 0.0, 0)
+                    (0.0, 0.0, 0, Vec::new())
                 };
                 out.push(StepMetrics {
                     step,
@@ -189,6 +212,7 @@ pub fn train_and_prove(
                     verify_ms,
                     proof_bytes,
                     witness_source: source_name,
+                    phases,
                 });
             }
             Ok(out)
@@ -282,6 +306,16 @@ pub struct TraceWindowMetrics {
     pub prove_ms: f64,
     pub verify_ms: f64,
     pub proof_bytes: usize,
+    /// Span-sourced `(phase, ms)` breakdown of the window's prove call
+    /// (zkObs); empty when telemetry is disabled.
+    pub phases: Vec<(String, f64)>,
+}
+
+impl TraceWindowMetrics {
+    /// One-line phase breakdown; empty string when no phases were recorded.
+    pub fn phase_summary(&self) -> String {
+        fmt_phases(&self.phases)
+    }
 }
 
 /// Outcome of an aggregated proven training run.
@@ -396,20 +430,25 @@ pub fn train_and_prove_trace(
                 let t = buf.len();
                 let tk = TraceKey::setup(cfg, t);
                 let t1 = Instant::now();
-                let proof = match (chained && t >= 2, prover_dataset) {
-                    (true, Some(pd)) => {
-                        // boundary b of this window is the update applied
-                        // after global step start_step + b
-                        let shifts = schedule.window_table(start_step, t - 1);
-                        prove_trace_chained_provenance_with(&tk, buf, &rule, &shifts, pd, prng)?
-                    }
-                    (true, None) => {
-                        let shifts = schedule.window_table(start_step, t - 1);
-                        prove_trace_chained_with(&tk, buf, &rule, &shifts, prng)?
-                    }
-                    (false, Some(pd)) => prove_trace_provenance(&tk, buf, pd, prng)?,
-                    (false, None) => prove_trace(&tk, buf, prng),
-                };
+                // isolate: the aggregator runs at top level (no open span),
+                // so each window gets its own per-call phase tree
+                let (proof, prove_tree) = crate::telemetry::isolate(|| -> Result<TraceProof> {
+                    Ok(match (chained && t >= 2, prover_dataset) {
+                        (true, Some(pd)) => {
+                            // boundary b of this window is the update applied
+                            // after global step start_step + b
+                            let shifts = schedule.window_table(start_step, t - 1);
+                            prove_trace_chained_provenance_with(&tk, buf, &rule, &shifts, pd, prng)?
+                        }
+                        (true, None) => {
+                            let shifts = schedule.window_table(start_step, t - 1);
+                            prove_trace_chained_with(&tk, buf, &rule, &shifts, prng)?
+                        }
+                        (false, Some(pd)) => prove_trace_provenance(&tk, buf, pd, prng)?,
+                        (false, None) => prove_trace(&tk, buf, prng),
+                    })
+                });
+                let proof = proof?;
                 let prove_ms = t1.elapsed().as_secs_f64() * 1e3;
                 let verify_ms = if skip_verify {
                     0.0
@@ -425,6 +464,7 @@ pub fn train_and_prove_trace(
                     prove_ms,
                     verify_ms,
                     proof_bytes: proof.size_bytes(),
+                    phases: prove_tree.phase_breakdown(),
                 };
                 buf.clear();
                 Ok(WindowOut { metrics, proof })
@@ -641,6 +681,31 @@ mod tests {
         // replacement — refused up front
         let tiny = Dataset::synthetic(2, 4, 2, cfg.r_bits, 16);
         assert!(train_and_prove_trace(cfg, &tiny, Path::new("artifacts"), &opts).is_err());
+    }
+
+    #[test]
+    fn trace_metrics_carry_phase_breakdowns_when_profiling() {
+        let cfg = ModelConfig::new(2, 8, 4);
+        let ds = Dataset::synthetic(32, 4, 4, cfg.r_bits, 21);
+        let opts = TraceTrainOptions {
+            steps: 2,
+            window: 2,
+            seed: 9,
+            ..Default::default()
+        };
+        let (report, _) = crate::telemetry::capture(|| {
+            train_and_prove_trace(cfg, &ds, Path::new("artifacts"), &opts).expect("trace run")
+        });
+        let w = &report.windows[0];
+        assert!(!w.phases.is_empty(), "profiled run records phases");
+        assert!(w.phase_summary().contains("ms"));
+        // telemetry off (the default) ⇒ no phases; under the exclusive lock
+        // no parallel test can flip it on mid-run
+        let report = crate::telemetry::exclusive(|| {
+            train_and_prove_trace(cfg, &ds, Path::new("artifacts"), &opts).expect("trace run")
+        });
+        assert!(report.windows[0].phases.is_empty());
+        assert_eq!(report.windows[0].phase_summary(), "");
     }
 
     #[test]

@@ -23,6 +23,7 @@
 
 use super::{msm::msm, G1, G1Affine};
 use crate::field::Fr;
+use crate::telemetry::{self, Counter};
 use crate::util::rng::Rng;
 use std::collections::HashMap;
 
@@ -120,6 +121,7 @@ impl MsmAccumulator {
             self.run_msm();
         }
         self.equations += 1;
+        telemetry::count(Counter::MsmEquations, 1);
         self.eq_coeff = Fr::random_nonzero(&mut self.rng);
         self.cur = self.scale * self.eq_coeff;
     }
@@ -158,11 +160,13 @@ impl MsmAccumulator {
             .and_then(|cands| cands.iter().copied().find(|&bi| self.blocks[bi].points == bases));
         match found {
             Some(bi) => {
+                telemetry::count(Counter::MsmFixedBlocksMerged, 1);
                 for (acc_s, s) in self.blocks[bi].scalars.iter_mut().zip(scalars.iter()) {
                     *acc_s += cur * *s;
                 }
             }
             None => {
+                telemetry::count(Counter::MsmFixedBlocksNew, 1);
                 let bi = self.blocks.len();
                 self.blocks.push(FixedBlock {
                     points: bases.to_vec(),
@@ -190,6 +194,7 @@ impl MsmAccumulator {
         self.points.clear();
         self.scalars.clear();
         self.flushes += 1;
+        telemetry::count(Counter::MsmFlushes, 1);
     }
 
     /// Decide every deferred equation with one Pippenger MSM. Returns true

@@ -7,6 +7,7 @@
 
 use super::{G1, G1Affine};
 use crate::field::Fr;
+use crate::telemetry::{self, Counter};
 use crate::util::threads;
 
 /// Pick the Pippenger window size (bits) for n terms.
@@ -27,6 +28,8 @@ fn window_size(n: usize) -> usize {
 pub fn msm(bases: &[G1Affine], scalars: &[Fr]) -> G1 {
     assert_eq!(bases.len(), scalars.len(), "msm length mismatch");
     let n = bases.len();
+    telemetry::count(Counter::MsmCalls, 1);
+    telemetry::count(Counter::MsmPoints, n as u64);
     if n == 0 {
         return G1::IDENTITY;
     }

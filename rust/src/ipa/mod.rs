@@ -161,8 +161,13 @@ pub(crate) fn prove_eval_core(
     transcript: &mut Transcript,
     rng: &mut Rng,
 ) -> IpaProof {
+    crate::span!("ipa/prove");
     let n = values.len();
     assert!(n.is_power_of_two() && e.len() == n && ck.g.len() >= n);
+    crate::telemetry::count(
+        crate::telemetry::Counter::IpaProveRounds,
+        n.trailing_zeros() as u64,
+    );
     transcript.absorb_fr(b"ipa/value", &v);
     transcript.absorb_u64(b"ipa/n", n as u64);
     let c = nonzero_challenge(transcript, b"ipa/u-scale");
@@ -286,11 +291,16 @@ fn verify_eval_core(
     transcript: &mut Transcript,
     acc: &mut MsmAccumulator,
 ) -> Result<()> {
+    crate::span!("ipa/verify");
     let n = e.len();
     ensure!(n.is_power_of_two(), "ipa: length must be a power of two");
     ensure!(
         proof.l.len() == n.trailing_zeros() as usize && proof.r.len() == proof.l.len(),
         "ipa: wrong number of rounds"
+    );
+    crate::telemetry::count(
+        crate::telemetry::Counter::IpaVerifyRounds,
+        proof.l.len() as u64,
     );
     ensure!(ck.g.len() >= n, "ipa: commitment key too short");
     transcript.absorb_fr(b"ipa/value", &v);
@@ -371,9 +381,14 @@ pub(crate) fn prove_ip_core(
     transcript: &mut Transcript,
     rng: &mut Rng,
 ) -> IpaProof {
+    crate::span!("ipa/prove_ip");
     let n = a.len();
     assert!(n.is_power_of_two() && b.len() == n);
     assert!(basis.g.len() >= n && basis.h.len() >= n);
+    crate::telemetry::count(
+        crate::telemetry::Counter::IpaProveRounds,
+        n.trailing_zeros() as u64,
+    );
     transcript.absorb_fr(b"ipa2/t", &t);
     transcript.absorb_u64(b"ipa2/n", n as u64);
     let c = nonzero_challenge(transcript, b"ipa2/u-scale");
@@ -549,10 +564,15 @@ pub(crate) fn verify_ip_core(
     transcript: &mut Transcript,
     acc: &mut MsmAccumulator,
 ) -> Result<()> {
+    crate::span!("ipa/verify_ip");
     ensure!(n.is_power_of_two(), "ipa2: length must be power of two");
     ensure!(
         proof.l.len() == n.trailing_zeros() as usize && proof.r.len() == proof.l.len(),
         "ipa2: wrong number of rounds"
+    );
+    crate::telemetry::count(
+        crate::telemetry::Counter::IpaVerifyRounds,
+        proof.l.len() as u64,
     );
     ensure!(g.len() >= n && h.len() >= n, "ipa2: basis too short");
     transcript.absorb_fr(b"ipa2/t", &t);

@@ -18,7 +18,8 @@
 //! * the workload: [`model`] (fixed-point quantized network), [`witness`],
 //!   [`data`]
 //! * the runtime: [`runtime`] (PJRT AOT artifacts), [`coordinator`]
-//!   (pipelined proving driver), [`wire`] (persisted proof artifacts)
+//!   (pipelined proving driver), [`wire`] (persisted proof artifacts),
+//!   [`telemetry`] (zkObs spans + proof-system counters, `--profile`/bench)
 
 pub mod aggregate;
 pub mod baseline;
@@ -40,6 +41,7 @@ pub mod poly;
 pub mod provenance;
 pub mod runtime;
 pub mod sumcheck;
+pub mod telemetry;
 pub mod transcript;
 pub mod update;
 pub mod util;

@@ -15,7 +15,14 @@
 //!                <hex>` additionally pins provenance artifacts to an
 //!                endorsed dataset root
 //!   membership   build the Merkle tree and answer (non-)membership queries
+//!   bench        run the prove/verify grid (T × depth × variant) and write
+//!                a `BENCH_*.json` baseline; `--quick` runs one cheap cell
 //!   info         print configuration and environment
+//!
+//! Every verb accepts `--profile`: telemetry (zkObs) records a span tree
+//! and proof-system counters during the run and prints the profile after
+//! the verb completes. Without `--profile`, telemetry stays disabled (one
+//! relaxed atomic load per instrumentation site).
 //!
 //! Example:
 //!   zkdl prove --depth 2 --width 64 --batch 16 --mode parallel --out step.zkp
@@ -25,8 +32,11 @@
 //!   zkdl prove-trace --chained --optimizer momentum --lr-schedule decay:8,2,12 --steps 4
 //!   zkdl prove-trace --provenance --depth 2 --width 16 --batch 8 --steps 4 --data-n 64
 //!   zkdl verify-trace --in trace.zkp
+//!   zkdl verify-trace --profile --in trace.zkp
 //!   zkdl verify-trace --in a.zkp --in b.zkp --in c.zkp
 //!   zkdl membership --n 1000 --queries 100 --hash sha256 --positivity 0.5
+//!   zkdl bench
+//!   zkdl bench --quick --out BENCH_ci.json
 
 use anyhow::{Context, Result};
 use std::path::Path;
@@ -337,6 +347,36 @@ fn cmd_membership(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+fn cmd_bench(cli: &Cli) -> Result<()> {
+    use zkdl::telemetry::bench::{run_grid, GridOptions};
+    let mut opts = if cli.flag("quick") {
+        GridOptions::quick()
+    } else {
+        GridOptions::full()
+    };
+    opts.width = cli.get_usize("width", opts.width);
+    opts.batch = cli.get_usize("batch", opts.batch);
+    opts.data_rows = cli.get_usize("data-n", opts.data_rows);
+    opts.seed = cli.get_u64("seed", opts.seed);
+    opts.budget =
+        std::time::Duration::from_secs_f64(cli.get_f64("budget-s", opts.budget.as_secs_f64()));
+    let out = cli.get("out").unwrap_or("BENCH_trace.json");
+    println!(
+        "bench grid: T={:?} depth={:?} d={} B={} budget {:.0} s ({} threads)",
+        opts.steps,
+        opts.depths,
+        opts.width,
+        opts.batch,
+        opts.budget.as_secs_f64(),
+        zkdl::util::threads::num_threads()
+    );
+    let report = run_grid(&opts);
+    print!("{}", report.render_table());
+    std::fs::write(out, report.to_json_string()).with_context(|| format!("writing {out}"))?;
+    println!("wrote {out} ({:.1} s total)", report.wall_s);
+    Ok(())
+}
+
 fn cmd_info() {
     println!("zkdl — zero-knowledge proofs of deep learning training");
     println!("threads: {}", zkdl::util::threads::num_threads());
@@ -345,12 +385,21 @@ fn cmd_info() {
 
 fn main() -> Result<()> {
     let cli = Cli::from_env();
-    match cli.subcommand.as_deref() {
+    // --profile: record spans + counters for this invocation and print the
+    // zkObs report afterwards. `bench` manages telemetry itself (reset +
+    // exclusive), so profiling composes with every verb but reads empty
+    // after a bench run.
+    let profile = cli.flag("profile");
+    if profile {
+        zkdl::telemetry::set_enabled(true);
+    }
+    let result = match cli.subcommand.as_deref() {
         Some("prove") => cmd_prove(&cli),
         Some("train") => cmd_train(&cli),
         Some("prove-trace") => cmd_prove_trace(&cli),
         Some("verify-trace") => cmd_verify_trace(&cli),
         Some("membership") => cmd_membership(&cli),
+        Some("bench") => cmd_bench(&cli),
         Some("info") | None => {
             cmd_info();
             Ok(())
@@ -358,9 +407,14 @@ fn main() -> Result<()> {
         Some(other) => {
             eprintln!("unknown subcommand: {other}");
             eprintln!(
-                "usage: zkdl [prove|train|prove-trace|verify-trace|membership|info] [--key value]"
+                "usage: zkdl [prove|train|prove-trace|verify-trace|membership|bench|info] [--key value]"
             );
             std::process::exit(2);
         }
+    };
+    if profile {
+        zkdl::telemetry::set_enabled(false);
+        print!("{}", zkdl::telemetry::report().render());
     }
+    result
 }

@@ -260,8 +260,10 @@ impl ProvenanceKey {
         let cfg_key = (cfg.depth, cfg.width, cfg.batch, cfg.r_bits, cfg.q_bits, cfg.lr_shift);
         let key = (cfg_key, steps, n_rows);
         if let Some(pk) = PROVKEY_CACHE.lock().unwrap().get(&key) {
+            crate::telemetry::count(crate::telemetry::Counter::ProvKeyHits, 1);
             return pk.clone();
         }
+        crate::telemetry::count(crate::telemetry::Counter::ProvKeyMisses, 1);
         let (tbar, nbar, n_sel, n_data) =
             checked_selection_dims(&cfg, steps, n_rows).expect("invalid provenance dimensions");
         let pk = Arc::new(Self {
@@ -279,6 +281,7 @@ impl ProvenanceKey {
             let evict = cache.keys().next().cloned();
             if let Some(evict) = evict {
                 cache.remove(&evict);
+                crate::telemetry::count(crate::telemetry::Counter::ProvKeyEvictions, 1);
             }
         }
         cache.insert(key, pk.clone());
@@ -434,6 +437,7 @@ pub(crate) fn commit_provenance(
     pw: &ProvenanceWitness,
     rng: &mut Rng,
 ) -> Result<ProvenanceCommitments> {
+    crate::span!("provenance/commit");
     let cfg = &pk.cfg;
     let (b, nbar, n_sel) = (cfg.batch, pk.nbar, pk.n_sel);
     ensure!(pw.rows.len() == pk.steps, "provenance witness step count");
@@ -523,6 +527,7 @@ pub(crate) fn prove_provenance(
     tr: &mut Transcript,
     rng: &mut Rng,
 ) -> ProvenanceProof {
+    crate::span!("provenance/prove");
     let ProvenanceCommitments {
         dataset,
         d_tensor,
@@ -749,6 +754,7 @@ pub(crate) fn verify_provenance_accum(
     tr: &mut Transcript,
     acc: &mut MsmAccumulator,
 ) -> Result<()> {
+    crate::span!("provenance/verify");
     let cfg = &pk.cfg;
     let (b, d) = (cfg.batch, cfg.width);
     let t_steps = pk.steps;

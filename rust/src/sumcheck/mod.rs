@@ -101,6 +101,11 @@ pub struct ProverOutput {
 
 /// Run the sumcheck prover. Mutates (consumes) the instance's tables.
 pub fn prove(mut inst: Instance, transcript: &mut Transcript) -> ProverOutput {
+    crate::span!("sumcheck/prove");
+    crate::telemetry::count(
+        crate::telemetry::Counter::SumcheckProveRounds,
+        inst.num_vars as u64,
+    );
     let num_vars = inst.num_vars;
     let deg = inst.degree();
     let mut rounds = Vec::with_capacity(num_vars);
@@ -177,6 +182,11 @@ pub fn verify(
     if proof.round_evals.len() != proof.num_vars {
         bail!("sumcheck: wrong number of rounds");
     }
+    crate::span!("sumcheck/verify");
+    crate::telemetry::count(
+        crate::telemetry::Counter::SumcheckVerifyRounds,
+        proof.num_vars as u64,
+    );
     let mut claim = claimed_sum;
     let mut point = Vec::with_capacity(proof.num_vars);
     for evals in &proof.round_evals {

@@ -1,0 +1,449 @@
+//! The `zkdl bench` grid runner: prove/verify wall-clock plus MSM counters
+//! over the ROADMAP grid — T ∈ {1, 16, 64} steps × depth ∈ {2, 8}, with
+//! plain / zkOptim-chained / zkData-provenance variants per cell — emitted
+//! as a rendered table and a `BENCH_*.json` baseline file.
+//!
+//! Runs as library code so both the CLI verb (`zkdl bench`) and the
+//! golden-schema test share one implementation. The whole grid executes
+//! under [`super::exclusive`] with telemetry enabled, so counter deltas
+//! around each timed region attribute MSM work to exactly one prove or
+//! verify call.
+
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use crate::aggregate::{
+    prove_trace, prove_trace_chained, prove_trace_provenance, verify_trace, TraceKey,
+};
+use crate::data::Dataset;
+use crate::model::ModelConfig;
+use crate::provenance::ProverDataset;
+use crate::telemetry::{self, json::Json, Counter};
+use crate::util::bench::{fmt_dur, time_once, Table};
+use crate::util::rng::Rng;
+use crate::wire;
+use crate::witness::native::sgd_witness_chain;
+
+/// Schema tag written into every bench JSON file; bump on layout changes.
+pub const BENCH_SCHEMA: &str = "zkdl/bench/v1";
+
+/// Trace variants measured per grid cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// Independent per-step relations aggregated into one trace proof.
+    Plain,
+    /// Plain plus the zkOptim weight-update chain (needs T ≥ 2).
+    Chained,
+    /// Plain plus the zkData batch-provenance argument.
+    Provenance,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 3] = [Variant::Plain, Variant::Chained, Variant::Provenance];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Plain => "plain",
+            Variant::Chained => "chained",
+            Variant::Provenance => "provenance",
+        }
+    }
+}
+
+/// Grid configuration. [`GridOptions::full`] is the recorded-baseline grid
+/// from the ROADMAP; [`GridOptions::quick`] is the CI smoke cell.
+#[derive(Clone, Debug)]
+pub struct GridOptions {
+    pub steps: Vec<usize>,
+    pub depths: Vec<usize>,
+    pub width: usize,
+    pub batch: usize,
+    /// Rows in the synthetic dataset the provenance variant binds to.
+    pub data_rows: usize,
+    pub seed: u64,
+    /// Wall-clock budget for the whole grid; cells past it are skipped
+    /// (recorded with a skip reason, like the paper's timeout entries).
+    pub budget: Duration,
+}
+
+impl GridOptions {
+    /// The full ROADMAP grid: T ∈ {1, 16, 64} × depth ∈ {2, 8}.
+    pub fn full() -> Self {
+        GridOptions {
+            steps: vec![1, 16, 64],
+            depths: vec![2, 8],
+            width: 16,
+            batch: 8,
+            data_rows: 256,
+            seed: 0xa66,
+            budget: Duration::from_secs(3600),
+        }
+    }
+
+    /// One cheap cell (T=1, depth=2) for CI smoke runs.
+    pub fn quick() -> Self {
+        GridOptions {
+            steps: vec![1],
+            depths: vec![2],
+            budget: Duration::from_secs(300),
+            ..GridOptions::full()
+        }
+    }
+}
+
+/// MSM counter deltas attributed to one case's prove and verify calls.
+/// During `verify_trace` the only [`crate::curve::msm`] invocation is the
+/// accumulator flush, so `verify_calls == verify_flushes` (the one-MSM
+/// invariant — asserted by `tests/telemetry.rs`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MsmCounts {
+    pub prove_calls: u64,
+    pub prove_points: u64,
+    pub verify_calls: u64,
+    pub verify_points: u64,
+    pub verify_flushes: u64,
+    pub verify_equations: u64,
+}
+
+/// One measured (or skipped) grid cell × variant.
+#[derive(Clone, Debug)]
+pub struct BenchCase {
+    pub variant: Variant,
+    pub steps: usize,
+    pub depth: usize,
+    /// `Some(reason)` if the case was not run (chained at T=1, or the grid
+    /// budget was exhausted); measurements are zero in that case.
+    pub skipped: Option<String>,
+    pub prove_s: f64,
+    pub verify_s: f64,
+    /// Wire-encoded proof size ([`wire::encode_trace_proof`]).
+    pub proof_bytes: u64,
+    pub msm: MsmCounts,
+}
+
+/// The full grid result: options, total wall time, and every case.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub opts: GridOptions,
+    pub threads: usize,
+    pub wall_s: f64,
+    pub cases: Vec<BenchCase>,
+}
+
+/// Run the grid. Holds the process-wide telemetry lock for the duration and
+/// leaves telemetry disabled and reset afterwards — combine with `--profile`
+/// on a *separate* invocation, not the same one.
+pub fn run_grid(opts: &GridOptions) -> BenchReport {
+    telemetry::exclusive(|| {
+        telemetry::reset();
+        telemetry::set_enabled(true);
+        let report = run_grid_locked(opts);
+        telemetry::set_enabled(false);
+        telemetry::reset();
+        report
+    })
+}
+
+fn run_grid_locked(opts: &GridOptions) -> BenchReport {
+    let start = Instant::now();
+    let mut rng = Rng::seed_from_u64(opts.seed);
+    let mut cases = Vec::new();
+    for &depth in &opts.depths {
+        for &t in &opts.steps {
+            let cfg = ModelConfig::new(depth, opts.width, opts.batch);
+            let cell_seed = opts.seed ^ (t as u64) ^ ((depth as u64) << 32);
+            let ds = Dataset::synthetic(
+                opts.data_rows,
+                cfg.width / 2,
+                4,
+                cfg.r_bits,
+                cell_seed ^ 0x77,
+            );
+            let wits = sgd_witness_chain(cfg, &ds, t, cell_seed);
+            let tk = TraceKey::setup(cfg, t);
+            for variant in Variant::ALL {
+                let case = if variant == Variant::Chained && t < 2 {
+                    skipped_case(variant, t, depth, "chained trace needs T >= 2")
+                } else if start.elapsed() > opts.budget {
+                    skipped_case(variant, t, depth, "grid budget exhausted")
+                } else {
+                    eprintln!("bench: T={t} depth={depth} {} ...", variant.name());
+                    run_case(variant, t, depth, &tk, &wits, &ds, &mut rng)
+                };
+                cases.push(case);
+            }
+        }
+    }
+    BenchReport {
+        opts: opts.clone(),
+        threads: crate::util::threads::num_threads(),
+        wall_s: start.elapsed().as_secs_f64(),
+        cases,
+    }
+}
+
+fn skipped_case(variant: Variant, steps: usize, depth: usize, reason: &str) -> BenchCase {
+    BenchCase {
+        variant,
+        steps,
+        depth,
+        skipped: Some(reason.to_string()),
+        prove_s: 0.0,
+        verify_s: 0.0,
+        proof_bytes: 0,
+        msm: MsmCounts::default(),
+    }
+}
+
+fn run_case(
+    variant: Variant,
+    steps: usize,
+    depth: usize,
+    tk: &TraceKey,
+    wits: &[crate::witness::StepWitness],
+    ds: &Dataset,
+    rng: &mut Rng,
+) -> BenchCase {
+    // Key setup, witness generation, and (for provenance) the dataset
+    // commitment stay outside the timed region — in deployment they are
+    // amortized across many traces.
+    let pd = (variant == Variant::Provenance)
+        .then(|| ProverDataset::build(ds, &tk.cfg).expect("bench dataset commits"));
+
+    let before_prove = telemetry::counters_snapshot();
+    let (proof, prove_d) = time_once(|| match variant {
+        Variant::Plain => prove_trace(tk, wits, rng),
+        Variant::Chained => prove_trace_chained(tk, wits, rng).expect("bench witnesses chain"),
+        Variant::Provenance => prove_trace_provenance(tk, wits, pd.as_ref().unwrap(), rng)
+            .expect("bench rows open against dataset"),
+    });
+    let after_prove = telemetry::counters_snapshot();
+
+    let before_verify = telemetry::counters_snapshot();
+    let ((), verify_d) = time_once(|| {
+        verify_trace(tk, &proof).expect("bench trace verifies");
+    });
+    let after_verify = telemetry::counters_snapshot();
+
+    let proof_bytes = wire::encode_trace_proof(&tk.cfg, &proof).len() as u64;
+    let delta = telemetry::snapshot_delta;
+    BenchCase {
+        variant,
+        steps,
+        depth,
+        skipped: None,
+        prove_s: prove_d.as_secs_f64(),
+        verify_s: verify_d.as_secs_f64(),
+        proof_bytes,
+        msm: MsmCounts {
+            prove_calls: delta(&after_prove, &before_prove, Counter::MsmCalls),
+            prove_points: delta(&after_prove, &before_prove, Counter::MsmPoints),
+            verify_calls: delta(&after_verify, &before_verify, Counter::MsmCalls),
+            verify_points: delta(&after_verify, &before_verify, Counter::MsmPoints),
+            verify_flushes: delta(&after_verify, &before_verify, Counter::MsmFlushes),
+            verify_equations: delta(&after_verify, &before_verify, Counter::MsmEquations),
+        },
+    }
+}
+
+impl BenchCase {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("variant", Json::str(self.variant.name())),
+            ("steps", Json::Uint(self.steps as u64)),
+            ("depth", Json::Uint(self.depth as u64)),
+            (
+                "skipped",
+                match &self.skipped {
+                    Some(r) => Json::str(r),
+                    None => Json::Null,
+                },
+            ),
+            ("prove_s", Json::Num(self.prove_s)),
+            ("verify_s", Json::Num(self.verify_s)),
+            ("proof_bytes", Json::Uint(self.proof_bytes)),
+            (
+                "msm",
+                Json::obj(vec![
+                    ("prove_calls", Json::Uint(self.msm.prove_calls)),
+                    ("prove_points", Json::Uint(self.msm.prove_points)),
+                    ("verify_calls", Json::Uint(self.msm.verify_calls)),
+                    ("verify_points", Json::Uint(self.msm.verify_points)),
+                    ("verify_flushes", Json::Uint(self.msm.verify_flushes)),
+                    ("verify_equations", Json::Uint(self.msm.verify_equations)),
+                ]),
+            ),
+        ])
+    }
+}
+
+impl BenchReport {
+    /// The machine-readable baseline, schema [`BENCH_SCHEMA`].
+    pub fn to_json(&self) -> Json {
+        let created = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        Json::obj(vec![
+            ("schema", Json::str(BENCH_SCHEMA)),
+            ("created_unix", Json::Uint(created)),
+            ("threads", Json::Uint(self.threads as u64)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("width", Json::Uint(self.opts.width as u64)),
+                    ("batch", Json::Uint(self.opts.batch as u64)),
+                    ("data_rows", Json::Uint(self.opts.data_rows as u64)),
+                    ("seed", Json::Uint(self.opts.seed)),
+                ]),
+            ),
+            (
+                "grid",
+                Json::obj(vec![
+                    (
+                        "steps",
+                        Json::Arr(self.opts.steps.iter().map(|&t| Json::Uint(t as u64)).collect()),
+                    ),
+                    (
+                        "depths",
+                        Json::Arr(
+                            self.opts.depths.iter().map(|&d| Json::Uint(d as u64)).collect(),
+                        ),
+                    ),
+                    (
+                        "variants",
+                        Json::Arr(Variant::ALL.iter().map(|v| Json::str(v.name())).collect()),
+                    ),
+                ]),
+            ),
+            ("wall_s", Json::Num(self.wall_s)),
+            (
+                "cases",
+                Json::Arr(self.cases.iter().map(|c| c.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// [`Self::to_json`] serialized — what `zkdl bench` writes to disk.
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Human-readable grid table (proof sizes in kB, MSM counts as
+    /// `prove/verify` pairs).
+    pub fn render_table(&self) -> String {
+        let mut table = Table::new(&[
+            "T",
+            "depth",
+            "variant",
+            "prove",
+            "verify",
+            "proof kB",
+            "msm calls p/v",
+            "msm points p/v",
+        ]);
+        for c in &self.cases {
+            match &c.skipped {
+                Some(reason) => table.row(vec![
+                    c.steps.to_string(),
+                    c.depth.to_string(),
+                    c.variant.name().to_string(),
+                    format!("({reason})"),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]),
+                None => table.row(vec![
+                    c.steps.to_string(),
+                    c.depth.to_string(),
+                    c.variant.name().to_string(),
+                    fmt_dur(Duration::from_secs_f64(c.prove_s)),
+                    fmt_dur(Duration::from_secs_f64(c.verify_s)),
+                    format!("{:.1}", c.proof_bytes as f64 / 1024.0),
+                    format!("{}/{}", c.msm.prove_calls, c.msm.verify_calls),
+                    format!("{}/{}", c.msm.prove_points, c.msm.verify_points),
+                ]),
+            }
+        }
+        table.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_names_are_stable() {
+        let names: Vec<_> = Variant::ALL.iter().map(|v| v.name()).collect();
+        assert_eq!(names, ["plain", "chained", "provenance"]);
+    }
+
+    #[test]
+    fn grid_options_cover_roadmap() {
+        let full = GridOptions::full();
+        assert_eq!(full.steps, [1, 16, 64]);
+        assert_eq!(full.depths, [2, 8]);
+        let quick = GridOptions::quick();
+        assert_eq!(quick.steps, [1]);
+        assert_eq!(quick.depths, [2]);
+        assert_eq!(quick.width, full.width);
+    }
+
+    #[test]
+    fn report_json_has_required_schema() {
+        // Hand-built report: the expensive end-to-end quick-grid run lives in
+        // tests/telemetry.rs; this pins the JSON layout cheaply.
+        let report = BenchReport {
+            opts: GridOptions::quick(),
+            threads: 1,
+            wall_s: 1.25,
+            cases: vec![
+                BenchCase {
+                    variant: Variant::Plain,
+                    steps: 1,
+                    depth: 2,
+                    skipped: None,
+                    prove_s: 0.5,
+                    verify_s: 0.25,
+                    proof_bytes: 4096,
+                    msm: MsmCounts {
+                        prove_calls: 10,
+                        prove_points: 1000,
+                        verify_calls: 1,
+                        verify_points: 500,
+                        verify_flushes: 1,
+                        verify_equations: 7,
+                    },
+                },
+                skipped_case(Variant::Chained, 1, 2, "chained trace needs T >= 2"),
+            ],
+        };
+        let parsed = Json::parse(&report.to_json_string()).expect("bench JSON parses");
+        assert_eq!(
+            parsed.get("schema").and_then(|v| v.as_str()),
+            Some(BENCH_SCHEMA)
+        );
+        for key in ["created_unix", "threads", "config", "grid", "wall_s", "cases"] {
+            assert!(parsed.get(key).is_some(), "missing {key}");
+        }
+        let cases = parsed.get("cases").unwrap().as_array().unwrap();
+        assert_eq!(cases.len(), 2);
+        let first = &cases[0];
+        for key in ["variant", "steps", "depth", "skipped", "prove_s", "verify_s", "proof_bytes"] {
+            assert!(first.get(key).is_some(), "case missing {key}");
+        }
+        let msm = first.get("msm").expect("msm block");
+        assert_eq!(msm.get("verify_calls").and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(msm.get("verify_flushes").and_then(|v| v.as_u64()), Some(1));
+        // skipped case carries its reason and zeroed measurements
+        assert_eq!(
+            cases[1].get("skipped").and_then(|v| v.as_str()),
+            Some("chained trace needs T >= 2")
+        );
+        assert_eq!(cases[1].get("proof_bytes").and_then(|v| v.as_u64()), Some(0));
+        let text = report.render_table();
+        assert!(text.contains("plain"));
+        assert!(text.contains("chained trace needs T >= 2"));
+    }
+}

@@ -1,0 +1,774 @@
+//! zkObs — zero-dependency observability for the prover/verifier stack.
+//!
+//! Two instruments, one switch:
+//!
+//! * **Hierarchical spans** — RAII scoped timers (`crate::span!("ipa/prove")`)
+//!   collected into a per-thread tree. Each thread's tree is merged into a
+//!   process-global tree when the thread exits (the coordinator's pipeline
+//!   workers are scoped threads, so their trees land before the report is
+//!   read), and [`report`] additionally folds in the calling thread's live
+//!   tree.
+//! * **Counters** — monotonically increasing `u64`s for proof-system events:
+//!   MSM invocations and point counts, accumulator flush/equation/fixed-block
+//!   stats, key-cache hits/misses/evictions, transcript absorbs, wire bytes,
+//!   sumcheck/IPA rounds.
+//!
+//! Telemetry is **disabled by default**; the disabled fast path of both the
+//! span macro and [`count`] is a single relaxed atomic load (no TLS access,
+//! no allocation — pinned by `tests/telemetry.rs`). Proof bytes and artifacts
+//! are never affected: telemetry observes, it does not participate in
+//! transcripts or encodings.
+//!
+//! Span names are slash-paths, `<module>/<operation>` (e.g.
+//! `aggregate/matmul_sumcheck`); counter names are slash-paths too
+//! (`msm/calls`, `cache/vbases/hits`). See DESIGN.md §telemetry for the
+//! full inventory.
+
+pub mod bench;
+pub mod json;
+
+use std::cell::RefCell;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// enable flag
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is telemetry recording? One relaxed load — this is the entire cost of
+/// every span/counter site while profiling is off.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn recording on or off. Does not clear previously recorded data
+/// (use [`reset`] for that).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// counters
+// ---------------------------------------------------------------------------
+
+macro_rules! define_counters {
+    ($($variant:ident => $name:literal),* $(,)?) => {
+        /// Proof-system event counters. `Counter::name()` gives the stable
+        /// slash-path used in reports and JSON.
+        #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+        #[repr(usize)]
+        pub enum Counter { $($variant),* }
+
+        /// Stable names, indexed by `Counter as usize`.
+        pub const COUNTER_NAMES: &[&str] = &[$($name),*];
+
+        impl Counter {
+            /// Total number of counters.
+            pub const COUNT: usize = COUNTER_NAMES.len();
+
+            /// The counter's stable slash-path name.
+            pub fn name(self) -> &'static str {
+                COUNTER_NAMES[self as usize]
+            }
+        }
+    };
+}
+
+define_counters! {
+    MsmCalls => "msm/calls",
+    MsmPoints => "msm/points",
+    MsmFlushes => "msm/flushes",
+    MsmEquations => "msm/equations",
+    MsmFixedBlocksNew => "msm/fixed_blocks/new",
+    MsmFixedBlocksMerged => "msm/fixed_blocks/merged",
+    SumcheckProveRounds => "sumcheck/prove_rounds",
+    SumcheckVerifyRounds => "sumcheck/verify_rounds",
+    IpaProveRounds => "ipa/prove_rounds",
+    IpaVerifyRounds => "ipa/verify_rounds",
+    TranscriptAbsorbs => "transcript/absorbs",
+    TranscriptChallenges => "transcript/challenges",
+    WireBytesEncoded => "wire/bytes_encoded",
+    WireBytesDecoded => "wire/bytes_decoded",
+    CommitKeyHits => "cache/commit_key/hits",
+    CommitKeyMisses => "cache/commit_key/misses",
+    UpdKeyHits => "cache/updkey/hits",
+    UpdKeyMisses => "cache/updkey/misses",
+    UpdKeyEvictions => "cache/updkey/evictions",
+    VBasesHits => "cache/vbases/hits",
+    VBasesMisses => "cache/vbases/misses",
+    VBasesEvictions => "cache/vbases/evictions",
+    ProvKeyHits => "cache/provkey/hits",
+    ProvKeyMisses => "cache/provkey/misses",
+    ProvKeyEvictions => "cache/provkey/evictions",
+}
+
+static COUNTERS: [AtomicU64; Counter::COUNT] = [const { AtomicU64::new(0) }; Counter::COUNT];
+
+/// Add `n` to a counter. No-op (one relaxed load) while disabled.
+#[inline]
+pub fn count(c: Counter, n: u64) {
+    if enabled() {
+        COUNTERS[c as usize].fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Current value of one counter.
+pub fn counter_value(c: Counter) -> u64 {
+    COUNTERS[c as usize].load(Ordering::Relaxed)
+}
+
+/// Snapshot of all counters, indexed by `Counter as usize`. Subtract two
+/// snapshots to attribute events to a region (see [`bench`]).
+pub fn counters_snapshot() -> [u64; Counter::COUNT] {
+    let mut out = [0u64; Counter::COUNT];
+    for (slot, c) in out.iter_mut().zip(COUNTERS.iter()) {
+        *slot = c.load(Ordering::Relaxed);
+    }
+    out
+}
+
+/// Difference of one counter between two [`counters_snapshot`]s.
+pub fn snapshot_delta(
+    after: &[u64; Counter::COUNT],
+    before: &[u64; Counter::COUNT],
+    c: Counter,
+) -> u64 {
+    after[c as usize].saturating_sub(before[c as usize])
+}
+
+// ---------------------------------------------------------------------------
+// span tree
+// ---------------------------------------------------------------------------
+
+/// One node of a (merged) span tree: a named scope with accumulated wall
+/// time, a call count, and child scopes in first-seen order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SpanNode {
+    pub name: String,
+    pub total_ns: u64,
+    pub calls: u64,
+    pub children: Vec<SpanNode>,
+}
+
+impl SpanNode {
+    /// Accumulated time in milliseconds.
+    pub fn total_ms(&self) -> f64 {
+        self.total_ns as f64 / 1e6
+    }
+
+    /// Merge another tree into this one: children match by name (order is
+    /// first-seen), times and call counts add.
+    pub fn merge_from(&mut self, other: &SpanNode) {
+        self.total_ns += other.total_ns;
+        self.calls += other.calls;
+        for oc in &other.children {
+            match self.children.iter_mut().find(|c| c.name == oc.name) {
+                Some(c) => c.merge_from(oc),
+                None => self.children.push(oc.clone()),
+            }
+        }
+    }
+
+    /// Find a descendant by slash-free name anywhere in the tree
+    /// (depth-first; used by tests).
+    pub fn find(&self, name: &str) -> Option<&SpanNode> {
+        if self.name == name {
+            return Some(self);
+        }
+        self.children.iter().find_map(|c| c.find(name))
+    }
+
+    /// Top-level phase breakdown `(name, ms)`: descends through single-child
+    /// wrapper levels (e.g. the lone `zkdl/prove_step` root) and returns the
+    /// first level with siblings — the interesting phase split.
+    pub fn phase_breakdown(&self) -> Vec<(String, f64)> {
+        let mut node = self;
+        while node.children.len() == 1 {
+            node = &node.children[0];
+        }
+        node.children
+            .iter()
+            .map(|c| (c.name.clone(), c.total_ms()))
+            .collect()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.total_ns == 0 && self.calls == 0 && self.children.is_empty()
+    }
+
+    fn render_into(&self, depth: usize, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = writeln!(
+            out,
+            "{:indent$}{:<width$} {:>10}  x{}",
+            "",
+            self.name,
+            crate::util::bench::fmt_dur(std::time::Duration::from_nanos(self.total_ns)),
+            self.calls,
+            indent = depth * 2,
+            width = 36usize.saturating_sub(depth * 2),
+        );
+        for c in &self.children {
+            c.render_into(depth + 1, out);
+        }
+    }
+
+    /// JSON encoding: `{"name":..,"total_ns":..,"calls":..,"children":[..]}`.
+    pub fn to_json(&self) -> json::Json {
+        json::Json::obj(vec![
+            ("name", json::Json::str(&self.name)),
+            ("total_ns", json::Json::Uint(self.total_ns)),
+            ("calls", json::Json::Uint(self.calls)),
+            (
+                "children",
+                json::Json::Arr(self.children.iter().map(|c| c.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// Per-thread span arena. Index 0 is the synthetic root; `stack` holds the
+/// path of currently-open spans (root at the bottom).
+struct LocalTree {
+    nodes: Vec<RawNode>,
+    stack: Vec<usize>,
+}
+
+struct RawNode {
+    name: &'static str,
+    total_ns: u64,
+    calls: u64,
+    children: Vec<usize>,
+}
+
+impl Default for LocalTree {
+    fn default() -> Self {
+        LocalTree {
+            nodes: vec![RawNode {
+                name: "",
+                total_ns: 0,
+                calls: 0,
+                children: Vec::new(),
+            }],
+            stack: vec![0],
+        }
+    }
+}
+
+impl LocalTree {
+    fn enter(&mut self, name: &'static str) -> usize {
+        let parent = *self.stack.last().expect("span stack never empty");
+        let found = self.nodes[parent]
+            .children
+            .iter()
+            .copied()
+            .find(|&c| self.nodes[c].name == name);
+        let idx = match found {
+            Some(i) => i,
+            None => {
+                let i = self.nodes.len();
+                self.nodes.push(RawNode {
+                    name,
+                    total_ns: 0,
+                    calls: 0,
+                    children: Vec::new(),
+                });
+                self.nodes[parent].children.push(i);
+                i
+            }
+        };
+        self.stack.push(idx);
+        idx
+    }
+
+    fn exit(&mut self, idx: usize, elapsed_ns: u64) {
+        // Guards drop in strict LIFO order within a thread (SpanGuard is
+        // !Send), so the top of the stack is the span being closed — unless
+        // the tree was swapped by `isolate` under an open span, which the
+        // isolate contract forbids.
+        debug_assert_eq!(self.stack.last().copied(), Some(idx), "span close out of order");
+        if self.stack.last().copied() == Some(idx) {
+            self.stack.pop();
+        }
+        let n = &mut self.nodes[idx];
+        n.total_ns += elapsed_ns;
+        n.calls += 1;
+    }
+
+    fn to_node(&self) -> SpanNode {
+        self.build(0)
+    }
+
+    fn build(&self, idx: usize) -> SpanNode {
+        let raw = &self.nodes[idx];
+        SpanNode {
+            name: raw.name.to_string(),
+            total_ns: raw.total_ns,
+            calls: raw.calls,
+            children: raw.children.iter().map(|&c| self.build(c)).collect(),
+        }
+    }
+
+    fn clear(&mut self) {
+        *self = LocalTree::default();
+    }
+}
+
+/// TLS cell whose `Drop` (thread exit) merges the thread's tree into the
+/// global one — how pipeline-worker spans reach the final report.
+struct LocalCell(RefCell<LocalTree>);
+
+impl Drop for LocalCell {
+    fn drop(&mut self) {
+        let node = self.0.borrow().to_node();
+        if !node.is_empty() {
+            global_spans().merge_from(&node);
+        }
+    }
+}
+
+thread_local! {
+    static LOCAL: LocalCell = LocalCell(RefCell::new(LocalTree::default()));
+}
+
+static GLOBAL_SPANS: Mutex<Option<SpanNode>> = Mutex::new(None);
+
+fn global_spans() -> impl std::ops::DerefMut<Target = SpanNode> {
+    struct Guard<'a>(std::sync::MutexGuard<'a, Option<SpanNode>>);
+    impl std::ops::Deref for Guard<'_> {
+        type Target = SpanNode;
+        fn deref(&self) -> &SpanNode {
+            self.0.as_ref().expect("initialized in global_spans")
+        }
+    }
+    impl std::ops::DerefMut for Guard<'_> {
+        fn deref_mut(&mut self) -> &mut SpanNode {
+            self.0.as_mut().expect("initialized in global_spans")
+        }
+    }
+    let mut g = GLOBAL_SPANS.lock().unwrap_or_else(|p| p.into_inner());
+    if g.is_none() {
+        *g = Some(SpanNode::default());
+    }
+    Guard(g)
+}
+
+/// An open span; closing (drop) adds the elapsed time to the thread's tree.
+/// `!Send` by construction: spans time a scope on the thread that opened it.
+pub struct SpanGuard {
+    start: Instant,
+    idx: usize,
+    _not_send: PhantomData<*const ()>,
+}
+
+impl SpanGuard {
+    /// Open a span under the thread's innermost open span. Prefer the
+    /// [`crate::span!`] macro (which checks [`enabled`] first) or
+    /// [`maybe_span`] for explicit-drop phase timing.
+    pub fn enter(name: &'static str) -> SpanGuard {
+        let idx = LOCAL.with(|l| l.0.borrow_mut().enter(name));
+        SpanGuard {
+            start: Instant::now(),
+            idx,
+            _not_send: PhantomData,
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let ns = self.start.elapsed().as_nanos() as u64;
+        // try_with: the TLS cell may already be gone during thread teardown.
+        let _ = LOCAL.try_with(|l| l.0.borrow_mut().exit(self.idx, ns));
+    }
+}
+
+/// `Some(open span)` while enabled, `None` (free) otherwise. For sequential
+/// phases inside one function, bind and `drop()` explicitly:
+///
+/// ```ignore
+/// let g = telemetry::maybe_span("aggregate/openings");
+/// /* ... phase work ... */
+/// drop(g);
+/// ```
+#[inline]
+pub fn maybe_span(name: &'static str) -> Option<SpanGuard> {
+    if enabled() {
+        Some(SpanGuard::enter(name))
+    } else {
+        None
+    }
+}
+
+/// Run `f` inside a span. The disabled path is one relaxed load plus the
+/// call.
+#[inline]
+pub fn timed<T>(name: &'static str, f: impl FnOnce() -> T) -> T {
+    let _g = maybe_span(name);
+    f()
+}
+
+/// Open a span for the rest of the enclosing scope:
+/// `crate::span!("module/operation")`. Expands to a `let` binding, so it
+/// times from the macro to the end of the surrounding block. Disabled cost:
+/// one relaxed atomic load.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        let _zkobs_span_guard = $crate::telemetry::maybe_span($name);
+    };
+}
+
+/// Run `f` with a fresh span tree and return `(f(), tree)` — the per-call
+/// phase breakdown used by the coordinator's `StepMetrics`. The captured
+/// tree is also merged back into the thread's tree so the global report
+/// still sees it. Must not be called under an open span (the swap would
+/// orphan it); returns an empty tree while disabled.
+pub fn isolate<T>(f: impl FnOnce() -> T) -> (T, SpanNode) {
+    if !enabled() {
+        return (f(), SpanNode::default());
+    }
+    let saved = LOCAL.with(|l| {
+        let mut t = l.0.borrow_mut();
+        debug_assert_eq!(t.stack.len(), 1, "telemetry::isolate under an open span");
+        std::mem::take(&mut *t)
+    });
+    let out = f();
+    let fresh = LOCAL.with(|l| std::mem::replace(&mut *l.0.borrow_mut(), saved));
+    let node = fresh.to_node();
+    LOCAL.with(|l| {
+        let mut t = l.0.borrow_mut();
+        let merged = {
+            let mut cur = t.to_node();
+            cur.merge_from(&node);
+            cur
+        };
+        t.clear();
+        rebuild_local(&mut t, &merged, 0);
+    });
+    (out, node)
+}
+
+/// Rebuild a LocalTree arena from a SpanNode tree (names are interned via
+/// the static counter/span name set — SpanNode names always originate from
+/// `&'static str` span sites, so leak-free re-interning just matches them).
+fn rebuild_local(tree: &mut LocalTree, node: &SpanNode, idx: usize) {
+    tree.nodes[idx].total_ns = node.total_ns;
+    tree.nodes[idx].calls = node.calls;
+    for child in &node.children {
+        let ci = tree.nodes.len();
+        tree.nodes.push(RawNode {
+            name: intern(&child.name),
+            total_ns: 0,
+            calls: 0,
+            children: Vec::new(),
+        });
+        tree.nodes[idx].children.push(ci);
+        rebuild_local(tree, child, ci);
+    }
+}
+
+/// Map a span name back to a `&'static str`. Span sites only ever use
+/// literal names, so a leaked copy per *distinct* name is bounded by the
+/// number of span sites in the binary.
+fn intern(name: &str) -> &'static str {
+    static INTERNED: Mutex<Vec<&'static str>> = Mutex::new(Vec::new());
+    let mut v = INTERNED.lock().unwrap_or_else(|p| p.into_inner());
+    if let Some(s) = v.iter().find(|s| **s == name) {
+        return s;
+    }
+    let s: &'static str = Box::leak(name.to_string().into_boxed_str());
+    v.push(s);
+    s
+}
+
+// ---------------------------------------------------------------------------
+// report
+// ---------------------------------------------------------------------------
+
+/// A merged view of everything recorded: the global span tree (exited
+/// threads) plus the calling thread's live tree, and all counters.
+pub struct Report {
+    pub spans: SpanNode,
+    /// `(name, value)` for every counter, including zeros (JSON emits all;
+    /// the rendered table shows nonzero rows only).
+    pub counters: Vec<(&'static str, u64)>,
+}
+
+/// Snapshot the current telemetry state. Threads that have exited are
+/// already merged; the calling thread's tree is folded in here.
+pub fn report() -> Report {
+    let mut spans = global_spans().clone();
+    let local = LOCAL.with(|l| l.0.borrow().to_node());
+    spans.merge_from(&local);
+    let counters = (0..Counter::COUNT)
+        .map(|i| (COUNTER_NAMES[i], COUNTERS[i].load(Ordering::Relaxed)))
+        .collect();
+    Report { spans, counters }
+}
+
+/// Clear counters, the global span tree, and the calling thread's tree.
+/// Other threads' live trees are untouched (they merge at exit).
+pub fn reset() {
+    for c in COUNTERS.iter() {
+        c.store(0, Ordering::Relaxed);
+    }
+    *global_spans() = SpanNode::default();
+    LOCAL.with(|l| l.0.borrow_mut().clear());
+}
+
+impl Report {
+    /// Human-readable profile: span tree then nonzero counters, using the
+    /// same fixed-width table as the benches.
+    pub fn render(&self) -> String {
+        let mut out = String::from("=== zkObs profile ===\n");
+        if self.spans.children.is_empty() {
+            out.push_str("(no spans recorded)\n");
+        } else {
+            out.push_str("-- spans --\n");
+            for c in &self.spans.children {
+                c.render_into(0, &mut out);
+            }
+        }
+        let nonzero: Vec<_> = self.counters.iter().filter(|(_, v)| *v > 0).collect();
+        if !nonzero.is_empty() {
+            out.push_str("-- counters --\n");
+            let mut table = crate::util::bench::Table::new(&["counter", "value"]);
+            for (name, v) in nonzero {
+                table.row(vec![name.to_string(), v.to_string()]);
+            }
+            out.push_str(&table.render());
+        }
+        out
+    }
+
+    /// Machine-readable profile: `{"spans": <tree>, "counters": {name: n}}`.
+    pub fn to_json(&self) -> json::Json {
+        json::Json::obj(vec![
+            ("spans", self.spans.to_json()),
+            (
+                "counters",
+                json::Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(n, v)| (n.to_string(), json::Json::Uint(*v)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// exclusive / capture
+// ---------------------------------------------------------------------------
+
+static CAPTURE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` while holding the process-wide telemetry lock. Every test or
+/// tool that asserts on global counters/spans goes through here (or through
+/// [`capture`], which uses it), so concurrent telemetry users serialize
+/// instead of contaminating each other's numbers.
+pub fn exclusive<T>(f: impl FnOnce() -> T) -> T {
+    let _g = CAPTURE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    f()
+}
+
+/// Reset, enable, run `f`, disable, and return `(f(), report)` — the whole
+/// profiled-run lifecycle in one call. Used by `--profile` and by the
+/// counter-accuracy tests.
+pub fn capture<T>(f: impl FnOnce() -> T) -> (T, Report) {
+    exclusive(|| {
+        reset();
+        set_enabled(true);
+        let out = f();
+        set_enabled(false);
+        let rep = report();
+        (out, rep)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_names_cover_enum() {
+        assert_eq!(COUNTER_NAMES.len(), Counter::COUNT);
+        assert_eq!(Counter::MsmCalls.name(), "msm/calls");
+        assert_eq!(Counter::ProvKeyEvictions.name(), "cache/provkey/evictions");
+        // all names unique
+        for (i, a) in COUNTER_NAMES.iter().enumerate() {
+            for b in COUNTER_NAMES.iter().skip(i + 1) {
+                assert_ne!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn count_is_noop_while_disabled() {
+        // Telemetry is off by default and only `capture` flips it on, so
+        // holding the capture lock makes this race-free under parallel tests.
+        exclusive(|| {
+            assert!(!enabled(), "telemetry must be off by default");
+            let before = counter_value(Counter::WireBytesEncoded);
+            count(Counter::WireBytesEncoded, 1000);
+            assert_eq!(counter_value(Counter::WireBytesEncoded), before);
+        });
+    }
+
+    #[test]
+    fn span_node_merge_adds_and_unions() {
+        let mut a = SpanNode {
+            name: "root".into(),
+            total_ns: 10,
+            calls: 1,
+            children: vec![SpanNode {
+                name: "x".into(),
+                total_ns: 4,
+                calls: 2,
+                children: vec![],
+            }],
+        };
+        let b = SpanNode {
+            name: "root".into(),
+            total_ns: 5,
+            calls: 1,
+            children: vec![
+                SpanNode {
+                    name: "x".into(),
+                    total_ns: 6,
+                    calls: 1,
+                    children: vec![],
+                },
+                SpanNode {
+                    name: "y".into(),
+                    total_ns: 1,
+                    calls: 1,
+                    children: vec![],
+                },
+            ],
+        };
+        a.merge_from(&b);
+        assert_eq!(a.total_ns, 15);
+        assert_eq!(a.calls, 2);
+        assert_eq!(a.children.len(), 2);
+        assert_eq!(a.children[0].name, "x");
+        assert_eq!(a.children[0].total_ns, 10);
+        assert_eq!(a.children[0].calls, 3);
+        assert_eq!(a.children[1].name, "y");
+    }
+
+    #[test]
+    fn phase_breakdown_descends_single_child_wrappers() {
+        let tree = SpanNode {
+            name: "".into(),
+            total_ns: 0,
+            calls: 0,
+            children: vec![SpanNode {
+                name: "zkdl/prove_step".into(),
+                total_ns: 100,
+                calls: 1,
+                children: vec![
+                    SpanNode {
+                        name: "zkdl/commit".into(),
+                        total_ns: 60_000_000,
+                        calls: 1,
+                        children: vec![],
+                    },
+                    SpanNode {
+                        name: "sumcheck/prove".into(),
+                        total_ns: 40_000_000,
+                        calls: 3,
+                        children: vec![],
+                    },
+                ],
+            }],
+        };
+        let phases = tree.phase_breakdown();
+        assert_eq!(phases.len(), 2);
+        assert_eq!(phases[0].0, "zkdl/commit");
+        assert!((phases[0].1 - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn capture_builds_local_span_tree() {
+        // capture serializes against other telemetry users via the lock, so
+        // asserting on *this thread's* spans is race-free even if a parallel
+        // test proves things (those spans land in other threads' trees or
+        // under other names).
+        let ((), rep) = capture(|| {
+            timed("test/outer", || {
+                timed("test/inner", || std::hint::black_box(3 + 4));
+                timed("test/inner", || std::hint::black_box(5 + 6));
+            });
+        });
+        let outer = rep.spans.find("test/outer").expect("outer span recorded");
+        assert_eq!(outer.calls, 1);
+        let inner = outer.children.iter().find(|c| c.name == "test/inner");
+        let inner = inner.expect("inner nested under outer");
+        assert_eq!(inner.calls, 2);
+        assert!(outer.total_ns >= inner.total_ns);
+    }
+
+    #[test]
+    fn isolate_returns_per_call_tree() {
+        let ((), rep) = capture(|| {
+            let ((), first) = isolate(|| {
+                timed("test/phase_a", || std::hint::black_box(1u64 << 20));
+            });
+            assert_eq!(first.children.len(), 1);
+            assert_eq!(first.children[0].name, "test/phase_a");
+            assert_eq!(first.children[0].calls, 1);
+            let ((), second) = isolate(|| {
+                timed("test/phase_a", || std::hint::black_box(2u64));
+                timed("test/phase_b", || std::hint::black_box(3u64));
+            });
+            assert_eq!(second.children.len(), 2);
+            // per-call: the second tree does not include the first call
+            assert_eq!(second.children[0].calls, 1);
+        });
+        // ...but the merged report sees both calls
+        let a = rep.spans.find("test/phase_a").expect("merged back");
+        assert_eq!(a.calls, 2);
+        assert_eq!(rep.spans.find("test/phase_b").map(|n| n.calls), Some(1));
+    }
+
+    #[test]
+    fn report_merges_exited_threads() {
+        let ((), rep) = capture(|| {
+            std::thread::scope(|s| {
+                for _ in 0..2 {
+                    s.spawn(|| {
+                        timed("test/worker", || std::hint::black_box(7u64));
+                    });
+                }
+            });
+            timed("test/main", || std::hint::black_box(8u64));
+        });
+        let worker = rep.spans.find("test/worker").expect("worker spans merged");
+        assert_eq!(worker.calls, 2);
+        assert!(rep.spans.find("test/main").is_some());
+    }
+
+    #[test]
+    fn render_and_json_contain_spans_and_counters() {
+        let ((), rep) = capture(|| {
+            timed("test/render", || count(Counter::MsmCalls, 3));
+        });
+        let text = rep.render();
+        assert!(text.contains("zkObs profile"));
+        assert!(text.contains("test/render"));
+        assert!(text.contains("msm/calls"));
+        let j = rep.to_json().to_string();
+        let parsed = json::Json::parse(&j).expect("report JSON parses");
+        let counters = parsed.get("counters").expect("counters key");
+        assert!(counters.get("msm/calls").and_then(|v| v.as_u64()).unwrap() >= 3);
+        assert!(parsed.get("spans").is_some());
+    }
+}

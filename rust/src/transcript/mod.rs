@@ -10,6 +10,7 @@
 
 use crate::curve::G1Affine;
 use crate::field::Fr;
+use crate::telemetry::{self, Counter};
 use sha2::{Digest, Sha256};
 
 /// A running Fiat–Shamir transcript. Domain-separated by construction: each
@@ -33,6 +34,7 @@ impl Transcript {
     }
 
     fn absorb(&mut self, tag: u8, label: &[u8], data: &[u8]) {
+        telemetry::count(Counter::TranscriptAbsorbs, 1);
         let mut h = Sha256::new();
         h.update(self.state);
         h.update([tag]);
@@ -77,6 +79,7 @@ impl Transcript {
 
     /// Squeeze one field challenge (uniform via 64-byte wide reduction).
     pub fn challenge_fr(&mut self, label: &[u8]) -> Fr {
+        telemetry::count(Counter::TranscriptChallenges, 1);
         let mut wide = [0u8; 64];
         for half in 0..2u8 {
             let mut h = Sha256::new();

@@ -191,8 +191,10 @@ impl UpdateKey {
         let desc = r.descriptor_bytes();
         let key = (cfg_key, steps, desc.clone());
         if let Some(uk) = UPDKEY_CACHE.lock().unwrap().get(&key) {
+            crate::telemetry::count(crate::telemetry::Counter::UpdKeyHits, 1);
             return uk.clone();
         }
+        crate::telemetry::count(crate::telemetry::Counter::UpdKeyMisses, 1);
         let (_, _, _, n) = update_stack_dims(&cfg, steps, r.n_rem());
         let label = [b"zkdl/trace-aux/upd/".as_ref(), &desc].concat();
         let uk = Arc::new(Self {
@@ -208,6 +210,7 @@ impl UpdateKey {
             let evict = cache.keys().next().cloned();
             if let Some(evict) = evict {
                 cache.remove(&evict);
+                crate::telemetry::count(crate::telemetry::Counter::UpdKeyEvictions, 1);
             }
         }
         cache.insert(key, uk.clone());
@@ -452,6 +455,7 @@ pub(crate) fn commit_chain(
     cw: ChainWitness,
     rng: &mut Rng,
 ) -> Result<ChainCommitments> {
+    crate::span!("update/commit_chain");
     let cfg = &uk.cfg;
     let depth = cfg.depth;
     let d2 = cfg.width * cfg.width;
@@ -537,6 +541,7 @@ pub(crate) fn prove_chain(
     tr: &mut Transcript,
     rng: &mut Rng,
 ) -> ChainProof {
+    crate::span!("update/prove_chain");
     // taken by value so the stacked tensor (up to B̄·L̄·R̄·d² field elements)
     // is moved into the final opening instead of cloned per claim
     let ChainCommitments {
@@ -728,6 +733,7 @@ pub(crate) fn verify_chain_accum(
     tr: &mut Transcript,
     acc: &mut MsmAccumulator,
 ) -> Result<()> {
+    crate::span!("update/verify_chain");
     let cfg = &uk.cfg;
     let t_steps = uk.steps;
     let depth = cfg.depth;

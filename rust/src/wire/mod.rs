@@ -803,16 +803,26 @@ impl FromWire for TraceProof {
 // ---------------------------------------------------------------------------
 
 fn encode_envelope(kind: ProofKind, cfg: &ModelConfig, body: &dyn ToWire) -> Vec<u8> {
+    crate::span!("wire/encode");
     let mut w = WireWriter::new();
     w.put_bytes(&MAGIC);
     w.put_u16(VERSION);
     w.put_u16(kind.tag());
     w.put(cfg);
     body.to_wire(&mut w);
-    w.finish()
+    let bytes = w.finish();
+    crate::telemetry::count(
+        crate::telemetry::Counter::WireBytesEncoded,
+        bytes.len() as u64,
+    );
+    bytes
 }
 
 fn decode_envelope<'a>(bytes: &'a [u8], want: ProofKind) -> Result<(ModelConfig, WireReader<'a>)> {
+    crate::telemetry::count(
+        crate::telemetry::Counter::WireBytesDecoded,
+        bytes.len() as u64,
+    );
     let mut r = WireReader::new(bytes);
     let magic = r.take(4)?;
     ensure!(magic == MAGIC.as_slice(), "wire: bad magic");

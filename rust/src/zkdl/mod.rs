@@ -299,6 +299,7 @@ struct StepCommitments {
 }
 
 fn commit_step(pk: &ProverKey, pl: &ProverLayers, rng: &mut Rng) -> StepCommitments {
+    crate::span!("zkdl/commit");
     let depth = pk.cfg.depth;
     let mut w = Vec::new();
     let mut gw = Vec::new();
@@ -535,6 +536,7 @@ pub fn prove_step(
     mode: ProofMode,
     rng: &mut Rng,
 ) -> StepProof {
+    crate::span!("zkdl/prove_step");
     let cfg = &pk.cfg;
     assert_eq!(*cfg, wit.cfg, "config mismatch");
     let depth = cfg.depth;
@@ -1323,6 +1325,7 @@ pub fn verify_step_accum(
     proof: &StepProof,
     acc: &mut MsmAccumulator,
 ) -> Result<()> {
+    crate::span!("zkdl/verify_step");
     let cfg = &pk.cfg;
     let depth = cfg.depth;
     let d = cfg.d_size();

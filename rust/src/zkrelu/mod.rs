@@ -128,6 +128,7 @@ fn vbases_cache_put(
         let evict = cache.keys().next().cloned();
         if let Some(evict) = evict {
             cache.remove(&evict);
+            crate::telemetry::count(crate::telemetry::Counter::VBasesEvictions, 1);
         }
     }
     cache.insert(key, vb.clone());
@@ -150,8 +151,10 @@ impl ValidityBases {
         assert!(width.is_power_of_two());
         let key = (label.to_vec(), n, width, DigitLayout::Uniform(width));
         if let Some(vb) = VBASES_CACHE.lock().unwrap().get(&key) {
+            crate::telemetry::count(crate::telemetry::Counter::VBasesHits, 1);
             return vb.clone();
         }
+        crate::telemetry::count(crate::telemetry::Counter::VBasesMisses, 1);
         let mut glabel = label.to_vec();
         glabel.extend_from_slice(b"/G");
         let mut big_g = crate::curve::derive_generators(&glabel, 2 * n * width);
@@ -215,8 +218,10 @@ impl ValidityBases {
         layout.validate(2 * n, width);
         let key = (label.to_vec(), n, width, layout.clone());
         if let Some(vb) = VBASES_CACHE.lock().unwrap().get(&key) {
+            crate::telemetry::count(crate::telemetry::Counter::VBasesHits, 1);
             return vb.clone();
         }
+        crate::telemetry::count(crate::telemetry::Counter::VBasesMisses, 1);
         let mut glabel = label.to_vec();
         glabel.extend_from_slice(b"/G");
         let big_g = crate::curve::derive_generators(&glabel, 2 * n * width);
@@ -622,6 +627,7 @@ pub fn prove_validity(
     transcript: &mut Transcript,
     rng: &mut Rng,
 ) -> ValidityProof {
+    crate::span!("zkrelu/prove_validity");
     let n = bases.n;
     let width = bases.width;
     let layout = &bases.layout;
@@ -714,6 +720,7 @@ pub fn verify_validity_accum(
     transcript: &mut Transcript,
     acc: &mut MsmAccumulator,
 ) -> Result<()> {
+    crate::span!("zkrelu/verify_validity");
     let n = bases.n;
     let width = bases.width;
     let layout = &bases.layout;
