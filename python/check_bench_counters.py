@@ -1,0 +1,203 @@
+#!/usr/bin/env python3
+"""CI guard: deterministic MSM-counter regression check for zkdl bench JSONs.
+
+Wall-clock numbers in a ``BENCH_*.json`` are machine-dependent and noisy, so
+CI cannot gate on them. The MSM counters are different: for a fixed grid
+config (width/batch/data_rows/seed) the number of MSM invocations, the points
+fed to them, and the accumulator flush/equation counts are structural
+properties of the protocol — byte-identical across machines. A drift in any
+of them means the proving system itself changed shape, which must be a
+conscious decision (re-record the baseline), never an accident.
+
+Usage:
+    python3 python/check_bench_counters.py NEW.json [BASELINE.json]
+
+BASELINE defaults to ``BENCH_counters_quick.json`` in the repo root. If the
+baseline file does not exist the check is a no-op bootstrap: it prints the
+command that records one and exits 0, so the guard can be committed before
+the first recorded baseline exists.
+
+Exit codes: 0 ok / baseline missing (bootstrap), 1 counter drift or config
+mismatch, 2 usage or unreadable input.
+"""
+
+import json
+import os
+import sys
+
+SCHEMA = "zkdl/bench/v1"
+
+# Structural (machine-independent) per-case fields, checked for exact
+# equality. prove_s / verify_s / wall_s are deliberately absent.
+COUNTER_KEYS = (
+    "prove_calls",
+    "prove_points",
+    "verify_calls",
+    "verify_points",
+    "verify_flushes",
+    "verify_equations",
+)
+CONFIG_KEYS = ("width", "batch", "data_rows", "seed")
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check_bench_counters: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def case_key(case):
+    return (case["variant"], case["steps"], case["depth"])
+
+
+def compare(new, old, baseline_path):
+    errors = []
+    for doc, name in ((new, "new report"), (old, "baseline")):
+        if doc.get("schema") != SCHEMA:
+            errors.append(f"{name}: schema {doc.get('schema')!r}, expected {SCHEMA!r}")
+    if errors:
+        return errors
+
+    new_cfg = {k: new.get("config", {}).get(k) for k in CONFIG_KEYS}
+    old_cfg = {k: old.get("config", {}).get(k) for k in CONFIG_KEYS}
+    if new_cfg != old_cfg:
+        return [
+            "grid config mismatch — counters are only comparable for identical "
+            f"configs: new {new_cfg} vs baseline {old_cfg}"
+        ]
+
+    old_cases = {case_key(c): c for c in old.get("cases", [])}
+    compared = 0
+    for c in new.get("cases", []):
+        key = case_key(c)
+        base = old_cases.pop(key, None)
+        label = "variant={} T={} depth={}".format(*key)
+        if base is None:
+            errors.append(f"{label}: cell missing from baseline")
+            continue
+        if (c.get("skipped") is None) != (base.get("skipped") is None):
+            errors.append(
+                f"{label}: skip status changed "
+                f"(new={c.get('skipped')!r}, baseline={base.get('skipped')!r})"
+            )
+            continue
+        if c.get("skipped") is not None:
+            continue
+        for field in COUNTER_KEYS:
+            nv = c.get("msm", {}).get(field)
+            ov = base.get("msm", {}).get(field)
+            if nv != ov:
+                errors.append(f"{label}: msm.{field} {ov} -> {nv}")
+        if c.get("proof_bytes") != base.get("proof_bytes"):
+            errors.append(
+                f"{label}: proof_bytes {base.get('proof_bytes')} -> {c.get('proof_bytes')}"
+            )
+        compared += 1
+    for key in old_cases:
+        errors.append("variant={} T={} depth={}: cell missing from new report".format(*key))
+
+    if errors:
+        errors.append(
+            "counter drift means the protocol changed shape; if intentional, "
+            f"re-record the baseline: zkdl bench --quick --data-n 32 --out {baseline_path}"
+        )
+    else:
+        print(f"bench counters ok: {compared} measured cell(s) match {baseline_path}")
+    return errors
+
+
+def self_test():
+    base = {
+        "schema": SCHEMA,
+        "config": {"width": 16, "batch": 8, "data_rows": 32, "seed": 2662},
+        "cases": [
+            {
+                "variant": "plain",
+                "steps": 1,
+                "depth": 2,
+                "skipped": None,
+                "proof_bytes": 4096,
+                "msm": {
+                    "prove_calls": 10,
+                    "prove_points": 1000,
+                    "verify_calls": 1,
+                    "verify_points": 500,
+                    "verify_flushes": 1,
+                    "verify_equations": 7,
+                },
+            },
+            {
+                "variant": "chained",
+                "steps": 1,
+                "depth": 2,
+                "skipped": "chained trace needs T >= 2",
+                "proof_bytes": 0,
+                "msm": {k: 0 for k in COUNTER_KEYS},
+            },
+        ],
+    }
+    assert compare(base, base, "b.json") == []
+
+    import copy
+
+    drift = copy.deepcopy(base)
+    drift["cases"][0]["msm"]["verify_points"] = 501
+    errs = compare(drift, base, "b.json")
+    assert any("verify_points 500 -> 501" in e for e in errs), errs
+
+    resized = copy.deepcopy(base)
+    resized["cases"][0]["proof_bytes"] = 4128
+    errs = compare(resized, base, "b.json")
+    assert any("proof_bytes 4096 -> 4128" in e for e in errs), errs
+
+    unskipped = copy.deepcopy(base)
+    unskipped["cases"][1]["skipped"] = None
+    errs = compare(unskipped, base, "b.json")
+    assert any("skip status changed" in e for e in errs), errs
+
+    missing = copy.deepcopy(base)
+    missing["cases"].pop(0)
+    errs = compare(missing, base, "b.json")
+    assert any("missing from new report" in e for e in errs), errs
+
+    other_cfg = copy.deepcopy(base)
+    other_cfg["config"]["width"] = 32
+    errs = compare(other_cfg, base, "b.json")
+    assert any("config mismatch" in e for e in errs), errs
+
+    bad_schema = copy.deepcopy(base)
+    bad_schema["schema"] = "zkdl/other"
+    errs = compare(bad_schema, base, "b.json")
+    assert any("schema" in e for e in errs), errs
+
+    print("check_bench_counters self-test ok")
+
+
+def main(argv):
+    if len(argv) >= 2 and argv[1] == "--self-test":
+        self_test()
+        return 0
+    if len(argv) < 2 or len(argv) > 3:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    new_path = argv[1]
+    baseline_path = argv[2] if len(argv) == 3 else "BENCH_counters_quick.json"
+    if not os.path.exists(baseline_path):
+        print(
+            f"check_bench_counters: no baseline at {baseline_path} — skipping "
+            "(bootstrap). Record one on a trusted run with:\n"
+            f"    zkdl bench --quick --data-n 32 --out {baseline_path}\n"
+            "and commit it to enable the regression gate."
+        )
+        return 0
+    errors = compare(load(new_path), load(baseline_path), baseline_path)
+    for e in errors:
+        print(f"check_bench_counters: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

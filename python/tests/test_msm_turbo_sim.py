@@ -1,0 +1,279 @@
+"""Simulation of the zkTurbo MSM algorithms (rust/src/curve/msm.rs,
+rust/src/curve/fixed.rs) over the real BN254 parameters.
+
+The Rust implementations are mirrored step for step:
+
+* batch-affine bucket accumulation — counting-sort points into buckets,
+  then pairwise tree reduction where every sweep resolves all pair
+  denominators with ONE batched inversion (Montgomery's trick), with the
+  affine special cases (equal points -> doubling denominator 2y, inverse
+  points -> the pair cancels to identity and is dropped);
+* Pippenger over those bucket passes (running-sum combine + Horner);
+* the FixedBaseTable decomposition: shifted copies 2^{jw}·P_i stored per
+  window so a fixed-base MSM is ONE bucket pass over n·ceil(256/w) terms
+  with w-bit digits and no doublings;
+* 64-bit fragment windowing for msm_u64.
+
+Run: python3 python/tests/test_msm_turbo_sim.py
+"""
+
+import random
+
+# BN254 G1: y^2 = x^3 + 3 over F_p, scalar field of size R.
+P = 21888242871839275222246405745257275088696311157297823662689037894645226208583
+R = 21888242871839275222246405745257275088548364400416034343698204186575808495617
+GEN = (1, 2)
+INF = None  # identity
+
+
+def add(p, q):
+    """Reference affine addition (per-point inversion)."""
+    if p is INF:
+        return q
+    if q is INF:
+        return p
+    x1, y1 = p
+    x2, y2 = q
+    if x1 == x2:
+        if (y1 + y2) % P == 0:
+            return INF
+        lam = (3 * x1 * x1) * pow(2 * y1, P - 2, P) % P
+    else:
+        lam = (y2 - y1) * pow(x2 - x1, P - 2, P) % P
+    x3 = (lam * lam - x1 - x2) % P
+    y3 = (lam * (x1 - x3) - y1) % P
+    return (x3, y3)
+
+
+def neg(p):
+    return INF if p is INF else (p[0], (-p[1]) % P)
+
+
+def scalar_mul(p, k):
+    acc = INF
+    q = p
+    while k:
+        if k & 1:
+            acc = add(acc, q)
+        q = add(q, q)
+        k >>= 1
+    return acc
+
+
+def naive_msm(points, scalars):
+    acc = INF
+    for p, s in zip(points, scalars):
+        acc = add(acc, scalar_mul(p, s % R))
+    return acc
+
+
+def batch_invert(values):
+    """Montgomery's trick, zeros skipped — mirrors field::batch_invert."""
+    prods, acc = [], 1
+    for v in values:
+        prods.append(acc)
+        if v % P != 0:
+            acc = acc * v % P
+    inv = pow(acc, P - 2, P)
+    out = list(values)
+    for i in reversed(range(len(values))):
+        if values[i] % P != 0:
+            out[i] = inv * prods[i] % P
+            inv = inv * values[i] % P
+    return out
+
+
+def batch_affine_bucket_sums(num_buckets, entries):
+    """entries: list of (bucket_index >= 1, affine point). Returns the list
+    of per-bucket sums (index 0 <-> bucket 1), reduced via batched-inverse
+    sweeps — the exact algorithm of msm.rs::bucket_sums_batch_affine."""
+    buckets = [[] for _ in range(num_buckets)]
+    for idx, pt in entries:
+        assert 1 <= idx <= num_buckets
+        if pt is not INF:
+            buckets[idx - 1].append(pt)
+    sweeps = 0
+    while any(len(b) >= 2 for b in buckets):
+        sweeps += 1
+        # Collect one addition per adjacent pair in every bucket.
+        pairs = []  # (bucket, slot, p, q) with q = None marking a cancel
+        denoms = []
+        for bi, b in enumerate(buckets):
+            for k in range(0, len(b) - 1, 2):
+                pp, qq = b[k], b[k + 1]
+                if pp[0] == qq[0] and (pp[1] + qq[1]) % P == 0:
+                    pairs.append((bi, k, None, None))  # P + (-P) = identity
+                    denoms.append(0)  # skipped by batch_invert
+                elif pp == qq:
+                    pairs.append((bi, k, pp, qq))
+                    denoms.append(2 * pp[1] % P)  # doubling: lam = 3x^2 / 2y
+                else:
+                    pairs.append((bi, k, pp, qq))
+                    denoms.append((qq[0] - pp[0]) % P)
+        inv = batch_invert(denoms)
+        new_buckets = [[] for _ in range(num_buckets)]
+        cursor = 0
+        for bi, b in enumerate(buckets):
+            npairs = len(b) // 2
+            for _ in range(npairs):
+                (pbi, k, pp, qq) = pairs[cursor]
+                assert pbi == bi
+                d = inv[cursor]
+                cursor += 1
+                if pp is None:
+                    continue  # cancelled pair contributes identity
+                x1, y1 = pp
+                if pp == qq:
+                    lam = 3 * x1 * x1 * d % P
+                else:
+                    lam = (qq[1] - y1) * d % P
+                x3 = (lam * lam - x1 - qq[0]) % P
+                y3 = (lam * (x1 - x3) - y1) % P
+                new_buckets[bi].append((x3, y3))
+            if len(b) % 2 == 1:
+                new_buckets[bi].append(b[-1])
+        buckets = new_buckets
+    return [b[0] if b else INF for b in buckets], sweeps
+
+
+def bucket_pass(num_buckets, entries):
+    """Bucket sums -> running-sum combine: sum idx·bucket[idx]."""
+    sums, _sweeps = batch_affine_bucket_sums(num_buckets, entries)
+    running, acc = INF, INF
+    for b in reversed(sums):
+        running = add(running, b)
+        acc = add(acc, running)
+    return acc
+
+
+def pippenger(points, scalars, w):
+    """Variable-base MSM with batch-affine windows (msm.rs::msm)."""
+    nwin = (256 + w - 1) // w
+    window_sums = []
+    for wi in range(nwin):
+        shift = wi * w
+        entries = []
+        for p, s in zip(points, scalars):
+            idx = (s >> shift) & ((1 << w) - 1)
+            if idx and p is not INF:
+                entries.append((idx, p))
+        window_sums.append(bucket_pass((1 << w) - 1, entries))
+    total = INF
+    for ws in reversed(window_sums):
+        for _ in range(w):
+            total = add(total, total)
+        total = add(total, ws)
+    return total
+
+
+def fixed_table(points, w, bits=256):
+    """FixedBaseTable::build — shifted[j][i] = 2^{jw}·P_i."""
+    nwin = (bits + w - 1) // w
+    shifted = []
+    cur = list(points)
+    for j in range(nwin):
+        shifted.append(list(cur))
+        if j + 1 < nwin:
+            for _ in range(w):
+                cur = [add(p, p) for p in cur]
+    return shifted
+
+
+def fixed_msm(shifted, scalars, w):
+    """FixedBaseTable::msm_range — one bucket pass, no doublings."""
+    entries = []
+    for j, row in enumerate(shifted):
+        shift = j * w
+        for i, s in enumerate(scalars):
+            idx = (s >> shift) & ((1 << w) - 1)
+            if idx:
+                entries.append((idx, row[i]))
+    return bucket_pass((1 << w) - 1, entries)
+
+
+def msm_u64(points, scalars, w):
+    """64-bit fragment windowing (msm.rs::msm_u64): ceil(64/w) windows."""
+    nwin = (64 + w - 1) // w
+    window_sums = []
+    for wi in range(nwin):
+        shift = wi * w
+        entries = []
+        for p, s in zip(points, scalars):
+            idx = (s >> shift) & ((1 << w) - 1)
+            if idx and p is not INF:
+                entries.append((idx, p))
+        window_sums.append(bucket_pass((1 << w) - 1, entries))
+    total = INF
+    for ws in reversed(window_sums):
+        for _ in range(w):
+            total = add(total, total)
+        total = add(total, ws)
+    return total
+
+
+def random_point(rng):
+    return scalar_mul(GEN, rng.randrange(1, R))
+
+
+def main():
+    rng = random.Random(0x7e57)
+
+    # --- batch-affine bucket reduction edge cases ---
+    p1 = random_point(rng)
+    p2 = random_point(rng)
+    # equal points in one bucket -> doubling path
+    sums, _ = batch_affine_bucket_sums(3, [(1, p1), (1, p1)])
+    assert sums[0] == add(p1, p1), "doubling case"
+    # inverse points -> pair cancels to identity
+    sums, _ = batch_affine_bucket_sums(3, [(2, p1), (2, neg(p1))])
+    assert sums[1] is INF, "cancellation case"
+    # odd leftovers + cancellation interleaved
+    sums, _ = batch_affine_bucket_sums(3, [(3, p1), (3, neg(p1)), (3, p2)])
+    assert sums[2] == p2, "cancel + leftover"
+    # many duplicates (forces multiple sweeps incl. repeated doublings)
+    sums, sweeps = batch_affine_bucket_sums(1, [(1, p1)] * 9)
+    assert sums[0] == scalar_mul(p1, 9), "9 duplicates"
+    assert sweeps == 4, f"ceil(log2(9)) sweeps, got {sweeps}"
+    print("batch-affine edge cases ok")
+
+    # --- Pippenger vs naive (mixed edge-case inputs) ---
+    for n, w in [(5, 4), (17, 5), (33, 8)]:
+        pts = [random_point(rng) for _ in range(n)]
+        scs = [rng.randrange(R) for _ in range(n)]
+        scs[0] = 0
+        pts[1] = INF if n > 1 else pts[1]
+        if n > 3:
+            pts[3] = pts[2]          # duplicate base
+            scs[3] = scs[2]          # same scalar -> same bucket every window
+        assert pippenger(pts, scs, w) == naive_msm(pts, scs), f"msm n={n} w={w}"
+    print("pippenger (batch-affine windows) matches naive")
+
+    # --- fixed-base table across window sizes, incl. prefix slices ---
+    n = 9
+    pts = [random_point(rng) for _ in range(n)]
+    scs = [rng.randrange(R) for _ in range(n)]
+    scs[4] = 1
+    scs[5] = R - 1  # max scalar exercises the top window
+    want = naive_msm(pts, scs)
+    for w in (4, 8, 13, 16):
+        shifted = fixed_table(pts, w)
+        assert fixed_msm(shifted, scs, w) == want, f"fixed w={w}"
+        # prefix evaluation: table rows beyond len(scalars) unused
+        k = 6
+        wk = naive_msm(pts[:k], scs[:k])
+        assert fixed_msm([row[:k] for row in shifted], scs[:k], w) == wk
+    print("fixed-base table matches naive across window sizes")
+
+    # --- 64-bit fragment windowing ---
+    pts = [random_point(rng) for _ in range(12)]
+    scs = [rng.randrange(1 << 64) for _ in range(12)]
+    scs[0] = 0
+    scs[1] = (1 << 64) - 1
+    for w in (3, 5, 8):
+        assert msm_u64(pts, scs, w) == naive_msm(pts, scs), f"u64 w={w}"
+    print("64-bit fragment windowing matches naive")
+    print("all msm-turbo simulations pass")
+
+
+if __name__ == "__main__":
+    main()

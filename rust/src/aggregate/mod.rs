@@ -30,14 +30,14 @@ use crate::commit::{ComExpr, CommitKey};
 use crate::curve::accum::MsmAccumulator;
 use crate::curve::{G1, G1Affine};
 use crate::field::Fr;
-use crate::gkr;
 use crate::ipa::{self, EvalClaim, IpaProof};
 use crate::model::ModelConfig;
-use crate::poly::{eq_eval, eq_table, Mle};
+use crate::poly::{self, eq_eval, eq_table, eval_i64_with_eq, Mle};
 use crate::provenance::{self, ProvenanceCommitments, ProvenanceKey, ProvenanceProof, ProverDataset};
 use crate::sumcheck::{self, Instance, SumcheckProof, Term};
 use crate::transcript::Transcript;
 use crate::update::{self, ChainProof, LrSchedule, UpdateKey, UpdateRule};
+use crate::util::arena::FrArena;
 use crate::util::rng::Rng;
 use crate::witness::StepWitness;
 use crate::zkdl::{
@@ -77,25 +77,29 @@ impl TraceKey {
         assert!(steps >= 1);
         let (_, _, n) = trace_stack_dims(&cfg, steps);
         let d2 = cfg.width * cfg.width;
-        Self {
+        let key = Self {
             cfg,
             steps,
             g_aux: CommitKey::setup(b"zkdl/trace-aux", n),
             g_mat: CommitKey::setup(b"zkdl/mat", d2),
             g_x: CommitKey::setup(b"zkdl/x", cfg.d_size()),
-        }
+        };
+        // fixed-base tables: built here (setup, outside any proved/timed
+        // region), hit by every block commit, stacking commit, and IPA
+        // round across all T steps
+        key.g_aux.warm_table();
+        key.g_mat.warm_table();
+        key.g_x.warm_table();
+        key
     }
 
-    /// Commitment key slice for step t / layer ℓ's aux block.
+    /// Commitment key slice for step t / layer ℓ's aux block. Shares the
+    /// stacked basis' fixed-base table via the slice offset.
     pub fn block(&self, t: usize, l: usize) -> CommitKey {
         let d = self.cfg.d_size();
         let lbar = self.cfg.depth.next_power_of_two();
         let s = t * lbar + l;
-        CommitKey {
-            g: self.g_aux.g[s * d..(s + 1) * d].to_vec(),
-            h: self.g_aux.h,
-            label: self.g_aux.label.clone(),
-        }
+        self.g_aux.slice(s * d, (s + 1) * d)
     }
 }
 
@@ -544,23 +548,31 @@ pub(crate) fn prove_trace_with_parts(
     let mm_span = crate::telemetry::maybe_span("aggregate/matmul_sumcheck");
     let ch = draw_group_challenges(&mut tr, log_b, log_d);
 
+    // One arena backs the per-loop eq tables below: the point's eq table
+    // is computed once per challenge point into reused scratch (instead of
+    // materializing a fresh Fr matrix + eq table per (t, ℓ) — 2·T·L·b·d
+    // transient allocations in the old shape).
+    let mut arena = FrArena::new();
+
     // (30): Z̃_t^ℓ(u_zr,u_zc) for every (t, ℓ), γ-folded step-major.
     let pz: Vec<Fr> = [ch.u_zr.clone(), ch.u_zc.clone()].concat();
     let mut v_z = Vec::with_capacity(t_steps * depth);
     let mut terms30 = Vec::new();
     let mut coeff = Fr::ONE;
-    for (t, pl) in pls.iter().enumerate() {
-        for l in 0..depth {
-            let z_mat = gkr::Matrix::from_i64(&wits[t].layers[l].z, cfg.batch, cfg.width);
-            v_z.push(z_mat.evaluate(&pz));
-            let a_prev = if l == 0 { &pl.x } else { &pl.a[l - 1] };
-            terms30.push(Term::new(
-                coeff,
-                vec![a_prev.fix_rows(&ch.u_zr), pl.w[l].transpose().fix_rows(&ch.u_zc)],
-            ));
-            coeff *= ch.gamma;
+    arena.scratch(1 << pz.len(), |eq_pz| {
+        poly::eq_table_into(&pz, eq_pz);
+        for (t, pl) in pls.iter().enumerate() {
+            for l in 0..depth {
+                v_z.push(eval_i64_with_eq(&wits[t].layers[l].z, eq_pz));
+                let a_prev = if l == 0 { &pl.x } else { &pl.a[l - 1] };
+                terms30.push(Term::new(
+                    coeff,
+                    vec![a_prev.fix_rows(&ch.u_zr), pl.w[l].transpose().fix_rows(&ch.u_zc)],
+                ));
+                coeff *= ch.gamma;
+            }
         }
-    }
+    });
     tr.absorb_frs(b"v_z", &v_z);
     let out30 = sumcheck::prove(Instance::new(terms30), &mut tr);
     let mm30_evals: Vec<(Fr, Fr)> = out30.factor_evals.iter().map(|f| (f[0], f[1])).collect();
@@ -579,24 +591,25 @@ pub(crate) fn prove_trace_with_parts(
     if depth >= 2 {
         let mut terms33 = Vec::new();
         let mut coeff = Fr::ONE;
-        for (t, pl) in pls.iter().enumerate() {
-            for l in 0..depth - 1 {
-                let ga_mat = gkr::Matrix::from_i64(
-                    wits[t].layers[l].g_a.as_ref().unwrap(),
-                    cfg.batch,
-                    cfg.width,
-                );
-                v_ga.push(ga_mat.evaluate(&pga));
-                terms33.push(Term::new(
-                    coeff,
-                    vec![
-                        pl.g_z[l + 1].fix_rows(&ch.u_gar),
-                        pl.w[l + 1].fix_rows(&ch.u_gac),
-                    ],
-                ));
-                coeff *= ch.gamma;
+        arena.scratch(1 << pga.len(), |eq_pga| {
+            poly::eq_table_into(&pga, eq_pga);
+            for (t, pl) in pls.iter().enumerate() {
+                for l in 0..depth - 1 {
+                    v_ga.push(eval_i64_with_eq(
+                        wits[t].layers[l].g_a.as_ref().unwrap(),
+                        eq_pga,
+                    ));
+                    terms33.push(Term::new(
+                        coeff,
+                        vec![
+                            pl.g_z[l + 1].fix_rows(&ch.u_gar),
+                            pl.w[l + 1].fix_rows(&ch.u_gac),
+                        ],
+                    ));
+                    coeff *= ch.gamma;
+                }
             }
-        }
+        });
         tr.absorb_frs(b"v_ga", &v_ga);
         let out33 = sumcheck::prove(Instance::new(terms33), &mut tr);
         mm33_evals = out33.factor_evals.iter().map(|f| (f[0], f[1])).collect();
@@ -613,21 +626,23 @@ pub(crate) fn prove_trace_with_parts(
     let mut v_gw = Vec::with_capacity(t_steps * depth);
     let mut terms34 = Vec::new();
     let mut coeff = Fr::ONE;
-    for (t, pl) in pls.iter().enumerate() {
-        for l in 0..depth {
-            let gw_mat = gkr::Matrix::from_i64(&wits[t].layers[l].g_w, cfg.width, cfg.width);
-            v_gw.push(gw_mat.evaluate(&pgw));
-            let a_prev = if l == 0 { &pl.x } else { &pl.a[l - 1] };
-            terms34.push(Term::new(
-                coeff,
-                vec![
-                    pl.g_z[l].transpose().fix_rows(&ch.u_gwr),
-                    a_prev.transpose().fix_rows(&ch.u_gwc),
-                ],
-            ));
-            coeff *= ch.gamma;
+    arena.scratch(1 << pgw.len(), |eq_pgw| {
+        poly::eq_table_into(&pgw, eq_pgw);
+        for (t, pl) in pls.iter().enumerate() {
+            for l in 0..depth {
+                v_gw.push(eval_i64_with_eq(&wits[t].layers[l].g_w, eq_pgw));
+                let a_prev = if l == 0 { &pl.x } else { &pl.a[l - 1] };
+                terms34.push(Term::new(
+                    coeff,
+                    vec![
+                        pl.g_z[l].transpose().fix_rows(&ch.u_gwr),
+                        a_prev.transpose().fix_rows(&ch.u_gwc),
+                    ],
+                ));
+                coeff *= ch.gamma;
+            }
         }
-    }
+    });
     tr.absorb_frs(b"v_gw", &v_gw);
     let out34 = sumcheck::prove(Instance::new(terms34), &mut tr);
     let mm34_evals: Vec<(Fr, Fr)> = out34.factor_evals.iter().map(|f| (f[0], f[1])).collect();

@@ -11,6 +11,7 @@
 //! derivation itself is a measurable cost and the paper amortizes it as a
 //! one-time setup.
 
+use crate::curve::fixed::{self, FixedBaseTable, TableHandle};
 use crate::curve::{derive_generators, msm::msm, G1Affine, G1};
 use crate::field::Fr;
 use crate::util::rng::Rng;
@@ -19,11 +20,21 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 
 /// A commitment key: vector basis `g` plus blinding base `h`.
+///
+/// Keys optionally carry a lazily-built [`FixedBaseTable`] over their full
+/// basis (see [`CommitKey::warm_table`]); key slices share the parent's
+/// handle with an offset, so a block commit against a slice of the stacked
+/// aux basis hits the one table built at key setup.
 #[derive(Clone, Debug)]
 pub struct CommitKey {
     pub g: Vec<G1Affine>,
     pub h: G1Affine,
     pub label: Vec<u8>,
+    /// Shared fixed-base table slot (empty until [`Self::warm_table`]).
+    table: TableHandle,
+    /// Position of `g[0]` within the basis the table was (or would be)
+    /// built over — nonzero only for keys produced by [`Self::slice`].
+    table_offset: usize,
 }
 
 static KEY_CACHE: Lazy<Mutex<HashMap<(Vec<u8>, usize), CommitKey>>> =
@@ -49,10 +60,15 @@ impl CommitKey {
                 .map(|(_, k)| k)
             {
                 telemetry::count(Counter::CommitKeyHits, 1);
+                // share the longer key's table handle: the prefix starts
+                // at offset 0 of the same derived basis, and table lookups
+                // are length-guarded
                 return CommitKey {
                     g: k.g[..n].to_vec(),
                     h: k.h,
                     label: label.to_vec(),
+                    table: k.table.clone(),
+                    table_offset: 0,
                 };
             }
         }
@@ -65,12 +81,28 @@ impl CommitKey {
             g,
             h,
             label: label.to_vec(),
+            table: TableHandle::default(),
+            table_offset: 0,
         };
         KEY_CACHE
             .lock()
             .unwrap()
             .insert((label.to_vec(), n), key.clone());
         key
+    }
+
+    /// Assemble a key from explicit bases — for ad-hoc composed bases
+    /// (e.g. a stacked key concatenated from block slices). Starts with an
+    /// empty table slot; call [`Self::warm_table`] if the composition is
+    /// long-lived.
+    pub fn from_parts(g: Vec<G1Affine>, h: G1Affine, label: Vec<u8>) -> Self {
+        CommitKey {
+            g,
+            h,
+            label,
+            table: TableHandle::default(),
+            table_offset: 0,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -81,15 +113,61 @@ impl CommitKey {
         self.g.is_empty()
     }
 
+    /// Build this key's fixed-base table if eligible (full-basis key, at
+    /// most [`fixed::MAX_POINTS`] points). Call from key *setup* paths so
+    /// the build cost lands outside proved/timed regions; every clone and
+    /// slice of the key (including the cached copy) sees the warm table.
+    pub fn warm_table(&self) {
+        if self.table_offset == 0 && !self.g.is_empty() && self.g.len() <= fixed::MAX_POINTS {
+            self.table.get_or_build(&self.g);
+        }
+    }
+
+    /// Shared table handle (for the one-MSM accumulator's fixed blocks).
+    pub(crate) fn table_handle(&self) -> &TableHandle {
+        &self.table
+    }
+
+    /// The warm table covering a `len`-scalar query against this key,
+    /// with this key's offset into it — `None` if no table was built or
+    /// it is too short (a shorter prefix key may have built it first).
+    pub(crate) fn table_for(&self, len: usize) -> Option<(&FixedBaseTable, usize)> {
+        let t = self.table.get()?;
+        (self.table_offset + len <= t.len()).then_some((t, self.table_offset))
+    }
+
+    /// Σᵢ scalars[i]·g[i] over the basis prefix, via the fixed-base table
+    /// when warm (counted as `msm/table_hits`) and plain Pippenger
+    /// otherwise. All commitment MSMs route through here.
+    pub fn msm_prefix(&self, scalars: &[Fr]) -> G1 {
+        assert!(scalars.len() <= self.g.len(), "commit key too short");
+        match self.table_for(scalars.len()) {
+            Some((t, off)) => t.msm_range(off, scalars),
+            None => msm(&self.g[..scalars.len()], scalars),
+        }
+    }
+
     /// Commit to `values` (≤ key length; implicitly zero-padded) with
     /// blinding `r`.
     pub fn commit(&self, values: &[Fr], r: Fr) -> G1 {
-        assert!(values.len() <= self.g.len(), "commit key too short");
-        let mut acc = msm(&self.g[..values.len()], values);
+        let mut acc = self.msm_prefix(values);
         if !r.is_zero() {
             acc = acc.add(&self.h.to_projective().mul(&r));
         }
         acc
+    }
+
+    /// The sub-key over `g[start..end]` (same `h`, same label). Shares the
+    /// parent's table handle with an adjusted offset, so slice commits hit
+    /// the parent's table.
+    pub fn slice(&self, start: usize, end: usize) -> CommitKey {
+        CommitKey {
+            g: self.g[start..end].to_vec(),
+            h: self.h,
+            label: self.label.clone(),
+            table: self.table.clone(),
+            table_offset: self.table_offset + start,
+        }
     }
 
     /// Deterministic commitment (r = 0) — used for data-point commitments
@@ -106,18 +184,7 @@ impl CommitKey {
 
     /// Split into two half keys (for IPA recursion bases).
     pub fn split_at(&self, mid: usize) -> (CommitKey, CommitKey) {
-        (
-            CommitKey {
-                g: self.g[..mid].to_vec(),
-                h: self.h,
-                label: self.label.clone(),
-            },
-            CommitKey {
-                g: self.g[mid..].to_vec(),
-                h: self.h,
-                label: self.label.clone(),
-            },
-        )
+        (self.slice(0, mid), self.slice(mid, self.g.len()))
     }
 }
 
@@ -236,6 +303,48 @@ mod tests {
         assert_ne!(
             ck.commit(&a, Fr::from_u64(1)),
             ck.commit(&a, Fr::from_u64(2))
+        );
+    }
+
+    #[test]
+    fn warm_table_matches_cold_commits() {
+        let ck = CommitKey::setup(b"tabletest", 32);
+        let mut r = rng();
+        let a: Vec<Fr> = (0..32).map(|_| Fr::random(&mut r)).collect();
+        let blind = Fr::random(&mut r);
+        let cold_full = ck.commit(&a, blind);
+        let cold_prefix = ck.commit(&a[..9], blind);
+        let cold_slice = ck.slice(4, 20).commit(&a[4..20], blind);
+        ck.warm_table();
+        assert!(ck.table_handle().is_warm());
+        assert_eq!(ck.commit(&a, blind), cold_full);
+        assert_eq!(ck.commit(&a[..9], blind), cold_prefix);
+        // a slice taken after warming shares the table via its offset
+        assert_eq!(ck.slice(4, 20).commit(&a[4..20], blind), cold_slice);
+        // split halves too (IPA recursion bases)
+        let (lo, hi) = ck.split_at(16);
+        assert_eq!(
+            lo.commit(&a[..16], Fr::ZERO).add(&hi.commit(&a[16..], Fr::ZERO)),
+            ck.commit(&a, Fr::ZERO)
+        );
+    }
+
+    #[test]
+    fn short_table_guard_falls_back() {
+        // Warm a shorter prefix key first: the longer key shares the
+        // handle but must fall back to plain Pippenger rather than query
+        // past the table's end.
+        let big = CommitKey::setup(b"tableguard", 16);
+        let small = CommitKey::setup(b"tableguard", 8);
+        small.warm_table();
+        assert!(big.table_handle().is_warm());
+        assert!(big.table_for(16).is_none());
+        assert!(small.table_for(8).is_some());
+        let mut r = rng();
+        let a: Vec<Fr> = (0..16).map(|_| Fr::random(&mut r)).collect();
+        assert_eq!(
+            big.commit(&a, Fr::ZERO),
+            crate::curve::msm::msm(&big.g, &a)
         );
     }
 

@@ -21,7 +21,9 @@
 //! [`begin_equation`]: MsmAccumulator::begin_equation
 //! [`set_scale`]: MsmAccumulator::set_scale
 
+use super::fixed::TableHandle;
 use super::{msm::msm, G1, G1Affine};
+use crate::commit::CommitKey;
 use crate::field::Fr;
 use crate::telemetry::{self, Counter};
 use crate::util::rng::Rng;
@@ -33,6 +35,12 @@ use std::collections::HashMap;
 struct FixedBlock {
     points: Vec<G1Affine>,
     scalars: Vec<Fr>,
+    /// Warm fixed-base table covering this block (handle + offset of
+    /// `points[0]` in the table), recorded when the block was pushed via
+    /// [`MsmAccumulator::push_fixed_key`]. At flush the block is then
+    /// evaluated through the table and joins the final MSM as a single
+    /// projective term instead of `points.len()` fresh Pippenger inputs.
+    table: Option<(TableHandle, usize)>,
 }
 
 /// Collects deferred Σ sᵢ·Pᵢ = 𝒪 checks and decides them with one MSM.
@@ -148,6 +156,28 @@ impl MsmAccumulator {
     /// (Merging identical slices is always sound: Σ s·P + Σ s′·P =
     /// Σ (s+s′)·P regardless of which equations the terms came from.)
     pub fn push_fixed(&mut self, bases: &[G1Affine], scalars: &[Fr]) {
+        self.push_fixed_inner(bases, scalars, None);
+    }
+
+    /// [`Self::push_fixed`] against a commitment key's basis prefix. When
+    /// the key carries a warm [`FixedBaseTable`](super::fixed::FixedBaseTable)
+    /// covering the prefix, the block is tagged with it and evaluated
+    /// through the table at flush time — the one-MSM shape (a single
+    /// [`msm`] per flush) is unchanged; the table result enters it as one
+    /// projective term.
+    pub fn push_fixed_key(&mut self, ck: &CommitKey, scalars: &[Fr]) {
+        let table = ck
+            .table_for(scalars.len())
+            .map(|(_, off)| (ck.table_handle().clone(), off));
+        self.push_fixed_inner(&ck.g[..scalars.len()], scalars, table);
+    }
+
+    fn push_fixed_inner(
+        &mut self,
+        bases: &[G1Affine],
+        scalars: &[Fr],
+        table: Option<(TableHandle, usize)>,
+    ) {
         assert_eq!(bases.len(), scalars.len(), "accumulator block mismatch");
         if bases.is_empty() {
             return;
@@ -164,6 +194,9 @@ impl MsmAccumulator {
                 for (acc_s, s) in self.blocks[bi].scalars.iter_mut().zip(scalars.iter()) {
                     *acc_s += cur * *s;
                 }
+                if self.blocks[bi].table.is_none() {
+                    self.blocks[bi].table = table;
+                }
             }
             None => {
                 telemetry::count(Counter::MsmFixedBlocksNew, 1);
@@ -171,6 +204,7 @@ impl MsmAccumulator {
                 self.blocks.push(FixedBlock {
                     points: bases.to_vec(),
                     scalars: scalars.iter().map(|s| cur * *s).collect(),
+                    table,
                 });
                 self.block_index.entry(key).or_default().push(bi);
             }
@@ -178,17 +212,32 @@ impl MsmAccumulator {
     }
 
     fn run_msm(&mut self) {
+        // Table-backed blocks first: each evaluates through its fixed-base
+        // table into ONE projective term (normalized with the rest below);
+        // untabled blocks feed the final MSM point-by-point as before.
+        for blk in self.blocks.drain(..) {
+            let evaluated = blk.table.as_ref().and_then(|(h, off)| {
+                let t = h.get()?;
+                (off + blk.points.len() <= t.len()).then(|| t.msm_range(*off, &blk.scalars))
+            });
+            match evaluated {
+                Some(r) => {
+                    self.proj_points.push(r);
+                    self.proj_scalars.push(Fr::ONE);
+                }
+                None => {
+                    self.points.extend(blk.points);
+                    self.scalars.extend(blk.scalars);
+                }
+            }
+        }
+        self.block_index.clear();
         if !self.proj_points.is_empty() {
             let affine = G1::batch_to_affine(&self.proj_points);
             self.points.extend(affine);
             self.scalars.append(&mut self.proj_scalars);
             self.proj_points.clear();
         }
-        for blk in self.blocks.drain(..) {
-            self.points.extend(blk.points);
-            self.scalars.extend(blk.scalars);
-        }
-        self.block_index.clear();
         let result = msm(&self.points, &self.scalars);
         self.ok &= result.is_identity();
         self.points.clear();
@@ -356,6 +405,39 @@ mod tests {
         acc2.begin_equation();
         acc2.push_fixed(&bases, &s); // same scalars, no cancelling term
         assert!(!acc2.flush());
+    }
+
+    #[test]
+    fn table_backed_blocks_flush_identically() {
+        let ck = CommitKey::setup(b"accumtable", 8);
+        ck.warm_table();
+        let mut r = rng();
+        let s: Vec<Fr> = (0..8).map(|_| Fr::random(&mut r)).collect();
+        let sum = ck.commit(&s, Fr::ZERO);
+        let mut acc = MsmAccumulator::from_rng(&mut r);
+        acc.begin_equation();
+        acc.push_fixed_key(&ck, &s);
+        acc.push_proj(-Fr::ONE, &sum);
+        // table-backed blocks still report their points as pending work
+        assert_eq!(acc.pending_terms(), 8 + 1);
+        assert!(acc.flush());
+        assert_eq!(acc.flushes(), 1);
+
+        // a violated table-backed equation must still reject
+        let mut acc2 = MsmAccumulator::from_rng(&mut r);
+        acc2.begin_equation();
+        acc2.push_fixed_key(&ck, &s);
+        assert!(!acc2.flush());
+
+        // and a cold key (no table) goes through the legacy block path
+        // with the same verdicts
+        let cold = CommitKey::setup(b"accumtable-cold", 8);
+        let sum2 = cold.commit(&s, Fr::ZERO);
+        let mut acc3 = MsmAccumulator::from_rng(&mut r);
+        acc3.begin_equation();
+        acc3.push_fixed_key(&cold, &s);
+        acc3.push_proj(-Fr::ONE, &sum2);
+        assert!(acc3.flush());
     }
 
     #[test]

@@ -1,0 +1,273 @@
+//! Precomputed fixed-base window tables for long-lived commitment bases.
+//!
+//! Every commitment key in the system (`CommitKey`, `UpdateKey`'s stacked
+//! basis, `ProvenanceKey`'s data/selector bases) holds points that are
+//! fixed for the lifetime of a (label, shape) pair — and the key caches
+//! already keep them alive across proofs. Plain Pippenger re-pays the
+//! window doublings on every call even though the bases never change.
+//!
+//! A [`FixedBaseTable`] stores, for each window j, the shifted copies
+//! 2^{j·w}·Pᵢ in affine form. A fixed-base MSM then becomes **one** bucket
+//! pass over n·ceil(256/w) (digit, point) entries — no doublings, no
+//! Horner combine — using the same [`MsmBackend`](super::msm::MsmBackend)
+//! bucket kernel as variable-base MSMs, so the batch-affine win applies
+//! here too.
+//!
+//! Memory/window trade-off: the table stores n·ceil(256/w) affine points
+//! (64 bytes each); the per-query cost is ~n·ceil(256/w) bucket adds plus
+//! a sparse bucket combine. Larger w shrinks the add count but grows both
+//! the table and the bucket space; the sparse descending combine in
+//! `msm::combine_bucket_sums` keeps big-w tables usable for *short* query
+//! ranges (a 128-point block commit touches at most 128·ceil(256/w)
+//! buckets, not 2^w). [`FixedBaseTable::auto_window`] picks w minimizing
+//! per-query adds + bucket traffic for the basis length; [`MAX_POINTS`]
+//! caps table construction so huge one-shot bases don't pay a build they
+//! never amortize.
+
+use super::msm::{self, BucketEntry};
+use super::{G1, G1Affine};
+use crate::field::Fr;
+use crate::telemetry::{self, Counter};
+use crate::util::threads;
+use std::sync::{Arc, OnceLock};
+
+/// Bases longer than this don't get tables: the build cost (n·256
+/// doublings) plus the memory (n·ceil(256/w)·64 bytes) stops amortizing
+/// for bases that large — at 2^14 points and w = 13 the table is ~21 MB.
+pub const MAX_POINTS: usize = 1 << 14;
+
+/// Shared, lazily-built table slot. A handle is cloned along with its key
+/// through the key caches (and through key *slices*, with an offset kept
+/// by the key), so a table is built at most once per cached (label, shape)
+/// and evicted exactly when the key itself is.
+#[derive(Clone, Debug, Default)]
+pub struct TableHandle(Arc<OnceLock<FixedBaseTable>>);
+
+impl TableHandle {
+    /// The table, if some owner of this handle has built it.
+    pub fn get(&self) -> Option<&FixedBaseTable> {
+        self.0.get()
+    }
+
+    /// Build the table over `bases` if not already built (idempotent,
+    /// thread-safe; concurrent callers block on the single build).
+    pub fn get_or_build(&self, bases: &[G1Affine]) -> &FixedBaseTable {
+        self.0.get_or_init(|| FixedBaseTable::build_auto(bases))
+    }
+
+    pub fn is_warm(&self) -> bool {
+        self.0.get().is_some()
+    }
+}
+
+/// Window table over a fixed basis: `shifted[j·n + i] = 2^{j·w}·base[i]`.
+#[derive(Clone, Debug)]
+pub struct FixedBaseTable {
+    /// Window width in bits.
+    w: usize,
+    /// Number of windows = ceil(256 / w).
+    windows: usize,
+    /// Basis length.
+    n: usize,
+    /// Row-major shifted copies, `windows` rows of `n` points.
+    shifted: Vec<G1Affine>,
+}
+
+impl FixedBaseTable {
+    /// Window width minimizing per-query work for an n-point basis
+    /// evaluated over its full length: argmin over w of
+    /// ceil(256/w)·(n + 2^w) — every window row pays its n bucket adds
+    /// *and* its 2^w-slot bucket array (allocation + merge traffic), so
+    /// the bucket-space term scales with the row count too. Charging it
+    /// per row also bounds transient memory: unmoderated, w = 16 at the
+    /// [`MAX_POINTS`] cap would allocate 16 rows × 2^16 × 96-byte bucket
+    /// accumulators (~100 MB) per evaluation.
+    pub fn auto_window(n: usize) -> usize {
+        let mut best = (usize::MAX, 4usize);
+        for w in 4..=16usize {
+            let windows = 256usize.div_ceil(w);
+            let cost = windows * (n + (1usize << w));
+            if cost < best.0 {
+                best = (cost, w);
+            }
+        }
+        best.1
+    }
+
+    /// Build the table: n·256 doublings total (progressive row-by-row
+    /// doubling), normalized to affine one row at a time via
+    /// `batch_to_affine`.
+    pub fn build(bases: &[G1Affine], w: usize) -> Self {
+        assert!((1..=16).contains(&w), "window width out of range");
+        let n = bases.len();
+        let windows = 256usize.div_ceil(w);
+        let mut shifted = Vec::with_capacity(windows * n);
+        shifted.extend_from_slice(bases);
+        let mut cur: Vec<G1> = bases.iter().map(|b| b.to_projective()).collect();
+        for _ in 1..windows {
+            threads::par_chunks_mut(&mut cur, 256, |_, chunk| {
+                for p in chunk.iter_mut() {
+                    for _ in 0..w {
+                        *p = p.double();
+                    }
+                }
+            });
+            shifted.extend(G1::batch_to_affine(&cur));
+        }
+        FixedBaseTable {
+            w,
+            windows,
+            n,
+            shifted,
+        }
+    }
+
+    /// Build with the automatic window choice.
+    pub fn build_auto(bases: &[G1Affine]) -> Self {
+        Self::build(bases, Self::auto_window(bases.len()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn window(&self) -> usize {
+        self.w
+    }
+
+    /// Table footprint in bytes (affine points only).
+    pub fn bytes(&self) -> usize {
+        self.shifted.len() * std::mem::size_of::<G1Affine>()
+    }
+
+    /// Fixed-base MSM over the basis prefix starting at `offset`:
+    /// Σᵢ scalars[i]·base[offset + i]. One bucket pass, no doublings.
+    /// Counts [`Counter::MsmTableHits`], *not* `MsmCalls`/`MsmPoints` —
+    /// table evaluations are internal to higher-level MSMs (accumulator
+    /// flushes, commits) whose call-count invariants stay untouched.
+    pub fn msm_range(&self, offset: usize, scalars: &[Fr]) -> G1 {
+        let k = scalars.len();
+        assert!(offset + k <= self.n, "table range out of bounds");
+        if k == 0 {
+            return G1::IDENTITY;
+        }
+        telemetry::count(Counter::MsmTableHits, 1);
+        let repr: Vec<[u64; 4]> = scalars.iter().map(|s| s.to_repr()).collect();
+        let w = self.w;
+        let backend = msm::backend();
+        // Window rows are independent bucket-entry producers, but the
+        // whole evaluation is ONE logical bucket pass: per-row partial
+        // bucket sums are combined bucket-wise. Parallelize over rows —
+        // they are the long axis for full-length queries.
+        let num_buckets = (1usize << w) - 1;
+        let row_sums: Vec<Vec<G1>> = threads::par_map_indexed(self.windows, |j| {
+            let row = &self.shifted[j * self.n + offset..j * self.n + offset + k];
+            let mut entries: Vec<BucketEntry> = Vec::with_capacity(k);
+            for (p, sc) in row.iter().zip(repr.iter()) {
+                if p.infinity {
+                    continue;
+                }
+                let digit = msm::scalar_digit(sc, j * w, w);
+                if digit > 0 {
+                    entries.push((digit, *p));
+                }
+            }
+            backend.bucket_sums(num_buckets, &entries)
+        });
+        let mut sums = vec![G1::IDENTITY; num_buckets];
+        for row in &row_sums {
+            for (acc, s) in sums.iter_mut().zip(row.iter()) {
+                if !s.is_identity() {
+                    *acc = acc.add(s);
+                }
+            }
+        }
+        msm::combine_bucket_sums(&sums)
+    }
+
+    /// Fixed-base MSM over the basis prefix `[0, scalars.len())`.
+    pub fn msm(&self, scalars: &[Fr]) -> G1 {
+        self.msm_range(0, scalars)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::curve::msm::msm as plain_msm;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize, seed: u64) -> (Vec<G1Affine>, Vec<Fr>) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let bases: Vec<G1Affine> = (0..n).map(|_| G1::random(&mut rng).to_affine()).collect();
+        let mut scalars: Vec<Fr> = (0..n).map(|_| Fr::random(&mut rng)).collect();
+        scalars[0] = Fr::ZERO;
+        if n > 2 {
+            scalars[2] = -Fr::ONE; // max scalar exercises the top window
+        }
+        (bases, scalars)
+    }
+
+    #[test]
+    fn table_matches_plain_msm_across_windows() {
+        let (bases, scalars) = setup(33, 21);
+        let want = plain_msm(&bases, &scalars);
+        for w in [4usize, 8, 13, 16] {
+            let table = FixedBaseTable::build(&bases, w);
+            assert_eq!(table.msm(&scalars), want, "w={w}");
+            assert_eq!(table.windows, 256usize.div_ceil(w));
+        }
+    }
+
+    #[test]
+    fn table_prefix_and_offset_ranges() {
+        let (bases, scalars) = setup(24, 22);
+        let table = FixedBaseTable::build(&bases, 8);
+        // prefix
+        assert_eq!(
+            table.msm(&scalars[..10]),
+            plain_msm(&bases[..10], &scalars[..10])
+        );
+        // interior range (block commits slice the stacked aux basis)
+        assert_eq!(
+            table.msm_range(5, &scalars[5..17]),
+            plain_msm(&bases[5..17], &scalars[5..17])
+        );
+        // empty query
+        assert!(table.msm(&[]).is_identity());
+    }
+
+    #[test]
+    fn auto_window_grows_with_basis() {
+        assert!(FixedBaseTable::auto_window(16) < FixedBaseTable::auto_window(1 << 13));
+        for n in [1usize, 100, MAX_POINTS] {
+            let w = FixedBaseTable::auto_window(n);
+            assert!((4..=16).contains(&w));
+        }
+    }
+
+    #[test]
+    fn table_with_identity_base_point() {
+        let mut rng = Rng::seed_from_u64(23);
+        let mut bases: Vec<G1Affine> =
+            (0..9).map(|_| G1::random(&mut rng).to_affine()).collect();
+        bases[4] = G1Affine::IDENTITY;
+        let scalars: Vec<Fr> = (0..9).map(|_| Fr::random(&mut rng)).collect();
+        let table = FixedBaseTable::build(&bases, 6);
+        assert_eq!(table.msm(&scalars), plain_msm(&bases, &scalars));
+    }
+
+    #[test]
+    fn bytes_reports_footprint() {
+        let (bases, _) = setup(8, 24);
+        let table = FixedBaseTable::build(&bases, 16);
+        assert_eq!(
+            table.bytes(),
+            8 * 16 * std::mem::size_of::<G1Affine>() // ceil(256/16) = 16 rows
+        );
+    }
+}

@@ -5,6 +5,7 @@
 //! affine for storage and transcript serialization.
 
 pub mod accum;
+pub mod fixed;
 pub mod msm;
 
 use crate::field::{Fq, Fr};

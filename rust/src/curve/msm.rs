@@ -1,17 +1,36 @@
-//! Multi-scalar multiplication (Pippenger's bucket method).
+//! Multi-scalar multiplication (Pippenger's bucket method) behind a
+//! pluggable [`MsmBackend`].
 //!
 //! The dominant cost of the zkDL prover is committing to tensors and
 //! auxiliary inputs: Σᵢ sᵢ·Gᵢ over thousands-to-millions of terms. Pippenger
 //! reduces this from n scalar-muls to roughly n·(256/log n) point additions;
 //! windows are processed in parallel across threads.
+//!
+//! All MSMs route through the process-wide backend object so alternative
+//! implementations (SIMD, GPU) can slot in without touching any prover or
+//! verifier. Two backends ship:
+//!
+//! * [`BatchAffineBackend`] (default) resolves each window's bucket
+//!   additions in *affine* coordinates, batching the per-addition field
+//!   inversions with Montgomery's trick ([`crate::field::Fp::batch_invert`]):
+//!   one inversion plus ~6 muls per addition versus ~11 muls for a mixed
+//!   Jacobian add, and the intermediate points stay 64 bytes instead of 96.
+//! * [`ProjectiveBackend`] is the legacy per-bucket Jacobian accumulation,
+//!   kept for differential tests and as the reference cost model.
+//!
+//! The window *digit → bucket* machinery is shared (including with the
+//! fixed-base tables in [`super::fixed`]); a backend only supplies the
+//! bucket-sum kernel, which is where all the point arithmetic lives.
 
 use super::{G1, G1Affine};
-use crate::field::Fr;
+use crate::field::{Fq, Fr};
 use crate::telemetry::{self, Counter};
 use crate::util::threads;
+use once_cell::sync::Lazy;
+use std::sync::{Arc, RwLock};
 
 /// Pick the Pippenger window size (bits) for n terms.
-fn window_size(n: usize) -> usize {
+pub(crate) fn window_size(n: usize) -> usize {
     match n {
         0..=3 => 1,
         4..=15 => 3,
@@ -24,67 +43,173 @@ fn window_size(n: usize) -> usize {
     }
 }
 
-/// MSM: Σᵢ scalars[i]·bases[i]. Lengths must match.
-pub fn msm(bases: &[G1Affine], scalars: &[Fr]) -> G1 {
-    assert_eq!(bases.len(), scalars.len(), "msm length mismatch");
-    let n = bases.len();
-    telemetry::count(Counter::MsmCalls, 1);
-    telemetry::count(Counter::MsmPoints, n as u64);
-    if n == 0 {
-        return G1::IDENTITY;
+/// One bucketed term of a window pass: digit value (≥ 1) and base point.
+/// Backends receive the terms pre-filtered — no zero digits, no points at
+/// infinity.
+pub type BucketEntry = (u32, G1Affine);
+
+/// MSM execution backend: supplies the bucket-sum kernel every window pass
+/// bottoms out in. `msm`/`msm_u64` have provided implementations built on
+/// it, so a SIMD or GPU backend can start by overriding only
+/// [`MsmBackend::bucket_sums`] and later take over whole MSMs.
+pub trait MsmBackend: Send + Sync {
+    /// Stable backend name (reports, DESIGN.md §perf).
+    fn name(&self) -> &'static str;
+
+    /// Per-bucket sums: out[i] = Σ {p : (i+1, p) ∈ entries} for buckets
+    /// 1..=num_buckets. Entries carry digit ≥ 1 and finite points only.
+    fn bucket_sums(&self, num_buckets: usize, entries: &[BucketEntry]) -> Vec<G1>;
+
+    /// MSM: Σᵢ scalars[i]·bases[i] over full 256-bit scalars.
+    fn msm(&self, bases: &[G1Affine], scalars: &[Fr]) -> G1 {
+        assert_eq!(bases.len(), scalars.len(), "msm length mismatch");
+        let n = bases.len();
+        if n == 0 {
+            return G1::IDENTITY;
+        }
+        if n < 8 {
+            // naive is faster at tiny sizes
+            let mut acc = G1::IDENTITY;
+            for (b, s) in bases.iter().zip(scalars.iter()) {
+                acc = acc.add(&b.to_projective().mul(s));
+            }
+            return acc;
+        }
+
+        let repr: Vec<[u64; 4]> = scalars.iter().map(|s| s.to_repr()).collect();
+        // window sized by the number of *effective* terms: zero scalars are
+        // skipped during bucketing, and the IPA round MSMs are half zeros —
+        // sizing by total length would let the 2^w bucket-combine cost
+        // dominate
+        let effective = repr
+            .iter()
+            .filter(|r| r.iter().any(|&l| l != 0))
+            .count()
+            .max(1);
+        let w = window_size(effective);
+        let num_windows = 256usize.div_ceil(w);
+
+        // Each window is independent: compute its bucket sum in parallel.
+        let window_sums: Vec<G1> = threads::par_map_indexed(num_windows, |wi| {
+            let mut entries = Vec::with_capacity(effective);
+            for (base, sc) in bases.iter().zip(repr.iter()) {
+                if base.infinity {
+                    continue;
+                }
+                let digit = scalar_digit(sc, wi * w, w);
+                if digit > 0 {
+                    entries.push((digit, *base));
+                }
+            }
+            let sums = self.bucket_sums((1usize << w) - 1, &entries);
+            combine_bucket_sums(&sums)
+        });
+
+        horner_windows(&window_sums, w)
     }
-    if n < 8 {
-        // naive is faster at tiny sizes
-        let mut acc = G1::IDENTITY;
-        for (b, s) in bases.iter().zip(scalars.iter()) {
-            acc = acc.add(&b.to_projective().mul(s));
+
+    /// MSM with u64 scalars (bit tensors, exponent vectors): the same
+    /// bucket method, but windowed over 64 bits only — ceil(64/w) window
+    /// passes instead of ceil(256/w).
+    fn msm_u64(&self, bases: &[G1Affine], scalars: &[u64]) -> G1 {
+        assert_eq!(bases.len(), scalars.len(), "msm length mismatch");
+        let n = bases.len();
+        if n == 0 {
+            return G1::IDENTITY;
         }
-        return acc;
+        if n < 8 {
+            let mut acc = G1::IDENTITY;
+            for (b, s) in bases.iter().zip(scalars.iter()) {
+                acc = acc.add(&b.to_projective().mul(&Fr::from_u64(*s)));
+            }
+            return acc;
+        }
+        let effective = scalars.iter().filter(|&&s| s != 0).count().max(1);
+        let w = window_size(effective);
+        let num_windows = 64usize.div_ceil(w);
+        let window_sums: Vec<G1> = threads::par_map_indexed(num_windows, |wi| {
+            let shift = wi * w;
+            let mut entries = Vec::with_capacity(effective);
+            for (base, &sc) in bases.iter().zip(scalars.iter()) {
+                if base.infinity {
+                    continue;
+                }
+                let digit = ((sc >> shift) & ((1u64 << w) - 1)) as u32;
+                if digit > 0 {
+                    entries.push((digit, *base));
+                }
+            }
+            let sums = self.bucket_sums((1usize << w) - 1, &entries);
+            combine_bucket_sums(&sums)
+        });
+        horner_windows(&window_sums, w)
     }
+}
 
-    let repr: Vec<[u64; 4]> = scalars.iter().map(|s| s.to_repr()).collect();
-    // window sized by the number of *effective* terms: zero scalars are
-    // skipped during bucketing, and the IPA round MSMs are half zeros —
-    // sizing by total length would let the 2^w bucket-combine cost dominate
-    let effective = repr
-        .iter()
-        .filter(|r| r.iter().any(|&l| l != 0))
-        .count()
-        .max(1);
-    let w = window_size(effective);
-    let num_windows = 256usize.div_ceil(w);
+/// Extract bits [shift, shift+w) of a 256-bit little-endian limb scalar.
+#[inline]
+pub(crate) fn scalar_digit(repr: &[u64; 4], shift: usize, w: usize) -> u32 {
+    let limb = shift / 64;
+    if limb >= 4 {
+        return 0;
+    }
+    let off = shift % 64;
+    let mut frag = repr[limb] >> off;
+    if off + w > 64 && limb + 1 < 4 {
+        frag |= repr[limb + 1] << (64 - off);
+    }
+    (frag & ((1u64 << w) - 1)) as u32
+}
 
-    // Each window is independent: compute its bucket sum in parallel.
-    let window_sums: Vec<G1> = threads::par_map_indexed(num_windows, |wi| {
-        let shift = wi * w;
-        let mut buckets = vec![G1::IDENTITY; (1usize << w) - 1];
-        for (base, sc) in bases.iter().zip(repr.iter()) {
-            if base.infinity {
-                continue;
-            }
-            // extract bits [shift, shift+w) of the 256-bit scalar
-            let limb = shift / 64;
-            let off = shift % 64;
-            let mut frag = sc[limb] >> off;
-            if off + w > 64 && limb + 1 < 4 {
-                frag |= sc[limb + 1] << (64 - off);
-            }
-            let idx = (frag & ((1u64 << w) - 1)) as usize;
-            if idx > 0 {
-                buckets[idx - 1] = buckets[idx - 1].add_affine(base);
-            }
+/// Σ (i+1)·sums[i] via the running-sum trick, walking only the *nonempty*
+/// buckets (descending) and jumping the gaps with small double-and-add
+/// multiplications. For dense bucket arrays this is the classic running
+/// sum; for sparse ones (fixed-base tables queried over short basis
+/// ranges) the cost is O(nonempty·log gap) instead of O(2^w).
+pub(crate) fn combine_bucket_sums(sums: &[G1]) -> G1 {
+    // Σ_j prefix_j · (i_j − i_{j+1}) over descending nonempty 1-based
+    // indices i_1 > i_2 > … > i_k, with i_{k+1} = 0 and
+    // prefix_j = B_{i_1} + … + B_{i_j}.
+    let mut acc = G1::IDENTITY;
+    let mut running = G1::IDENTITY;
+    let mut prev: usize = 0; // previous (larger) 1-based index, 0 = none yet
+    for (i, b) in sums.iter().enumerate().rev() {
+        if b.is_identity() {
+            continue;
         }
-        // running-sum trick: Σ idx·bucket[idx]
-        let mut running = G1::IDENTITY;
-        let mut acc = G1::IDENTITY;
-        for b in buckets.iter().rev() {
-            running = running.add(b);
-            acc = acc.add(&running);
+        let idx = i + 1;
+        if prev != 0 {
+            acc = acc.add(&mul_small(&running, (prev - idx) as u64));
         }
-        acc
-    });
+        running = running.add(b);
+        prev = idx;
+    }
+    if prev != 0 {
+        acc = acc.add(&mul_small(&running, prev as u64));
+    }
+    acc
+}
 
-    // Horner combine the windows (most significant first).
+/// Double-and-add by a small unsigned scalar (bucket-index gaps).
+fn mul_small(p: &G1, k: u64) -> G1 {
+    debug_assert!(k > 0);
+    if k == 1 {
+        return *p;
+    }
+    let mut acc = *p;
+    let top = 63 - k.leading_zeros();
+    for b in (0..top).rev() {
+        acc = acc.double();
+        if (k >> b) & 1 == 1 {
+            acc = acc.add(p);
+        }
+    }
+    acc
+}
+
+/// Horner-combine per-window sums (most significant first) with w doublings
+/// per step.
+pub(crate) fn horner_windows(window_sums: &[G1], w: usize) -> G1 {
     let mut total = G1::IDENTITY;
     for ws in window_sums.iter().rev() {
         for _ in 0..w {
@@ -95,11 +220,202 @@ pub fn msm(bases: &[G1Affine], scalars: &[Fr]) -> G1 {
     total
 }
 
-/// MSM with u64 scalars (bit tensors, exponent vectors): same bucket method
-/// over 64-bit fragments only.
+// ---------------------------------------------------------------------------
+// Batch-affine backend (default)
+// ---------------------------------------------------------------------------
+
+/// Default backend: bucket additions in affine coordinates, pairwise tree
+/// reduction per bucket, one [`Fq::batch_invert`] sweep per reduction level
+/// across *all* buckets — Montgomery's trick amortizes the per-addition
+/// inversion to ~3 muls, so an affine add costs ~6 muls total versus ~11
+/// for the mixed Jacobian formula.
+pub struct BatchAffineBackend;
+
+/// Classified affine pair awaiting its batched inverse.
+enum PairKind {
+    /// λ = (y₂−y₁)/(x₂−x₁); the stored denominator is x₂−x₁.
+    Add,
+    /// P + P: λ = 3x²/(2y); the stored denominator is 2y. (y = 0 cannot
+    /// occur: BN254 G1 has odd prime order, so there is no 2-torsion.)
+    Double,
+    /// P + (−P) = 𝒪: the pair is dropped entirely.
+    Cancel,
+}
+
+impl MsmBackend for BatchAffineBackend {
+    fn name(&self) -> &'static str {
+        "batch-affine"
+    }
+
+    fn bucket_sums(&self, num_buckets: usize, entries: &[BucketEntry]) -> Vec<G1> {
+        // Counting-sort the points into per-bucket runs of one flat buffer.
+        let mut counts = vec![0usize; num_buckets];
+        for &(d, _) in entries {
+            counts[(d - 1) as usize] += 1;
+        }
+        let mut starts = vec![0usize; num_buckets];
+        let mut acc = 0usize;
+        for (s, &c) in starts.iter_mut().zip(counts.iter()) {
+            *s = acc;
+            acc += c;
+        }
+        let mut cur: Vec<G1Affine> = vec![G1Affine::IDENTITY; acc];
+        let mut fill = starts.clone();
+        for &(d, p) in entries {
+            let b = (d - 1) as usize;
+            cur[fill[b]] = p;
+            fill[b] += 1;
+        }
+        // (start, len) of each bucket's live run inside `cur`.
+        let mut runs: Vec<(usize, usize)> = starts
+            .iter()
+            .zip(counts.iter())
+            .map(|(&s, &c)| (s, c))
+            .collect();
+
+        // Pairwise reduction: every sweep halves each bucket's run, paying
+        // ONE field inversion (batched over every pair of every bucket).
+        let mut next: Vec<G1Affine> = Vec::with_capacity(cur.len().div_ceil(2));
+        let mut kinds: Vec<PairKind> = Vec::new();
+        let mut denoms: Vec<Fq> = Vec::new();
+        while runs.iter().any(|&(_, len)| len >= 2) {
+            telemetry::count(Counter::MsmBatchAddSweeps, 1);
+            kinds.clear();
+            denoms.clear();
+            for &(start, len) in runs.iter() {
+                for k in (0..len.saturating_sub(1)).step_by(2) {
+                    let p = &cur[start + k];
+                    let q = &cur[start + k + 1];
+                    if p.x == q.x {
+                        if p.y == q.y {
+                            kinds.push(PairKind::Double);
+                            denoms.push(p.y.double());
+                        } else {
+                            kinds.push(PairKind::Cancel);
+                            denoms.push(Fq::ZERO); // skipped by batch_invert
+                        }
+                    } else {
+                        kinds.push(PairKind::Add);
+                        denoms.push(q.x - p.x);
+                    }
+                }
+            }
+            Fq::batch_invert(&mut denoms);
+
+            next.clear();
+            let mut cursor = 0usize;
+            let mut new_runs = Vec::with_capacity(runs.len());
+            for &(start, len) in runs.iter() {
+                let out_start = next.len();
+                for k in (0..len.saturating_sub(1)).step_by(2) {
+                    let p = cur[start + k];
+                    let q = cur[start + k + 1];
+                    let d = denoms[cursor];
+                    match kinds[cursor] {
+                        PairKind::Cancel => {}
+                        PairKind::Double => {
+                            let xx = p.x.square();
+                            let lam = (xx.double() + xx) * d;
+                            next.push(affine_add_with_lambda(&p, &q, lam));
+                        }
+                        PairKind::Add => {
+                            let lam = (q.y - p.y) * d;
+                            next.push(affine_add_with_lambda(&p, &q, lam));
+                        }
+                    }
+                    cursor += 1;
+                }
+                if len % 2 == 1 {
+                    next.push(cur[start + len - 1]);
+                }
+                new_runs.push((out_start, next.len() - out_start));
+            }
+            std::mem::swap(&mut cur, &mut next);
+            runs = new_runs;
+        }
+
+        runs.iter()
+            .map(|&(start, len)| {
+                if len == 0 {
+                    G1::IDENTITY
+                } else {
+                    cur[start].to_projective()
+                }
+            })
+            .collect()
+    }
+}
+
+/// x₃ = λ² − x₁ − x₂, y₃ = λ(x₁ − x₃) − y₁, with λ supplied (its
+/// denominator came out of the batched inversion).
+#[inline]
+fn affine_add_with_lambda(p: &G1Affine, q: &G1Affine, lam: Fq) -> G1Affine {
+    let x3 = lam.square() - p.x - q.x;
+    G1Affine {
+        x: x3,
+        y: lam * (p.x - x3) - p.y,
+        infinity: false,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Projective backend (legacy reference)
+// ---------------------------------------------------------------------------
+
+/// The pre-zkTurbo kernel: one Jacobian accumulator per bucket, mixed
+/// addition per term. Kept as the differential-testing reference and the
+/// fallback cost model.
+pub struct ProjectiveBackend;
+
+impl MsmBackend for ProjectiveBackend {
+    fn name(&self) -> &'static str {
+        "projective"
+    }
+
+    fn bucket_sums(&self, num_buckets: usize, entries: &[BucketEntry]) -> Vec<G1> {
+        let mut buckets = vec![G1::IDENTITY; num_buckets];
+        for &(d, p) in entries {
+            let b = (d - 1) as usize;
+            buckets[b] = buckets[b].add_affine(&p);
+        }
+        buckets
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-wide backend routing
+// ---------------------------------------------------------------------------
+
+static BACKEND: Lazy<RwLock<Arc<dyn MsmBackend>>> =
+    Lazy::new(|| RwLock::new(Arc::new(BatchAffineBackend)));
+
+/// The currently installed backend (read-lock + Arc clone; negligible next
+/// to any actual MSM).
+pub fn backend() -> Arc<dyn MsmBackend> {
+    BACKEND.read().unwrap().clone()
+}
+
+/// Install a process-wide MSM backend (e.g. a SIMD/GPU implementation).
+/// Returns the previous one. All backends compute identical group elements,
+/// so swapping backends never changes proof artifacts.
+pub fn set_backend(b: Arc<dyn MsmBackend>) -> Arc<dyn MsmBackend> {
+    std::mem::replace(&mut *BACKEND.write().unwrap(), b)
+}
+
+/// MSM: Σᵢ scalars[i]·bases[i]. Lengths must match. Routes through the
+/// installed [`MsmBackend`].
+pub fn msm(bases: &[G1Affine], scalars: &[Fr]) -> G1 {
+    telemetry::count(Counter::MsmCalls, 1);
+    telemetry::count(Counter::MsmPoints, bases.len() as u64);
+    backend().msm(bases, scalars)
+}
+
+/// MSM with u64 scalars (bit tensors, exponent vectors): windows cover 64
+/// bits instead of 256 — a 4× window-pass reduction over widening to `Fr`.
 pub fn msm_u64(bases: &[G1Affine], scalars: &[u64]) -> G1 {
-    let frs: Vec<Fr> = scalars.iter().map(|&s| Fr::from_u64(s)).collect();
-    msm(bases, &frs)
+    telemetry::count(Counter::MsmCalls, 1);
+    telemetry::count(Counter::MsmPoints, bases.len() as u64);
+    backend().msm_u64(bases, scalars)
 }
 
 #[cfg(test)]
@@ -147,5 +463,101 @@ mod tests {
         let bases: Vec<G1Affine> = (0..50).map(|_| G1::random(&mut rng).to_affine()).collect();
         let scalars: Vec<Fr> = (0..50).map(|i| Fr::from_i64(i as i64 - 25)).collect();
         assert_eq!(msm(&bases, &scalars), naive(&bases, &scalars));
+    }
+
+    // --- batch-affine bucket kernel: the affine special cases ---
+
+    #[test]
+    fn batch_affine_equal_points_double() {
+        let mut rng = Rng::seed_from_u64(10);
+        let p = G1::random(&mut rng).to_affine();
+        let sums = BatchAffineBackend.bucket_sums(3, &[(1, p), (1, p)]);
+        assert_eq!(sums[0], p.to_projective().double());
+        assert!(sums[1].is_identity() && sums[2].is_identity());
+    }
+
+    #[test]
+    fn batch_affine_inverse_points_cancel() {
+        let mut rng = Rng::seed_from_u64(11);
+        let p = G1::random(&mut rng).to_affine();
+        let sums = BatchAffineBackend.bucket_sums(2, &[(2, p), (2, p.neg())]);
+        assert!(sums[1].is_identity());
+        // cancellation interleaved with a surviving odd leftover
+        let q = G1::random(&mut rng).to_affine();
+        let sums = BatchAffineBackend.bucket_sums(1, &[(1, p), (1, p.neg()), (1, q)]);
+        assert_eq!(sums[0], q.to_projective());
+    }
+
+    #[test]
+    fn batch_affine_many_duplicates_force_repeated_doublings() {
+        // 9 copies of one point exercise doubling at every sweep level and
+        // the odd-leftover carry: ceil(log2 9) = 4 sweeps.
+        let mut rng = Rng::seed_from_u64(12);
+        let p = G1::random(&mut rng).to_affine();
+        let entries: Vec<BucketEntry> = (0..9).map(|_| (1u32, p)).collect();
+        let sums = BatchAffineBackend.bucket_sums(1, &entries);
+        assert_eq!(sums[0], p.to_projective().mul(&Fr::from_u64(9)));
+    }
+
+    #[test]
+    fn backends_agree_on_random_inputs() {
+        let mut rng = Rng::seed_from_u64(13);
+        for n in [8usize, 33, 200] {
+            let mut bases: Vec<G1Affine> =
+                (0..n).map(|_| G1::random(&mut rng).to_affine()).collect();
+            let mut scalars: Vec<Fr> = (0..n).map(|_| Fr::random(&mut rng)).collect();
+            // engineer same-bucket collisions: duplicate base+scalar and an
+            // exact inverse pair
+            bases[1] = bases[0];
+            scalars[1] = scalars[0];
+            bases[3] = bases[2].neg();
+            scalars[3] = scalars[2];
+            let fast = BatchAffineBackend.msm(&bases, &scalars);
+            let slow = ProjectiveBackend.msm(&bases, &scalars);
+            assert_eq!(fast, slow, "n={n}");
+            assert_eq!(fast, naive(&bases, &scalars), "n={n}");
+        }
+    }
+
+    #[test]
+    fn msm_u64_direct_windows_match_naive() {
+        let mut rng = Rng::seed_from_u64(14);
+        for n in [3usize, 8, 40, 300] {
+            let bases: Vec<G1Affine> =
+                (0..n).map(|_| G1::random(&mut rng).to_affine()).collect();
+            let mut scalars: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            scalars[0] = 0;
+            if n > 1 {
+                scalars[1] = u64::MAX; // saturates the top 64-bit window
+            }
+            let frs: Vec<Fr> = scalars.iter().map(|&s| Fr::from_u64(s)).collect();
+            assert_eq!(msm_u64(&bases, &scalars), naive(&bases, &frs), "n={n}");
+            assert_eq!(
+                ProjectiveBackend.msm_u64(&bases, &scalars),
+                naive(&bases, &frs),
+                "projective n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn combine_bucket_sums_handles_sparse_gaps() {
+        let mut rng = Rng::seed_from_u64(15);
+        let p = G1::random(&mut rng);
+        let q = G1::random(&mut rng);
+        // Σ idx·B_idx with only buckets 3 and 250 occupied (1-based).
+        let mut sums = vec![G1::IDENTITY; 255];
+        sums[2] = p;
+        sums[249] = q;
+        let want = p.mul(&Fr::from_u64(3)).add(&q.mul(&Fr::from_u64(250)));
+        assert_eq!(combine_bucket_sums(&sums), want);
+        // empty and all-identity inputs
+        assert!(combine_bucket_sums(&[]).is_identity());
+        assert!(combine_bucket_sums(&[G1::IDENTITY; 7]).is_identity());
+    }
+
+    #[test]
+    fn default_backend_is_batch_affine() {
+        assert_eq!(backend().name(), "batch-affine");
     }
 }

@@ -203,7 +203,7 @@ pub(crate) fn prove_eval_core(
                 Fr::ZERO
             };
         }
-        let l_pt = msm(&ck.g[..n], &scal) + u.mul(&cl) + ck.h.to_projective().mul(&r_l);
+        let l_pt = ck.msm_prefix(&scal) + u.mul(&cl) + ck.h.to_projective().mul(&r_l);
         // R = (g′_L)^{a_R}
         for i in 0..n {
             let v = i % m;
@@ -213,7 +213,7 @@ pub(crate) fn prove_eval_core(
                 Fr::ZERO
             };
         }
-        let r_pt = msm(&ck.g[..n], &scal) + u.mul(&cr) + ck.h.to_projective().mul(&r_r);
+        let r_pt = ck.msm_prefix(&scal) + u.mul(&cr) + ck.h.to_projective().mul(&r_r);
         let l_aff = l_pt.to_affine();
         let r_aff = r_pt.to_affine();
         transcript.absorb_point(b"ipa/L", &l_aff);
@@ -315,7 +315,7 @@ fn verify_eval_core(
 
     acc.begin_equation();
     let g_scalars: Vec<Fr> = s.iter().map(|si| *si * proof.a).collect();
-    acc.push_fixed(&ck.g[..n], &g_scalars);
+    acc.push_fixed_key(ck, &g_scalars);
     acc.push(c * (proof.a * proof.b - v), ipa_u(&ck.label));
     acc.push(proof.blind, ck.h);
     for (coeff, com) in com_terms {

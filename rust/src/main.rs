@@ -16,7 +16,9 @@
 //!                endorsed dataset root
 //!   membership   build the Merkle tree and answer (non-)membership queries
 //!   bench        run the prove/verify grid (T × depth × variant) and write
-//!                a `BENCH_*.json` baseline; `--quick` runs one cheap cell
+//!                a `BENCH_*.json` baseline; `--quick` runs one cheap cell;
+//!                `--compare <old.json>` prints a per-cell delta table
+//!                against a previously recorded baseline
 //!   info         print configuration and environment
 //!
 //! Every verb accepts `--profile`: telemetry (zkObs) records a span tree
@@ -37,6 +39,7 @@
 //!   zkdl membership --n 1000 --queries 100 --hash sha256 --positivity 0.5
 //!   zkdl bench
 //!   zkdl bench --quick --out BENCH_ci.json
+//!   zkdl bench --compare BENCH_trace_seed.json
 
 use anyhow::{Context, Result};
 use std::path::Path;
@@ -374,6 +377,17 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
     print!("{}", report.render_table());
     std::fs::write(out, report.to_json_string()).with_context(|| format!("writing {out}"))?;
     println!("wrote {out} ({:.1} s total)", report.wall_s);
+    if let Some(baseline_path) = cli.get("compare") {
+        let text = std::fs::read_to_string(baseline_path)
+            .with_context(|| format!("reading baseline {baseline_path}"))?;
+        let baseline = zkdl::telemetry::json::Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing baseline {baseline_path}: {e}"))?;
+        let delta = report
+            .compare_table(&baseline)
+            .map_err(|e| anyhow::anyhow!("comparing against {baseline_path}: {e}"))?;
+        println!("delta vs {baseline_path} (wall-clock noisy, msm pts exact):");
+        print!("{delta}");
+    }
     Ok(())
 }
 

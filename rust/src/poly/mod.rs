@@ -96,19 +96,62 @@ impl Mle {
     }
 }
 
+/// Evaluate the MLE whose table is `evals` (length 2^point.len()) at
+/// `point` by folding in place — the allocation-free twin of
+/// [`Mle::evaluate`], for callers that own a scratch buffer (the prover's
+/// tensor arena). Clobbers `evals`; the result lands in `evals[0]`.
+pub fn eval_in_place(evals: &mut [Fr], point: &[Fr]) -> Fr {
+    assert_eq!(evals.len(), 1 << point.len(), "MLE table/point mismatch");
+    let mut len = evals.len();
+    for &r in point {
+        let half = len / 2;
+        for i in 0..half {
+            let lo = evals[i];
+            let hi = evals[i + half];
+            evals[i] = lo + r * (hi - lo);
+        }
+        len = half;
+    }
+    evals[0]
+}
+
+/// ⟨from_i64(values), eq⟩: evaluate a quantized tensor's MLE against a
+/// precomputed eq table. Same operation order as [`Mle::evaluate`], so the
+/// result is the identical field element — but the table is computed once
+/// per challenge point by the caller instead of once per tensor.
+pub fn eval_i64_with_eq(values: &[i64], eq: &[Fr]) -> Fr {
+    debug_assert_eq!(values.len(), eq.len(), "tensor/eq-table length mismatch");
+    values
+        .iter()
+        .zip(eq.iter())
+        .map(|(&v, e)| Fr::from_i64(v) * *e)
+        .sum()
+}
+
 /// The equality polynomial table e(u): e[idx] = β̃(u, idx) with variable 0 in
 /// the most significant bit of idx. Σ_idx e[idx] = 1.
 pub fn eq_table(u: &[Fr]) -> Vec<Fr> {
-    let mut table = vec![Fr::ONE];
-    for &uj in u {
-        let mut next = Vec::with_capacity(table.len() * 2);
-        for &e in &table {
-            next.push(e * (Fr::ONE - uj)); // bit 0
-            next.push(e * uj); // bit 1
-        }
-        table = next;
-    }
+    let mut table = vec![Fr::ZERO; 1 << u.len()];
+    eq_table_into(u, &mut table);
     table
+}
+
+/// [`eq_table`] into a caller-owned buffer of length 2^u.len() (arena
+/// scratch): expands level by level from the back, no allocation.
+pub fn eq_table_into(u: &[Fr], out: &mut [Fr]) {
+    assert_eq!(out.len(), 1 << u.len(), "eq table buffer mismatch");
+    out[0] = Fr::ONE;
+    let mut len = 1usize;
+    for &uj in u {
+        // writes for slot i land at 2i/2i+1 ≥ i, so descending i never
+        // clobbers an unread slot
+        for i in (0..len).rev() {
+            let e = out[i];
+            out[2 * i + 1] = e * uj; // bit 1
+            out[2 * i] = e * (Fr::ONE - uj); // bit 0
+        }
+        len *= 2;
+    }
 }
 
 /// β̃(u, v) = Π_i (uᵢvᵢ + (1−uᵢ)(1−vᵢ)).
@@ -153,18 +196,26 @@ pub fn interpolate_uni(ys: &[Fr], x: Fr) -> Fr {
     for i in (0..d).rev() {
         suffix[i] = suffix[i + 1] * (x - Fr::from_u64((i + 1) as u64));
     }
-    // denominators: i!·(d−i)!·(−1)^{d−i}
+    // denominators: i!·(d−i)!·(−1)^{d−i}, inverted in one batched sweep
+    // (one inversion + O(d) muls instead of d+1 inversions)
     let mut fact = vec![Fr::ONE; d + 1];
     for i in 1..=d {
         fact[i] = fact[i - 1] * Fr::from_u64(i as u64);
     }
+    let mut denoms: Vec<Fr> = (0..=d)
+        .map(|i| {
+            let dd = fact[i] * fact[d - i];
+            if (d - i) % 2 == 1 {
+                -dd
+            } else {
+                dd
+            }
+        })
+        .collect();
+    Fr::batch_invert(&mut denoms);
     let mut acc = Fr::ZERO;
     for i in 0..=d {
-        let mut denom = fact[i] * fact[d - i];
-        if (d - i) % 2 == 1 {
-            denom = -denom;
-        }
-        acc += ys[i] * prefix[i] * suffix[i] * denom.inverse().unwrap();
+        acc += ys[i] * prefix[i] * suffix[i] * denoms[i];
     }
     acc
 }
@@ -267,6 +318,28 @@ mod tests {
         assert_eq!(interpolate_uni(&ys, x), p(x));
         // grid point
         assert_eq!(interpolate_uni(&ys, Fr::from_u64(2)), ys[2]);
+    }
+
+    #[test]
+    fn eval_in_place_matches_mle_evaluate() {
+        let mut r = rng();
+        let vals: Vec<Fr> = (0..32).map(|_| Fr::random(&mut r)).collect();
+        let u: Vec<Fr> = (0..5).map(|_| Fr::random(&mut r)).collect();
+        let want = Mle::new(vals.clone()).evaluate(&u);
+        let mut buf = vals;
+        assert_eq!(eval_in_place(&mut buf, &u), want);
+        // single element, empty point
+        let mut one = [Fr::from_u64(9)];
+        assert_eq!(eval_in_place(&mut one, &[]), Fr::from_u64(9));
+    }
+
+    #[test]
+    fn eq_table_into_matches_alloc() {
+        let mut r = rng();
+        let u: Vec<Fr> = (0..6).map(|_| Fr::random(&mut r)).collect();
+        let mut buf = vec![Fr::ZERO; 64];
+        eq_table_into(&u, &mut buf);
+        assert_eq!(buf, eq_table(&u));
     }
 
     #[test]

@@ -47,7 +47,7 @@
 use crate::aggregate::StepCommitmentSet;
 use crate::commit::{ComExpr, CommitKey};
 use crate::curve::accum::MsmAccumulator;
-use crate::curve::{msm::msm, G1Affine, G1};
+use crate::curve::{G1Affine, G1};
 use crate::data::Dataset;
 use crate::field::Fr;
 use crate::hash::HashFn;
@@ -164,9 +164,15 @@ impl ProverDataset {
             tensor[base + d + ds.labels[k]] = Fr::from_i64(scale);
         }
         let g_data = CommitKey::setup(b"zkdl/data", n_data);
-        // per-row leaf commitments C_k on the row's basis block (r = 0)
+        g_data.warm_table();
+        // per-row leaf commitments C_k on the row's basis block (r = 0);
+        // each row is a slice commit against the shared fixed-base table
         let row_coms: Vec<G1> = (0..n)
-            .map(|k| msm(&g_data.g[k * 2 * d..(k + 1) * 2 * d], &tensor[k * 2 * d..(k + 1) * 2 * d]))
+            .map(|k| {
+                g_data
+                    .slice(k * 2 * d, (k + 1) * 2 * d)
+                    .commit_deterministic(&tensor[k * 2 * d..(k + 1) * 2 * d])
+            })
             .collect();
         let affine = G1::batch_to_affine(&row_coms);
         let leaves: Vec<Vec<u8>> = affine.iter().map(point_leaf).collect();
@@ -276,6 +282,10 @@ impl ProvenanceKey {
             g_data: CommitKey::setup(b"zkdl/data", n_data),
             g_sel: CommitKey::setup(b"zkdl/data/sel", n_sel),
         });
+        // fixed-base tables (Arc-cached with the key; no-ops past the
+        // table size cap): g_data serves every per-row leaf commitment
+        pk.g_data.warm_table();
+        pk.g_sel.warm_table();
         let mut cache = PROVKEY_CACHE.lock().unwrap();
         if cache.len() >= PROVKEY_CACHE_CAP {
             let evict = cache.keys().next().cloned();

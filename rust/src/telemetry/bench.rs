@@ -367,6 +367,99 @@ impl BenchReport {
         }
         table.render()
     }
+
+    /// Per-cell delta table between this (freshly measured) report and a
+    /// previously recorded baseline JSON — the parsed output of
+    /// [`Self::to_json_string`]. Cells are matched on (variant, steps,
+    /// depth). Wall-clock deltas are percentages and inherently noisy;
+    /// the MSM point deltas are exact (deterministic for a given config),
+    /// so a nonzero `msm pts` delta means the protocol itself changed.
+    pub fn compare_table(&self, old: &Json) -> Result<String, String> {
+        match old.get("schema").and_then(|v| v.as_str()) {
+            Some(s) if s == BENCH_SCHEMA => {}
+            Some(s) => return Err(format!("baseline schema {s:?}, expected {BENCH_SCHEMA:?}")),
+            None => return Err("baseline JSON has no schema tag".into()),
+        }
+        let old_cases = old
+            .get("cases")
+            .and_then(|v| v.as_array())
+            .ok_or_else(|| "baseline JSON has no cases array".to_string())?;
+        let lookup = |c: &BenchCase| {
+            old_cases.iter().find(|o| {
+                o.get("variant").and_then(|v| v.as_str()) == Some(c.variant.name())
+                    && o.get("steps").and_then(|v| v.as_u64()) == Some(c.steps as u64)
+                    && o.get("depth").and_then(|v| v.as_u64()) == Some(c.depth as u64)
+            })
+        };
+        let mut table = Table::new(&[
+            "T",
+            "depth",
+            "variant",
+            "prove old->new",
+            "d%",
+            "verify old->new",
+            "d%",
+            "msm pts d p/v",
+        ]);
+        for c in &self.cases {
+            let mut row = vec![
+                c.steps.to_string(),
+                c.depth.to_string(),
+                c.variant.name().to_string(),
+            ];
+            let note = |text: String| {
+                let mut cells = vec![text];
+                cells.extend(vec!["-".to_string(); 4]);
+                cells
+            };
+            let base = lookup(c);
+            let base_skipped = base
+                .is_some_and(|b| b.get("skipped").is_some_and(|s| s.as_str().is_some()));
+            match (&c.skipped, base) {
+                (Some(reason), _) => row.extend(note(format!("(skipped: {reason})"))),
+                (None, None) => row.extend(note("(no baseline cell)".to_string())),
+                (None, Some(_)) if base_skipped => {
+                    row.extend(note("(baseline skipped this cell)".to_string()))
+                }
+                (None, Some(b)) => {
+                    let f = |key: &str| b.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+                    let pts = |key: &str| {
+                        b.get("msm")
+                            .and_then(|m| m.get(key))
+                            .and_then(|v| v.as_u64())
+                            .unwrap_or(0)
+                    };
+                    row.push(fmt_old_new(f("prove_s"), c.prove_s));
+                    row.push(fmt_pct(f("prove_s"), c.prove_s));
+                    row.push(fmt_old_new(f("verify_s"), c.verify_s));
+                    row.push(fmt_pct(f("verify_s"), c.verify_s));
+                    row.push(format!(
+                        "{:+}/{:+}",
+                        c.msm.prove_points as i128 - pts("prove_points") as i128,
+                        c.msm.verify_points as i128 - pts("verify_points") as i128,
+                    ));
+                }
+            }
+            table.row(row);
+        }
+        Ok(table.render())
+    }
+}
+
+fn fmt_old_new(old_s: f64, new_s: f64) -> String {
+    format!(
+        "{} -> {}",
+        fmt_dur(Duration::from_secs_f64(old_s)),
+        fmt_dur(Duration::from_secs_f64(new_s))
+    )
+}
+
+fn fmt_pct(old_s: f64, new_s: f64) -> String {
+    if old_s <= 0.0 {
+        "n/a".to_string()
+    } else {
+        format!("{:+.1}%", (new_s - old_s) / old_s * 100.0)
+    }
 }
 
 #[cfg(test)]
@@ -445,5 +538,69 @@ mod tests {
         let text = report.render_table();
         assert!(text.contains("plain"));
         assert!(text.contains("chained trace needs T >= 2"));
+    }
+
+    fn sample_report() -> BenchReport {
+        BenchReport {
+            opts: GridOptions::quick(),
+            threads: 1,
+            wall_s: 1.25,
+            cases: vec![
+                BenchCase {
+                    variant: Variant::Plain,
+                    steps: 1,
+                    depth: 2,
+                    skipped: None,
+                    prove_s: 0.5,
+                    verify_s: 0.25,
+                    proof_bytes: 4096,
+                    msm: MsmCounts {
+                        prove_calls: 10,
+                        prove_points: 1000,
+                        verify_calls: 1,
+                        verify_points: 500,
+                        verify_flushes: 1,
+                        verify_equations: 7,
+                    },
+                },
+                skipped_case(Variant::Chained, 1, 2, "chained trace needs T >= 2"),
+            ],
+        }
+    }
+
+    #[test]
+    fn compare_table_against_self_shows_zero_deltas() {
+        let report = sample_report();
+        let baseline = Json::parse(&report.to_json_string()).expect("baseline parses");
+        let table = report.compare_table(&baseline).expect("same-schema compare");
+        // identical measurements: 0% wall-clock drift, exact-zero point deltas
+        assert!(table.contains("+0.0%"), "table:\n{table}");
+        assert!(table.contains("+0/+0"), "table:\n{table}");
+        // the skipped case carries its reason through
+        assert!(table.contains("(skipped: chained trace needs T >= 2)"));
+    }
+
+    #[test]
+    fn compare_table_reports_drift_and_point_deltas() {
+        let mut new = sample_report();
+        new.cases[0].prove_s = 0.25; // 2x faster
+        new.cases[0].msm.prove_points = 900; // -100 points (table routing)
+        let baseline = Json::parse(&sample_report().to_json_string()).unwrap();
+        let table = new.compare_table(&baseline).expect("compare");
+        assert!(table.contains("-50.0%"), "table:\n{table}");
+        assert!(table.contains("-100/+0"), "table:\n{table}");
+    }
+
+    #[test]
+    fn compare_table_handles_missing_cells_and_bad_schema() {
+        let mut new = sample_report();
+        new.cases[0].steps = 16; // no (plain, 16, 2) cell in the baseline
+        let baseline = Json::parse(&sample_report().to_json_string()).unwrap();
+        let table = new.compare_table(&baseline).expect("compare");
+        assert!(table.contains("(no baseline cell)"), "table:\n{table}");
+
+        let bad = Json::obj(vec![("schema", Json::str("zkdl/other/v9"))]);
+        assert!(sample_report().compare_table(&bad).is_err());
+        assert!(sample_report().compare_table(&Json::Null).is_err());
     }
 }

@@ -105,6 +105,9 @@ define_counters! {
     ProvKeyHits => "cache/provkey/hits",
     ProvKeyMisses => "cache/provkey/misses",
     ProvKeyEvictions => "cache/provkey/evictions",
+    MsmTableHits => "msm/table_hits",
+    MsmBatchAddSweeps => "msm/batch_add_sweeps",
+    ArenaBytesReused => "arena/bytes_reused",
 }
 
 static COUNTERS: [AtomicU64; Counter::COUNT] = [const { AtomicU64::new(0) }; Counter::COUNT];

@@ -203,6 +203,10 @@ impl UpdateKey {
             rule: *r,
             g_upd: CommitKey::setup(&label, n),
         });
+        // fixed-base table for the stacked remainder basis, amortized by
+        // the Arc cache (skipped automatically for bases past the table
+        // size cap)
+        uk.g_upd.warm_table();
         let mut cache = UPDKEY_CACHE.lock().unwrap();
         if cache.len() >= UPDKEY_CACHE_CAP {
             // bounded eviction rather than insert-refusal: hostile key

@@ -1,0 +1,82 @@
+//! Flat scratch arena for prover-side tensor work.
+//!
+//! Per-step witness/aux generation used to allocate fresh `Vec<Fr>`s for
+//! every (step, layer) pair — eq-tables, MLE fold buffers, expanded
+//! integer tensors — churning the allocator T·L times per trace. An
+//! [`FrArena`] owns one growable region and hands out zero-initialized
+//! scratch slices; after the first step the region's capacity is warm and
+//! every reuse is counted as `arena/bytes_reused`.
+
+use crate::field::Fr;
+use crate::telemetry::{self, Counter};
+
+/// One reusable bump region of field elements.
+#[derive(Default)]
+pub struct FrArena {
+    buf: Vec<Fr>,
+}
+
+impl FrArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Arena with capacity for `n` elements pre-reserved (so even the
+    /// first scratch call of a sized workload avoids growth realloc).
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            buf: Vec::with_capacity(n),
+        }
+    }
+
+    /// Run `f` over a zeroed scratch slice of `n` elements carved from the
+    /// arena. The slice's lifetime is the call — the region is recycled by
+    /// the next `scratch`, which is what makes it an arena and not an
+    /// allocation.
+    pub fn scratch<R>(&mut self, n: usize, f: impl FnOnce(&mut [Fr]) -> R) -> R {
+        if self.buf.capacity() >= n {
+            telemetry::count(
+                Counter::ArenaBytesReused,
+                (n * std::mem::size_of::<Fr>()) as u64,
+            );
+        }
+        self.buf.clear();
+        self.buf.resize(n, Fr::ZERO);
+        f(&mut self.buf[..n])
+    }
+
+    /// Current capacity in bytes (high-water mark of all scratch sizes).
+    pub fn capacity_bytes(&self) -> usize {
+        self.buf.capacity() * std::mem::size_of::<Fr>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_is_zeroed_and_reused() {
+        let mut arena = FrArena::new();
+        let s = arena.scratch(16, |buf| {
+            assert!(buf.iter().all(|v| *v == Fr::ZERO));
+            buf[3] = Fr::from_u64(7);
+            buf[3]
+        });
+        assert_eq!(s, Fr::from_u64(7));
+        // second call sees zeroed memory again, smaller size fits capacity
+        arena.scratch(8, |buf| {
+            assert_eq!(buf.len(), 8);
+            assert!(buf.iter().all(|v| *v == Fr::ZERO));
+        });
+        assert!(arena.capacity_bytes() >= 16 * std::mem::size_of::<Fr>());
+    }
+
+    #[test]
+    fn with_capacity_prewarms() {
+        let mut arena = FrArena::with_capacity(32);
+        let cap = arena.capacity_bytes();
+        arena.scratch(32, |_| {});
+        assert_eq!(arena.capacity_bytes(), cap);
+    }
+}

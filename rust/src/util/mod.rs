@@ -3,6 +3,7 @@
 //! These exist because the offline environment has no `rand`, `criterion`,
 //! `rayon`, or `clap`; see DESIGN.md §Environment constraints.
 
+pub mod arena;
 pub mod bench;
 pub mod cli;
 pub mod rng;

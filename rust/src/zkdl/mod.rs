@@ -27,9 +27,10 @@ use crate::field::Fr;
 use crate::gkr;
 use crate::ipa::{self, EvalClaim, IpaProof};
 use crate::model::ModelConfig;
-use crate::poly::{eq_table, Mle};
+use crate::poly::{self, eq_table, Mle};
 use crate::sumcheck::{self, Instance, SumcheckProof, Term};
 use crate::transcript::Transcript;
+use crate::util::arena::FrArena;
 use crate::util::rng::Rng;
 use crate::witness::StepWitness;
 use crate::zkrelu::{self, Protocol1Msg, ValidityBases, ValidityProof};
@@ -72,22 +73,24 @@ impl ProverKey {
     pub fn setup(cfg: ModelConfig) -> Self {
         let (_, n) = stack_dims(&cfg);
         let d2 = cfg.width * cfg.width;
-        Self {
+        let key = Self {
             cfg,
             g_aux: CommitKey::setup(b"zkdl/aux", n),
             g_mat: CommitKey::setup(b"zkdl/mat", d2),
             g_x: CommitKey::setup(b"zkdl/x", cfg.d_size()),
-        }
+        };
+        // fixed-base tables, built once per cached key at setup
+        key.g_aux.warm_table();
+        key.g_mat.warm_table();
+        key.g_x.warm_table();
+        key
     }
 
-    /// Commitment key slice for layer ℓ's aux block.
+    /// Commitment key slice for layer ℓ's aux block. Shares the stacked
+    /// basis' fixed-base table via the slice offset.
     pub fn block(&self, l: usize) -> CommitKey {
         let d = self.cfg.d_size();
-        CommitKey {
-            g: self.g_aux.g[l * d..(l + 1) * d].to_vec(),
-            h: self.g_aux.h,
-            label: self.g_aux.label.clone(),
-        }
+        self.g_aux.slice(l * d, (l + 1) * d)
     }
 }
 
@@ -500,11 +503,7 @@ fn group_validity_bases(
         let extra = crate::curve::derive_generators(b"zkdl/aux-pad", n - g.len());
         g.extend(extra);
     }
-    let ck = CommitKey {
-        g,
-        h: pk.g_aux.h,
-        label: pk.g_aux.label.clone(),
-    };
+    let ck = CommitKey::from_parts(g, pk.g_aux.h, pk.g_aux.label.clone());
     // label must pin the exact block layout: first layer AND group length
     // (a depth-3 and a depth-4 parallel group share lbar=4 but differ in
     // which slots are real blocks vs padding)
@@ -668,6 +667,10 @@ pub fn prove_step(
     }
     let mut phase1: Vec<Phase1Out> = Vec::new();
 
+    // eq-table scratch shared across all groups and all three sumcheck
+    // families (see aggregate::eval_i64_with_eq for the same shape)
+    let mut arena = FrArena::new();
+
     for gs in &gstates {
         let ch = draw_group_challenges(&mut t, log_b, log_d);
         // (30): claimed Z̃^ℓ(u_zr,u_zc), factors A^{ℓ−1}(u_zr,·), W^{ℓᵀ}(u_zc,·)
@@ -675,17 +678,18 @@ pub fn prove_step(
         let mut v_z = Vec::new();
         let mut terms30 = Vec::new();
         let mut coeff = Fr::ONE;
-        for &l in &gs.layers {
-            let z_mat = gkr::Matrix::from_i64(&wit.layers[l].z, cfg.batch, cfg.width);
-            let vz = z_mat.evaluate(&pz);
-            v_z.push(vz);
-            let a_prev = if l == 0 { &pl.x } else { &pl.a[l - 1] };
-            terms30.push(Term::new(
-                coeff,
-                vec![a_prev.fix_rows(&ch.u_zr), pl.w[l].transpose().fix_rows(&ch.u_zc)],
-            ));
-            coeff *= ch.gamma;
-        }
+        arena.scratch(1 << pz.len(), |eq_pz| {
+            poly::eq_table_into(&pz, eq_pz);
+            for &l in &gs.layers {
+                v_z.push(poly::eval_i64_with_eq(&wit.layers[l].z, eq_pz));
+                let a_prev = if l == 0 { &pl.x } else { &pl.a[l - 1] };
+                terms30.push(Term::new(
+                    coeff,
+                    vec![a_prev.fix_rows(&ch.u_zr), pl.w[l].transpose().fix_rows(&ch.u_zc)],
+                ));
+                coeff *= ch.gamma;
+            }
+        });
         t.absorb_frs(b"v_z", &v_z);
         let out30 = sumcheck::prove(Instance::new(terms30), &mut t);
         let mm30_evals: Vec<(Fr, Fr)> =
@@ -718,19 +722,23 @@ pub fn prove_step(
         if !inner.is_empty() {
             let mut terms33 = Vec::new();
             let mut coeff = Fr::ONE;
-            for &l in &inner {
-                let ga_mat =
-                    gkr::Matrix::from_i64(wit.layers[l].g_a.as_ref().unwrap(), cfg.batch, cfg.width);
-                v_ga.push(ga_mat.evaluate(&pga));
-                terms33.push(Term::new(
-                    coeff,
-                    vec![
-                        pl.g_z[l + 1].fix_rows(&ch.u_gar),
-                        pl.w[l + 1].fix_rows(&ch.u_gac),
-                    ],
-                ));
-                coeff *= ch.gamma;
-            }
+            arena.scratch(1 << pga.len(), |eq_pga| {
+                poly::eq_table_into(&pga, eq_pga);
+                for &l in &inner {
+                    v_ga.push(poly::eval_i64_with_eq(
+                        wit.layers[l].g_a.as_ref().unwrap(),
+                        eq_pga,
+                    ));
+                    terms33.push(Term::new(
+                        coeff,
+                        vec![
+                            pl.g_z[l + 1].fix_rows(&ch.u_gar),
+                            pl.w[l + 1].fix_rows(&ch.u_gac),
+                        ],
+                    ));
+                    coeff *= ch.gamma;
+                }
+            });
             t.absorb_frs(b"v_ga", &v_ga);
             let out33 = sumcheck::prove(Instance::new(terms33), &mut t);
             mm33_evals = out33.factor_evals.iter().map(|f| (f[0], f[1])).collect();
@@ -752,19 +760,21 @@ pub fn prove_step(
         let mut v_gw = Vec::new();
         let mut terms34 = Vec::new();
         let mut coeff = Fr::ONE;
-        for &l in &gs.layers {
-            let gw_mat = gkr::Matrix::from_i64(&wit.layers[l].g_w, cfg.width, cfg.width);
-            v_gw.push(gw_mat.evaluate(&pgw));
-            let a_prev = if l == 0 { &pl.x } else { &pl.a[l - 1] };
-            terms34.push(Term::new(
-                coeff,
-                vec![
-                    pl.g_z[l].transpose().fix_rows(&ch.u_gwr),
-                    a_prev.transpose().fix_rows(&ch.u_gwc),
-                ],
-            ));
-            coeff *= ch.gamma;
-        }
+        arena.scratch(1 << pgw.len(), |eq_pgw| {
+            poly::eq_table_into(&pgw, eq_pgw);
+            for &l in &gs.layers {
+                v_gw.push(poly::eval_i64_with_eq(&wit.layers[l].g_w, eq_pgw));
+                let a_prev = if l == 0 { &pl.x } else { &pl.a[l - 1] };
+                terms34.push(Term::new(
+                    coeff,
+                    vec![
+                        pl.g_z[l].transpose().fix_rows(&ch.u_gwr),
+                        a_prev.transpose().fix_rows(&ch.u_gwc),
+                    ],
+                ));
+                coeff *= ch.gamma;
+            }
+        });
         t.absorb_frs(b"v_gw", &v_gw);
         let out34 = sumcheck::prove(Instance::new(terms34), &mut t);
         let mm34_evals: Vec<(Fr, Fr)> =
@@ -918,11 +928,7 @@ pub fn prove_step(
         if gk_g.len() < n {
             gk_g.extend(crate::curve::derive_generators(b"zkdl/aux-pad", n - gk_g.len()));
         }
-        let gk = CommitKey {
-            g: gk_g,
-            h: pk.g_aux.h,
-            label: pk.g_aux.label.clone(),
-        };
+        let gk = CommitKey::from_parts(gk_g, pk.g_aux.h, pk.g_aux.label.clone());
 
         let mut tasks: Vec<(CommitKey, OpeningTask)> = Vec::new();
 
@@ -1609,11 +1615,7 @@ pub fn verify_step_accum(
                 lbar * d - gk_g.len(),
             ));
         }
-        let gk = CommitKey {
-            g: gk_g,
-            h: pk.g_aux.h,
-            label: pk.g_aux.label.clone(),
-        };
+        let gk = CommitKey::from_parts(gk_g, pk.g_aux.h, pk.g_aux.label.clone());
 
         let stack_expr = |cs: &[G1Affine]| -> ComExpr {
             ComExpr::sum(layers.iter().map(|&l| cs[l].to_projective()))
