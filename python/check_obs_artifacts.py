@@ -1,0 +1,336 @@
+#!/usr/bin/env python3
+"""CI guard: structural validation of zkFlight observability artifacts.
+
+Two artifact kinds, both produced by the ``zkdl`` CLI:
+
+* the event journal (``--journal <path>``) — JSONL, one ``zkdl/events/v1``
+  record per proof artifact. Checked: schema tag, required keys, strictly
+  increasing ``seq``, non-decreasing ``ts_unix``, a known ``verb`` and
+  ``outcome``, and the taxonomy invariant that ``failure_class`` is present
+  iff the outcome is ``rejected``.
+* the Perfetto/Chrome trace-event export (``--trace-out <path>``) — one JSON
+  document with a ``traceEvents`` array. Checked: parseability, known phase
+  tags, per-track (``tid``) stack discipline — every ``E`` matches the name
+  of the innermost open ``B``, nothing left open at the end — non-decreasing
+  timestamps per track, and a ``thread_name`` metadata event for every track
+  that carries duration events.
+
+Either check alone makes a loadable-but-wrong artifact (reordered events,
+orphaned spans, a rejection without a class) fail CI instead of silently
+rendering as a broken timeline.
+
+Usage:
+    python3 python/check_obs_artifacts.py --journal FLIGHT.jsonl
+    python3 python/check_obs_artifacts.py --trace TRACE.json
+    python3 python/check_obs_artifacts.py --journal A.jsonl --trace B.json
+
+Exit codes: 0 ok, 1 validation failure, 2 usage or unreadable input.
+"""
+
+import json
+import sys
+
+EVENT_SCHEMA = "zkdl/events/v1"
+
+VERBS = ("prove", "prove-trace", "verify-trace")
+OUTCOMES = ("proved", "accepted", "rejected")
+FAILURE_CLASSES = (
+    "wire-decode",
+    "version-unsupported",
+    "shape",
+    "transcript-binding",
+    "sumcheck",
+    "opening",
+    "validity",
+    "booleanity",
+    "chain-relation",
+    "provenance-selection",
+    "root-mismatch",
+    "msm-final-check",
+)
+
+# every record carries the full schema; optionals are null, never absent
+JOURNAL_KEYS = (
+    "schema",
+    "seq",
+    "ts_unix",
+    "verb",
+    "outcome",
+    "duration_s",
+    "wire_version",
+    "artifact_bytes",
+    "artifact_sha256",
+    "rule",
+    "dataset_root",
+    "failure_class",
+    "batch_index",
+    "batch_size",
+    "counters",
+)
+
+
+def check_journal(lines):
+    errors = []
+    prev_seq = None
+    prev_ts = None
+    records = 0
+    for lineno, line in enumerate(lines, 1):
+        if not line.strip():
+            continue
+        where = f"journal line {lineno}"
+        try:
+            rec = json.loads(line)
+        except ValueError as e:
+            errors.append(f"{where}: not JSON: {e}")
+            continue
+        records += 1
+        if rec.get("schema") != EVENT_SCHEMA:
+            errors.append(
+                f"{where}: schema {rec.get('schema')!r}, expected {EVENT_SCHEMA!r}"
+            )
+            continue
+        missing = [k for k in JOURNAL_KEYS if k not in rec]
+        if missing:
+            errors.append(f"{where}: missing keys {missing}")
+            continue
+        seq, ts = rec["seq"], rec["ts_unix"]
+        if prev_seq is not None and seq <= prev_seq:
+            errors.append(f"{where}: seq {seq} not greater than previous {prev_seq}")
+        if prev_ts is not None and ts < prev_ts:
+            errors.append(f"{where}: ts_unix {ts} went backwards from {prev_ts}")
+        prev_seq, prev_ts = seq, ts
+        if rec["verb"] not in VERBS:
+            errors.append(f"{where}: unknown verb {rec['verb']!r}")
+        if rec["outcome"] not in OUTCOMES:
+            errors.append(f"{where}: unknown outcome {rec['outcome']!r}")
+        cls = rec["failure_class"]
+        if rec["outcome"] == "rejected":
+            if cls is None:
+                errors.append(f"{where}: rejected record has no failure_class")
+            elif cls not in FAILURE_CLASSES:
+                errors.append(f"{where}: unknown failure_class {cls!r}")
+        elif cls is not None:
+            errors.append(
+                f"{where}: outcome {rec['outcome']!r} must not carry a "
+                f"failure_class (got {cls!r})"
+            )
+        if not isinstance(rec["counters"], dict):
+            errors.append(f"{where}: counters is not an object")
+    if records == 0:
+        errors.append("journal: no records")
+    return records, errors
+
+
+def check_trace(doc):
+    errors = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return 0, ["trace: no traceEvents array"]
+    open_stacks = {}  # tid -> [names], innermost last
+    last_ts = {}  # tid -> ts of the latest duration event
+    named_tids = set()
+    duration_tids = set()
+    for i, ev in enumerate(events):
+        where = f"trace event {i}"
+        ph = ev.get("ph")
+        if ph not in ("B", "E", "M", "C"):
+            errors.append(f"{where}: unknown phase {ph!r}")
+            continue
+        if ph == "M":
+            if ev.get("name") == "thread_name":
+                named_tids.add(ev.get("tid"))
+            continue
+        if ph == "C":
+            if not isinstance(ev.get("args", {}).get("value"), (int, float)):
+                errors.append(f"{where}: counter event has no numeric args.value")
+            continue
+        name, tid, ts = ev.get("name"), ev.get("tid"), ev.get("ts")
+        if not isinstance(ts, (int, float)):
+            errors.append(f"{where}: duration event has no numeric ts")
+            continue
+        duration_tids.add(tid)
+        if tid in last_ts and ts < last_ts[tid]:
+            errors.append(f"{where}: ts {ts} went backwards on tid {tid}")
+        last_ts[tid] = ts
+        stack = open_stacks.setdefault(tid, [])
+        if ph == "B":
+            stack.append(name)
+        else:  # "E"
+            if not stack:
+                errors.append(f"{where}: E {name!r} with no open span on tid {tid}")
+            elif stack[-1] != name:
+                errors.append(
+                    f"{where}: E {name!r} closes {stack[-1]!r} on tid {tid} "
+                    "(unbalanced nesting)"
+                )
+            else:
+                stack.pop()
+    for tid, stack in sorted(open_stacks.items(), key=lambda kv: str(kv[0])):
+        if stack:
+            errors.append(f"trace: tid {tid} left spans open at end: {stack}")
+    for tid in sorted(duration_tids, key=str):
+        if tid not in named_tids:
+            errors.append(f"trace: tid {tid} has duration events but no thread_name")
+    if not duration_tids:
+        errors.append("trace: no duration events")
+    return len(events), errors
+
+
+def load_lines(path):
+    try:
+        with open(path) as f:
+            return f.readlines()
+    except OSError as e:
+        print(f"check_obs_artifacts: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def load_json(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check_obs_artifacts: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def self_test():
+    def rec(**kw):
+        base = {k: None for k in JOURNAL_KEYS}
+        base.update(
+            schema=EVENT_SCHEMA,
+            seq=0,
+            ts_unix=100,
+            verb="verify-trace",
+            outcome="accepted",
+            duration_s=0.5,
+            wire_version=6,
+            artifact_bytes=4096,
+            counters={"msm/calls": 1},
+        )
+        base.update(kw)
+        return json.dumps(base)
+
+    good = [
+        rec(seq=0, verb="prove-trace", outcome="proved"),
+        rec(seq=1, ts_unix=101),
+        rec(seq=2, ts_unix=101, outcome="rejected", failure_class="sumcheck"),
+    ]
+    n, errs = check_journal(good)
+    assert (n, errs) == (3, []), errs
+
+    _, errs = check_journal([rec(seq=5), rec(seq=5)])
+    assert any("not greater" in e for e in errs), errs
+
+    _, errs = check_journal([rec(seq=0, ts_unix=9), rec(seq=1, ts_unix=8)])
+    assert any("backwards" in e for e in errs), errs
+
+    _, errs = check_journal([rec(outcome="rejected")])
+    assert any("no failure_class" in e for e in errs), errs
+
+    _, errs = check_journal([rec(outcome="rejected", failure_class="cosmic-rays")])
+    assert any("unknown failure_class" in e for e in errs), errs
+
+    _, errs = check_journal([rec(failure_class="sumcheck")])
+    assert any("must not carry" in e for e in errs), errs
+
+    _, errs = check_journal([rec(schema="zkdl/events/v999")])
+    assert any("schema" in e for e in errs), errs
+
+    bad = json.loads(rec())
+    del bad["wire_version"]
+    _, errs = check_journal([json.dumps(bad)])
+    assert any("missing keys" in e for e in errs), errs
+
+    def b(name, ts, tid=1):
+        return {"ph": "B", "name": name, "ts": ts, "pid": 1, "tid": tid}
+
+    def e(name, ts, tid=1):
+        return {"ph": "E", "name": name, "ts": ts, "pid": 1, "tid": tid}
+
+    def m(tid):
+        return {
+            "ph": "M",
+            "name": "thread_name",
+            "pid": 1,
+            "tid": tid,
+            "args": {"name": f"t{tid}"},
+        }
+
+    def c(ts):
+        return {"ph": "C", "name": "msm/points", "ts": ts, "pid": 1, "args": {"value": 7}}
+
+    good_trace = {
+        "traceEvents": [
+            m(1),
+            m(2),
+            b("outer", 1.0),
+            b("inner", 2.0),
+            e("inner", 3.0),
+            c(3.0),
+            b("worker", 1.5, tid=2),
+            e("worker", 2.5, tid=2),
+            e("outer", 4.0),
+        ],
+        "displayTimeUnit": "ms",
+    }
+    n, errs = check_trace(good_trace)
+    assert (n, errs) == (9, []), errs
+
+    _, errs = check_trace({"traceEvents": [m(1), b("a", 1.0), e("b", 2.0)]})
+    assert any("unbalanced" in e_ for e_ in errs), errs
+
+    _, errs = check_trace({"traceEvents": [m(1), b("a", 1.0)]})
+    assert any("left spans open" in e_ for e_ in errs), errs
+
+    _, errs = check_trace({"traceEvents": [m(1), e("a", 1.0)]})
+    assert any("no open span" in e_ for e_ in errs), errs
+
+    _, errs = check_trace({"traceEvents": [m(1), b("a", 2.0), e("a", 1.0)]})
+    assert any("backwards" in e_ for e_ in errs), errs
+
+    _, errs = check_trace({"traceEvents": [b("a", 1.0), e("a", 2.0)]})
+    assert any("no thread_name" in e_ for e_ in errs), errs
+
+    _, errs = check_trace({"notTraceEvents": []})
+    assert any("no traceEvents" in e_ for e_ in errs), errs
+
+    print("check_obs_artifacts self-test ok")
+
+
+def main(argv):
+    if len(argv) >= 2 and argv[1] == "--self-test":
+        self_test()
+        return 0
+    journal_path = trace_path = None
+    args = argv[1:]
+    while args:
+        if args[0] == "--journal" and len(args) >= 2:
+            journal_path, args = args[1], args[2:]
+        elif args[0] == "--trace" and len(args) >= 2:
+            trace_path, args = args[1], args[2:]
+        else:
+            print(__doc__.strip(), file=sys.stderr)
+            return 2
+    if journal_path is None and trace_path is None:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+
+    errors = []
+    if journal_path is not None:
+        n, errs = check_journal(load_lines(journal_path))
+        errors.extend(errs)
+        if not errs:
+            print(f"journal ok: {n} record(s) in {journal_path}")
+    if trace_path is not None:
+        n, errs = check_trace(load_json(trace_path))
+        errors.extend(errs)
+        if not errs:
+            print(f"trace ok: {n} event(s) in {trace_path}")
+    for e in errors:
+        print(f"check_obs_artifacts: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -45,8 +45,10 @@ use crate::zkdl::{
     derived_expr_gz_last, derived_expr_z, derived_open_ga, derived_open_gz_last, derived_open_z,
     draw_group_challenges, frs, tile_claims_at, tiled_eq, Committed, ProverLayers,
 };
+use crate::telemetry::failure::{classified, failure_class, Classify, VerifyFailureClass};
+use crate::telemetry::hist::{self, Hist};
 use crate::zkrelu::{self, Protocol1Msg, ValidityBases, ValidityProof};
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{Context, Result};
 
 /// Padded step count T̄, padded layer count L̄, and the trace-stacked aux
 /// size N = T̄·L̄·D. Step t's layer ℓ owns block (t·L̄ + ℓ)·D.
@@ -428,6 +430,7 @@ pub(crate) fn prove_trace_with_parts(
     rng: &mut Rng,
 ) -> TraceProof {
     crate::span!("aggregate/prove_trace");
+    let _lat = hist::timer(Hist::ProveTraceNs);
     let cfg = &tk.cfg;
     let t_steps = wits.len();
     assert_eq!(t_steps, tk.steps, "witness count mismatch");
@@ -1086,7 +1089,11 @@ pub(crate) fn prove_trace_with_parts(
 pub fn verify_trace(tk: &TraceKey, proof: &TraceProof) -> Result<()> {
     let mut acc = MsmAccumulator::new();
     verify_trace_accum(tk, proof, &mut acc)?;
-    ensure!(acc.flush(), "trace proof: deferred MSM check failed");
+    crate::ensure_class!(
+        acc.flush(),
+        VerifyFailureClass::MsmFinalCheck,
+        "trace proof: deferred MSM check failed"
+    );
     Ok(())
 }
 
@@ -1095,15 +1102,129 @@ pub fn verify_trace(tk: &TraceKey, proof: &TraceProof) -> Result<()> {
 /// verifier-chosen random ρᵢ before merging into the shared accumulator,
 /// preventing cross-proof cancellation.
 pub fn verify_traces_batch(pairs: &[(&TraceKey, &TraceProof)], rng: &mut Rng) -> Result<()> {
-    ensure!(!pairs.is_empty(), "empty trace batch");
+    crate::ensure_class!(
+        !pairs.is_empty(),
+        VerifyFailureClass::Shape,
+        "empty trace batch"
+    );
     let mut acc = MsmAccumulator::from_rng(rng);
     for (i, (tk, proof)) in pairs.iter().enumerate() {
         acc.set_scale(Fr::random_nonzero(rng));
         verify_trace_accum(tk, proof, &mut acc)
             .with_context(|| format!("batched trace {i}"))?;
     }
-    ensure!(acc.flush(), "trace batch: aggregate MSM check failed");
+    crate::ensure_class!(
+        acc.flush(),
+        VerifyFailureClass::MsmFinalCheck,
+        "trace batch: aggregate MSM check failed"
+    );
     Ok(())
+}
+
+/// Per-proof entry of a [`BatchVerifyReport`]: which artifact, which dataset
+/// root it claims (when provenance is on), and — on rejection — the typed
+/// failure class attributed by individual re-verification.
+#[derive(Clone, Debug)]
+pub struct BatchEntry {
+    pub index: usize,
+    /// Dataset root the proof commits to, if it carries provenance.
+    pub root: Option<Vec<u8>>,
+    pub accepted: bool,
+    pub failure_class: Option<VerifyFailureClass>,
+    /// Rendered error chain for rejected entries.
+    pub error: Option<String>,
+}
+
+/// Outcome of [`verify_traces_batch_report`]: one entry per proof plus the
+/// batch-level error when the aggregate check rejected.
+#[derive(Clone, Debug)]
+pub struct BatchVerifyReport {
+    pub entries: Vec<BatchEntry>,
+    /// Set when the batch as a whole rejected (even after per-proof
+    /// attribution — e.g. a cross-proof tamper only the aggregate sees).
+    pub batch_error: Option<String>,
+}
+
+impl BatchVerifyReport {
+    pub fn all_accepted(&self) -> bool {
+        self.batch_error.is_none() && self.entries.iter().all(|e| e.accepted)
+    }
+}
+
+/// The dataset root a trace proof commits to, if it carries provenance.
+pub fn trace_dataset_root(proof: &TraceProof) -> Option<Vec<u8>> {
+    proof.provenance.as_ref().map(|p| p.dataset.root.to_vec())
+}
+
+fn hex_bytes(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+/// Reject a batch whose proofs pin different dataset roots (the
+/// `--require-same-root` policy). Proofs without provenance are treated as
+/// root-less and never conflict.
+pub fn ensure_same_root(proofs: &[&TraceProof]) -> Result<()> {
+    let mut first: Option<(usize, Vec<u8>)> = None;
+    for (i, p) in proofs.iter().enumerate() {
+        let Some(root) = trace_dataset_root(p) else { continue };
+        match &first {
+            None => first = Some((i, root)),
+            Some((j, want)) => {
+                if *want != root {
+                    return Err(classified(
+                        VerifyFailureClass::RootMismatch,
+                        anyhow::anyhow!(
+                            "mixed dataset roots in batch: proof {j} pins {}, proof {i} pins {}",
+                            hex_bytes(want),
+                            hex_bytes(&root)
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// [`verify_traces_batch`] with per-proof attribution. The fast path is the
+/// unchanged one-MSM batch; only when the batch rejects does it fall back to
+/// verifying each proof individually (one MSM each) so the report can name
+/// the offending index and its [`VerifyFailureClass`]. A batch that rejects
+/// with every individual proof accepting records the aggregate error alone.
+pub fn verify_traces_batch_report(
+    pairs: &[(&TraceKey, &TraceProof)],
+    rng: &mut Rng,
+) -> BatchVerifyReport {
+    let mut entries: Vec<BatchEntry> = pairs
+        .iter()
+        .enumerate()
+        .map(|(index, (_, proof))| BatchEntry {
+            index,
+            root: trace_dataset_root(proof),
+            accepted: true,
+            failure_class: None,
+            error: None,
+        })
+        .collect();
+    match verify_traces_batch(pairs, rng) {
+        Ok(()) => BatchVerifyReport {
+            entries,
+            batch_error: None,
+        },
+        Err(batch_err) => {
+            for (entry, (tk, proof)) in entries.iter_mut().zip(pairs) {
+                if let Err(e) = verify_trace(tk, proof) {
+                    entry.accepted = false;
+                    entry.failure_class = failure_class(&e);
+                    entry.error = Some(format!("{e:#}"));
+                }
+            }
+            BatchVerifyReport {
+                entries,
+                batch_error: Some(format!("{batch_err:#}")),
+            }
+        }
+    }
 }
 
 /// Transcript replay and scalar checks of [`verify_trace`], every group
@@ -1114,6 +1235,7 @@ pub fn verify_trace_accum(
     acc: &mut MsmAccumulator,
 ) -> Result<()> {
     crate::span!("aggregate/verify_trace");
+    let _lat = hist::timer(Hist::VerifyTraceNs);
     let cfg = &tk.cfg;
     let t_steps = tk.steps;
     let depth = cfg.depth;
@@ -1124,10 +1246,18 @@ pub fn verify_trace_accum(
     let log_dd = log_b + log_d;
     let log_s = slots.trailing_zeros() as usize;
 
-    ensure!(proof.steps == t_steps, "step count mismatch");
-    ensure!(proof.coms.len() == t_steps, "commitment set count");
+    crate::ensure_class!(
+        proof.steps == t_steps,
+        VerifyFailureClass::Shape,
+        "step count mismatch"
+    );
+    crate::ensure_class!(
+        proof.coms.len() == t_steps,
+        VerifyFailureClass::Shape,
+        "commitment set count"
+    );
     for set in &proof.coms {
-        ensure!(
+        crate::ensure_class!(
             set.com_w.len() == depth
                 && set.com_gw.len() == depth
                 && set.com_zdp.len() == depth
@@ -1135,13 +1265,15 @@ pub fn verify_trace_accum(
                 && set.com_rz.len() == depth
                 && set.com_gap.len() == depth
                 && set.com_rga.len() == depth,
+            VerifyFailureClass::Shape,
             "wrong per-step commitment count"
         );
     }
 
     let chained = proof.chain.is_some();
-    ensure!(
+    crate::ensure_class!(
         !chained || t_steps >= 2,
+        VerifyFailureClass::Shape,
         "chained trace needs at least two steps"
     );
 
@@ -1173,7 +1305,10 @@ pub fn verify_trace_accum(
     if let Some(p) = &proof.p1_main.com_sign_prime {
         tr.absorb_point(b"p1/main/sign", p);
     } else {
-        bail!("main validity instance must carry com_sign_prime");
+        return Err(classified(
+            VerifyFailureClass::Shape,
+            anyhow::anyhow!("main validity instance must carry com_sign_prime"),
+        ));
     }
     tr.absorb_point(b"p1/rem", &proof.p1_rem.com_b_ip);
     if let Some(chain) = &proof.chain {
@@ -1183,7 +1318,12 @@ pub fn verify_trace_accum(
         tr.absorb_point(b"p1/sel", &prov.p1_sel.com_b_ip);
         match &prov.p1_sel.com_sign_prime {
             Some(p) => tr.absorb_point(b"p1/sel/sign", p),
-            None => bail!("selection booleanity instance must carry com_sign_prime"),
+            None => {
+                return Err(classified(
+                    VerifyFailureClass::Shape,
+                    anyhow::anyhow!("selection booleanity instance must carry com_sign_prime"),
+                ))
+            }
         }
     }
 
@@ -1192,8 +1332,12 @@ pub fn verify_trace_accum(
     let ch = draw_group_challenges(&mut tr, log_b, log_d);
     let n_zl = t_steps * depth;
     let n_inner = t_steps * (depth - 1);
-    ensure!(proof.v_z.len() == n_zl, "v_z length");
-    ensure!(proof.mm30_evals.len() == n_zl, "mm30 evals length");
+    crate::ensure_class!(proof.v_z.len() == n_zl, VerifyFailureClass::Shape, "v_z length");
+    crate::ensure_class!(
+        proof.mm30_evals.len() == n_zl,
+        VerifyFailureClass::Shape,
+        "mm30 evals length"
+    );
     tr.absorb_frs(b"v_z", &proof.v_z);
     let rlc = |vs: &[Fr]| -> Fr {
         let mut acc = Fr::ZERO;
@@ -1213,9 +1357,12 @@ pub fn verify_trace_accum(
         }
         acc
     };
-    let out30 = sumcheck::verify(rlc(&proof.v_z), &proof.mm30, &mut tr).context("mm30")?;
-    ensure!(
+    let out30 = sumcheck::verify(rlc(&proof.v_z), &proof.mm30, &mut tr)
+        .classify(VerifyFailureClass::Sumcheck)
+        .context("mm30")?;
+    crate::ensure_class!(
         rlc_prod(&proof.mm30_evals) == out30.final_claim,
+        VerifyFailureClass::TranscriptBinding,
         "mm30 factor evals mismatch"
     );
     tr.absorb_frs(
@@ -1226,13 +1373,28 @@ pub fn verify_trace_accum(
 
     let mut r33 = Vec::new();
     if depth >= 2 {
-        ensure!(proof.v_ga.len() == n_inner, "v_ga length");
-        ensure!(proof.mm33_evals.len() == n_inner, "mm33 evals length");
+        crate::ensure_class!(
+            proof.v_ga.len() == n_inner,
+            VerifyFailureClass::Shape,
+            "v_ga length"
+        );
+        crate::ensure_class!(
+            proof.mm33_evals.len() == n_inner,
+            VerifyFailureClass::Shape,
+            "mm33 evals length"
+        );
         tr.absorb_frs(b"v_ga", &proof.v_ga);
-        let sc33 = proof.mm33.as_ref().context("missing mm33")?;
-        let out33 = sumcheck::verify(rlc(&proof.v_ga), sc33, &mut tr).context("mm33")?;
-        ensure!(
+        let sc33 = proof
+            .mm33
+            .as_ref()
+            .context("missing mm33")
+            .classify(VerifyFailureClass::Shape)?;
+        let out33 = sumcheck::verify(rlc(&proof.v_ga), sc33, &mut tr)
+            .classify(VerifyFailureClass::Sumcheck)
+            .context("mm33")?;
+        crate::ensure_class!(
             rlc_prod(&proof.mm33_evals) == out33.final_claim,
+            VerifyFailureClass::TranscriptBinding,
             "mm33 factor evals mismatch"
         );
         tr.absorb_frs(
@@ -1241,16 +1403,27 @@ pub fn verify_trace_accum(
         );
         r33 = out33.point;
     } else {
-        ensure!(proof.mm33.is_none(), "unexpected mm33");
-        ensure!(proof.v_ga.is_empty() && proof.mm33_evals.is_empty(), "unexpected mm33 evals");
+        crate::ensure_class!(proof.mm33.is_none(), VerifyFailureClass::Shape, "unexpected mm33");
+        crate::ensure_class!(
+            proof.v_ga.is_empty() && proof.mm33_evals.is_empty(),
+            VerifyFailureClass::Shape,
+            "unexpected mm33 evals"
+        );
     }
 
-    ensure!(proof.v_gw.len() == n_zl, "v_gw length");
-    ensure!(proof.mm34_evals.len() == n_zl, "mm34 evals length");
+    crate::ensure_class!(proof.v_gw.len() == n_zl, VerifyFailureClass::Shape, "v_gw length");
+    crate::ensure_class!(
+        proof.mm34_evals.len() == n_zl,
+        VerifyFailureClass::Shape,
+        "mm34 evals length"
+    );
     tr.absorb_frs(b"v_gw", &proof.v_gw);
-    let out34 = sumcheck::verify(rlc(&proof.v_gw), &proof.mm34, &mut tr).context("mm34")?;
-    ensure!(
+    let out34 = sumcheck::verify(rlc(&proof.v_gw), &proof.mm34, &mut tr)
+        .classify(VerifyFailureClass::Sumcheck)
+        .context("mm34")?;
+    crate::ensure_class!(
         rlc_prod(&proof.mm34_evals) == out34.final_claim,
+        VerifyFailureClass::TranscriptBinding,
         "mm34 factor evals mismatch"
     );
     tr.absorb_frs(
@@ -1262,11 +1435,12 @@ pub fn verify_trace_accum(
     // ---- Phase 2 ----
     drop(mm_span);
     let stack_span = crate::telemetry::maybe_span("aggregate/stacking");
-    ensure!(
+    crate::ensure_class!(
         proof.va1.len() == slots
             && proof.va2.len() == slots
             && proof.vgz1.len() == slots
             && proof.vgz2.len() == slots,
+        VerifyFailureClass::Shape,
         "slot claims"
     );
     // Slot claims covered by matmul factor evals must match them; the
@@ -1275,21 +1449,25 @@ pub fn verify_trace_accum(
         for l in 0..depth {
             let s = t * lbar + l;
             if l + 1 < depth {
-                ensure!(
+                crate::ensure_class!(
                     proof.va1[s] == proof.mm30_evals[t * depth + l + 1].0,
+                    VerifyFailureClass::TranscriptBinding,
                     "va1 slot {s} mismatch"
                 );
-                ensure!(
+                crate::ensure_class!(
                     proof.va2[s] == proof.mm34_evals[t * depth + l + 1].1,
+                    VerifyFailureClass::TranscriptBinding,
                     "va2 slot {s} mismatch"
                 );
-                ensure!(
+                crate::ensure_class!(
                     proof.vgz2[s] == proof.mm34_evals[t * depth + l].0,
+                    VerifyFailureClass::TranscriptBinding,
                     "vgz2 slot {s} mismatch"
                 );
                 if l >= 1 {
-                    ensure!(
+                    crate::ensure_class!(
                         proof.vgz1[s] == proof.mm33_evals[t * (depth - 1) + l - 1].0,
+                        VerifyFailureClass::TranscriptBinding,
                         "vgz1 slot {s} mismatch"
                     );
                 }
@@ -1299,11 +1477,12 @@ pub fn verify_trace_accum(
     for s in 0..slots {
         let (t, l) = (s / lbar, s % lbar);
         if t >= t_steps || l >= depth {
-            ensure!(
+            crate::ensure_class!(
                 proof.va1[s].is_zero()
                     && proof.va2[s].is_zero()
                     && proof.vgz1[s].is_zero()
                     && proof.vgz2[s].is_zero(),
+                VerifyFailureClass::TranscriptBinding,
                 "padding slot claims must be zero"
             );
         }
@@ -1334,8 +1513,14 @@ pub fn verify_trace_accum(
             + gammas[1] * lhs(&pa2, &proof.va2)
             + gammas[2] * lhs(&qz1, &proof.vgz1)
             + gammas[3] * lhs(&qz2, &proof.vgz2);
-        let stack = proof.stack.as_ref().context("missing stack proof")?;
-        let out = sumcheck::verify(claimed, stack, &mut tr).context("stack")?;
+        let stack = proof
+            .stack
+            .as_ref()
+            .context("missing stack proof")
+            .classify(VerifyFailureClass::Shape)?;
+        let out = sumcheck::verify(claimed, stack, &mut tr)
+            .classify(VerifyFailureClass::Sumcheck)
+            .context("stack")?;
         let [v_sign, v_zdp, v_gap, _, _] = proof.aux_evals;
         let oms = Fr::ONE - v_sign;
         let term = |point: &Option<Vec<Fr>>, tensor_eval: Fr, gamma: Fr| -> Fr {
@@ -1351,10 +1536,18 @@ pub fn verify_trace_accum(
             + term(&pa2, v_zdp, gammas[1])
             + term(&qz1, v_gap, gammas[2])
             + term(&qz2, v_gap, gammas[3]);
-        ensure!(expect == out.final_claim, "stack final claim mismatch");
+        crate::ensure_class!(
+            expect == out.final_claim,
+            VerifyFailureClass::TranscriptBinding,
+            "stack final claim mismatch"
+        );
         out.point
     } else {
-        ensure!(proof.stack.is_none(), "unexpected stack proof");
+        crate::ensure_class!(
+            proof.stack.is_none(),
+            VerifyFailureClass::Shape,
+            "unexpected stack proof"
+        );
         tr.challenge_frs(b"stack/rho", log_s + log_dd)
     };
     tr.absorb_frs(b"aux/evals", &proof.aux_evals);
@@ -1579,14 +1772,16 @@ pub fn verify_trace_accum(
         }
     }
 
-    ensure!(
+    crate::ensure_class!(
         proof.openings.len() == checks.len(),
+        VerifyFailureClass::Shape,
         "opening count mismatch: {} vs {}",
         proof.openings.len(),
         checks.len()
     );
     for ((ck, check), opening) in checks.iter().zip(proof.openings.iter()) {
         ipa::batch_verify_eval_expr(ck, &check.claims, &check.evec, opening, &mut tr, acc)
+            .classify(VerifyFailureClass::Opening)
             .context("batched opening")?;
     }
 
@@ -1611,6 +1806,7 @@ pub fn verify_trace_accum(
         &mut tr,
         acc,
     )
+    .classify(VerifyFailureClass::Validity)
     .context("main validity")?;
     let u_dd_r = tr.challenge_fr(b"zkdl/u_dd_rem");
     let mut vpoint_r = vec![u_dd_r];
@@ -1629,6 +1825,7 @@ pub fn verify_trace_accum(
         &mut tr,
         acc,
     )
+    .classify(VerifyFailureClass::Validity)
     .context("remainder validity")?;
 
     // ---- Phase 5: zkOptim chain argument (chained traces only) ----
@@ -1638,9 +1835,12 @@ pub fn verify_trace_accum(
         // here so untrusted proofs fail cleanly — the full statement
         // validation (shift table, tensor counts) lives in
         // `verify_chain_accum`, its single source
-        update::checked_stack_dims(cfg, t_steps, chain.rule.n_rem()).context("chained trace")?;
+        update::checked_stack_dims(cfg, t_steps, chain.rule.n_rem())
+            .classify(VerifyFailureClass::Shape)
+            .context("chained trace")?;
         let uk = UpdateKey::setup(*cfg, t_steps, &chain.rule);
         update::verify_chain_accum(&uk, &tk.g_mat, &proof.coms, chain, &mut tr, acc)
+            .classify(VerifyFailureClass::ChainRelation)
             .context("zkOptim chain")?;
     }
 
@@ -1649,12 +1849,14 @@ pub fn verify_trace_accum(
         // sizing + structural guards before any key setup, so untrusted
         // proofs fail cleanly instead of panicking the verifier
         provenance::validate_provenance_shape(cfg, t_steps, prov)
+            .classify(VerifyFailureClass::Shape)
             .context("provenance payload")?;
         let pkey = ProvenanceKey::setup(*cfg, t_steps, prov.dataset.n_rows);
         let y_slots: Vec<usize> = (0..t_steps).map(|t| t * lbar + (depth - 1)).collect();
         provenance::verify_provenance_accum(
             &pkey, &tk.g_x, &tk.g_aux, slots, &y_slots, &proof.coms, prov, &mut tr, acc,
         )
+        .classify(VerifyFailureClass::ProvenanceSelection)
         .context("zkData provenance")?;
     }
 

@@ -172,6 +172,7 @@ pub fn train_and_prove(
     let steps = std::thread::scope(|scope| -> Result<Vec<StepMetrics>> {
         let (tx, rx) = mpsc::sync_channel::<PendingStep>(opts.pipeline_depth);
         let prover = scope.spawn(move || -> Result<Vec<StepMetrics>> {
+            crate::telemetry::trace_export::set_thread_name("prover-worker");
             let mut prng = Rng::seed_from_u64(opts.seed ^ 0x9e3779b97f4a7c15);
             let mut out = Vec::new();
             while let Ok(pending) = rx.recv() {
@@ -419,6 +420,7 @@ pub fn train_and_prove_trace(
         let seed = opts.seed;
         let prover_dataset = &prover_dataset;
         let aggregator = scope.spawn(move || -> Result<Vec<WindowOut>> {
+            crate::telemetry::trace_export::set_thread_name("aggregator-worker");
             let mut prng = Rng::seed_from_u64(seed ^ 0x7ace);
             let mut out = Vec::new();
             let mut buf: Vec<StepWitness> = Vec::with_capacity(window);

@@ -407,6 +407,7 @@ pub fn set_backend(b: Arc<dyn MsmBackend>) -> Arc<dyn MsmBackend> {
 pub fn msm(bases: &[G1Affine], scalars: &[Fr]) -> G1 {
     telemetry::count(Counter::MsmCalls, 1);
     telemetry::count(Counter::MsmPoints, bases.len() as u64);
+    telemetry::hist::record(telemetry::hist::Hist::MsmSize, bases.len() as u64);
     backend().msm(bases, scalars)
 }
 
@@ -415,6 +416,7 @@ pub fn msm(bases: &[G1Affine], scalars: &[Fr]) -> G1 {
 pub fn msm_u64(bases: &[G1Affine], scalars: &[u64]) -> G1 {
     telemetry::count(Counter::MsmCalls, 1);
     telemetry::count(Counter::MsmPoints, bases.len() as u64);
+    telemetry::hist::record(telemetry::hist::Hist::MsmSize, bases.len() as u64);
     backend().msm_u64(bases, scalars)
 }
 

@@ -11,9 +11,13 @@
 //!                the dataset once and binds every step's batch to it
 //!                (the printed root is the endorsable Appendix-B statement)
 //!   verify-trace re-read persisted trace proofs and verify out-of-process;
-//!                multiple `--in` files batch into ONE MSM; `--expect-root
-//!                <hex>` additionally pins provenance artifacts to an
-//!                endorsed dataset root
+//!                multiple `--in` files batch into ONE MSM with a per-proof
+//!                outcome report; `--expect-root <hex>` additionally pins
+//!                provenance artifacts to an endorsed dataset root;
+//!                `--require-same-root` rejects batches whose provenance
+//!                artifacts pin different roots
+//!   audit        parse a zkFlight journal (`--journal <path>`), filter by
+//!                `--verb/--outcome/--class/--root`, and summarize
 //!   membership   build the Merkle tree and answer (non-)membership queries
 //!   bench        run the prove/verify grid (T × depth × variant) and write
 //!                a `BENCH_*.json` baseline; `--quick` runs one cheap cell;
@@ -21,10 +25,18 @@
 //!                against a previously recorded baseline
 //!   info         print configuration and environment
 //!
-//! Every verb accepts `--profile`: telemetry (zkObs) records a span tree
-//! and proof-system counters during the run and prints the profile after
-//! the verb completes. Without `--profile`, telemetry stays disabled (one
-//! relaxed atomic load per instrumentation site).
+//! Every verb accepts `--profile`: telemetry (zkObs) records a span tree,
+//! proof-system counters, and latency histograms during the run and prints
+//! the profile after the verb completes. Without `--profile`, telemetry
+//! stays disabled (one relaxed atomic load per instrumentation site).
+//!
+//! zkFlight flight-recorder flags (each implies telemetry on):
+//!   --journal <path>      append one `zkdl/events/v1` JSONL record per
+//!                         artifact: verb, outcome, typed failure class on
+//!                         rejection, digest, dataset root, counter deltas
+//!   --trace-out <path>    write a Chrome trace-event JSON timeline of the
+//!                         invocation's spans (load in ui.perfetto.dev)
+//!   --profile-out <path>  write the zkObs report as JSON to a file
 //!
 //! Example:
 //!   zkdl prove --depth 2 --width 64 --batch 16 --mode parallel --out step.zkp
@@ -35,7 +47,9 @@
 //!   zkdl prove-trace --provenance --depth 2 --width 16 --batch 8 --steps 4 --data-n 64
 //!   zkdl verify-trace --in trace.zkp
 //!   zkdl verify-trace --profile --in trace.zkp
-//!   zkdl verify-trace --in a.zkp --in b.zkp --in c.zkp
+//!   zkdl verify-trace --in a.zkp --in b.zkp --in c.zkp --require-same-root
+//!   zkdl verify-trace --in trace.zkp --journal flight.jsonl --trace-out trace.perfetto.json
+//!   zkdl audit --journal flight.jsonl --outcome rejected --class sumcheck
 //!   zkdl membership --n 1000 --queries 100 --hash sha256 --positivity 0.5
 //!   zkdl bench
 //!   zkdl bench --quick --out BENCH_ci.json
@@ -43,14 +57,20 @@
 
 use anyhow::{Context, Result};
 use std::path::Path;
-use zkdl::aggregate::{verify_trace, verify_traces_batch, TraceKey, TraceProof};
+use zkdl::aggregate::{
+    trace_dataset_root, verify_trace, verify_traces_batch_report, ensure_same_root, TraceKey,
+    TraceProof,
+};
 use zkdl::coordinator::{train_and_prove, train_and_prove_trace, TraceTrainOptions, TrainOptions};
 use zkdl::data::Dataset;
 use zkdl::hash::HashFn;
 use zkdl::merkle::{verify_membership, MerkleTree};
 use zkdl::model::{ModelConfig, Weights};
 use zkdl::runtime::WitnessSource;
+use zkdl::telemetry::failure::{classified, failure_class, VerifyFailureClass};
+use zkdl::telemetry::journal::{artifact_digest, read_journal, Journal, JournalEvent};
 use zkdl::update::{LrSchedule, UpdateRule};
+use zkdl::util::bench::Table;
 use zkdl::util::cli::Cli;
 use zkdl::util::rng::Rng;
 use zkdl::zkdl::{prove_step, verify_step, ProofMode, ProverKey};
@@ -86,7 +106,53 @@ fn hex_decode(s: &str) -> Result<Vec<u8>> {
         .collect()
 }
 
+/// Per-invocation zkFlight state: the open journal (when `--journal` was
+/// given) plus the counter snapshot and clock that every record's
+/// invocation-wide delta and duration are computed against.
+struct Flight {
+    journal: Option<Journal>,
+    before: [u64; zkdl::telemetry::Counter::COUNT],
+    start: std::time::Instant,
+}
+
+impl Flight {
+    fn open(cli: &Cli) -> Result<Flight> {
+        let journal = cli
+            .get("journal")
+            .map(|p| Journal::open(Path::new(p)))
+            .transpose()?;
+        Ok(Flight {
+            journal,
+            before: zkdl::telemetry::counters_snapshot(),
+            start: std::time::Instant::now(),
+        })
+    }
+
+    /// Stamp invocation duration + counter deltas and append. No-op when no
+    /// journal is open.
+    fn record(&mut self, mut event: JournalEvent) -> Result<()> {
+        if let Some(j) = &mut self.journal {
+            event.duration_s = self.start.elapsed().as_secs_f64();
+            let after = zkdl::telemetry::counters_snapshot();
+            event.counters = zkdl::telemetry::journal::counter_deltas(&after, &self.before);
+            j.append(event)?;
+        }
+        Ok(())
+    }
+}
+
+/// The envelope version an artifact claims (0 when the magic is absent) —
+/// journaled even for artifacts the decoder rejects.
+fn artifact_wire_version(bytes: &[u8]) -> u64 {
+    if bytes.len() >= 6 && bytes[0..4] == zkdl::wire::MAGIC {
+        u16::from_le_bytes([bytes[4], bytes[5]]) as u64
+    } else {
+        0
+    }
+}
+
 fn cmd_prove(cli: &Cli) -> Result<()> {
+    let mut flight = Flight::open(cli)?;
     let cfg = model_config(cli);
     let mode = proof_mode(cli);
     let mut rng = Rng::seed_from_u64(cli.get_u64("seed", 1));
@@ -123,15 +189,21 @@ fn cmd_prove(cli: &Cli) -> Result<()> {
         t.elapsed().as_secs_f64(),
         proof.size_bytes() as f64 / 1024.0
     );
+    let mut ev = JournalEvent::new("prove", "proved");
+    ev.wire_version = zkdl::wire::VERSION as u64;
     if let Some(path) = cli.get("out") {
         let bytes = zkdl::wire::encode_step_proof(&cfg, &proof);
         std::fs::write(path, &bytes)?;
         println!("wrote {path} ({} wire bytes)", bytes.len());
+        ev.artifact_bytes = bytes.len() as u64;
+        ev.artifact_sha256 = Some(artifact_digest(&bytes));
     }
+    flight.record(ev)?;
     Ok(())
 }
 
 fn cmd_prove_trace(cli: &Cli) -> Result<()> {
+    let mut flight = Flight::open(cli)?;
     let cfg = model_config(cli);
     let steps = cli.get_usize("steps", 8);
     let out = cli.get("out").unwrap_or("trace.zkp");
@@ -181,8 +253,9 @@ fn cmd_prove_trace(cli: &Cli) -> Result<()> {
             hex_encode(root)
         );
     }
+    let n_windows = report.proofs.len();
     for (i, (w, proof)) in report.windows.iter().zip(report.proofs.iter()).enumerate() {
-        let path = if report.proofs.len() == 1 {
+        let path = if n_windows == 1 {
             out.to_string()
         } else {
             format!("{out}.{i}")
@@ -196,11 +269,41 @@ fn cmd_prove_trace(cli: &Cli) -> Result<()> {
             bytes.len(),
             w.proof_bytes
         );
+        let mut ev = JournalEvent::new("prove-trace", "proved");
+        ev.wire_version = zkdl::wire::VERSION as u64;
+        ev.artifact_bytes = bytes.len() as u64;
+        ev.artifact_sha256 = Some(artifact_digest(&bytes));
+        ev.rule = proof.chain.as_ref().map(|c| c.rule.name().to_string());
+        ev.dataset_root = trace_dataset_root(proof).map(|r| hex_encode(&r));
+        if n_windows > 1 {
+            ev.batch_index = Some(i as u64);
+            ev.batch_size = Some(n_windows as u64);
+        }
+        flight.record(ev)?;
+    }
+    Ok(())
+}
+
+/// Pin a provenance artifact to an endorsed root. Failures (no provenance
+/// payload, or a different root) carry the `root-mismatch` class.
+fn check_expected_root(path: &str, proof: &TraceProof, root: &[u8]) -> Result<()> {
+    let Some(got) = trace_dataset_root(proof) else {
+        return Err(classified(
+            VerifyFailureClass::RootMismatch,
+            anyhow::anyhow!("{path}: --expect-root given but artifact has no provenance"),
+        ));
+    };
+    if got != root {
+        return Err(classified(
+            VerifyFailureClass::RootMismatch,
+            anyhow::anyhow!("{path}: dataset root does not match the endorsed root"),
+        ));
     }
     Ok(())
 }
 
 fn cmd_verify_trace(cli: &Cli) -> Result<()> {
+    let mut flight = Flight::open(cli)?;
     let mut paths: Vec<String> = cli.get_all("in").iter().map(|s| s.to_string()).collect();
     paths.extend(cli.positional.iter().cloned());
     if paths.is_empty() {
@@ -211,11 +314,49 @@ fn cmd_verify_trace(cli: &Cli) -> Result<()> {
         .map(hex_decode)
         .transpose()
         .context("parsing --expect-root")?;
+
+    // journal a rejection for artifact `idx` (or all of them when None),
+    // then surface the error
+    let reject = |flight: &mut Flight,
+                      metas: &[(String, u64, String, u64)],
+                      idx: Option<usize>,
+                      e: &anyhow::Error|
+     -> Result<()> {
+        let class = failure_class(e).map(|c| c.name().to_string());
+        for (i, (_, bytes, sha, ver)) in metas.iter().enumerate() {
+            if idx.is_some_and(|want| want != i) {
+                continue;
+            }
+            let mut ev = JournalEvent::new("verify-trace", "rejected");
+            ev.wire_version = *ver;
+            ev.artifact_bytes = *bytes;
+            ev.artifact_sha256 = Some(sha.clone());
+            ev.failure_class = class.clone();
+            flight.record(ev)?;
+        }
+        Ok(())
+    };
+
     let mut decoded: Vec<TraceProof> = Vec::with_capacity(paths.len());
     let mut keys: Vec<TraceKey> = Vec::with_capacity(paths.len());
+    // (path, wire bytes, sha256, claimed wire version) per artifact
+    let mut metas: Vec<(String, u64, String, u64)> = Vec::with_capacity(paths.len());
     for path in &paths {
         let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
-        let (cfg, proof) = zkdl::wire::decode_trace_proof(&bytes)?;
+        metas.push((
+            path.clone(),
+            bytes.len() as u64,
+            artifact_digest(&bytes),
+            artifact_wire_version(&bytes),
+        ));
+        let (cfg, proof) = match zkdl::wire::decode_trace_proof(&bytes) {
+            Ok(v) => v,
+            Err(e) => {
+                let e = e.context(format!("decoding {path}"));
+                reject(&mut flight, &metas, Some(metas.len() - 1), &e)?;
+                return Err(e);
+            }
+        };
         println!(
             "{path}: {} steps{}{}, L={} d={} B={}, {} wire bytes",
             proof.steps,
@@ -237,32 +378,182 @@ fn cmd_verify_trace(cli: &Cli) -> Result<()> {
             bytes.len()
         );
         if let Some(root) = &expect_root {
-            let prov = proof
-                .provenance
-                .as_ref()
-                .with_context(|| format!("{path}: --expect-root given but artifact has no provenance"))?;
-            anyhow::ensure!(
-                &prov.dataset.root == root,
-                "{path}: dataset root does not match the endorsed root"
-            );
+            if let Err(e) = check_expected_root(path, &proof, root) {
+                reject(&mut flight, &metas, Some(metas.len() - 1), &e)?;
+                return Err(e);
+            }
         }
         keys.push(TraceKey::setup(cfg, proof.steps));
         decoded.push(proof);
     }
+
+    if cli.flag("require-same-root") {
+        let refs: Vec<&TraceProof> = decoded.iter().collect();
+        if let Err(e) = ensure_same_root(&refs) {
+            reject(&mut flight, &metas, None, &e)?;
+            return Err(e);
+        }
+    }
+
+    let fill = |mut ev: JournalEvent, i: usize| -> JournalEvent {
+        let (_, bytes, sha, ver) = &metas[i];
+        ev.wire_version = *ver;
+        ev.artifact_bytes = *bytes;
+        ev.artifact_sha256 = Some(sha.clone());
+        ev.rule = decoded[i].chain.as_ref().map(|c| c.rule.name().to_string());
+        ev.dataset_root = trace_dataset_root(&decoded[i]).map(|r| hex_encode(&r));
+        ev
+    };
+
     let t = std::time::Instant::now();
     if decoded.len() == 1 {
-        verify_trace(&keys[0], &decoded[0]).context("trace verification failed")?;
+        if let Err(e) = verify_trace(&keys[0], &decoded[0]) {
+            let e = e.context("trace verification failed");
+            let class = failure_class(&e).map(|c| c.name().to_string());
+            let mut ev = fill(JournalEvent::new("verify-trace", "rejected"), 0);
+            ev.failure_class = class;
+            flight.record(ev)?;
+            return Err(e);
+        }
         println!("verified in {:.3} s (one MSM)", t.elapsed().as_secs_f64());
+        flight.record(fill(JournalEvent::new("verify-trace", "accepted"), 0))?;
     } else {
         let pairs: Vec<(&TraceKey, &TraceProof)> = keys.iter().zip(decoded.iter()).collect();
         let mut rng = Rng::from_entropy();
-        verify_traces_batch(&pairs, &mut rng).context("batched trace verification failed")?;
+        let report = verify_traces_batch_report(&pairs, &mut rng);
+        let n = decoded.len();
+        let mut table = Table::new(&["idx", "path", "root", "outcome", "class"]);
+        for entry in &report.entries {
+            table.row(vec![
+                entry.index.to_string(),
+                metas[entry.index].0.clone(),
+                entry
+                    .root
+                    .as_ref()
+                    .map(|r| hex_encode(r))
+                    .unwrap_or_else(|| "-".to_string()),
+                if entry.accepted { "accepted" } else { "rejected" }.to_string(),
+                entry
+                    .failure_class
+                    .map(|c| c.name().to_string())
+                    .unwrap_or_else(|| "-".to_string()),
+            ]);
+        }
+        table.print();
+        for entry in &report.entries {
+            let outcome = if entry.accepted { "accepted" } else { "rejected" };
+            let mut ev = fill(JournalEvent::new("verify-trace", outcome), entry.index);
+            ev.failure_class = entry.failure_class.map(|c| c.name().to_string());
+            ev.batch_index = Some(entry.index as u64);
+            ev.batch_size = Some(n as u64);
+            flight.record(ev)?;
+        }
+        if let Some(batch_err) = &report.batch_error {
+            anyhow::bail!("batched trace verification failed: {batch_err}");
+        }
         println!(
-            "batch-verified {} proofs in {:.3} s (one MSM total)",
-            decoded.len(),
+            "batch-verified {n} proofs in {:.3} s (one MSM total)",
             t.elapsed().as_secs_f64()
         );
     }
+    Ok(())
+}
+
+fn cmd_audit(cli: &Cli) -> Result<()> {
+    let default_path = "journal.jsonl".to_string();
+    let path = cli
+        .get("journal")
+        .or_else(|| cli.get("in"))
+        .map(|s| s.to_string())
+        .or_else(|| cli.positional.first().cloned())
+        .unwrap_or(default_path);
+    let (events, bad) = read_journal(Path::new(&path))?;
+    if let Some(class) = cli.get("class") {
+        anyhow::ensure!(
+            VerifyFailureClass::parse(class).is_some(),
+            "unknown failure class {class:?} (see DESIGN.md §telemetry for the taxonomy)"
+        );
+    }
+    let keep = |ev: &JournalEvent| -> bool {
+        cli.get("verb").map_or(true, |v| ev.verb == v)
+            && cli.get("outcome").map_or(true, |o| ev.outcome == o)
+            && cli
+                .get("class")
+                .map_or(true, |c| ev.failure_class.as_deref() == Some(c))
+            && cli
+                .get("root")
+                .map_or(true, |r| ev.dataset_root.as_deref() == Some(r))
+    };
+    let filtered: Vec<&JournalEvent> = events.iter().filter(|ev| keep(ev)).collect();
+
+    let mut table = Table::new(&["seq", "verb", "outcome", "class", "dur s", "bytes", "root"]);
+    for ev in &filtered {
+        table.row(vec![
+            ev.seq.to_string(),
+            ev.verb.clone(),
+            ev.outcome.clone(),
+            ev.failure_class.clone().unwrap_or_else(|| "-".to_string()),
+            format!("{:.3}", ev.duration_s),
+            ev.artifact_bytes.to_string(),
+            ev.dataset_root
+                .as_deref()
+                .map(|r| {
+                    // roots are 64 hex chars; keep rows narrow
+                    if r.len() > 12 {
+                        format!("{}…", &r[..12])
+                    } else {
+                        r.to_string()
+                    }
+                })
+                .unwrap_or_else(|| "-".to_string()),
+        ]);
+    }
+    table.print();
+
+    // verb × outcome summary over the *filtered* set
+    let mut counts: Vec<((String, String), u64)> = Vec::new();
+    for ev in &filtered {
+        let key = (ev.verb.clone(), ev.outcome.clone());
+        match counts.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, n)) => *n += 1,
+            None => counts.push((key, 1)),
+        }
+    }
+    let mut summary = Table::new(&["verb", "outcome", "count"]);
+    for ((verb, outcome), n) in &counts {
+        summary.row(vec![verb.clone(), outcome.clone(), n.to_string()]);
+    }
+    println!("-- summary --");
+    summary.print();
+    let rejected: Vec<&&JournalEvent> = filtered
+        .iter()
+        .filter(|ev| ev.outcome == "rejected")
+        .collect();
+    if !rejected.is_empty() {
+        let mut by_class: Vec<(String, u64)> = Vec::new();
+        for ev in &rejected {
+            let class = ev
+                .failure_class
+                .clone()
+                .unwrap_or_else(|| "unclassified".to_string());
+            match by_class.iter_mut().find(|(k, _)| *k == class) {
+                Some((_, n)) => *n += 1,
+                None => by_class.push((class, 1)),
+            }
+        }
+        let mut classes = Table::new(&["failure class", "count"]);
+        for (class, n) in &by_class {
+            classes.row(vec![class.clone(), n.to_string()]);
+        }
+        println!("-- rejections by class --");
+        classes.print();
+    }
+    println!(
+        "{} records shown ({} filtered out, {} malformed lines) from {path}",
+        filtered.len(),
+        events.len() - filtered.len(),
+        bad
+    );
     Ok(())
 }
 
@@ -399,19 +690,28 @@ fn cmd_info() {
 
 fn main() -> Result<()> {
     let cli = Cli::from_env();
-    // --profile: record spans + counters for this invocation and print the
-    // zkObs report afterwards. `bench` manages telemetry itself (reset +
+    // zkFlight/zkObs lifecycle: any flight-recorder output implies telemetry
+    // on for the invocation. `bench` manages telemetry itself (reset +
     // exclusive), so profiling composes with every verb but reads empty
     // after a bench run.
     let profile = cli.flag("profile");
-    if profile {
+    let trace_out = cli.get("trace-out").map(|s| s.to_string());
+    let profile_out = cli.get("profile-out").map(|s| s.to_string());
+    let telemetry_on =
+        profile || trace_out.is_some() || profile_out.is_some() || cli.get("journal").is_some();
+    if telemetry_on {
         zkdl::telemetry::set_enabled(true);
+    }
+    if trace_out.is_some() {
+        zkdl::telemetry::trace_export::set_recording(true);
+        zkdl::telemetry::trace_export::set_thread_name("main");
     }
     let result = match cli.subcommand.as_deref() {
         Some("prove") => cmd_prove(&cli),
         Some("train") => cmd_train(&cli),
         Some("prove-trace") => cmd_prove_trace(&cli),
         Some("verify-trace") => cmd_verify_trace(&cli),
+        Some("audit") => cmd_audit(&cli),
         Some("membership") => cmd_membership(&cli),
         Some("bench") => cmd_bench(&cli),
         Some("info") | None => {
@@ -421,14 +721,38 @@ fn main() -> Result<()> {
         Some(other) => {
             eprintln!("unknown subcommand: {other}");
             eprintln!(
-                "usage: zkdl [prove|train|prove-trace|verify-trace|membership|bench|info] [--key value]"
+                "usage: zkdl [prove|train|prove-trace|verify-trace|audit|membership|bench|info] [--key value]"
             );
             std::process::exit(2);
         }
     };
-    if profile {
+    // flight-recorder outputs are written even when the verb failed — a
+    // rejected verification is exactly the flight worth replaying
+    let outputs = (|| -> Result<()> {
+        if let Some(path) = &trace_out {
+            zkdl::telemetry::trace_export::set_recording(false);
+            let doc = zkdl::telemetry::trace_export::export_json();
+            std::fs::write(path, doc.to_string()).with_context(|| format!("writing {path}"))?;
+            println!(
+                "wrote {path} ({} trace events) — load in ui.perfetto.dev",
+                zkdl::telemetry::trace_export::event_count()
+            );
+        }
+        if profile || profile_out.is_some() {
+            let report = zkdl::telemetry::report();
+            if let Some(path) = &profile_out {
+                std::fs::write(path, report.to_json().to_string())
+                    .with_context(|| format!("writing {path}"))?;
+                println!("wrote {path}");
+            }
+            if profile {
+                print!("{}", report.render());
+            }
+        }
+        Ok(())
+    })();
+    if telemetry_on {
         zkdl::telemetry::set_enabled(false);
-        print!("{}", zkdl::telemetry::report().render());
     }
-    result
+    result.and(outputs)
 }

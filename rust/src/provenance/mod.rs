@@ -56,6 +56,7 @@ use crate::merkle::{leaf_point, point_leaf, MerkleTree};
 use crate::model::ModelConfig;
 use crate::poly::{eq_table, Mle};
 use crate::sumcheck::{self, Instance, SumcheckProof, Term};
+use crate::telemetry::failure::Classify;
 use crate::transcript::Transcript;
 use crate::util::rng::Rng;
 use crate::witness::StepWitness;
@@ -938,6 +939,7 @@ pub(crate) fn verify_provenance_accum(
         tr,
         acc,
     )
+    .classify(crate::telemetry::failure::VerifyFailureClass::Booleanity)
     .context("selection booleanity")?;
     Ok(())
 }

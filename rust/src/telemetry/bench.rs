@@ -17,6 +17,7 @@ use crate::aggregate::{
 use crate::data::Dataset;
 use crate::model::ModelConfig;
 use crate::provenance::ProverDataset;
+use crate::telemetry::hist::HistSummary;
 use crate::telemetry::{self, json::Json, Counter};
 use crate::util::bench::{fmt_dur, time_once, Table};
 use crate::util::rng::Rng;
@@ -118,6 +119,9 @@ pub struct BenchCase {
     /// Wire-encoded proof size ([`wire::encode_trace_proof`]).
     pub proof_bytes: u64,
     pub msm: MsmCounts,
+    /// zkFlight histogram digests for the cell (`(name, summary)`), reset
+    /// around each case so latency/size distributions are per-cell.
+    pub hists: Vec<(&'static str, HistSummary)>,
 }
 
 /// The full grid result: options, total wall time, and every case.
@@ -191,6 +195,7 @@ fn skipped_case(variant: Variant, steps: usize, depth: usize, reason: &str) -> B
         verify_s: 0.0,
         proof_bytes: 0,
         msm: MsmCounts::default(),
+        hists: Vec::new(),
     }
 }
 
@@ -209,6 +214,7 @@ fn run_case(
     let pd = (variant == Variant::Provenance)
         .then(|| ProverDataset::build(ds, &tk.cfg).expect("bench dataset commits"));
 
+    crate::telemetry::hist::reset_all();
     let before_prove = telemetry::counters_snapshot();
     let (proof, prove_d) = time_once(|| match variant {
         Variant::Plain => prove_trace(tk, wits, rng),
@@ -242,6 +248,7 @@ fn run_case(
             verify_flushes: delta(&after_verify, &before_verify, Counter::MsmFlushes),
             verify_equations: delta(&after_verify, &before_verify, Counter::MsmEquations),
         },
+        hists: crate::telemetry::hist::summaries(),
     }
 }
 
@@ -271,6 +278,15 @@ impl BenchCase {
                     ("verify_flushes", Json::Uint(self.msm.verify_flushes)),
                     ("verify_equations", Json::Uint(self.msm.verify_equations)),
                 ]),
+            ),
+            (
+                "hists",
+                Json::Obj(
+                    self.hists
+                        .iter()
+                        .map(|(name, s)| (name.to_string(), s.to_json()))
+                        .collect(),
+                ),
             ),
         ])
     }
@@ -508,6 +524,16 @@ mod tests {
                         verify_flushes: 1,
                         verify_equations: 7,
                     },
+                    hists: vec![(
+                        "lat/verify_trace_ns",
+                        HistSummary {
+                            count: 1,
+                            p50: 250_000_000,
+                            p95: 250_000_000,
+                            p99: 250_000_000,
+                            max: 250_000_000,
+                        },
+                    )],
                 },
                 skipped_case(Variant::Chained, 1, 2, "chained trace needs T >= 2"),
             ],
@@ -529,6 +555,10 @@ mod tests {
         let msm = first.get("msm").expect("msm block");
         assert_eq!(msm.get("verify_calls").and_then(|v| v.as_u64()), Some(1));
         assert_eq!(msm.get("verify_flushes").and_then(|v| v.as_u64()), Some(1));
+        let hists = first.get("hists").expect("hists block");
+        let vt = hists.get("lat/verify_trace_ns").expect("verify hist cell");
+        assert_eq!(vt.get("p50").and_then(|v| v.as_u64()), Some(250_000_000));
+        assert_eq!(vt.get("count").and_then(|v| v.as_u64()), Some(1));
         // skipped case carries its reason and zeroed measurements
         assert_eq!(
             cases[1].get("skipped").and_then(|v| v.as_str()),
@@ -562,6 +592,7 @@ mod tests {
                         verify_flushes: 1,
                         verify_equations: 7,
                     },
+                    hists: Vec::new(),
                 },
                 skipped_case(Variant::Chained, 1, 2, "chained trace needs T >= 2"),
             ],

@@ -1,0 +1,228 @@
+//! zkFlight failure taxonomy — typed verification-failure classes.
+//!
+//! Every verifier rejection is attributed to the *check that failed*, not
+//! just an opaque string: a [`VerifyFailureClass`] is attached to the
+//! `anyhow` error chain via `Context` at the phase boundary where the check
+//! lives, and recovered later by [`failure_class`] (an anyhow-native
+//! downcast — `err.chain()` cannot see context values, only
+//! `anyhow::Error::downcast_ref` walks the context layers).
+//!
+//! Attachment discipline: a class is attached **at most once** per error.
+//! [`Classify::classify`] and [`classified`] both leave an already-classified
+//! error untouched, so an inner, more specific class (e.g. `Booleanity`
+//! raised inside the provenance phase) wins over the outer phase-level class
+//! (`ProvenanceSelection`). Each attachment bumps the matching `reject/…`
+//! counter exactly once (gated on [`crate::telemetry::enabled`], like every
+//! other counter).
+//!
+//! The phase → class mapping is documented in DESIGN.md §telemetry; the
+//! tamper suites in `rust/tests/` pin one deterministic tamper per class.
+
+use crate::telemetry::{count, Counter};
+use std::fmt;
+
+/// Which verifier check rejected an artifact. Display/parse use stable
+/// kebab-case names (`"sumcheck"`, `"msm-final-check"`, …) — the strings
+/// that appear in journals, audit filters, and reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum VerifyFailureClass {
+    /// Artifact bytes failed structural decoding (bad magic, truncation,
+    /// malformed payload shapes caught by the decoder).
+    WireDecode,
+    /// Envelope version is not the verifier's wire version.
+    VersionUnsupported,
+    /// Proof-shape invariant violated (lengths, counts, missing/unexpected
+    /// sub-proofs) before any cryptographic check ran.
+    Shape,
+    /// Scalar claims disagree with transcript-bound values (factor-eval or
+    /// slot-claim cross-checks, stack final-claim mismatch).
+    TranscriptBinding,
+    /// A sumcheck round failed (wrong degree, round-consistency, count).
+    Sumcheck,
+    /// A batched IPA opening failed one of its scalar-side checks.
+    Opening,
+    /// The zkReLU validity/range argument rejected.
+    Validity,
+    /// The selection-booleanity instance (zkData) rejected.
+    Booleanity,
+    /// The zkOptim update-chain relation rejected.
+    ChainRelation,
+    /// The zkData batch-provenance selection argument rejected.
+    ProvenanceSelection,
+    /// Dataset root differs from the endorsed/pinned root (`--expect-root`,
+    /// `--require-same-root`).
+    RootMismatch,
+    /// All scalar checks passed but the single deferred MSM equation did
+    /// not close (tampered group elements or blinds).
+    MsmFinalCheck,
+}
+
+/// Every class, in enum order (drives audit summaries and tests).
+pub const ALL_CLASSES: &[VerifyFailureClass] = &[
+    VerifyFailureClass::WireDecode,
+    VerifyFailureClass::VersionUnsupported,
+    VerifyFailureClass::Shape,
+    VerifyFailureClass::TranscriptBinding,
+    VerifyFailureClass::Sumcheck,
+    VerifyFailureClass::Opening,
+    VerifyFailureClass::Validity,
+    VerifyFailureClass::Booleanity,
+    VerifyFailureClass::ChainRelation,
+    VerifyFailureClass::ProvenanceSelection,
+    VerifyFailureClass::RootMismatch,
+    VerifyFailureClass::MsmFinalCheck,
+];
+
+impl VerifyFailureClass {
+    /// Stable kebab-case name (journal/audit/report string).
+    pub fn name(self) -> &'static str {
+        match self {
+            VerifyFailureClass::WireDecode => "wire-decode",
+            VerifyFailureClass::VersionUnsupported => "version-unsupported",
+            VerifyFailureClass::Shape => "shape",
+            VerifyFailureClass::TranscriptBinding => "transcript-binding",
+            VerifyFailureClass::Sumcheck => "sumcheck",
+            VerifyFailureClass::Opening => "opening",
+            VerifyFailureClass::Validity => "validity",
+            VerifyFailureClass::Booleanity => "booleanity",
+            VerifyFailureClass::ChainRelation => "chain-relation",
+            VerifyFailureClass::ProvenanceSelection => "provenance-selection",
+            VerifyFailureClass::RootMismatch => "root-mismatch",
+            VerifyFailureClass::MsmFinalCheck => "msm-final-check",
+        }
+    }
+
+    /// Inverse of [`name`](Self::name) (audit `--class` filter).
+    pub fn parse(s: &str) -> Option<VerifyFailureClass> {
+        ALL_CLASSES.iter().copied().find(|c| c.name() == s)
+    }
+
+    /// The `reject/…` counter bumped when this class is attached.
+    pub fn counter(self) -> Counter {
+        match self {
+            VerifyFailureClass::WireDecode => Counter::RejectWireDecode,
+            VerifyFailureClass::VersionUnsupported => Counter::RejectVersionUnsupported,
+            VerifyFailureClass::Shape => Counter::RejectShape,
+            VerifyFailureClass::TranscriptBinding => Counter::RejectTranscriptBinding,
+            VerifyFailureClass::Sumcheck => Counter::RejectSumcheck,
+            VerifyFailureClass::Opening => Counter::RejectOpening,
+            VerifyFailureClass::Validity => Counter::RejectValidity,
+            VerifyFailureClass::Booleanity => Counter::RejectBooleanity,
+            VerifyFailureClass::ChainRelation => Counter::RejectChainRelation,
+            VerifyFailureClass::ProvenanceSelection => Counter::RejectProvenanceSelection,
+            VerifyFailureClass::RootMismatch => Counter::RejectRootMismatch,
+            VerifyFailureClass::MsmFinalCheck => Counter::RejectMsmFinalCheck,
+        }
+    }
+}
+
+impl fmt::Display for VerifyFailureClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The class attached to `err`, if any. Walks anyhow's context layers and
+/// returns the outermost match — which, under the attach-once discipline,
+/// is the only one.
+pub fn failure_class(err: &anyhow::Error) -> Option<VerifyFailureClass> {
+    err.downcast_ref::<VerifyFailureClass>().copied()
+}
+
+/// Attach `class` to `err` unless it already carries a class (the inner,
+/// more specific attribution wins). Bumps the class's `reject/…` counter on
+/// attach.
+pub fn classified(class: VerifyFailureClass, err: anyhow::Error) -> anyhow::Error {
+    if failure_class(&err).is_some() {
+        return err;
+    }
+    count(class.counter(), 1);
+    err.context(class)
+}
+
+/// `Result` adapter for phase-boundary classification:
+/// `sumcheck::verify(..).classify(Sumcheck).context("mm30")?`.
+pub trait Classify<T> {
+    fn classify(self, class: VerifyFailureClass) -> anyhow::Result<T>;
+}
+
+impl<T> Classify<T> for anyhow::Result<T> {
+    fn classify(self, class: VerifyFailureClass) -> anyhow::Result<T> {
+        self.map_err(|e| classified(class, e))
+    }
+}
+
+/// `ensure!` with a failure class: early-returns a classified error when
+/// the condition is false, keeping the message format of plain `ensure!`.
+#[macro_export]
+macro_rules! ensure_class {
+    ($cond:expr, $class:expr, $($arg:tt)+) => {
+        if !$cond {
+            return Err($crate::telemetry::failure::classified(
+                $class,
+                anyhow::anyhow!($($arg)+),
+            ));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip_and_are_unique() {
+        for &c in ALL_CLASSES {
+            assert_eq!(VerifyFailureClass::parse(c.name()), Some(c));
+        }
+        for (i, a) in ALL_CLASSES.iter().enumerate() {
+            for b in ALL_CLASSES.iter().skip(i + 1) {
+                assert_ne!(a.name(), b.name());
+                assert_ne!(a.counter(), b.counter());
+            }
+        }
+        assert_eq!(VerifyFailureClass::parse("no-such-class"), None);
+    }
+
+    #[test]
+    fn downcast_recovers_class_through_context_layers() {
+        let err = classified(
+            VerifyFailureClass::Sumcheck,
+            anyhow::anyhow!("sumcheck: round consistency check failed"),
+        );
+        // extra string contexts above the class must not hide it
+        let err = err.context("mm30").context("batched trace 2");
+        assert_eq!(failure_class(&err), Some(VerifyFailureClass::Sumcheck));
+        // ...and the original message survives in the chain
+        let chain = format!("{err:#}");
+        assert!(chain.contains("round consistency"), "{chain}");
+    }
+
+    #[test]
+    fn inner_class_wins_over_outer() {
+        let inner = classified(VerifyFailureClass::Booleanity, anyhow::anyhow!("b=2"));
+        let outer = classified(VerifyFailureClass::ProvenanceSelection, inner);
+        assert_eq!(failure_class(&outer), Some(VerifyFailureClass::Booleanity));
+    }
+
+    #[test]
+    fn classify_attaches_only_to_errors() {
+        let ok: anyhow::Result<u32> = Ok(7);
+        assert_eq!(ok.classify(VerifyFailureClass::Shape).unwrap(), 7);
+        let err: anyhow::Result<u32> = Err(anyhow::anyhow!("v_z length"));
+        let e = err.classify(VerifyFailureClass::Shape).unwrap_err();
+        assert_eq!(failure_class(&e), Some(VerifyFailureClass::Shape));
+    }
+
+    #[test]
+    fn ensure_class_macro_early_returns_classified() {
+        fn check(n: usize) -> anyhow::Result<()> {
+            crate::ensure_class!(n == 4, VerifyFailureClass::Shape, "bad count {n}");
+            Ok(())
+        }
+        assert!(check(4).is_ok());
+        let e = check(5).unwrap_err();
+        assert_eq!(failure_class(&e), Some(VerifyFailureClass::Shape));
+        assert!(format!("{e:#}").contains("bad count 5"));
+    }
+}

@@ -1,0 +1,309 @@
+//! zkFlight latency/size histograms — zero-dependency, lock-free,
+//! log-linear.
+//!
+//! Each [`Histogram`] is a fixed array of atomic buckets: values below 4
+//! get exact unit buckets; above that, every octave splits into 4
+//! sub-buckets (2 mantissa bits), so a recorded value lands in a bucket
+//! whose lower bound is within 25% of it. Quantiles are nearest-rank over
+//! bucket lower bounds — p50/p95/p99 carry the same ≤ 25% relative error,
+//! which is plenty to spot a latency regression; `max` is exact.
+//!
+//! Like counters, recording is gated on [`crate::telemetry::enabled`] (one
+//! relaxed load while disabled) and never allocates: every bucket is a
+//! static `AtomicU64`. Instrument with [`record`] for sizes or [`timer`]
+//! (an RAII guard that records elapsed nanoseconds on drop, even on error
+//! paths — rejected proofs still get a latency sample).
+
+use crate::telemetry::{enabled, json::Json};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// 2 mantissa bits per octave: 4 unit buckets + 4 sub-buckets for each of
+/// the 62 octaves `[2^2, 2^64)`.
+const NUM_BUCKETS: usize = 4 + 62 * 4;
+
+/// Bucket index of a value (monotone in `v`).
+fn bucket_index(v: u64) -> usize {
+    if v < 4 {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros() as usize;
+        let sub = ((v >> (msb - 2)) & 3) as usize;
+        4 + (msb - 2) * 4 + sub
+    }
+}
+
+/// Smallest value that maps to bucket `i` — the value quantiles report.
+fn bucket_lower(i: usize) -> u64 {
+    if i < 4 {
+        i as u64
+    } else {
+        let octave = (i - 4) / 4 + 2;
+        let sub = ((i - 4) % 4) as u64;
+        (1u64 << octave) + sub * (1u64 << (octave - 2))
+    }
+}
+
+/// A concurrent log-linear histogram. All methods are lock-free.
+pub struct Histogram {
+    buckets: [AtomicU64; NUM_BUCKETS],
+    count: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Histogram {
+    pub const fn new() -> Histogram {
+        Histogram {
+            buckets: [const { AtomicU64::new(0) }; NUM_BUCKETS],
+            count: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Nearest-rank quantile (`q` in `[0, 1]`) over bucket lower bounds;
+    /// 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                // never report above the exact maximum (a lone top bucket
+                // would otherwise round its lower bound past it)
+                return bucket_lower(i).min(self.max.load(Ordering::Relaxed));
+            }
+        }
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn summary(&self) -> HistSummary {
+        HistSummary {
+            count: self.count(),
+            p50: self.quantile(0.50),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time digest of one histogram.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+    pub max: u64,
+}
+
+impl HistSummary {
+    /// `{"count":..,"p50":..,"p95":..,"p99":..,"max":..}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Uint(self.count)),
+            ("p50", Json::Uint(self.p50)),
+            ("p95", Json::Uint(self.p95)),
+            ("p99", Json::Uint(self.p99)),
+            ("max", Json::Uint(self.max)),
+        ])
+    }
+}
+
+macro_rules! define_hists {
+    ($($variant:ident => $name:literal),* $(,)?) => {
+        /// The process-wide histogram set. `Hist::name()` gives the stable
+        /// slash-path used in reports, bench cells, and JSON.
+        #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+        #[repr(usize)]
+        pub enum Hist { $($variant),* }
+
+        /// Stable names, indexed by `Hist as usize`.
+        pub const HIST_NAMES: &[&str] = &[$($name),*];
+
+        impl Hist {
+            pub const COUNT: usize = HIST_NAMES.len();
+
+            pub fn name(self) -> &'static str {
+                HIST_NAMES[self as usize]
+            }
+        }
+    };
+}
+
+define_hists! {
+    ProveStepNs => "lat/prove_step_ns",
+    VerifyStepNs => "lat/verify_step_ns",
+    ProveTraceNs => "lat/prove_trace_ns",
+    VerifyTraceNs => "lat/verify_trace_ns",
+    MsmSize => "msm/size",
+    WireBytes => "wire/bytes",
+}
+
+static HISTS: [Histogram; Hist::COUNT] = [const { Histogram::new() }; Hist::COUNT];
+
+/// Record one sample. No-op (one relaxed load) while telemetry is off.
+#[inline]
+pub fn record(h: Hist, v: u64) {
+    if enabled() {
+        HISTS[h as usize].record(v);
+    }
+}
+
+/// RAII latency sampler: records elapsed nanoseconds into `h` when the
+/// guard drops, so `?`-early-exits and rejections are sampled too.
+/// `None` (free) while telemetry is off.
+#[inline]
+pub fn timer(h: Hist) -> Option<HistTimer> {
+    if enabled() {
+        Some(HistTimer {
+            h,
+            start: Instant::now(),
+        })
+    } else {
+        None
+    }
+}
+
+pub struct HistTimer {
+    h: Hist,
+    start: Instant,
+}
+
+impl Drop for HistTimer {
+    fn drop(&mut self) {
+        HISTS[self.h as usize].record(self.start.elapsed().as_nanos() as u64);
+    }
+}
+
+/// Current digest of one histogram.
+pub fn snapshot(h: Hist) -> HistSummary {
+    HISTS[h as usize].summary()
+}
+
+/// `(name, summary)` for every histogram with at least one sample.
+pub fn summaries() -> Vec<(&'static str, HistSummary)> {
+    (0..Hist::COUNT)
+        .filter(|&i| HISTS[i].count() > 0)
+        .map(|i| (HIST_NAMES[i], HISTS[i].summary()))
+        .collect()
+}
+
+/// Clear all histograms (wired into [`crate::telemetry::reset`]).
+pub fn reset_all() {
+    for h in &HISTS {
+        h.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_names_cover_enum() {
+        assert_eq!(HIST_NAMES.len(), Hist::COUNT);
+        assert_eq!(Hist::MsmSize.name(), "msm/size");
+        for (i, a) in HIST_NAMES.iter().enumerate() {
+            for b in HIST_NAMES.iter().skip(i + 1) {
+                assert_ne!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_and_lower_bound_consistent() {
+        let mut prev = 0usize;
+        for v in 0..4096u64 {
+            let i = bucket_index(v);
+            assert!(i >= prev, "index not monotone at {v}");
+            prev = i;
+            assert!(bucket_lower(i) <= v, "lower bound above value at {v}");
+            // log-linear promise: lower bound within 25% of the value
+            assert!(
+                (v - bucket_lower(i)) * 4 <= v.max(4),
+                "bucket too coarse at {v}: lower {}",
+                bucket_lower(i)
+            );
+        }
+        assert!(bucket_index(u64::MAX) < NUM_BUCKETS);
+        for i in 0..NUM_BUCKETS {
+            assert_eq!(bucket_index(bucket_lower(i)), i, "lower bound of {i}");
+        }
+    }
+
+    #[test]
+    fn quantiles_track_a_known_distribution() {
+        let h = Histogram::new();
+        // 100 samples: 1..=100 (ns-ish scale)
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.max, 100);
+        // nearest-rank with ≤25% bucket error
+        let within = |got: u64, want: u64| {
+            (got as f64 - want as f64).abs() <= 0.25 * want as f64
+        };
+        assert!(within(s.p50, 50), "p50={}", s.p50);
+        assert!(within(s.p95, 95), "p95={}", s.p95);
+        assert!(within(s.p99, 99), "p99={}", s.p99);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        h.reset();
+        assert_eq!(h.summary(), HistSummary::default());
+    }
+
+    #[test]
+    fn quantile_never_exceeds_exact_max() {
+        let h = Histogram::new();
+        h.record(1000);
+        let s = h.summary();
+        assert_eq!(s.max, 1000);
+        assert!(s.p50 > 0 && s.p50 <= s.max);
+        assert!(s.p99 <= s.max);
+        // a lone sample exactly on a bucket boundary reports itself
+        let h2 = Histogram::new();
+        h2.record(1024);
+        assert_eq!(h2.summary().p50, 1024);
+    }
+
+    #[test]
+    fn summary_json_shape() {
+        let s = HistSummary {
+            count: 3,
+            p50: 10,
+            p95: 20,
+            p99: 20,
+            max: 21,
+        };
+        let j = s.to_json().to_string();
+        let parsed = Json::parse(&j).expect("summary JSON parses");
+        for key in ["count", "p50", "p95", "p99", "max"] {
+            assert!(parsed.get(key).and_then(|v| v.as_u64()).is_some(), "{key}");
+        }
+        assert_eq!(parsed.get("max").and_then(|v| v.as_u64()), Some(21));
+    }
+}

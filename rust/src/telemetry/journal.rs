@@ -1,0 +1,318 @@
+//! zkFlight event journal — an append-only JSONL flight recorder.
+//!
+//! Every CLI invocation that touches a proof artifact (`prove`,
+//! `prove-trace`, `verify-trace`, batched verification) appends one record
+//! **per artifact** to the journal file named by `--journal <path>`:
+//! schema [`EVENT_SCHEMA`], a monotonically increasing `seq` (continued
+//! across processes by re-scanning the file on open), wall-clock duration,
+//! the verb, the wire version, artifact byte-length and SHA-256 digest, the
+//! update-rule tag, the dataset root when provenance is on, the outcome
+//! (`proved` / `accepted` / `rejected`), the typed failure class on
+//! rejection, and a snapshot of nonzero counter deltas for the invocation.
+//!
+//! Batch records share the invocation-wide duration and counter delta
+//! (attribution below one MSM is not separable) and carry `batch_index` /
+//! `batch_size` so `zkdl audit` can regroup them.
+//!
+//! The journal is plain JSONL on purpose: `tail -f`-able, greppable, and
+//! parseable by `python/check_obs_artifacts.py` without any dependency.
+
+use crate::telemetry::json::Json;
+use crate::telemetry::{Counter, COUNTER_NAMES};
+use anyhow::{Context, Result};
+use sha2::{Digest, Sha256};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Schema tag stamped on every record.
+pub const EVENT_SCHEMA: &str = "zkdl/events/v1";
+
+/// One journal record. Optional fields serialize as JSON `null` so every
+/// record carries the full schema (simplifies external validators).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct JournalEvent {
+    /// Assigned by [`Journal::append`]; strictly increasing per file.
+    pub seq: u64,
+    pub ts_unix: u64,
+    pub verb: String,
+    /// `"proved"`, `"accepted"`, or `"rejected"`.
+    pub outcome: String,
+    pub duration_s: f64,
+    pub wire_version: u64,
+    pub artifact_bytes: u64,
+    /// Hex SHA-256 of the wire bytes; `None` when no artifact was written
+    /// or read (e.g. an in-memory verify).
+    pub artifact_sha256: Option<String>,
+    /// Update-rule tag (`"sgd"`, `"momentum"`) for chained artifacts.
+    pub rule: Option<String>,
+    /// Hex dataset root for provenance artifacts.
+    pub dataset_root: Option<String>,
+    /// Kebab-case [`VerifyFailureClass`](super::failure::VerifyFailureClass)
+    /// name; set iff `outcome == "rejected"`.
+    pub failure_class: Option<String>,
+    pub batch_index: Option<u64>,
+    pub batch_size: Option<u64>,
+    /// Nonzero counter deltas attributed to the invocation.
+    pub counters: Vec<(String, u64)>,
+}
+
+/// Hex SHA-256 of an artifact's wire bytes.
+pub fn artifact_digest(bytes: &[u8]) -> String {
+    let mut h = Sha256::new();
+    h.update(bytes);
+    h.finalize().iter().map(|b| format!("{b:02x}")).collect()
+}
+
+/// Nonzero counter deltas between two [`super::counters_snapshot`]s, in
+/// counter order.
+pub fn counter_deltas(
+    after: &[u64; Counter::COUNT],
+    before: &[u64; Counter::COUNT],
+) -> Vec<(String, u64)> {
+    (0..Counter::COUNT)
+        .filter_map(|i| {
+            let d = after[i].saturating_sub(before[i]);
+            (d > 0).then(|| (COUNTER_NAMES[i].to_string(), d))
+        })
+        .collect()
+}
+
+fn opt_str(v: &Option<String>) -> Json {
+    match v {
+        Some(s) => Json::str(s),
+        None => Json::Null,
+    }
+}
+
+fn opt_uint(v: &Option<u64>) -> Json {
+    match v {
+        Some(n) => Json::Uint(*n),
+        None => Json::Null,
+    }
+}
+
+impl JournalEvent {
+    /// A record skeleton stamped with the current wall-clock time.
+    pub fn new(verb: &str, outcome: &str) -> JournalEvent {
+        let ts_unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        JournalEvent {
+            ts_unix,
+            verb: verb.to_string(),
+            outcome: outcome.to_string(),
+            ..JournalEvent::default()
+        }
+    }
+
+    /// One JSONL record, schema [`EVENT_SCHEMA`]. Every key is always
+    /// present (optionals as `null`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(EVENT_SCHEMA)),
+            ("seq", Json::Uint(self.seq)),
+            ("ts_unix", Json::Uint(self.ts_unix)),
+            ("verb", Json::str(&self.verb)),
+            ("outcome", Json::str(&self.outcome)),
+            ("duration_s", Json::Num(self.duration_s)),
+            ("wire_version", Json::Uint(self.wire_version)),
+            ("artifact_bytes", Json::Uint(self.artifact_bytes)),
+            ("artifact_sha256", opt_str(&self.artifact_sha256)),
+            ("rule", opt_str(&self.rule)),
+            ("dataset_root", opt_str(&self.dataset_root)),
+            ("failure_class", opt_str(&self.failure_class)),
+            ("batch_index", opt_uint(&self.batch_index)),
+            ("batch_size", opt_uint(&self.batch_size)),
+            (
+                "counters",
+                Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(n, v)| (n.clone(), Json::Uint(*v)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse one record (the audit verb's reader). Rejects wrong schemas.
+    pub fn from_json(j: &Json) -> Result<JournalEvent> {
+        let schema = j
+            .get("schema")
+            .and_then(|v| v.as_str())
+            .context("journal record has no schema")?;
+        anyhow::ensure!(
+            schema == EVENT_SCHEMA,
+            "unsupported journal schema {schema:?} (want {EVENT_SCHEMA})"
+        );
+        let req_u64 = |key: &str| -> Result<u64> {
+            j.get(key)
+                .and_then(|v| v.as_u64())
+                .with_context(|| format!("journal record missing {key}"))
+        };
+        let req_str = |key: &str| -> Result<String> {
+            j.get(key)
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string())
+                .with_context(|| format!("journal record missing {key}"))
+        };
+        let opt_string = |key: &str| j.get(key).and_then(|v| v.as_str()).map(|s| s.to_string());
+        let opt_u64 = |key: &str| j.get(key).and_then(|v| v.as_u64());
+        let counters = match j.get("counters") {
+            Some(Json::Obj(pairs)) => pairs
+                .iter()
+                .filter_map(|(n, v)| v.as_u64().map(|v| (n.clone(), v)))
+                .collect(),
+            _ => Vec::new(),
+        };
+        Ok(JournalEvent {
+            seq: req_u64("seq")?,
+            ts_unix: req_u64("ts_unix")?,
+            verb: req_str("verb")?,
+            outcome: req_str("outcome")?,
+            duration_s: j
+                .get("duration_s")
+                .and_then(|v| v.as_f64())
+                .context("journal record missing duration_s")?,
+            wire_version: req_u64("wire_version")?,
+            artifact_bytes: req_u64("artifact_bytes")?,
+            artifact_sha256: opt_string("artifact_sha256"),
+            rule: opt_string("rule"),
+            dataset_root: opt_string("dataset_root"),
+            failure_class: opt_string("failure_class"),
+            batch_index: opt_u64("batch_index"),
+            batch_size: opt_u64("batch_size"),
+            counters,
+        })
+    }
+}
+
+/// An open journal file: append-only, with `seq` continued from the
+/// existing contents so restarts never rewind the sequence.
+pub struct Journal {
+    path: PathBuf,
+    next_seq: u64,
+}
+
+impl Journal {
+    /// Open (or create) a journal, scanning existing records for the
+    /// largest `seq`. Unparseable lines are ignored for seq-recovery (the
+    /// audit verb reports them instead).
+    pub fn open(path: &Path) -> Result<Journal> {
+        let mut next_seq = 0;
+        if path.exists() {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading journal {}", path.display()))?;
+            for line in text.lines().filter(|l| !l.trim().is_empty()) {
+                if let Some(seq) = Json::parse(line)
+                    .ok()
+                    .and_then(|j| j.get("seq").and_then(|v| v.as_u64()))
+                {
+                    next_seq = next_seq.max(seq + 1);
+                }
+            }
+        }
+        Ok(Journal {
+            path: path.to_path_buf(),
+            next_seq,
+        })
+    }
+
+    /// Assign the next `seq` and append one JSONL record.
+    pub fn append(&mut self, mut event: JournalEvent) -> Result<()> {
+        event.seq = self.next_seq;
+        self.next_seq += 1;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("opening journal {}", self.path.display()))?;
+        writeln!(f, "{}", event.to_json().to_string())
+            .with_context(|| format!("appending to journal {}", self.path.display()))?;
+        Ok(())
+    }
+}
+
+/// Parse a whole journal file into records (the audit verb's loader).
+/// Returns `(events, bad_lines)` — malformed lines are counted, not fatal.
+pub fn read_journal(path: &Path) -> Result<(Vec<JournalEvent>, usize)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading journal {}", path.display()))?;
+    let mut events = Vec::new();
+    let mut bad = 0;
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        match Json::parse(line)
+            .map_err(anyhow::Error::msg)
+            .and_then(|j| JournalEvent::from_json(&j))
+        {
+            Ok(ev) => events.push(ev),
+            Err(_) => bad += 1,
+        }
+    }
+    Ok((events, bad))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_json_roundtrips() {
+        let mut ev = JournalEvent::new("verify-trace", "rejected");
+        ev.seq = 3;
+        ev.duration_s = 0.125;
+        ev.wire_version = 6;
+        ev.artifact_bytes = 4096;
+        ev.artifact_sha256 = Some("ab".repeat(32));
+        ev.rule = Some("sgd".into());
+        ev.dataset_root = Some("cd".repeat(32));
+        ev.failure_class = Some("sumcheck".into());
+        ev.batch_index = Some(1);
+        ev.batch_size = Some(2);
+        ev.counters = vec![("msm/calls".into(), 1), ("msm/points".into(), 512)];
+        let line = ev.to_json().to_string();
+        let back = JournalEvent::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, ev);
+        // optionals serialize as null but parse back to None
+        let plain = JournalEvent::new("prove-trace", "proved");
+        let line = plain.to_json().to_string();
+        assert!(line.contains("\"failure_class\":null"), "{line}");
+        let back = JournalEvent::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back.failure_class, None);
+        assert_eq!(back.batch_index, None);
+    }
+
+    #[test]
+    fn from_json_rejects_wrong_schema() {
+        let j = Json::parse(r#"{"schema":"zkdl/events/v999","seq":0}"#).unwrap();
+        assert!(JournalEvent::from_json(&j).is_err());
+        let j = Json::parse(r#"{"seq":0}"#).unwrap();
+        assert!(JournalEvent::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn digest_is_stable_sha256() {
+        // sha256("abc")
+        assert_eq!(
+            artifact_digest(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+    }
+
+    #[test]
+    fn counter_deltas_keep_nonzero_only() {
+        let before = [0u64; Counter::COUNT];
+        let mut after = [0u64; Counter::COUNT];
+        after[Counter::MsmCalls as usize] = 2;
+        after[Counter::WireBytesDecoded as usize] = 100;
+        let d = counter_deltas(&after, &before);
+        assert_eq!(
+            d,
+            vec![
+                ("msm/calls".to_string(), 2),
+                ("wire/bytes_decoded".to_string(), 100)
+            ]
+        );
+    }
+}

@@ -13,6 +13,12 @@
 //!   stats, key-cache hits/misses/evictions, transcript absorbs, wire bytes,
 //!   sumcheck/IPA rounds.
 //!
+//! zkFlight (PR 8) layers a flight recorder on top: [`hist`] latency/size
+//! histograms (rendered in [`Report`]), [`failure`] typed verification
+//! failure classes with `reject/…` counters, [`journal`] append-only JSONL
+//! event records, and [`trace_export`] Perfetto/Chrome trace-event dumps of
+//! the span stream.
+//!
 //! Telemetry is **disabled by default**; the disabled fast path of both the
 //! span macro and [`count`] is a single relaxed atomic load (no TLS access,
 //! no allocation — pinned by `tests/telemetry.rs`). Proof bytes and artifacts
@@ -25,7 +31,11 @@
 //! full inventory.
 
 pub mod bench;
+pub mod failure;
+pub mod hist;
+pub mod journal;
 pub mod json;
+pub mod trace_export;
 
 use std::cell::RefCell;
 use std::marker::PhantomData;
@@ -108,6 +118,18 @@ define_counters! {
     MsmTableHits => "msm/table_hits",
     MsmBatchAddSweeps => "msm/batch_add_sweeps",
     ArenaBytesReused => "arena/bytes_reused",
+    RejectWireDecode => "reject/wire_decode",
+    RejectVersionUnsupported => "reject/version_unsupported",
+    RejectShape => "reject/shape",
+    RejectTranscriptBinding => "reject/transcript_binding",
+    RejectSumcheck => "reject/sumcheck",
+    RejectOpening => "reject/opening",
+    RejectValidity => "reject/validity",
+    RejectBooleanity => "reject/booleanity",
+    RejectChainRelation => "reject/chain_relation",
+    RejectProvenanceSelection => "reject/provenance_selection",
+    RejectRootMismatch => "reject/root_mismatch",
+    RejectMsmFinalCheck => "reject/msm_final_check",
 }
 
 static COUNTERS: [AtomicU64; Counter::COUNT] = [const { AtomicU64::new(0) }; Counter::COUNT];
@@ -366,6 +388,11 @@ fn global_spans() -> impl std::ops::DerefMut<Target = SpanNode> {
 pub struct SpanGuard {
     start: Instant,
     idx: usize,
+    name: &'static str,
+    /// Whether [`trace_export`] buffered a `B` event for this span — the
+    /// matching `E` is pushed iff it did, keeping pairs balanced across
+    /// recording toggles.
+    traced: bool,
     _not_send: PhantomData<*const ()>,
 }
 
@@ -375,9 +402,12 @@ impl SpanGuard {
     /// [`maybe_span`] for explicit-drop phase timing.
     pub fn enter(name: &'static str) -> SpanGuard {
         let idx = LOCAL.with(|l| l.0.borrow_mut().enter(name));
+        let traced = trace_export::on_enter(name);
         SpanGuard {
             start: Instant::now(),
             idx,
+            name,
+            traced,
             _not_send: PhantomData,
         }
     }
@@ -386,6 +416,9 @@ impl SpanGuard {
 impl Drop for SpanGuard {
     fn drop(&mut self) {
         let ns = self.start.elapsed().as_nanos() as u64;
+        if self.traced {
+            trace_export::on_exit(self.name);
+        }
         // try_with: the TLS cell may already be gone during thread teardown.
         let _ = LOCAL.try_with(|l| l.0.borrow_mut().exit(self.idx, ns));
     }
@@ -501,6 +534,9 @@ pub struct Report {
     /// `(name, value)` for every counter, including zeros (JSON emits all;
     /// the rendered table shows nonzero rows only).
     pub counters: Vec<(&'static str, u64)>,
+    /// `(name, digest)` for every histogram with at least one sample
+    /// (latency/size percentiles; see [`hist`]).
+    pub hists: Vec<(&'static str, hist::HistSummary)>,
 }
 
 /// Snapshot the current telemetry state. Threads that have exited are
@@ -512,15 +548,21 @@ pub fn report() -> Report {
     let counters = (0..Counter::COUNT)
         .map(|i| (COUNTER_NAMES[i], COUNTERS[i].load(Ordering::Relaxed)))
         .collect();
-    Report { spans, counters }
+    Report {
+        spans,
+        counters,
+        hists: hist::summaries(),
+    }
 }
 
-/// Clear counters, the global span tree, and the calling thread's tree.
-/// Other threads' live trees are untouched (they merge at exit).
+/// Clear counters, histograms, the global span tree, and the calling
+/// thread's tree. Other threads' live trees are untouched (they merge at
+/// exit).
 pub fn reset() {
     for c in COUNTERS.iter() {
         c.store(0, Ordering::Relaxed);
     }
+    hist::reset_all();
     *global_spans() = SpanNode::default();
     LOCAL.with(|l| l.0.borrow_mut().clear());
 }
@@ -547,10 +589,27 @@ impl Report {
             }
             out.push_str(&table.render());
         }
+        if !self.hists.is_empty() {
+            out.push_str("-- histograms --\n");
+            let mut table =
+                crate::util::bench::Table::new(&["hist", "count", "p50", "p95", "p99", "max"]);
+            for (name, s) in &self.hists {
+                table.row(vec![
+                    name.to_string(),
+                    s.count.to_string(),
+                    s.p50.to_string(),
+                    s.p95.to_string(),
+                    s.p99.to_string(),
+                    s.max.to_string(),
+                ]);
+            }
+            out.push_str(&table.render());
+        }
         out
     }
 
-    /// Machine-readable profile: `{"spans": <tree>, "counters": {name: n}}`.
+    /// Machine-readable profile:
+    /// `{"spans": <tree>, "counters": {name: n}, "hists": {name: digest}}`.
     pub fn to_json(&self) -> json::Json {
         json::Json::obj(vec![
             ("spans", self.spans.to_json()),
@@ -560,6 +619,15 @@ impl Report {
                     self.counters
                         .iter()
                         .map(|(n, v)| (n.to_string(), json::Json::Uint(*v)))
+                        .collect(),
+                ),
+            ),
+            (
+                "hists",
+                json::Json::Obj(
+                    self.hists
+                        .iter()
+                        .map(|(n, s)| (n.to_string(), s.to_json()))
                         .collect(),
                 ),
             ),

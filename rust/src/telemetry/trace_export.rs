@@ -1,0 +1,274 @@
+//! zkFlight Perfetto export — Chrome trace-event JSON from the span stream.
+//!
+//! While recording (`--trace-out <path>`), every [`super::SpanGuard`]
+//! emits a `B`/`E` duration-event pair onto a process-global buffer, tagged
+//! with a per-thread track id, so the coordinator's pipeline overlap
+//! (`prover-worker` / `aggregator-worker` vs the main thread) is visible on
+//! a timeline in `ui.perfetto.dev` or `chrome://tracing`. Span exits also
+//! sample two counter tracks (`msm/points`, `arena/bytes_reused`) as `C`
+//! events.
+//!
+//! Recording is **off by default** and independent of the telemetry enable
+//! flag (it only ever engages *in addition to* enabled telemetry — spans
+//! are not created otherwise). The disabled cost inside an enabled span is
+//! one relaxed load. Balance guarantee: an `E` is pushed iff the guard's
+//! `B` was pushed (the guard remembers), so toggling recording mid-span
+//! never produces an orphan event.
+
+use crate::telemetry::json::Json;
+use crate::telemetry::{counter_value, Counter};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+static RECORDING: AtomicBool = AtomicBool::new(false);
+static EVENTS: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+thread_local! {
+    /// This thread's track id; 0 = not yet assigned.
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
+
+/// One buffered trace event (converted to Chrome JSON at export).
+enum TraceEvent {
+    Begin { name: &'static str, ts_ns: u64, tid: u64 },
+    End { name: &'static str, ts_ns: u64, tid: u64 },
+    ThreadName { name: String, tid: u64 },
+    Counter { name: &'static str, ts_ns: u64, value: u64 },
+}
+
+#[inline]
+pub fn is_recording() -> bool {
+    RECORDING.load(Ordering::Relaxed)
+}
+
+/// Start (clearing any previous buffer) or stop recording. Spans already
+/// open when recording starts are not back-filled; spans still open when it
+/// stops flush their `E` on drop (their `B` is in the buffer).
+pub fn set_recording(on: bool) {
+    if on {
+        events().clear();
+        EPOCH.get_or_init(Instant::now);
+    }
+    RECORDING.store(on, Ordering::Relaxed);
+}
+
+fn events() -> std::sync::MutexGuard<'static, Vec<TraceEvent>> {
+    EVENTS.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// This thread's track id, assigning one (and emitting a default
+/// `thread_name` metadata event) on first use.
+fn tid() -> u64 {
+    TID.with(|t| {
+        let mut id = t.get();
+        if id == 0 {
+            id = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            t.set(id);
+            events().push(TraceEvent::ThreadName {
+                name: format!("thread-{id}"),
+                tid: id,
+            });
+        }
+        id
+    })
+}
+
+/// Label this thread's track (e.g. `"prover-worker"`). No-op unless
+/// recording.
+pub fn set_thread_name(name: &str) {
+    if !is_recording() {
+        return;
+    }
+    let id = tid();
+    events().push(TraceEvent::ThreadName {
+        name: name.to_string(),
+        tid: id,
+    });
+}
+
+/// Span-open hook (called by `SpanGuard::enter`). Returns whether a `B`
+/// event was pushed — the guard passes it back to [`on_exit`] so pairs
+/// stay balanced across recording toggles.
+#[inline]
+pub(super) fn on_enter(name: &'static str) -> bool {
+    if !is_recording() {
+        return false;
+    }
+    let id = tid();
+    events().push(TraceEvent::Begin {
+        name,
+        ts_ns: now_ns(),
+        tid: id,
+    });
+    true
+}
+
+/// Span-close hook (called by `SpanGuard::drop` iff [`on_enter`] pushed).
+pub(super) fn on_exit(name: &'static str) {
+    let id = tid();
+    let ts_ns = now_ns();
+    let mut ev = events();
+    ev.push(TraceEvent::End { name, ts_ns, tid: id });
+    // counter tracks, sampled at span close — enough resolution to see MSM
+    // work and arena reuse accrue across the timeline
+    ev.push(TraceEvent::Counter {
+        name: "msm/points",
+        ts_ns,
+        value: counter_value(Counter::MsmPoints),
+    });
+    ev.push(TraceEvent::Counter {
+        name: "arena/bytes_reused",
+        ts_ns,
+        value: counter_value(Counter::ArenaBytesReused),
+    });
+}
+
+fn us(ts_ns: u64) -> Json {
+    Json::Num(ts_ns as f64 / 1000.0)
+}
+
+/// The buffered events as a Chrome trace-event JSON document
+/// (`{"traceEvents": [...]}`), loadable in `ui.perfetto.dev`. Does not
+/// clear the buffer.
+pub fn export_json() -> Json {
+    let ev = events();
+    let mut out = Vec::with_capacity(ev.len());
+    for e in ev.iter() {
+        out.push(match e {
+            TraceEvent::Begin { name, ts_ns, tid } => Json::obj(vec![
+                ("ph", Json::str("B")),
+                ("name", Json::str(name)),
+                ("ts", us(*ts_ns)),
+                ("pid", Json::Uint(1)),
+                ("tid", Json::Uint(*tid)),
+            ]),
+            TraceEvent::End { name, ts_ns, tid } => Json::obj(vec![
+                ("ph", Json::str("E")),
+                ("name", Json::str(name)),
+                ("ts", us(*ts_ns)),
+                ("pid", Json::Uint(1)),
+                ("tid", Json::Uint(*tid)),
+            ]),
+            TraceEvent::ThreadName { name, tid } => Json::obj(vec![
+                ("ph", Json::str("M")),
+                ("name", Json::str("thread_name")),
+                ("pid", Json::Uint(1)),
+                ("tid", Json::Uint(*tid)),
+                ("args", Json::obj(vec![("name", Json::str(name))])),
+            ]),
+            TraceEvent::Counter { name, ts_ns, value } => Json::obj(vec![
+                ("ph", Json::str("C")),
+                ("name", Json::str(name)),
+                ("ts", us(*ts_ns)),
+                ("pid", Json::Uint(1)),
+                ("args", Json::obj(vec![("value", Json::Uint(*value))])),
+            ]),
+        });
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// Number of buffered events (tests/diagnostics).
+pub fn event_count() -> usize {
+    events().len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry;
+
+    #[test]
+    fn records_balanced_pairs_and_thread_names() {
+        // exclusive: recording is process-global, like counters
+        telemetry::exclusive(|| {
+            telemetry::reset();
+            telemetry::set_enabled(true);
+            set_recording(true);
+            set_thread_name("test-main");
+            telemetry::timed("test/export_outer", || {
+                telemetry::timed("test/export_inner", || std::hint::black_box(1u64));
+            });
+            std::thread::scope(|s| {
+                s.spawn(|| {
+                    set_thread_name("test-worker");
+                    telemetry::timed("test/export_worker", || std::hint::black_box(2u64));
+                });
+            });
+            set_recording(false);
+            telemetry::set_enabled(false);
+            let doc = export_json();
+            let events = doc
+                .get("traceEvents")
+                .and_then(|v| v.as_array())
+                .expect("traceEvents array");
+
+            let ph = |e: &Json| e.get("ph").and_then(|v| v.as_str()).unwrap().to_string();
+            // filter to this test's spans: a parallel test running while
+            // telemetry was enabled may have contributed its own events
+            let ours = |e: &Json| {
+                e.get("name")
+                    .and_then(|v| v.as_str())
+                    .is_some_and(|n| n.starts_with("test/export"))
+            };
+            let begins = events.iter().filter(|e| ph(e) == "B" && ours(e)).count();
+            let ends = events.iter().filter(|e| ph(e) == "E" && ours(e)).count();
+            assert_eq!(begins, 3, "outer + inner + worker");
+            assert_eq!(begins, ends, "balanced B/E");
+            // every B/E tid has a thread_name metadata event
+            let mut tids: Vec<u64> = events
+                .iter()
+                .filter(|e| (ph(e) == "B" || ph(e) == "E") && ours(e))
+                .map(|e| e.get("tid").and_then(|v| v.as_u64()).unwrap())
+                .collect();
+            tids.sort_unstable();
+            tids.dedup();
+            assert_eq!(tids.len(), 2, "main + worker tracks");
+            for t in &tids {
+                assert!(
+                    events.iter().any(|e| ph(e) == "M"
+                        && e.get("tid").and_then(|v| v.as_u64()) == Some(*t)),
+                    "tid {t} has no thread_name"
+                );
+            }
+            let names: Vec<String> = events
+                .iter()
+                .filter(|e| ph(e) == "M")
+                .filter_map(|e| {
+                    e.get("args")
+                        .and_then(|a| a.get("name"))
+                        .and_then(|v| v.as_str())
+                        .map(|s| s.to_string())
+                })
+                .collect();
+            assert!(names.iter().any(|n| n == "test-main"), "{names:?}");
+            assert!(names.iter().any(|n| n == "test-worker"), "{names:?}");
+            // counter samples rode along on span exits
+            assert!(events.iter().any(|e| ph(e) == "C"));
+        });
+    }
+
+    #[test]
+    fn disabled_recording_buffers_nothing() {
+        telemetry::exclusive(|| {
+            telemetry::reset();
+            set_recording(true);
+            set_recording(false);
+            telemetry::set_enabled(true);
+            telemetry::timed("test/export_off", || std::hint::black_box(3u64));
+            telemetry::set_enabled(false);
+            assert_eq!(event_count(), 0);
+        });
+    }
+}

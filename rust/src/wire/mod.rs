@@ -815,6 +815,10 @@ fn encode_envelope(kind: ProofKind, cfg: &ModelConfig, body: &dyn ToWire) -> Vec
         crate::telemetry::Counter::WireBytesEncoded,
         bytes.len() as u64,
     );
+    crate::telemetry::hist::record(
+        crate::telemetry::hist::Hist::WireBytes,
+        bytes.len() as u64,
+    );
     bytes
 }
 
@@ -823,11 +827,19 @@ fn decode_envelope<'a>(bytes: &'a [u8], want: ProofKind) -> Result<(ModelConfig,
         crate::telemetry::Counter::WireBytesDecoded,
         bytes.len() as u64,
     );
+    crate::telemetry::hist::record(
+        crate::telemetry::hist::Hist::WireBytes,
+        bytes.len() as u64,
+    );
     let mut r = WireReader::new(bytes);
     let magic = r.take(4)?;
     ensure!(magic == MAGIC.as_slice(), "wire: bad magic");
     let version = r.get_u16()?;
-    ensure!(version == VERSION, "wire: unsupported version {version}");
+    crate::ensure_class!(
+        version == VERSION,
+        crate::telemetry::failure::VerifyFailureClass::VersionUnsupported,
+        "wire: unsupported version {version}"
+    );
     let kind = ProofKind::from_tag(r.get_u16()?)?;
     ensure!(kind == want, "wire: expected {want:?} payload, found {kind:?}");
     let cfg: ModelConfig = r.get()?;
@@ -840,11 +852,22 @@ pub fn encode_step_proof(cfg: &ModelConfig, proof: &StepProof) -> Vec<u8> {
 }
 
 /// Parse a [`encode_step_proof`] artifact, rejecting malformed input.
+/// Rejections carry the `wire-decode` failure class (or the more specific
+/// `version-unsupported`, which wins under attach-once).
 pub fn decode_step_proof(bytes: &[u8]) -> Result<(ModelConfig, StepProof)> {
-    let (cfg, mut r) = decode_envelope(bytes, ProofKind::Step)?;
-    let proof: StepProof = r.get()?;
-    r.expect_end()?;
-    Ok((cfg, proof))
+    crate::span!("wire/decode");
+    let inner = || -> Result<(ModelConfig, StepProof)> {
+        let (cfg, mut r) = decode_envelope(bytes, ProofKind::Step)?;
+        let proof: StepProof = r.get()?;
+        r.expect_end()?;
+        Ok((cfg, proof))
+    };
+    inner().map_err(|e| {
+        crate::telemetry::failure::classified(
+            crate::telemetry::failure::VerifyFailureClass::WireDecode,
+            e,
+        )
+    })
 }
 
 /// Serialize an aggregated trace proof with its configuration.
@@ -862,7 +885,19 @@ pub const MAX_TRACE_AUX_SIZE: usize = 1 << 28;
 /// setup and verification rely on: per-step commitment counts match the
 /// config's depth, and the implied trace basis stays within
 /// [`MAX_TRACE_AUX_SIZE`].
+/// Rejections carry the `wire-decode` failure class (or the more specific
+/// `version-unsupported`, which wins under attach-once).
 pub fn decode_trace_proof(bytes: &[u8]) -> Result<(ModelConfig, TraceProof)> {
+    crate::span!("wire/decode");
+    decode_trace_proof_inner(bytes).map_err(|e| {
+        crate::telemetry::failure::classified(
+            crate::telemetry::failure::VerifyFailureClass::WireDecode,
+            e,
+        )
+    })
+}
+
+fn decode_trace_proof_inner(bytes: &[u8]) -> Result<(ModelConfig, TraceProof)> {
     let (cfg, mut r) = decode_envelope(bytes, ProofKind::Trace)?;
     let proof: TraceProof = r.get()?;
     r.expect_end()?;

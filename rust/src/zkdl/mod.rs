@@ -536,6 +536,7 @@ pub fn prove_step(
     rng: &mut Rng,
 ) -> StepProof {
     crate::span!("zkdl/prove_step");
+    let _lat = crate::telemetry::hist::timer(crate::telemetry::hist::Hist::ProveStepNs);
     let cfg = &pk.cfg;
     assert_eq!(*cfg, wit.cfg, "config mismatch");
     let depth = cfg.depth;
@@ -1302,7 +1303,11 @@ pub(crate) fn tile_claims_at(claims: Vec<EvalClaim>, slots: &[usize], lbar: usiz
 pub fn verify_step(pk: &ProverKey, proof: &StepProof) -> Result<()> {
     let mut acc = MsmAccumulator::new();
     verify_step_accum(pk, proof, &mut acc)?;
-    ensure!(acc.flush(), "step proof: deferred MSM check failed");
+    crate::ensure_class!(
+        acc.flush(),
+        crate::telemetry::failure::VerifyFailureClass::MsmFinalCheck,
+        "step proof: deferred MSM check failed"
+    );
     Ok(())
 }
 
@@ -1318,7 +1323,11 @@ pub fn verify_steps_batch(pk: &ProverKey, proofs: &[StepProof], rng: &mut Rng) -
         verify_step_accum(pk, proof, &mut acc)
             .with_context(|| format!("batched proof {i}"))?;
     }
-    ensure!(acc.flush(), "step proof batch: aggregate MSM check failed");
+    crate::ensure_class!(
+        acc.flush(),
+        crate::telemetry::failure::VerifyFailureClass::MsmFinalCheck,
+        "step proof batch: aggregate MSM check failed"
+    );
     Ok(())
 }
 
@@ -1332,6 +1341,7 @@ pub fn verify_step_accum(
     acc: &mut MsmAccumulator,
 ) -> Result<()> {
     crate::span!("zkdl/verify_step");
+    let _lat = crate::telemetry::hist::timer(crate::telemetry::hist::Hist::VerifyStepNs);
     let cfg = &pk.cfg;
     let depth = cfg.depth;
     let d = cfg.d_size();

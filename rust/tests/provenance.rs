@@ -10,6 +10,7 @@ use zkdl::aggregate::{
 use zkdl::data::Dataset;
 use zkdl::model::ModelConfig;
 use zkdl::provenance::{verify_dataset_endorsement, ProverDataset};
+use zkdl::telemetry::failure::{failure_class, VerifyFailureClass};
 use zkdl::update::UpdateRule;
 use zkdl::util::rng::Rng;
 use zkdl::wire::{decode_trace_proof, encode_trace_proof};
@@ -140,6 +141,38 @@ fn tampered_provenance_statement_and_claims_are_rejected() {
     let mut bad = proof.clone();
     bad.provenance.as_mut().unwrap().dataset.n_rows -= 1;
     assert!(verify_trace(&tk, &bad).is_err(), "edited row count must fail");
+}
+
+#[test]
+fn provenance_tampers_carry_their_own_failure_classes() {
+    // zkFlight taxonomy: a broken selection argument and a broken
+    // booleanity instance must be distinguishable in the journal
+    let (cfg, _, wits, pd) = setup(2, 0xd167);
+    let tk = TraceKey::setup(cfg, 2);
+    let mut rng = Rng::seed_from_u64(46);
+    let proof = prove_trace_provenance(&tk, &wits, &pd, &mut rng).expect("rows open");
+    verify_trace(&tk, &proof).expect("honest proof verifies");
+
+    // a lying selection evaluation fails the zkData phase wholesale
+    let mut bad = proof.clone();
+    bad.provenance.as_mut().unwrap().sel_evals[0] += Fr::ONE;
+    let err = verify_trace(&tk, &bad).expect_err("edited S̃ claim must fail");
+    assert_eq!(
+        failure_class(&err),
+        Some(VerifyFailureClass::ProvenanceSelection),
+        "wrong class: {err:#}"
+    );
+
+    // a broken booleanity IPA carries the more specific inner class —
+    // attach-once means the zkData wrapper does not overwrite it
+    let mut bad = proof.clone();
+    bad.provenance.as_mut().unwrap().validity.ipa.l.pop();
+    let err = verify_trace(&tk, &bad).expect_err("broken booleanity must fail");
+    assert_eq!(
+        failure_class(&err),
+        Some(VerifyFailureClass::Booleanity),
+        "wrong class: {err:#}"
+    );
 }
 
 #[test]

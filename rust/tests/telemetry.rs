@@ -16,8 +16,9 @@ use zkdl::aggregate::{prove_trace, verify_trace, TraceKey};
 use zkdl::data::Dataset;
 use zkdl::model::ModelConfig;
 use zkdl::telemetry::bench::{run_grid, GridOptions, BENCH_SCHEMA};
+use zkdl::telemetry::journal::{read_journal, Journal, JournalEvent};
 use zkdl::telemetry::json::Json;
-use zkdl::telemetry::{self, Counter};
+use zkdl::telemetry::{self, trace_export, Counter};
 use zkdl::util::rng::Rng;
 use zkdl::witness::native::sgd_witness_chain;
 
@@ -185,6 +186,138 @@ fn verify_trace_msm_count_matches_flush_invariant() {
     assert!(get("transcript/absorbs") > 0);
     assert!(get("transcript/challenges") > 0);
     assert!(rep.spans.find("aggregate/verify_trace").is_some());
+}
+
+// ---------------------------------------------------------------------------
+// zkFlight: histograms, journal, Perfetto export
+// ---------------------------------------------------------------------------
+
+#[test]
+fn verify_trace_latency_and_msm_sizes_land_in_histograms() {
+    let cfg = ModelConfig::new(2, 8, 4);
+    let ds = Dataset::synthetic(16, 4, 4, cfg.r_bits, 6);
+    let wits = sgd_witness_chain(cfg, &ds, 2, 8);
+    let tk = TraceKey::setup(cfg, 2);
+    let mut rng = Rng::seed_from_u64(2);
+    let proof = prove_trace(&tk, &wits, &mut rng);
+
+    let ((), rep) = telemetry::capture(|| {
+        verify_trace(&tk, &proof).expect("trace verifies");
+    });
+    let get = |name: &str| rep.hists.iter().find(|(n, _)| *n == name).map(|(_, s)| s);
+    let lat = get("lat/verify_trace_ns").expect("verify latency histogram recorded");
+    assert_eq!(lat.count, 1);
+    assert!(lat.p50 > 0 && lat.p50 <= lat.max);
+    assert!(lat.p95 >= lat.p50 && lat.p99 >= lat.p95);
+    // exactly one MSM per verification (the deferred flush), so exactly one
+    // size sample — this doubles as a histogram-side one-MSM guard
+    let msm = get("msm/size").expect("msm size histogram recorded");
+    assert_eq!(msm.count, 1, "one MSM size sample per verification");
+    assert!(msm.p50 > 0);
+    // proving ran before the capture window: no prove-side samples
+    assert!(get("lat/prove_trace_ns").is_none());
+
+    // the rendered profile and the JSON export both carry the rows
+    let text = rep.render();
+    assert!(text.contains("-- histograms --"), "{text}");
+    assert!(text.contains("lat/verify_trace_ns"), "{text}");
+    let json = Json::parse(&rep.to_json().to_string()).expect("report JSON parses");
+    let hists = json.get("hists").expect("hists key in report JSON");
+    let p50 = hists
+        .get("lat/verify_trace_ns")
+        .and_then(|h| h.get("p50"))
+        .and_then(|v| v.as_u64())
+        .expect("p50 row");
+    assert!(p50 > 0);
+}
+
+#[test]
+fn journal_seq_survives_reopen_and_reads_back() {
+    use std::io::Write as _;
+    let path = std::env::temp_dir().join(format!("zkdl_flight_{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    {
+        let mut j = Journal::open(&path).expect("opens fresh");
+        j.append(JournalEvent::new("prove-trace", "proved")).expect("appends");
+        j.append(JournalEvent::new("verify-trace", "accepted")).expect("appends");
+    }
+    {
+        // a second process opening the same journal must continue, not rewind
+        let mut j = Journal::open(&path).expect("reopens");
+        let mut ev = JournalEvent::new("verify-trace", "rejected");
+        ev.failure_class = Some("sumcheck".into());
+        j.append(ev).expect("appends");
+    }
+    let (events, bad) = read_journal(&path).expect("reads back");
+    assert_eq!(bad, 0);
+    let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+    assert_eq!(seqs, vec![0, 1, 2], "seq continues across reopens");
+    assert_eq!(events[2].failure_class.as_deref(), Some("sumcheck"));
+    // malformed lines are counted, never fatal
+    std::fs::OpenOptions::new()
+        .append(true)
+        .open(&path)
+        .unwrap()
+        .write_all(b"not json\n")
+        .unwrap();
+    let (events, bad) = read_journal(&path).expect("still reads");
+    assert_eq!((events.len(), bad), (3, 1));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn trace_export_emits_balanced_chrome_events_around_real_work() {
+    telemetry::exclusive(|| {
+        telemetry::reset();
+        telemetry::set_enabled(true);
+        trace_export::set_recording(true);
+        trace_export::set_thread_name("flight-test");
+        {
+            zkdl::span!("test/flight_outer");
+            {
+                zkdl::span!("test/flight_inner");
+                std::hint::black_box(work(3));
+            }
+        }
+        trace_export::set_recording(false);
+        telemetry::set_enabled(false);
+        let parsed = Json::parse(&trace_export::export_json().to_string())
+            .expect("chrome trace-event JSON parses");
+        assert_eq!(
+            parsed.get("displayTimeUnit").and_then(|v| v.as_str()),
+            Some("ms")
+        );
+        let events = parsed
+            .get("traceEvents")
+            .and_then(|v| v.as_array())
+            .expect("traceEvents array");
+        let ph = |e: &Json| e.get("ph").and_then(|v| v.as_str()).unwrap().to_string();
+        // filter to this test's spans (another test's spans could land in
+        // the window if it raced the enable — names are the contract)
+        let ours = |e: &Json| {
+            e.get("name")
+                .and_then(|v| v.as_str())
+                .is_some_and(|n| n.starts_with("test/flight_"))
+        };
+        let begins: Vec<f64> = events
+            .iter()
+            .filter(|e| ph(e) == "B" && ours(e))
+            .map(|e| e.get("ts").and_then(|v| v.as_f64()).unwrap())
+            .collect();
+        let ends = events.iter().filter(|e| ph(e) == "E" && ours(e)).count();
+        assert_eq!(begins.len(), 2, "outer + inner");
+        assert_eq!(begins.len(), ends, "balanced B/E");
+        assert!(begins[0] <= begins[1], "outer opens before inner");
+        // our track is labeled
+        let named = events.iter().any(|e| {
+            ph(e) == "M"
+                && e.get("args")
+                    .and_then(|a| a.get("name"))
+                    .and_then(|v| v.as_str())
+                    == Some("flight-test")
+        });
+        assert!(named, "thread_name metadata present");
+    });
 }
 
 #[test]

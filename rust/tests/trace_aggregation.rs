@@ -6,13 +6,14 @@
 
 use zkdl::aggregate::{
     prove_trace, prove_trace_chained, prove_trace_chained_with, trace_stack_dims, verify_trace,
-    verify_traces_batch, TraceKey,
+    verify_traces_batch, TraceKey, TraceProof,
 };
 use zkdl::curve::G1;
 use zkdl::data::Dataset;
 use zkdl::model::ModelConfig;
 use zkdl::update::{LrSchedule, UpdateRule};
 use zkdl::util::rng::Rng;
+use zkdl::telemetry::failure::{failure_class, VerifyFailureClass};
 use zkdl::witness::native::{rule_witness_chain, sgd_witness_chain};
 use zkdl::witness::StepWitness;
 use zkdl::zkdl::{prove_step, verify_step, ProofMode, ProverKey};
@@ -395,6 +396,67 @@ fn chained_traces_batch_with_one_msm() {
     let mut vrng = Rng::seed_from_u64(36);
     verify_traces_batch(&[(&tk, &a), (&tk, &b)], &mut vrng)
         .expect("mixed chained/unchained batch verifies with one MSM");
+}
+
+// ---------------------------------------------------------------------------
+// zkFlight failure taxonomy: each tamper is rejected with its phase's class
+// ---------------------------------------------------------------------------
+
+/// The typed class a tampered proof is rejected with. Panics if the proof
+/// is accepted or the rejection carries no class — every verifier phase
+/// must attach one.
+fn rejection_class(tk: &TraceKey, proof: &TraceProof) -> VerifyFailureClass {
+    let err = verify_trace(tk, proof).expect_err("tampered proof accepted");
+    failure_class(&err).unwrap_or_else(|| panic!("rejection carries no failure class: {err:#}"))
+}
+
+#[test]
+fn tamper_classes_are_distinct_per_phase() {
+    // one honest chained trace, seven tampers — each must land in its own
+    // class so `zkdl audit` can tell the failure modes apart
+    let cfg = ModelConfig::new(2, 8, 4);
+    let wits = witness_chain(cfg, 3, 61);
+    let tk = TraceKey::setup(cfg, 3);
+    let mut rng = Rng::seed_from_u64(71);
+    let chained = prove_trace_chained(&tk, &wits, &mut rng).expect("chains");
+    verify_trace(&tk, &chained).expect("honest chained trace verifies");
+
+    // shape: a truncated evaluation vector is rejected before any transcript
+    let mut bad = chained.clone();
+    bad.v_z.pop();
+    assert_eq!(rejection_class(&tk, &bad), VerifyFailureClass::Shape);
+
+    // sumcheck: a lying claimed evaluation breaks round consistency
+    let mut bad = chained.clone();
+    bad.v_z[0] += Fr::ONE;
+    assert_eq!(rejection_class(&tk, &bad), VerifyFailureClass::Sumcheck);
+
+    // transcript binding: the sumcheck's final factor evaluations no longer
+    // reproduce the claimed product
+    let mut bad = chained.clone();
+    bad.mm30_evals[0].0 += Fr::ONE;
+    assert_eq!(rejection_class(&tk, &bad), VerifyFailureClass::TranscriptBinding);
+
+    // opening: a truncated IPA fold vector fails inside the batched opening
+    let mut bad = chained.clone();
+    bad.openings[0].l.pop();
+    assert_eq!(rejection_class(&tk, &bad), VerifyFailureClass::Opening);
+
+    // validity: the zkReLU range/booleanity instance breaks
+    let mut bad = chained.clone();
+    bad.validity_main.ipa.l.pop();
+    assert_eq!(rejection_class(&tk, &bad), VerifyFailureClass::Validity);
+
+    // chain relation: the zkOptim chain's own opening breaks
+    let mut bad = chained.clone();
+    bad.chain.as_mut().unwrap().openings[0].l.pop();
+    assert_eq!(rejection_class(&tk, &bad), VerifyFailureClass::ChainRelation);
+
+    // msm-final-check: a shifted blind passes every scalar check and is only
+    // caught by the deferred one-MSM flush
+    let mut bad = chained.clone();
+    bad.openings[0].blind += Fr::ONE;
+    assert_eq!(rejection_class(&tk, &bad), VerifyFailureClass::MsmFinalCheck);
 }
 
 #[test]

@@ -9,13 +9,16 @@
 //!   verb uses.
 
 use zkdl::aggregate::{
-    prove_trace, prove_trace_chained, prove_trace_chained_with, verify_trace, verify_trace_accum,
-    verify_traces_batch, TraceKey, TraceProof,
+    ensure_same_root, prove_trace, prove_trace_chained, prove_trace_chained_with,
+    prove_trace_provenance, verify_trace, verify_trace_accum, verify_traces_batch,
+    verify_traces_batch_report, TraceKey, TraceProof,
 };
 use zkdl::curve::accum::MsmAccumulator;
 use zkdl::curve::G1;
 use zkdl::data::Dataset;
 use zkdl::model::{ModelConfig, Weights};
+use zkdl::provenance::ProverDataset;
+use zkdl::telemetry::failure::{failure_class, VerifyFailureClass};
 use zkdl::update::{LrSchedule, UpdateRule};
 use zkdl::util::rng::Rng;
 use zkdl::witness::native::compute_witness;
@@ -210,4 +213,102 @@ fn mixed_rule_trace_batch_shares_one_msm() {
         &mut vrng,
     )
     .expect("public batch API agrees");
+}
+
+// ---------------------------------------------------------------------------
+// zkFlight: wire-layer failure classes, per-proof batch reports, root policy
+// ---------------------------------------------------------------------------
+
+/// Decode rejections carry `wire-decode`, except a bad version which gets
+/// the more specific `version-unsupported` (attach-once: inner class wins).
+#[test]
+fn wire_rejections_carry_decode_and_version_classes() {
+    let cfg = ModelConfig::new(2, 8, 4);
+    let tk = TraceKey::setup(cfg, 2);
+    let mut rng = Rng::seed_from_u64(0xf0);
+    let proof = prove_trace(&tk, &witness_chain(cfg, 2, 20), &mut rng);
+    let bytes = zkdl::wire::encode_trace_proof(&cfg, &proof);
+
+    // flipped magic
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xff;
+    let err = zkdl::wire::decode_trace_proof(&bad).expect_err("bad magic decodes");
+    assert_eq!(failure_class(&err), Some(VerifyFailureClass::WireDecode), "{err:#}");
+
+    // truncated artifact
+    let err =
+        zkdl::wire::decode_trace_proof(&bytes[..bytes.len() / 2]).expect_err("truncated decodes");
+    assert_eq!(failure_class(&err), Some(VerifyFailureClass::WireDecode), "{err:#}");
+
+    // future version (bytes 4..6, little-endian, after the 4-byte magic)
+    let mut bad = bytes.clone();
+    let future = (zkdl::wire::VERSION + 1).to_le_bytes();
+    bad[4..6].copy_from_slice(&future);
+    let err = zkdl::wire::decode_trace_proof(&bad).expect_err("future version decodes");
+    assert_eq!(
+        failure_class(&err),
+        Some(VerifyFailureClass::VersionUnsupported),
+        "{err:#}"
+    );
+}
+
+/// A rejected batch re-verifies members individually and pins the failure
+/// on the tampered index with its class; accepted members stay accepted.
+#[test]
+fn batch_report_attributes_failure_to_the_tampered_member() {
+    let cfg = ModelConfig::new(2, 8, 4);
+    let tk = TraceKey::setup(cfg, 2);
+    let mut rng = Rng::seed_from_u64(0xf1);
+    let a = prove_trace(&tk, &witness_chain(cfg, 2, 21), &mut rng);
+    let b = prove_trace(&tk, &witness_chain(cfg, 2, 22), &mut rng);
+
+    // all-good batch: one report, every entry accepted, no batch error
+    let mut vrng = Rng::seed_from_u64(30);
+    let report = verify_traces_batch_report(&[(&tk, &a), (&tk, &b)], &mut vrng);
+    assert!(report.all_accepted());
+    assert!(report.entries.iter().all(|e| e.failure_class.is_none()));
+
+    // one member's blind shifted: only the aggregate MSM sees it, and the
+    // report must pin it on index 1 with the msm-final-check class
+    let mut bad = b.clone();
+    bad.openings[1].blind += Fr::ONE;
+    let mut vrng = Rng::seed_from_u64(31);
+    let report = verify_traces_batch_report(&[(&tk, &a), (&tk, &bad)], &mut vrng);
+    assert!(!report.all_accepted());
+    assert!(report.batch_error.is_some());
+    assert!(report.entries[0].accepted, "honest member stays accepted");
+    assert!(!report.entries[1].accepted);
+    assert_eq!(
+        report.entries[1].failure_class,
+        Some(VerifyFailureClass::MsmFinalCheck),
+        "{:?}",
+        report.entries[1].error
+    );
+}
+
+/// `--require-same-root` policy: root-less proofs never conflict, two
+/// provenance proofs pinning different datasets reject with `root-mismatch`.
+#[test]
+fn mixed_root_batches_are_rejected_by_policy() {
+    let cfg = ModelConfig::new(2, 8, 4);
+    let tk = TraceKey::setup(cfg, 2);
+    let mut rng = Rng::seed_from_u64(0xf2);
+
+    let make_prov = |seed: u64, rng: &mut Rng| -> TraceProof {
+        let ds = Dataset::synthetic(24, cfg.width / 2, 4, cfg.r_bits, seed);
+        let wits = zkdl::witness::native::sgd_witness_chain(cfg, &ds, 2, seed);
+        let pd = ProverDataset::build(&ds, &cfg).expect("dataset commits");
+        prove_trace_provenance(&tk, &wits, &pd, rng).expect("rows open")
+    };
+    let prov_a = make_prov(0xaa, &mut rng);
+    let prov_b = make_prov(0xbb, &mut rng);
+    let plain = prove_trace(&tk, &witness_chain(cfg, 2, 23), &mut rng);
+
+    // same root twice + a root-less member: fine
+    ensure_same_root(&[&prov_a, &plain, &prov_a]).expect("consistent batch passes");
+    ensure_same_root(&[&plain, &plain]).expect("root-less batch passes");
+
+    // two different endorsed datasets in one batch: policy rejection
+    let err = ensure_same_root(&[&prov_a, &plain, &prov_b]).expect_err("mixed roots pass");
+    assert_eq!(failure_class(&err), Some(VerifyFailureClass::RootMismatch), "{err:#}");
 }
