@@ -25,7 +25,7 @@ import json
 import os
 import sys
 
-SCHEMA = "zkdl/bench/v1"
+SCHEMA = "zkdl/bench/v2"
 
 # Structural (machine-independent) per-case fields, checked for exact
 # equality. prove_s / verify_s / wall_s are deliberately absent.
@@ -50,7 +50,12 @@ def load(path):
 
 
 def case_key(case):
-    return (case["variant"], case["steps"], case["depth"])
+    # v2 cells are keyed on thread count too: the same (variant, T, depth)
+    # may be measured at several ZKDL_THREADS settings, and the counters
+    # must match the baseline cell measured at the *same* setting (they are
+    # thread-count-independent by design — a mismatch across thread counts
+    # would itself be a determinism bug, caught by tests/parallel_determinism).
+    return (case["variant"], case["steps"], case["depth"], case.get("threads", 0))
 
 
 def compare(new, old, baseline_path):
@@ -74,7 +79,7 @@ def compare(new, old, baseline_path):
     for c in new.get("cases", []):
         key = case_key(c)
         base = old_cases.pop(key, None)
-        label = "variant={} T={} depth={}".format(*key)
+        label = "variant={} T={} depth={} threads={}".format(*key)
         if base is None:
             errors.append(f"{label}: cell missing from baseline")
             continue
@@ -97,7 +102,9 @@ def compare(new, old, baseline_path):
             )
         compared += 1
     for key in old_cases:
-        errors.append("variant={} T={} depth={}: cell missing from new report".format(*key))
+        errors.append(
+            "variant={} T={} depth={} threads={}: cell missing from new report".format(*key)
+        )
 
     if errors:
         errors.append(
@@ -118,6 +125,23 @@ def self_test():
                 "variant": "plain",
                 "steps": 1,
                 "depth": 2,
+                "threads": 1,
+                "skipped": None,
+                "proof_bytes": 4096,
+                "msm": {
+                    "prove_calls": 10,
+                    "prove_points": 1000,
+                    "verify_calls": 1,
+                    "verify_points": 500,
+                    "verify_flushes": 1,
+                    "verify_equations": 7,
+                },
+            },
+            {
+                "variant": "plain",
+                "steps": 1,
+                "depth": 2,
+                "threads": 2,
                 "skipped": None,
                 "proof_bytes": 4096,
                 "msm": {
@@ -133,6 +157,7 @@ def self_test():
                 "variant": "chained",
                 "steps": 1,
                 "depth": 2,
+                "threads": 1,
                 "skipped": "chained trace needs T >= 2",
                 "proof_bytes": 0,
                 "msm": {k: 0 for k in COUNTER_KEYS},
@@ -154,7 +179,7 @@ def self_test():
     assert any("proof_bytes 4096 -> 4128" in e for e in errs), errs
 
     unskipped = copy.deepcopy(base)
-    unskipped["cases"][1]["skipped"] = None
+    unskipped["cases"][2]["skipped"] = None
     errs = compare(unskipped, base, "b.json")
     assert any("skip status changed" in e for e in errs), errs
 
@@ -172,6 +197,20 @@ def self_test():
     bad_schema["schema"] = "zkdl/other"
     errs = compare(bad_schema, base, "b.json")
     assert any("schema" in e for e in errs), errs
+
+    # thread count is part of the cell key: a threads=4 cell does not match
+    # the baseline's threads=2 cell, and both ends report the orphan
+    rethreaded = copy.deepcopy(base)
+    rethreaded["cases"][1]["threads"] = 4
+    errs = compare(rethreaded, base, "b.json")
+    assert any("threads=4: cell missing from baseline" in e for e in errs), errs
+    assert any("threads=2: cell missing from new report" in e for e in errs), errs
+
+    # counter drift confined to one thread count is still pinned to it
+    drift_t2 = copy.deepcopy(base)
+    drift_t2["cases"][1]["msm"]["prove_calls"] = 11
+    errs = compare(drift_t2, base, "b.json")
+    assert any("threads=2: msm.prove_calls 10 -> 11" in e for e in errs), errs
 
     print("check_bench_counters self-test ok")
 

@@ -39,6 +39,7 @@ use crate::transcript::Transcript;
 use crate::update::{self, ChainProof, LrSchedule, UpdateKey, UpdateRule};
 use crate::util::arena::FrArena;
 use crate::util::rng::Rng;
+use crate::util::threads;
 use crate::witness::StepWitness;
 use crate::zkdl::{
     self, commit, derived_com_ga, derived_com_gz_last, derived_com_z, derived_expr_ga,
@@ -49,6 +50,19 @@ use crate::telemetry::failure::{classified, failure_class, Classify, VerifyFailu
 use crate::telemetry::hist::{self, Hist};
 use crate::zkrelu::{self, Protocol1Msg, ValidityBases, ValidityProof};
 use anyhow::{Context, Result};
+
+/// First `n` powers of γ (γ⁰..γ^{n−1}), precomputed so parallel γ-folds
+/// can index a slot's coefficient by position instead of threading a
+/// running product through a sequential loop.
+fn gamma_powers(gamma: Fr, n: usize) -> Vec<Fr> {
+    let mut out = Vec::with_capacity(n);
+    let mut c = Fr::ONE;
+    for _ in 0..n {
+        out.push(c);
+        c *= gamma;
+    }
+    out
+}
 
 /// Padded step count T̄, padded layer count L̄, and the trace-stacked aux
 /// size N = T̄·L̄·D. Step t's layer ℓ owns block (t·L̄ + ℓ)·D.
@@ -557,24 +571,30 @@ pub(crate) fn prove_trace_with_parts(
     // transient allocations in the old shape).
     let mut arena = FrArena::new();
 
-    // (30): Z̃_t^ℓ(u_zr,u_zc) for every (t, ℓ), γ-folded step-major.
+    // (30): Z̃_t^ℓ(u_zr,u_zc) for every (t, ℓ), γ-folded step-major. The
+    // per-(t, ℓ) work — an eval against the shared eq table plus two
+    // fix_rows restrictions — is independent, so it fans out over the
+    // zkLanes pool; γ-powers are precomputed so every slot's coefficient
+    // is position-determined (byte-identical at every lane count).
     let pz: Vec<Fr> = [ch.u_zr.clone(), ch.u_zc.clone()].concat();
-    let mut v_z = Vec::with_capacity(t_steps * depth);
-    let mut terms30 = Vec::new();
-    let mut coeff = Fr::ONE;
-    arena.scratch(1 << pz.len(), |eq_pz| {
+    let gpow30 = gamma_powers(ch.gamma, t_steps * depth);
+    let (v_z, terms30): (Vec<Fr>, Vec<Term>) = arena.scratch(1 << pz.len(), |eq_pz| {
         poly::eq_table_into(&pz, eq_pz);
-        for (t, pl) in pls.iter().enumerate() {
-            for l in 0..depth {
-                v_z.push(eval_i64_with_eq(&wits[t].layers[l].z, eq_pz));
-                let a_prev = if l == 0 { &pl.x } else { &pl.a[l - 1] };
-                terms30.push(Term::new(
-                    coeff,
+        let eq_pz = &*eq_pz;
+        threads::par_map_indexed(t_steps * depth, |k| {
+            let (t, l) = (k / depth, k % depth);
+            let pl = &pls[t];
+            let a_prev = if l == 0 { &pl.x } else { &pl.a[l - 1] };
+            (
+                eval_i64_with_eq(&wits[t].layers[l].z, eq_pz),
+                Term::new(
+                    gpow30[k],
                     vec![a_prev.fix_rows(&ch.u_zr), pl.w[l].transpose().fix_rows(&ch.u_zc)],
-                ));
-                coeff *= ch.gamma;
-            }
-        }
+                ),
+            )
+        })
+        .into_iter()
+        .unzip()
     });
     tr.absorb_frs(b"v_z", &v_z);
     let out30 = sumcheck::prove(Instance::new(terms30), &mut tr);
@@ -592,27 +612,29 @@ pub(crate) fn prove_trace_with_parts(
     let mut mm33_evals: Vec<(Fr, Fr)> = Vec::new();
     let mut r33 = Vec::new();
     if depth >= 2 {
-        let mut terms33 = Vec::new();
-        let mut coeff = Fr::ONE;
-        arena.scratch(1 << pga.len(), |eq_pga| {
+        let inner = depth - 1;
+        let gpow33 = gamma_powers(ch.gamma, t_steps * inner);
+        let (v, terms33): (Vec<Fr>, Vec<Term>) = arena.scratch(1 << pga.len(), |eq_pga| {
             poly::eq_table_into(&pga, eq_pga);
-            for (t, pl) in pls.iter().enumerate() {
-                for l in 0..depth - 1 {
-                    v_ga.push(eval_i64_with_eq(
-                        wits[t].layers[l].g_a.as_ref().unwrap(),
-                        eq_pga,
-                    ));
-                    terms33.push(Term::new(
-                        coeff,
+            let eq_pga = &*eq_pga;
+            threads::par_map_indexed(t_steps * inner, |k| {
+                let (t, l) = (k / inner, k % inner);
+                let pl = &pls[t];
+                (
+                    eval_i64_with_eq(wits[t].layers[l].g_a.as_ref().unwrap(), eq_pga),
+                    Term::new(
+                        gpow33[k],
                         vec![
                             pl.g_z[l + 1].fix_rows(&ch.u_gar),
                             pl.w[l + 1].fix_rows(&ch.u_gac),
                         ],
-                    ));
-                    coeff *= ch.gamma;
-                }
-            }
+                    ),
+                )
+            })
+            .into_iter()
+            .unzip()
         });
+        v_ga = v;
         tr.absorb_frs(b"v_ga", &v_ga);
         let out33 = sumcheck::prove(Instance::new(terms33), &mut tr);
         mm33_evals = out33.factor_evals.iter().map(|f| (f[0], f[1])).collect();
@@ -626,25 +648,27 @@ pub(crate) fn prove_trace_with_parts(
 
     // (34): G̃_W for every (t, ℓ).
     let pgw: Vec<Fr> = [ch.u_gwr.clone(), ch.u_gwc.clone()].concat();
-    let mut v_gw = Vec::with_capacity(t_steps * depth);
-    let mut terms34 = Vec::new();
-    let mut coeff = Fr::ONE;
-    arena.scratch(1 << pgw.len(), |eq_pgw| {
+    let gpow34 = gamma_powers(ch.gamma, t_steps * depth);
+    let (v_gw, terms34): (Vec<Fr>, Vec<Term>) = arena.scratch(1 << pgw.len(), |eq_pgw| {
         poly::eq_table_into(&pgw, eq_pgw);
-        for (t, pl) in pls.iter().enumerate() {
-            for l in 0..depth {
-                v_gw.push(eval_i64_with_eq(&wits[t].layers[l].g_w, eq_pgw));
-                let a_prev = if l == 0 { &pl.x } else { &pl.a[l - 1] };
-                terms34.push(Term::new(
-                    coeff,
+        let eq_pgw = &*eq_pgw;
+        threads::par_map_indexed(t_steps * depth, |k| {
+            let (t, l) = (k / depth, k % depth);
+            let pl = &pls[t];
+            let a_prev = if l == 0 { &pl.x } else { &pl.a[l - 1] };
+            (
+                eval_i64_with_eq(&wits[t].layers[l].g_w, eq_pgw),
+                Term::new(
+                    gpow34[k],
                     vec![
                         pl.g_z[l].transpose().fix_rows(&ch.u_gwr),
                         a_prev.transpose().fix_rows(&ch.u_gwc),
                     ],
-                ));
-                coeff *= ch.gamma;
-            }
-        }
+                ),
+            )
+        })
+        .into_iter()
+        .unzip()
     });
     tr.absorb_frs(b"v_gw", &v_gw);
     let out34 = sumcheck::prove(Instance::new(terms34), &mut tr);
@@ -665,28 +689,51 @@ pub(crate) fn prove_trace_with_parts(
     let qz1: Option<Vec<Fr>> = (depth >= 3).then(|| [ch.u_gar.clone(), r33.clone()].concat());
     let qz2: Option<Vec<Fr>> = (depth >= 2).then(|| [r34.clone(), ch.u_gwr.clone()].concat());
 
+    // Each live slot is an independent b·d-sized dot against the point's
+    // eq table: fan the slots out over the pool (the dots themselves are
+    // chunk-reduced when the slot fan-out is too small to split, e.g.
+    // T=1 — nested pool calls run inline, so the two levels compose).
     let slot_claims = |point: &Option<Vec<Fr>>, use_a: bool| -> Vec<Fr> {
         match point {
             None => vec![Fr::ZERO; slots],
             Some(p) => {
                 let e = eq_table(p);
-                let mut out = vec![Fr::ZERO; slots];
-                for (t, pl) in pls.iter().enumerate() {
-                    for l in 0..depth {
-                        let dot: Fr = if use_a {
-                            pl.a[l].data.iter().zip(e.iter()).map(|(a, b)| *a * *b).sum()
-                        } else {
-                            pl.gap[l]
-                                .iter()
-                                .zip(pl.sign[l].iter())
-                                .zip(e.iter())
-                                .map(|((g, s), b)| (Fr::ONE - *s) * *g * *b)
-                                .sum()
-                        };
-                        out[t * lbar + l] = dot;
+                let e = &e;
+                threads::par_map_indexed(slots, |s| {
+                    let (t, l) = (s / lbar, s % lbar);
+                    if t >= t_steps || l >= depth {
+                        return Fr::ZERO;
                     }
-                }
-                out
+                    let pl = &pls[t];
+                    if use_a {
+                        let a = &pl.a[l].data;
+                        let n = a.len().min(e.len());
+                        threads::par_reduce(
+                            n,
+                            1 << 10,
+                            Fr::ZERO,
+                            |r, acc| {
+                                a[r.clone()]
+                                    .iter()
+                                    .zip(&e[r])
+                                    .fold(acc, |s, (x, y)| s + *x * *y)
+                            },
+                            |x, y| x + y,
+                        )
+                    } else {
+                        let (gap, sign) = (&pl.gap[l], &pl.sign[l]);
+                        let n = gap.len().min(sign.len()).min(e.len());
+                        threads::par_reduce(
+                            n,
+                            1 << 10,
+                            Fr::ZERO,
+                            |r, acc| {
+                                r.fold(acc, |s, i| s + (Fr::ONE - sign[i]) * gap[i] * e[i])
+                            },
+                            |x, y| x + y,
+                        )
+                    }
+                })
             }
         }
     };

@@ -29,6 +29,7 @@ use crate::curve::{msm::msm, G1Affine, G1};
 use crate::field::Fr;
 use crate::transcript::Transcript;
 use crate::util::rng::Rng;
+use crate::util::threads;
 use anyhow::{bail, ensure, Result};
 
 /// Log-size IPA proof.
@@ -72,27 +73,66 @@ fn nonzero_challenge(t: &mut Transcript, label: &[u8]) -> Fr {
 }
 
 /// Fold-pattern vector: s[i] = Π_j x_j^{±1} with +1 iff bit j (MSB-first)
-/// of i is set. g_final = Σ s[i]·g[i].
+/// of i is set. g_final = Σ s[i]·g[i]. Each doubling level is tabulated
+/// across the pool (one multiply per output index, as in the sequential
+/// build; the small early levels run inline under the threshold).
 fn s_vector(challenges: &[Fr]) -> Vec<Fr> {
     let mut inv = challenges.to_vec();
     Fr::batch_invert(&mut inv);
     let mut s = vec![Fr::ONE];
     for (x, xi) in challenges.iter().zip(inv.iter()) {
-        let mut next = Vec::with_capacity(s.len() * 2);
-        for &e in &s {
-            next.push(e * *xi); // low half: exponent −1
-            next.push(e * *x); // high half: exponent +1
-        }
-        s = next;
+        let src = &s;
+        s = threads::par_tabulate(src.len() * 2, 1 << 11, Fr::ZERO, |i| {
+            // low half of each pair: exponent −1; high half: +1
+            src[i / 2] * if i & 1 == 0 { *xi } else { *x }
+        });
     }
     s
+}
+
+/// Parallel dot product ⟨a, b⟩ over min(len) elements, chunk partials
+/// summed in ascending order (bit-identical to the sequential sum).
+fn dot_par(a: &[Fr], b: &[Fr]) -> Fr {
+    let n = a.len().min(b.len());
+    threads::par_reduce(
+        n,
+        1 << 10,
+        Fr::ZERO,
+        |range, acc| {
+            a[range.clone()]
+                .iter()
+                .zip(&b[range])
+                .fold(acc, |s, (x, y)| s + *x * *y)
+        },
+        |x, y| x + y,
+    )
 }
 
 /// Folded public-vector value after all rounds in one pass: the per-round
 /// fold e′ = x⁻¹·e_L + x·e_R composes to exactly the s-pattern, so
 /// ev_final = ⟨s_vector(challenges), e⟩ — no round-by-round cloning.
 fn fold_public(s: &[Fr], e: &[Fr]) -> Fr {
-    s.iter().zip(e.iter()).map(|(a, b)| *a * *b).sum()
+    dot_par(s, e)
+}
+
+/// Lane-tiled in-place build: out[i] = f(i), each index written once.
+fn fill_scal(out: &mut [Fr], f: impl Fn(usize) -> Fr + Sync) {
+    threads::par_chunks_mut(out, 1024, |ci, chunk| {
+        let base = ci * 1024;
+        for (k, slot) in chunk.iter_mut().enumerate() {
+            *slot = f(base + k);
+        }
+    });
+}
+
+/// Lane-tiled in-place update: out[i] = g(i, out[i]).
+fn update_scal(out: &mut [Fr], g: impl Fn(usize, Fr) -> Fr + Sync) {
+    threads::par_chunks_mut(out, 1024, |ci, chunk| {
+        let base = ci * 1024;
+        for (k, slot) in chunk.iter_mut().enumerate() {
+            *slot = g(base + k, *slot);
+        }
+    });
 }
 
 /// Replay the L/R rounds against the transcript, returning the challenge
@@ -190,29 +230,30 @@ pub(crate) fn prove_eval_core(
         let half = m / 2;
         let (a_l, a_r) = a.split_at(half);
         let (e_l, e_r) = ev.split_at(half);
-        let cl: Fr = a_l.iter().zip(e_r).map(|(x, y)| *x * *y).sum();
-        let cr: Fr = a_r.iter().zip(e_l).map(|(x, y)| *x * *y).sum();
+        let cl = dot_par(a_l, e_r);
+        let cr = dot_par(a_r, e_l);
         let r_l = Fr::random(rng);
         let r_r = Fr::random(rng);
-        // L = (g′_R)^{a_L}: original i with (i mod m) ≥ half
-        for i in 0..n {
+        // L = (g′_R)^{a_L}: original i with (i mod m) ≥ half. The scalar
+        // builds are lane-tiled (each index written once).
+        fill_scal(&mut scal, |i| {
             let v = i % m;
-            scal[i] = if v >= half {
+            if v >= half {
                 mult[i] * a_l[v - half]
             } else {
                 Fr::ZERO
-            };
-        }
+            }
+        });
         let l_pt = ck.msm_prefix(&scal) + u.mul(&cl) + ck.h.to_projective().mul(&r_l);
         // R = (g′_L)^{a_R}
-        for i in 0..n {
+        fill_scal(&mut scal, |i| {
             let v = i % m;
-            scal[i] = if v < half {
+            if v < half {
                 mult[i] * a_r[v]
             } else {
                 Fr::ZERO
-            };
-        }
+            }
+        });
         let r_pt = ck.msm_prefix(&scal) + u.mul(&cr) + ck.h.to_projective().mul(&r_r);
         let l_aff = l_pt.to_affine();
         let r_aff = r_pt.to_affine();
@@ -221,15 +262,9 @@ pub(crate) fn prove_eval_core(
         let x = nonzero_challenge(transcript, b"ipa/x");
         let xi = x.inverse().unwrap();
 
-        let mut a_next = Vec::with_capacity(half);
-        let mut e_next = Vec::with_capacity(half);
-        for i in 0..half {
-            a_next.push(x * a_l[i] + xi * a_r[i]);
-            e_next.push(xi * e_l[i] + x * e_r[i]);
-        }
-        for (i, mi) in mult.iter_mut().enumerate() {
-            *mi *= if i % m < half { xi } else { x };
-        }
+        let a_next = threads::par_tabulate(half, 1 << 10, Fr::ZERO, |i| x * a_l[i] + xi * a_r[i]);
+        let e_next = threads::par_tabulate(half, 1 << 10, Fr::ZERO, |i| xi * e_l[i] + x * e_r[i]);
+        update_scal(&mut mult, |i, mi| mi * if i % m < half { xi } else { x });
         blind = x.square() * r_l + blind + xi.square() * r_r;
         a = a_next;
         ev = e_next;
@@ -314,7 +349,7 @@ fn verify_eval_core(
     }
 
     acc.begin_equation();
-    let g_scalars: Vec<Fr> = s.iter().map(|si| *si * proof.a).collect();
+    let g_scalars = threads::par_tabulate(s.len(), 1 << 10, Fr::ZERO, |i| s[i] * proof.a);
     acc.push_fixed_key(ck, &g_scalars);
     acc.push(c * (proof.a * proof.b - v), ipa_u(&ck.label));
     acc.push(proof.blind, ck.h);
@@ -418,36 +453,40 @@ pub(crate) fn prove_ip_core(
         let half = m / 2;
         let (a_l, a_r) = a.split_at(half);
         let (b_l, b_r) = b.split_at(half);
-        let cl: Fr = a_l.iter().zip(b_r).map(|(x, y)| *x * *y).sum();
-        let cr: Fr = a_r.iter().zip(b_l).map(|(x, y)| *x * *y).sum();
+        let cl = dot_par(a_l, b_r);
+        let cr = dot_par(a_r, b_l);
         let r_l = Fr::random(rng);
         let r_r = Fr::random(rng);
         // L = (g′_R)^{a_L} · (h′_L)^{b_R} · u^{cl} · blind^{r_l}
-        for i in 0..n {
+        fill_scal(&mut scal_g, |i| {
             let v = i % m;
             if v >= half {
-                scal_g[i] = mult_g[i] * a_l[v - half];
-                scal_h[i] = Fr::ZERO;
+                mult_g[i] * a_l[v - half]
             } else {
-                scal_g[i] = Fr::ZERO;
-                scal_h[i] = mult_h[i] * b_r[v];
+                Fr::ZERO
             }
-        }
+        });
+        fill_scal(&mut scal_h, |i| {
+            let v = i % m;
+            if v < half { mult_h[i] * b_r[v] } else { Fr::ZERO }
+        });
         let l_pt = msm(&basis.g[..n], &scal_g)
             + msm(&basis.h[..n], &scal_h)
             + u.mul(&cl)
             + basis.blind_h.to_projective().mul(&r_l);
         // R = (g′_L)^{a_R} · (h′_R)^{b_L} · u^{cr} · blind^{r_r}
-        for i in 0..n {
+        fill_scal(&mut scal_g, |i| {
             let v = i % m;
-            if v < half {
-                scal_g[i] = mult_g[i] * a_r[v];
-                scal_h[i] = Fr::ZERO;
+            if v < half { mult_g[i] * a_r[v] } else { Fr::ZERO }
+        });
+        fill_scal(&mut scal_h, |i| {
+            let v = i % m;
+            if v >= half {
+                mult_h[i] * b_l[v - half]
             } else {
-                scal_g[i] = Fr::ZERO;
-                scal_h[i] = mult_h[i] * b_l[v - half];
+                Fr::ZERO
             }
-        }
+        });
         let r_pt = msm(&basis.g[..n], &scal_g)
             + msm(&basis.h[..n], &scal_h)
             + u.mul(&cr)
@@ -459,21 +498,10 @@ pub(crate) fn prove_ip_core(
         let x = nonzero_challenge(transcript, b"ipa2/x");
         let xi = x.inverse().unwrap();
 
-        let mut a_next = Vec::with_capacity(half);
-        let mut b_next = Vec::with_capacity(half);
-        for i in 0..half {
-            a_next.push(x * a_l[i] + xi * a_r[i]);
-            b_next.push(xi * b_l[i] + x * b_r[i]);
-        }
-        for i in 0..n {
-            if i % m < half {
-                mult_g[i] *= xi;
-                mult_h[i] *= x;
-            } else {
-                mult_g[i] *= x;
-                mult_h[i] *= xi;
-            }
-        }
+        let a_next = threads::par_tabulate(half, 1 << 10, Fr::ZERO, |i| x * a_l[i] + xi * a_r[i]);
+        let b_next = threads::par_tabulate(half, 1 << 10, Fr::ZERO, |i| xi * b_l[i] + x * b_r[i]);
+        update_scal(&mut mult_g, |i, mi| mi * if i % m < half { xi } else { x });
+        update_scal(&mut mult_h, |i, mi| mi * if i % m < half { x } else { xi });
         blind = x.square() * r_l + blind + xi.square() * r_r;
         a = a_next;
         b = b_next;
@@ -587,32 +615,23 @@ pub(crate) fn verify_ip_core(
 
     acc.begin_equation();
     let g_scalars: Vec<Fr> = match g_pub {
-        None => s.iter().map(|si| *si * proof.a).collect(),
+        None => threads::par_tabulate(s.len(), 1 << 10, Fr::ZERO, |i| s[i] * proof.a),
         Some(gp) => {
             ensure!(gp.len() == n, "ipa2: g_pub length mismatch");
-            s.iter()
-                .zip(gp.iter())
-                .map(|(si, p)| *si * proof.a - *p)
-                .collect()
+            threads::par_tabulate(n, 1 << 10, Fr::ZERO, |i| s[i] * proof.a - gp[i])
         }
     };
     acc.push_fixed(&g[..n], &g_scalars);
     let mut h_scalars: Vec<Fr> = match h_scale {
-        None => s_rec.iter().map(|si| *si * proof.b).collect(),
+        None => threads::par_tabulate(s_rec.len(), 1 << 10, Fr::ZERO, |i| s_rec[i] * proof.b),
         Some(scale) => {
             ensure!(scale.len() == n, "ipa2: h_scale length mismatch");
-            s_rec
-                .iter()
-                .zip(scale.iter())
-                .map(|(si, sc)| *si * proof.b * *sc)
-                .collect()
+            threads::par_tabulate(n, 1 << 10, Fr::ZERO, |i| s_rec[i] * proof.b * scale[i])
         }
     };
     if let Some(hp) = h_pub {
         ensure!(hp.len() == n, "ipa2: h_pub length mismatch");
-        for (hs, p) in h_scalars.iter_mut().zip(hp.iter()) {
-            *hs -= *p;
-        }
+        update_scal(&mut h_scalars, |i, hs| hs - hp[i]);
     }
     acc.push_fixed(&h[..n], &h_scalars);
     acc.push(c * (proof.a * proof.b - t), ipa_u(label));
@@ -639,17 +658,29 @@ pub struct EvalClaim {
 /// ρ-powered fold of the prover-side claim data: combined (values, blind,
 /// value) — the one definition both batching provers share.
 fn fold_claims(claims: &[EvalClaim], e_len: usize, rho: Fr) -> (Vec<Fr>, Fr, Fr) {
+    // ρ-powers once, then the folded-values build tiles over the vector
+    // length (each output index sums its column in claim order — the same
+    // additions as the sequential fold, so the same field elements).
+    let mut coeffs = Vec::with_capacity(claims.len());
     let mut coeff = Fr::ONE;
-    let mut values = vec![Fr::ZERO; e_len];
+    for _ in claims {
+        coeffs.push(coeff);
+        coeff *= rho;
+    }
+    let values = threads::par_tabulate(e_len, 1 << 10, Fr::ZERO, |i| {
+        claims
+            .iter()
+            .zip(&coeffs)
+            .fold(Fr::ZERO, |acc, (cl, c)| match cl.values.get(i) {
+                Some(x) => acc + *c * *x,
+                None => acc,
+            })
+    });
     let mut blind = Fr::ZERO;
     let mut v = Fr::ZERO;
-    for cl in claims {
-        for (acc, x) in values.iter_mut().zip(cl.values.iter()) {
-            *acc += coeff * *x;
-        }
-        blind += coeff * cl.blind;
-        v += coeff * cl.v;
-        coeff *= rho;
+    for (cl, c) in claims.iter().zip(&coeffs) {
+        blind += *c * cl.blind;
+        v += *c * cl.v;
     }
     (values, blind, v)
 }

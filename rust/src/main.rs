@@ -654,11 +654,22 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
     opts.seed = cli.get_u64("seed", opts.seed);
     opts.budget =
         std::time::Duration::from_secs_f64(cli.get_f64("budget-s", opts.budget.as_secs_f64()));
+    if let Some(list) = cli.get("threads") {
+        opts.threads = list
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<std::result::Result<Vec<_>, _>>()
+            .with_context(|| format!("parsing --threads {list:?} (comma-separated, 0 = auto)"))?;
+        if opts.threads.is_empty() {
+            anyhow::bail!("--threads needs at least one value (0 = auto)");
+        }
+    }
     let out = cli.get("out").unwrap_or("BENCH_trace.json");
     println!(
-        "bench grid: T={:?} depth={:?} d={} B={} budget {:.0} s ({} threads)",
+        "bench grid: T={:?} depth={:?} threads={:?} d={} B={} budget {:.0} s ({} lanes auto)",
         opts.steps,
         opts.depths,
+        opts.threads,
         opts.width,
         opts.batch,
         opts.budget.as_secs_f64(),

@@ -133,7 +133,10 @@ pub fn matmul_i64(a: &[i64], b: &[i64], m: usize, k: usize, n: usize) -> Vec<i64
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     let mut out = vec![0i64; m * n];
-    crate::util::threads::par_chunks_mut(&mut out, n.max(1), |row, chunk| {
+    // Explicit 64-element floor: each output element costs k i128 MACs
+    // (tens of ns at typical k), so even small outputs split profitably on
+    // the pool — the seed's 1024 floor was sized for thread-spawn cost.
+    crate::util::threads::par_chunks_mut_with(64, &mut out, n.max(1), |row, chunk| {
         // each chunk is one output row (chunk_size = n)
         let i = row;
         for (j, c) in chunk.iter_mut().enumerate() {
@@ -154,7 +157,7 @@ pub fn matmul_at_b(a: &[i64], b: &[i64], m: usize, k: usize, n: usize) -> Vec<i6
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), m * n);
     let mut out = vec![0i64; k * n];
-    crate::util::threads::par_chunks_mut(&mut out, n.max(1), |row, chunk| {
+    crate::util::threads::par_chunks_mut_with(64, &mut out, n.max(1), |row, chunk| {
         let i = row; // row of Aᵀ = column of A
         for (j, c) in chunk.iter_mut().enumerate() {
             let mut acc: i128 = 0;
@@ -172,7 +175,7 @@ pub fn matmul_a_bt(a: &[i64], b: &[i64], m: usize, k: usize, n: usize) -> Vec<i6
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), n * k);
     let mut out = vec![0i64; m * n];
-    crate::util::threads::par_chunks_mut(&mut out, n.max(1), |row, chunk| {
+    crate::util::threads::par_chunks_mut_with(64, &mut out, n.max(1), |row, chunk| {
         let i = row;
         for (j, c) in chunk.iter_mut().enumerate() {
             let mut acc: i128 = 0;

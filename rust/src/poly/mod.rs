@@ -61,13 +61,21 @@ impl Mle {
     }
 
     /// Fix variable 0 (most significant index bit) at r, in place.
+    /// Pool-chunked: the low half is updated in parallel lanes against a
+    /// shared view of the high half (disjoint slices from `split_at_mut`,
+    /// so each output index is written exactly once — the value per index
+    /// is identical at every lane count).
     pub fn fold(&mut self, r: Fr) {
         let half = self.evals.len() / 2;
-        for i in 0..half {
-            let lo = self.evals[i];
-            let hi = self.evals[i + half];
-            self.evals[i] = lo + r * (hi - lo);
-        }
+        let (lo_half, hi_half) = self.evals.split_at_mut(half);
+        let hi_half = &*hi_half;
+        crate::util::threads::par_chunks_mut(lo_half, 1 << 12, |ci, chunk| {
+            let base = ci << 12;
+            for (k, slot) in chunk.iter_mut().enumerate() {
+                let lo = *slot;
+                *slot = lo + r * (hi_half[base + k] - lo);
+            }
+        });
         self.evals.truncate(half);
         self.num_vars -= 1;
     }

@@ -59,6 +59,7 @@ use crate::sumcheck::{self, Instance, SumcheckProof, Term};
 use crate::telemetry::failure::Classify;
 use crate::transcript::Transcript;
 use crate::util::rng::Rng;
+use crate::util::threads;
 use crate::witness::StepWitness;
 use crate::zkdl::{commit, frs, tile_claims_at, tiled_eq, Committed};
 use crate::zkrelu::{self, Protocol1Msg, ProverAux, ValidityBases, ValidityProof};
@@ -318,7 +319,19 @@ fn selection_validity_bases(pk: &ProvenanceKey) -> Arc<ValidityBases> {
 }
 
 fn dot(a: &[Fr], b: &[Fr]) -> Fr {
-    a.iter().zip(b.iter()).map(|(x, y)| *x * *y).sum()
+    let n = a.len().min(b.len());
+    threads::par_reduce(
+        n,
+        1 << 10,
+        Fr::ZERO,
+        |r, acc| {
+            a[r.clone()]
+                .iter()
+                .zip(&b[r])
+                .fold(acc, |s, (x, y)| s + *x * *y)
+        },
+        |x, y| x + y,
+    )
 }
 
 /// Σᵢ γⁱ·valsᵢ.
@@ -574,32 +587,49 @@ pub(crate) fn prove_provenance(
     //     = Σ_k [Σ_t γ^{2t}·S̃_t(u_r,k)]·D̃_pts(k,u_c) + (labels analogue)
     let e_r = eq_table(&u_pr);
     let e_c = eq_table(&u_pc);
-    let mut dp_fix = vec![Fr::ZERO; nbar];
-    let mut dl_fix = vec![Fr::ZERO; nbar];
-    for k in 0..nbar {
+    // Per-row restrictions of the dataset tensor: each k is an independent
+    // d-length fold, tiled across the pool (the in-row accumulation order
+    // is unchanged, so every lane count gives the same field elements).
+    let dp_fix = threads::par_tabulate(nbar, 1 << 7, Fr::ZERO, |k| {
         let base = k * 2 * d;
-        for c in 0..d {
-            dp_fix[k] += e_c[c] * d_tensor[base + c];
-            dl_fix[k] += e_c[c] * d_tensor[base + d + c];
-        }
-    }
+        (0..d).fold(Fr::ZERO, |acc, c| acc + e_c[c] * d_tensor[base + c])
+    });
+    let dl_fix = threads::par_tabulate(nbar, 1 << 7, Fr::ZERO, |k| {
+        let base = k * 2 * d;
+        (0..d).fold(Fr::ZERO, |acc, c| acc + e_c[c] * d_tensor[base + d + c])
+    });
     let dp_mle = Mle::new(dp_fix);
     let dl_mle = Mle::new(dl_fix);
-    let mut terms = Vec::with_capacity(2 * t_steps);
-    let mut coeff = Fr::ONE;
-    for t in 0..t_steps {
-        let mut s_fix = vec![Fr::ZERO; nbar];
-        let base = t * b * nbar;
-        for (i, er) in e_r.iter().enumerate() {
-            for (k, sf) in s_fix.iter_mut().enumerate() {
-                *sf += *er * s.values[base + i * nbar + k];
-            }
+    // Per-step row-fixes of the selection tensor fan out over steps; the
+    // k-axis within a step is additionally chunk-tiled (nested calls run
+    // inline, so whichever level wins the lanes, the other is sequential).
+    let gpow: Vec<Fr> = {
+        let mut out = Vec::with_capacity(2 * t_steps);
+        let mut c = Fr::ONE;
+        for _ in 0..2 * t_steps {
+            out.push(c);
+            c *= gamma;
         }
-        let s_mle = Mle::new(s_fix);
-        terms.push(Term::new(coeff, vec![s_mle.clone(), dp_mle.clone()]));
-        coeff *= gamma;
-        terms.push(Term::new(coeff, vec![s_mle, dl_mle.clone()]));
-        coeff *= gamma;
+        out
+    };
+    let step_mles: Vec<Mle> = threads::par_map_indexed(t_steps, |t| {
+        let base = t * b * nbar;
+        let mut s_fix = vec![Fr::ZERO; nbar];
+        threads::par_chunks_mut(&mut s_fix, 256, |ci, chunk| {
+            let k0 = ci * 256;
+            for (i, er) in e_r.iter().enumerate() {
+                let row = base + i * nbar + k0;
+                for (k, sf) in chunk.iter_mut().enumerate() {
+                    *sf += *er * s.values[row + k];
+                }
+            }
+        });
+        Mle::new(s_fix)
+    });
+    let mut terms = Vec::with_capacity(2 * t_steps);
+    for (t, s_mle) in step_mles.into_iter().enumerate() {
+        terms.push(Term::new(gpow[2 * t], vec![s_mle.clone(), dp_mle.clone()]));
+        terms.push(Term::new(gpow[2 * t + 1], vec![s_mle, dl_mle.clone()]));
     }
     let out = sumcheck::prove(Instance::new(terms), tr);
     let r_k = out.point.clone();
@@ -658,11 +688,10 @@ pub(crate) fn prove_provenance(
         pt1.extend_from_slice(&u_pc);
         let e0 = eq_table(&pt0);
         let e1 = eq_table(&pt1);
-        let evec: Vec<Fr> = e0
-            .iter()
-            .zip(e1.iter())
-            .map(|(a, b)| *a + delta * *b)
-            .collect();
+        let evec =
+            threads::par_tabulate(e0.len().min(e1.len()), 1 << 10, Fr::ZERO, |i| {
+                e0[i] + delta * e1[i]
+            });
         let claim = EvalClaim {
             com: dataset.com_d.to_projective(),
             values: (*d_tensor).clone(),
@@ -683,23 +712,32 @@ pub(crate) fn prove_provenance(
         let e_row_tbl = eq_table(&u_row);
         let e_a = eq_table(&[u_pr.clone(), r_k.clone()].concat());
         let mut w = vec![Fr::ZERO; n_sel];
-        let mut coeff = Fr::ONE;
-        for t in 0..t_steps {
-            let base = t * b * nbar;
-            for (o, v) in w[base..base + b * nbar].iter_mut().zip(e_a.iter()) {
-                *o += coeff * *v;
+        // γ_s-powers up front; each step's b·nbar block of w is disjoint,
+        // so the folded e_a scatter tiles step-blocks across the pool, and
+        // the row-sum weights then tile row-blocks the same way.
+        let gpow_s: Vec<Fr> = {
+            let mut out = Vec::with_capacity(t_steps + 1);
+            let mut c = Fr::ONE;
+            for _ in 0..=t_steps {
+                out.push(c);
+                c *= gamma_s;
             }
-            coeff *= gamma_s;
-        }
+            out
+        };
+        let coeff = gpow_s[t_steps];
+        threads::par_chunks_mut(&mut w[..t_steps * b * nbar], b * nbar, |t, chunk| {
+            for (o, v) in chunk.iter_mut().zip(e_a.iter()) {
+                *o += gpow_s[t] * *v;
+            }
+        });
+        threads::par_chunks_mut(&mut w[..t_steps * b * nbar], nbar, |row, chunk| {
+            for slot in chunk.iter_mut().take(pk.n_rows) {
+                *slot += coeff * e_row_tbl[row];
+            }
+        });
         let mut rowsum_target = Fr::ZERO;
-        for t in 0..t_steps {
-            for i in 0..b {
-                let row = t * b + i;
-                for k in 0..pk.n_rows {
-                    w[row * nbar + k] += coeff * e_row_tbl[row];
-                }
-                rowsum_target += e_row_tbl[row];
-            }
+        for row in 0..t_steps * b {
+            rowsum_target += e_row_tbl[row];
         }
         let claim = EvalClaim {
             com: s.com,
@@ -851,11 +889,10 @@ pub(crate) fn verify_provenance_accum(
         pt1.extend_from_slice(&u_pc);
         let e0 = eq_table(&pt0);
         let e1 = eq_table(&pt1);
-        let evec: Vec<Fr> = e0
-            .iter()
-            .zip(e1.iter())
-            .map(|(a, b)| *a + delta * *b)
-            .collect();
+        let evec =
+            threads::par_tabulate(e0.len().min(e1.len()), 1 << 10, Fr::ZERO, |i| {
+                e0[i] + delta * e1[i]
+            });
         ipa::batch_verify_eval_expr(
             &pk.g_data,
             &[(
@@ -877,23 +914,32 @@ pub(crate) fn verify_provenance_accum(
         let e_row_tbl = eq_table(&u_row);
         let e_a = eq_table(&[u_pr.clone(), r_k.clone()].concat());
         let mut w = vec![Fr::ZERO; n_sel];
-        let mut coeff = Fr::ONE;
-        for t in 0..t_steps {
-            let base = t * b * nbar;
-            for (o, v) in w[base..base + b * nbar].iter_mut().zip(e_a.iter()) {
-                *o += coeff * *v;
+        // γ_s-powers up front; each step's b·nbar block of w is disjoint,
+        // so the folded e_a scatter tiles step-blocks across the pool, and
+        // the row-sum weights then tile row-blocks the same way.
+        let gpow_s: Vec<Fr> = {
+            let mut out = Vec::with_capacity(t_steps + 1);
+            let mut c = Fr::ONE;
+            for _ in 0..=t_steps {
+                out.push(c);
+                c *= gamma_s;
             }
-            coeff *= gamma_s;
-        }
+            out
+        };
+        let coeff = gpow_s[t_steps];
+        threads::par_chunks_mut(&mut w[..t_steps * b * nbar], b * nbar, |t, chunk| {
+            for (o, v) in chunk.iter_mut().zip(e_a.iter()) {
+                *o += gpow_s[t] * *v;
+            }
+        });
+        threads::par_chunks_mut(&mut w[..t_steps * b * nbar], nbar, |row, chunk| {
+            for slot in chunk.iter_mut().take(pk.n_rows) {
+                *slot += coeff * e_row_tbl[row];
+            }
+        });
         let mut rowsum_target = Fr::ZERO;
-        for t in 0..t_steps {
-            for i in 0..b {
-                let row = t * b + i;
-                for k in 0..pk.n_rows {
-                    w[row * nbar + k] += coeff * e_row_tbl[row];
-                }
-                rowsum_target += e_row_tbl[row];
-            }
+        for row in 0..t_steps * b {
+            rowsum_target += e_row_tbl[row];
         }
         let v = gamma_fold(&proof.sel_evals, gamma_s) + coeff * rowsum_target;
         ipa::batch_verify_eval_expr(

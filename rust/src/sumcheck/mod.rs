@@ -17,7 +17,21 @@
 use crate::field::Fr;
 use crate::poly::{interpolate_uni, Mle};
 use crate::transcript::Transcript;
+use crate::util::threads;
 use anyhow::{bail, Result};
+
+/// Maximum product degree (factors per term) an instance may carry. The
+/// prover's per-index line scratch is a stack array sized by this, which is
+/// what makes the inner loop allocation-free; every relation in zkDL has
+/// degree ≤ 3 (eq·(1−B)·Z), so 4 leaves headroom. Enforced by
+/// [`Instance::new`].
+pub const MAX_FACTORS: usize = 4;
+
+/// Parallelism floor for the round-evaluation split: below this many
+/// hypercube indices a round carries ≲10µs of multiply-adds total, where a
+/// pooled dispatch no longer pays (measured crossover ≈64 on 8 lanes; see
+/// `util::threads` threshold notes).
+const PAR_MIN_HALF: usize = 64;
 
 /// One product term: coefficient × product of multilinear factors.
 pub struct Term {
@@ -45,6 +59,11 @@ impl Instance {
             .map(|f| f.num_vars)
             .expect("instance needs at least one factor");
         for t in &terms {
+            assert!(
+                t.factors.len() <= MAX_FACTORS,
+                "term degree {} exceeds MAX_FACTORS = {MAX_FACTORS}",
+                t.factors.len()
+            );
             for f in &t.factors {
                 assert_eq!(f.num_vars, num_vars, "factor arity mismatch");
             }
@@ -57,22 +76,30 @@ impl Instance {
         self.terms.iter().map(|t| t.factors.len()).max().unwrap()
     }
 
-    /// Direct evaluation of the sum (for testing / the honest prover's claim).
+    /// Direct evaluation of the sum (for testing / the honest prover's
+    /// claim). Chunk-reduced on the pool: per-chunk partials are combined
+    /// in ascending chunk order, which for exact field addition equals the
+    /// sequential sum bit-for-bit at every lane count.
     pub fn sum(&self) -> Fr {
         let n = 1usize << self.num_vars;
-        let mut acc = Fr::ZERO;
-        for t in &self.terms {
-            let mut term_sum = Fr::ZERO;
-            for b in 0..n {
-                let mut prod = Fr::ONE;
-                for f in &t.factors {
-                    prod *= f.evals[b];
+        threads::par_reduce(
+            n,
+            1 << 10,
+            Fr::ZERO,
+            |range, mut acc| {
+                for t in &self.terms {
+                    for b in range.clone() {
+                        let mut prod = t.coeff;
+                        for f in &t.factors {
+                            prod *= f.evals[b];
+                        }
+                        acc += prod;
+                    }
                 }
-                term_sum += prod;
-            }
-            acc += t.coeff * term_sum;
-        }
-        acc
+                acc
+            },
+            |a, b| a + b,
+        )
     }
 }
 
@@ -113,31 +140,52 @@ pub fn prove(mut inst: Instance, transcript: &mut Transcript) -> ProverOutput {
 
     for _round in 0..num_vars {
         let half = inst.terms[0].factors[0].len() / 2;
-        // round polynomial evaluations at X = 0..=deg
-        let mut evals = vec![Fr::ZERO; deg + 1];
-        for t in &inst.terms {
-            for i in 0..half {
+        // Round polynomial evaluations at X = 0..=deg, accumulated
+        // chunk-wise on the zkLanes pool. Each chunk owns a stack
+        // `[Fr; MAX_FACTORS + 1]` partial plus a fixed per-factor line
+        // scratch, so the inner loop performs zero heap allocations per
+        // hypercube index (asserted via the counting allocator in
+        // tests/telemetry.rs). Partials are summed in ascending chunk
+        // order; exact field addition makes the result independent of the
+        // chunking, so transcript bytes are identical for every
+        // ZKDL_THREADS (pinned by tests/parallel_determinism.rs).
+        let terms = &inst.terms;
+        let acc = threads::par_reduce(
+            half,
+            PAR_MIN_HALF,
+            [Fr::ZERO; MAX_FACTORS + 1],
+            |range, mut acc| {
+                crate::telemetry::count(crate::telemetry::Counter::SumcheckParChunks, 1);
                 // per-factor line: f(X) = lo + X·(hi − lo)
-                let lines: Vec<(Fr, Fr)> = t
-                    .factors
-                    .iter()
-                    .map(|f| {
-                        let lo = f.evals[i];
-                        let hi = f.evals[i + half];
-                        (lo, hi - lo)
-                    })
-                    .collect();
-                let mut x = Fr::ZERO;
-                for e in evals.iter_mut() {
-                    let mut prod = t.coeff;
-                    for &(lo, slope) in &lines {
-                        prod *= lo + x * slope;
+                let mut lines = [(Fr::ZERO, Fr::ZERO); MAX_FACTORS];
+                for t in terms {
+                    let nf = t.factors.len();
+                    for i in range.clone() {
+                        for (line, f) in lines[..nf].iter_mut().zip(&t.factors) {
+                            let lo = f.evals[i];
+                            *line = (lo, f.evals[i + half] - lo);
+                        }
+                        let mut x = Fr::ZERO;
+                        for e in acc[..=deg].iter_mut() {
+                            let mut prod = t.coeff;
+                            for &(lo, slope) in &lines[..nf] {
+                                prod *= lo + x * slope;
+                            }
+                            *e += prod;
+                            x += Fr::ONE;
+                        }
                     }
-                    *e += prod;
-                    x += Fr::ONE;
                 }
-            }
-        }
+                acc
+            },
+            |mut a, b| {
+                for (x, y) in a.iter_mut().zip(b) {
+                    *x += y;
+                }
+                a
+            },
+        );
+        let evals = acc[..=deg].to_vec();
         transcript.absorb_frs(b"sumcheck/round", &evals);
         let r = transcript.challenge_fr(b"sumcheck/challenge");
         for t in inst.terms.iter_mut() {

@@ -25,7 +25,10 @@ use crate::wire;
 use crate::witness::native::sgd_witness_chain;
 
 /// Schema tag written into every bench JSON file; bump on layout changes.
-pub const BENCH_SCHEMA: &str = "zkdl/bench/v1";
+/// v2 added the per-cell `threads` axis (cells are keyed on
+/// (variant, steps, depth, threads); a grid may measure each cell at
+/// several thread counts).
+pub const BENCH_SCHEMA: &str = "zkdl/bench/v2";
 
 /// Trace variants measured per grid cell.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -61,6 +64,12 @@ pub struct GridOptions {
     /// Rows in the synthetic dataset the provenance variant binds to.
     pub data_rows: usize,
     pub seed: u64,
+    /// Thread-count axis: every (variant, steps, depth) cell is measured
+    /// once per entry, with `ZKDL_THREADS` set to the entry for that run.
+    /// `0` means "auto" (one lane per available core). When the axis
+    /// contains `1`, the rendered table adds a prove-speedup column
+    /// relative to the single-threaded cell.
+    pub threads: Vec<usize>,
     /// Wall-clock budget for the whole grid; cells past it are skipped
     /// (recorded with a skip reason, like the paper's timeout entries).
     pub budget: Duration,
@@ -76,6 +85,7 @@ impl GridOptions {
             batch: 8,
             data_rows: 256,
             seed: 0xa66,
+            threads: vec![0],
             budget: Duration::from_secs(3600),
         }
     }
@@ -111,6 +121,9 @@ pub struct BenchCase {
     pub variant: Variant,
     pub steps: usize,
     pub depth: usize,
+    /// Requested thread count for this cell (`ZKDL_THREADS` during the run;
+    /// `0` = auto). Part of the cell key alongside variant/steps/depth.
+    pub threads: usize,
     /// `Some(reason)` if the case was not run (chained at T=1, or the grid
     /// budget was exhausted); measurements are zero in that case.
     pub skipped: Option<String>,
@@ -150,6 +163,16 @@ pub fn run_grid(opts: &GridOptions) -> BenchReport {
 fn run_grid_locked(opts: &GridOptions) -> BenchReport {
     let start = Instant::now();
     let mut rng = Rng::seed_from_u64(opts.seed);
+    let thread_axis = if opts.threads.is_empty() {
+        vec![0]
+    } else {
+        opts.threads.clone()
+    };
+    // Each cell runs with ZKDL_THREADS pinned to the axis entry; the pool
+    // re-reads the variable on every dispatch, so flipping it mid-process
+    // retargets lane count without restarting workers. Restore the caller's
+    // setting afterwards so bench doesn't leak config into later tests.
+    let saved_threads = std::env::var("ZKDL_THREADS").ok();
     let mut cases = Vec::new();
     for &depth in &opts.depths {
         for &t in &opts.steps {
@@ -164,18 +187,28 @@ fn run_grid_locked(opts: &GridOptions) -> BenchReport {
             );
             let wits = sgd_witness_chain(cfg, &ds, t, cell_seed);
             let tk = TraceKey::setup(cfg, t);
-            for variant in Variant::ALL {
-                let case = if variant == Variant::Chained && t < 2 {
-                    skipped_case(variant, t, depth, "chained trace needs T >= 2")
-                } else if start.elapsed() > opts.budget {
-                    skipped_case(variant, t, depth, "grid budget exhausted")
-                } else {
-                    eprintln!("bench: T={t} depth={depth} {} ...", variant.name());
-                    run_case(variant, t, depth, &tk, &wits, &ds, &mut rng)
-                };
-                cases.push(case);
+            for &threads in &thread_axis {
+                std::env::set_var("ZKDL_THREADS", threads.to_string());
+                for variant in Variant::ALL {
+                    let case = if variant == Variant::Chained && t < 2 {
+                        skipped_case(variant, t, depth, threads, "chained trace needs T >= 2")
+                    } else if start.elapsed() > opts.budget {
+                        skipped_case(variant, t, depth, threads, "grid budget exhausted")
+                    } else {
+                        eprintln!(
+                            "bench: T={t} depth={depth} threads={threads} {} ...",
+                            variant.name()
+                        );
+                        run_case(variant, t, depth, threads, &tk, &wits, &ds, &mut rng)
+                    };
+                    cases.push(case);
+                }
             }
         }
+    }
+    match saved_threads {
+        Some(v) => std::env::set_var("ZKDL_THREADS", v),
+        None => std::env::remove_var("ZKDL_THREADS"),
     }
     BenchReport {
         opts: opts.clone(),
@@ -185,11 +218,18 @@ fn run_grid_locked(opts: &GridOptions) -> BenchReport {
     }
 }
 
-fn skipped_case(variant: Variant, steps: usize, depth: usize, reason: &str) -> BenchCase {
+fn skipped_case(
+    variant: Variant,
+    steps: usize,
+    depth: usize,
+    threads: usize,
+    reason: &str,
+) -> BenchCase {
     BenchCase {
         variant,
         steps,
         depth,
+        threads,
         skipped: Some(reason.to_string()),
         prove_s: 0.0,
         verify_s: 0.0,
@@ -199,10 +239,12 @@ fn skipped_case(variant: Variant, steps: usize, depth: usize, reason: &str) -> B
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_case(
     variant: Variant,
     steps: usize,
     depth: usize,
+    threads: usize,
     tk: &TraceKey,
     wits: &[crate::witness::StepWitness],
     ds: &Dataset,
@@ -236,6 +278,7 @@ fn run_case(
         variant,
         steps,
         depth,
+        threads,
         skipped: None,
         prove_s: prove_d.as_secs_f64(),
         verify_s: verify_d.as_secs_f64(),
@@ -258,6 +301,7 @@ impl BenchCase {
             ("variant", Json::str(self.variant.name())),
             ("steps", Json::Uint(self.steps as u64)),
             ("depth", Json::Uint(self.depth as u64)),
+            ("threads", Json::Uint(self.threads as u64)),
             (
                 "skipped",
                 match &self.skipped {
@@ -329,6 +373,16 @@ impl BenchReport {
                         "variants",
                         Json::Arr(Variant::ALL.iter().map(|v| Json::str(v.name())).collect()),
                     ),
+                    (
+                        "threads",
+                        Json::Arr(
+                            self.opts
+                                .threads
+                                .iter()
+                                .map(|&t| Json::Uint(t as u64))
+                                .collect(),
+                        ),
+                    ),
                 ]),
             ),
             ("wall_s", Json::Num(self.wall_s)),
@@ -345,13 +399,29 @@ impl BenchReport {
     }
 
     /// Human-readable grid table (proof sizes in kB, MSM counts as
-    /// `prove/verify` pairs).
+    /// `prove/verify` pairs). The `x1` column is the prove-phase speedup
+    /// of each cell over the same (variant, T, depth) cell measured with
+    /// `threads = 1`, when the grid's thread axis includes 1.
     pub fn render_table(&self) -> String {
+        let baseline_prove = |c: &BenchCase| {
+            self.cases
+                .iter()
+                .find(|b| {
+                    b.threads == 1
+                        && b.skipped.is_none()
+                        && b.variant == c.variant
+                        && b.steps == c.steps
+                        && b.depth == c.depth
+                })
+                .map(|b| b.prove_s)
+        };
         let mut table = Table::new(&[
             "T",
             "depth",
+            "thr",
             "variant",
             "prove",
+            "x1",
             "verify",
             "proof kB",
             "msm calls p/v",
@@ -362,8 +432,10 @@ impl BenchReport {
                 Some(reason) => table.row(vec![
                     c.steps.to_string(),
                     c.depth.to_string(),
+                    fmt_threads(c.threads),
                     c.variant.name().to_string(),
                     format!("({reason})"),
+                    "-".into(),
                     "-".into(),
                     "-".into(),
                     "-".into(),
@@ -372,8 +444,13 @@ impl BenchReport {
                 None => table.row(vec![
                     c.steps.to_string(),
                     c.depth.to_string(),
+                    fmt_threads(c.threads),
                     c.variant.name().to_string(),
                     fmt_dur(Duration::from_secs_f64(c.prove_s)),
+                    match baseline_prove(c) {
+                        Some(base) if c.prove_s > 0.0 => format!("{:.2}x", base / c.prove_s),
+                        _ => "-".into(),
+                    },
                     fmt_dur(Duration::from_secs_f64(c.verify_s)),
                     format!("{:.1}", c.proof_bytes as f64 / 1024.0),
                     format!("{}/{}", c.msm.prove_calls, c.msm.verify_calls),
@@ -387,7 +464,7 @@ impl BenchReport {
     /// Per-cell delta table between this (freshly measured) report and a
     /// previously recorded baseline JSON — the parsed output of
     /// [`Self::to_json_string`]. Cells are matched on (variant, steps,
-    /// depth). Wall-clock deltas are percentages and inherently noisy;
+    /// depth, threads). Wall-clock deltas are percentages and inherently noisy;
     /// the MSM point deltas are exact (deterministic for a given config),
     /// so a nonzero `msm pts` delta means the protocol itself changed.
     pub fn compare_table(&self, old: &Json) -> Result<String, String> {
@@ -405,11 +482,13 @@ impl BenchReport {
                 o.get("variant").and_then(|v| v.as_str()) == Some(c.variant.name())
                     && o.get("steps").and_then(|v| v.as_u64()) == Some(c.steps as u64)
                     && o.get("depth").and_then(|v| v.as_u64()) == Some(c.depth as u64)
+                    && o.get("threads").and_then(|v| v.as_u64()) == Some(c.threads as u64)
             })
         };
         let mut table = Table::new(&[
             "T",
             "depth",
+            "thr",
             "variant",
             "prove old->new",
             "d%",
@@ -421,6 +500,7 @@ impl BenchReport {
             let mut row = vec![
                 c.steps.to_string(),
                 c.depth.to_string(),
+                fmt_threads(c.threads),
                 c.variant.name().to_string(),
             ];
             let note = |text: String| {
@@ -462,6 +542,14 @@ impl BenchReport {
     }
 }
 
+fn fmt_threads(threads: usize) -> String {
+    if threads == 0 {
+        "auto".to_string()
+    } else {
+        threads.to_string()
+    }
+}
+
 fn fmt_old_new(old_s: f64, new_s: f64) -> String {
     format!(
         "{} -> {}",
@@ -497,6 +585,9 @@ mod tests {
         assert_eq!(quick.steps, [1]);
         assert_eq!(quick.depths, [2]);
         assert_eq!(quick.width, full.width);
+        // default thread axis is a single auto cell
+        assert_eq!(full.threads, [0]);
+        assert_eq!(quick.threads, [0]);
     }
 
     #[test]
@@ -512,6 +603,7 @@ mod tests {
                     variant: Variant::Plain,
                     steps: 1,
                     depth: 2,
+                    threads: 1,
                     skipped: None,
                     prove_s: 0.5,
                     verify_s: 0.25,
@@ -535,7 +627,7 @@ mod tests {
                         },
                     )],
                 },
-                skipped_case(Variant::Chained, 1, 2, "chained trace needs T >= 2"),
+                skipped_case(Variant::Chained, 1, 2, 1, "chained trace needs T >= 2"),
             ],
         };
         let parsed = Json::parse(&report.to_json_string()).expect("bench JSON parses");
@@ -546,12 +638,28 @@ mod tests {
         for key in ["created_unix", "threads", "config", "grid", "wall_s", "cases"] {
             assert!(parsed.get(key).is_some(), "missing {key}");
         }
+        let grid_threads = parsed
+            .get("grid")
+            .and_then(|g| g.get("threads"))
+            .and_then(|v| v.as_array())
+            .expect("grid threads axis");
+        assert_eq!(grid_threads.len(), 1);
         let cases = parsed.get("cases").unwrap().as_array().unwrap();
         assert_eq!(cases.len(), 2);
         let first = &cases[0];
-        for key in ["variant", "steps", "depth", "skipped", "prove_s", "verify_s", "proof_bytes"] {
+        for key in [
+            "variant",
+            "steps",
+            "depth",
+            "threads",
+            "skipped",
+            "prove_s",
+            "verify_s",
+            "proof_bytes",
+        ] {
             assert!(first.get(key).is_some(), "case missing {key}");
         }
+        assert_eq!(first.get("threads").and_then(|v| v.as_u64()), Some(1));
         let msm = first.get("msm").expect("msm block");
         assert_eq!(msm.get("verify_calls").and_then(|v| v.as_u64()), Some(1));
         assert_eq!(msm.get("verify_flushes").and_then(|v| v.as_u64()), Some(1));
@@ -580,6 +688,7 @@ mod tests {
                     variant: Variant::Plain,
                     steps: 1,
                     depth: 2,
+                    threads: 1,
                     skipped: None,
                     prove_s: 0.5,
                     verify_s: 0.25,
@@ -594,7 +703,7 @@ mod tests {
                     },
                     hists: Vec::new(),
                 },
-                skipped_case(Variant::Chained, 1, 2, "chained trace needs T >= 2"),
+                skipped_case(Variant::Chained, 1, 2, 1, "chained trace needs T >= 2"),
             ],
         }
     }
@@ -633,5 +742,29 @@ mod tests {
         let bad = Json::obj(vec![("schema", Json::str("zkdl/other/v9"))]);
         assert!(sample_report().compare_table(&bad).is_err());
         assert!(sample_report().compare_table(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn render_table_reports_speedup_over_single_thread_cell() {
+        let mut report = sample_report();
+        let mut fast = report.cases[0].clone();
+        fast.threads = 4;
+        fast.prove_s = 0.125; // 4x over the threads=1 cell
+        report.cases.push(fast);
+        report.opts.threads = vec![1, 4];
+        let table = report.render_table();
+        assert!(table.contains("4.00x"), "table:\n{table}");
+        // the threads=1 cell shows its trivial 1x, auto renders as "auto"
+        assert!(table.contains("1.00x"), "table:\n{table}");
+    }
+
+    #[test]
+    fn compare_table_keys_cells_on_thread_count() {
+        // new report measured at threads=4; baseline only has threads=1
+        let mut new = sample_report();
+        new.cases[0].threads = 4;
+        let baseline = Json::parse(&sample_report().to_json_string()).unwrap();
+        let table = new.compare_table(&baseline).expect("compare");
+        assert!(table.contains("(no baseline cell)"), "table:\n{table}");
     }
 }

@@ -98,6 +98,9 @@ define_counters! {
     MsmFixedBlocksMerged => "msm/fixed_blocks/merged",
     SumcheckProveRounds => "sumcheck/prove_rounds",
     SumcheckVerifyRounds => "sumcheck/verify_rounds",
+    SumcheckParChunks => "sumcheck/par_chunks",
+    PoolJobs => "pool/jobs",
+    PoolQueueFull => "pool/queue_full",
     IpaProveRounds => "ipa/prove_rounds",
     IpaVerifyRounds => "ipa/verify_rounds",
     TranscriptAbsorbs => "transcript/absorbs",

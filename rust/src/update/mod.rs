@@ -70,6 +70,7 @@ use crate::model::ModelConfig;
 use crate::poly::eq_table;
 use crate::transcript::Transcript;
 use crate::util::rng::Rng;
+use crate::util::threads;
 use crate::witness::StepWitness;
 use crate::zkdl::{commit, frs, Committed};
 use crate::zkrelu::{self, DigitLayout, Protocol1Msg, ProverAux, ValidityBases, ValidityProof};
@@ -242,7 +243,19 @@ fn update_validity_bases(uk: &UpdateKey, layout: &DigitLayout, width: usize) -> 
 }
 
 fn dot(a: &[Fr], b: &[Fr]) -> Fr {
-    a.iter().zip(b.iter()).map(|(x, y)| *x * *y).sum()
+    let n = a.len().min(b.len());
+    threads::par_reduce(
+        n,
+        1 << 10,
+        Fr::ZERO,
+        |r, acc| {
+            a[r.clone()]
+                .iter()
+                .zip(&b[r])
+                .fold(acc, |s, (x, y)| s + *x * *y)
+        },
+        |x, y| x + y,
+    )
 }
 
 /// γ-folded slot selector over the stacked basis: block `slots[i]` of the
@@ -255,15 +268,24 @@ fn dot(a: &[Fr], b: &[Fr]) -> Fr {
 /// only constrain the sum over blocks, letting mass hide in pad blocks or
 /// cancel across boundaries.
 fn gamma_selected_eq(e: &[Fr], n: usize, slots: &[usize], gamma: Fr) -> Vec<Fr> {
-    let d = e.len();
+    let d = e.len().max(1);
     let mut out = vec![Fr::ZERO; n];
+    // γ-powers precomputed and inverted into a block → coefficient table,
+    // so the fill tiles the stacked vector block-aligned across the pool
+    // (each block written by exactly one lane; pads stay untouched zeros).
+    let mut coeff_of: Vec<Option<Fr>> = vec![None; n.div_ceil(d)];
     let mut coeff = Fr::ONE;
     for &s in slots {
-        for (o, x) in out[s * d..(s + 1) * d].iter_mut().zip(e.iter()) {
-            *o = coeff * *x;
-        }
+        coeff_of[s] = Some(coeff);
         coeff *= gamma;
     }
+    threads::par_chunks_mut(&mut out, d, |bi, block| {
+        if let Some(c) = coeff_of[bi] {
+            for (o, x) in block.iter_mut().zip(e.iter()) {
+                *o = c * *x;
+            }
+        }
+    });
     out
 }
 

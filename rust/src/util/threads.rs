@@ -1,10 +1,45 @@
-//! Tiny data-parallel helpers over `std::thread::scope` (rayon substitute).
+//! zkLanes: a persistent worker-pool runtime for data-parallel prover work.
+//!
+//! The seed version of this module spawned fresh `std::thread`s inside
+//! `std::thread::scope` for every parallel call — tens of µs of spawn cost
+//! per worker per call, paid again for every sumcheck round, every MSM
+//! window split, every matmul. zkLanes replaces that with a pool of
+//! `num_threads() - 1` workers spawned once on first use behind a
+//! [`OnceLock`]; the calling thread itself acts as the final lane. Jobs are
+//! lifetime-erased closures dispatched over a bounded channel; a
+//! condvar-backed latch makes the dispatch *scoped* (the submitting call
+//! does not return until every job has run), which is what lets jobs
+//! borrow from the caller's stack safely.
+//!
+//! Determinism: none of the helpers here change *what* is computed, only
+//! *where*. [`par_map`]/[`par_chunks_mut`] write disjoint output slots, and
+//! [`par_reduce`] combines per-chunk partials in ascending chunk order —
+//! so for the exact modular arithmetic of `Fr` (associative and
+//! commutative) every thread count produces bit-identical results. See
+//! DESIGN.md §perf "threading model".
+//!
+//! `ZKDL_THREADS` is re-read on every call, so setting it to `1` at any
+//! point forces all helpers onto their sequential paths even if the pool
+//! is already alive (the workers just idle). `ZKDL_THREADS=0` or unset
+//! means "auto" (`available_parallelism`).
 
-/// Number of worker threads to use (respects `ZKDL_THREADS`).
+use std::cell::Cell;
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::{mpsc, Condvar, Mutex, OnceLock};
+
+use crate::telemetry::{self, Counter};
+
+/// Number of parallel lanes to use (respects `ZKDL_THREADS`; `0` or a
+/// non-numeric value falls through to `available_parallelism`). Re-read on
+/// every call — tests flip it mid-process.
 pub fn num_threads() -> usize {
     if let Ok(v) = std::env::var("ZKDL_THREADS") {
         if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
+            if n >= 1 {
+                return n;
+            }
         }
     }
     std::thread::available_parallelism()
@@ -12,55 +47,286 @@ pub fn num_threads() -> usize {
         .unwrap_or(1)
 }
 
-/// Minimum item count before `par_map` spawns worker threads. Its call
-/// sites all have heavyweight per-item work (a hash-to-curve derivation, a
-/// Pippenger bucket window, a witness row batch), so below this count the
-/// per-thread spawn cost (tens of µs) dominates the work being split.
-pub const PAR_MIN_ITEMS: usize = 8;
+// ---------------------------------------------------------------------------
+// Parallelism thresholds.
+//
+// The seed constants (`PAR_MIN_ITEMS = 8`, `PAR_MIN_ELEMS = 1024`) were
+// tuned for per-call thread *spawn* cost, which the pool eliminated: a
+// pooled dispatch is one boxed-closure allocation plus a channel send
+// (~100ns), so the crossover moved by roughly an order of magnitude.
+// Measured on the bench grid (T=16, depth=8, 8 lanes): splitting pays for
+// itself once a call carries ≳2µs of work — ~2 hash-to-curve items or a
+// few hundred field multiply-adds. Thresholds are now per-call-site
+// *parameters* (`*_with` variants) so hot paths with known per-item cost
+// can pick their own floor; the bare helpers keep pool-era defaults.
+// ---------------------------------------------------------------------------
 
-/// Minimum element count before `par_chunks_mut` spawns. Chunk callers
-/// (the i64 matmuls) do only a few ns per element, so the threshold is in
-/// elements rather than chunks.
-pub const PAR_MIN_ELEMS: usize = 1024;
+/// Pool-era default minimum item count before `par_map` splits. Call sites
+/// with heavyweight items (curve derivations, Pippenger windows) can go as
+/// low as 2 via [`par_map_with`].
+pub const PAR_MIN_ITEMS: usize = 2;
 
-/// Map `f` over `items` in parallel, preserving order.
-/// Falls back to sequential when a single thread is available or the input
-/// has at most [`PAR_MIN_ITEMS`] items, where spawn overhead would
-/// dominate.
+/// Pool-era default minimum element count before `par_chunks_mut` splits.
+/// Chunk callers (i64 matmuls, table doublings) do a few ns per element,
+/// so ~256 elements is where a ~100ns dispatch stops mattering.
+pub const PAR_MIN_ELEMS: usize = 256;
+
+// ---------------------------------------------------------------------------
+// The pool.
+// ---------------------------------------------------------------------------
+
+/// A pool job: a lifetime-erased closure. Only [`scope_run`] constructs
+/// these, and it guarantees (by blocking on the latch) that the closure and
+/// everything it borrows outlive the job's execution.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A borrow-capturing job as the public API sees it.
+pub type ScopedJob<'scope> = Box<dyn FnOnce() + Send + 'scope>;
+
+/// Bounded depth of the shared job queue. `scope_run` never blocks on a
+/// full queue — it runs the job inline on the caller instead (counted as
+/// `pool/queue_full`) — so this only bounds memory, not progress.
+const QUEUE_CAP: usize = 1024;
+
+struct Pool {
+    tx: SyncSender<Job>,
+    rx: Mutex<Receiver<Job>>,
+    /// Workers spawned so far; grows lazily if `ZKDL_THREADS` rises
+    /// mid-process (it never shrinks — surplus workers just idle).
+    spawned: Mutex<usize>,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+thread_local! {
+    /// Set once in each pool worker. A `scope_run` issued *from* a worker
+    /// (nested parallelism) executes inline instead of re-entering the
+    /// queue, which would deadlock the latch if every worker were waiting.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// The process-wide pool, spawned on first use and sized to
+/// `num_threads() - 1` workers (the caller is the last lane).
+fn pool() -> &'static Pool {
+    let p = POOL.get_or_init(|| {
+        let (tx, rx) = mpsc::sync_channel(QUEUE_CAP);
+        Pool {
+            tx,
+            rx: Mutex::new(rx),
+            spawned: Mutex::new(0),
+        }
+    });
+    p.ensure_workers(num_threads().saturating_sub(1));
+    p
+}
+
+impl Pool {
+    fn ensure_workers(&'static self, want: usize) {
+        let mut n = self.spawned.lock().unwrap();
+        while *n < want {
+            let id = *n;
+            std::thread::Builder::new()
+                .name(format!("zklane-{id}"))
+                .spawn(move || self.worker_loop())
+                .expect("spawn zklane worker");
+            *n += 1;
+        }
+    }
+
+    fn worker_loop(&self) {
+        IN_POOL.with(|f| f.set(true));
+        loop {
+            // Hold the receiver lock only while dequeueing, never while
+            // running the job.
+            let job = match self.rx.lock().unwrap().recv() {
+                Ok(job) => job,
+                Err(_) => return, // sender dropped: process teardown
+            };
+            job();
+        }
+    }
+}
+
+/// Countdown latch: `scope_run` blocks on it until every job (pooled or
+/// inline) has finished, and re-raises if any of them panicked.
+struct Latch {
+    state: Mutex<LatchState>,
+    cv: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panicked: bool,
+}
+
+impl Latch {
+    fn new(remaining: usize) -> Self {
+        Self {
+            state: Mutex::new(LatchState {
+                remaining,
+                panicked: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn done(&self, panicked: bool) {
+        let mut s = self.state.lock().unwrap();
+        s.remaining -= 1;
+        s.panicked |= panicked;
+        if s.remaining == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Blocks until all jobs are done; returns whether any panicked.
+    fn wait(&self) -> bool {
+        let mut s = self.state.lock().unwrap();
+        while s.remaining > 0 {
+            s = self.cv.wait(s).unwrap();
+        }
+        s.panicked
+    }
+}
+
+/// Run every job in `jobs` to completion, using the pool for all but the
+/// first (the caller lane runs that one). Borrow-safe: does not return
+/// until every job has finished, so jobs may capture references into the
+/// caller's stack. Panics in any job are caught, the latch still drains,
+/// and the panic is re-raised here after all jobs settle (so no borrow
+/// outlives its owner even on unwind).
+///
+/// Sequential fallbacks: a single-lane configuration (`ZKDL_THREADS=1`),
+/// a nested call from inside a pool worker, or a one-job list all execute
+/// inline in order, touching neither the pool nor any counter.
+pub fn scope_run(jobs: Vec<ScopedJob<'_>>) {
+    if jobs.is_empty() {
+        return;
+    }
+    if jobs.len() == 1 || num_threads() == 1 || IN_POOL.with(|f| f.get()) {
+        for job in jobs {
+            job();
+        }
+        return;
+    }
+
+    let latch = Latch::new(jobs.len());
+    let latch_ref = &latch;
+    let p = pool();
+    let mut iter = jobs.into_iter();
+    // The caller lane takes the first job; everything else goes to workers.
+    let own = iter.next().unwrap();
+    for job in iter {
+        let wrapped: ScopedJob<'_> = Box::new(move || {
+            let panicked = catch_unwind(AssertUnwindSafe(job)).is_err();
+            latch_ref.done(panicked);
+        });
+        // SAFETY: the closure (and the borrows it captures, including
+        // `latch_ref`) stays alive until `latch.wait()` below observes its
+        // `done()`, so erasing the lifetime cannot let the job outlive its
+        // borrows. This is the same contract `std::thread::scope` enforces,
+        // implemented with a latch instead of a join.
+        let wrapped: Job = unsafe {
+            std::mem::transmute::<ScopedJob<'_>, Job>(wrapped)
+        };
+        match p.tx.try_send(wrapped) {
+            Ok(()) => telemetry::count(Counter::PoolJobs, 1),
+            Err(TrySendError::Full(job)) | Err(TrySendError::Disconnected(job)) => {
+                // Bounded queue saturated (many concurrent top-level
+                // scopes): degrade gracefully by running on the caller.
+                telemetry::count(Counter::PoolQueueFull, 1);
+                job();
+            }
+        }
+    }
+    let panicked_here = catch_unwind(AssertUnwindSafe(own)).is_err();
+    latch.done(panicked_here);
+    if latch.wait() {
+        panic!("zklanes: a pooled job panicked");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Data-parallel helpers, all routed through `scope_run`.
+// ---------------------------------------------------------------------------
+
+/// Map `f` over `items` in parallel, preserving order, with the pool-era
+/// default threshold. See [`par_map_with`].
 pub fn par_map<T, U, F>(items: Vec<T>, f: F) -> Vec<U>
 where
     T: Send,
     U: Send,
     F: Fn(T) -> U + Sync,
 {
-    let n_threads = num_threads();
-    if n_threads == 1 || items.len() <= PAR_MIN_ITEMS {
+    par_map_with(PAR_MIN_ITEMS, items, f)
+}
+
+/// Map `f` over `items` in parallel, preserving order. Falls back to
+/// sequential when one lane is configured or the input has at most
+/// `min_items` items (per-call-site crossover; see the threshold notes at
+/// the top of this module).
+pub fn par_map_with<T, U, F>(min_items: usize, items: Vec<T>, f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    F: Fn(T) -> U + Sync,
+{
+    let lanes = num_threads();
+    if lanes == 1 || items.len() <= min_items {
         return items.into_iter().map(f).collect();
     }
     let n = items.len();
-    let chunk = n.div_ceil(n_threads.min(n));
+    let n_chunks = lanes.min(n);
+    let chunk = n.div_ceil(n_chunks);
     let mut slots: Vec<Option<U>> = Vec::with_capacity(n);
     slots.resize_with(n, || None);
-    // Move items into Option slots so each worker can take its chunk.
+    // Move items into Option slots so each lane can take its chunk.
     let mut inputs: Vec<Option<T>> = items.into_iter().map(Some).collect();
     let f = &f;
-    std::thread::scope(|s| {
-        for (in_chunk, out_chunk) in inputs.chunks_mut(chunk).zip(slots.chunks_mut(chunk)) {
-            s.spawn(move || {
+    let jobs: Vec<ScopedJob<'_>> = inputs
+        .chunks_mut(chunk)
+        .zip(slots.chunks_mut(chunk))
+        .map(|(in_chunk, out_chunk)| -> ScopedJob<'_> {
+            Box::new(move || {
                 for (inp, out) in in_chunk.iter_mut().zip(out_chunk.iter_mut()) {
                     *out = Some(f(inp.take().unwrap()));
                 }
-            });
-        }
-    });
+            })
+        })
+        .collect();
+    scope_run(jobs);
     slots.into_iter().map(|o| o.unwrap()).collect()
 }
 
-/// Run `f(chunk_index, chunk)` over mutable chunks of `data` in parallel.
-/// Runs inline (same guard as [`par_map`]) when only one chunk would be
-/// spawned, a single thread is available, or the data is smaller than
-/// [`PAR_MIN_ELEMS`].
+/// Parallel index-range map: evaluates `f(i)` for i in 0..n, with the
+/// default threshold.
+pub fn par_map_indexed<U, F>(n: usize, f: F) -> Vec<U>
+where
+    U: Send,
+    F: Fn(usize) -> U + Sync,
+{
+    par_map_with(PAR_MIN_ITEMS, (0..n).collect(), |i| f(i))
+}
+
+/// Run `f(chunk_index, chunk)` over mutable chunks of `data` in parallel
+/// with the pool-era default threshold. See [`par_chunks_mut_with`].
 pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_size: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    par_chunks_mut_with(PAR_MIN_ELEMS, data, chunk_size, f)
+}
+
+/// Run `f(chunk_index, chunk)` over mutable chunks of `data` in parallel.
+/// Chunk indices and sizes are exactly those of `data.chunks_mut(chunk_size)`
+/// regardless of lane count; consecutive chunks are *grouped* into at most
+/// `num_threads()` jobs, so concurrency is capped at the lane count (the
+/// seed version spawned one OS thread per chunk — a 2^20-point fixed-base
+/// table with chunk 256 spawned 4096 threads; see the regression test).
+/// Runs inline when one lane is configured, only one chunk exists, or the
+/// data has fewer than `min_elems` elements.
+pub fn par_chunks_mut_with<T, F>(min_elems: usize, data: &mut [T], chunk_size: usize, f: F)
 where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
@@ -70,32 +336,112 @@ where
     }
     let chunk = chunk_size.max(1);
     let n_chunks = data.len().div_ceil(chunk);
-    if num_threads() == 1 || n_chunks == 1 || data.len() < PAR_MIN_ELEMS {
+    let lanes = num_threads();
+    if lanes == 1 || n_chunks == 1 || data.len() < min_elems {
         for (i, c) in data.chunks_mut(chunk).enumerate() {
             f(i, c);
         }
         return;
     }
+    let chunks_per_job = n_chunks.div_ceil(lanes);
     let f = &f;
-    std::thread::scope(|s| {
-        for (i, chunk) in data.chunks_mut(chunk).enumerate() {
-            s.spawn(move || f(i, chunk));
-        }
-    });
+    let jobs: Vec<ScopedJob<'_>> = data
+        .chunks_mut(chunk * chunks_per_job)
+        .enumerate()
+        .map(|(job_i, segment)| -> ScopedJob<'_> {
+            Box::new(move || {
+                for (k, c) in segment.chunks_mut(chunk).enumerate() {
+                    f(job_i * chunks_per_job + k, c);
+                }
+            })
+        })
+        .collect();
+    scope_run(jobs);
 }
 
-/// Parallel index-range map: evaluates `f(i)` for i in 0..n.
-pub fn par_map_indexed<U, F>(n: usize, f: F) -> Vec<U>
+/// Internal chunk width for [`par_tabulate`]: small enough to balance
+/// lanes, large enough that the per-chunk closure call amortizes.
+const TABULATE_CHUNK: usize = 1024;
+
+/// Build `out[i] = f(i)` for `i in 0..n` across the pool. Every index is
+/// written exactly once by exactly one lane, so the result is identical at
+/// every lane count. `zero` seeds the buffer; below `min_elems` elements
+/// the fill runs inline on the caller.
+pub fn par_tabulate<T, F>(n: usize, min_elems: usize, zero: T, f: F) -> Vec<T>
 where
-    U: Send,
-    F: Fn(usize) -> U + Sync,
+    T: Clone + Send,
+    F: Fn(usize) -> T + Sync,
 {
-    par_map((0..n).collect(), |i| f(i))
+    let mut out = vec![zero; n];
+    par_chunks_mut_with(min_elems, &mut out, TABULATE_CHUNK, |ci, chunk| {
+        let base = ci * TABULATE_CHUNK;
+        for (k, slot) in chunk.iter_mut().enumerate() {
+            *slot = f(base + k);
+        }
+    });
+    out
+}
+
+/// Chunked map + associative reduce over the index range `0..n`.
+///
+/// The range is split into at most `num_threads()` contiguous chunks; each
+/// lane folds its chunk with `map_chunk(range, identity.clone())`, and the
+/// per-chunk partials are combined with `reduce` **in ascending chunk
+/// order**. For an associative `reduce` this equals the sequential fold
+/// for every lane count; for the commutative exact field arithmetic this
+/// codebase feeds it (`Fr` sums), the result is bit-identical regardless
+/// of chunk boundaries — which is what keeps proof artifacts byte-stable
+/// across `ZKDL_THREADS` (pinned by `tests/parallel_determinism.rs`).
+///
+/// Sequential below `min_items` items (then exactly
+/// `map_chunk(0..n, identity)` — property-tested against the pooled path).
+pub fn par_reduce<A, M, R>(n: usize, min_items: usize, identity: A, map_chunk: M, reduce: R) -> A
+where
+    A: Clone + Send,
+    M: Fn(Range<usize>, A) -> A + Sync,
+    R: Fn(A, A) -> A,
+{
+    if n == 0 {
+        return identity;
+    }
+    let lanes = num_threads();
+    if lanes == 1 || n <= min_items.max(1) || IN_POOL.with(|f| f.get()) {
+        return map_chunk(0..n, identity);
+    }
+    let n_chunks = lanes.min(n);
+    let chunk = n.div_ceil(n_chunks);
+    let mut partials: Vec<Option<A>> = Vec::with_capacity(n_chunks);
+    partials.resize_with(n_chunks, || None);
+    let map_chunk = &map_chunk;
+    let id_ref = &identity;
+    let jobs: Vec<ScopedJob<'_>> = partials
+        .iter_mut()
+        .enumerate()
+        .map(|(ci, slot)| -> ScopedJob<'_> {
+            let lo = ci * chunk;
+            let hi = (lo + chunk).min(n);
+            Box::new(move || {
+                *slot = Some(map_chunk(lo..hi, id_ref.clone()));
+            })
+        })
+        .collect();
+    scope_run(jobs);
+    let mut acc: Option<A> = None;
+    for p in partials.into_iter().map(|p| p.unwrap()) {
+        acc = Some(match acc {
+            None => p,
+            Some(a) => reduce(a, p),
+        });
+    }
+    acc.unwrap_or(identity)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashSet;
+    use std::sync::Mutex;
+    use std::thread::ThreadId;
 
     #[test]
     fn par_map_preserves_order() {
@@ -106,14 +452,12 @@ mod tests {
 
     #[test]
     fn small_inputs_fall_back_sequentially() {
-        // below PAR_MIN_ITEMS / PAR_MIN_ELEMS the sequential path must give
-        // identical results
-        let out = par_map(vec![1, 2, 3], |x| x + 1);
+        // at/below the threshold the sequential path must give identical
+        // results
+        let out = par_map_with(8, vec![1, 2, 3], |x| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
         let mut v = vec![0u8; 10];
-        par_chunks_mut(&mut v, 3, |i, c| {
-            c.iter_mut().for_each(|x| *x = i as u8 + 1)
-        });
+        par_chunks_mut(&mut v, 3, |i, c| c.iter_mut().for_each(|x| *x = i as u8 + 1));
         assert_eq!(v, vec![1, 1, 1, 2, 2, 2, 3, 3, 3, 4]);
     }
 
@@ -126,5 +470,89 @@ mod tests {
             }
         });
         assert!(v.iter().all(|&x| x > 0));
+    }
+
+    #[test]
+    fn par_chunks_mut_concurrency_is_capped_at_lane_count() {
+        // Regression: the seed spawned one OS thread per *chunk*, so 4096
+        // chunks meant 4096 threads. The pooled version must execute on at
+        // most num_threads() distinct threads (workers + the caller).
+        let threads: Mutex<HashSet<ThreadId>> = Mutex::new(HashSet::new());
+        let mut v = vec![0u32; 1 << 16];
+        par_chunks_mut(&mut v, 16, |i, chunk| {
+            threads.lock().unwrap().insert(std::thread::current().id());
+            for c in chunk.iter_mut() {
+                *c = i as u32 + 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x > 0));
+        let used = threads.lock().unwrap().len();
+        assert!(
+            used <= num_threads(),
+            "used {used} threads for {} chunks with {} lanes",
+            (1usize << 16) / 16,
+            num_threads()
+        );
+    }
+
+    #[test]
+    fn par_tabulate_writes_every_index() {
+        let v = par_tabulate(10_000, 1, 0usize, |i| i * 3 + 1);
+        assert_eq!(v.len(), 10_000);
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i * 3 + 1);
+        }
+        assert!(par_tabulate(0, 1, 0u8, |_| 1).is_empty());
+    }
+
+    #[test]
+    fn par_reduce_matches_sequential_fold() {
+        let n = 100_000usize;
+        let seq: u64 = (0..n as u64).map(|i| i.wrapping_mul(2654435761)).sum();
+        let par = par_reduce(
+            n,
+            1,
+            0u64,
+            |r, acc: u64| {
+                r.fold(acc, |a, i| {
+                    a.wrapping_add((i as u64).wrapping_mul(2654435761))
+                })
+            },
+            |a, b| a.wrapping_add(b),
+        );
+        assert_eq!(seq, par);
+        // Empty range returns the identity untouched.
+        assert_eq!(par_reduce(0, 1, 7u64, |_, a| a, |a, b| a + b), 7);
+    }
+
+    #[test]
+    fn nested_scope_runs_inline_without_deadlock() {
+        // A par_map whose body itself calls par_reduce: the inner call must
+        // not wait on pool workers that are all busy running the outer one.
+        let outer: Vec<u64> = par_map_with(
+            0,
+            (0..64u64).collect(),
+            |i| par_reduce(256, 1, 0u64, |r, a: u64| r.fold(a, |x, j| x + j as u64 + i), |a, b| a + b),
+        );
+        for (i, &got) in outer.iter().enumerate() {
+            let want: u64 = (0..256u64).map(|j| j + i as u64).sum();
+            assert_eq!(got, want, "lane {i}");
+        }
+    }
+
+    #[test]
+    fn pooled_job_panic_propagates_after_drain() {
+        let caught = std::panic::catch_unwind(|| {
+            par_map_with(0, (0..64usize).collect(), |i| {
+                if i == 17 {
+                    panic!("boom");
+                }
+                i
+            });
+        });
+        assert!(caught.is_err(), "panic in a pooled job must propagate");
+        // The pool must still be usable afterwards.
+        let out = par_map_with(0, (0..64usize).collect(), |i| i + 1);
+        assert_eq!(out[63], 64);
     }
 }

@@ -26,6 +26,7 @@ use crate::ipa::{self, IpaBasis, IpaProof};
 use crate::poly::{eq_eval_index, eq_table};
 use crate::transcript::Transcript;
 use crate::util::rng::Rng;
+use crate::util::threads;
 use anyhow::{ensure, Result};
 
 /// Active-digit layout of a validity instance: row i of the 2N rows has
@@ -518,28 +519,50 @@ fn build_vectors(
     n: usize,
 ) -> (Vec<Fr>, Vec<Fr>) {
     let mut s_tables = STables::new(width);
-    let total = 2 * n * width;
-    let mut a = Vec::with_capacity(total);
-    let mut b = Vec::with_capacity(total);
-    // B_k = B + k·B̄_sign; B̄_sign only populates (i < n, j = width−1)
+    // Materialize every distinct digit-budget basis up front (≤ width+1
+    // small tables) so the row fill below is read-only and can tile rows
+    // across the pool — each row's width-slice of a and b is written by
+    // exactly one lane.
     for i in 0..2 * n {
-        let s_w = s_tables.get(layout.digits_at(i));
-        for j in 0..width {
-            let mut bk = aux.b[i * width + j];
-            let mut bpk = aux.bp[i * width + j];
-            if j == width - 1 && i < n {
-                if let Some(sign) = &aux.sign {
-                    bk += ch.k * sign[i];
-                    bpk += ch.k * (sign[i] - Fr::ONE);
-                }
-            }
-            a.push(bk - ch.z);
-            b.push(
-                ch.z.square() * e_row[i] * s_w[j]
-                    + (ch.z + bpk) * e_row[i] * ch.e_bit[j],
-            );
-        }
+        s_tables.get(layout.digits_at(i));
     }
+    let s_tables = &s_tables;
+    let total = 2 * n * width;
+    let mut a = vec![Fr::ZERO; total];
+    let mut b = vec![Fr::ZERO; total];
+    // B_k = B + k·B̄_sign; B̄_sign only populates (i < n, j = width−1)
+    let bk_at = |i: usize, j: usize| -> Fr {
+        let mut bk = aux.b[i * width + j];
+        if j == width - 1 && i < n {
+            if let Some(sign) = &aux.sign {
+                bk += ch.k * sign[i];
+            }
+        }
+        bk
+    };
+    let bpk_at = |i: usize, j: usize| -> Fr {
+        let mut bpk = aux.bp[i * width + j];
+        if j == width - 1 && i < n {
+            if let Some(sign) = &aux.sign {
+                bpk += ch.k * (sign[i] - Fr::ONE);
+            }
+        }
+        bpk
+    };
+    threads::par_chunks_mut(&mut a, width, |i, arow| {
+        for (j, slot) in arow.iter_mut().enumerate() {
+            *slot = bk_at(i, j) - ch.z;
+        }
+    });
+    threads::par_chunks_mut(&mut b, width, |i, brow| {
+        let s_w = s_tables.tables[layout.digits_at(i)]
+            .as_deref()
+            .expect("prebuilt above");
+        for (j, slot) in brow.iter_mut().enumerate() {
+            *slot = ch.z.square() * e_row[i] * s_w[j]
+                + (ch.z + bpk_at(i, j)) * e_row[i] * ch.e_bit[j];
+        }
+    });
     (a, b)
 }
 

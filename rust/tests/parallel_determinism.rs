@@ -1,0 +1,187 @@
+//! zkLanes determinism guards: proof artifacts must be byte-identical at
+//! every `ZKDL_THREADS` setting.
+//!
+//! The pool helpers only change *where* work runs, never *what* is
+//! computed: disjoint-slice fills write each slot exactly once, and
+//! `par_reduce` combines per-chunk partials in ascending chunk order —
+//! exact modular arithmetic in `Fr` is associative and commutative, so the
+//! chunked sum equals the sequential fold bit-for-bit. These tests pin that
+//! contract end-to-end (wire-encoded trace proofs across 1/2/8 lanes) and
+//! at the primitive level (`par_reduce` vs a sequential fold), plus the
+//! one-MSM verifier invariant with the pool active.
+//!
+//! Every test that flips `ZKDL_THREADS` runs under the same lock so the
+//! parallel test harness cannot interleave env mutations.
+
+use std::sync::Mutex;
+
+use zkdl::aggregate::{
+    prove_trace, prove_trace_chained, prove_trace_provenance, verify_trace, TraceKey,
+};
+use zkdl::data::Dataset;
+use zkdl::model::ModelConfig;
+use zkdl::provenance::ProverDataset;
+use zkdl::util::rng::Rng;
+use zkdl::util::threads;
+use zkdl::witness::StepWitness;
+use zkdl::{telemetry, wire, Fr};
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with `ZKDL_THREADS` pinned to `n`, restoring the prior setting.
+/// The pool re-reads the variable on every dispatch, so this retargets lane
+/// count mid-process without restarting workers.
+fn with_threads<T>(n: usize, f: impl FnOnce() -> T) -> T {
+    let saved = std::env::var("ZKDL_THREADS").ok();
+    std::env::set_var("ZKDL_THREADS", n.to_string());
+    let out = f();
+    match saved {
+        Some(v) => std::env::set_var("ZKDL_THREADS", v),
+        None => std::env::remove_var("ZKDL_THREADS"),
+    }
+    out
+}
+
+struct Fixture {
+    tk: TraceKey,
+    wits: Vec<StepWitness>,
+    pd: ProverDataset,
+}
+
+fn fixture() -> Fixture {
+    // T=2 so the chained (zkOptim) variant is provable; small shape keeps
+    // the 9 prove calls (3 variants x 3 thread counts) cheap in debug.
+    let cfg = ModelConfig::new(2, 8, 4);
+    let ds = Dataset::synthetic(16, 4, 4, cfg.r_bits, 5);
+    let wits = sgd(cfg, &ds, 2, 7);
+    let tk = TraceKey::setup(cfg, 2);
+    let pd = ProverDataset::build(&ds, &tk.cfg).expect("dataset commits");
+    Fixture { tk, wits, pd }
+}
+
+fn sgd(cfg: ModelConfig, ds: &Dataset, t: usize, seed: u64) -> Vec<StepWitness> {
+    zkdl::witness::native::sgd_witness_chain(cfg, ds, t, seed)
+}
+
+/// Wire-encoded (plain, chained, provenance) trace proofs, each produced
+/// from an identically seeded rng — blinds are drawn sequentially on the
+/// caller thread, so the draw sequence is lane-count-independent.
+fn artifacts(fx: &Fixture, lanes: usize) -> [Vec<u8>; 3] {
+    with_threads(lanes, || {
+        let mut rng = Rng::seed_from_u64(0xD15C);
+        let plain = prove_trace(&fx.tk, &fx.wits, &mut rng);
+        let mut rng = Rng::seed_from_u64(0xD15C);
+        let chained =
+            prove_trace_chained(&fx.tk, &fx.wits, &mut rng).expect("witnesses chain");
+        let mut rng = Rng::seed_from_u64(0xD15C);
+        let prov = prove_trace_provenance(&fx.tk, &fx.wits, &fx.pd, &mut rng)
+            .expect("rows open against dataset");
+        verify_trace(&fx.tk, &plain).expect("plain verifies");
+        [
+            wire::encode_trace_proof(&fx.tk.cfg, &plain),
+            wire::encode_trace_proof(&fx.tk.cfg, &chained),
+            wire::encode_trace_proof(&fx.tk.cfg, &prov),
+        ]
+    })
+}
+
+#[test]
+fn trace_artifacts_are_byte_identical_across_thread_counts() {
+    let _guard = ENV_LOCK.lock().unwrap();
+    let fx = fixture();
+    let base = artifacts(&fx, 1);
+    assert!(base.iter().all(|a| !a.is_empty()));
+    for lanes in [2usize, 8] {
+        let got = artifacts(&fx, lanes);
+        for (variant, (a, b)) in ["plain", "chained", "provenance"]
+            .iter()
+            .zip(base.iter().zip(got.iter()))
+        {
+            assert_eq!(
+                a, b,
+                "{variant} artifact diverged between 1 and {lanes} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn par_reduce_matches_sequential_fold_at_every_lane_count() {
+    let _guard = ENV_LOCK.lock().unwrap();
+    let mut rng = Rng::seed_from_u64(0xFA57);
+    let values: Vec<Fr> = (0..4097)
+        .map(|_| Fr::from_i64(rng.gen_i64(-(1i64 << 40), 1i64 << 40)))
+        .collect();
+    let seq = values.iter().fold(Fr::ZERO, |acc, v| acc + *v);
+    // Lane count drives the chunk boundaries, so sweeping it exercises many
+    // different splits of the same reduction (including uneven tails).
+    for lanes in [1usize, 2, 3, 5, 8, 13] {
+        let par = with_threads(lanes, || {
+            threads::par_reduce(
+                values.len(),
+                1,
+                Fr::ZERO,
+                |range, mut acc| {
+                    for i in range {
+                        acc += values[i];
+                    }
+                    acc
+                },
+                |a, b| a + b,
+            )
+        });
+        assert_eq!(seq, par, "par_reduce diverged at {lanes} lanes");
+    }
+}
+
+#[test]
+fn one_msm_flush_invariant_holds_with_pool_active() {
+    let _guard = ENV_LOCK.lock().unwrap();
+    let fx = fixture();
+    with_threads(8, || {
+        let mut rng = Rng::seed_from_u64(3);
+        let proof = prove_trace(&fx.tk, &fx.wits, &mut rng);
+        let ((), rep) = telemetry::capture(|| {
+            verify_trace(&fx.tk, &proof).expect("trace verifies");
+        });
+        let get = |name: &str| -> u64 {
+            rep.counters
+                .iter()
+                .find(|(n, _)| *n == name)
+                .map(|(_, v)| *v)
+                .unwrap_or(0)
+        };
+        assert_eq!(get("msm/flushes"), 1, "one deferred MSM per verification");
+        assert_eq!(
+            get("msm/calls"),
+            get("msm/flushes"),
+            "verification must not run MSMs outside the accumulator flush"
+        );
+    });
+}
+
+#[test]
+fn pool_dispatch_counters_tick_during_parallel_prove() {
+    let _guard = ENV_LOCK.lock().unwrap();
+    let fx = fixture();
+    with_threads(8, || {
+        let ((), rep) = telemetry::capture(|| {
+            let mut rng = Rng::seed_from_u64(4);
+            let proof = prove_trace(&fx.tk, &fx.wits, &mut rng);
+            std::hint::black_box(&proof);
+        });
+        let get = |name: &str| -> u64 {
+            rep.counters
+                .iter()
+                .find(|(n, _)| *n == name)
+                .map(|(_, v)| *v)
+                .unwrap_or(0)
+        };
+        // Every dispatched job lands in exactly one of the two counters
+        // (queued, or run inline on queue saturation).
+        assert!(
+            get("pool/jobs") + get("pool/queue_full") > 0,
+            "an 8-lane prove must dispatch at least one pooled job"
+        );
+    });
+}

@@ -82,7 +82,9 @@ fn instrumented_loop(n: u64) -> u64 {
 fn disabled_instrumentation_does_not_allocate() {
     telemetry::exclusive(|| {
         assert!(!telemetry::enabled(), "telemetry must be off by default");
-        // warm up (the first TLS touch may allocate lazily)
+        // warm up (the first TLS touch may allocate lazily), and spin up the
+        // zkLanes pool — its workers idling must not charge this thread
+        let _ = zkdl::util::threads::par_map_with(0, (0..32u64).collect(), |x| x + 1);
         std::hint::black_box(instrumented_loop(10));
         let before = thread_allocs();
         std::hint::black_box(instrumented_loop(50_000));
@@ -126,6 +128,56 @@ fn disabled_instrumentation_overhead_is_bounded() {
             }
         }
         assert!(ok, "disabled instrumentation exceeded {tolerance}x overhead");
+    });
+}
+
+#[test]
+fn sumcheck_prover_inner_loop_is_allocation_free() {
+    use zkdl::poly::Mle;
+    use zkdl::sumcheck::{prove, Instance, Term};
+    use zkdl::transcript::Transcript;
+    use zkdl::Fr;
+
+    // `exclusive` serializes this with the bench-grid test, which also
+    // mutates ZKDL_THREADS; one lane keeps all prover work on this thread
+    // so the per-thread allocation counter sees every allocation.
+    telemetry::exclusive(|| {
+        let saved = std::env::var("ZKDL_THREADS").ok();
+        std::env::set_var("ZKDL_THREADS", "1");
+
+        let num_vars = 12usize;
+        let n = 1usize << num_vars;
+        let mk = |mult: i64| {
+            Mle::new(
+                (0..n)
+                    .map(|i| Fr::from_i64((i as i64).wrapping_mul(mult) - 7))
+                    .collect(),
+            )
+        };
+        // A two-term instance with a degree-3 product — the deepest shape
+        // zkDL produces (eq·(1−B)·Z).
+        let inst = Instance::new(vec![
+            Term::new(Fr::from_i64(3), vec![mk(3), mk(5), mk(11)]),
+            Term::new(Fr::from_i64(-2), vec![mk(7), mk(13)]),
+        ]);
+        let mut transcript = Transcript::new(b"zkdl/test/alloc");
+        let before = thread_allocs();
+        let out = prove(inst, &mut transcript);
+        let allocs = thread_allocs() - before;
+        std::hint::black_box(&out);
+        match saved {
+            Some(v) => std::env::set_var("ZKDL_THREADS", v),
+            None => std::env::remove_var("ZKDL_THREADS"),
+        }
+        // Per-round bookkeeping (the evals Vec, transcript absorbs,
+        // challenge hashing) is O(num_vars) total. A single allocation per
+        // hypercube index — e.g. the pre-zkLanes per-index `lines` Vec —
+        // would alone cost Σ_rounds half = 2^num_vars = 4096 here.
+        assert!(
+            allocs < 1024,
+            "sumcheck prove allocated {allocs} times for num_vars={num_vars}; \
+             the inner loop must be allocation-free"
+        );
     });
 }
 
@@ -341,6 +393,10 @@ fn bench_quick_grid_emits_golden_schema() {
     assert_eq!(grid.get("steps").unwrap().as_array().unwrap().len(), 1);
     let variants = grid.get("variants").unwrap().as_array().unwrap();
     assert_eq!(variants.len(), 3);
+    // v2: the thread axis is part of the grid block (quick default: [0] = auto)
+    let axis = grid.get("threads").unwrap().as_array().unwrap();
+    assert_eq!(axis.len(), 1);
+    assert_eq!(axis[0].as_u64(), Some(0));
 
     let cases = parsed.get("cases").unwrap().as_array().unwrap();
     assert_eq!(cases.len(), 3, "one case per variant at T=1, depth=2");
@@ -349,6 +405,7 @@ fn bench_quick_grid_emits_golden_schema() {
             "variant",
             "steps",
             "depth",
+            "threads",
             "skipped",
             "prove_s",
             "verify_s",
@@ -357,6 +414,7 @@ fn bench_quick_grid_emits_golden_schema() {
         ] {
             assert!(case.get(key).is_some(), "case missing {key}");
         }
+        assert_eq!(case.get("threads").and_then(|v| v.as_u64()), Some(0));
     }
     let by_variant = |name: &str| {
         cases
