@@ -32,8 +32,8 @@ import sys
 
 EVENT_SCHEMA = "zkdl/events/v1"
 
-VERBS = ("prove", "prove-trace", "verify-trace")
-OUTCOMES = ("proved", "accepted", "rejected")
+VERBS = ("prove", "prove-trace", "verify-trace", "serve-verify", "serve-frame")
+OUTCOMES = ("proved", "accepted", "rejected", "overloaded")
 FAILURE_CLASSES = (
     "wire-decode",
     "version-unsupported",
@@ -215,9 +215,17 @@ def self_test():
         rec(seq=0, verb="prove-trace", outcome="proved"),
         rec(seq=1, ts_unix=101),
         rec(seq=2, ts_unix=101, outcome="rejected", failure_class="sumcheck"),
+        rec(seq=3, ts_unix=102, verb="serve-verify", outcome="overloaded"),
+        rec(
+            seq=4,
+            ts_unix=102,
+            verb="serve-frame",
+            outcome="rejected",
+            failure_class="wire-decode",
+        ),
     ]
     n, errs = check_journal(good)
-    assert (n, errs) == (3, []), errs
+    assert (n, errs) == (5, []), errs
 
     _, errs = check_journal([rec(seq=5), rec(seq=5)])
     assert any("not greater" in e for e in errs), errs

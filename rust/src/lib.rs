@@ -19,7 +19,8 @@
 //!   [`data`]
 //! * the runtime: [`runtime`] (PJRT AOT artifacts), [`coordinator`]
 //!   (pipelined proving driver), [`wire`] (persisted proof artifacts),
-//!   [`telemetry`] (zkObs spans + proof-system counters, `--profile`/bench)
+//!   [`telemetry`] (zkObs spans + proof-system counters, `--profile`/bench),
+//!   [`serve`] (zkServe batching verifier daemon + submit client)
 
 pub mod aggregate;
 pub mod baseline;
@@ -40,6 +41,7 @@ pub mod hash;
 pub mod poly;
 pub mod provenance;
 pub mod runtime;
+pub mod serve;
 pub mod sumcheck;
 pub mod telemetry;
 pub mod transcript;

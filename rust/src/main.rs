@@ -16,13 +16,25 @@
 //!                provenance artifacts to an endorsed dataset root;
 //!                `--require-same-root` rejects batches whose provenance
 //!                artifacts pin different roots
+//!   serve        run the zkServe batching verifier daemon: accepts framed
+//!                trace artifacts over TCP, coalesces concurrent
+//!                submissions into ONE MSM per dataset-root shard, and
+//!                drains gracefully on SIGINT; `--addr`, `--max-batch`,
+//!                `--max-wait-ms`, `--queue-cap`, `--journal`
+//!   submit       send artifacts to a running daemon (`--in <path>`,
+//!                repeatable); exit 0 iff every one is accepted;
+//!                `--status` prints the daemon's counters/latency JSON
 //!   audit        parse a zkFlight journal (`--journal <path>`), filter by
-//!                `--verb/--outcome/--class/--root`, and summarize
+//!                `--verb/--outcome/--class/--root`, skip records before
+//!                `--since <seq>`, keep only the last `--tail <n>`, and
+//!                summarize
 //!   membership   build the Merkle tree and answer (non-)membership queries
 //!   bench        run the prove/verify grid (T × depth × variant) and write
 //!                a `BENCH_*.json` baseline; `--quick` runs one cheap cell;
 //!                `--compare <old.json>` prints a per-cell delta table
-//!                against a previously recorded baseline
+//!                against a previously recorded baseline; `--serve` appends
+//!                a loopback daemon axis (round-trip latency + coalesced
+//!                MSM counts at `--serve-clients 1,8,32`)
 //!   info         print configuration and environment
 //!
 //! Every verb accepts `--profile`: telemetry (zkObs) records a span tree,
@@ -49,7 +61,11 @@
 //!   zkdl verify-trace --profile --in trace.zkp
 //!   zkdl verify-trace --in a.zkp --in b.zkp --in c.zkp --require-same-root
 //!   zkdl verify-trace --in trace.zkp --journal flight.jsonl --trace-out trace.perfetto.json
+//!   zkdl serve --addr 127.0.0.1:9155 --max-batch 16 --journal serve.jsonl
+//!   zkdl submit --in trace.zkp --addr 127.0.0.1:9155
+//!   zkdl submit --addr 127.0.0.1:9155 --status
 //!   zkdl audit --journal flight.jsonl --outcome rejected --class sumcheck
+//!   zkdl audit --journal serve.jsonl --since 1000 --tail 50
 //!   zkdl membership --n 1000 --queries 100 --hash sha256 --positivity 0.5
 //!   zkdl bench
 //!   zkdl bench --quick --out BENCH_ci.json
@@ -58,8 +74,8 @@
 use anyhow::{Context, Result};
 use std::path::Path;
 use zkdl::aggregate::{
-    trace_dataset_root, verify_trace, verify_traces_batch_report, ensure_same_root, TraceKey,
-    TraceProof,
+    prove_trace, trace_dataset_root, verify_trace, verify_traces_batch_report, ensure_same_root,
+    TraceKey, TraceProof,
 };
 use zkdl::coordinator::{train_and_prove, train_and_prove_trace, TraceTrainOptions, TrainOptions};
 use zkdl::data::Dataset;
@@ -68,7 +84,7 @@ use zkdl::merkle::{verify_membership, MerkleTree};
 use zkdl::model::{ModelConfig, Weights};
 use zkdl::runtime::WitnessSource;
 use zkdl::telemetry::failure::{classified, failure_class, VerifyFailureClass};
-use zkdl::telemetry::journal::{artifact_digest, read_journal, Journal, JournalEvent};
+use zkdl::telemetry::journal::{artifact_digest, read_journal_since, Journal, JournalEvent};
 use zkdl::update::{LrSchedule, UpdateRule};
 use zkdl::util::bench::Table;
 use zkdl::util::cli::Cli;
@@ -342,7 +358,21 @@ fn cmd_verify_trace(cli: &Cli) -> Result<()> {
     // (path, wire bytes, sha256, claimed wire version) per artifact
     let mut metas: Vec<(String, u64, String, u64)> = Vec::with_capacity(paths.len());
     for path in &paths {
-        let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+        // read_artifact refuses oversized files by stat before reading —
+        // the same MAX_ARTIFACT_BYTES guard the decoder and daemon apply
+        let bytes = match zkdl::wire::read_artifact(Path::new(path)) {
+            Ok(b) => b,
+            Err(e) => {
+                let e = e.context(format!("reading {path}"));
+                if let Some(class) = failure_class(&e) {
+                    let mut ev = JournalEvent::new("verify-trace", "rejected");
+                    ev.artifact_bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+                    ev.failure_class = Some(class.name().to_string());
+                    flight.record(ev)?;
+                }
+                return Err(e);
+            }
+        };
         metas.push((
             path.clone(),
             bytes.len() as u64,
@@ -467,7 +497,10 @@ fn cmd_audit(cli: &Cli) -> Result<()> {
         .map(|s| s.to_string())
         .or_else(|| cli.positional.first().cloned())
         .unwrap_or(default_path);
-    let (events, bad) = read_journal(Path::new(&path))?;
+    // --since streams past old records without keeping them — a long-lived
+    // zkServe journal stays queryable no matter how big it has grown
+    let since = cli.get_u64("since", 0);
+    let (events, bad) = read_journal_since(Path::new(&path), since)?;
     if let Some(class) = cli.get("class") {
         anyhow::ensure!(
             VerifyFailureClass::parse(class).is_some(),
@@ -484,7 +517,15 @@ fn cmd_audit(cli: &Cli) -> Result<()> {
                 .get("root")
                 .map_or(true, |r| ev.dataset_root.as_deref() == Some(r))
     };
-    let filtered: Vec<&JournalEvent> = events.iter().filter(|ev| keep(ev)).collect();
+    let mut filtered: Vec<&JournalEvent> = events.iter().filter(|ev| keep(ev)).collect();
+    if let Some(tail) = cli.get("tail") {
+        let n: usize = tail
+            .parse()
+            .with_context(|| format!("parsing --tail {tail:?} (want a record count)"))?;
+        if filtered.len() > n {
+            filtered.drain(..filtered.len() - n);
+        }
+    }
 
     let mut table = Table::new(&["seq", "verb", "outcome", "class", "dur s", "bytes", "root"]);
     for ev in &filtered {
@@ -554,6 +595,73 @@ fn cmd_audit(cli: &Cli) -> Result<()> {
         events.len() - filtered.len(),
         bad
     );
+    Ok(())
+}
+
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    let cfg = zkdl::serve::ServeConfig {
+        addr: cli.get_str("addr", "127.0.0.1:9155").to_string(),
+        max_batch: cli.get_usize("max-batch", 16),
+        max_wait: std::time::Duration::from_millis(cli.get_u64("max-wait-ms", 50)),
+        queue_cap: cli.get_usize("queue-cap", 256),
+        poll_interval: std::time::Duration::from_millis(cli.get_u64("poll-ms", 250)),
+        write_timeout: std::time::Duration::from_secs(cli.get_u64("write-timeout-s", 10)),
+        journal: cli.get("journal").map(std::path::PathBuf::from),
+    };
+    println!(
+        "zkServe: max_batch={} max_wait={}ms queue_cap={}{}",
+        cfg.max_batch,
+        cfg.max_wait.as_millis(),
+        cfg.queue_cap,
+        cfg.journal
+            .as_ref()
+            .map(|p| format!(" journal={}", p.display()))
+            .unwrap_or_default()
+    );
+    zkdl::serve::run(cfg)
+}
+
+fn cmd_submit(cli: &Cli) -> Result<()> {
+    use zkdl::serve::protocol::Frame;
+    let addr = cli.get_str("addr", "127.0.0.1:9155");
+    let timeout = std::time::Duration::from_secs_f64(cli.get_f64("timeout-s", 30.0));
+    if cli.flag("status") {
+        println!("{}", zkdl::serve::status(addr, timeout)?);
+        return Ok(());
+    }
+    let mut paths: Vec<String> = cli.get_all("in").iter().map(|s| s.to_string()).collect();
+    paths.extend(cli.positional.iter().cloned());
+    anyhow::ensure!(
+        !paths.is_empty(),
+        "submit needs --in <artifact> (repeatable) or --status"
+    );
+    let mut refused = 0usize;
+    for path in &paths {
+        let bytes = zkdl::wire::read_artifact(Path::new(path))?;
+        match zkdl::serve::submit(addr, &bytes, timeout)? {
+            Frame::Accepted => println!("{path}: accepted"),
+            Frame::Rejected { class, message } => {
+                eprintln!(
+                    "{path}: rejected ({}): {message}",
+                    class.as_deref().unwrap_or("unclassified")
+                );
+                refused += 1;
+            }
+            Frame::Overloaded => {
+                eprintln!("{path}: overloaded — daemon queue is full, back off and retry");
+                refused += 1;
+            }
+            Frame::ShuttingDown => {
+                eprintln!("{path}: daemon is shutting down");
+                refused += 1;
+            }
+            other => {
+                eprintln!("{path}: unexpected reply {other:?}");
+                refused += 1;
+            }
+        }
+    }
+    anyhow::ensure!(refused == 0, "{refused} submission(s) not accepted");
     Ok(())
 }
 
@@ -677,7 +785,17 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
     );
     let report = run_grid(&opts);
     print!("{}", report.render_table());
-    std::fs::write(out, report.to_json_string()).with_context(|| format!("writing {out}"))?;
+    let mut doc = report.to_json();
+    if cli.flag("serve") {
+        let rows = bench_serve_rows(cli, &opts)?;
+        if let zkdl::telemetry::json::Json::Obj(fields) = &mut doc {
+            fields.push((
+                "serve".to_string(),
+                zkdl::telemetry::json::Json::Arr(rows.iter().map(|r| r.to_json()).collect()),
+            ));
+        }
+    }
+    std::fs::write(out, doc.to_string()).with_context(|| format!("writing {out}"))?;
     println!("wrote {out} ({:.1} s total)", report.wall_s);
     if let Some(baseline_path) = cli.get("compare") {
         let text = std::fs::read_to_string(baseline_path)
@@ -691,6 +809,49 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
         print!("{delta}");
     }
     Ok(())
+}
+
+/// `zkdl bench --serve`: prove one quick artifact, then measure loopback
+/// round-trips and MSM coalescing at each `--serve-clients` count.
+fn bench_serve_rows(
+    cli: &Cli,
+    opts: &zkdl::telemetry::bench::GridOptions,
+) -> Result<Vec<zkdl::serve::ServeBenchRow>> {
+    let clients: Vec<usize> = cli
+        .get("serve-clients")
+        .unwrap_or("1,8,32")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>())
+        .collect::<std::result::Result<Vec<_>, _>>()
+        .context("parsing --serve-clients (comma-separated counts)")?;
+    anyhow::ensure!(!clients.is_empty(), "--serve-clients needs at least one count");
+    let per_client = cli.get_usize("serve-reps", 2);
+    let cfg = ModelConfig::new(2, opts.width, opts.batch);
+    let ds = Dataset::synthetic(opts.data_rows, cfg.width / 2, 4, cfg.r_bits, opts.seed ^ 0x77);
+    let wits = zkdl::witness::native::sgd_witness_chain(cfg, &ds, 1, opts.seed);
+    let tk = TraceKey::setup(cfg, 1);
+    let mut rng = Rng::seed_from_u64(opts.seed);
+    let artifact = zkdl::wire::encode_trace_proof(&cfg, &prove_trace(&tk, &wits, &mut rng));
+    eprintln!("bench: serve axis clients={clients:?} ({per_client} submissions each) ...");
+    let rows = zkdl::serve::bench_loopback(&artifact, &clients, per_client)?;
+    let mut table = Table::new(&[
+        "clients", "subs", "accepted", "batches", "coalesced", "msm", "p50 ms", "p95 ms", "wall s",
+    ]);
+    for r in &rows {
+        table.row(vec![
+            r.clients.to_string(),
+            r.submissions.to_string(),
+            r.accepted.to_string(),
+            r.batches.to_string(),
+            r.coalesced.to_string(),
+            r.msm_flushes.to_string(),
+            format!("{:.2}", r.p50_ns as f64 / 1e6),
+            format!("{:.2}", r.p95_ns as f64 / 1e6),
+            format!("{:.2}", r.wall_s),
+        ]);
+    }
+    table.print();
+    Ok(rows)
 }
 
 fn cmd_info() {
@@ -722,6 +883,8 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&cli),
         Some("prove-trace") => cmd_prove_trace(&cli),
         Some("verify-trace") => cmd_verify_trace(&cli),
+        Some("serve") => cmd_serve(&cli),
+        Some("submit") => cmd_submit(&cli),
         Some("audit") => cmd_audit(&cli),
         Some("membership") => cmd_membership(&cli),
         Some("bench") => cmd_bench(&cli),
@@ -732,7 +895,7 @@ fn main() -> Result<()> {
         Some(other) => {
             eprintln!("unknown subcommand: {other}");
             eprintln!(
-                "usage: zkdl [prove|train|prove-trace|verify-trace|audit|membership|bench|info] [--key value]"
+                "usage: zkdl [prove|train|prove-trace|verify-trace|serve|submit|audit|membership|bench|info] [--key value]"
             );
             std::process::exit(2);
         }

@@ -1,0 +1,369 @@
+//! zkServe batching core — bounded admission queue, dataset-root sharding,
+//! and the collector tick that turns N concurrent submissions into ONE
+//! `verify_traces_batch_report` MSM.
+//!
+//! Submissions land in a shard keyed by the artifact's dataset root
+//! (`None` for artifacts without provenance), because
+//! [`verify_traces_batch_report`](crate::aggregate::verify_traces_batch_report)
+//! verifies a whole shard with one Pippenger MSM and per-proof random
+//! scaling — the amortized verifier cost per proof *drops* as concurrent
+//! load rises. The queue is bounded: when `queue_cap` submissions are
+//! already waiting, [`BatchQueue::push`] refuses with
+//! [`PushError::Overloaded`] and the connection handler answers
+//! `overloaded` instead of buffering without limit.
+//!
+//! The collector thread ticks on a condvar: a shard is flushed as soon as
+//! it reaches `max_batch` entries, when its oldest entry has waited
+//! `max_wait`, or unconditionally during drain. Flushing takes the whole
+//! shard out under the lock and verifies it outside the lock, so admission
+//! never blocks on an MSM.
+
+use crate::aggregate::{verify_traces_batch_report, TraceKey, TraceProof};
+use crate::telemetry::{self, hist, Counter};
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::mpsc::SyncSender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Verdict delivered back to the waiting connection handler.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    Accepted,
+    Rejected {
+        class: Option<String>,
+        message: String,
+    },
+}
+
+/// One admitted submission, parked in its shard until the collector ticks.
+pub struct Pending {
+    /// Decoded artifact and the (cached) key its shape requires.
+    pub key: Arc<TraceKey>,
+    pub proof: TraceProof,
+    /// Dataset root (shard key); `None` = the no-provenance shard.
+    pub root: Option<Vec<u8>>,
+    /// Journal context captured at admission.
+    pub artifact_bytes: u64,
+    pub artifact_sha256: String,
+    pub rule: Option<String>,
+    pub submitted: Instant,
+    /// Rendezvous back to the handler thread (capacity 1: the collector
+    /// never blocks on a slow handler).
+    pub reply: SyncSender<Outcome>,
+}
+
+/// Why [`BatchQueue::push`] refused a submission.
+pub enum PushError {
+    /// `queue_cap` submissions already waiting — backpressure.
+    Overloaded(Pending),
+    /// The daemon is draining; no new work is admitted.
+    Draining(Pending),
+}
+
+struct QueueState {
+    shards: HashMap<Option<Vec<u8>>, Vec<Pending>>,
+    len: usize,
+    draining: bool,
+}
+
+/// The shared admission queue. Handlers push; exactly one collector thread
+/// drains via [`BatchQueue::collect`].
+pub struct BatchQueue {
+    state: Mutex<QueueState>,
+    tick: Condvar,
+    cap: usize,
+    max_batch: usize,
+    max_wait: Duration,
+}
+
+/// One flushed shard, verified by the caller outside the queue lock.
+pub struct FlushedShard {
+    pub root: Option<Vec<u8>>,
+    pub pending: Vec<Pending>,
+}
+
+impl BatchQueue {
+    pub fn new(cap: usize, max_batch: usize, max_wait: Duration) -> Arc<BatchQueue> {
+        Arc::new(BatchQueue {
+            state: Mutex::new(QueueState {
+                shards: HashMap::new(),
+                len: 0,
+                draining: false,
+            }),
+            tick: Condvar::new(),
+            cap: cap.max(1),
+            max_batch: max_batch.max(1),
+            max_wait,
+        })
+    }
+
+    /// Admit one submission into its root shard, or refuse it.
+    pub fn push(&self, p: Pending) -> Result<(), PushError> {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        if st.draining {
+            return Err(PushError::Draining(p));
+        }
+        if st.len >= self.cap {
+            return Err(PushError::Overloaded(p));
+        }
+        st.len += 1;
+        let shard = st.shards.entry(p.root.clone()).or_default();
+        shard.push(p);
+        let full = shard.len() >= self.max_batch;
+        drop(st);
+        // wake the collector: immediately when a shard hit max_batch, and
+        // otherwise too — it recomputes the nearest deadline either way
+        if full {
+            self.tick.notify_all();
+        } else {
+            self.tick.notify_one();
+        }
+        Ok(())
+    }
+
+    /// Number of submissions currently waiting.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enter drain mode: all waiting shards become due, new pushes are
+    /// refused, and [`collect`](Self::collect) returns `None` once empty.
+    pub fn begin_drain(&self) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.draining = true;
+        drop(st);
+        self.tick.notify_all();
+    }
+
+    /// Collector tick: block until at least one shard is due (full, aged
+    /// past `max_wait`, or draining), then take every due shard. Returns
+    /// `None` exactly once — when draining and empty — which is the
+    /// collector thread's exit signal.
+    pub fn collect(&self) -> Option<Vec<FlushedShard>> {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if st.draining && st.len == 0 {
+                return None;
+            }
+            let now = Instant::now();
+            let draining = st.draining;
+            let due_roots: Vec<Option<Vec<u8>>> = st
+                .shards
+                .iter()
+                .filter(|(_, pend)| {
+                    draining
+                        || pend.len() >= self.max_batch
+                        || pend
+                            .first()
+                            .is_some_and(|p| now.duration_since(p.submitted) >= self.max_wait)
+                })
+                .map(|(root, _)| root.clone())
+                .collect();
+            if !due_roots.is_empty() {
+                let mut out = Vec::with_capacity(due_roots.len());
+                for root in due_roots {
+                    if let Some(pending) = st.shards.remove(&root) {
+                        st.len -= pending.len();
+                        out.push(FlushedShard { root, pending });
+                    }
+                }
+                return Some(out);
+            }
+            // sleep until the nearest shard deadline (or max_wait if idle)
+            let wait = st
+                .shards
+                .values()
+                .filter_map(|pend| pend.first())
+                .map(|p| {
+                    self.max_wait
+                        .saturating_sub(now.duration_since(p.submitted))
+                })
+                .min()
+                .unwrap_or(self.max_wait)
+                .max(Duration::from_millis(1));
+            let (next, _) = self
+                .tick
+                .wait_timeout(st, wait)
+                .unwrap_or_else(|e| e.into_inner());
+            st = next;
+        }
+    }
+}
+
+/// Verify one flushed shard with ONE MSM and deliver every verdict.
+/// Returns `(outcomes, counter_delta)` for journaling: outcomes in shard
+/// order, and the invocation-wide counter delta of the batch (attribution
+/// below one MSM is not separable — same convention as the CLI's batched
+/// `verify-trace`).
+pub fn verify_shard(
+    shard: &FlushedShard,
+    rng: &mut Rng,
+) -> (Vec<Outcome>, Vec<(String, u64)>, f64) {
+    let start = Instant::now();
+    let before = telemetry::counters_snapshot();
+    telemetry::count(Counter::ServeBatches, 1);
+    telemetry::count(Counter::ServeCoalesced, shard.pending.len().saturating_sub(1) as u64);
+    hist::record(hist::Hist::ServeBatchSize, shard.pending.len() as u64);
+    let pairs: Vec<(&TraceKey, &TraceProof)> = shard
+        .pending
+        .iter()
+        .map(|p| (p.key.as_ref(), &p.proof))
+        .collect();
+    let report = verify_traces_batch_report(&pairs, rng);
+    let outcomes: Vec<Outcome> = report
+        .entries
+        .iter()
+        .map(|e| {
+            if e.accepted && report.batch_error.is_none() {
+                Outcome::Accepted
+            } else if e.accepted {
+                // the aggregate rejected but no individual proof did (e.g.
+                // a cross-proof tamper only the batch MSM sees): reject all
+                // members with the batch-level error
+                Outcome::Rejected {
+                    class: None,
+                    message: report
+                        .batch_error
+                        .clone()
+                        .unwrap_or_else(|| "batch rejected".into()),
+                }
+            } else {
+                Outcome::Rejected {
+                    class: e.failure_class.map(|c| c.name().to_string()),
+                    message: e.error.clone().unwrap_or_else(|| "rejected".into()),
+                }
+            }
+        })
+        .collect();
+    let after = telemetry::counters_snapshot();
+    let delta = crate::telemetry::journal::counter_deltas(&after, &before);
+    (outcomes, delta, start.elapsed().as_secs_f64())
+}
+
+/// Deliver one verdict: record the submit→verdict latency and hand the
+/// outcome to the waiting handler (which may have vanished — a dropped
+/// connection must not wedge the collector).
+pub fn deliver(p: &Pending, outcome: Outcome) {
+    hist::record(
+        hist::Hist::ServeSubmitNs,
+        p.submitted.elapsed().as_nanos() as u64,
+    );
+    let _ = p.reply.try_send(outcome);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    fn dummy_pending(root: Option<Vec<u8>>) -> (Pending, std::sync::mpsc::Receiver<Outcome>) {
+        use crate::model::ModelConfig;
+        let cfg = ModelConfig::new(2, 8, 4);
+        static KEY: once_cell::sync::Lazy<Arc<TraceKey>> = once_cell::sync::Lazy::new(|| {
+            Arc::new(TraceKey::setup(ModelConfig::new(2, 8, 4), 1))
+        });
+        let mut rng = Rng::seed_from_u64(7);
+        let wit = {
+            let ds = crate::data::Dataset::synthetic(16, cfg.width / 2, 4, cfg.r_bits, 3);
+            let weights = crate::model::Weights::init(cfg, &mut rng);
+            let (x, y) = ds.batch(&cfg, 0);
+            crate::witness::native::compute_witness(cfg, &x, &y, &weights)
+        };
+        let proof = crate::aggregate::prove_trace(&KEY, std::slice::from_ref(&wit), &mut rng);
+        let (tx, rx) = sync_channel(1);
+        (
+            Pending {
+                key: KEY.clone(),
+                proof,
+                root,
+                artifact_bytes: 0,
+                artifact_sha256: String::new(),
+                rule: None,
+                submitted: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn queue_shards_by_root_and_flushes_full_shards() {
+        let q = BatchQueue::new(8, 2, Duration::from_secs(60));
+        let (a, _ra) = dummy_pending(None);
+        let (b, _rb) = dummy_pending(None);
+        let (c, _rc) = dummy_pending(Some(vec![1; 4]));
+        q.push(a).map_err(|_| ()).unwrap();
+        q.push(c).map_err(|_| ()).unwrap();
+        q.push(b).map_err(|_| ()).unwrap();
+        // the None shard hit max_batch=2 and is due; the root shard is not
+        let shards = q.collect().expect("not draining");
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].root, None);
+        assert_eq!(shards[0].pending.len(), 2);
+        assert_eq!(q.len(), 1);
+        // drain mode makes the remaining shard due, then ends the collector
+        q.begin_drain();
+        let shards = q.collect().expect("drain flush");
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].root, Some(vec![1; 4]));
+        assert!(q.collect().is_none(), "collector exit after drain");
+    }
+
+    #[test]
+    fn queue_refuses_over_cap_and_while_draining() {
+        let q = BatchQueue::new(1, 8, Duration::from_secs(60));
+        let (a, _ra) = dummy_pending(None);
+        let (b, _rb) = dummy_pending(None);
+        q.push(a).map_err(|_| ()).unwrap();
+        match q.push(b) {
+            Err(PushError::Overloaded(_)) => {}
+            _ => panic!("expected overload"),
+        }
+        q.begin_drain();
+        let (c, _rc) = dummy_pending(None);
+        match q.push(c) {
+            Err(PushError::Draining(_)) => {}
+            _ => panic!("expected draining"),
+        }
+    }
+
+    #[test]
+    fn aged_shard_becomes_due_without_filling() {
+        let q = BatchQueue::new(8, 100, Duration::from_millis(10));
+        let (a, _ra) = dummy_pending(None);
+        q.push(a).map_err(|_| ()).unwrap();
+        let start = Instant::now();
+        let shards = q.collect().expect("not draining");
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].pending.len(), 1);
+        assert!(
+            start.elapsed() < Duration::from_secs(30),
+            "tick must fire on max_wait, not hang"
+        );
+    }
+
+    #[test]
+    fn verify_shard_accepts_valid_and_attributes_tampered() {
+        let (good, _rg) = dummy_pending(None);
+        let (mut bad, _rb) = dummy_pending(None);
+        // tamper a scalar claim: decode-clean but verify-rejected
+        bad.proof.v_z[0] = bad.proof.v_z[0] + crate::Fr::ONE;
+        let shard = FlushedShard {
+            root: None,
+            pending: vec![good, bad],
+        };
+        let mut rng = Rng::seed_from_u64(0x5eed);
+        let (outcomes, _delta, _dur) = verify_shard(&shard, &mut rng);
+        assert_eq!(outcomes.len(), 2);
+        assert!(matches!(outcomes[0], Outcome::Accepted));
+        match &outcomes[1] {
+            Outcome::Rejected { class, .. } => assert!(class.is_some(), "typed class expected"),
+            other => panic!("expected rejection, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,711 @@
+//! zkServe — a long-lived batching verifier daemon over the wire format.
+//!
+//! Millions of users means *verification* is the traffic-heavy path: many
+//! consumers check training certificates against few provers. zkServe is a
+//! zero-new-dependency daemon on [`std::net::TcpListener`] that amortizes
+//! the existing machinery across concurrent requests:
+//!
+//! * **[`protocol`]** — a length-prefixed framed protocol (`zkdl/serve/v1`)
+//!   carrying trace artifacts in the existing wire encoding, with the
+//!   payload cap enforced before allocation and per-connection read/write
+//!   timeouts;
+//! * **[`batcher`]** — a bounded admission queue sharded by dataset root;
+//!   a collector tick (configurable `max_batch` / `max_wait`) drains each
+//!   shard into ONE
+//!   [`verify_traces_batch_report`](crate::aggregate::verify_traces_batch_report)
+//!   MSM (per-proof re-attribution only on batch rejection), so amortized
+//!   verifier cost per proof *drops* with load;
+//! * **operations** — graceful shutdown on SIGINT via a self-pipe (drain
+//!   the queue, refuse new frames), backpressure via `overloaded` responses
+//!   instead of unbounded buffering, a bounded [`TraceKey`] cache prewarmed
+//!   by the first artifact of each shape, and full zkFlight integration
+//!   (every decision journaled with seq + failure class; `serve/*`
+//!   counters; latency histograms surfaced by the `status` frame).
+//!
+//! Threading: each connection gets one OS thread (handlers mostly block on
+//! I/O or on their verdict rendezvous); the collector's MSM fans out on the
+//! zkLanes worker pool through the existing parallel verify paths, so the
+//! compute pool is never occupied by idle sockets.
+
+pub mod batcher;
+pub mod protocol;
+
+use crate::aggregate::{trace_dataset_root, TraceKey};
+use crate::telemetry::journal::{artifact_digest, Journal, JournalEvent};
+use crate::telemetry::{self, hist, Counter};
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use batcher::{BatchQueue, Outcome, Pending, PushError};
+use protocol::{read_frame, write_frame, Frame, ReadOutcome};
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Journal verb stamped on every submission verdict.
+pub const VERB_SERVE_VERIFY: &str = "serve-verify";
+/// Journal verb stamped on framing-level rejections (bad magic, oversized
+/// frame, truncation) where no artifact was decoded.
+pub const VERB_SERVE_FRAME: &str = "serve-frame";
+
+/// Status-frame schema tag.
+pub const STATUS_SCHEMA: &str = "zkdl/serve/status/v1";
+
+/// Most distinct (shape, steps) keys kept warm; beyond it the cache resets
+/// (shapes are few in practice — a daemon serves a handful of models).
+const KEY_CACHE_CAP: usize = 64;
+
+/// Daemon configuration. `addr` may name port 0 for an ephemeral port (the
+/// bound address is reported by [`Server::addr`]) — how the loopback tests
+/// and bench run without port coordination.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub addr: String,
+    /// Flush a shard as soon as it holds this many submissions.
+    pub max_batch: usize,
+    /// Flush a shard once its oldest submission has waited this long.
+    pub max_wait: Duration,
+    /// Admission-queue bound; beyond it submissions get `overloaded`.
+    pub queue_cap: usize,
+    /// Idle-connection poll tick (also the shutdown-latency bound for idle
+    /// handlers) and the per-read socket timeout.
+    pub poll_interval: Duration,
+    /// Per-connection write timeout.
+    pub write_timeout: Duration,
+    /// Append every decision to this zkFlight journal.
+    pub journal: Option<PathBuf>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:9155".into(),
+            max_batch: 16,
+            max_wait: Duration::from_millis(50),
+            queue_cap: 256,
+            poll_interval: Duration::from_millis(250),
+            write_timeout: Duration::from_secs(10),
+            journal: None,
+        }
+    }
+}
+
+/// Counter snapshot rendered when the daemon exits.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeStats {
+    pub frames: u64,
+    pub batches: u64,
+    pub coalesced: u64,
+    pub overloads: u64,
+}
+
+impl std::fmt::Display for ServeStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} frames, {} batches ({} coalesced), {} overloads",
+            self.frames, self.batches, self.coalesced, self.overloads
+        )
+    }
+}
+
+type KeyCacheKey = (usize, usize, usize, u32, u32, u32, usize);
+
+struct Ctx {
+    cfg: ServeConfig,
+    queue: Arc<BatchQueue>,
+    shutdown: AtomicBool,
+    journal: Mutex<Option<Journal>>,
+    keys: Mutex<HashMap<KeyCacheKey, Arc<TraceKey>>>,
+    started: Instant,
+}
+
+impl Ctx {
+    fn journal_event(&self, ev: JournalEvent) {
+        let mut g = self.journal.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(j) = g.as_mut() {
+            // journal I/O failure must not take the daemon down; the
+            // journal is observability, not the verdict path
+            let _ = j.append(ev);
+        }
+    }
+
+    /// Key-cache prewarm: the first artifact of a (shape, steps) pays the
+    /// setup (itself cheap after `commit::KEY_CACHE` has the bases); every
+    /// later submission of that shape clones an `Arc`.
+    fn key_for(&self, cfg: crate::model::ModelConfig, steps: usize) -> Arc<TraceKey> {
+        let key: KeyCacheKey = (
+            cfg.depth, cfg.width, cfg.batch, cfg.r_bits, cfg.q_bits, cfg.lr_shift, steps,
+        );
+        if let Some(tk) = self
+            .keys
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(&key)
+        {
+            return tk.clone();
+        }
+        let tk = Arc::new(TraceKey::setup(cfg, steps));
+        let mut map = self.keys.lock().unwrap_or_else(|e| e.into_inner());
+        if map.len() >= KEY_CACHE_CAP {
+            map.clear();
+        }
+        map.entry(key).or_insert_with(|| tk.clone()).clone()
+    }
+
+    fn status_json(&self) -> String {
+        use crate::telemetry::json::Json;
+        let counter = |c: Counter| (c.name().to_string(), Json::Uint(telemetry::counter_value(c)));
+        let hist_digest =
+            |h: hist::Hist| (h.name().to_string(), hist::snapshot(h).to_json());
+        Json::obj(vec![
+            ("schema", Json::str(STATUS_SCHEMA)),
+            ("uptime_s", Json::Num(self.started.elapsed().as_secs_f64())),
+            ("queue_len", Json::Uint(self.queue.len() as u64)),
+            (
+                "counters",
+                Json::Obj(vec![
+                    counter(Counter::ServeFrames),
+                    counter(Counter::ServeBatches),
+                    counter(Counter::ServeCoalesced),
+                    counter(Counter::ServeOverload),
+                    counter(Counter::MsmFlushes),
+                    counter(Counter::MsmCalls),
+                ]),
+            ),
+            (
+                "hists",
+                Json::Obj(vec![
+                    hist_digest(hist::Hist::ServeSubmitNs),
+                    hist_digest(hist::Hist::ServeBatchSize),
+                ]),
+            ),
+        ])
+        .to_string()
+    }
+}
+
+/// A running daemon: accept loop + connection handlers + collector thread.
+/// Obtain one with [`Server::spawn`]; stop it with [`Server::shutdown`]
+/// (tests) or let [`run`] drive it to a SIGINT (CLI).
+pub struct Server {
+    addr: SocketAddr,
+    ctx: Arc<Ctx>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    collector: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind, start the accept loop and the collector, and return. Never
+    /// blocks on traffic.
+    pub fn spawn(cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("serve: binding {}", cfg.addr))?;
+        let addr = listener.local_addr().context("serve: local addr")?;
+        let journal = match &cfg.journal {
+            Some(path) => Some(Journal::open(path)?),
+            None => None,
+        };
+        let queue = BatchQueue::new(cfg.queue_cap, cfg.max_batch, cfg.max_wait);
+        let ctx = Arc::new(Ctx {
+            cfg,
+            queue,
+            shutdown: AtomicBool::new(false),
+            journal: Mutex::new(journal),
+            keys: Mutex::new(HashMap::new()),
+            started: Instant::now(),
+        });
+
+        let collector = {
+            let ctx = ctx.clone();
+            std::thread::Builder::new()
+                .name("zkserve-collector".into())
+                .spawn(move || collector_loop(&ctx))
+                .context("serve: spawning collector")?
+        };
+        let accept = {
+            let ctx = ctx.clone();
+            std::thread::Builder::new()
+                .name("zkserve-accept".into())
+                .spawn(move || accept_loop(listener, &ctx))
+                .context("serve: spawning accept loop")?
+        };
+        Ok(Server {
+            addr,
+            ctx,
+            accept: Some(accept),
+            collector: Some(collector),
+        })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful shutdown: stop admitting, wake the accept loop, drain every
+    /// queued shard through the collector (each gets its real verdict), and
+    /// join all threads. Idempotent via [`Drop`].
+    pub fn shutdown(mut self) -> ServeStats {
+        self.stop();
+        ServeStats {
+            frames: telemetry::counter_value(Counter::ServeFrames),
+            batches: telemetry::counter_value(Counter::ServeBatches),
+            coalesced: telemetry::counter_value(Counter::ServeCoalesced),
+            overloads: telemetry::counter_value(Counter::ServeOverload),
+        }
+    }
+
+    fn stop(&mut self) {
+        self.ctx.shutdown.store(true, Ordering::SeqCst);
+        // refuse new work first so the drain below is finite…
+        self.ctx.queue.begin_drain();
+        // …then wake the blocking accept(2) with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.collector.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn collector_loop(ctx: &Ctx) {
+    let mut rng = Rng::from_entropy();
+    while let Some(shards) = ctx.queue.collect() {
+        for shard in shards {
+            let (outcomes, delta, duration_s) = batcher::verify_shard(&shard, &mut rng);
+            let batch_size = shard.pending.len() as u64;
+            for (i, (p, outcome)) in shard.pending.iter().zip(&outcomes).enumerate() {
+                let mut ev = match outcome {
+                    Outcome::Accepted => JournalEvent::new(VERB_SERVE_VERIFY, "accepted"),
+                    Outcome::Rejected { class, .. } => {
+                        let mut ev = JournalEvent::new(VERB_SERVE_VERIFY, "rejected");
+                        ev.failure_class = class.clone();
+                        ev
+                    }
+                };
+                ev.duration_s = duration_s;
+                ev.wire_version = crate::wire::VERSION as u64;
+                ev.artifact_bytes = p.artifact_bytes;
+                ev.artifact_sha256 = Some(p.artifact_sha256.clone());
+                ev.rule = p.rule.clone();
+                ev.dataset_root = p.root.as_ref().map(|r| hex(r));
+                ev.batch_index = Some(i as u64);
+                ev.batch_size = Some(batch_size);
+                ev.counters = delta.clone();
+                ctx.journal_event(ev);
+            }
+            for (p, outcome) in shard.pending.iter().zip(outcomes) {
+                batcher::deliver(p, outcome);
+            }
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, ctx: &Arc<Ctx>) {
+    let mut handlers = Vec::new();
+    for stream in listener.incoming() {
+        if ctx.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        let ctx = ctx.clone();
+        if let Ok(h) = std::thread::Builder::new()
+            .name("zkserve-conn".into())
+            .spawn(move || handle_connection(stream, &ctx))
+        {
+            handlers.push(h);
+        }
+        // reap finished handlers so a long-lived daemon doesn't grow a
+        // handle per connection it ever served
+        handlers.retain(|h| !h.is_finished());
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+fn hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+/// One connection: read frames until EOF, error, or shutdown. Submissions
+/// block this thread on their verdict rendezvous — pipelining is per
+/// connection-count, which keeps the protocol strictly request/response.
+fn handle_connection(mut stream: TcpStream, ctx: &Ctx) {
+    let _ = stream.set_read_timeout(Some(ctx.cfg.poll_interval));
+    let _ = stream.set_write_timeout(Some(ctx.cfg.write_timeout));
+    let _ = stream.set_nodelay(true);
+    loop {
+        match read_frame(&mut stream) {
+            Ok(ReadOutcome::Idle) => {
+                if ctx.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Ok(ReadOutcome::Eof) => break,
+            Err(e) => {
+                // framing is broken (garbage magic, oversized length,
+                // truncation): journal, answer best-effort, drop the
+                // connection — the stream cannot be resynchronized
+                telemetry::count(Counter::ServeFrames, 1);
+                let mut ev = JournalEvent::new(VERB_SERVE_FRAME, "rejected");
+                ev.failure_class =
+                    Some(crate::telemetry::failure::VerifyFailureClass::WireDecode.name().into());
+                ctx.journal_event(ev);
+                let _ = write_frame(
+                    &mut stream,
+                    &Frame::Rejected {
+                        class: Some(
+                            crate::telemetry::failure::VerifyFailureClass::WireDecode
+                                .name()
+                                .into(),
+                        ),
+                        message: format!("{e:#}"),
+                    },
+                );
+                break;
+            }
+            Ok(ReadOutcome::Frame(Frame::Status)) => {
+                telemetry::count(Counter::ServeFrames, 1);
+                if write_frame(&mut stream, &Frame::StatusReport(ctx.status_json())).is_err() {
+                    break;
+                }
+            }
+            Ok(ReadOutcome::Frame(Frame::Submit(bytes))) => {
+                telemetry::count(Counter::ServeFrames, 1);
+                if ctx.shutdown.load(Ordering::SeqCst) {
+                    let _ = write_frame(&mut stream, &Frame::ShuttingDown);
+                    break;
+                }
+                if !handle_submit(&mut stream, ctx, bytes) {
+                    break;
+                }
+            }
+            Ok(ReadOutcome::Frame(other)) => {
+                // a server→client frame arriving at the server is a
+                // protocol violation; refuse and drop
+                telemetry::count(Counter::ServeFrames, 1);
+                let _ = write_frame(
+                    &mut stream,
+                    &Frame::Rejected {
+                        class: None,
+                        message: format!("serve: unexpected client frame {other:?}"),
+                    },
+                );
+                break;
+            }
+        }
+    }
+}
+
+/// Decode, admit, await the verdict, respond. Returns `false` when the
+/// connection should close (write failure or drain).
+fn handle_submit(stream: &mut TcpStream, ctx: &Ctx, bytes: Vec<u8>) -> bool {
+    let start = Instant::now();
+    let (cfg, proof) = match crate::wire::decode_trace_proof(&bytes) {
+        Ok(v) => v,
+        Err(e) => {
+            let class = crate::telemetry::failure::failure_class(&e).map(|c| c.name().to_string());
+            let mut ev = JournalEvent::new(VERB_SERVE_VERIFY, "rejected");
+            ev.duration_s = start.elapsed().as_secs_f64();
+            ev.wire_version = crate::wire::VERSION as u64;
+            ev.artifact_bytes = bytes.len() as u64;
+            ev.artifact_sha256 = Some(artifact_digest(&bytes));
+            ev.failure_class = class.clone();
+            ctx.journal_event(ev);
+            hist::record(hist::Hist::ServeSubmitNs, start.elapsed().as_nanos() as u64);
+            return write_frame(
+                stream,
+                &Frame::Rejected {
+                    class,
+                    message: format!("{e:#}"),
+                },
+            )
+            .is_ok();
+        }
+    };
+    let key = ctx.key_for(cfg, proof.steps);
+    let (reply, verdict) = sync_channel(1);
+    let pending = Pending {
+        root: trace_dataset_root(&proof),
+        rule: proof.chain.as_ref().map(|c| c.rule.name().to_string()),
+        artifact_bytes: bytes.len() as u64,
+        artifact_sha256: artifact_digest(&bytes),
+        key,
+        proof,
+        submitted: start,
+        reply,
+    };
+    match ctx.queue.push(pending) {
+        Ok(()) => {}
+        Err(PushError::Overloaded(p)) => {
+            telemetry::count(Counter::ServeOverload, 1);
+            let mut ev = JournalEvent::new(VERB_SERVE_VERIFY, "overloaded");
+            ev.duration_s = start.elapsed().as_secs_f64();
+            ev.wire_version = crate::wire::VERSION as u64;
+            ev.artifact_bytes = p.artifact_bytes;
+            ev.artifact_sha256 = Some(p.artifact_sha256.clone());
+            ev.dataset_root = p.root.as_ref().map(|r| hex(r));
+            ctx.journal_event(ev);
+            return write_frame(stream, &Frame::Overloaded).is_ok();
+        }
+        Err(PushError::Draining(_)) => {
+            let _ = write_frame(stream, &Frame::ShuttingDown);
+            return false;
+        }
+    }
+    // the collector always delivers: every admitted submission is either
+    // flushed by a tick or by the drain pass
+    let outcome = verdict
+        .recv()
+        .unwrap_or_else(|_| Outcome::Rejected {
+            class: None,
+            message: "serve: daemon stopped before verdict".into(),
+        });
+    let frame = match outcome {
+        Outcome::Accepted => Frame::Accepted,
+        Outcome::Rejected { class, message } => Frame::Rejected { class, message },
+    };
+    write_frame(stream, &frame).is_ok()
+}
+
+// ---------------------------------------------------------------------------
+// client
+// ---------------------------------------------------------------------------
+
+/// Submit one artifact and return the daemon's response frame. `Accepted`
+/// maps to exit 0 in the CLI; everything else is a refusal with its reason.
+pub fn submit(addr: &str, artifact: &[u8], timeout: Duration) -> Result<Frame> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("serve: connecting to {addr}"))?;
+    stream.set_read_timeout(Some(timeout)).context("serve: read timeout")?;
+    stream.set_write_timeout(Some(timeout)).context("serve: write timeout")?;
+    let _ = stream.set_nodelay(true);
+    write_frame(&mut stream, &Frame::Submit(artifact.to_vec()))?;
+    match read_frame(&mut stream)? {
+        ReadOutcome::Frame(f) => Ok(f),
+        ReadOutcome::Eof => anyhow::bail!("serve: daemon closed the connection without a verdict"),
+        ReadOutcome::Idle => anyhow::bail!("serve: timed out waiting for a verdict"),
+    }
+}
+
+/// Fetch the daemon's status JSON.
+pub fn status(addr: &str, timeout: Duration) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("serve: connecting to {addr}"))?;
+    stream.set_read_timeout(Some(timeout)).context("serve: read timeout")?;
+    stream.set_write_timeout(Some(timeout)).context("serve: write timeout")?;
+    write_frame(&mut stream, &Frame::Status)?;
+    match read_frame(&mut stream)? {
+        ReadOutcome::Frame(Frame::StatusReport(json)) => Ok(json),
+        ReadOutcome::Frame(other) => anyhow::bail!("serve: unexpected reply {other:?}"),
+        _ => anyhow::bail!("serve: no status reply"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// loopback bench (the `zkdl bench --serve` axis)
+// ---------------------------------------------------------------------------
+
+/// One serve-bench row: `clients` concurrent loopback submitters, each
+/// sending `submissions / clients` copies of the same artifact. `coalesced`
+/// counts submissions that rode along in someone else's MSM; `msm_flushes`
+/// is the total MSM count for the whole row — the amortization headline.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeBenchRow {
+    pub clients: usize,
+    pub submissions: u64,
+    pub accepted: u64,
+    pub batches: u64,
+    pub coalesced: u64,
+    pub msm_flushes: u64,
+    /// Server-side submit latency (decode → verdict delivered), nanoseconds.
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub wall_s: f64,
+}
+
+impl ServeBenchRow {
+    pub fn to_json(&self) -> crate::telemetry::json::Json {
+        use crate::telemetry::json::Json;
+        Json::obj(vec![
+            ("clients", Json::Uint(self.clients as u64)),
+            ("submissions", Json::Uint(self.submissions)),
+            ("accepted", Json::Uint(self.accepted)),
+            ("batches", Json::Uint(self.batches)),
+            ("coalesced", Json::Uint(self.coalesced)),
+            ("msm_flushes", Json::Uint(self.msm_flushes)),
+            ("p50_ns", Json::Uint(self.p50_ns)),
+            ("p95_ns", Json::Uint(self.p95_ns)),
+            ("wall_s", Json::Num(self.wall_s)),
+        ])
+    }
+}
+
+/// Measure round-trip throughput and MSM coalescing over loopback, one row
+/// per entry of `clients_axis`. Holds the telemetry lock for the duration
+/// (counters are the measurement); leaves telemetry disabled and reset.
+pub fn bench_loopback(
+    artifact: &[u8],
+    clients_axis: &[usize],
+    per_client: usize,
+) -> Result<Vec<ServeBenchRow>> {
+    telemetry::exclusive(|| {
+        let mut rows = Vec::new();
+        for &clients in clients_axis {
+            let clients = clients.max(1);
+            telemetry::reset();
+            hist::reset_all();
+            telemetry::set_enabled(true);
+            let server = Server::spawn(ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                // flush when every concurrent client has been admitted, or
+                // after a short age — the coalescing sweet spot per row
+                max_batch: clients,
+                max_wait: Duration::from_millis(20),
+                ..ServeConfig::default()
+            })?;
+            let addr = server.addr().to_string();
+            let start = Instant::now();
+            let mut handles = Vec::new();
+            for _ in 0..clients {
+                let addr = addr.clone();
+                let artifact = artifact.to_vec();
+                handles.push(std::thread::spawn(move || -> Result<u64> {
+                    let mut ok = 0u64;
+                    for _ in 0..per_client {
+                        if matches!(
+                            submit(&addr, &artifact, Duration::from_secs(120))?,
+                            Frame::Accepted
+                        ) {
+                            ok += 1;
+                        }
+                    }
+                    Ok(ok)
+                }));
+            }
+            let mut accepted = 0u64;
+            for h in handles {
+                accepted += h
+                    .join()
+                    .map_err(|_| anyhow::anyhow!("serve bench: client thread panicked"))??;
+            }
+            let wall_s = start.elapsed().as_secs_f64();
+            let lat = hist::snapshot(hist::Hist::ServeSubmitNs);
+            rows.push(ServeBenchRow {
+                clients,
+                submissions: (clients * per_client) as u64,
+                accepted,
+                batches: telemetry::counter_value(Counter::ServeBatches),
+                coalesced: telemetry::counter_value(Counter::ServeCoalesced),
+                msm_flushes: telemetry::counter_value(Counter::MsmFlushes),
+                p50_ns: lat.p50,
+                p95_ns: lat.p95,
+                wall_s,
+            });
+            server.shutdown();
+        }
+        telemetry::set_enabled(false);
+        telemetry::reset();
+        Ok(rows)
+    })
+}
+
+// ---------------------------------------------------------------------------
+// CLI driver: run until SIGINT/SIGTERM, then drain
+// ---------------------------------------------------------------------------
+
+/// The `zkdl serve` entry point: spawn the daemon, print the bound address,
+/// block until SIGINT/SIGTERM (self-pipe), then drain and report.
+pub fn run(cfg: ServeConfig) -> Result<()> {
+    telemetry::set_enabled(true);
+    let server = Server::spawn(cfg)?;
+    println!("zkServe listening on {}", server.addr());
+    signal::wait_for_shutdown()?;
+    eprintln!("zkServe: shutdown signal received, draining queue…");
+    let stats = server.shutdown();
+    println!("zkServe drained: {stats}");
+    Ok(())
+}
+
+#[cfg(unix)]
+mod signal {
+    //! SIGINT/SIGTERM via the classic self-pipe trick, with no libc crate:
+    //! the handler (async-signal-safe: one `write(2)`) pokes a pipe the
+    //! main thread blocks on. Declared `extern "C"` directly — the three
+    //! symbols are POSIX and already linked into every binary.
+    use anyhow::{ensure, Result};
+    use std::sync::atomic::{AtomicI32, Ordering};
+
+    static WRITE_FD: AtomicI32 = AtomicI32::new(-1);
+
+    extern "C" {
+        fn pipe(fds: *mut i32) -> i32;
+        fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" fn on_signal(_sig: i32) {
+        let fd = WRITE_FD.load(Ordering::Relaxed);
+        if fd >= 0 {
+            let byte = [1u8];
+            unsafe { write(fd, byte.as_ptr(), 1) };
+        }
+    }
+
+    /// Install handlers and block until the first SIGINT/SIGTERM.
+    pub fn wait_for_shutdown() -> Result<()> {
+        let mut fds = [0i32; 2];
+        ensure!(
+            unsafe { pipe(fds.as_mut_ptr()) } == 0,
+            "serve: pipe(2) failed"
+        );
+        WRITE_FD.store(fds[1], Ordering::SeqCst);
+        unsafe {
+            signal(SIGINT, on_signal);
+            signal(SIGTERM, on_signal);
+        }
+        let mut byte = [0u8; 1];
+        loop {
+            let n = unsafe { read(fds[0], byte.as_mut_ptr(), 1) };
+            if n == 1 {
+                return Ok(());
+            }
+            // EINTR (or a spurious zero): retry; the pipe's write end is
+            // process-owned, so a permanent failure is not reachable
+            if n == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod signal {
+    use anyhow::Result;
+
+    /// No self-pipe without POSIX signals: park until the process is
+    /// killed. The daemon still drains cleanly under [`super::Server`]
+    /// (tests and embedders call `shutdown()` directly).
+    pub fn wait_for_shutdown() -> Result<()> {
+        loop {
+            std::thread::park();
+        }
+    }
+}

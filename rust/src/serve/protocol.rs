@@ -1,0 +1,325 @@
+//! zkServe framed protocol — `zkdl/serve/v1`.
+//!
+//! Every frame is `magic "ZKSV"` ‖ `version u16 LE` ‖ `frame-type u16 LE` ‖
+//! `payload-len u32 LE` ‖ payload. The length is checked against
+//! [`MAX_FRAME_PAYLOAD`] **before** any payload allocation, so an adversarial
+//! header cannot make the daemon reserve gigabytes; the payload cap equals
+//! the artifact cap ([`crate::wire::MAX_ARTIFACT_BYTES`]) because a `submit`
+//! payload *is* one artifact in the existing wire encoding.
+//!
+//! Client → server frames: [`Frame::Submit`] (one trace artifact),
+//! [`Frame::Status`]. Server → client frames: [`Frame::Accepted`],
+//! [`Frame::Rejected`] (typed
+//! [`VerifyFailureClass`](crate::telemetry::failure::VerifyFailureClass)
+//! name + rendered error), [`Frame::Overloaded`] (admission queue full —
+//! back off and retry), [`Frame::ShuttingDown`] (drain in progress — retry
+//! elsewhere), and [`Frame::StatusReport`] (JSON counters + histograms).
+//!
+//! The codec is transport-agnostic (`io::Read`/`io::Write`), so the same
+//! functions drive the daemon's sockets, the submit client, and the
+//! loopback tests.
+
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+
+/// Frame magic — distinct from the artifact magic `"ZKDL"` so a proof file
+/// piped at the socket is rejected as a framing error, not misparsed.
+pub const FRAME_MAGIC: [u8; 4] = *b"ZKSV";
+
+/// Protocol version (`zkdl/serve/v1`). Bump on any frame-layout change.
+pub const PROTOCOL_VERSION: u16 = 1;
+
+/// Hard payload ceiling, enforced before allocation. A submit payload is
+/// one wire artifact, so the caps coincide.
+pub const MAX_FRAME_PAYLOAD: usize = crate::wire::MAX_ARTIFACT_BYTES;
+
+/// Fixed frame-header length: magic ‖ version ‖ type ‖ payload length.
+pub const HEADER_BYTES: usize = 4 + 2 + 2 + 4;
+
+const TYPE_SUBMIT: u16 = 1;
+const TYPE_STATUS: u16 = 2;
+const TYPE_ACCEPTED: u16 = 3;
+const TYPE_REJECTED: u16 = 4;
+const TYPE_OVERLOADED: u16 = 5;
+const TYPE_SHUTTING_DOWN: u16 = 6;
+const TYPE_STATUS_REPORT: u16 = 7;
+
+/// One protocol frame, either direction.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Frame {
+    /// A trace artifact in the existing wire encoding.
+    Submit(Vec<u8>),
+    /// Request a [`Frame::StatusReport`].
+    Status,
+    /// The artifact verified (possibly as part of a coalesced batch).
+    Accepted,
+    /// The artifact was refused; `class` is the kebab-case failure class
+    /// when one was attributed.
+    Rejected {
+        class: Option<String>,
+        message: String,
+    },
+    /// Admission queue full — backpressure, not failure. Retry later.
+    Overloaded,
+    /// The daemon is draining; no new work is admitted.
+    ShuttingDown,
+    /// JSON status document (serve counters, latency histograms, queue).
+    StatusReport(String),
+}
+
+impl Frame {
+    fn type_tag(&self) -> u16 {
+        match self {
+            Frame::Submit(_) => TYPE_SUBMIT,
+            Frame::Status => TYPE_STATUS,
+            Frame::Accepted => TYPE_ACCEPTED,
+            Frame::Rejected { .. } => TYPE_REJECTED,
+            Frame::Overloaded => TYPE_OVERLOADED,
+            Frame::ShuttingDown => TYPE_SHUTTING_DOWN,
+            Frame::StatusReport(_) => TYPE_STATUS_REPORT,
+        }
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        match self {
+            Frame::Submit(bytes) => bytes.clone(),
+            Frame::Status | Frame::Accepted | Frame::Overloaded | Frame::ShuttingDown => {
+                Vec::new()
+            }
+            Frame::Rejected { class, message } => {
+                let mut out = Vec::new();
+                match class {
+                    None => out.push(0),
+                    Some(c) => {
+                        out.push(1);
+                        put_str(&mut out, c);
+                    }
+                }
+                put_str(&mut out, message);
+                out
+            }
+            Frame::StatusReport(json) => json.as_bytes().to_vec(),
+        }
+    }
+
+    fn from_parts(tag: u16, payload: Vec<u8>) -> Result<Frame> {
+        match tag {
+            TYPE_SUBMIT => Ok(Frame::Submit(payload)),
+            TYPE_STATUS => {
+                ensure!(payload.is_empty(), "serve: status frame carries a payload");
+                Ok(Frame::Status)
+            }
+            TYPE_ACCEPTED => {
+                ensure!(payload.is_empty(), "serve: accepted frame carries a payload");
+                Ok(Frame::Accepted)
+            }
+            TYPE_REJECTED => {
+                let mut r = crate::wire::WireReader::new(&payload);
+                let class = match r.get_u8()? {
+                    0 => None,
+                    1 => Some(get_str(&mut r)?),
+                    other => bail!("serve: bad class tag {other}"),
+                };
+                let message = get_str(&mut r)?;
+                r.expect_end()?;
+                Ok(Frame::Rejected { class, message })
+            }
+            TYPE_OVERLOADED => {
+                ensure!(payload.is_empty(), "serve: overloaded frame carries a payload");
+                Ok(Frame::Overloaded)
+            }
+            TYPE_SHUTTING_DOWN => {
+                ensure!(payload.is_empty(), "serve: shutting-down frame carries a payload");
+                Ok(Frame::ShuttingDown)
+            }
+            TYPE_STATUS_REPORT => Ok(Frame::StatusReport(
+                String::from_utf8(payload).context("serve: status report is not UTF-8")?,
+            )),
+            other => bail!("serve: unknown frame type {other}"),
+        }
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(r: &mut crate::wire::WireReader) -> Result<String> {
+    let n = r.get_len()?;
+    String::from_utf8(r.get_raw(n)?.to_vec()).context("serve: non-UTF-8 string")
+}
+
+/// Serialize one frame onto `w`.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<()> {
+    let payload = frame.payload();
+    ensure!(
+        payload.len() <= MAX_FRAME_PAYLOAD,
+        "serve: frame payload of {} bytes exceeds the {MAX_FRAME_PAYLOAD}-byte cap",
+        payload.len()
+    );
+    let mut header = [0u8; HEADER_BYTES];
+    header[..4].copy_from_slice(&FRAME_MAGIC);
+    header[4..6].copy_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+    header[6..8].copy_from_slice(&frame.type_tag().to_le_bytes());
+    header[8..12].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header).context("serve: writing frame header")?;
+    w.write_all(&payload).context("serve: writing frame payload")?;
+    w.flush().context("serve: flushing frame")?;
+    Ok(())
+}
+
+/// What [`read_frame`] saw at the front of the stream.
+pub enum ReadOutcome {
+    Frame(Frame),
+    /// The peer closed the connection cleanly (EOF before any header byte).
+    Eof,
+    /// The read timed out before any header byte arrived (idle poll tick —
+    /// not an error; the caller re-checks shutdown and retries).
+    Idle,
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Read exactly `buf.len()` bytes; `Ok(false)` on EOF-before-first-byte,
+/// distinguishing a closed peer from a truncated frame.
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> std::io::Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(false);
+                }
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "truncated frame",
+                ));
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) && filled == 0 => {
+                return Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, e));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one frame with bounded allocation: the header is validated (magic,
+/// version, payload cap) before the payload buffer is ever reserved, and the
+/// payload is streamed into it in place. Timeouts before the first header
+/// byte surface as [`ReadOutcome::Idle`]; a timeout *inside* a frame is a
+/// hard error (half-written frames poison the stream).
+pub fn read_frame(r: &mut impl Read) -> Result<ReadOutcome> {
+    let mut header = [0u8; HEADER_BYTES];
+    match read_exact_or_eof(r, &mut header) {
+        Ok(false) => return Ok(ReadOutcome::Eof),
+        Ok(true) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(ReadOutcome::Idle),
+        Err(e) => return Err(anyhow::Error::new(e).context("serve: reading frame header")),
+    }
+    ensure!(header[..4] == FRAME_MAGIC, "serve: bad frame magic");
+    let version = u16::from_le_bytes(header[4..6].try_into().unwrap());
+    ensure!(
+        version == PROTOCOL_VERSION,
+        "serve: unsupported protocol version {version}"
+    );
+    let tag = u16::from_le_bytes(header[6..8].try_into().unwrap());
+    let len = u32::from_le_bytes(header[8..12].try_into().unwrap()) as usize;
+    ensure!(
+        len <= MAX_FRAME_PAYLOAD,
+        "serve: frame payload of {len} bytes exceeds the {MAX_FRAME_PAYLOAD}-byte cap"
+    );
+    let mut payload = vec![0u8; len];
+    match read_exact_or_eof(r, &mut payload) {
+        Ok(true) => {}
+        Ok(false) if len == 0 => {}
+        Ok(false) => bail!("serve: truncated frame payload"),
+        Err(e) => return Err(anyhow::Error::new(e).context("serve: reading frame payload")),
+    }
+    Ok(ReadOutcome::Frame(Frame::from_parts(tag, payload)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(frame: Frame) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        match read_frame(&mut cursor).unwrap() {
+            ReadOutcome::Frame(back) => assert_eq!(back, frame),
+            _ => panic!("expected a frame"),
+        }
+    }
+
+    #[test]
+    fn frames_roundtrip() {
+        roundtrip(Frame::Submit(vec![1, 2, 3]));
+        roundtrip(Frame::Submit(Vec::new()));
+        roundtrip(Frame::Status);
+        roundtrip(Frame::Accepted);
+        roundtrip(Frame::Rejected {
+            class: Some("sumcheck".into()),
+            message: "round consistency".into(),
+        });
+        roundtrip(Frame::Rejected {
+            class: None,
+            message: "overlong".into(),
+        });
+        roundtrip(Frame::Overloaded);
+        roundtrip(Frame::ShuttingDown);
+        roundtrip(Frame::StatusReport("{\"ok\":true}".into()));
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_and_oversize() {
+        // garbage magic
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Status).unwrap();
+        buf[0] = b'X';
+        assert!(read_frame(&mut std::io::Cursor::new(buf.clone())).is_err());
+        // wrong version
+        buf[0] = b'Z';
+        buf[4] = 99;
+        assert!(read_frame(&mut std::io::Cursor::new(buf.clone())).is_err());
+        // oversized length header is rejected before allocation
+        let mut huge = Vec::new();
+        write_frame(&mut huge, &Frame::Status).unwrap();
+        huge[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut std::io::Cursor::new(huge)).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds"), "{err:#}");
+    }
+
+    #[test]
+    fn eof_and_truncation_are_distinguished() {
+        // empty stream: clean EOF
+        match read_frame(&mut std::io::Cursor::new(Vec::<u8>::new())).unwrap() {
+            ReadOutcome::Eof => {}
+            _ => panic!("expected EOF"),
+        }
+        // header cut short: error, not EOF
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Submit(vec![7; 16])).unwrap();
+        assert!(read_frame(&mut std::io::Cursor::new(buf[..6].to_vec())).is_err());
+        // payload cut short: error
+        let cut = buf[..buf.len() - 4].to_vec();
+        assert!(read_frame(&mut std::io::Cursor::new(cut)).is_err());
+    }
+
+    #[test]
+    fn artifact_magic_is_a_framing_error() {
+        // a raw proof artifact piped at the socket must fail on magic
+        let mut buf = b"ZKDL".to_vec();
+        buf.extend_from_slice(&[0u8; 32]);
+        assert!(read_frame(&mut std::io::Cursor::new(buf)).is_err());
+    }
+}

@@ -160,6 +160,8 @@ define_hists! {
     VerifyTraceNs => "lat/verify_trace_ns",
     MsmSize => "msm/size",
     WireBytes => "wire/bytes",
+    ServeSubmitNs => "lat/serve_submit_ns",
+    ServeBatchSize => "serve/batch_size",
 }
 
 static HISTS: [Histogram; Hist::COUNT] = [const { Histogram::new() }; Hist::COUNT];

@@ -21,7 +21,7 @@ use crate::telemetry::json::Json;
 use crate::telemetry::{Counter, COUNTER_NAMES};
 use anyhow::{Context, Result};
 use sha2::{Digest, Sha256};
-use std::io::Write as _;
+use std::io::{BufRead as _, Write as _};
 use std::path::{Path, PathBuf};
 
 /// Schema tag stamped on every record.
@@ -202,10 +202,16 @@ impl Journal {
     pub fn open(path: &Path) -> Result<Journal> {
         let mut next_seq = 0;
         if path.exists() {
-            let text = std::fs::read_to_string(path)
+            // streamed line-by-line: a long-lived daemon's journal can be
+            // arbitrarily large, and seq recovery must not load it whole
+            let f = std::fs::File::open(path)
                 .with_context(|| format!("reading journal {}", path.display()))?;
-            for line in text.lines().filter(|l| !l.trim().is_empty()) {
-                if let Some(seq) = Json::parse(line)
+            for line in std::io::BufReader::new(f).lines() {
+                let line = line.with_context(|| format!("reading journal {}", path.display()))?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                if let Some(seq) = Json::parse(&line)
                     .ok()
                     .and_then(|j| j.get("seq").and_then(|v| v.as_u64()))
                 {
@@ -219,9 +225,17 @@ impl Journal {
         })
     }
 
-    /// Assign the next `seq` and append one JSONL record.
+    /// Assign the next `seq` and append one JSONL record. `ts_unix` is
+    /// re-stamped here: records can be *built* concurrently (zkServe
+    /// handlers + collector), and stamping at the single append point keeps
+    /// the journal's timestamps non-decreasing in file order — the
+    /// invariant `check_obs_artifacts.py` enforces.
     pub fn append(&mut self, mut event: JournalEvent) -> Result<()> {
         event.seq = self.next_seq;
+        event.ts_unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(event.ts_unix);
         self.next_seq += 1;
         let mut f = std::fs::OpenOptions::new()
             .create(true)
@@ -237,16 +251,31 @@ impl Journal {
 /// Parse a whole journal file into records (the audit verb's loader).
 /// Returns `(events, bad_lines)` — malformed lines are counted, not fatal.
 pub fn read_journal(path: &Path) -> Result<(Vec<JournalEvent>, usize)> {
-    let text = std::fs::read_to_string(path)
+    read_journal_since(path, 0)
+}
+
+/// Like [`read_journal`], but streams the file line by line and retains
+/// only records with `seq >= since` — the audit `--since` filter on a
+/// long-lived daemon journal never materializes the skipped prefix.
+pub fn read_journal_since(path: &Path, since: u64) -> Result<(Vec<JournalEvent>, usize)> {
+    let f = std::fs::File::open(path)
         .with_context(|| format!("reading journal {}", path.display()))?;
     let mut events = Vec::new();
     let mut bad = 0;
-    for line in text.lines().filter(|l| !l.trim().is_empty()) {
-        match Json::parse(line)
+    for line in std::io::BufReader::new(f).lines() {
+        let line = line.with_context(|| format!("reading journal {}", path.display()))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match Json::parse(&line)
             .map_err(anyhow::Error::msg)
             .and_then(|j| JournalEvent::from_json(&j))
         {
-            Ok(ev) => events.push(ev),
+            Ok(ev) => {
+                if ev.seq >= since {
+                    events.push(ev);
+                }
+            }
             Err(_) => bad += 1,
         }
     }

@@ -133,6 +133,10 @@ define_counters! {
     RejectProvenanceSelection => "reject/provenance_selection",
     RejectRootMismatch => "reject/root_mismatch",
     RejectMsmFinalCheck => "reject/msm_final_check",
+    ServeFrames => "serve/frames",
+    ServeBatches => "serve/batches",
+    ServeCoalesced => "serve/coalesced",
+    ServeOverload => "serve/overload",
 }
 
 static COUNTERS: [AtomicU64; Counter::COUNT] = [const { AtomicU64::new(0) }; Counter::COUNT];

@@ -60,6 +60,31 @@ pub const MAGIC: [u8; 4] = *b"ZKDL";
 /// are rejected as unsupported, not misparsed.
 pub const VERSION: u16 = 6;
 
+/// Hard ceiling on a whole artifact's wire length, enforced *before* any
+/// payload allocation — by [`decode_envelope`] for in-memory buffers, by
+/// [`read_artifact`] for files (a multi-GB file is rejected from its
+/// metadata, not read), and by the serve daemon's frame reader before it
+/// allocates the frame body. The largest legitimate artifact (a provenance
+/// trace at the decoder's basis ceiling) is far below this.
+pub const MAX_ARTIFACT_BYTES: usize = 1 << 26; // 64 MiB
+
+/// Read a proof artifact from disk, refusing oversized files from their
+/// metadata before any bytes are read. Oversize carries the `wire-decode`
+/// failure class so journals attribute it like any other decode rejection.
+pub fn read_artifact(path: &std::path::Path) -> Result<Vec<u8>> {
+    let len = std::fs::metadata(path)
+        .with_context(|| format!("stat {}", path.display()))?
+        .len();
+    crate::ensure_class!(
+        len <= MAX_ARTIFACT_BYTES as u64,
+        crate::telemetry::failure::VerifyFailureClass::WireDecode,
+        "artifact {} is {len} bytes (limit {})",
+        path.display(),
+        MAX_ARTIFACT_BYTES
+    );
+    std::fs::read(path).with_context(|| format!("reading {}", path.display()))
+}
+
 /// Payload discriminant in the envelope header.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ProofKind {
@@ -830,6 +855,11 @@ fn decode_envelope<'a>(bytes: &'a [u8], want: ProofKind) -> Result<(ModelConfig,
     crate::telemetry::hist::record(
         crate::telemetry::hist::Hist::WireBytes,
         bytes.len() as u64,
+    );
+    ensure!(
+        bytes.len() <= MAX_ARTIFACT_BYTES,
+        "wire: artifact of {} bytes exceeds the {MAX_ARTIFACT_BYTES}-byte limit",
+        bytes.len()
     );
     let mut r = WireReader::new(bytes);
     let magic = r.take(4)?;

@@ -1,0 +1,359 @@
+//! zkServe loopback integration tests: a real daemon on an ephemeral port,
+//! real `TcpStream` clients, and counter-proven MSM coalescing.
+//!
+//! Every test that spawns a [`Server`] runs under
+//! [`telemetry::exclusive`] — counters are process-global, so two daemons
+//! measuring concurrently would double-count each other's flushes.
+
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use zkdl::aggregate::{prove_trace, prove_trace_provenance, TraceKey};
+use zkdl::data::Dataset;
+use zkdl::model::ModelConfig;
+use zkdl::provenance::ProverDataset;
+use zkdl::serve::protocol::{self, read_frame, Frame, ReadOutcome};
+use zkdl::serve::{status, submit, ServeConfig, Server};
+use zkdl::telemetry::failure::VerifyFailureClass;
+use zkdl::telemetry::json::Json;
+use zkdl::telemetry::{self, Counter};
+use zkdl::util::rng::Rng;
+use zkdl::witness::native::sgd_witness_chain;
+
+fn cfg() -> ModelConfig {
+    ModelConfig::new(2, 8, 4)
+}
+
+/// One T=1 trace artifact in the wire encoding (no provenance → the `None`
+/// shard). Distinct seeds give distinct proofs of the same shape.
+fn plain_artifact(seed: u64) -> Vec<u8> {
+    let cfg = cfg();
+    let ds = Dataset::synthetic(32, cfg.width / 2, 4, cfg.r_bits, seed ^ 0x77);
+    let wits = sgd_witness_chain(cfg, &ds, 1, seed);
+    let tk = TraceKey::setup(cfg, 1);
+    let mut rng = Rng::seed_from_u64(seed);
+    zkdl::wire::encode_trace_proof(&cfg, &prove_trace(&tk, &wits, &mut rng))
+}
+
+/// A provenance-bound artifact; the dataset seed decides its root shard.
+fn provenance_artifact(seed: u64) -> Vec<u8> {
+    let cfg = cfg();
+    let ds = Dataset::synthetic(32, cfg.width / 2, 4, cfg.r_bits, seed ^ 0x77);
+    let wits = sgd_witness_chain(cfg, &ds, 1, seed);
+    let tk = TraceKey::setup(cfg, 1);
+    let pd = ProverDataset::build(&ds, &cfg).expect("dataset commits");
+    let mut rng = Rng::seed_from_u64(seed);
+    let proof = prove_trace_provenance(&tk, &wits, &pd, &mut rng).expect("provenance proof");
+    zkdl::wire::encode_trace_proof(&cfg, &proof)
+}
+
+/// Decode-clean but verify-rejected: a tampered scalar claim.
+fn tampered_artifact(seed: u64) -> Vec<u8> {
+    let cfg = cfg();
+    let ds = Dataset::synthetic(32, cfg.width / 2, 4, cfg.r_bits, seed ^ 0x77);
+    let wits = sgd_witness_chain(cfg, &ds, 1, seed);
+    let tk = TraceKey::setup(cfg, 1);
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut proof = prove_trace(&tk, &wits, &mut rng);
+    proof.v_z[0] = proof.v_z[0] + zkdl::Fr::ONE;
+    zkdl::wire::encode_trace_proof(&cfg, &proof)
+}
+
+fn spawn(max_batch: usize, max_wait: Duration, queue_cap: usize) -> Server {
+    Server::spawn(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch,
+        max_wait,
+        queue_cap,
+        poll_interval: Duration::from_millis(50),
+        write_timeout: Duration::from_secs(10),
+        journal: None,
+    })
+    .expect("daemon binds loopback")
+}
+
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(120);
+
+#[test]
+fn coalesces_concurrent_submissions_into_one_msm() {
+    const N: usize = 4;
+    let artifact = plain_artifact(1);
+    telemetry::exclusive(|| {
+        telemetry::reset();
+        telemetry::set_enabled(true);
+        // max_batch = N and a long max_wait: the shard can only flush once
+        // every client has been admitted — the tick is deterministic
+        let server = spawn(N, Duration::from_secs(60), 64);
+        let addr = server.addr().to_string();
+        let handles: Vec<_> = (0..N)
+            .map(|_| {
+                let addr = addr.clone();
+                let artifact = artifact.clone();
+                std::thread::spawn(move || submit(&addr, &artifact, CLIENT_TIMEOUT))
+            })
+            .collect();
+        for h in handles {
+            let frame = h.join().expect("client thread").expect("verdict");
+            assert_eq!(frame, Frame::Accepted);
+        }
+        assert_eq!(
+            telemetry::counter_value(Counter::MsmFlushes),
+            1,
+            "N concurrent submissions must coalesce into ONE MSM"
+        );
+        assert_eq!(telemetry::counter_value(Counter::ServeBatches), 1);
+        assert_eq!(
+            telemetry::counter_value(Counter::ServeCoalesced),
+            (N - 1) as u64
+        );
+        assert_eq!(telemetry::counter_value(Counter::ServeFrames), N as u64);
+        let stats = server.shutdown();
+        assert_eq!(stats.batches, 1);
+        assert_eq!(stats.frames, N as u64);
+        telemetry::set_enabled(false);
+        telemetry::reset();
+    });
+}
+
+#[test]
+fn shards_by_dataset_root() {
+    let a = provenance_artifact(11);
+    let b = provenance_artifact(22);
+    telemetry::exclusive(|| {
+        telemetry::reset();
+        telemetry::set_enabled(true);
+        // two roots × two copies each, max_batch=2: each root shard flushes
+        // exactly when its pair is complete — two batches, two MSMs
+        let server = spawn(2, Duration::from_secs(60), 64);
+        let addr = server.addr().to_string();
+        let handles: Vec<_> = [a.clone(), a, b.clone(), b]
+            .into_iter()
+            .map(|artifact| {
+                let addr = addr.clone();
+                std::thread::spawn(move || submit(&addr, &artifact, CLIENT_TIMEOUT))
+            })
+            .collect();
+        for h in handles {
+            let frame = h.join().expect("client thread").expect("verdict");
+            assert_eq!(frame, Frame::Accepted);
+        }
+        assert_eq!(
+            telemetry::counter_value(Counter::MsmFlushes),
+            2,
+            "one MSM per root shard"
+        );
+        assert_eq!(telemetry::counter_value(Counter::ServeBatches), 2);
+        assert_eq!(telemetry::counter_value(Counter::ServeCoalesced), 2);
+        server.shutdown();
+        telemetry::set_enabled(false);
+        telemetry::reset();
+    });
+}
+
+#[test]
+fn tampered_artifact_is_attributed_within_batch() {
+    let good = plain_artifact(5);
+    let bad = tampered_artifact(6);
+    telemetry::exclusive(|| {
+        // one tampered artifact rides a batch of three: the batch MSM
+        // rejects, per-proof re-attribution blames exactly the tampered one
+        let server = spawn(3, Duration::from_secs(60), 64);
+        let addr = server.addr().to_string();
+        let handles: Vec<_> = [(good.clone(), true), (good, true), (bad, false)]
+            .into_iter()
+            .map(|(artifact, want_ok)| {
+                let addr = addr.clone();
+                std::thread::spawn(move || (submit(&addr, &artifact, CLIENT_TIMEOUT), want_ok))
+            })
+            .collect();
+        for h in handles {
+            let (result, want_ok) = h.join().expect("client thread");
+            let frame = result.expect("verdict");
+            if want_ok {
+                assert_eq!(frame, Frame::Accepted);
+            } else {
+                match frame {
+                    Frame::Rejected { class, message } => {
+                        assert!(class.is_some(), "typed class expected, got: {message}");
+                    }
+                    other => panic!("tampered artifact accepted: {other:?}"),
+                }
+            }
+        }
+        server.shutdown();
+    });
+}
+
+#[test]
+fn survives_garbage_and_oversized_frames() {
+    let artifact = plain_artifact(9);
+    telemetry::exclusive(|| {
+        let server = spawn(1, Duration::from_millis(20), 64);
+        let addr = server.addr();
+
+        // garbage where a frame header should be
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.write_all(b"GARBAGE!GARBAGE!").expect("write garbage");
+        match read_frame(&mut s).expect("framing-error response") {
+            ReadOutcome::Frame(Frame::Rejected { class, .. }) => {
+                assert_eq!(class.as_deref(), Some(VerifyFailureClass::WireDecode.name()));
+            }
+            _ => panic!("expected a rejection frame"),
+        }
+
+        // a valid header claiming a multi-gigabyte payload: refused before
+        // any allocation, connection dropped
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut header = Vec::new();
+        header.extend_from_slice(&protocol::FRAME_MAGIC);
+        header.extend_from_slice(&protocol::PROTOCOL_VERSION.to_le_bytes());
+        header.extend_from_slice(&1u16.to_le_bytes()); // submit
+        header.extend_from_slice(&u32::MAX.to_le_bytes());
+        s.write_all(&header).expect("write oversized header");
+        match read_frame(&mut s).expect("oversize response") {
+            ReadOutcome::Frame(Frame::Rejected { message, .. }) => {
+                assert!(message.contains("exceeds"), "got: {message}");
+            }
+            _ => panic!("expected a rejection frame"),
+        }
+
+        // a raw artifact piped at the socket (wrong magic) is a framing error
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.write_all(&artifact).expect("write raw artifact");
+        match read_frame(&mut s).expect("artifact-at-socket response") {
+            ReadOutcome::Frame(Frame::Rejected { .. }) => {}
+            _ => panic!("expected a rejection frame"),
+        }
+
+        // after all that abuse the daemon still verifies valid traffic
+        let frame = submit(&addr.to_string(), &artifact, CLIENT_TIMEOUT).expect("verdict");
+        assert_eq!(frame, Frame::Accepted);
+        server.shutdown();
+    });
+}
+
+fn wait_for_queue_len(addr: &str, want: u64) {
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        let json = status(addr, Duration::from_secs(5)).expect("status");
+        let doc = Json::parse(&json).expect("status JSON parses");
+        let got = doc.get("queue_len").and_then(|v| v.as_u64()).unwrap_or(0);
+        if got >= want {
+            return;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "queue never reached {want}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn overload_backpressure_and_drain_under_shutdown() {
+    let artifact = plain_artifact(13);
+    telemetry::exclusive(|| {
+        telemetry::reset();
+        telemetry::set_enabled(true);
+        // queue_cap=1 and a shard that never fills: the first submission
+        // parks, the second bounces off the admission bound
+        let server = spawn(64, Duration::from_secs(60), 1);
+        let addr = server.addr().to_string();
+        let first = {
+            let addr = addr.clone();
+            let artifact = artifact.clone();
+            std::thread::spawn(move || submit(&addr, &artifact, CLIENT_TIMEOUT))
+        };
+        wait_for_queue_len(&addr, 1);
+        match submit(&addr, &artifact, CLIENT_TIMEOUT).expect("second verdict") {
+            Frame::Overloaded => {}
+            other => panic!("expected overload backpressure, got {other:?}"),
+        }
+        assert_eq!(telemetry::counter_value(Counter::ServeOverload), 1);
+        // graceful shutdown drains the parked submission to its REAL
+        // verdict — not a refusal
+        let stats = server.shutdown();
+        let frame = first.join().expect("client thread").expect("verdict");
+        assert_eq!(frame, Frame::Accepted, "drain must deliver the verdict");
+        assert_eq!(stats.overloads, 1);
+        telemetry::set_enabled(false);
+        telemetry::reset();
+    });
+}
+
+#[test]
+fn status_reports_schema_counters_and_hists() {
+    telemetry::exclusive(|| {
+        let server = spawn(4, Duration::from_millis(20), 8);
+        let json = status(&server.addr().to_string(), Duration::from_secs(10)).expect("status");
+        let doc = Json::parse(&json).expect("status JSON parses");
+        assert_eq!(
+            doc.get("schema").and_then(|v| v.as_str()),
+            Some(zkdl::serve::STATUS_SCHEMA)
+        );
+        let counters = doc.get("counters").expect("counters block");
+        for key in ["serve/frames", "serve/batches", "serve/overload", "msm/flushes"] {
+            assert!(counters.get(key).is_some(), "missing counter {key}");
+        }
+        let hists = doc.get("hists").expect("hists block");
+        assert!(hists.get("lat/serve_submit_ns").is_some());
+        assert!(hists.get("serve/batch_size").is_some());
+        server.shutdown();
+    });
+}
+
+#[test]
+fn journals_every_decision() {
+    let artifact = plain_artifact(21);
+    let path = std::env::temp_dir().join(format!(
+        "zkdl-serve-journal-{}.jsonl",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    telemetry::exclusive(|| {
+        telemetry::reset();
+        telemetry::set_enabled(true);
+        let server = Server::spawn(ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            max_batch: 1,
+            max_wait: Duration::from_millis(10),
+            queue_cap: 8,
+            poll_interval: Duration::from_millis(50),
+            write_timeout: Duration::from_secs(10),
+            journal: Some(path.clone()),
+        })
+        .expect("daemon binds loopback");
+        let addr = server.addr().to_string();
+        let frame = submit(&addr, &artifact, CLIENT_TIMEOUT).expect("verdict");
+        assert_eq!(frame, Frame::Accepted);
+        // one framing failure: journaled before the response is written, so
+        // reading the reply synchronizes with the journal append
+        let mut s = TcpStream::connect(server.addr()).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.write_all(&[0u8; 12]).expect("write zeros");
+        let _ = read_frame(&mut s);
+        server.shutdown();
+        telemetry::set_enabled(false);
+        telemetry::reset();
+    });
+    let (events, bad) = zkdl::telemetry::journal::read_journal(&path).expect("journal reads");
+    assert_eq!(bad, 0, "no malformed journal lines");
+    assert!(
+        events.iter().any(|e| e.verb == "serve-verify"
+            && e.outcome == "accepted"
+            && e.batch_size == Some(1)
+            && e.artifact_sha256.is_some()),
+        "accepted submission journaled: {events:?}"
+    );
+    assert!(
+        events.iter().any(|e| e.verb == "serve-frame"
+            && e.outcome == "rejected"
+            && e.failure_class.as_deref() == Some(VerifyFailureClass::WireDecode.name())),
+        "framing rejection journaled with class: {events:?}"
+    );
+    let _ = std::fs::remove_file(&path);
+}
